@@ -1,0 +1,72 @@
+//! End-to-end co-design driver (the repo's canonical full-system run,
+//! recorded in EXPERIMENTS.md): trains a real small workload through all
+//! three layers — SASMOL phase I (noise-injected precision search) and
+//! phase II (pattern-matched QAT) execute as AOT-compiled JAX+Pallas
+//! artifacts under the rust coordinator via PJRT; the trained ULFlexiNet
+//! is then pattern-matched (Problem 1 + Algorithm 3), code-generated
+//! (Algorithm 4) and timed on the configurable SIMD simulator, with the
+//! FP32 and U4 reference points for context.
+//!
+//!     cargo run --release --example e2e_codesign -- \
+//!         [--model resnet18] [--p1-steps 150] [--p2-steps 150] [--quick]
+
+use anyhow::Result;
+use soniq::coordinator::{print_table, run_design_point, DesignPoint, TrainCfg};
+use soniq::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let quick = args.has_flag("quick");
+    let model = args.get_or("model", if quick { "tinynet" } else { "resnet18" });
+    let cfg = TrainCfg {
+        p1_steps: args.get_usize("p1-steps", if quick { 40 } else { 150 }),
+        p2_steps: args.get_usize("p2-steps", if quick { 40 } else { 150 }),
+        lr: args.get_f32("lr", 0.05),
+        lambda: args.get_f32("lambda", 1e-7),
+        eval_batches: args.get_usize("eval-batches", 4),
+        seed: args.get_usize("seed", 0) as u32,
+    };
+    println!("== SONIQ end-to-end co-design: {model} ==");
+    println!("schedule: phase I {} steps, phase II {} steps, lr {}, lambda {:e}\n",
+        cfg.p1_steps, cfg.p2_steps, cfg.lr, cfg.lambda);
+
+    let mut rows = Vec::new();
+    for dp in [DesignPoint::Fp32, DesignPoint::Uniform(4), DesignPoint::Patterns(4)] {
+        eprintln!("--- design point {} ---", dp.label());
+        let m = run_design_point("artifacts", &model, dp, &cfg)?;
+        // loss curve (downsampled)
+        let h = &m.loss_history;
+        if !h.is_empty() {
+            print!("loss curve {} ({} steps): ", dp.label(), h.len());
+            let stride = (h.len() / 12).max(1);
+            for (i, l) in h.iter().enumerate().step_by(stride) {
+                print!("{i}:{l:.3} ");
+            }
+            println!("-> final {:.4}", h.last().unwrap());
+        }
+        rows.push(m);
+    }
+    println!();
+    print_table(&rows, Some("U4"));
+
+    // headline summary (paper abstract: 10-20x vs FP32, accuracy parity)
+    let fp = rows.iter().find(|m| m.design == "FP32").unwrap();
+    let u4 = rows.iter().find(|m| m.design == "U4").unwrap();
+    let p4 = rows.iter().find(|m| m.design == "P4").unwrap();
+    println!("\nheadline (scaled testbed):");
+    println!(
+        "  U4 vs FP32: {:.2}x run-time, {:.2}x energy, {:.1}x size, accuracy {:+.3}",
+        fp.cycles as f64 / u4.cycles as f64,
+        fp.energy_pj / u4.energy_pj,
+        32.0 / u4.bpp,
+        u4.accuracy - fp.accuracy
+    );
+    println!(
+        "  P4 vs U4:   {:.2}x run-time, {:.2}x size, accuracy {:+.3}",
+        u4.cycles as f64 / p4.cycles as f64,
+        u4.bpp / p4.bpp,
+        p4.accuracy - u4.accuracy
+    );
+    println!("\ne2e_codesign OK");
+    Ok(())
+}

@@ -1,0 +1,55 @@
+//! Fig. 7 harness: bits-per-parameter vs accuracy for every
+//! configuration (FP32, U4, U2, P4, P8, P45) — the size/accuracy
+//! trade-off scatter the paper plots.
+//!
+//!     cargo run --release --example fig7_bpp_accuracy -- [--quick]
+
+use anyhow::Result;
+use soniq::coordinator::{run_design_point, DesignPoint, TrainCfg};
+use soniq::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let quick = args.has_flag("quick");
+    let models = args.get_or(
+        "models",
+        if quick { "tinynet" } else { "resnet18,mobilenetv2,shufflenetv2" },
+    );
+    let cfg = TrainCfg {
+        p1_steps: args.get_usize("p1-steps", if quick { 30 } else { 100 }),
+        p2_steps: args.get_usize("p2-steps", if quick { 30 } else { 100 }),
+        ..TrainCfg::default()
+    };
+    println!("Fig. 7 — bpp vs accuracy per configuration\n");
+    for model in models.split(',') {
+        println!("{model}:");
+        println!("{:<6} {:>7} {:>9}", "design", "bpp", "accuracy");
+        let mut pts = Vec::new();
+        for dp in [
+            DesignPoint::Fp32,
+            DesignPoint::Uniform(4),
+            DesignPoint::Uniform(2),
+            DesignPoint::Patterns(4),
+            DesignPoint::Patterns(8),
+            DesignPoint::Patterns(45),
+        ] {
+            eprintln!("== {model} / {} ==", dp.label());
+            let m = run_design_point("artifacts", &model, dp, &cfg)?;
+            println!("{:<6} {:>7.2} {:>9.4}", m.design, m.bpp, m.accuracy);
+            pts.push((m.design.clone(), m.bpp, m.accuracy));
+        }
+        // trend checks the paper reports: U4 ~ FP32 parity; U2 below U4;
+        // P-points smaller than U4
+        let get = |d: &str| pts.iter().find(|(n, _, _)| n == d).unwrap().2;
+        let bpp = |d: &str| pts.iter().find(|(n, _, _)| n == d).unwrap().1;
+        println!(
+            "  trends: U4-FP32 accuracy delta {:+.3}; U2-U4 delta {:+.3}; P4 bpp {:.2} (vs U4 {:.2})\n",
+            get("U4") - get("FP32"),
+            get("U2") - get("U4"),
+            bpp("P4"),
+            bpp("U4"),
+        );
+    }
+    println!("fig7_bpp_accuracy OK");
+    Ok(())
+}

@@ -1,0 +1,88 @@
+//! Fig. 8 harness: accuracy, relative speedup (normalized to U4) and
+//! bits-per-parameter for every {network, design point}.
+//!
+//! Accuracy/bpp come from training the scaled models through PJRT; the
+//! run-time axis is simulated BOTH on the scaled models and on the
+//! paper-scale (full-width) shape tables, where the vectorization effects
+//! the paper measures actually bite (see DESIGN.md).
+//!
+//!     cargo run --release --example fig8_runtime -- [--quick]
+//!         [--models resnet18,mobilenetv2,shufflenetv2]
+//!         [--designs FP32,INT8,U4,U2,P4,P8,P45]
+
+use anyhow::Result;
+use soniq::coordinator::{run_design_point, simulate_paper_scale, DesignPoint, TrainCfg};
+use soniq::util::cli::Args;
+
+fn parse_design(s: &str) -> DesignPoint {
+    match s {
+        "FP32" => DesignPoint::Fp32,
+        "INT8" => DesignPoint::Int8,
+        "U2" => DesignPoint::Uniform(2),
+        "U4" => DesignPoint::Uniform(4),
+        "P4" => DesignPoint::Patterns(4),
+        "P8" => DesignPoint::Patterns(8),
+        "P45" => DesignPoint::Patterns(45),
+        other => panic!("unknown design {other}"),
+    }
+}
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let quick = args.has_flag("quick");
+    let models = args.get_or(
+        "models",
+        if quick { "tinynet" } else { "resnet18,mobilenetv2,shufflenetv2" },
+    );
+    let designs = args.get_or("designs", "FP32,INT8,U4,U2,P4,P8,P45");
+    let cfg = TrainCfg {
+        p1_steps: args.get_usize("p1-steps", if quick { 30 } else { 100 }),
+        p2_steps: args.get_usize("p2-steps", if quick { 30 } else { 100 }),
+        lr: args.get_f32("lr", 0.05),
+        lambda: args.get_f32("lambda", 1e-7),
+        eval_batches: args.get_usize("eval-batches", if quick { 2 } else { 4 }),
+        seed: 0,
+    };
+
+    println!("Fig. 8 — accuracy / relative speedup (vs U4) / bpp\n");
+    for model in models.split(',') {
+        let mut rows = Vec::new();
+        for d in designs.split(',') {
+            eprintln!("== {model} / {d} ==");
+            let dp = parse_design(d);
+            let m = run_design_point("artifacts", model, dp, &cfg)?;
+            // paper-scale timing (skip for tinynet which has no table)
+            let paper_cycles = if model != "tinynet" {
+                let (total, _) = simulate_paper_scale(model, dp, &m.layer_fractions);
+                Some(total.cycles())
+            } else {
+                None
+            };
+            rows.push((m, paper_cycles));
+        }
+        let u4_small = rows.iter().find(|(m, _)| m.design == "U4").map(|(m, _)| m.cycles).unwrap_or(1);
+        let u4_paper = rows
+            .iter()
+            .find(|(m, _)| m.design == "U4")
+            .and_then(|(_, c)| *c)
+            .unwrap_or(1);
+        println!("\n{model}:");
+        println!(
+            "{:<6} {:>9} {:>7} {:>16} {:>10} {:>16} {:>10}",
+            "design", "accuracy", "bpp", "cycles(scaled)", "speedup", "cycles(paper)", "speedup"
+        );
+        for (m, pc) in &rows {
+            let s1 = u4_small as f64 / m.cycles as f64;
+            let (c2, s2) = match pc {
+                Some(c) => (format!("{c}"), format!("{:.2}", u4_paper as f64 / *c as f64)),
+                None => ("-".into(), "-".into()),
+            };
+            println!(
+                "{:<6} {:>9.4} {:>7.2} {:>16} {:>10.2} {:>16} {:>10}",
+                m.design, m.accuracy, m.bpp, m.cycles, s1, c2, s2
+            );
+        }
+    }
+    println!("\nfig8_runtime OK");
+    Ok(())
+}

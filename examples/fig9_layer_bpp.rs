@@ -1,0 +1,48 @@
+//! Fig. 9 harness: per-layer average trained bits for the P-design
+//! points (ShuffleNetV2 in the paper; any model here) — the "later layers
+//! go low-precision" profile behind Key Finding 4.
+//!
+//!     cargo run --release --example fig9_layer_bpp -- [--model shufflenetv2]
+
+use anyhow::Result;
+use soniq::coordinator::{run_design_point, DesignPoint, TrainCfg};
+use soniq::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let quick = args.has_flag("quick");
+    let model = args.get_or("model", if quick { "tinynet" } else { "shufflenetv2" });
+    let cfg = TrainCfg {
+        p1_steps: args.get_usize("p1-steps", if quick { 30 } else { 100 }),
+        p2_steps: args.get_usize("p2-steps", if quick { 20 } else { 60 }),
+        ..TrainCfg::default()
+    };
+    println!("Fig. 9 — per-layer average bits per parameter ({model})\n");
+    let mut by_design = Vec::new();
+    for dp in [DesignPoint::Patterns(4), DesignPoint::Patterns(8), DesignPoint::Patterns(45)] {
+        eprintln!("== {} ==", dp.label());
+        let m = run_design_point("artifacts", &model, dp, &cfg)?;
+        by_design.push((dp.label(), m.layer_bpp));
+    }
+    let names: Vec<String> = by_design[0].1.iter().map(|(n, _)| n.clone()).collect();
+    print!("{:<14}", "layer");
+    for (d, _) in &by_design {
+        print!(" {d:>6}");
+    }
+    println!();
+    for (i, name) in names.iter().enumerate() {
+        print!("{name:<14}");
+        for (_, series) in &by_design {
+            print!(" {:>6.2}", series[i].1);
+        }
+        println!();
+    }
+    // bar-chart sketch for the P4 series
+    println!("\nP4 profile:");
+    for (name, b) in &by_design[0].1 {
+        let bars = "#".repeat((b * 10.0).round() as usize);
+        println!("  {name:<14} {b:>5.2} {bars}");
+    }
+    println!("\nfig9_layer_bpp OK");
+    Ok(())
+}

@@ -1,0 +1,61 @@
+//! Inference-simulation report: Table IV parameters, per-layer cycle /
+//! instruction / cache breakdown for one model + design point, on both
+//! the scaled trained model and the paper-scale shape table.
+//!
+//!     cargo run --release --example inference_sim -- \
+//!         [--model resnet18] [--design U4|P4|FP32|INT8]
+
+use anyhow::Result;
+use soniq::coordinator::{paperscale, simulate_paper_scale, DesignPoint};
+use soniq::sim::cache::LatencyConfig;
+use soniq::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let model = args.get_or("model", "resnet18");
+    let design = args.get_or("design", "U4");
+    let dp = match design.as_str() {
+        "FP32" => DesignPoint::Fp32,
+        "INT8" => DesignPoint::Int8,
+        "U2" => DesignPoint::Uniform(2),
+        "U4" => DesignPoint::Uniform(4),
+        "P4" => DesignPoint::Patterns(4),
+        "P8" => DesignPoint::Patterns(8),
+        "P45" => DesignPoint::Patterns(45),
+        other => anyhow::bail!("unknown design {other}"),
+    };
+
+    let lat = LatencyConfig::default();
+    println!("Table IV simulation parameters (gem5-substitute):");
+    println!("  CPU: dual-issue front end, decoupled vector ALU/memory pipes, 2 GHz");
+    println!("  L1 I-cache: 16KB 4-way 64B lines;  L1 D-cache: 64KB 4-way");
+    println!("  L2: 256KB 8-way; latencies L1 {} / L2 {} / mem {} cycles\n", lat.l1_hit, lat.l2_hit, lat.mem);
+
+    // uniform fractions placeholder for P-points when run standalone
+    let shapes = paperscale::shapes_for(&model);
+    let fractions: Vec<(String, f64, f64)> =
+        shapes.iter().map(|s| (s.name.clone(), 0.3, 0.4)).collect();
+    let (total, per_layer) = simulate_paper_scale(&model, dp, &fractions);
+
+    println!("{model} @ {design} (paper-scale shapes, batch-1 inference):");
+    println!("{:<16} {:>12}", "layer", "cycles");
+    for (name, cyc) in &per_layer {
+        println!("{name:<16} {cyc:>12}");
+    }
+    println!("{:-<30}", "");
+    println!("{:<16} {:>12}", "total", total.cycles());
+    println!(
+        "\ninstrs {}  (vmac {}, vmul {}, loads {}, stores {})",
+        total.instrs, total.vmac + total.vfma32 + total.vmac_i8, total.vmul, total.loads, total.stores
+    );
+    println!(
+        "cache: L1 hits {}, L2 hits {}, mem {};  energy {:.1} uJ;  {:.3} ms @ 2 GHz",
+        total.l1_hits,
+        total.l2_hits,
+        total.mem_accesses,
+        total.energy_pj / 1e6,
+        total.cycles() as f64 / 2e9 * 1e3
+    );
+    println!("\ninference_sim OK");
+    Ok(())
+}

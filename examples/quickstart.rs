@@ -1,0 +1,89 @@
+//! Quickstart: the smallest end-to-end tour of the SONIQ/SySMOL stack.
+//!
+//! Loads the TinyNet artifacts, trains a uniform-4-bit network for a few
+//! PJRT steps, evaluates accuracy, then code-generates and simulates one
+//! inference on the configurable SIMD architecture — printing Table-II
+//! patterns and Table-V hardware costs along the way.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+
+use anyhow::Result;
+use soniq::coordinator::netbuild;
+use soniq::data::Dataset;
+use soniq::hw::{gates, timing};
+use soniq::runtime::Runtime;
+use soniq::sim::network::{run_network, Tensor};
+use soniq::simd::patterns::{all_patterns, design_subset, index_of};
+use soniq::smol::pattern_match::Assignment;
+use soniq::train::{uniform_prec, Trainer};
+use std::collections::HashMap;
+
+fn main() -> Result<()> {
+    println!("== SONIQ quickstart ==\n");
+
+    // 1. The architecture: 45 precision patterns (Table II)
+    let pats = all_patterns();
+    println!("Table II: {} precision patterns for 128-bit vectors", pats.len());
+    let p4: Vec<usize> = design_subset(4).iter().map(|p| index_of(p).unwrap()).collect();
+    println!("Table III P4 subset (indices): {p4:?}");
+    println!(
+        "Table V: ALU = {:.0} NAND2-eq gates, P4 control block = {:.0}; \
+         critical path {:.0} ps (2 GHz OK: {})\n",
+        gates::alu_gates(),
+        gates::control_block_gates(4),
+        timing::critical_path_ps(),
+        timing::meets_timing(2.0, 0.05)
+    );
+
+    // 2. Train uniform-4-bit TinyNet through the AOT PJRT artifacts
+    let rt = Runtime::load("artifacts", "tinynet", Some(&["phase2_step", "eval_quant"]))?;
+    let dataset = Dataset::new(rt.meta.image, rt.meta.num_classes, 0);
+    let mut trainer = Trainer::new(&rt, &dataset)?;
+    let prec = uniform_prec(&rt.meta.layers, 4);
+    println!("training TinyNet @ uniform 4-bit (QAT via PJRT)...");
+    for i in 0..40 {
+        let (loss, acc) = trainer.phase2_step(i, &prec, 0.05)?;
+        if i % 10 == 0 {
+            println!("  step {i:>3}: loss {loss:.4}  batch-acc {acc:.3}");
+        }
+    }
+    let acc = trainer.eval(Some(&prec), 2)?;
+    println!("eval accuracy (quantized path, Pallas kernel): {acc:.3}\n");
+
+    // 3. Code-generate + simulate one inference on the SIMD architecture
+    let asg: HashMap<String, Assignment> = rt
+        .meta
+        .layers
+        .iter()
+        .map(|l| (l.name.clone(), Assignment::uniform(l.cin, 4)))
+        .collect();
+    let graph = netbuild::build_graph(
+        &rt.meta,
+        &trainer.state,
+        &asg,
+        soniq::codegen::DataFormat::Smol,
+    )?;
+    let img = rt.meta.image;
+    let b = dataset.batch(1, 0, 1);
+    let input = Tensor { h: img, w: img, c: 3, data: b.images };
+    let net = run_network(&graph, &input);
+    println!(
+        "simulated inference: {} cycles ({:.2} us @ 2 GHz), {:.1} uJ, {} instrs ({} vmac)",
+        net.total.cycles(),
+        net.total.cycles() as f64 / 2000.0,
+        net.total.energy_pj / 1e6,
+        net.total.instrs,
+        net.total.vmac,
+    );
+    let pred = net
+        .output
+        .data
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .unwrap()
+        .0;
+    println!("sample prediction: class {pred} (label {})", b.labels[0]);
+    println!("\nquickstart OK");
+    Ok(())
+}

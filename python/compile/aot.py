@@ -1,0 +1,204 @@
+"""AOT compile path: lower every {model, step} pair to HLO *text* plus a
+meta.json manifest and an initial-state binary for the rust coordinator.
+
+HLO text (NOT .serialize()) is the interchange format: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1 (the
+version the published `xla` 0.1.6 crate binds) rejects; the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Artifacts written to --out (default ../artifacts):
+
+  <model>_<step>.hlo.txt   one per step in {phase1_step, phase2_step,
+                           fp32_step, eval_quant, eval_fp32}
+  <model>.meta.json        layer specs (for the rust codegen/simulator),
+                           per-step input/output layouts (flatten order =
+                           HLO parameter order), init-state tensor index
+  <model>_init.bin         f32 little-endian concat of the initial state
+  kernel_qmm.hlo.txt       standalone fused qmac kernel (runtime smoke)
+
+Python runs ONLY here; the rust binary is self-contained afterwards.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from compile import train
+from compile.models import build
+
+# Model configurations compiled into artifacts. Scaled for the CPU-PJRT
+# testbed (DESIGN.md substitution table); paper-scale widths are a flag away.
+MODEL_CONFIGS = {
+    "tinynet": dict(kw=dict(width=8, image=16), image=16, train_batch=32, eval_batch=64),
+    "resnet18": dict(kw=dict(width=8), image=32, train_batch=64, eval_batch=128),
+    "mobilenetv2": dict(kw=dict(width_mult=1.0), image=32, train_batch=64, eval_batch=128),
+    "shufflenetv2": dict(kw=dict(width_mult=1.0), image=32, train_batch=64, eval_batch=128),
+}
+
+NUM_CLASSES = 10
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return ".".join(parts)
+
+
+def layout_of(tree):
+    """Flattened (name, shape, dtype) list in jax flatten order == the HLO
+    parameter order the rust runtime must feed."""
+    leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, leaf in leaves:
+        out.append(
+            dict(
+                name=_path_str(path),
+                shape=[int(d) for d in leaf.shape],
+                dtype=str(leaf.dtype),
+            )
+        )
+    return out
+
+
+def spec_like(tree):
+    return jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree
+    )
+
+
+def make_prec_spec(specs):
+    return {
+        sp["name"]: (
+            jax.ShapeDtypeStruct((sp["cin"],), jnp.float32),
+            jax.ShapeDtypeStruct((sp["cin"],), jnp.float32),
+        )
+        for sp in specs
+    }
+
+
+def lower_model(name, cfg, out_dir, seed=0):
+    init, apply, specs = build(name, **cfg["kw"])
+    steps = train.make_steps(apply, specs, NUM_CLASSES)
+    state = init(jax.random.PRNGKey(seed))
+    img = cfg["image"]
+    tb, eb = cfg["train_batch"], cfg["eval_batch"]
+
+    state_spec = spec_like(state)
+    prec_spec = make_prec_spec(specs)
+    f32 = jnp.float32
+    timg = jax.ShapeDtypeStruct((tb, img, img, 3), f32)
+    eimg = jax.ShapeDtypeStruct((eb, img, img, 3), f32)
+    tlbl = jax.ShapeDtypeStruct((tb,), jnp.int32)
+    key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    scalar = jax.ShapeDtypeStruct((), f32)
+
+    step_args = {
+        "phase1_step": (state_spec, timg, tlbl, key, scalar, scalar),
+        "phase2_step": (state_spec, prec_spec, timg, tlbl, scalar),
+        "fp32_step": (state_spec, timg, tlbl, scalar),
+        "eval_quant": (state_spec, prec_spec, eimg),
+        "eval_fp32": (state_spec, eimg),
+    }
+
+    meta = dict(
+        model=name,
+        image=img,
+        train_batch=tb,
+        eval_batch=eb,
+        num_classes=NUM_CLASSES,
+        layers=specs,
+        steps={},
+    )
+
+    for sname, args in step_args.items():
+        lowered = jax.jit(steps[sname], keep_unused=True).lower(*args)
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}_{sname}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        out_spec = jax.eval_shape(steps[sname], *args)
+        meta["steps"][sname] = dict(
+            hlo=os.path.basename(path),
+            inputs=layout_of(args),
+            outputs=layout_of(out_spec),
+        )
+        print(f"  {name}/{sname}: {len(text)} chars, "
+              f"{len(meta['steps'][sname]['inputs'])} inputs")
+
+    # Initial state binary (f32 concat in flatten order) + index.
+    leaves = jax.tree_util.tree_flatten_with_path(state)[0]
+    index, offset = [], 0
+    with open(os.path.join(out_dir, f"{name}_init.bin"), "wb") as f:
+        for path, leaf in leaves:
+            arr = np.asarray(leaf, dtype=np.float32)
+            f.write(arr.tobytes())
+            index.append(
+                dict(name=_path_str(path), shape=list(arr.shape), offset=offset)
+            )
+            offset += arr.size
+    meta["init"] = dict(bin=f"{name}_init.bin", tensors=index, total_f32=offset)
+
+    with open(os.path.join(out_dir, f"{name}.meta.json"), "w") as f:
+        json.dump(meta, f, indent=1)
+    return meta
+
+
+def lower_kernel_smoke(out_dir):
+    """Standalone fused qmac kernel artifact for rust runtime unit tests."""
+    from compile.kernels import qmac
+
+    m, k, n = 32, 64, 16
+    f = lambda x, w, s, q: (qmac.qmatmul(x, w, s, q),)
+    args = [
+        jax.ShapeDtypeStruct((m, k), jnp.float32),
+        jax.ShapeDtypeStruct((k, n), jnp.float32),
+        jax.ShapeDtypeStruct((k,), jnp.float32),
+        jax.ShapeDtypeStruct((k,), jnp.float32),
+    ]
+    text = to_hlo_text(jax.jit(f, keep_unused=True).lower(*args))
+    with open(os.path.join(out_dir, "kernel_qmm.hlo.txt"), "w") as f_:
+        f_.write(text)
+    print(f"  kernel_qmm: {len(text)} chars")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--models", default=",".join(MODEL_CONFIGS))
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    jax.config.update("jax_platform_name", "cpu")
+
+    lower_kernel_smoke(args.out)
+    for name in args.models.split(","):
+        print(f"lowering {name} ...")
+        lower_model(name, MODEL_CONFIGS[name], args.out, args.seed)
+    with open(os.path.join(args.out, ".stamp"), "w") as f:
+        f.write("ok\n")
+    print("artifacts complete")
+
+
+if __name__ == "__main__":
+    main()

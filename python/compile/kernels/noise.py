@@ -1,0 +1,90 @@
+"""L1 Pallas kernel: SMOL phase-I noise injection  w + sigma(s) * eps.
+
+Phase I of SMOL perturbs every weight/activation with uniform noise scaled
+by the trainable per-input-channel sigma(s) (Algorithm 2 line 6). The
+forward runs as a Pallas elementwise kernel over 2-D tiles; the backward is
+analytic (d/dw = g, d/dscale = g * eps) via custom_vjp so the whole phase-I
+step stays differentiable with respect to both w and s.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_R = 256
+BLOCK_C = 256
+
+
+def _noise_kernel(w_ref, scale_ref, eps_ref, o_ref):
+    o_ref[...] = w_ref[...] + scale_ref[...] * eps_ref[...]
+
+
+def _pad2(x, br, bc):
+    r, c = x.shape
+    pr, pc = (-r) % br, (-c) % bc
+    if pr or pc:
+        x = jnp.pad(x, ((0, pr), (0, pc)))
+    return x
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def inject_noise_2d(w, scale, eps, *, interpret: bool = True):
+    """Elementwise w + scale * eps over a 2-D view (all args same shape)."""
+    assert w.shape == scale.shape == eps.shape and w.ndim == 2
+    r, c = w.shape
+    br, bc = min(BLOCK_R, r), min(BLOCK_C, c)
+    wp, sp, ep = (_pad2(a, br, bc) for a in (w, scale, eps))
+    grid = (wp.shape[0] // br, wp.shape[1] // bc)
+    out = pl.pallas_call(
+        _noise_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((br, bc), lambda i, j: (i, j))] * 3,
+        out_specs=pl.BlockSpec((br, bc), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct(wp.shape, jnp.float32),
+        interpret=interpret,
+    )(wp, sp, ep)
+    return out[:r, :c]
+
+
+@jax.custom_vjp
+def inject_noise(w, scale, eps):
+    """w + scale * eps with shapes broadcast from scale to w.
+
+    w:     any shape
+    scale: broadcastable to w (per-channel sigma(s) pre-broadcast by caller)
+    eps:   same shape as w (uniform +-1 noise)
+    """
+    scale_b = jnp.broadcast_to(scale, w.shape)
+    flat = lambda a: a.reshape(-1, w.shape[-1]) if w.ndim > 1 else a.reshape(1, -1)
+    out = inject_noise_2d(flat(w), flat(scale_b), flat(eps))
+    return out.reshape(w.shape)
+
+
+def _inject_fwd(w, scale, eps):
+    return inject_noise(w, scale, eps), (jnp.broadcast_to(scale, w.shape).shape != scale.shape, scale.shape, eps)
+
+
+def _inject_bwd(res, g):
+    _, scale_shape, eps = res
+    dw = g
+    dscale_full = g * eps
+    # Sum-reduce the scale gradient back to its (broadcast) shape.
+    dscale = _reduce_to_shape(dscale_full, scale_shape)
+    return dw, dscale, None
+
+
+def _reduce_to_shape(x, shape):
+    # Sum over leading extra dims, then over broadcast dims of size 1.
+    while x.ndim > len(shape):
+        x = x.sum(axis=0)
+    for ax, s in enumerate(shape):
+        if s == 1 and x.shape[ax] != 1:
+            x = x.sum(axis=ax, keepdims=True)
+    return x.reshape(shape)
+
+
+inject_noise.defvjp(_inject_fwd, _inject_bwd)

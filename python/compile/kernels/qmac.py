@@ -1,0 +1,222 @@
+"""L1 Pallas kernel: fused per-channel quantize + fixed-point matmul MAC.
+
+This is the paper's compute hot-spot: the inner loop of every ULFlexiNet
+layer quantizes incoming 32-bit fixed-point activations to the per-input-
+channel precisions and multiply-accumulates them against pre-quantized
+weights, exactly what the configurable SIMD ALU (Fig. 3) does per 16-bit
+lane. On TPU this maps to VMEM-tiled channel blocks (see DESIGN.md
+Hardware-Adaptation): BlockSpec plays the role the paper's vector registers
+play, and the 16.6 fixed-point accumulator is exact in f32 because all SMOL
+values/products are dyadic rationals with >= 2^-6 granularity.
+
+The kernel MUST be lowered with interpret=True on this CPU testbed (real
+TPU lowering emits a Mosaic custom-call the CPU PJRT plugin cannot run).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from compile import smol
+
+# Default block sizes. Tuned for VMEM residency: a (64 x 128) f32 x-block,
+# (128 x 128) w-block and (64 x 128) out-block total ~160 KiB << 16 MiB VMEM,
+# leaving room for double buffering across the K grid dimension.
+BLOCK_M = 64
+BLOCK_N = 128
+BLOCK_K = 128
+
+
+def _qmm_kernel(x_ref, w_ref, step_ref, qmax_ref, o_ref, *, n_k: int):
+    """One (m, n, k) grid step: quantize the x-block per-channel, MAC."""
+    k = pl.program_id(2)
+
+    x = x_ref[...]
+    step = step_ref[...][None, :]  # (1, bk) broadcast over rows
+    qmax = qmax_ref[...][None, :]
+
+    # Nearest odd multiple of step, clamped to +-qmax (SMOL quantizer).
+    u = x / step
+    o = 2.0 * jnp.round((u - 1.0) * 0.5) + 1.0
+    o = jnp.clip(o, -qmax / step, qmax / step)
+    xq = o * step
+
+    partial = jnp.dot(xq, w_ref[...], preferred_element_type=jnp.float32)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = partial
+
+    @pl.when(k > 0)
+    def _acc():
+        o_ref[...] += partial
+
+    # Model the 32-bit / 6-fraction-bit accumulator of the paper's datapath
+    # (exactness makes this the identity for in-range SMOL data, but it
+    # pins the semantics the rust simulator is validated against).
+    @pl.when(k == n_k - 1)
+    def _round():
+        acc = o_ref[...]
+        o_ref[...] = jnp.round(acc * smol.ACC_SCALE) * (1.0 / smol.ACC_SCALE)
+
+
+def _pad_to(x, mult, axis):
+    size = x.shape[axis]
+    rem = (-size) % mult
+    if rem == 0:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, rem)
+    return jnp.pad(x, pad)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_m", "block_n", "block_k", "interpret")
+)
+def qmatmul(
+    x,
+    wq,
+    step,
+    qmax,
+    *,
+    block_m: int = BLOCK_M,
+    block_n: int = BLOCK_N,
+    block_k: int = BLOCK_K,
+    interpret: bool = True,
+):
+    """out = quantize_odd(x, step, qmax) @ wq with 16.6 fixed-point rounding.
+
+    x:    (M, K) f32 raw activations (e.g. 32-bit fixed-point layer inputs)
+    wq:   (K, N) f32 pre-quantized SMOL weight values
+    step: (K,)   f32 per-input-channel quantization step 2^{1-p}
+    qmax: (K,)   f32 per-input-channel clip magnitude 2 - 2^{1-p}
+    """
+    m, k = x.shape
+    k2, n = wq.shape
+    assert k == k2, f"inner dims mismatch: {k} vs {k2}"
+    assert step.shape == (k,) and qmax.shape == (k,)
+
+    block_m = min(block_m, max(8, m))
+    block_n = min(block_n, max(8, n))
+    block_k = min(block_k, max(8, k))
+
+    xp = _pad_to(_pad_to(x, block_m, 0), block_k, 1)
+    wp = _pad_to(_pad_to(wq, block_k, 0), block_n, 1)
+    # Padded channels get step=1/qmax=1 so the quantizer is well-defined on
+    # the zero padding; quantize(0)=+-step there, but wq padding is zero so
+    # the products vanish.
+    sp = _pad_to(step + 0.0, block_k, 0) + _pad_to(jnp.zeros_like(step), block_k, 0)
+    sp = jnp.where(sp == 0.0, 1.0, sp)
+    qp = _pad_to(qmax, block_k, 0)
+    qp = jnp.where(qp == 0.0, 1.0, qp)
+
+    mp, kp = xp.shape
+    np_ = wp.shape[1]
+    grid = (mp // block_m, np_ // block_n, kp // block_k)
+
+    out = pl.pallas_call(
+        functools.partial(_qmm_kernel, n_k=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((block_k, block_n), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((block_k,), lambda i, j, kk: (kk,)),
+            pl.BlockSpec((block_k,), lambda i, j, kk: (kk,)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=interpret,
+    )(xp, wp, sp, qp)
+    return out[:m, :n]
+
+
+def _fmm_kernel(x_ref, w_ref, o_ref, *, n_k: int):
+    """Fixed-point MAC without input quantization (inputs pre-quantized;
+    structural SAME-padding zeros must stay zero — hardware skips
+    out-of-bounds taps, see Algorithm 4's masking)."""
+    k = pl.program_id(2)
+    partial = jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = partial
+
+    @pl.when(k > 0)
+    def _acc():
+        o_ref[...] += partial
+
+    @pl.when(k == n_k - 1)
+    def _round():
+        acc = o_ref[...]
+        o_ref[...] = jnp.round(acc * smol.ACC_SCALE) * (1.0 / smol.ACC_SCALE)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_m", "block_n", "block_k", "interpret")
+)
+def fmatmul(
+    xq,
+    wq,
+    *,
+    block_m: int = BLOCK_M,
+    block_n: int = BLOCK_N,
+    block_k: int = BLOCK_K,
+    interpret: bool = True,
+):
+    """out = xq @ wq with 16.6 fixed-point rounding (operands already
+    SMOL-quantized; padding zeros contribute exactly zero)."""
+    m, k = xq.shape
+    k2, n = wq.shape
+    assert k == k2
+    block_m = min(block_m, max(8, m))
+    block_n = min(block_n, max(8, n))
+    block_k = min(block_k, max(8, k))
+    xp = _pad_to(_pad_to(xq, block_m, 0), block_k, 1)
+    wp = _pad_to(_pad_to(wq, block_k, 0), block_n, 1)
+    mp, kp = xp.shape
+    np_ = wp.shape[1]
+    grid = (mp // block_m, np_ // block_n, kp // block_k)
+    out = pl.pallas_call(
+        functools.partial(_fmm_kernel, n_k=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((block_k, block_n), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=interpret,
+    )(xp, wp)
+    return out[:m, :n]
+
+
+@jax.custom_vjp
+def qmatmul_ste(x, wq, step, qmax):
+    """qmatmul with straight-through gradients for phase-II training.
+
+    Forward runs the fused Pallas kernel; backward treats the quantizer as
+    identity inside the clip range (STE) so dL/dx = g @ wq^T masked by the
+    clip indicator, dL/dwq = xq^T @ g.
+    """
+    return qmatmul(x, wq, step, qmax)
+
+
+def _qmatmul_ste_fwd(x, wq, step, qmax):
+    out = qmatmul(x, wq, step, qmax)
+    return out, (x, wq, step, qmax)
+
+
+def _qmatmul_ste_bwd(res, g):
+    x, wq, step, qmax = res
+    inside = (jnp.abs(x) <= qmax[None, :]).astype(g.dtype)
+    xq = smol.quantize_odd(x, step[None, :], qmax[None, :])
+    dx = (g @ wq.T) * inside
+    dw = xq.T @ g
+    return dx, dw, None, None
+
+
+qmatmul_ste.defvjp(_qmatmul_ste_fwd, _qmatmul_ste_bwd)

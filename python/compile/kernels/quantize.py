@@ -1,0 +1,67 @@
+"""L1 Pallas kernel: elementwise SMOL quantizer (nearest odd multiple).
+
+Used at build time to bake weight tensors into their fixed phase-II
+precisions, and as the quantize half of the fused qmac kernel's oracle
+decomposition. Same numerics as smol.quantize_odd.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_R = 256
+BLOCK_C = 256
+
+
+def _quant_kernel(x_ref, step_ref, qmax_ref, o_ref):
+    x = x_ref[...]
+    step = step_ref[...]
+    qmax = qmax_ref[...]
+    u = x / step
+    o = 2.0 * jnp.round((u - 1.0) * 0.5) + 1.0
+    o = jnp.clip(o, -qmax / step, qmax / step)
+    o_ref[...] = o * step
+
+
+def _pad2(x, br, bc, fill=0.0):
+    r, c = x.shape
+    pr, pc = (-r) % br, (-c) % bc
+    if pr or pc:
+        x = jnp.pad(x, ((0, pr), (0, pc)), constant_values=fill)
+    return x
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def quantize_2d(x, step, qmax, *, interpret: bool = True):
+    """Quantize a 2-D array; step/qmax have the same 2-D shape (pad-safe)."""
+    assert x.shape == step.shape == qmax.shape and x.ndim == 2
+    r, c = x.shape
+    br, bc = min(BLOCK_R, r), min(BLOCK_C, c)
+    xp = _pad2(x, br, bc)
+    sp = _pad2(step, br, bc, fill=1.0)
+    qp = _pad2(qmax, br, bc, fill=1.0)
+    grid = (xp.shape[0] // br, xp.shape[1] // bc)
+    out = pl.pallas_call(
+        _quant_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((br, bc), lambda i, j: (i, j))] * 3,
+        out_specs=pl.BlockSpec((br, bc), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct(xp.shape, jnp.float32),
+        interpret=interpret,
+    )(xp, sp, qp)
+    return out[:r, :c]
+
+
+def quantize(x, step, qmax):
+    """Quantize any-rank x; step/qmax broadcastable to x."""
+    step_b = jnp.broadcast_to(step, x.shape)
+    qmax_b = jnp.broadcast_to(qmax, x.shape)
+    if x.ndim == 2:
+        return quantize_2d(x, step_b, qmax_b)
+    last = x.shape[-1] if x.ndim >= 1 and x.shape[-1] > 0 else 1
+    flat = lambda a: a.reshape(-1, last)
+    return quantize_2d(flat(x), flat(step_b), flat(qmax_b)).reshape(x.shape)

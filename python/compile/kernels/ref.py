@@ -1,0 +1,50 @@
+"""Pure-jnp oracles for every L1 Pallas kernel (the correctness ground
+truth pytest compares against — and the reference the rust SIMD simulator
+is cross-validated with through the eval HLO artifacts)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from compile import smol
+
+
+def ref_quantize(x, step, qmax):
+    """Oracle for kernels.quantize: nearest odd multiple of step, clamped."""
+    return smol.quantize_odd(x, step, qmax)
+
+
+def ref_inject_noise(w, scale, eps):
+    """Oracle for kernels.noise: w + scale * eps (broadcast)."""
+    return w + jnp.broadcast_to(scale, w.shape) * eps
+
+
+def ref_qmatmul(x, wq, step, qmax):
+    """Oracle for kernels.qmac.qmatmul: quantize then exact matmul, rounded
+    to the 2^-6 fixed-point accumulator grid."""
+    xq = smol.quantize_odd(x, step[None, :], qmax[None, :])
+    out = xq @ wq
+    return smol.fixed_point_round(out)
+
+
+def ref_qmatmul_int(x, wq, prec):
+    """Bit-exact integer-arithmetic model of the configurable ALU's MAC,
+    mirroring what rust/src/simd does: per-channel odd integer codes,
+    products shifted into 2^-6 accumulator units, int32 accumulation.
+
+    prec: (K,) integer precisions in {1, 2, 4}. Proves the float kernel
+    path == the hardware integer path.
+    """
+    prec = jnp.asarray(prec, dtype=jnp.float32)
+    step = 2.0 ** (1.0 - prec)
+    qmax = 2.0 - step
+    xq = smol.quantize_odd(x, step[None, :], qmax[None, :])
+    # odd integer mantissas m = v / step (K is axis 0 of wq, axis 1 of x)
+    xm = jnp.round(xq / step[None, :]).astype(jnp.int32)
+    wm = jnp.round(wq / step[:, None]).astype(jnp.int32)
+    # product units: step^2 = 2^{2-2p}; scale into 2^-6 units: << (8 - 2p)
+    shift = jnp.round(8.0 - 2.0 * prec).astype(jnp.int32)
+    scale = (1 << shift).astype(jnp.int32)
+    # out[m,n] = sum_k xm[m,k] * scale[k] * wm[k,n]   (int32, exact)
+    acc = jnp.einsum("mk,kn->mn", xm * scale[None, :], wm)
+    return acc.astype(jnp.float32) / smol.ACC_SCALE

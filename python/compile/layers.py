@@ -1,0 +1,173 @@
+"""L2 quantized building blocks (functional, NHWC).
+
+Every conv/linear layer carries a per-input-channel SMOL parameter:
+
+- mode "fp32":  plain float layer (the full-precision baseline).
+- mode "noise": SASMOL phase I — uniform +-1 noise scaled by sigma(s^{l,i})
+  injected into both the layer inputs and the weights along the input-
+  channel axis (Algorithm 2 line 6), via the L1 noise kernel.
+- mode "quant": phase II / QAT — inputs and weights quantized to the fixed
+  per-channel precisions with straight-through gradients.
+- mode "eval":  inference path — dense convs/FC run through the fused L1
+  Pallas qmac kernel (quantize-inside-MAC, 16.6 fixed-point accumulator),
+  exactly the datapath the rust SIMD simulator models.
+
+Weight layout is HWIO; im2col patches are channel-major (c, kh, kw) which
+matches jax.lax.conv_general_dilated_patches (asserted in tests), so the
+per-channel step/qmax vectors are jnp.repeat(step_c, kh*kw).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from compile import smol
+from compile.kernels import noise as noise_k
+from compile.kernels import qmac
+from compile.kernels import quantize as quant_k
+
+DN = ("NHWC", "HWIO", "NHWC")
+
+
+def conv_fp(x, w, stride=1, groups=1):
+    return jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding="SAME",
+        dimension_numbers=DN,
+        feature_group_count=groups,
+    )
+
+
+def _prec_arrays(s):
+    """Per-channel (step, qmax) from the trainable s (eval/quant use the
+    snapped {1,2,4} precisions; callers may instead pass explicit arrays)."""
+    p = smol.snap_precision(smol.precision_bits(s))
+    step = 2.0 ** (1.0 - p)
+    return step, 2.0 - step
+
+
+def qconv2d(x, w, step_in, qmax_in, *, stride=1, groups=1, mode="quant", noise_ctx=None):
+    """Quantized conv. step_in/qmax_in: (Cin,) arrays for the layer's input
+    channels (for grouped convs, Cin = full input channel count of x).
+
+    noise_ctx: (sigma_per_channel (Cin,), rng key) — required for mode
+    "noise"; sigma = smol.sigma(s) computed by the caller so gradients flow
+    to s.
+    """
+    if mode == "fp32":
+        return conv_fp(x, w, stride, groups)
+
+    if mode == "noise":
+        sig, key = noise_ctx
+        kx, kw_ = jax.random.split(key)
+        eps_x = jax.random.rademacher(kx, x.shape, dtype=x.dtype)
+        eps_w = jax.random.rademacher(kw_, w.shape, dtype=w.dtype)
+        xn = noise_k.inject_noise(x, sig[None, None, None, :], eps_x)
+        # HWIO: input-channel axis is 2. Grouped convs have Cin/groups
+        # weight input channels; each group g sees channels [g*cg, (g+1)*cg).
+        cg = w.shape[2]
+        if groups == 1:
+            sig_w = sig[None, None, :, None]
+        else:
+            # output channels are ordered by group; weight in-channel i of
+            # group g corresponds to input channel g*cg + i.
+            sig_w = _grouped_in_scale(sig, w.shape, groups)
+        wn = noise_k.inject_noise(w, sig_w, eps_w)
+        return conv_fp(xn, wn, stride, groups)
+
+    # quant / eval: quantize inputs per channel and weights per in-channel.
+    if mode == "quant" or groups > 1:
+        xq = smol.quantize_ste(x, step_in[None, None, None, :], qmax_in[None, None, None, :])
+        if groups == 1:
+            sw = step_in[None, None, :, None]
+            qw = qmax_in[None, None, :, None]
+        else:
+            sw = _grouped_in_scale(step_in, w.shape, groups)
+            qw = _grouped_in_scale(qmax_in, w.shape, groups)
+        wq = smol.quantize_ste(w, jnp.broadcast_to(sw, w.shape), jnp.broadcast_to(qw, w.shape))
+        return conv_fp(xq, wq, stride, groups)
+
+    # mode == "eval", dense conv: Pallas quantize kernel on the activations
+    # (SAME-padding zeros are structural — hardware skips out-of-bounds
+    # taps, so quantization must happen *before* padding), then the Pallas
+    # fixed-point MAC over im2col patches.
+    kh, kw2, cin, cout = w.shape
+    xq = quant_k.quantize(x, step_in[None, None, None, :], qmax_in[None, None, None, :])
+    patches = jax.lax.conv_general_dilated_patches(
+        xq, (kh, kw2), (stride, stride), "SAME", dimension_numbers=DN
+    )  # (N, H', W', Cin*kh*kw), channel-major features
+    n, ho, wo, kdim = patches.shape
+    step_k = jnp.repeat(step_in, kh * kw2)
+    qmax_k = jnp.repeat(qmax_in, kh * kw2)
+    # HWIO -> (I, kh, kw, O) -> (I*kh*kw, O) to match patch ordering
+    wmat = jnp.transpose(w, (2, 0, 1, 3)).reshape(cin * kh * kw2, cout)
+    wq = smol.quantize_odd(wmat, step_k[:, None], qmax_k[:, None])
+    out = qmac.fmatmul(patches.reshape(n * ho * wo, kdim), wq)
+    return out.reshape(n, ho, wo, cout)
+
+
+def _grouped_in_scale(vec, wshape, groups):
+    """Broadcast a per-input-channel (Cin,) vector onto HWIO grouped weights.
+
+    HWIO grouped weights have shape (kh, kw, Cin/groups, Cout); output
+    channel o belongs to group o // (Cout/groups) and its weight in-channel
+    i maps to input channel  group*Cg + i.
+    """
+    kh, kw, cg, cout = wshape
+    og = cout // groups
+    # (groups, cg) -> for each group, its slice of vec
+    per_group = vec.reshape(groups, cg)  # input channels are contiguous
+    # expand to (cg, cout): column o uses per_group[o // og]
+    cols = jnp.repeat(per_group, og, axis=0).reshape(groups * og, cg).T
+    return cols[None, None, :, :]
+
+
+def qlinear(x, w, step_in, qmax_in, *, mode="quant", noise_ctx=None):
+    """Quantized dense layer; x: (N, K), w: (K, M)."""
+    if mode == "fp32":
+        return x @ w
+    if mode == "noise":
+        sig, key = noise_ctx
+        kx, kw_ = jax.random.split(key)
+        eps_x = jax.random.rademacher(kx, x.shape, dtype=x.dtype)
+        eps_w = jax.random.rademacher(kw_, w.shape, dtype=w.dtype)
+        xn = noise_k.inject_noise(x, sig[None, :], eps_x)
+        wn = noise_k.inject_noise(w, sig[:, None], eps_w)
+        return xn @ wn
+    if mode == "quant":
+        xq = smol.quantize_ste(x, step_in[None, :], qmax_in[None, :])
+        wq = smol.quantize_ste(w, jnp.broadcast_to(step_in[:, None], w.shape), jnp.broadcast_to(qmax_in[:, None], w.shape))
+        return xq @ wq
+    # eval: fused Pallas kernel
+    wq = smol.quantize_odd(w, step_in[:, None], qmax_in[:, None])
+    return qmac.qmatmul(x, wq, step_in, qmax_in)
+
+
+def batch_norm(x, scale, bias, mean, var, *, training, momentum=0.9, eps=1e-5):
+    """BN over NHWC (or NC). Returns (y, new_mean, new_var)."""
+    axes = tuple(range(x.ndim - 1))
+    if training:
+        m = jnp.mean(x, axis=axes)
+        v = jnp.var(x, axis=axes)
+        new_mean = momentum * mean + (1 - momentum) * m
+        new_var = momentum * var + (1 - momentum) * v
+    else:
+        m, v = mean, var
+        new_mean, new_var = mean, var
+    y = (x - m) * jax.lax.rsqrt(v + eps) * scale + bias
+    return y, new_mean, new_var
+
+
+def global_avg_pool(x):
+    return jnp.mean(x, axis=(1, 2))
+
+
+def channel_shuffle(x, groups):
+    """ShuffleNet channel shuffle over NHWC."""
+    n, h, w, c = x.shape
+    x = x.reshape(n, h, w, groups, c // groups)
+    x = jnp.swapaxes(x, 3, 4)
+    return x.reshape(n, h, w, c)

@@ -1,0 +1,6 @@
+"""L2 model zoo: CIFAR-scale ResNet-18, MobileNetV2, ShuffleNetV2 plus a
+TinyNet used for fast integration tests. Every conv/FC layer is a
+ULFlexiNet layer with per-input-channel SMOL precision parameters."""
+
+from compile.models.common import MODELS, build  # noqa: F401
+from compile.models import mobilenet, resnet, shufflenet, tinynet  # noqa: F401

@@ -1,0 +1,146 @@
+"""Shared machinery for spec-driven quantized models.
+
+A model build() returns (init_fn, apply_fn, specs):
+
+- specs: ordered list of layer descriptors
+    {name, op ("conv"|"fc"), cin, cout, k, stride, groups, hin, win}
+  `hin/win` are the layer's input spatial dims — the rust code generator
+  and timing simulator consume this table verbatim (emitted to meta.json).
+- init_fn(key) -> state dict:
+    {"params": {name: w, name+"/bn_scale": g, ...},
+     "bn":     {name+"/mean": m, name+"/var": v},
+     "s":      {name: (cin,)},
+     "vel":    momentum buffers, same tree as params}
+- apply_fn(state, prec, x, mode, key, training) -> (logits, new_bn)
+    prec: {name: (step (cin,), qmax (cin,))}, ignored for fp32/noise modes.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from compile import layers, smol
+
+MODELS = {}
+
+
+def register(name):
+    def deco(fn):
+        MODELS[name] = fn
+        return fn
+
+    return deco
+
+
+def build(name, **kw):
+    return MODELS[name](**kw)
+
+
+class Ctx:
+    """Per-forward context threading mode/prec/rng/bn through blocks."""
+
+    def __init__(self, state, prec, mode, key, training):
+        self.params = state["params"]
+        self.bn_in = state["bn"]
+        self.s = state["s"]
+        self.prec = prec
+        self.mode = mode
+        self.key = key
+        self.training = training
+        self.bn_out = {}
+
+    def next_key(self):
+        self.key, sub = jax.random.split(self.key)
+        return sub
+
+    def layer_prec(self, name, cin):
+        if self.prec is not None and name in self.prec:
+            return self.prec[name]
+        # derive from s (used by python-side tests; rust always passes prec)
+        p = smol.snap_precision(smol.precision_bits(self.s[name]))
+        step = 2.0 ** (1.0 - p)
+        return step, 2.0 - step
+
+    def noise_ctx(self, name):
+        return (smol.sigma(self.s[name]), self.next_key())
+
+
+def conv(ctx: Ctx, name, x, *, stride=1, groups=1, relu=True, bn=True):
+    w = ctx.params[name]
+    cin_full = x.shape[-1]
+    step, qmax = ctx.layer_prec(name, cin_full)
+    nk = ctx.noise_ctx(name) if ctx.mode == "noise" else None
+    y = layers.qconv2d(
+        x, w, step, qmax, stride=stride, groups=groups, mode=ctx.mode, noise_ctx=nk
+    )
+    if bn:
+        y, m, v = layers.batch_norm(
+            y,
+            ctx.params[name + "/bn_scale"],
+            ctx.params[name + "/bn_bias"],
+            ctx.bn_in[name + "/mean"],
+            ctx.bn_in[name + "/var"],
+            training=ctx.training,
+        )
+        ctx.bn_out[name + "/mean"] = m
+        ctx.bn_out[name + "/var"] = v
+    if relu:
+        y = jax.nn.relu(y)
+    return y
+
+
+def fc(ctx: Ctx, name, x):
+    w = ctx.params[name]
+    step, qmax = ctx.layer_prec(name, x.shape[-1])
+    nk = ctx.noise_ctx(name) if ctx.mode == "noise" else None
+    return layers.qlinear(x, w, step, qmax, mode=ctx.mode, noise_ctx=nk)
+
+
+class Registry:
+    """Collects layer specs + parameter initializers during build()."""
+
+    def __init__(self, p_init=4):
+        self.specs = []
+        self.inits = {}  # name -> (shape, kind)
+        self.p_init = p_init
+
+    def conv(self, name, cin, cout, k, stride, groups, hin, win, bn=True):
+        self.specs.append(
+            dict(name=name, op="conv", cin=cin, cout=cout, k=k, stride=stride, groups=groups, hin=hin, win=win)
+        )
+        self.inits[name] = ((k, k, cin // groups, cout), "conv_w")
+        if bn:
+            self.inits[name + "/bn_scale"] = ((cout,), "ones")
+            self.inits[name + "/bn_bias"] = ((cout,), "zeros")
+        return (hin + stride - 1) // stride, (win + stride - 1) // stride
+
+    def fc(self, name, cin, cout):
+        self.specs.append(
+            dict(name=name, op="fc", cin=cin, cout=cout, k=1, stride=1, groups=1, hin=1, win=1)
+        )
+        self.inits[name] = ((cin, cout), "fc_w")
+
+    def init_state(self, key):
+        params, s, bn = {}, {}, {}
+        names = sorted(self.inits)
+        keys = jax.random.split(key, len(names))
+        for kk, name in zip(keys, names):
+            shape, kind = self.inits[name]
+            if kind == "conv_w":
+                fan_in = shape[0] * shape[1] * shape[2]
+                params[name] = jax.random.normal(kk, shape) * jnp.sqrt(2.0 / fan_in)
+            elif kind == "fc_w":
+                params[name] = jax.random.normal(kk, shape) * jnp.sqrt(1.0 / shape[0])
+            elif kind == "ones":
+                params[name] = jnp.ones(shape)
+            else:
+                params[name] = jnp.zeros(shape)
+        for spec in self.specs:
+            s[spec["name"]] = jnp.full((spec["cin"],), smol.s_init_for(self.p_init), jnp.float32)
+            if spec["op"] == "conv":
+                bn[spec["name"] + "/mean"] = jnp.zeros((spec["cout"],))
+                bn[spec["name"] + "/var"] = jnp.ones((spec["cout"],))
+        vel = jax.tree_util.tree_map(jnp.zeros_like, params)
+        svel = jax.tree_util.tree_map(jnp.zeros_like, s)
+        return {"params": params, "bn": bn, "s": s, "vel": vel, "svel": svel}

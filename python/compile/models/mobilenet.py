@@ -1,0 +1,66 @@
+"""MobileNetV2 (CIFAR-scale, width-multiplied): inverted residual blocks
+with 1x1 expand -> 3x3 depthwise -> 1x1 project."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from compile.models.common import Ctx, Registry, conv, fc, register
+from compile import layers
+
+# (expansion t, out channels base, repeats n, stride s) — scaled-down CIFAR
+# analogue of the paper's MobileNetV2 table.
+CFG = [
+    (1, 8, 1, 1),
+    (4, 12, 2, 1),
+    (4, 16, 2, 2),
+    (4, 24, 2, 2),
+    (4, 32, 1, 1),
+]
+
+
+def _c(base, mult):
+    return max(4, int(round(base * mult / 4)) * 4)
+
+
+@register("mobilenetv2")
+def build(width_mult=1.0, num_classes=10, image=32, head=64):
+    reg = Registry()
+    h = w = image
+    c0 = _c(8, width_mult)
+    h, w = reg.conv("stem", 3, c0, 3, 1, 1, h, w)
+    cin = c0
+    blocks = []
+    for gi, (t, c, n, s) in enumerate(CFG):
+        cout = _c(c, width_mult)
+        for bi in range(n):
+            st = s if bi == 0 else 1
+            base = f"g{gi}b{bi}"
+            hidden = cin * t
+            if t != 1:
+                reg.conv(base + "/exp", cin, hidden, 1, 1, 1, h, w)
+            h2, w2 = reg.conv(base + "/dw", hidden, hidden, 3, st, hidden, h, w)
+            reg.conv(base + "/proj", hidden, cout, 1, 1, 1, h2, w2)
+            blocks.append((base, t, cin, cout, st))
+            h, w = h2, w2
+            cin = cout
+    reg.conv("head", cin, head, 1, 1, 1, h, w)
+    reg.fc("fc", head, num_classes)
+
+    def apply(state, prec, x, mode, key, training):
+        ctx = Ctx(state, prec, mode, key, training)
+        y = conv(ctx, "stem", x)
+        for base, t, ci, co, st in blocks:
+            inp = y
+            if t != 1:
+                y = conv(ctx, base + "/exp", y)
+            y = conv(ctx, base + "/dw", y, stride=st, groups=y.shape[-1])
+            y = conv(ctx, base + "/proj", y, relu=False)
+            if st == 1 and ci == co:
+                y = y + inp
+        y = conv(ctx, "head", y)
+        y = layers.global_avg_pool(y)
+        logits = fc(ctx, "fc", y)
+        return logits, ctx.bn_out
+
+    return reg.init_state, apply, reg.specs

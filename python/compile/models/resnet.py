@@ -1,0 +1,54 @@
+"""ResNet-18 (CIFAR variant), width-scaled. Paper workload: ResNet-18 on
+ImageNet; here scaled to the synthetic CIFAR-like testbed (DESIGN.md
+substitution table)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from compile.models.common import Ctx, Registry, conv, fc, register
+from compile import layers
+
+
+@register("resnet18")
+def build(width=8, num_classes=10, image=32):
+    reg = Registry()
+    stages = [width, 2 * width, 4 * width, 8 * width]
+    blocks = [2, 2, 2, 2]
+    strides = [1, 2, 2, 2]
+
+    h = w = image
+    h, w = reg.conv("stem", 3, width, 3, 1, 1, h, w)
+    cin = width
+    shortcuts = set()
+    for si, (c, n, st) in enumerate(zip(stages, blocks, strides)):
+        for bi in range(n):
+            s0 = st if bi == 0 else 1
+            base = f"s{si}b{bi}"
+            h2, w2 = reg.conv(base + "/c1", cin, c, 3, s0, 1, h, w)
+            reg.conv(base + "/c2", c, c, 3, 1, 1, h2, w2)
+            if s0 != 1 or cin != c:
+                reg.conv(base + "/sc", cin, c, 1, s0, 1, h, w)
+                shortcuts.add(base)
+            h, w = h2, w2
+            cin = c
+    reg.fc("fc", cin, num_classes)
+
+    def apply(state, prec, x, mode, key, training):
+        ctx = Ctx(state, prec, mode, key, training)
+        y = conv(ctx, "stem", x)
+        cin_ = width
+        for si, (c, n, st) in enumerate(zip(stages, blocks, strides)):
+            for bi in range(n):
+                s0 = st if bi == 0 else 1
+                base = f"s{si}b{bi}"
+                z = conv(ctx, base + "/c1", y, stride=s0)
+                z = conv(ctx, base + "/c2", z, relu=False)
+                sc = conv(ctx, base + "/sc", y, stride=s0, relu=False) if base in shortcuts else y
+                y = jnp.maximum(z + sc, 0.0)
+                cin_ = c
+        y = layers.global_avg_pool(y)
+        logits = fc(ctx, "fc", y)
+        return logits, ctx.bn_out
+
+    return reg.init_state, apply, reg.specs

@@ -1,0 +1,73 @@
+"""ShuffleNetV2 (CIFAR-scale): channel split / shuffle units with depthwise
+convs — the paper's Table I / Fig. 9 workload."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from compile.models.common import Ctx, Registry, conv, fc, register
+from compile import layers
+
+
+@register("shufflenetv2")
+def build(width_mult=1.0, num_classes=10, image=32, head=64):
+    reg = Registry()
+
+    def _c(base):
+        return max(8, int(round(base * width_mult / 4)) * 4)
+
+    stage_c = [_c(24), _c(48), _c(96)]
+    stage_n = [2, 2, 2]
+    h = w = image
+    c0 = _c(12)
+    h, w = reg.conv("stem", 3, c0, 3, 1, 1, h, w)
+    cin = c0
+    units = []
+    for si, (c, n) in enumerate(zip(stage_c, stage_n)):
+        for bi in range(n):
+            base = f"s{si}b{bi}"
+            if bi == 0:
+                # downsample unit: both branches convolved, stride 2
+                half = c // 2
+                reg.conv(base + "/l_dw", cin, cin, 3, 2, cin, h, w)
+                reg.conv(base + "/l_pw", cin, half, 1, 1, 1, (h + 1) // 2, (w + 1) // 2)
+                reg.conv(base + "/r_pw1", cin, half, 1, 1, 1, h, w)
+                reg.conv(base + "/r_dw", half, half, 3, 2, half, h, w)
+                h, w = (h + 1) // 2, (w + 1) // 2
+                reg.conv(base + "/r_pw2", half, half, 1, 1, 1, h, w)
+                units.append((base, "down", cin, c))
+                cin = c
+            else:
+                half = cin // 2
+                reg.conv(base + "/r_pw1", half, half, 1, 1, 1, h, w)
+                reg.conv(base + "/r_dw", half, half, 3, 1, half, h, w)
+                reg.conv(base + "/r_pw2", half, half, 1, 1, 1, h, w)
+                units.append((base, "basic", cin, cin))
+    reg.conv("head", cin, head, 1, 1, 1, h, w)
+    reg.fc("fc", head, num_classes)
+
+    def apply(state, prec, x, mode, key, training):
+        ctx = Ctx(state, prec, mode, key, training)
+        y = conv(ctx, "stem", x)
+        for base, kind, ci, co in units:
+            if kind == "down":
+                left = conv(ctx, base + "/l_dw", y, stride=2, groups=y.shape[-1], relu=False)
+                left = conv(ctx, base + "/l_pw", left)
+                right = conv(ctx, base + "/r_pw1", y)
+                right = conv(ctx, base + "/r_dw", right, stride=2, groups=right.shape[-1], relu=False)
+                right = conv(ctx, base + "/r_pw2", right)
+                y = jnp.concatenate([left, right], axis=-1)
+            else:
+                half = ci // 2
+                left, right = y[..., :half], y[..., half:]
+                right = conv(ctx, base + "/r_pw1", right)
+                right = conv(ctx, base + "/r_dw", right, groups=half, relu=False)
+                right = conv(ctx, base + "/r_pw2", right)
+                y = jnp.concatenate([left, right], axis=-1)
+            y = layers.channel_shuffle(y, 2)
+        y = conv(ctx, "head", y)
+        y = layers.global_avg_pool(y)
+        logits = fc(ctx, "fc", y)
+        return logits, ctx.bn_out
+
+    return reg.init_state, apply, reg.specs

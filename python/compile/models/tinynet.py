@@ -1,0 +1,28 @@
+"""TinyNet: a 3-conv + FC network for fast kernel/runtime integration tests
+(not a paper workload; everything else about it is identical to the real
+models)."""
+
+from __future__ import annotations
+
+from compile.models.common import Ctx, Registry, conv, fc, register
+from compile import layers
+
+
+@register("tinynet")
+def build(width=8, num_classes=10, image=16):
+    reg = Registry()
+    h = w = image
+    h, w = reg.conv("c1", 3, width, 3, 1, 1, h, w)
+    h, w = reg.conv("c2", width, 2 * width, 3, 2, 1, h, w)
+    h, w = reg.conv("c3", 2 * width, 2 * width, 3, 2, 1, h, w)
+    reg.fc("fc", 2 * width, num_classes)
+
+    def apply(state, prec, x, mode, key, training):
+        ctx = Ctx(state, prec, mode, key, training)
+        y = conv(ctx, "c1", x)
+        y = conv(ctx, "c2", y, stride=2)
+        y = conv(ctx, "c3", y, stride=2)
+        y = layers.global_avg_pool(y)
+        return fc(ctx, "fc", y), ctx.bn_out
+
+    return reg.init_state, apply, reg.specs

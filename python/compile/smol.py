@@ -1,0 +1,160 @@
+"""Core SMOL quantization numerics, shared by kernels, models and tests.
+
+SMOL's bitstring -> value mapping (paper Sec. II-B) is
+
+    v = sum_{i=1..n} (2 b_i - 1) * 2^{-(i-1)}        (b_1 = MSB)
+
+which, with the unsigned code u = sum b_i 2^{n-i}, is equivalently
+
+    v = (2u - (2^n - 1)) * 2^{1-n}  =  m * step,   m odd,  step = 2^{1-n}.
+
+So an n-bit SMOL value is an *odd* multiple of step = 2^{1-n}, in the range
+[-(2^n - 1) * step, +(2^n - 1) * step] = [-(2 - step), +(2 - step)].
+There is no zero value; 1-bit values are {-1, +1}.
+
+Examples from the paper: 4-bit 1101 -> 1.375, 2-bit 10 -> 0.5.
+
+The noise-scale parameterization: sigma(s) = sigmoid(s) is the noise
+half-step; precision p = 1 + round(log2(1 + e^{-s})); s_init for an initial
+precision p is -ln(2^{p-1} - 1) so that sigmoid(s_init) = 2^{1-p}.
+
+All quantized values and their pairwise products are exactly representable
+in the paper's 16.6 fixed-point lanes (units of 2^-6): a p-bit x p-bit
+product has units 2^{2-2p} >= 2^-6 for p <= 4.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# Fraction bits of the fixed-point accumulator (paper: 16.6 lanes widened to
+# 32-bit with 6 fraction bits by vpaddlq_s16 / vaddvq_s32).
+ACC_FRAC_BITS = 6
+ACC_SCALE = float(1 << ACC_FRAC_BITS)  # 64.0
+
+# Precisions the system-aware variant allows (Observation 2).
+SUPPORTED_PRECISIONS = (1, 2, 4)
+
+
+def step_for(p):
+    """Quantization step 2^{1-p} for a p-bit SMOL value."""
+    return 2.0 ** (1.0 - p)
+
+
+def qmax_for(p):
+    """Largest representable magnitude (2^p - 1) * 2^{1-p} = 2 - 2^{1-p}."""
+    return 2.0 - step_for(p)
+
+
+def s_init_for(p_init: int) -> float:
+    """s_init = -ln(2^{p_init-1} - 1); sigmoid(s_init) = 2^{1-p_init}.
+
+    p_init = 1 gives -ln(0) = +inf; the paper initializes with p_init >= 2.
+    """
+    import math
+
+    return -math.log(2.0 ** (p_init - 1) - 1.0)
+
+
+def sigma(s):
+    """Noise scale sigma(s) = sigmoid(s) (the quantization half-step)."""
+    return jax.nn.sigmoid(s)
+
+
+def precision_bits(s):
+    """p = 1 + round(log2(1 + e^{-s})) (Algorithm 1 line 9)."""
+    return 1.0 + jnp.round(jnp.log2(1.0 + jnp.exp(-s)))
+
+
+def soft_bits(s):
+    """The regularizer term log2(1 + e^{-s}) (a smooth bits-per-value proxy).
+
+    Computed via softplus for numerical stability at large |s|.
+    """
+    return jax.nn.softplus(-s) / jnp.log(2.0)
+
+
+def snap_precision(p):
+    """Snap a real precision to the closest value in {1, 2, 4} (Alg. 2 l.11)."""
+    p = jnp.asarray(p)
+    # Boundaries by absolute distance: p < 1.5 -> 1; 1.5 <= p < 3 -> 2; else 4.
+    return jnp.where(p < 1.5, 1.0, jnp.where(p < 3.0, 2.0, 4.0))
+
+
+def s_for_precision(p):
+    """Inverse of precision_bits on the representative grid: s with
+    sigmoid(s) = 2^{1-p}, i.e. s = -ln(2^{p-1} - 1) for p > 1, large for p=1."""
+    p = jnp.asarray(p, dtype=jnp.float32)
+    # For p == 1, 2^{p-1} - 1 == 0 -> s = +inf; clamp to a large finite value.
+    raw = -jnp.log(jnp.maximum(2.0 ** (p - 1.0) - 1.0, 1e-9))
+    return jnp.where(p <= 1.0, 20.0, raw)
+
+
+def quantize_odd(x, step, qmax):
+    """Quantize x to the nearest odd multiple of `step`, clamped to +-qmax.
+
+    step/qmax broadcast against x (typically per-input-channel vectors).
+    This is the deterministic phase-II / inference quantizer.
+    """
+    u = x / step
+    # Nearest odd integer to u: 2*round((u - 1) / 2) + 1.
+    o = 2.0 * jnp.round((u - 1.0) * 0.5) + 1.0
+    m_max = qmax / step  # = 2^p - 1
+    o = jnp.clip(o, -m_max, m_max)
+    return o * step
+
+
+def quantize_bits(x, p):
+    """Quantize x to p-bit SMOL values (p may be an array broadcast to x)."""
+    p = jnp.asarray(p, dtype=jnp.float32)
+    step = 2.0 ** (1.0 - p)
+    return quantize_odd(x, step, 2.0 - step)
+
+
+@jax.custom_vjp
+def quantize_ste(x, step, qmax):
+    """Quantizer with straight-through gradient (phase II training).
+
+    Forward: quantize_odd. Backward: pass-through on x inside the clip
+    range, zero outside; zero gradient to step/qmax.
+    """
+    return quantize_odd(x, step, qmax)
+
+
+def _quantize_ste_fwd(x, step, qmax):
+    return quantize_odd(x, step, qmax), (x, jnp.broadcast_to(qmax, x.shape))
+
+
+def _quantize_ste_bwd(res, g):
+    x, qmax = res
+    inside = (jnp.abs(x) <= qmax).astype(g.dtype)
+    return g * inside, None, None
+
+
+quantize_ste.defvjp(_quantize_ste_fwd, _quantize_ste_bwd)
+
+
+def fixed_point_round(x, frac_bits: int = ACC_FRAC_BITS):
+    """Round to the fixed-point grid with `frac_bits` fraction bits.
+
+    For exact SMOL arithmetic this is the identity; it models the hardware's
+    accumulator format and guards the oracle against drift.
+    """
+    scale = 2.0**frac_bits
+    return jnp.round(x * scale) / scale
+
+
+def code_to_value(u, p):
+    """Unsigned n-bit code -> SMOL value: (2u - (2^p - 1)) * 2^{1-p}."""
+    u = jnp.asarray(u, dtype=jnp.float32)
+    p = jnp.asarray(p, dtype=jnp.float32)
+    return (2.0 * u - (2.0**p - 1.0)) * 2.0 ** (1.0 - p)
+
+
+def value_to_code(v, p):
+    """SMOL value -> unsigned n-bit code (inverse of code_to_value)."""
+    v = jnp.asarray(v, dtype=jnp.float32)
+    p = jnp.asarray(p, dtype=jnp.float32)
+    m = v / 2.0 ** (1.0 - p)  # odd integer
+    return jnp.round((m + (2.0**p - 1.0)) * 0.5)

@@ -1,0 +1,157 @@
+"""L2 SASMOL training/eval steps (the functions AOT-lowered to HLO).
+
+Each step is a pure function over a `state` pytree:
+
+    state = {"params": {...}, "vel": {...}, "bn": {...},
+             "s": {...},      "svel": {...}}
+
+- phase1_step: SASMOL phase I — noise-injected forward (L1 noise kernel),
+  loss + lambda * ||log2(1+e^-s)||_1, SGD-momentum on params and s,
+  weight clip to +-(2 - sigma(s)) along input channels (Algorithm 2).
+- phase2_step: phase II / uniform QAT — STE-quantized forward under fixed
+  per-channel (step, qmax) arrays supplied by the rust coordinator (covers
+  U2/U4/INT8 and P4/P8/P45 with one artifact per model).
+- fp32_step:   full-precision baseline.
+- eval_quant:  inference path through the fused Pallas qmac kernel.
+- eval_fp32:   full-precision inference.
+
+The rust coordinator drives these via PJRT; python never runs at that time.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from compile import smol
+
+MOMENTUM = 0.9
+
+
+def cross_entropy(logits, labels, num_classes):
+    logp = jax.nn.log_softmax(logits)
+    onehot = jax.nn.one_hot(labels, num_classes, dtype=logits.dtype)
+    return -jnp.mean(jnp.sum(onehot * logp, axis=-1))
+
+
+def accuracy(logits, labels):
+    return jnp.mean((jnp.argmax(logits, axis=-1) == labels).astype(jnp.float32))
+
+
+def _sgd(params, vel, grads, lr):
+    new_vel = jax.tree_util.tree_map(lambda v, g: MOMENTUM * v + g, vel, grads)
+    new_params = jax.tree_util.tree_map(lambda p, v: p - lr * v, params, new_vel)
+    return new_params, new_vel
+
+
+def _clip_weights(params, s, specs):
+    """Clip conv/fc weights to +-(2 - sigma(s)) per input channel (phase I)."""
+    out = dict(params)
+    for spec in specs:
+        name = spec["name"]
+        w = out[name]
+        lim = 2.0 - smol.sigma(s[name])
+        if spec["op"] == "conv":
+            groups = spec["groups"]
+            if groups == 1:
+                limb = lim[None, None, :, None]
+            else:
+                from compile.layers import _grouped_in_scale
+
+                limb = _grouped_in_scale(lim, w.shape, groups)
+            limb = jnp.broadcast_to(limb, w.shape)
+        else:
+            limb = jnp.broadcast_to(lim[:, None], w.shape)
+        out[name] = jnp.clip(w, -limb, limb)
+    return out
+
+
+def make_steps(apply_fn, specs, num_classes=10):
+    """Build the five step functions for one model."""
+
+    def _forward_loss_noise(params, s, bn, vel, svel, images, labels, key, lam):
+        state = {"params": params, "bn": bn, "s": s, "vel": vel, "svel": svel}
+        logits, new_bn = apply_fn(state, None, images, "noise", key, True)
+        ce = cross_entropy(logits, labels, num_classes)
+        reg = sum(jnp.sum(smol.soft_bits(v)) for v in s.values())
+        return ce + lam * reg, (logits, new_bn, ce)
+
+    def phase1_step(state, images, labels, key, lr, lam):
+        grad_fn = jax.grad(_forward_loss_noise, argnums=(0, 1), has_aux=True)
+        (gp, gs), (logits, new_bn, ce) = grad_fn(
+            state["params"], state["s"], state["bn"], state["vel"], state["svel"],
+            images, labels, key, lam,
+        )
+        new_params, new_vel = _sgd(state["params"], state["vel"], gp, lr)
+        new_s, new_svel = _sgd(state["s"], state["svel"], gs, lr)
+        new_params = _clip_weights(new_params, new_s, specs)
+        new_state = {
+            "params": new_params,
+            "vel": new_vel,
+            "bn": {**state["bn"], **new_bn},
+            "s": new_s,
+            "svel": new_svel,
+        }
+        return new_state, ce, accuracy(logits, labels)
+
+    def _forward_loss_quant(params, bn, rest, prec, images, labels):
+        state = {"params": params, "bn": bn, **rest}
+        logits, new_bn = apply_fn(state, prec, images, "quant", jax.random.PRNGKey(0), True)
+        ce = cross_entropy(logits, labels, num_classes)
+        return ce, (logits, new_bn)
+
+    def phase2_step(state, prec, images, labels, lr):
+        rest = {"s": state["s"], "vel": state["vel"], "svel": state["svel"]}
+        grad_fn = jax.grad(_forward_loss_quant, has_aux=True)
+        gp, (logits, new_bn) = grad_fn(
+            state["params"], state["bn"], rest, prec, images, labels
+        )
+        new_params, new_vel = _sgd(state["params"], state["vel"], gp, lr)
+        new_state = {
+            "params": new_params,
+            "vel": new_vel,
+            "bn": {**state["bn"], **new_bn},
+            "s": state["s"],
+            "svel": state["svel"],
+        }
+        return new_state, ce_out(logits, labels, num_classes), accuracy(logits, labels)
+
+    def _forward_loss_fp(params, bn, rest, images, labels):
+        state = {"params": params, "bn": bn, **rest}
+        logits, new_bn = apply_fn(state, None, images, "fp32", jax.random.PRNGKey(0), True)
+        ce = cross_entropy(logits, labels, num_classes)
+        return ce, (logits, new_bn)
+
+    def fp32_step(state, images, labels, lr):
+        rest = {"s": state["s"], "vel": state["vel"], "svel": state["svel"]}
+        grad_fn = jax.grad(_forward_loss_fp, has_aux=True)
+        gp, (logits, new_bn) = grad_fn(state["params"], state["bn"], rest, images, labels)
+        new_params, new_vel = _sgd(state["params"], state["vel"], gp, lr)
+        new_state = {
+            "params": new_params,
+            "vel": new_vel,
+            "bn": {**state["bn"], **new_bn},
+            "s": state["s"],
+            "svel": state["svel"],
+        }
+        return new_state, ce_out(logits, labels, num_classes), accuracy(logits, labels)
+
+    def eval_quant(state, prec, images):
+        logits, _ = apply_fn(state, prec, images, "eval", jax.random.PRNGKey(0), False)
+        return logits
+
+    def eval_fp32(state, images):
+        logits, _ = apply_fn(state, None, images, "fp32", jax.random.PRNGKey(0), False)
+        return logits
+
+    return dict(
+        phase1_step=phase1_step,
+        phase2_step=phase2_step,
+        fp32_step=fp32_step,
+        eval_quant=eval_quant,
+        eval_fp32=eval_fp32,
+    )
+
+
+def ce_out(logits, labels, num_classes):
+    return cross_entropy(logits, labels, num_classes)

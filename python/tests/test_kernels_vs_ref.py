@@ -1,0 +1,127 @@
+"""Pallas kernels vs pure-jnp oracles: the CORE correctness signal.
+
+Hypothesis sweeps shapes and per-channel precision mixes; every comparison
+is exact (assert_allclose atol=0) because SMOL arithmetic is dyadic-rational
+and therefore exact in f32 — any drift is a real bug.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile import smol
+from compile.kernels import noise, qmac, quantize, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _prec_vec(rng, k):
+    return rng.choice([1, 2, 4], size=k).astype(np.float32)
+
+
+def _rand(rng, *shape):
+    return rng.uniform(-3.0, 3.0, size=shape).astype(np.float32)
+
+
+shapes = st.tuples(
+    st.integers(1, 40), st.integers(1, 70), st.integers(1, 50)
+)
+
+
+@settings(max_examples=10, deadline=None)
+@given(shapes, st.integers(0, 2**31 - 1))
+def test_qmatmul_matches_ref(shape, seed):
+    m, k, n = shape
+    rng = np.random.default_rng(seed)
+    x = _rand(rng, m, k)
+    prec = _prec_vec(rng, k)
+    step = (2.0 ** (1.0 - prec)).astype(np.float32)
+    qmax = (2.0 - step).astype(np.float32)
+    # weights pre-quantized to the channel precisions
+    wq = np.asarray(smol.quantize_odd(_rand(rng, k, n), step[:, None], qmax[:, None]))
+    got = qmac.qmatmul(jnp.asarray(x), jnp.asarray(wq), jnp.asarray(step), jnp.asarray(qmax))
+    want = ref.ref_qmatmul(jnp.asarray(x), jnp.asarray(wq), jnp.asarray(step), jnp.asarray(qmax))
+    assert_allclose(np.asarray(got), np.asarray(want), atol=0, rtol=0)
+
+
+@settings(max_examples=8, deadline=None)
+@given(shapes, st.integers(0, 2**31 - 1))
+def test_qmatmul_matches_integer_alu_model(shape, seed):
+    """Float kernel == bit-exact integer ALU model (the rust simd contract)."""
+    m, k, n = shape
+    rng = np.random.default_rng(seed)
+    x = _rand(rng, m, k)
+    prec = _prec_vec(rng, k)
+    step = (2.0 ** (1.0 - prec)).astype(np.float32)
+    qmax = (2.0 - step).astype(np.float32)
+    wq = np.asarray(smol.quantize_odd(_rand(rng, k, n), step[:, None], qmax[:, None]))
+    got = qmac.qmatmul(jnp.asarray(x), jnp.asarray(wq), jnp.asarray(step), jnp.asarray(qmax))
+    want = ref.ref_qmatmul_int(jnp.asarray(x), jnp.asarray(wq), jnp.asarray(prec))
+    assert_allclose(np.asarray(got), np.asarray(want), atol=0, rtol=0)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    st.tuples(st.integers(1, 60), st.integers(1, 60)),
+    st.integers(0, 2**31 - 1),
+)
+def test_quantize_matches_ref(shape, seed):
+    r, c = shape
+    rng = np.random.default_rng(seed)
+    x = _rand(rng, r, c)
+    prec = _prec_vec(rng, c)
+    step = jnp.asarray(2.0 ** (1.0 - prec))
+    qmax = 2.0 - step
+    got = quantize.quantize(jnp.asarray(x), step[None, :], qmax[None, :])
+    want = ref.ref_quantize(jnp.asarray(x), step[None, :], qmax[None, :])
+    assert_allclose(np.asarray(got), np.asarray(want), atol=0, rtol=0)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    st.tuples(st.integers(1, 30), st.integers(1, 30), st.integers(1, 8)),
+    st.integers(0, 2**31 - 1),
+)
+def test_inject_noise_matches_ref(shape, seed):
+    o, i, khw = shape
+    rng = np.random.default_rng(seed)
+    w = _rand(rng, o, i, khw)
+    scale = rng.uniform(0.01, 1.0, size=(1, i, 1)).astype(np.float32)
+    eps = rng.choice([-1.0, 1.0], size=w.shape).astype(np.float32)
+    got = noise.inject_noise(jnp.asarray(w), jnp.asarray(scale), jnp.asarray(eps))
+    want = ref.ref_inject_noise(jnp.asarray(w), jnp.asarray(scale), jnp.asarray(eps))
+    assert_allclose(np.asarray(got), np.asarray(want), atol=0, rtol=0)
+
+
+def test_noise_gradients():
+    """d/dw = g, d/dscale = sum(g * eps) over broadcast dims."""
+    rng = np.random.default_rng(0)
+    w = jnp.asarray(_rand(rng, 4, 6))
+    scale = jnp.asarray(rng.uniform(0.1, 1.0, size=(1, 6)).astype(np.float32))
+    eps = jnp.asarray(rng.choice([-1.0, 1.0], size=(4, 6)).astype(np.float32))
+    f = lambda w, s: jnp.sum(noise.inject_noise(w, s, eps) ** 2)
+    dw, ds = jax.grad(f, argnums=(0, 1))(w, scale)
+    out = w + scale * eps
+    assert_allclose(np.asarray(dw), np.asarray(2 * out), rtol=1e-6)
+    assert_allclose(np.asarray(ds), np.asarray((2 * out * eps).sum(0, keepdims=True)), rtol=1e-6)
+
+
+def test_qmatmul_ste_gradients():
+    """STE backward: dx masked by clip indicator; dw = xq^T @ g."""
+    rng = np.random.default_rng(1)
+    m, k, n = 5, 7, 3
+    x = jnp.asarray(_rand(rng, m, k) * 2.0)  # some values outside clip
+    prec = _prec_vec(rng, k)
+    step = jnp.asarray(2.0 ** (1.0 - prec))
+    qmax = 2.0 - step
+    wq = smol.quantize_odd(jnp.asarray(_rand(rng, k, n)), step[:, None], qmax[:, None])
+    f = lambda x, w: jnp.sum(qmac.qmatmul_ste(x, w, step, qmax))
+    dx, dw = jax.grad(f, argnums=(0, 1))(x, wq)
+    g = jnp.ones((m, n))
+    inside = (jnp.abs(x) <= qmax[None, :]).astype(jnp.float32)
+    assert_allclose(np.asarray(dx), np.asarray((g @ wq.T) * inside), rtol=1e-6)
+    xq = smol.quantize_odd(x, step[None, :], qmax[None, :])
+    assert_allclose(np.asarray(dw), np.asarray(xq.T @ g), rtol=1e-6)

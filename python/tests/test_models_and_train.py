@@ -1,0 +1,132 @@
+"""Model zoo + training step tests: shapes, modes, gradient flow, the
+phase-I regularizer, and the quant/eval parity that anchors the rust
+simulator cross-validation."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from compile import smol, train
+from compile.models import build
+
+jax.config.update("jax_platform_name", "cpu")
+
+MODELS = [
+    ("tinynet", dict(width=8, image=16), 16),
+    ("resnet18", dict(width=4), 32),
+    ("mobilenetv2", dict(width_mult=1.0), 32),
+    ("shufflenetv2", dict(width_mult=1.0), 32),
+]
+
+
+def _uniform_prec(specs, bits):
+    step = smol.step_for(bits) if hasattr(smol, "step_for") else 2.0 ** (1 - bits)
+    return {
+        sp["name"]: (
+            jnp.full((sp["cin"],), 2.0 ** (1.0 - bits), jnp.float32),
+            jnp.full((sp["cin"],), 2.0 - 2.0 ** (1.0 - bits), jnp.float32),
+        )
+        for sp in specs
+    }
+
+
+@pytest.mark.parametrize("name,kw,img", MODELS)
+def test_forward_shapes_all_modes(name, kw, img):
+    init, apply, specs = build(name, **kw)
+    state = init(jax.random.PRNGKey(0))
+    x = jnp.zeros((2, img, img, 3))
+    prec = _uniform_prec(specs, 4)
+    for mode in ["fp32", "noise", "quant"]:
+        logits, new_bn = apply(state, prec, x, mode, jax.random.PRNGKey(1), True)
+        assert logits.shape == (2, 10), f"{name}/{mode}"
+        assert all(k in new_bn for k in state["bn"]), f"{name}/{mode} bn keys"
+
+
+@pytest.mark.parametrize("name,kw,img", MODELS[:1])
+def test_eval_matches_quant_path_exactly(name, kw, img):
+    """Pallas eval path == jnp STE path at inference (exact)."""
+    init, apply, specs = build(name, **kw)
+    state = init(jax.random.PRNGKey(3))
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.uniform(-1.5, 1.5, (2, img, img, 3)).astype(np.float32))
+    prec = _uniform_prec(specs, 4)
+    le, _ = apply(state, prec, x, "eval", jax.random.PRNGKey(0), False)
+    lq, _ = apply(state, prec, x, "quant", jax.random.PRNGKey(0), False)
+    assert_allclose(np.asarray(le), np.asarray(lq), atol=0, rtol=0)
+
+
+def test_phase1_gradients_flow_to_s():
+    init, apply, specs = build("tinynet", width=8, image=16)
+    state = init(jax.random.PRNGKey(0))
+    steps = train.make_steps(apply, specs)
+    rng = np.random.default_rng(1)
+    imgs = jnp.asarray(rng.uniform(-1, 1, (8, 16, 16, 3)).astype(np.float32))
+    labels = jnp.asarray(rng.integers(0, 10, (8,)).astype(np.int32))
+    ns, loss, _ = steps["phase1_step"](state, imgs, labels, jax.random.PRNGKey(2), 0.1, 1e-3)
+    assert float(loss) > 0
+    moved = sum(
+        float(jnp.max(jnp.abs(ns["s"][k] - state["s"][k]))) for k in state["s"]
+    )
+    assert moved > 0, "s must receive gradients in phase I"
+
+
+def test_phase1_regularizer_pushes_s_up():
+    """With a huge lambda, the bits regularizer dominates and drives s up
+    (toward lower precision)."""
+    init, apply, specs = build("tinynet", width=8, image=16)
+    state = init(jax.random.PRNGKey(0))
+    steps = train.make_steps(apply, specs)
+    imgs = jnp.zeros((4, 16, 16, 3))
+    labels = jnp.zeros((4,), jnp.int32)
+    ns = state
+    for i in range(5):
+        ns, _, _ = steps["phase1_step"](ns, imgs, labels, jax.random.PRNGKey(i), 0.5, 10.0)
+    before = np.mean([float(jnp.mean(v)) for v in state["s"].values()])
+    after = np.mean([float(jnp.mean(v)) for v in ns["s"].values()])
+    assert after > before, f"{before} -> {after}"
+
+
+def test_phase1_clips_weights():
+    init, apply, specs = build("tinynet", width=8, image=16)
+    state = init(jax.random.PRNGKey(0))
+    # blow up a weight; one phase1 step must clip it to +-(2 - sigma(s))
+    state["params"]["c1"] = state["params"]["c1"].at[0, 0, 0, 0].set(100.0)
+    steps = train.make_steps(apply, specs)
+    ns, _, _ = steps["phase1_step"](
+        state, jnp.zeros((4, 16, 16, 3)), jnp.zeros((4,), jnp.int32),
+        jax.random.PRNGKey(1), 0.0, 0.0,
+    )
+    wmax = float(jnp.max(jnp.abs(ns["params"]["c1"])))
+    assert wmax <= 2.0, wmax
+
+
+def test_phase2_quantized_loss_decreases():
+    init, apply, specs = build("tinynet", width=8, image=16)
+    state = init(jax.random.PRNGKey(0))
+    steps = train.make_steps(apply, specs)
+    rng = np.random.default_rng(5)
+    imgs = jnp.asarray(rng.uniform(-1, 1, (16, 16, 16, 3)).astype(np.float32))
+    labels = jnp.asarray(rng.integers(0, 10, (16,)).astype(np.int32))
+    prec = _uniform_prec(specs, 4)
+    step = jax.jit(steps["phase2_step"])
+    losses = []
+    ns = state
+    for _ in range(25):
+        ns, loss, _ = step(ns, prec, imgs, labels, 0.05)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0], losses
+
+
+def test_bn_running_stats_update():
+    init, apply, specs = build("tinynet", width=8, image=16)
+    state = init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.normal(0, 5, (8, 16, 16, 3)).astype(np.float32))
+    _, new_bn = apply(state, None, x, "fp32", jax.random.PRNGKey(0), True)
+    # running stats moved toward batch stats
+    assert float(jnp.max(jnp.abs(new_bn["c1/var"] - state["bn"]["c1/var"]))) > 0
+    # eval mode: unchanged
+    _, eval_bn = apply(state, None, x, "fp32", jax.random.PRNGKey(0), False)
+    assert_allclose(np.asarray(eval_bn["c1/var"]), np.asarray(state["bn"]["c1/var"]))

@@ -1,0 +1,83 @@
+"""SMOL numerics invariants (the shared ground truth the rust side
+mirrors): code/value mapping, quantizer properties, s <-> precision."""
+
+import math
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile import smol
+
+
+def test_paper_mapping_examples():
+    # 4-bit 1101 -> 1.375, 2-bit 10 -> 0.5, 1-bit {0,1} -> {-1,+1}
+    assert float(smol.code_to_value(0b1101, 4)) == 1.375
+    assert float(smol.code_to_value(0b10, 2)) == 0.5
+    assert float(smol.code_to_value(0, 1)) == -1.0
+    assert float(smol.code_to_value(1, 1)) == 1.0
+
+
+def test_code_roundtrip_all_precisions():
+    for p in (1, 2, 4, 8):
+        codes = np.arange(2**p)
+        vals = np.asarray(smol.code_to_value(codes, p))
+        back = np.asarray(smol.value_to_code(vals, p))
+        assert np.array_equal(back, codes), p
+        # odd mantissas, no zero, symmetric
+        m = vals / smol.step_for(p)
+        assert np.all(np.abs(m % 2) == 1)
+        assert 0.0 not in vals
+        assert_allclose(np.sort(vals), -np.sort(-vals)[::-1])
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.floats(-10, 10), st.sampled_from([1, 2, 4]))
+def test_quantize_idempotent_and_bounded(x, p):
+    q = float(smol.quantize_bits(jnp.float32(x), p))
+    q2 = float(smol.quantize_bits(jnp.float32(q), p))
+    assert q == q2
+    assert abs(q) <= smol.qmax_for(p) + 1e-6
+    assert abs(q) >= smol.step_for(p) - 1e-6
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.floats(-1.8, 1.8), st.sampled_from([2, 4]))
+def test_quantize_error_bound(x, p):
+    q = float(smol.quantize_bits(jnp.float32(x), p))
+    assert abs(q - x) <= smol.step_for(p) + 1e-6
+
+
+def test_s_init_consistency():
+    # sigma(s_init(p)) = 2^{1-p} and precision_bits inverts it
+    for p in (2, 3, 4, 8):
+        s = smol.s_init_for(p)
+        assert_allclose(float(smol.sigma(jnp.float32(s))), 2.0 ** (1 - p), rtol=1e-5)
+        assert float(smol.precision_bits(jnp.float32(s))) == p
+
+
+def test_snap_precision_boundaries():
+    got = np.asarray(smol.snap_precision(jnp.asarray([1.0, 1.4, 1.5, 2.0, 2.9, 3.0, 5.0])))
+    assert got.tolist() == [1.0, 1.0, 2.0, 2.0, 2.0, 4.0, 4.0]
+
+
+def test_soft_bits_matches_log2():
+    s = jnp.asarray([-2.0, 0.0, 3.0])
+    want = np.log2(1 + np.exp(-np.asarray(s)))
+    assert_allclose(np.asarray(smol.soft_bits(s)), want, rtol=1e-6)
+
+
+def test_products_exact_in_16_6():
+    # all pairwise products of supported precisions land on the 2^-6 grid
+    for p in (1, 2, 4):
+        vals = [float(smol.code_to_value(u, p)) for u in range(2**p)]
+        for a in vals:
+            for b in vals:
+                prod = a * b
+                assert prod == math.floor(prod * 64) / 64.0
+
+
+def test_fixed_point_round_identity_on_grid():
+    xs = jnp.asarray([0.0, 1.0 / 64, -3.5, 1.875 * 1.875])
+    assert_allclose(np.asarray(smol.fixed_point_round(xs)), np.asarray(xs))

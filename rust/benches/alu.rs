@@ -1,0 +1,82 @@
+//! Micro-benchmarks of the L3 hot path: the configurable ALU (vmac/vmul
+//! per pattern class), SMOL packing/quantization, and raw simulator
+//! instruction throughput. These are the paths the Fig. 8 simulations
+//! spend their time in — see EXPERIMENTS.md §Perf for the target numbers.
+
+use soniq::sim::machine::Machine;
+use soniq::simd::alu;
+use soniq::simd::isa::{Addr, Instr};
+use soniq::simd::patterns::Pattern;
+use soniq::simd::vector::{pack_values, V128};
+use soniq::smol::quant;
+use soniq::util::bench::{bench, section};
+use soniq::util::rng::Rng;
+
+fn rand_packed(rng: &mut Rng, pat: &Pattern) -> V128 {
+    let vals: Vec<f32> = (0..pat.capacity())
+        .map(|i| {
+            let p = pat.element_precision(i);
+            quant::code_to_value(rng.below(1 << p) as u32, p)
+        })
+        .collect();
+    pack_values(pat, &vals)
+}
+
+fn main() {
+    let mut rng = Rng::new(1);
+
+    section("configurable ALU — vmac by pattern class");
+    for (name, pat) in [
+        ("vmac uniform-4b (32 MACs)", Pattern::uniform(4)),
+        ("vmac uniform-2b (64 MACs)", Pattern::uniform(2)),
+        ("vmac uniform-1b (128 MACs)", Pattern::uniform(1)),
+        ("vmac mixed (16,24,16)", Pattern::new(16, 24, 16)),
+    ] {
+        let a = rand_packed(&mut rng, &pat);
+        let b = rand_packed(&mut rng, &pat);
+        let r = bench(name, || alu::reduce_acc(&alu::vmac(&a, &b, &pat)));
+        println!(
+            "    -> {:.1} M MAC-ops/s",
+            r.throughput(pat.capacity() as f64) / 1e6
+        );
+    }
+
+    section("configurable ALU — vmul (two-cycle product path)");
+    for p in [4u8, 2, 1] {
+        let pat = Pattern::uniform(p);
+        let a = rand_packed(&mut rng, &pat);
+        let b = rand_packed(&mut rng, &pat);
+        bench(&format!("vmul uniform-{p}b"), || alu::vmul(&a, &b, &pat));
+    }
+
+    section("SMOL packing / quantization");
+    let vals: Vec<f32> = (0..128).map(|_| rng.range(-2.0, 2.0)).collect();
+    let pat = Pattern::uniform(1);
+    bench("pack_values 128 x 1-bit", || pack_values(&pat, &vals));
+    bench("quantize scalar x 128", || {
+        vals.iter().map(|&v| quant::quantize(v, 4)).sum::<f32>()
+    });
+
+    section("simulator instruction throughput");
+    let mut m = Machine::new();
+    m.patterns.push(Pattern::uniform(4));
+    let abuf = m.alloc(1 << 14);
+    let prog: Vec<Instr> = (0..1024)
+        .flat_map(|i| {
+            [
+                Instr::LdQ { dst: 0, addr: Addr { buf: abuf, off: (i * 16) % 16384 } },
+                Instr::LdQ { dst: 1, addr: Addr { buf: abuf, off: (i * 32) % 16384 } },
+                Instr::VmacP { dst: 2, a: 0, b: 1, pat: 0 },
+                Instr::Vaddq16 { dst: 3, a: 3, b: 2 },
+            ]
+        })
+        .collect();
+    let r = bench("machine.run 4096-instr MAC loop", || {
+        m.run(&prog);
+        m.take_stats().instrs
+    });
+    println!(
+        "    -> {:.1} M simulated instrs/s",
+        r.throughput(prog.len() as f64) / 1e6
+    );
+}

@@ -1,0 +1,42 @@
+//! Table V / Sec. V-B bench: prints the hardware cost + timing report and
+//! times the structural models.
+
+use soniq::hw::{gates, timing};
+use soniq::util::bench::{bench, section};
+
+fn main() {
+    section("Table V — NAND2-equivalent gate counts");
+    let lane = gates::lane_gates();
+    println!("  module breakdown (per 16-bit lane):");
+    println!("    1-bit unit        {:>8.0}", lane.one_bit_unit);
+    println!("    2-bit unit        {:>8.0}", lane.two_bit_unit);
+    println!("    4-bit Booth path  {:>8.0}", lane.four_bit_booth);
+    println!("    shared 4:2 tree   {:>8.0}", lane.shared_compressor);
+    println!("    12-bit CPA        {:>8.0}", lane.cpa);
+    println!("    align muxes       {:>8.0}", lane.align_muxes);
+    println!("    staging/output    {:>8.0}", lane.staging_and_output);
+    println!("    per-lane total    {:>8.0}  (paper: 2805)", lane.total());
+    println!("    8-lane ALU        {:>8.0}  (paper: 22440)", 8.0 * lane.total());
+    for np in [4usize, 8, 16, 45] {
+        println!("    control block P{np:<2} {:>8.0}", gates::control_block_gates(np));
+    }
+    println!(
+        "    overhead vs 300M-gate vector core (P45): {:.6}%",
+        100.0 * gates::overhead_fraction(45, 300.0e6)
+    );
+
+    section("Sec. V-B — critical path @ 2 GHz");
+    for s in timing::CRITICAL_PATH {
+        println!("    {:<12} {:>6.1} ps", s.name, s.delay_ps);
+    }
+    println!(
+        "    total {:.1} ps, slack {:.1} ps, meets 2 GHz: {}",
+        timing::critical_path_ps(),
+        timing::slack_ps(2.0),
+        timing::meets_timing(2.0, 0.05)
+    );
+
+    section("model evaluation throughput");
+    bench("lane_gates()", gates::lane_gates);
+    bench("critical_path_ps()", timing::critical_path_ps);
+}

@@ -1,0 +1,61 @@
+//! Fig. 8 run-time bench: simulated cycles per inference for each
+//! {network, design point} on the paper-scale shape tables (full-width
+//! networks, where the vectorization effects bite), normalized to U4 —
+//! plus the simulator's own wall-clock throughput.
+
+use soniq::coordinator::{paperscale, simulate_paper_scale, DesignPoint};
+use soniq::util::bench::section;
+use std::time::Instant;
+
+fn main() {
+    let designs = [
+        DesignPoint::Fp32,
+        DesignPoint::Int8,
+        DesignPoint::Uniform(4),
+        DesignPoint::Uniform(2),
+        DesignPoint::Patterns(4),
+        DesignPoint::Patterns(8),
+        DesignPoint::Patterns(45),
+    ];
+    // representative trained fractions (later layers lower-precision, as
+    // in Fig. 9): front third mostly 4-bit, back third mostly 1-bit.
+    for model in ["resnet18", "mobilenetv2", "shufflenetv2"] {
+        section(&format!("Fig. 8 run-time — {model} (paper-scale shapes)"));
+        let shapes = paperscale::shapes_for(model);
+        let n = shapes.len();
+        let fractions: Vec<(String, f64, f64)> = shapes
+            .iter()
+            .enumerate()
+            .map(|(i, s)| {
+                let t = i as f64 / n as f64;
+                // f4 decays with depth, f1 grows (Fig. 9 profile)
+                let f4 = (0.9 - 0.8 * t).max(0.05);
+                let f2 = 0.3;
+                (s.name.clone(), f4, f2)
+            })
+            .collect();
+        let mut results = Vec::new();
+        for dp in designs {
+            let t0 = Instant::now();
+            let (total, _) = simulate_paper_scale(model, dp, &fractions);
+            let wall = t0.elapsed();
+            results.push((dp.label(), total.cycles(), total.energy_pj, total.instrs, wall));
+        }
+        let u4 = results.iter().find(|r| r.0 == "U4").map(|r| r.1).unwrap();
+        println!(
+            "{:<6} {:>14} {:>9} {:>12} {:>12} {:>10}",
+            "design", "cycles", "speedup", "energy(uJ)", "sim instrs", "sim wall"
+        );
+        for (label, cycles, energy, instrs, wall) in &results {
+            println!(
+                "{:<6} {:>14} {:>9.2} {:>12.1} {:>12} {:>9.2?}",
+                label,
+                cycles,
+                u4 as f64 / *cycles as f64,
+                energy / 1e6,
+                instrs,
+                wall
+            );
+        }
+    }
+}

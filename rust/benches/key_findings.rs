@@ -1,0 +1,73 @@
+//! Key Finding 1 bench: U4 run-time/energy vs FP32 (paper: ~8x) and vs
+//! INT8 (paper: ~2x) on MAC-bound, channel-rich layers; plus the
+//! U2-vs-U4 and mixed-precision deltas (Key Findings 2-3 mechanisms).
+
+use soniq::codegen::{DataFormat, LayerKind, LayerPlan};
+use soniq::sim::machine::Machine;
+use soniq::sim::network::{run_conv, ConvLayerCfg, Tensor};
+use soniq::smol::pattern_match::Assignment;
+use soniq::util::bench::section;
+use soniq::util::rng::Rng;
+
+fn time_layer(cin: usize, cout: usize, hw: usize, fmt: DataFormat, asg: Assignment) -> (u64, f64) {
+    let mut rng = Rng::new(3);
+    let cfg = ConvLayerCfg {
+        plan: LayerPlan {
+            name: "kf".into(),
+            kind: LayerKind::Dense,
+            cin,
+            cout,
+            kh: 3,
+            kw: 3,
+            stride: 1,
+            hin: hw,
+            win: hw,
+            asg,
+            fmt,
+        },
+        weights: (0..9 * cin * cout).map(|_| rng.range(-1.0, 1.0)).collect(),
+        bn_scale: vec![],
+        bn_bias: vec![],
+        bn_mean: vec![],
+        bn_var: vec![],
+        relu: false,
+    };
+    let x = Tensor {
+        h: hw,
+        w: hw,
+        c: cin,
+        data: (0..hw * hw * cin).map(|_| rng.range(-2.0, 2.0)).collect(),
+    };
+    let mut m = Machine::new();
+    let (_, stats) = run_conv(&mut m, &cfg, &x);
+    (stats.cycles(), stats.energy_pj)
+}
+
+fn main() {
+    section("Key Finding 1 — U4 vs FP32 / INT8 (channel-rich conv3x3)");
+    println!(
+        "{:<28} {:>12} {:>12} {:>10} {:>10}",
+        "layer", "design", "cycles", "vs FP32", "energy x"
+    );
+    for (cin, cout, hw) in [(128usize, 64usize, 14usize), (256, 128, 8), (512, 256, 4)] {
+        let (fp_c, fp_e) = time_layer(cin, cout, hw, DataFormat::Fp32, Assignment::uniform(cin, 4));
+        for (label, fmt, bits) in [
+            ("FP32", DataFormat::Fp32, 4u8),
+            ("INT8", DataFormat::Int8, 4),
+            ("U4", DataFormat::Smol, 4),
+            ("U2", DataFormat::Smol, 2),
+        ] {
+            let (c, e) = time_layer(cin, cout, hw, fmt, Assignment::uniform(cin, bits));
+            println!(
+                "{:<28} {:>12} {:>12} {:>10.2} {:>10.2}",
+                format!("{cin}x{cout} @{hw}x{hw}"),
+                label,
+                c,
+                fp_c as f64 / c as f64,
+                fp_e / e
+            );
+        }
+    }
+    println!("\npaper: U4 ~8x FP32 run-time/energy, ~2x INT8 (Key Finding 1);");
+    println!("U2 up to ~2x U4 (Fig. 8); both ratios should match in shape above.");
+}

@@ -1,0 +1,46 @@
+//! Table II / Table III / Problem-1 benches: pattern enumeration, the
+//! combination solver across design points, and PatternMatch end to end.
+
+use soniq::simd::patterns::{all_patterns, design_subset, index_of, Pattern};
+use soniq::smol::pattern_match::pattern_match;
+use soniq::smol::problem1::{solve, Demand};
+use soniq::util::bench::{bench, section};
+use soniq::util::rng::Rng;
+
+fn main() {
+    section("Table II — pattern enumeration");
+    bench("all_patterns (45 entries)", all_patterns);
+    let pats = all_patterns();
+    println!(
+        "    {} patterns; uniform indices: U4={:?} U2={:?} U1={:?}",
+        pats.len(),
+        index_of(&Pattern::uniform(4)),
+        index_of(&Pattern::uniform(2)),
+        index_of(&Pattern::uniform(1))
+    );
+
+    section("Problem 1 — combination solver (per layer)");
+    let demands = [
+        ("small  (C=64)", Demand { n1: 20, n2: 24, n4: 20 }),
+        ("medium (C=256)", Demand { n1: 120, n2: 80, n4: 56 }),
+        ("large  (C=512)", Demand { n1: 300, n2: 128, n4: 84 }),
+    ];
+    for np in [4usize, 8, 45] {
+        let sub = design_subset(np);
+        for (name, d) in &demands {
+            bench(&format!("solve P{np} {name}"), || solve(d, &sub).unwrap().num_vectors());
+        }
+    }
+    println!(
+        "\nTable III subsets: P4 {:?}  P8 {:?}",
+        design_subset(4).iter().map(|p| index_of(p).unwrap()).collect::<Vec<_>>(),
+        design_subset(8).iter().map(|p| index_of(p).unwrap()).collect::<Vec<_>>()
+    );
+
+    section("PatternMatch (Algorithm 3) end to end");
+    let mut rng = Rng::new(5);
+    for c in [64usize, 256, 512] {
+        let s: Vec<f32> = (0..c).map(|_| rng.range(-4.0, 8.0)).collect();
+        bench(&format!("pattern_match C={c}, P45"), || pattern_match(&s, &all_patterns()));
+    }
+}

@@ -1,0 +1,567 @@
+//! The inference code generator (Sec. IV-D, Algorithm 4).
+//!
+//! Given a trained layer's shape and precision assignment, emits the
+//! vectorized instruction stream for the configurable SIMD architecture:
+//! channel-chunk-major dataflow with output anchoring, weight auxiliary
+//! stationarity (the 3x3 weight vectors of the current (chunk, k) are
+//! stashed in registers across all spatial positions) and input window
+//! stashing (reused across overlapping taps), unrolled R/S loops, tail
+//! masking with `vand`, `vmac_Pn` MACs accumulated with `vaddq_s16` and
+//! reduced with `vpaddlq_s16`/`vaddvq_s32` (fused in `ReduceAcc`).
+//!
+//! Depthwise separable convolutions use the two-cycle `vmul_Pn` +
+//! software-corrected accumulation path (Sec. III-C).
+//!
+//! Baseline formats (`Fp32`, `Int8`) emit the same dataflow with
+//! `vfmaq_f32` / int8-MAC ops for the Key-Finding-1 comparisons.
+
+pub mod pack;
+
+use crate::simd::isa::{Addr, BufId, Instr};
+use crate::simd::patterns::Pattern;
+use crate::smol::pattern_match::Assignment;
+
+/// Data format a layer runs in (design-point dependent).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DataFormat {
+    /// SMOL-packed mixed precision (the paper's architecture).
+    Smol,
+    /// 16 x int8 lanes (INT8 baseline).
+    Int8,
+    /// 4 x f32 lanes (full-precision baseline).
+    Fp32,
+}
+
+/// Kind of layer kernel to generate.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LayerKind {
+    /// dense (or grouped, handled per-group) convolution / FC
+    Dense,
+    /// depthwise convolution (multiply path, Sec. III-C)
+    Depthwise,
+}
+
+/// Everything the generator needs for one layer.
+#[derive(Debug, Clone)]
+pub struct LayerPlan {
+    pub name: String,
+    pub kind: LayerKind,
+    pub cin: usize,
+    pub cout: usize,
+    pub kh: usize,
+    pub kw: usize,
+    pub stride: usize,
+    pub hin: usize,
+    pub win: usize,
+    pub asg: Assignment,
+    pub fmt: DataFormat,
+}
+
+impl LayerPlan {
+    pub fn hout(&self) -> usize {
+        self.hin.div_ceil(self.stride)
+    }
+    pub fn wout(&self) -> usize {
+        self.win.div_ceil(self.stride)
+    }
+    /// XLA-SAME padding: total = max((out-1)*stride + k - in, 0),
+    /// top/left = total / 2 (floor; asymmetric pad goes to bottom/right).
+    pub fn pad_top(&self) -> isize {
+        let total =
+            ((self.hout() as isize - 1) * self.stride as isize + self.kh as isize) - self.hin as isize;
+        total.max(0) / 2
+    }
+    pub fn pad_left(&self) -> isize {
+        let total =
+            ((self.wout() as isize - 1) * self.stride as isize + self.kw as isize) - self.win as isize;
+        total.max(0) / 2
+    }
+
+    /// Channel chunks for the layer's format: SMOL uses the assignment's
+    /// pattern chunks; baselines use fixed-capacity chunks.
+    pub fn chunks(&self) -> Vec<(Pattern, u32)> {
+        match self.fmt {
+            DataFormat::Smol => self
+                .asg
+                .chunks
+                .iter()
+                .copied()
+                .zip(self.asg.valid.iter().copied())
+                .filter(|&(_, v)| v > 0)
+                .collect(),
+            DataFormat::Int8 | DataFormat::Fp32 => {
+                let cap = if self.fmt == DataFormat::Int8 { 16 } else { 4 };
+                let n = self.cin.div_ceil(cap);
+                (0..n)
+                    .map(|i| {
+                        let v = (self.cin - i * cap).min(cap) as u32;
+                        // carrier pattern (uniform) — only capacity matters
+                        (Pattern::uniform(4), v)
+                    })
+                    .collect()
+            }
+        }
+    }
+
+    /// Known tail bias per (partial chunk, single tap): packed code 0 in
+    /// both operands contributes mantissa^2 = (2^p - 1)^2 scaled to 2^-6
+    /// units. The epilogue subtracts `n_valid_taps(h,w) * tail_bias()`.
+    pub fn tail_bias(&self) -> i64 {
+        if self.fmt != DataFormat::Smol {
+            return 0;
+        }
+        let mut bias = 0i64;
+        for (pat, valid) in self
+            .asg
+            .chunks
+            .iter()
+            .zip(self.asg.valid.iter())
+            .filter(|&(_, &v)| v > 0)
+        {
+            let (pat, valid) = (pat, *valid);
+            for e in valid..pat.capacity() {
+                let p = pat.element_precision(e) as i64;
+                let m = (1i64 << p) - 1;
+                bias += (m * m) << (8 - 2 * p);
+            }
+        }
+        bias
+    }
+
+    /// Bytes of one spatial position's packed activations (all chunks).
+    pub fn act_pos_bytes(&self) -> usize {
+        self.chunks().len() * 16
+    }
+}
+
+/// Buffer ids for one generated layer.
+#[derive(Debug, Clone, Copy)]
+pub struct LayerBufs {
+    /// packed input activations, layout ((h * win + w) * n_chunks + c) * 16
+    pub input: BufId,
+    /// packed weights: dense ((((k*kh)+r)*kw+s)*n_chunks+c)*16,
+    /// depthwise (((r*kw)+s)*n_chunks+c)*16
+    pub weights: BufId,
+    /// i32 accumulators: dense ((k*hout+h)*wout+w)*4,
+    /// depthwise ((h*wout+w)*channels + pos)*4
+    pub out: BufId,
+    /// per-chunk tail masks, chunk c at c*16 (dual-use for both operands)
+    pub masks: BufId,
+}
+
+/// Register allocation (32 NEON registers, Sec. II-A):
+/// 0..8   weight stash (current chunk x k, all taps)
+/// 9..17  input window stash (current chunk, sliding over h/w)
+/// 28 acc, 27 mac tmp, 26 mask, 25/24 vand tmps, 23 mul-hi
+const W_REG: u8 = 0;
+const IN_REG: u8 = 9;
+const ACC: u8 = 28;
+const TMP: u8 = 27;
+const MASK: u8 = 26;
+const TMP_IN: u8 = 25;
+const TMP_W: u8 = 24;
+const MUL_HI: u8 = 23;
+
+/// Anything that consumes an instruction stream (the simulator executes,
+/// counters just tally).
+pub trait Sink {
+    fn emit(&mut self, i: Instr);
+}
+
+impl Sink for Vec<Instr> {
+    fn emit(&mut self, i: Instr) {
+        self.push(i);
+    }
+}
+
+impl Sink for crate::sim::machine::Machine {
+    fn emit(&mut self, i: Instr) {
+        self.exec(&i);
+    }
+}
+
+/// Instruction counter sink (for quick instruction-mix statistics).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct Counter {
+    pub total: u64,
+    pub vmac: u64,
+    pub vmul: u64,
+    pub loads: u64,
+    pub stores: u64,
+    pub vand: u64,
+}
+
+impl Sink for Counter {
+    fn emit(&mut self, i: Instr) {
+        self.total += 1;
+        match i {
+            Instr::VmacP { .. } | Instr::VfmaF32 { .. } | Instr::VmacI8 { .. } => self.vmac += 1,
+            Instr::VmulP { .. } => self.vmul += 1,
+            Instr::LdQ { .. } => self.loads += 1,
+            Instr::StQ { .. } | Instr::ReduceAcc { .. } | Instr::MulAcc { .. } => {
+                self.stores += 1
+            }
+            Instr::Vand { .. } => self.vand += 1,
+            _ => {}
+        }
+    }
+}
+
+/// Emit the full kernel for one layer into `sink`. `pattern_base` is the
+/// index of this layer's first chunk pattern in the machine's pattern
+/// table (the generator registered them via [`register_patterns`]).
+pub fn emit_layer(plan: &LayerPlan, bufs: &LayerBufs, pattern_base: u8, sink: &mut dyn Sink) {
+    match plan.kind {
+        LayerKind::Dense => emit_dense(plan, bufs, pattern_base, sink),
+        LayerKind::Depthwise => emit_depthwise(plan, bufs, pattern_base, sink),
+    }
+}
+
+/// The layer's chunk patterns, to be appended to the machine's pattern
+/// table before execution; returns the base index.
+pub fn register_patterns(plan: &LayerPlan, table: &mut Vec<Pattern>) -> u8 {
+    let base = table.len();
+    for (pat, _) in plan.chunks() {
+        table.push(pat);
+    }
+    u8::try_from(base).expect("pattern table overflow (>255 entries)")
+}
+
+fn act_addr(plan: &LayerPlan, bufs: &LayerBufs, h: usize, w: usize, chunk: usize) -> Addr {
+    let n = plan.chunks().len();
+    Addr { buf: bufs.input, off: (((h * plan.win + w) * n + chunk) * 16) as u32 }
+}
+
+fn weight_addr(
+    plan: &LayerPlan,
+    bufs: &LayerBufs,
+    k: usize,
+    r: usize,
+    s: usize,
+    chunk: usize,
+) -> Addr {
+    let n = plan.chunks().len();
+    let idx = match plan.kind {
+        LayerKind::Dense => (((k * plan.kh + r) * plan.kw + s) * n + chunk) * 16,
+        LayerKind::Depthwise => ((r * plan.kw + s) * n + chunk) * 16,
+    };
+    Addr { buf: bufs.weights, off: idx as u32 }
+}
+
+fn emit_dense(plan: &LayerPlan, bufs: &LayerBufs, pattern_base: u8, sink: &mut dyn Sink) {
+    let chunks = plan.chunks();
+    let (hout, wout) = (plan.hout(), plan.wout());
+    let (pt, pl) = (plan.pad_top(), plan.pad_left());
+    let n_taps = plan.kh * plan.kw;
+    assert!(n_taps <= 9, "weight stash sized for <= 3x3 kernels");
+
+    for (ci, &(pat, valid)) in chunks.iter().enumerate() {
+        let partial = valid < pat.capacity() && plan.fmt == DataFormat::Smol;
+        if partial {
+            sink.emit(Instr::LdQ { dst: MASK, addr: Addr { buf: bufs.masks, off: (ci * 16) as u32 } });
+        }
+        let pat_id = pattern_base + ci as u8;
+        for k in 0..plan.cout {
+            // weight auxiliary stationarity: stash this (chunk, k)'s taps
+            for r in 0..plan.kh {
+                for s in 0..plan.kw {
+                    sink.emit(Instr::LdQ {
+                        dst: W_REG + (r * plan.kw + s) as u8,
+                        addr: weight_addr(plan, bufs, k, r, s, ci),
+                    });
+                }
+            }
+            // input window stash: (ih, iw) held per window slot
+            let mut window: [Option<(usize, usize)>; 9] = [None; 9];
+            for h in 0..hout {
+                for w in 0..wout {
+                    sink.emit(Instr::VmovZ { dst: ACC });
+                    for r in 0..plan.kh {
+                        for s in 0..plan.kw {
+                            let ih = h as isize * plan.stride as isize + r as isize - pt;
+                            let iw = w as isize * plan.stride as isize + s as isize - pl;
+                            if ih < 0 || iw < 0 || ih >= plan.hin as isize || iw >= plan.win as isize
+                            {
+                                continue; // out-of-bounds tap skipped
+                            }
+                            let (ih, iw) = (ih as usize, iw as usize);
+                            // stash lookup (Algorithm 4 line 14-17)
+                            let slot = window.iter().position(|&p| p == Some((ih, iw)));
+                            let in_reg = match slot {
+                                Some(sl) => IN_REG + sl as u8,
+                                None => {
+                                    let sl = r * plan.kw + s;
+                                    window[sl] = Some((ih, iw));
+                                    sink.emit(Instr::LdQ {
+                                        dst: IN_REG + sl as u8,
+                                        addr: act_addr(plan, bufs, ih, iw, ci),
+                                    });
+                                    if partial {
+                                        // Algorithm 4 line 20's vand,
+                                        // hoisted to once per load: the
+                                        // packed weights are pre-masked
+                                        // at pack time, so masking the
+                                        // freshly loaded input suffices.
+                                        sink.emit(Instr::Vand {
+                                            dst: IN_REG + sl as u8,
+                                            a: IN_REG + sl as u8,
+                                            b: MASK,
+                                        });
+                                    }
+                                    IN_REG + sl as u8
+                                }
+                            };
+                            let w_reg = W_REG + (r * plan.kw + s) as u8;
+                            let (a, b) = (in_reg, w_reg);
+                            match plan.fmt {
+                                DataFormat::Smol => {
+                                    sink.emit(Instr::VmacP { dst: TMP, a, b, pat: pat_id });
+                                    sink.emit(Instr::Vaddq16 { dst: ACC, a: ACC, b: TMP });
+                                }
+                                DataFormat::Int8 => {
+                                    sink.emit(Instr::VmacI8 { dst: TMP, a, b });
+                                    sink.emit(Instr::Vaddq16 { dst: ACC, a: ACC, b: TMP });
+                                }
+                                DataFormat::Fp32 => {
+                                    // fused multiply-add straight into acc
+                                    sink.emit(Instr::VfmaF32 { dst: ACC, a, b });
+                                }
+                            }
+                        }
+                    }
+                    // Algorithm 4 line 26: horizontal reduce + accumulate
+                    sink.emit(Instr::ReduceAcc {
+                        src: ACC,
+                        addr: Addr {
+                            buf: bufs.out,
+                            off: (((k * hout + h) * wout + w) * 4) as u32,
+                        },
+                    });
+                }
+            }
+        }
+    }
+}
+
+fn emit_depthwise(plan: &LayerPlan, bufs: &LayerBufs, pattern_base: u8, sink: &mut dyn Sink) {
+    let chunks = plan.chunks();
+    let (hout, wout) = (plan.hout(), plan.wout());
+    let (pt, pl) = (plan.pad_top(), plan.pad_left());
+
+    if plan.fmt != DataFormat::Smol {
+        return emit_depthwise_baseline(plan, bufs, sink);
+    }
+    let mut chunk_pos = 0u32; // packed channel position of chunk start
+    for (ci, &(pat, valid)) in chunks.iter().enumerate() {
+        let pat_id = pattern_base + ci as u8;
+        // stash the tap weight vectors for this chunk
+        for r in 0..plan.kh {
+            for s in 0..plan.kw {
+                sink.emit(Instr::LdQ {
+                    dst: W_REG + (r * plan.kw + s) as u8,
+                    addr: weight_addr(plan, bufs, 0, r, s, ci),
+                });
+            }
+        }
+        for h in 0..hout {
+            for w in 0..wout {
+                for r in 0..plan.kh {
+                    for s in 0..plan.kw {
+                        let ih = h as isize * plan.stride as isize + r as isize - pt;
+                        let iw = w as isize * plan.stride as isize + s as isize - pl;
+                        if ih < 0 || iw < 0 || ih >= plan.hin as isize || iw >= plan.win as isize {
+                            continue;
+                        }
+                        sink.emit(Instr::LdQ {
+                            dst: TMP,
+                            addr: act_addr(plan, bufs, ih as usize, iw as usize, ci),
+                        });
+                        // two-cycle MUL + software-corrected accumulate
+                        sink.emit(Instr::VmulP {
+                            dst: TMP_IN,
+                            dst2: MUL_HI,
+                            a: TMP,
+                            b: W_REG + (r * plan.kw + s) as u8,
+                            pat: pat_id,
+                        });
+                        sink.emit(Instr::MulAcc {
+                            lo: TMP_IN,
+                            hi: MUL_HI,
+                            pat: pat_id,
+                            addr: Addr {
+                                buf: bufs.out,
+                                off: (((h * wout + w) * plan.cin as usize
+                                    + chunk_pos as usize)
+                                    * 4) as u32,
+                            },
+                            n_valid: valid as u16,
+                        });
+                    }
+                }
+            }
+        }
+        chunk_pos += valid;
+    }
+}
+
+/// Depthwise layers in the FP32/INT8 baseline formats: elementwise
+/// multiply-accumulate over taps in fp/int lanes, one store per position
+/// per chunk (timing/energy only — baseline functional paths live in the
+/// PJRT eval artifacts).
+fn emit_depthwise_baseline(plan: &LayerPlan, bufs: &LayerBufs, sink: &mut dyn Sink) {
+    let chunks = plan.chunks();
+    let (hout, wout) = (plan.hout(), plan.wout());
+    let (pt, pl) = (plan.pad_top(), plan.pad_left());
+    for (ci, _) in chunks.iter().enumerate() {
+        for r in 0..plan.kh {
+            for s in 0..plan.kw {
+                sink.emit(Instr::LdQ {
+                    dst: W_REG + (r * plan.kw + s) as u8,
+                    addr: weight_addr(plan, bufs, 0, r, s, ci),
+                });
+            }
+        }
+        for h in 0..hout {
+            for w in 0..wout {
+                sink.emit(Instr::VmovZ { dst: ACC });
+                for r in 0..plan.kh {
+                    for s in 0..plan.kw {
+                        let ih = h as isize * plan.stride as isize + r as isize - pt;
+                        let iw = w as isize * plan.stride as isize + s as isize - pl;
+                        if ih < 0 || iw < 0 || ih >= plan.hin as isize || iw >= plan.win as isize {
+                            continue;
+                        }
+                        sink.emit(Instr::LdQ {
+                            dst: TMP,
+                            addr: act_addr(plan, bufs, ih as usize, iw as usize, ci),
+                        });
+                        match plan.fmt {
+                            DataFormat::Fp32 => {
+                                sink.emit(Instr::VfmaF32 {
+                                    dst: ACC,
+                                    a: TMP,
+                                    b: W_REG + (r * plan.kw + s) as u8,
+                                });
+                            }
+                            _ => {
+                                sink.emit(Instr::VmacI8 {
+                                    dst: TMP_IN,
+                                    a: TMP,
+                                    b: W_REG + (r * plan.kw + s) as u8,
+                                });
+                                sink.emit(Instr::Vaddq16 { dst: ACC, a: ACC, b: TMP_IN });
+                            }
+                        }
+                    }
+                }
+                sink.emit(Instr::StQ {
+                    src: ACC,
+                    addr: Addr {
+                        buf: bufs.out,
+                        off: (((h * wout + w) * chunks.len() + ci) * 16) as u32,
+                    },
+                });
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::smol::pattern_match::Assignment;
+
+    fn plan(cin: usize, cout: usize, k: usize, stride: usize, hw: usize) -> LayerPlan {
+        LayerPlan {
+            name: "t".into(),
+            kind: LayerKind::Dense,
+            cin,
+            cout,
+            kh: k,
+            kw: k,
+            stride,
+            hin: hw,
+            win: hw,
+            asg: Assignment::uniform(cin, 4),
+            fmt: DataFormat::Smol,
+        }
+    }
+
+    #[test]
+    fn padding_matches_xla_same() {
+        // k=3, s=1: pad 1/1. k=3, s=2, in=16: out=8, total=(8-1)*2+3-16=1,
+        // top=0 (asymmetric). k=1: pad 0.
+        assert_eq!(plan(8, 8, 3, 1, 16).pad_top(), 1);
+        assert_eq!(plan(8, 8, 3, 2, 16).pad_top(), 0);
+        assert_eq!(plan(8, 8, 1, 1, 16).pad_top(), 0);
+        assert_eq!(plan(8, 8, 3, 2, 16).hout(), 8);
+    }
+
+    #[test]
+    fn instruction_mix_dense() {
+        let p = plan(32, 4, 3, 1, 8);
+        let bufs = LayerBufs {
+            input: BufId(0),
+            weights: BufId(1),
+            out: BufId(2),
+            masks: BufId(3),
+        };
+        let mut c = Counter::default();
+        emit_layer(&p, &bufs, 0, &mut c);
+        // one chunk (32 ch @4b), 4 out channels, 8x8 out, interior taps 9
+        assert!(c.vmac > 0);
+        // vmacs = sum over (k,h,w) of valid taps
+        let mut taps = 0u64;
+        for h in 0..8i64 {
+            for w in 0..8i64 {
+                for r in -1..=1i64 {
+                    for s in -1..=1i64 {
+                        if h + r >= 0 && h + r < 8 && w + s >= 0 && w + s < 8 {
+                            taps += 1;
+                        }
+                    }
+                }
+            }
+        }
+        assert_eq!(c.vmac, 4 * taps);
+        assert_eq!(c.stores, 4 * 64); // one ReduceAcc per output element
+        assert_eq!(c.vand, 0); // full chunk, no masking
+    }
+
+    #[test]
+    fn tail_masking_emitted_for_partial_chunks() {
+        let mut p = plan(24, 2, 1, 1, 4); // 24 ch in a 32-cap chunk
+        p.asg = Assignment::uniform(24, 4);
+        let bufs = LayerBufs {
+            input: BufId(0),
+            weights: BufId(1),
+            out: BufId(2),
+            masks: BufId(3),
+        };
+        let mut c = Counter::default();
+        emit_layer(&p, &bufs, 0, &mut c);
+        assert!(c.vand > 0);
+        assert_eq!(p.tail_bias(), 8 * 225); // 8 masked 4-bit slots
+    }
+
+    #[test]
+    fn fewer_chunks_means_fewer_instructions() {
+        // same channels at 1 bit pack into 1 chunk vs 4-bit's 1 chunk for
+        // 32... use 128 channels: 4 chunks @4b vs 1 chunk @1b.
+        let bufs = LayerBufs {
+            input: BufId(0),
+            weights: BufId(1),
+            out: BufId(2),
+            masks: BufId(3),
+        };
+        let mut p4 = plan(128, 8, 3, 1, 8);
+        p4.asg = Assignment::uniform(128, 4);
+        let mut c4 = Counter::default();
+        emit_layer(&p4, &bufs, 0, &mut c4);
+        let mut p1 = plan(128, 8, 3, 1, 8);
+        p1.asg = Assignment::uniform(128, 1);
+        let mut c1 = Counter::default();
+        emit_layer(&p1, &bufs, 0, &mut c1);
+        assert!(c1.total * 3 < c4.total, "{} vs {}", c1.total, c4.total);
+    }
+}

@@ -1,0 +1,352 @@
+//! The co-design coordinator (Fig. 1 / Fig. 5): for each design point it
+//! runs the full loop — SASMOL training through the PJRT artifacts,
+//! Problem-1 pattern selection + pattern matching, channel rearrangement,
+//! code generation, timing/energy simulation, and hardware cost — and
+//! aggregates the paper's four design metrics (hardware cost, run-time /
+//! energy efficiency, network accuracy, network size).
+
+pub mod netbuild;
+pub mod paperscale;
+
+use crate::codegen::DataFormat;
+use crate::data::Dataset;
+use crate::hw::gates;
+use crate::runtime::Runtime;
+use crate::sim::network::{run_network, Tensor};
+use crate::sim::RunStats;
+use crate::simd::patterns::design_subset;
+use crate::smol::pattern_match::{pattern_match, Assignment};
+use crate::smol::stats::{network_bpp, per_layer_bpp, LayerShape};
+use crate::train::{lr_schedule, uniform_prec, PrecMap, Trainer};
+use anyhow::Result;
+use std::collections::HashMap;
+
+/// A hardware/software design point (paper Sec. V).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DesignPoint {
+    /// full-precision baseline
+    Fp32,
+    /// INT8 baseline (Key Finding 1; run-time/energy only)
+    Int8,
+    /// uniform fixed-point ALUs
+    Uniform(u8),
+    /// configurable ALU with np supported patterns (4, 8 or 45)
+    Patterns(usize),
+}
+
+impl DesignPoint {
+    pub fn label(&self) -> String {
+        match self {
+            DesignPoint::Fp32 => "FP32".into(),
+            DesignPoint::Int8 => "INT8".into(),
+            DesignPoint::Uniform(p) => format!("U{p}"),
+            DesignPoint::Patterns(np) => format!("P{np}"),
+        }
+    }
+
+    pub fn fmt(&self) -> DataFormat {
+        match self {
+            DesignPoint::Fp32 => DataFormat::Fp32,
+            DesignPoint::Int8 => DataFormat::Int8,
+            _ => DataFormat::Smol,
+        }
+    }
+}
+
+/// Training schedule for one design point.
+#[derive(Debug, Clone, Copy)]
+pub struct TrainCfg {
+    /// phase-I steps (precision search; P-points only)
+    pub p1_steps: usize,
+    /// phase-II / QAT / fp32 steps
+    pub p2_steps: usize,
+    pub lr: f32,
+    /// regularizer weight (paper: 1e-7 CIFAR, 4e-8 ImageNet)
+    pub lambda: f32,
+    pub eval_batches: usize,
+    pub seed: u32,
+}
+
+impl Default for TrainCfg {
+    fn default() -> Self {
+        TrainCfg { p1_steps: 120, p2_steps: 120, lr: 0.05, lambda: 1e-7, eval_batches: 4, seed: 0 }
+    }
+}
+
+/// The paper's design metrics for one {model, design point}.
+#[derive(Debug, Clone)]
+pub struct Metrics {
+    pub model: String,
+    pub design: String,
+    pub accuracy: f32,
+    /// bits per parameter incl. pattern metadata (NaN for FP32/INT8)
+    pub bpp: f64,
+    /// simulated cycles for one inference (batch 1)
+    pub cycles: u64,
+    pub energy_pj: f64,
+    /// per-layer average bits (Fig. 9)
+    pub layer_bpp: Vec<(String, f64)>,
+    /// per-layer simulated cycles
+    pub layer_cycles: Vec<(String, u64)>,
+    /// ALU + control block NAND2-equivalent gates
+    pub hw_gates: f64,
+    /// training loss trace
+    pub loss_history: Vec<f32>,
+    pub sim_total: RunStats,
+    /// per-layer (name, fraction of 4-bit channels, fraction of 2-bit
+    /// channels) — consumed by the paper-scale Fig. 8 timing harness
+    pub layer_fractions: Vec<(String, f64, f64)>,
+}
+
+/// Run the complete co-design pipeline for one design point.
+pub fn run_design_point(
+    artifacts: &str,
+    model: &str,
+    dp: DesignPoint,
+    cfg: &TrainCfg,
+) -> Result<Metrics> {
+    let steps_needed: Vec<&str> = match dp {
+        DesignPoint::Fp32 => vec!["fp32_step", "eval_fp32"],
+        DesignPoint::Int8 => vec!["eval_fp32"],
+        DesignPoint::Uniform(_) => vec!["phase2_step", "eval_quant"],
+        DesignPoint::Patterns(_) => vec!["phase1_step", "phase2_step", "eval_quant"],
+    };
+    let rt = Runtime::load(artifacts, model, Some(&steps_needed))?;
+    let dataset = Dataset::new(rt.meta.image, rt.meta.num_classes, 0);
+    let mut trainer = Trainer::new(&rt, &dataset)?;
+    trainer.seed = cfg.seed;
+
+    // --- training + precision assignment ---
+    let (assignments, prec): (HashMap<String, Assignment>, Option<PrecMap>) = match dp {
+        DesignPoint::Fp32 | DesignPoint::Int8 => {
+            if dp == DesignPoint::Fp32 {
+                for i in 0..cfg.p2_steps {
+                    let lr = lr_schedule(i, cfg.p2_steps, cfg.lr);
+                    trainer.fp32_step(i, lr)?;
+                }
+            }
+            let asg = rt
+                .meta
+                .layers
+                .iter()
+                .map(|l| (l.name.clone(), Assignment::uniform(l.cin, 4)))
+                .collect();
+            (asg, None)
+        }
+        DesignPoint::Uniform(bits) => {
+            let prec = uniform_prec(&rt.meta.layers, bits);
+            for i in 0..cfg.p2_steps {
+                let lr = lr_schedule(i, cfg.p2_steps, cfg.lr);
+                trainer.phase2_step(i, &prec, lr)?;
+            }
+            let asg = rt
+                .meta
+                .layers
+                .iter()
+                .map(|l| (l.name.clone(), Assignment::uniform(l.cin, bits)))
+                .collect();
+            (asg, Some(prec))
+        }
+        DesignPoint::Patterns(np) => {
+            // Phase I: noise-injected precision search
+            for i in 0..cfg.p1_steps {
+                let lr = lr_schedule(i, cfg.p1_steps, cfg.lr);
+                trainer.phase1_step(i, lr, cfg.lambda)?;
+            }
+            // Pattern selection (Problem 1) + PatternMatch per layer
+            let supported = design_subset(np);
+            let s_vecs = trainer.state.s_vectors();
+            let mut asg = HashMap::new();
+            let mut prec = PrecMap::new();
+            for layer in &rt.meta.layers {
+                let s = s_vecs
+                    .get(&layer.name)
+                    .unwrap_or_else(|| panic!("s vector for {} missing", layer.name));
+                let a = pattern_match(s, &supported);
+                let (step_v, qmax_v) = a.step_qmax();
+                prec.insert(layer.name.clone(), (step_v, qmax_v));
+                asg.insert(layer.name.clone(), a);
+            }
+            // Phase II: fine-tune under the matched precisions
+            for i in 0..cfg.p2_steps {
+                let lr = lr_schedule(i, cfg.p2_steps, cfg.lr);
+                trainer.phase2_step(cfg.p1_steps + i, &prec, lr)?;
+            }
+            (asg, Some(prec))
+        }
+    };
+
+    // --- accuracy ---
+    let accuracy = match dp {
+        DesignPoint::Int8 => f32::NAN, // paper cites external INT8 results
+        _ => trainer.eval(prec.as_ref(), cfg.eval_batches)?,
+    };
+
+    // --- network size (bpp) ---
+    let shapes: Vec<(LayerShape, Assignment)> = rt
+        .meta
+        .layers
+        .iter()
+        .map(|l| {
+            let elems = if l.groups > 1 {
+                l.k * l.k
+            } else if l.op == "fc" {
+                l.cout
+            } else {
+                l.cout * l.k * l.k
+            };
+            (
+                LayerShape { name: l.name.clone(), cin: l.cin, elems_per_channel: elems },
+                assignments[&l.name].clone(),
+            )
+        })
+        .collect();
+    let bpp = match dp {
+        DesignPoint::Fp32 => 32.0,
+        DesignPoint::Int8 => 8.0,
+        _ => network_bpp(&shapes),
+    };
+
+    // --- run-time / energy (timing simulation, batch-1 inference) ---
+    let graph = netbuild::build_graph(&rt.meta, &trainer.state, &assignments, dp.fmt())?;
+    let img = rt.meta.image;
+    let sample = dataset.batch(2, 0, 1);
+    let input = Tensor { h: img, w: img, c: 3, data: sample.images };
+    let net = run_network(&graph, &input);
+
+    // --- hardware cost ---
+    let hw_gates = match dp {
+        DesignPoint::Fp32 | DesignPoint::Int8 => 0.0, // existing SIMD datapath
+        DesignPoint::Uniform(_) => gates::alu_gates() / 3.0, // fixed-precision subset
+        DesignPoint::Patterns(np) => gates::alu_gates() + gates::control_block_gates(np),
+    };
+
+    let layer_fractions = rt
+        .meta
+        .layers
+        .iter()
+        .map(|l| {
+            let a = &assignments[&l.name];
+            let n = a.precision.len().max(1) as f64;
+            let f4 = a.precision.iter().filter(|&&p| p == 4).count() as f64 / n;
+            let f2 = a.precision.iter().filter(|&&p| p == 2).count() as f64 / n;
+            (l.name.clone(), f4, f2)
+        })
+        .collect();
+
+    Ok(Metrics {
+        model: model.to_string(),
+        design: dp.label(),
+        accuracy,
+        bpp,
+        cycles: net.total.cycles(),
+        energy_pj: net.total.energy_pj,
+        layer_bpp: per_layer_bpp(&shapes),
+        layer_cycles: net.layers.iter().map(|l| (l.name.clone(), l.stats.cycles())).collect(),
+        hw_gates,
+        loss_history: trainer.history.iter().map(|h| h.loss).collect(),
+        sim_total: net.total,
+        layer_fractions,
+    })
+}
+
+/// Paper-scale run-time simulation (the Fig. 8 run-time axis): time the
+/// full-width shape table of `model` under a design point, mapping the
+/// trained scaled-model per-layer precision fractions onto the full-width
+/// layers by relative depth. Returns (total stats, per-layer cycles).
+pub fn simulate_paper_scale(
+    model: &str,
+    dp: DesignPoint,
+    trained_fractions: &[(String, f64, f64)],
+) -> (RunStats, Vec<(String, u64)>) {
+    use crate::codegen::{LayerKind, LayerPlan};
+    use crate::sim::machine::Machine;
+    use crate::sim::network::{run_conv, ConvLayerCfg, Tensor};
+
+    let shapes = paperscale::shapes_for(model);
+    let supported: Vec<crate::simd::patterns::Pattern> = match dp {
+        DesignPoint::Patterns(np) => design_subset(np),
+        _ => design_subset(45),
+    };
+    let mut machine = Machine::new();
+    let mut total = RunStats::default();
+    let mut per_layer = Vec::new();
+    for (li, shp) in shapes.iter().enumerate() {
+        let asg = match dp {
+            DesignPoint::Uniform(b) => Assignment::uniform(shp.cin, b),
+            DesignPoint::Fp32 | DesignPoint::Int8 => Assignment::uniform(shp.cin, 4),
+            DesignPoint::Patterns(_) => {
+                // nearest-depth mapping of trained fractions
+                let n = trained_fractions.len().max(1);
+                let j = (li * n) / shapes.len().max(1);
+                let (_, f4, f2) = &trained_fractions[j.min(n - 1)];
+                paperscale::assignment_from_fractions(shp.cin, *f4, *f2, &supported)
+            }
+        };
+        let kind = if shp.groups > 1 { LayerKind::Depthwise } else { LayerKind::Dense };
+        let nw = match kind {
+            LayerKind::Dense => shp.k * shp.k * shp.cin * shp.cout,
+            LayerKind::Depthwise => shp.k * shp.k * shp.cin,
+        };
+        let cfg = ConvLayerCfg {
+            plan: LayerPlan {
+                name: shp.name.clone(),
+                kind,
+                cin: shp.cin,
+                cout: shp.cout,
+                kh: shp.k,
+                kw: shp.k,
+                stride: shp.stride,
+                hin: shp.hin,
+                win: shp.win,
+                asg,
+                fmt: dp.fmt(),
+            },
+            weights: vec![0.5; nw],
+            bn_scale: vec![],
+            bn_bias: vec![],
+            bn_mean: vec![],
+            bn_var: vec![],
+            relu: false,
+        };
+        let x = Tensor::zeros(shp.hin, shp.win, shp.cin);
+        let (_, stats) = run_conv(&mut machine, &cfg, &x);
+        per_layer.push((shp.name.clone(), stats.cycles()));
+        total.merge(&stats);
+        // cap simulator memory growth across many layers
+        if machine.buffers.len() > 64 {
+            machine = Machine::new();
+        }
+    }
+    (total, per_layer)
+}
+
+/// Pretty-print a metrics table (paper Fig. 7/8 style rows).
+pub fn print_table(rows: &[Metrics], baseline: Option<&str>) {
+    let base_cycles: HashMap<&str, u64> = rows
+        .iter()
+        .filter(|m| Some(m.design.as_str()) == baseline)
+        .map(|m| (m.model.as_str(), m.cycles))
+        .collect();
+    println!(
+        "{:<14} {:<6} {:>9} {:>7} {:>14} {:>9} {:>13} {:>10}",
+        "model", "design", "accuracy", "bpp", "cycles", "speedup", "energy(uJ)", "gates"
+    );
+    for m in rows {
+        let speedup = base_cycles
+            .get(m.model.as_str())
+            .map(|&b| b as f64 / m.cycles as f64)
+            .unwrap_or(f64::NAN);
+        println!(
+            "{:<14} {:<6} {:>9.4} {:>7.2} {:>14} {:>9.2} {:>13.1} {:>10.0}",
+            m.model,
+            m.design,
+            m.accuracy,
+            m.bpp,
+            m.cycles,
+            speedup,
+            m.energy_pj / 1e6,
+            m.hw_gates
+        );
+    }
+}

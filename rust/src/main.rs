@@ -1,0 +1,123 @@
+//! SONIQ leader binary: the co-design CLI.
+//!
+//! Subcommands:
+//!   train    — run one design point end to end (train -> eval -> sim)
+//!   explore  — sweep design points for one or more models (Fig. 7/8)
+//!   hw       — print hardware cost / timing reports (Table V, Sec. V-B)
+//!   patterns — print the 45 precision patterns (Table II) and subsets
+//!
+//! Examples:
+//!   soniq train --model tinynet --design P4 --p1-steps 60 --p2-steps 60
+//!   soniq explore --models tinynet --designs FP32,U4,U2,P4
+//!   soniq hw
+
+use anyhow::{bail, Result};
+use soniq::coordinator::{print_table, run_design_point, DesignPoint, TrainCfg};
+use soniq::hw::{gates, timing};
+use soniq::simd::patterns;
+use soniq::util::cli::Args;
+
+fn parse_design(s: &str) -> Result<DesignPoint> {
+    Ok(match s {
+        "FP32" | "fp32" => DesignPoint::Fp32,
+        "INT8" | "int8" => DesignPoint::Int8,
+        "U2" | "u2" => DesignPoint::Uniform(2),
+        "U4" | "u4" => DesignPoint::Uniform(4),
+        "P4" | "p4" => DesignPoint::Patterns(4),
+        "P8" | "p8" => DesignPoint::Patterns(8),
+        "P45" | "p45" => DesignPoint::Patterns(45),
+        other => bail!("unknown design point {other}"),
+    })
+}
+
+fn train_cfg(args: &Args) -> TrainCfg {
+    TrainCfg {
+        p1_steps: args.get_usize("p1-steps", 120),
+        p2_steps: args.get_usize("p2-steps", 120),
+        lr: args.get_f32("lr", 0.05),
+        lambda: args.get_f32("lambda", 1e-7),
+        eval_batches: args.get_usize("eval-batches", 4),
+        seed: args.get_usize("seed", 0) as u32,
+    }
+}
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let artifacts = args.get_or("artifacts", "artifacts");
+    match args.positional.first().map(|s| s.as_str()) {
+        Some("train") => {
+            let model = args.get_or("model", "tinynet");
+            let design = parse_design(&args.get_or("design", "P4"))?;
+            let cfg = train_cfg(&args);
+            let m = run_design_point(&artifacts, &model, design, &cfg)?;
+            print_table(std::slice::from_ref(&m), None);
+        }
+        Some("explore") => {
+            let models = args.get_or("models", "tinynet");
+            let designs = args.get_or("designs", "FP32,U4,U2,P4,P8,P45");
+            let cfg = train_cfg(&args);
+            let mut rows = Vec::new();
+            for model in models.split(',') {
+                for d in designs.split(',') {
+                    let dp = parse_design(d)?;
+                    eprintln!("== {model} / {d} ==");
+                    rows.push(run_design_point(&artifacts, model, dp, &cfg)?);
+                }
+            }
+            print_table(&rows, Some("U4"));
+        }
+        Some("hw") => {
+            println!("Table V — NAND2-equivalent gate counts");
+            let lane = gates::lane_gates();
+            println!(
+                "  configurable ALU (structural): {:.0} per lane x 8 = {:.0}",
+                lane.total(),
+                8.0 * lane.total()
+            );
+            println!("  paper-reported:                2805 per lane x 8 = 22440");
+            for np in [4usize, 8, 16, 45] {
+                println!("  control block P{np}: {:.0}", gates::control_block_gates(np));
+            }
+            println!("\nSec. V-B — critical path:");
+            for s in timing::CRITICAL_PATH {
+                println!("  {:<12} {:>6.1} ps", s.name, s.delay_ps);
+            }
+            println!(
+                "  total {:.1} ps; 2 GHz slack {:.1} ps (meets timing: {})",
+                timing::critical_path_ps(),
+                timing::slack_ps(2.0),
+                timing::meets_timing(2.0, 0.05)
+            );
+        }
+        Some("patterns") => {
+            println!("Table II — all 45 precision patterns (n1, n2, n4):");
+            for (i, p) in patterns::all_patterns().iter().enumerate() {
+                print!("  {:>2}: ({:>3},{:>2},{:>2})", i + 1, p.n1, p.n2, p.n4);
+                if (i + 1) % 5 == 0 {
+                    println!();
+                }
+            }
+            println!(
+                "\nTable III subsets: P4 {:?}  P8 {:?}",
+                patterns::design_subset(4)
+                    .iter()
+                    .map(|p| patterns::index_of(p).unwrap())
+                    .collect::<Vec<_>>(),
+                patterns::design_subset(8)
+                    .iter()
+                    .map(|p| patterns::index_of(p).unwrap())
+                    .collect::<Vec<_>>()
+            );
+            println!(
+                "arbitrary-mix ALU configurations: {:.3e} (paper ~1.12e62); grouped: {}",
+                patterns::arbitrary_mix_configurations(),
+                patterns::grouped_configurations()
+            );
+        }
+        _ => {
+            eprintln!("usage: soniq <train|explore|hw|patterns> [--model M] [--design D] [--artifacts DIR]");
+            eprintln!("       see README.md for the full CLI");
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,169 @@
+//! Parsed form of `artifacts/<model>.meta.json` (written by aot.py).
+
+use crate::util::json::{parse, Json};
+use anyhow::{bail, Result};
+use std::collections::HashMap;
+
+/// Element dtype of a tensor crossing the PJRT boundary.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+    U32,
+}
+
+impl Dtype {
+    pub fn parse(s: &str) -> Result<Dtype> {
+        Ok(match s {
+            "float32" => Dtype::F32,
+            "int32" => Dtype::I32,
+            "uint32" => Dtype::U32,
+            other => bail!("unsupported dtype {other}"),
+        })
+    }
+}
+
+/// One tensor in a step's input/output layout (HLO parameter order).
+#[derive(Debug, Clone)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+impl TensorSpec {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+    /// The leading path segment ("0", "1", ...) = the step argument index.
+    pub fn arg_index(&self) -> usize {
+        self.name.split('.').next().unwrap().parse().unwrap_or(0)
+    }
+    /// The path with the leading argument index stripped.
+    pub fn sub_path(&self) -> &str {
+        match self.name.split_once('.') {
+            Some((_, rest)) => rest,
+            None => "",
+        }
+    }
+}
+
+/// One step (train/eval) of a model.
+#[derive(Debug, Clone)]
+pub struct StepMeta {
+    pub hlo: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// One conv/fc layer, as registered by the python model builders; the
+/// codegen/simulator consume this table verbatim.
+#[derive(Debug, Clone)]
+pub struct LayerSpec {
+    pub name: String,
+    pub op: String,
+    pub cin: usize,
+    pub cout: usize,
+    pub k: usize,
+    pub stride: usize,
+    pub groups: usize,
+    pub hin: usize,
+    pub win: usize,
+}
+
+/// Index entry of the initial-state binary.
+#[derive(Debug, Clone)]
+pub struct InitTensor {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelMeta {
+    pub model: String,
+    pub image: usize,
+    pub train_batch: usize,
+    pub eval_batch: usize,
+    pub num_classes: usize,
+    pub layers: Vec<LayerSpec>,
+    pub steps: HashMap<String, StepMeta>,
+    pub init_bin: String,
+    pub init_tensors: Vec<InitTensor>,
+}
+
+fn tensor_specs(v: &Json) -> Result<Vec<TensorSpec>> {
+    v.as_arr()?
+        .iter()
+        .map(|t| {
+            Ok(TensorSpec {
+                name: t.get("name")?.as_str()?.to_string(),
+                shape: t.get("shape")?.as_arr()?.iter().map(|d| d.as_usize().unwrap()).collect(),
+                dtype: Dtype::parse(t.get("dtype")?.as_str()?)?,
+            })
+        })
+        .collect()
+}
+
+impl ModelMeta {
+    pub fn parse(text: &str) -> Result<ModelMeta> {
+        let v = parse(text)?;
+        let layers = v
+            .get("layers")?
+            .as_arr()?
+            .iter()
+            .map(|l| {
+                Ok(LayerSpec {
+                    name: l.get("name")?.as_str()?.to_string(),
+                    op: l.get("op")?.as_str()?.to_string(),
+                    cin: l.get("cin")?.as_usize()?,
+                    cout: l.get("cout")?.as_usize()?,
+                    k: l.get("k")?.as_usize()?,
+                    stride: l.get("stride")?.as_usize()?,
+                    groups: l.get("groups")?.as_usize()?,
+                    hin: l.get("hin")?.as_usize()?,
+                    win: l.get("win")?.as_usize()?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let mut steps = HashMap::new();
+        for (name, s) in v.get("steps")?.as_obj()? {
+            steps.insert(
+                name.clone(),
+                StepMeta {
+                    hlo: s.get("hlo")?.as_str()?.to_string(),
+                    inputs: tensor_specs(s.get("inputs")?)?,
+                    outputs: tensor_specs(s.get("outputs")?)?,
+                },
+            );
+        }
+        let init = v.get("init")?;
+        let init_tensors = init
+            .get("tensors")?
+            .as_arr()?
+            .iter()
+            .map(|t| {
+                Ok(InitTensor {
+                    name: t.get("name")?.as_str()?.to_string(),
+                    shape: t.get("shape")?.as_arr()?.iter().map(|d| d.as_usize().unwrap()).collect(),
+                    offset: t.get("offset")?.as_usize()?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(ModelMeta {
+            model: v.get("model")?.as_str()?.to_string(),
+            image: v.get("image")?.as_usize()?,
+            train_batch: v.get("train_batch")?.as_usize()?,
+            eval_batch: v.get("eval_batch")?.as_usize()?,
+            num_classes: v.get("num_classes")?.as_usize()?,
+            layers,
+            steps,
+            init_bin: init.get("bin")?.as_str()?.to_string(),
+            init_tensors,
+        })
+    }
+
+    pub fn layer(&self, name: &str) -> Option<&LayerSpec> {
+        self.layers.iter().find(|l| l.name == name)
+    }
+}

@@ -1,0 +1,126 @@
+//! PJRT runtime: loads the AOT-compiled HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them on the PJRT CPU client.
+//! Python never runs here — the rust binary is self-contained once
+//! `make artifacts` has been run.
+//!
+//! Interchange contract (see aot.py): each model ships
+//! - `<model>_<step>.hlo.txt` — HLO text (xla_extension 0.5.1 rejects
+//!   jax>=0.5 serialized protos; the text parser reassigns ids),
+//! - `<model>.meta.json` — layer table + per-step input/output layouts
+//!   (flatten order == HLO parameter order) + init-state index,
+//! - `<model>_init.bin` — f32 initial state.
+
+pub mod meta;
+pub mod state;
+
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+pub use meta::{Dtype, LayerSpec, ModelMeta, StepMeta, TensorSpec};
+pub use state::{HostTensor, StateStore};
+
+/// A compiled, ready-to-execute step (train/eval) of one model.
+pub struct Step {
+    pub meta: StepMeta,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// The PJRT runtime: one CPU client + the compiled steps of one model.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    pub meta: ModelMeta,
+    steps: HashMap<String, Step>,
+}
+
+impl Runtime {
+    /// Load a model's artifacts from `dir` and eagerly compile the listed
+    /// steps (pass `None` to compile all of them).
+    pub fn load(dir: impl AsRef<Path>, model: &str, steps: Option<&[&str]>) -> Result<Runtime> {
+        let dir = dir.as_ref().to_path_buf();
+        let meta_text = std::fs::read_to_string(dir.join(format!("{model}.meta.json")))
+            .with_context(|| format!("reading {model}.meta.json (run `make artifacts`)"))?;
+        let meta = ModelMeta::parse(&meta_text)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt: {e:?}"))?;
+        let mut rt = Runtime { client, dir, meta, steps: HashMap::new() };
+        let names: Vec<String> = match steps {
+            Some(list) => list.iter().map(|s| s.to_string()).collect(),
+            None => rt.meta.steps.keys().cloned().collect(),
+        };
+        for name in names {
+            rt.compile_step(&name)?;
+        }
+        Ok(rt)
+    }
+
+    /// Directory the artifacts live in.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    fn compile_step(&mut self, name: &str) -> Result<()> {
+        let smeta = self
+            .meta
+            .steps
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown step {name}"))?
+            .clone();
+        let path = self.dir.join(&smeta.hlo);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("bad path"))?,
+        )
+        .map_err(|e| anyhow!("hlo parse {name}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).map_err(|e| anyhow!("compile {name}: {e:?}"))?;
+        self.steps.insert(name.to_string(), Step { meta: smeta, exe });
+        Ok(())
+    }
+
+    pub fn step(&self, name: &str) -> Result<&Step> {
+        self.steps.get(name).ok_or_else(|| anyhow!("step {name} not compiled"))
+    }
+
+    /// Execute a step. `resolve` supplies one [`HostTensor`] per input
+    /// spec (called in HLO parameter order); returns the flattened
+    /// outputs, one per output spec.
+    pub fn execute(
+        &self,
+        name: &str,
+        mut resolve: impl FnMut(&TensorSpec) -> Result<HostTensor>,
+    ) -> Result<Vec<HostTensor>> {
+        let step = self.step(name)?;
+        let mut literals = Vec::with_capacity(step.meta.inputs.len());
+        for spec in &step.meta.inputs {
+            let t = resolve(spec)
+                .with_context(|| format!("resolving input {} of {name}", spec.name))?;
+            anyhow::ensure!(
+                t.shape == spec.shape,
+                "shape mismatch for {}: got {:?}, want {:?}",
+                spec.name,
+                t.shape,
+                spec.shape
+            );
+            literals.push(t.to_literal()?);
+        }
+        let result = step
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("execute {name}: {e:?}"))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch {name}: {e:?}"))?;
+        let parts = tuple.to_tuple().map_err(|e| anyhow!("untuple {name}: {e:?}"))?;
+        anyhow::ensure!(
+            parts.len() == step.meta.outputs.len(),
+            "output arity mismatch: got {}, want {}",
+            parts.len(),
+            step.meta.outputs.len()
+        );
+        parts
+            .into_iter()
+            .zip(&step.meta.outputs)
+            .map(|(lit, spec)| HostTensor::from_literal(&lit, spec))
+            .collect()
+    }
+}

@@ -1,0 +1,116 @@
+//! Host-side tensors and the training-state store the coordinator threads
+//! through the PJRT step executions.
+
+use crate::runtime::meta::{Dtype, InitTensor, TensorSpec};
+use anyhow::{anyhow, Result};
+use std::collections::HashMap;
+use std::path::Path;
+
+/// A host tensor crossing the PJRT boundary.
+#[derive(Debug, Clone)]
+pub enum TensorData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    U32(Vec<u32>),
+}
+
+#[derive(Debug, Clone)]
+pub struct HostTensor {
+    pub shape: Vec<usize>,
+    pub data: TensorData,
+}
+
+impl HostTensor {
+    pub fn f32(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        HostTensor { shape, data: TensorData::F32(data) }
+    }
+    pub fn i32(shape: Vec<usize>, data: Vec<i32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        HostTensor { shape, data: TensorData::I32(data) }
+    }
+    pub fn u32(shape: Vec<usize>, data: Vec<u32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        HostTensor { shape, data: TensorData::U32(data) }
+    }
+    pub fn scalar_f32(v: f32) -> Self {
+        HostTensor { shape: vec![], data: TensorData::F32(vec![v]) }
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match &self.data {
+            TensorData::F32(v) => Ok(v),
+            _ => Err(anyhow!("not f32")),
+        }
+    }
+
+    pub fn scalar(&self) -> Result<f32> {
+        Ok(self.as_f32()?[0])
+    }
+
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+        let lit = match &self.data {
+            TensorData::F32(v) => xla::Literal::vec1(v),
+            TensorData::I32(v) => xla::Literal::vec1(v),
+            TensorData::U32(v) => xla::Literal::vec1(v),
+        };
+        lit.reshape(&dims).map_err(|e| anyhow!("reshape: {e:?}"))
+    }
+
+    pub fn from_literal(lit: &xla::Literal, spec: &TensorSpec) -> Result<HostTensor> {
+        let data = match spec.dtype {
+            Dtype::F32 => TensorData::F32(lit.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?),
+            Dtype::I32 => TensorData::I32(lit.to_vec::<i32>().map_err(|e| anyhow!("{e:?}"))?),
+            Dtype::U32 => TensorData::U32(lit.to_vec::<u32>().map_err(|e| anyhow!("{e:?}"))?),
+        };
+        Ok(HostTensor { shape: spec.shape.clone(), data })
+    }
+}
+
+/// The model's training state: a flat map of path -> tensor, fed back
+/// into each step call (names are the aot.py flatten paths with the
+/// leading argument index stripped, e.g. `params.stem`, `s.s0b0/c1`,
+/// `bn.stem/mean`).
+#[derive(Debug, Clone, Default)]
+pub struct StateStore {
+    pub tensors: HashMap<String, HostTensor>,
+}
+
+impl StateStore {
+    /// Load the initial state written by aot.py.
+    pub fn load_init(dir: impl AsRef<Path>, bin: &str, index: &[InitTensor]) -> Result<StateStore> {
+        let bytes = std::fs::read(dir.as_ref().join(bin))?;
+        let mut tensors = HashMap::new();
+        for t in index {
+            let n: usize = t.shape.iter().product();
+            let start = t.offset * 4;
+            let mut data = vec![0f32; n];
+            for (i, chunk) in bytes[start..start + 4 * n].chunks_exact(4).enumerate() {
+                data[i] = f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]);
+            }
+            tensors.insert(t.name.clone(), HostTensor::f32(t.shape.clone(), data));
+        }
+        Ok(StateStore { tensors })
+    }
+
+    pub fn get(&self, path: &str) -> Result<&HostTensor> {
+        self.tensors.get(path).ok_or_else(|| anyhow!("state tensor {path} missing"))
+    }
+
+    pub fn set(&mut self, path: &str, t: HostTensor) {
+        self.tensors.insert(path.to_string(), t);
+    }
+
+    /// All per-layer `s` vectors (phase-I sensitivities), keyed by layer.
+    pub fn s_vectors(&self) -> HashMap<String, Vec<f32>> {
+        self.tensors
+            .iter()
+            .filter_map(|(k, v)| {
+                k.strip_prefix("s.").map(|layer| {
+                    (layer.to_string(), v.as_f32().unwrap().to_vec())
+                })
+            })
+            .collect()
+    }
+}

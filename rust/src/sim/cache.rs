@@ -1,0 +1,182 @@
+//! Cache hierarchy model with the paper's gem5 parameters (Table IV):
+//! L1I 16KB/4-way, L1D 64KB/4-way, L2 256KB/8-way, 64B lines, LRU.
+//!
+//! The simulator is a substitute for the authors' gem5 setup (DESIGN.md
+//! substitution table): the paper's run-time results are *relative*
+//! (normalized to uniform-4-bit), which depend on instruction counts and
+//! locality, both captured here.
+
+
+pub const LINE_BYTES: u64 = 64;
+
+/// Which level served an access.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Level {
+    L1,
+    L2,
+    Mem,
+}
+
+/// One set-associative LRU cache.
+pub struct Cache {
+    sets: Vec<Vec<u64>>, // per-set stack of line tags, MRU first
+    ways: usize,
+    set_mask: u64,
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl Cache {
+    pub fn new(size_bytes: u64, ways: usize) -> Self {
+        let n_sets = (size_bytes / LINE_BYTES / ways as u64).max(1);
+        assert!(n_sets.is_power_of_two(), "sets must be a power of two");
+        Cache {
+            sets: vec![Vec::with_capacity(ways); n_sets as usize],
+            ways,
+            set_mask: n_sets - 1,
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    /// Access one line; returns true on hit. Misses fill (allocate-on-miss,
+    /// LRU eviction).
+    pub fn access_line(&mut self, line_addr: u64) -> bool {
+        let set = (line_addr & self.set_mask) as usize;
+        let stack = &mut self.sets[set];
+        if let Some(pos) = stack.iter().position(|&t| t == line_addr) {
+            stack.remove(pos);
+            stack.insert(0, line_addr);
+            self.hits += 1;
+            true
+        } else {
+            if stack.len() >= self.ways {
+                stack.pop();
+            }
+            stack.insert(0, line_addr);
+            self.misses += 1;
+            false
+        }
+    }
+}
+
+/// Latency parameters (cycles at the 2 GHz clock).
+#[derive(Debug, Clone, Copy)]
+pub struct LatencyConfig {
+    pub l1_hit: u64,
+    pub l2_hit: u64,
+    pub mem: u64,
+}
+
+impl Default for LatencyConfig {
+    fn default() -> Self {
+        LatencyConfig { l1_hit: 1, l2_hit: 12, mem: 80 }
+    }
+}
+
+/// The Table IV hierarchy: separate L1I/L1D in front of a unified L2.
+pub struct Hierarchy {
+    pub l1d: Cache,
+    pub l1i: Cache,
+    pub l2: Cache,
+    pub lat: LatencyConfig,
+}
+
+impl Default for Hierarchy {
+    fn default() -> Self {
+        Hierarchy {
+            l1d: Cache::new(64 * 1024, 4),
+            l1i: Cache::new(16 * 1024, 4),
+            l2: Cache::new(256 * 1024, 8),
+            lat: LatencyConfig::default(),
+        }
+    }
+}
+
+impl Hierarchy {
+    /// Data access covering `[addr, addr+bytes)`; returns (worst level
+    /// touched, total latency cycles across touched lines).
+    pub fn access_data(&mut self, addr: u64, bytes: u64) -> (Level, u64) {
+        let first = addr / LINE_BYTES;
+        let last = (addr + bytes.max(1) - 1) / LINE_BYTES;
+        let mut worst = Level::L1;
+        let mut cycles = 0;
+        for line in first..=last {
+            if self.l1d.access_line(line) {
+                cycles += self.lat.l1_hit;
+            } else if self.l2.access_line(line) {
+                cycles += self.lat.l2_hit;
+                worst = worst.max_level(Level::L2);
+            } else {
+                cycles += self.lat.mem;
+                worst = worst.max_level(Level::Mem);
+            }
+        }
+        (worst, cycles)
+    }
+
+    /// Instruction fetch for a PC (i-cache side; one line per fetch group).
+    pub fn access_inst(&mut self, pc: u64) -> u64 {
+        let line = pc / LINE_BYTES;
+        if self.l1i.access_line(line) {
+            0 // overlapped by fetch pipeline
+        } else if self.l2.access_line(line) {
+            self.lat.l2_hit
+        } else {
+            self.lat.mem
+        }
+    }
+}
+
+impl Level {
+    fn max_level(self, other: Level) -> Level {
+        use Level::*;
+        match (self, other) {
+            (Mem, _) | (_, Mem) => Mem,
+            (L2, _) | (_, L2) => L2,
+            _ => L1,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn repeated_access_hits() {
+        let mut h = Hierarchy::default();
+        let (lvl, _) = h.access_data(0x1000, 16);
+        assert_eq!(lvl, Level::Mem);
+        let (lvl, c) = h.access_data(0x1000, 16);
+        assert_eq!(lvl, Level::L1);
+        assert_eq!(c, h.lat.l1_hit);
+    }
+
+    #[test]
+    fn capacity_eviction() {
+        let mut c = Cache::new(4 * 1024, 4); // 16 sets
+        // fill one set's 4 ways plus one more (stride = sets * line)
+        for i in 0..5u64 {
+            c.access_line(i * 16);
+        }
+        assert_eq!(c.misses, 5);
+        // first line was LRU-evicted
+        assert!(!c.access_line(0));
+    }
+
+    #[test]
+    fn straddling_access_touches_two_lines() {
+        let mut h = Hierarchy::default();
+        let (_, cycles) = h.access_data(LINE_BYTES - 8, 16);
+        assert_eq!(cycles, 2 * h.lat.mem);
+    }
+
+    #[test]
+    fn table_iv_geometry() {
+        let h = Hierarchy::default();
+        assert_eq!(h.l1d.sets.len(), 64 * 1024 / 64 / 4);
+        assert_eq!(h.l1i.sets.len(), 16 * 1024 / 64 / 4);
+        assert_eq!(h.l2.sets.len(), 256 * 1024 / 64 / 8);
+    }
+}

@@ -1,0 +1,99 @@
+//! Energy model: per-operation and per-memory-access energies (pJ).
+//!
+//! Absolute joules are not the claim — the paper's Key Finding 1 compares
+//! *relative* energy (U4 ≈ 8x better than FP32, ≈ 2x better than INT8);
+//! the constants below are representative 7nm-class figures whose ratios
+//! drive those comparisons. Vector MAC energy scales with configured lane
+//! precision (gate activity of the Fig. 3 datapath).
+
+use crate::simd::patterns::Pattern;
+
+/// Energy constants in picojoules.
+#[derive(Debug, Clone, Copy)]
+pub struct EnergyConfig {
+    /// per 16-bit lane doing 4-bit MACs
+    pub lane_mac_4b: f64,
+    /// per lane doing 2-bit MACs
+    pub lane_mac_2b: f64,
+    /// per lane doing 1-bit MACs (xnor/popcount)
+    pub lane_mac_1b: f64,
+    /// per 32-bit f32 FMA lane (4 lanes per vector op)
+    pub lane_fma_f32: f64,
+    /// per 8-bit int MAC lane (16 lanes per vector op)
+    pub lane_mac_i8: f64,
+    /// simple vector ALU op (add/and/mov), whole vector
+    pub vec_simple: f64,
+    /// scalar/reduce op
+    pub scalar: f64,
+    /// memory energies per access
+    pub l1_access: f64,
+    pub l2_access: f64,
+    pub mem_access: f64,
+}
+
+impl Default for EnergyConfig {
+    fn default() -> Self {
+        EnergyConfig {
+            lane_mac_4b: 0.9,
+            lane_mac_2b: 0.55,
+            lane_mac_1b: 0.3,
+            lane_fma_f32: 4.5,
+            lane_mac_i8: 1.1,
+            vec_simple: 1.2,
+            scalar: 0.4,
+            l1_access: 6.0,
+            l2_access: 25.0,
+            mem_access: 300.0,
+        }
+    }
+}
+
+impl EnergyConfig {
+    /// Energy of one `vmac_Pn` under a pattern (sum over lanes).
+    pub fn vmac_energy(&self, pattern: &Pattern) -> f64 {
+        pattern
+            .lane_precisions()
+            .iter()
+            .map(|&p| match p {
+                4 => self.lane_mac_4b,
+                2 => self.lane_mac_2b,
+                1 => self.lane_mac_1b,
+                _ => 0.0,
+            })
+            .sum()
+    }
+
+    /// Energy of one f32 FMA vector op (4 lanes).
+    pub fn fma32_energy(&self) -> f64 {
+        4.0 * self.lane_fma_f32
+    }
+
+    /// Energy of one int8 MAC vector op (16 lanes).
+    pub fn mac_i8_energy(&self) -> f64 {
+        16.0 * self.lane_mac_i8
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn precision_ordering() {
+        let e = EnergyConfig::default();
+        let u4 = e.vmac_energy(&Pattern::uniform(4));
+        let u2 = e.vmac_energy(&Pattern::uniform(2));
+        let u1 = e.vmac_energy(&Pattern::uniform(1));
+        assert!(u4 > u2 && u2 > u1);
+        // fp32 vector op costs more than the whole low-precision vector op
+        assert!(e.fma32_energy() > u4);
+    }
+
+    #[test]
+    fn mixed_between_uniforms() {
+        let e = EnergyConfig::default();
+        let mixed = e.vmac_energy(&Pattern::new(16, 24, 16));
+        assert!(mixed < e.vmac_energy(&Pattern::uniform(4)));
+        assert!(mixed > e.vmac_energy(&Pattern::uniform(1)));
+    }
+}

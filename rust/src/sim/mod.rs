@@ -1,0 +1,11 @@
+//! The timing/energy simulator — the gem5 substitute (Table IV): cache
+//! hierarchy, per-instruction execution (functional + timing) and the
+//! network-level inference driver.
+
+pub mod cache;
+pub mod energy;
+pub mod machine;
+pub mod network;
+
+pub use machine::{Machine, RunStats};
+pub use network::{run_network, NetResult, Node, Tensor, INPUT};

@@ -1,0 +1,485 @@
+//! Network-level inference simulation: executes a whole ULFlexiNet on the
+//! simulated SIMD machine, layer by layer — functionally (bit-exact MAC
+//! datapath + f32 epilogues) and for timing/energy (Fig. 8's run-time
+//! results).
+//!
+//! Between layers, tensors live as f32 HWC (the paper's 32-bit / 6
+//! fraction-bit fixed-point domain); at each conv/FC entry the driver
+//! quantizes + rearranges + packs to the layer's precision patterns (the
+//! cost of that pass is charged via streaming cache traffic), then the
+//! generated Algorithm-4 kernel runs on the machine.
+
+use crate::codegen::{self, pack, DataFormat, LayerBufs, LayerKind, LayerPlan};
+use crate::sim::machine::{Machine, RunStats};
+use crate::smol::quant;
+
+/// A tensor in the inter-layer 32-bit fixed-point domain (f32-carried).
+#[derive(Debug, Clone)]
+pub struct Tensor {
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+    /// HWC order
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn zeros(h: usize, w: usize, c: usize) -> Self {
+        Tensor { h, w, c, data: vec![0.0; h * w * c] }
+    }
+    pub fn at(&self, h: usize, w: usize, c: usize) -> f32 {
+        self.data[(h * self.w + w) * self.c + c]
+    }
+}
+
+/// One conv/FC layer with its trained parameters (inference form).
+#[derive(Debug, Clone)]
+pub struct ConvLayerCfg {
+    pub plan: LayerPlan,
+    /// dense: HWIO `[r][s][cin][cout]`; depthwise: `[r][s][c]`
+    pub weights: Vec<f32>,
+    /// per-output-channel BN (empty = no BN, e.g. FC)
+    pub bn_scale: Vec<f32>,
+    pub bn_bias: Vec<f32>,
+    pub bn_mean: Vec<f32>,
+    pub bn_var: Vec<f32>,
+    pub relu: bool,
+}
+
+/// Graph node (indices refer to node outputs; usize::MAX = network input).
+#[derive(Debug, Clone)]
+pub enum Node {
+    Conv { cfg: Box<ConvLayerCfg>, input: usize },
+    Add { a: usize, b: usize, relu: bool },
+    ConcatC { a: usize, b: usize },
+    SliceC { x: usize, from: usize, to: usize },
+    ShuffleC { x: usize, groups: usize },
+    Gap { x: usize },
+}
+
+pub const INPUT: usize = usize::MAX;
+
+/// Per-layer simulation result.
+#[derive(Debug, Clone)]
+pub struct LayerStat {
+    pub name: String,
+    pub stats: RunStats,
+}
+
+/// Full-network result.
+#[derive(Debug)]
+pub struct NetResult {
+    /// final node output (logits for classifier graphs ending in Gap+Fc)
+    pub output: Tensor,
+    pub layers: Vec<LayerStat>,
+    pub total: RunStats,
+}
+
+/// Run one conv/FC layer on the machine. Returns the epilogued output.
+pub fn run_conv(m: &mut Machine, cfg: &ConvLayerCfg, x: &Tensor) -> (Tensor, RunStats) {
+    let plan = &cfg.plan;
+    assert_eq!(x.c, plan.cin, "{}: cin mismatch", plan.name);
+    assert_eq!((x.h, x.w), (plan.hin, plan.win), "{}: spatial mismatch", plan.name);
+    let (hout, wout) = (plan.hout(), plan.wout());
+
+    // pack inputs + weights + masks into fresh machine buffers
+    let act = pack::pack_activations(plan, &x.data);
+    let wts = pack::pack_weights(plan, &cfg.weights);
+    let msk = pack::pack_masks(plan);
+    let out_elems = match plan.kind {
+        LayerKind::Dense => plan.cout * hout * wout,
+        LayerKind::Depthwise => plan.cin * hout * wout,
+    };
+    // baseline depthwise stores whole 16B chunk vectors per position,
+    // which can exceed cin*4 bytes when cin is not a multiple of the
+    // lane capacity — size the buffer for both layouts
+    let out_bytes = (out_elems * 4).max(hout * wout * plan.chunks().len() * 16);
+    let bufs = LayerBufs {
+        input: m.alloc(act.len()),
+        weights: m.alloc(wts.len()),
+        out: m.alloc(out_bytes),
+        masks: m.alloc(msk.len()),
+    };
+    m.write_bytes(bufs.input, 0, &act);
+    m.write_bytes(bufs.weights, 0, &wts);
+    m.write_bytes(bufs.masks, 0, &msk);
+
+    // charge the quantize/rearrange/pack pass (reads raw f32, writes
+    // packed) as streaming traffic through the cache
+    m.stream_touch(bufs.input, act.len(), true);
+    m.stats.add_bulk((x.data.len()) as u64, 0, &m.energy_cfg.clone());
+
+    // generate + execute the Algorithm-4 kernel
+    m.patterns.clear();
+    let base = codegen::register_patterns(plan, &mut m.patterns);
+    codegen::emit_layer(plan, &bufs, base, m);
+
+    // epilogue: accumulators -> f32, tail-bias correction, BN, ReLU
+    let bias = plan.tail_bias();
+    let mut out = match plan.kind {
+        LayerKind::Dense => {
+            let mut t = Tensor::zeros(hout, wout, plan.cout);
+            for k in 0..plan.cout {
+                for h in 0..hout {
+                    for w in 0..wout {
+                        let acc = m.read_i32(bufs.out, ((k * hout + h) * wout + w) * 4);
+                        let taps = valid_taps(plan, h, w) as i64;
+                        let v = (acc as i64 - bias * taps) as f32 / quant::ACC_SCALE;
+                        t.data[(h * wout + w) * plan.cout + k] = v;
+                    }
+                }
+            }
+            t
+        }
+        LayerKind::Depthwise => {
+            // depthwise MulAcc wrote in *packed* channel order; un-permute
+            let mut t = Tensor::zeros(hout, wout, plan.cin);
+            for h in 0..hout {
+                for w in 0..wout {
+                    for (pos, &ch) in plan.asg.order.iter().enumerate() {
+                        let acc = m.read_i32(bufs.out, ((h * wout + w) * plan.cin + pos) * 4);
+                        t.data[(h * wout + w) * plan.cin + ch as usize] =
+                            acc as f32 / quant::ACC_SCALE;
+                    }
+                }
+            }
+            t
+        }
+    };
+
+    // BN + ReLU epilogue (f32, vectorized in hardware; bulk-costed)
+    if !cfg.bn_scale.is_empty() {
+        let cch = out.c;
+        for i in 0..out.data.len() {
+            let k = i % cch;
+            let inv = 1.0 / (cfg.bn_var[k] + 1e-5).sqrt();
+            out.data[i] = (out.data[i] - cfg.bn_mean[k]) * inv * cfg.bn_scale[k] + cfg.bn_bias[k];
+        }
+    }
+    if cfg.relu {
+        for v in out.data.iter_mut() {
+            *v = v.max(0.0);
+        }
+    }
+    m.stream_touch(bufs.out, out_elems * 4, false);
+    m.stats.add_bulk(out.data.len() as u64, (out.data.len() * 4) as u64, &m.energy_cfg.clone());
+
+    (out, m.take_stats())
+}
+
+/// Number of in-bounds taps for output position (h, w).
+fn valid_taps(plan: &LayerPlan, h: usize, w: usize) -> usize {
+    let (pt, pl) = (plan.pad_top(), plan.pad_left());
+    let mut n = 0;
+    for r in 0..plan.kh {
+        for s in 0..plan.kw {
+            let ih = h as isize * plan.stride as isize + r as isize - pt;
+            let iw = w as isize * plan.stride as isize + s as isize - pl;
+            if ih >= 0 && iw >= 0 && ih < plan.hin as isize && iw < plan.win as isize {
+                n += 1;
+            }
+        }
+    }
+    n
+}
+
+/// Execute a network graph on a fresh machine.
+pub fn run_network(nodes: &[Node], input: &Tensor) -> NetResult {
+    let mut m = Machine::new();
+    let mut outputs: Vec<Tensor> = Vec::with_capacity(nodes.len());
+    let mut layers = Vec::new();
+    let mut total = RunStats::default();
+    let get = |outputs: &Vec<Tensor>, id: usize| -> Tensor {
+        if id == INPUT {
+            input.clone()
+        } else {
+            outputs[id].clone()
+        }
+    };
+    for node in nodes {
+        let out = match node {
+            Node::Conv { cfg, input: id } => {
+                let x = get(&outputs, *id);
+                let (t, stats) = run_conv(&mut m, cfg, &x);
+                total.merge(&stats);
+                layers.push(LayerStat { name: cfg.plan.name.clone(), stats });
+                t
+            }
+            Node::Add { a, b, relu } => {
+                let ta = get(&outputs, *a);
+                let tb = get(&outputs, *b);
+                assert_eq!(ta.data.len(), tb.data.len());
+                let mut t = ta.clone();
+                for (v, w) in t.data.iter_mut().zip(&tb.data) {
+                    *v += w;
+                    if *relu {
+                        *v = v.max(0.0);
+                    }
+                }
+                total.add_bulk(t.data.len() as u64, (t.data.len() * 8) as u64, &m.energy_cfg);
+                t
+            }
+            Node::ConcatC { a, b } => {
+                let ta = get(&outputs, *a);
+                let tb = get(&outputs, *b);
+                assert_eq!((ta.h, ta.w), (tb.h, tb.w));
+                let mut t = Tensor::zeros(ta.h, ta.w, ta.c + tb.c);
+                for h in 0..ta.h {
+                    for w in 0..ta.w {
+                        for c in 0..ta.c {
+                            t.data[(h * t.w + w) * t.c + c] = ta.at(h, w, c);
+                        }
+                        for c in 0..tb.c {
+                            t.data[(h * t.w + w) * t.c + ta.c + c] = tb.at(h, w, c);
+                        }
+                    }
+                }
+                t
+            }
+            Node::SliceC { x, from, to } => {
+                let tx = get(&outputs, *x);
+                let mut t = Tensor::zeros(tx.h, tx.w, to - from);
+                for h in 0..tx.h {
+                    for w in 0..tx.w {
+                        for c in *from..*to {
+                            t.data[(h * t.w + w) * t.c + (c - from)] = tx.at(h, w, c);
+                        }
+                    }
+                }
+                t
+            }
+            Node::ShuffleC { x, groups } => {
+                let tx = get(&outputs, *x);
+                let g = *groups;
+                let per = tx.c / g;
+                let mut t = Tensor::zeros(tx.h, tx.w, tx.c);
+                // NHWC shuffle: out[.., i*g + j] = in[.., j*per + i]
+                for h in 0..tx.h {
+                    for w in 0..tx.w {
+                        for j in 0..g {
+                            for i in 0..per {
+                                t.data[(h * t.w + w) * t.c + (i * g + j)] =
+                                    tx.at(h, w, j * per + i);
+                            }
+                        }
+                    }
+                }
+                t
+            }
+            Node::Gap { x } => {
+                let tx = get(&outputs, *x);
+                let mut t = Tensor::zeros(1, 1, tx.c);
+                for c in 0..tx.c {
+                    let mut s = 0.0f32;
+                    for h in 0..tx.h {
+                        for w in 0..tx.w {
+                            s += tx.at(h, w, c);
+                        }
+                    }
+                    t.data[c] = s / (tx.h * tx.w) as f32;
+                }
+                total.add_bulk(tx.data.len() as u64, (tx.data.len() * 4) as u64, &m.energy_cfg);
+                t
+            }
+        };
+        outputs.push(out);
+    }
+    NetResult { output: outputs.pop().unwrap(), layers, total }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::smol::pattern_match::Assignment;
+
+    /// Reference conv in plain f64 on quantized values (the oracle the
+    /// packed-vector datapath must match exactly).
+    fn ref_conv(cfg: &ConvLayerCfg, x: &Tensor) -> Tensor {
+        let p = &cfg.plan;
+        let (hout, wout) = (p.hout(), p.wout());
+        let (pt, pl) = (p.pad_top(), p.pad_left());
+        let mut t = Tensor::zeros(hout, wout, p.cout);
+        for k in 0..p.cout {
+            for h in 0..hout {
+                for w in 0..wout {
+                    let mut acc = 0f64;
+                    for r in 0..p.kh {
+                        for s in 0..p.kw {
+                            let ih = h as isize * p.stride as isize + r as isize - pt;
+                            let iw = w as isize * p.stride as isize + s as isize - pl;
+                            if ih < 0 || iw < 0 || ih >= p.hin as isize || iw >= p.win as isize {
+                                continue;
+                            }
+                            for c in 0..p.cin {
+                                let prec = cfg.plan.asg.precision[c];
+                                let xv =
+                                    quant::quantize(x.at(ih as usize, iw as usize, c), prec);
+                                let wv = quant::quantize(
+                                    cfg.weights[((r * p.kw + s) * p.cin + c) * p.cout + k],
+                                    prec,
+                                );
+                                acc += (xv as f64) * (wv as f64);
+                            }
+                        }
+                    }
+                    t.data[(h * wout + w) * p.cout + k] = acc as f32;
+                }
+            }
+        }
+        t
+    }
+
+    fn mk_cfg(cin: usize, cout: usize, k: usize, stride: usize, hw: usize, asg: Assignment) -> ConvLayerCfg {
+        let mut w = vec![0f32; k * k * cin * cout];
+        let mut st = 77u64;
+        for v in w.iter_mut() {
+            st ^= st << 13;
+            st ^= st >> 7;
+            st ^= st << 17;
+            *v = ((st % 1000) as f32 / 500.0) - 1.0;
+        }
+        ConvLayerCfg {
+            plan: LayerPlan {
+                name: "test".into(),
+                kind: LayerKind::Dense,
+                cin,
+                cout,
+                kh: k,
+                kw: k,
+                stride,
+                hin: hw,
+                win: hw,
+                asg,
+                fmt: DataFormat::Smol,
+            },
+            weights: w,
+            bn_scale: vec![],
+            bn_bias: vec![],
+            bn_mean: vec![],
+            bn_var: vec![],
+            relu: false,
+        }
+    }
+
+    fn rand_tensor(h: usize, w: usize, c: usize, seed: u64) -> Tensor {
+        let mut t = Tensor::zeros(h, w, c);
+        let mut st = seed | 1;
+        for v in t.data.iter_mut() {
+            st ^= st << 13;
+            st ^= st >> 7;
+            st ^= st << 17;
+            *v = ((st % 4000) as f32 / 1000.0) - 2.0;
+        }
+        t
+    }
+
+    #[test]
+    fn simulated_conv_matches_reference_uniform4() {
+        let cfg = mk_cfg(32, 4, 3, 1, 6, Assignment::uniform(32, 4));
+        let x = rand_tensor(6, 6, 32, 9);
+        let mut m = Machine::new();
+        let (got, stats) = run_conv(&mut m, &cfg, &x);
+        let want = ref_conv(&cfg, &x);
+        for i in 0..got.data.len() {
+            assert_eq!(got.data[i], want.data[i], "elem {i}");
+        }
+        assert!(stats.vmac > 0 && stats.cycles() > 0);
+    }
+
+    #[test]
+    fn simulated_conv_matches_reference_partial_chunk() {
+        // 24 channels in a 32-capacity chunk: tail masking + bias path
+        let cfg = mk_cfg(24, 3, 3, 2, 8, Assignment::uniform(24, 4));
+        let x = rand_tensor(8, 8, 24, 5);
+        let mut m = Machine::new();
+        let (got, _) = run_conv(&mut m, &cfg, &x);
+        let want = ref_conv(&cfg, &x);
+        for i in 0..got.data.len() {
+            assert_eq!(got.data[i], want.data[i], "elem {i}");
+        }
+    }
+
+    #[test]
+    fn simulated_conv_matches_reference_mixed_precision() {
+        use crate::simd::patterns::all_patterns;
+        use crate::smol::pattern_match::pattern_match;
+        // mixed importance: low s -> 4 bits for first 8 channels
+        let mut s = vec![3.0f32; 40];
+        for i in 0..8 {
+            s[i] = -2.0;
+        }
+        for i in 8..20 {
+            s[i] = 0.5;
+        }
+        let asg = pattern_match(&s, &all_patterns());
+        let cfg = mk_cfg(40, 5, 3, 1, 5, asg);
+        let x = rand_tensor(5, 5, 40, 11);
+        let mut m = Machine::new();
+        let (got, _) = run_conv(&mut m, &cfg, &x);
+        let want = ref_conv(&cfg, &x);
+        for i in 0..got.data.len() {
+            assert_eq!(got.data[i], want.data[i], "elem {i}");
+        }
+    }
+
+    #[test]
+    fn depthwise_matches_reference() {
+        let asg = Assignment::uniform(24, 2);
+        let mut w = vec![0f32; 9 * 24];
+        let mut st = 3u64;
+        for v in w.iter_mut() {
+            st ^= st << 13;
+            st ^= st >> 7;
+            st ^= st << 17;
+            *v = ((st % 1000) as f32 / 500.0) - 1.0;
+        }
+        let cfg = ConvLayerCfg {
+            plan: LayerPlan {
+                name: "dw".into(),
+                kind: LayerKind::Depthwise,
+                cin: 24,
+                cout: 24,
+                kh: 3,
+                kw: 3,
+                stride: 1,
+                hin: 4,
+                win: 4,
+                asg,
+                fmt: DataFormat::Smol,
+            },
+            weights: w.clone(),
+            bn_scale: vec![],
+            bn_bias: vec![],
+            bn_mean: vec![],
+            bn_var: vec![],
+            relu: false,
+        };
+        let x = rand_tensor(4, 4, 24, 21);
+        let mut m = Machine::new();
+        let (got, stats) = run_conv(&mut m, &cfg, &x);
+        // reference depthwise
+        let p = &cfg.plan;
+        for h in 0..4 {
+            for w_ in 0..4 {
+                for c in 0..24 {
+                    let mut acc = 0f64;
+                    for r in 0..3 {
+                        for s in 0..3 {
+                            let ih = h as isize + r as isize - 1;
+                            let iw = w_ as isize + s as isize - 1;
+                            if ih < 0 || iw < 0 || ih >= 4 || iw >= 4 {
+                                continue;
+                            }
+                            let xv = quant::quantize(x.at(ih as usize, iw as usize, c), 2);
+                            let wv = quant::quantize(cfg.weights[(r * 3 + s) * 24 + c], 2);
+                            acc += (xv * wv) as f64;
+                        }
+                    }
+                    assert_eq!(got.at(h, w_, c), acc as f32, "h{h} w{w_} c{c}");
+                }
+            }
+        }
+        let _ = p;
+        assert!(stats.vmul > 0);
+    }
+}

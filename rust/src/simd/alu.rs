@@ -1,0 +1,388 @@
+//! Bit-exact model of the configurable, ultra-low-precision ALU (Fig. 3).
+//!
+//! Each 16-bit lane is configured to one precision and performs:
+//! - MAC: four 4-bit, eight 2-bit, or sixteen 1-bit multiplies, reduced to
+//!   one signed 16-bit sum in the 16.6 fixed-point format (units of 2^-6).
+//! - MUL: the individual products, returned over two cycles through the
+//!   staging register with the always-1 LSB dropped for 2/4-bit products
+//!   (Sec. III-C); software corrects with sign-extend, x2, +1.
+//!
+//! Datapath structure mirrors the paper:
+//! - 1-bit: XNOR + pre-accumulated pairs (Eq. 1-2).
+//! - 2-bit: direct 5-bit signed products (Eq. 3).
+//! - 4-bit: radix-4 Booth multiplication (Eq. 4-6) — implemented as the
+//!   actual Booth digit decomposition (asserted against the direct
+//!   product), with the CSA compression tree modeled in `hw::gates` for
+//!   cost and in the shared reduction below for value.
+
+use crate::simd::patterns::{Pattern, NUM_LANES};
+use crate::simd::vector::V128;
+
+/// Per-lane precision configuration, derived from the instruction's
+/// pattern index by the ALU config control block (Listing 3).
+pub type LaneConfig = [u8; NUM_LANES];
+
+/// Signed SMOL mantissa of an n-bit code: `m = 2u - (2^n - 1)` (odd).
+#[inline]
+pub fn mantissa(code: u32, p: u8) -> i32 {
+    2 * code as i32 - ((1i32 << p) - 1)
+}
+
+/// Radix-4 Booth multiply of two 4-bit-precision mantissas (5-bit signed
+/// values in [-15, 15]). Returns the 9-bit signed product.
+///
+/// The multiplier is recoded into three radix-4 Booth digits in {-2..2}
+/// (Eq. 5-6); each digit selects a partial product of the 5-bit
+/// multiplicand (Eq. 4); partial products are summed (hardware: 3:2 CSA
+/// with the half-adder "hole" for the hot-1 sign, then the shared 4:2
+/// tree + CPA).
+#[inline]
+pub fn booth_mul_4bit(mn: i32, mm: i32) -> i32 {
+    debug_assert!((-15..=15).contains(&mn) && mn % 2 != 0);
+    debug_assert!((-15..=15).contains(&mm) && mm % 2 != 0);
+    // 5-bit two's complement of the multiplier, sign-extended to 6 bits,
+    // with an implicit 0 appended below the LSB.
+    let b = (mm as u32) & 0x3F; // 6-bit view (sign-extended within 6 bits)
+    let bit = |i: i32| -> i32 {
+        if i < 0 {
+            0
+        } else if i >= 5 {
+            ((mm >> 4) & 1) as i32 // sign extension
+        } else {
+            ((b >> i) & 1) as i32
+        }
+    };
+    let mut acc: i32 = 0;
+    for d in 0..3 {
+        let i = 2 * d as i32;
+        // Booth digit from bits (2i+1, 2i, 2i-1): -2*b_{i+1} + b_i + b_{i-1}
+        let digit = -2 * bit(i + 1) + bit(i) + bit(i - 1);
+        // partial product, weighted 4^d (12-bit in hardware)
+        acc += digit * mn * (1 << (2 * d));
+    }
+    debug_assert_eq!(acc, mn * mm, "booth mismatch {mn}*{mm}");
+    acc
+}
+
+/// Precomputed 4-bit x 4-bit product table, indexed by (code_a << 4) |
+/// code_b. Built from the same mantissa map as the Booth datapath (perf
+/// fast path; §Perf in EXPERIMENTS.md — equality with `booth_mul_4bit`
+/// is unit-tested for all 256 entries).
+static PROD4: [i16; 256] = {
+    let mut t = [0i16; 256];
+    let mut a = 0usize;
+    while a < 16 {
+        let mut b = 0usize;
+        while b < 16 {
+            let ma = 2 * a as i32 - 15;
+            let mb = 2 * b as i32 - 15;
+            t[(a << 4) | b] = (ma * mb) as i16;
+            b += 1;
+        }
+        a += 1;
+    }
+    t
+};
+
+/// One lane's MAC: multiply packed operand pairs and reduce to a signed
+/// sum in 2^-6 fixed-point units. `p` is the lane precision.
+#[inline]
+pub fn mac_lane(qn: u16, qm: u16, p: u8) -> i16 {
+    match p {
+        4 => {
+            // four 4-bit pairs via the product LUT (== Booth datapath)
+            let mut acc: i32 = 0;
+            let (mut n, mut m) = (qn, qm);
+            for _ in 0..4 {
+                acc += PROD4[(((n & 0xF) << 4) | (m & 0xF)) as usize] as i32;
+                n >>= 4;
+                m >>= 4;
+            }
+            acc as i16
+        }
+        2 => {
+            // eight 2-bit pairs; product units 2^-2 -> shift left 4
+            let mut acc: i32 = 0;
+            for k in 0..8 {
+                let a = mantissa(((qn >> (2 * k)) & 0x3) as u32, 2);
+                let b = mantissa(((qm >> (2 * k)) & 0x3) as u32, 2);
+                acc += a * b; // 5-bit signed product (Eq. 3)
+            }
+            (acc << 4) as i16
+        }
+        1 => {
+            // sixteen 1-bit pairs via XNOR, pre-accumulated in pairs
+            // (Eq. 1-2); product units 2^0 -> shift left 6
+            let xnor = !(qn ^ qm);
+            // sum of (2*bit - 1) over 16 bits = 2*popcount - 16
+            let acc = 2 * xnor.count_ones() as i32 - 16;
+            (acc << 6) as i16
+        }
+        _ => panic!("unsupported lane precision {p}"),
+    }
+}
+
+/// Full-vector MAC under a precision pattern: returns eight 16.6 lane sums.
+pub fn vmac(qn: &V128, qm: &V128, pattern: &Pattern) -> V128 {
+    let lanes = pattern.lane_precisions();
+    let mut out = [0i16; NUM_LANES];
+    for (i, &p) in lanes.iter().enumerate() {
+        out[i] = mac_lane(qn.lanes[i], qm.lanes[i], p);
+    }
+    V128::from_i16(out)
+}
+
+/// One lane's MUL: individual products packed into a 32-bit staging value
+/// (Listing 2). 4-bit: 4 x 8-bit encoded products; 2-bit: 8 x 4-bit;
+/// 1-bit: 16 x 2-bit two's-complement products (no LSB drop).
+#[inline]
+pub fn mul_lane(qn: u16, qm: u16, p: u8) -> u32 {
+    match p {
+        4 => {
+            let mut buf: u32 = 0;
+            for k in 0..4 {
+                let a = mantissa(((qn >> (4 * k)) & 0xF) as u32, 4);
+                let b = mantissa(((qm >> (4 * k)) & 0xF) as u32, 4);
+                let prod = booth_mul_4bit(a, b); // odd, 9-bit signed
+                let enc = ((prod >> 1) & 0xFF) as u32; // drop always-1 LSB
+                buf |= enc << (8 * k);
+            }
+            buf
+        }
+        2 => {
+            let mut buf: u32 = 0;
+            for k in 0..8 {
+                let a = mantissa(((qn >> (2 * k)) & 0x3) as u32, 2);
+                let b = mantissa(((qm >> (2 * k)) & 0x3) as u32, 2);
+                let prod = a * b; // odd, 5-bit signed
+                let enc = ((prod >> 1) & 0xF) as u32;
+                buf |= enc << (4 * k);
+            }
+            buf
+        }
+        1 => {
+            let mut buf: u32 = 0;
+            for k in 0..16 {
+                let a = (qn >> k) & 1;
+                let b = (qm >> k) & 1;
+                // product is +1 (0b01) iff bits match, else -1 (0b11)
+                let enc: u32 = if a == b { 0b01 } else { 0b11 };
+                buf |= enc << (2 * k);
+            }
+            buf
+        }
+        _ => panic!("unsupported lane precision {p}"),
+    }
+}
+
+/// Full-vector MUL: returns (cycle-1 vector, cycle-2 vector) — lower and
+/// upper 16 bits of each lane's 32-bit staging buffer (Listing 2 +
+/// Sec. III-D two-cycle return through the staging register).
+pub fn vmul(qn: &V128, qm: &V128, pattern: &Pattern) -> (V128, V128) {
+    let lanes = pattern.lane_precisions();
+    let mut lo = [0u16; NUM_LANES];
+    let mut hi = [0u16; NUM_LANES];
+    for (i, &p) in lanes.iter().enumerate() {
+        let buf = mul_lane(qn.lanes[i], qm.lanes[i], p);
+        lo[i] = (buf & 0xFFFF) as u16;
+        hi[i] = (buf >> 16) as u16;
+    }
+    (V128::from_lanes(lo), V128::from_lanes(hi))
+}
+
+/// Software correction for an encoded 2/4-bit MUL product (Sec. III-C):
+/// sign-extend the `width`-bit encoding, multiply by two and add one.
+#[inline]
+pub fn mul_correct(enc: u32, width: u32) -> i32 {
+    let shift = 32 - width;
+    let se = ((enc << shift) as i32) >> shift;
+    2 * se + 1
+}
+
+/// Decode all products of a two-cycle MUL result for one lane.
+pub fn decode_mul_lane(lo: u16, hi: u16, p: u8) -> Vec<i32> {
+    let buf = (lo as u32) | ((hi as u32) << 16);
+    match p {
+        4 => (0..4).map(|k| mul_correct((buf >> (8 * k)) & 0xFF, 8)).collect(),
+        2 => (0..8).map(|k| mul_correct((buf >> (4 * k)) & 0xF, 4)).collect(),
+        1 => (0..16)
+            .map(|k| {
+                let enc = (buf >> (2 * k)) & 0x3;
+                ((enc << 30) as i32) >> 30 // 2-bit two's complement as-is
+            })
+            .collect(),
+        _ => panic!("unsupported lane precision {p}"),
+    }
+}
+
+// ---- existing ARM NEON instructions used by the paper's kernel ----
+
+/// `vaddq_s16`: lanewise signed 16-bit add (wrapping, as on ARM).
+pub fn vaddq_s16(a: &V128, b: &V128) -> V128 {
+    let mut out = [0i16; NUM_LANES];
+    let (ai, bi) = (a.as_i16(), b.as_i16());
+    for i in 0..NUM_LANES {
+        out[i] = ai[i].wrapping_add(bi[i]);
+    }
+    V128::from_i16(out)
+}
+
+/// `vpaddlq_s16`: add adjacent pairs of signed 16-bit into four i32.
+pub fn vpaddlq_s16(a: &V128) -> [i32; 4] {
+    let ai = a.as_i16();
+    [
+        ai[0] as i32 + ai[1] as i32,
+        ai[2] as i32 + ai[3] as i32,
+        ai[4] as i32 + ai[5] as i32,
+        ai[6] as i32 + ai[7] as i32,
+    ]
+}
+
+/// `vaddvq_s32`: horizontal sum of four i32 to one i32.
+pub fn vaddvq_s32(a: [i32; 4]) -> i32 {
+    a[0].wrapping_add(a[1]).wrapping_add(a[2]).wrapping_add(a[3])
+}
+
+/// The full reduction the paper's kernel performs on a 16.6 accumulator
+/// vector: `vaddvq_s32(vpaddlq_s16(acc))` -> one i32 in 2^-6 units.
+pub fn reduce_acc(acc: &V128) -> i32 {
+    vaddvq_s32(vpaddlq_s16(acc))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simd::patterns::all_patterns;
+    use crate::simd::vector::pack_values;
+    use crate::smol::quant;
+
+    fn all_values(p: u8) -> Vec<f32> {
+        (0..1u32 << p).map(|u| quant::code_to_value(u, p)).collect()
+    }
+
+    #[test]
+    fn booth_exhaustive() {
+        for a in (-15..=15).step_by(2) {
+            for b in (-15..=15).step_by(2) {
+                assert_eq!(booth_mul_4bit(a, b), a * b);
+            }
+        }
+    }
+
+    #[test]
+    fn prod4_lut_matches_booth_datapath() {
+        for ca in 0u32..16 {
+            for cb in 0u32..16 {
+                let want = booth_mul_4bit(mantissa(ca, 4), mantissa(cb, 4));
+                assert_eq!(PROD4[((ca << 4) | cb) as usize] as i32, want);
+            }
+        }
+    }
+
+    #[test]
+    fn mac_lane_exhaustive_small() {
+        // 1-bit lane: all 2^16 x selected qm patterns would be 2^32; use
+        // structured sweep instead.
+        for qn in [0u16, 0xFFFF, 0xAAAA, 0x5555, 0x1234, 0x8001] {
+            for qm in [0u16, 0xFFFF, 0xAAAA, 0x5555, 0x4321, 0x7FFF] {
+                let want: i32 = (0..16)
+                    .map(|k| {
+                        let a = if (qn >> k) & 1 == 1 { 1i32 } else { -1 };
+                        let b = if (qm >> k) & 1 == 1 { 1i32 } else { -1 };
+                        a * b * 64
+                    })
+                    .sum();
+                assert_eq!(mac_lane(qn, qm, 1) as i32, want);
+            }
+        }
+    }
+
+    #[test]
+    fn mac_lane_matches_float_all_precisions() {
+        let mut rng = 0x12345678u64;
+        let mut next = move || {
+            rng ^= rng << 13;
+            rng ^= rng >> 7;
+            rng ^= rng << 17;
+            rng
+        };
+        for p in [1u8, 2, 4] {
+            let vals = all_values(p);
+            let n = 16 / p as usize;
+            for _ in 0..200 {
+                let a: Vec<f32> = (0..n).map(|_| vals[(next() as usize) % vals.len()]).collect();
+                let b: Vec<f32> = (0..n).map(|_| vals[(next() as usize) % vals.len()]).collect();
+                let mut qn = 0u16;
+                let mut qm = 0u16;
+                for k in 0..n {
+                    qn |= (quant::value_to_code(a[k], p) as u16) << (k * p as usize);
+                    qm |= (quant::value_to_code(b[k], p) as u16) << (k * p as usize);
+                }
+                let want: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+                let got = mac_lane(qn, qm, p) as f32 / 64.0;
+                assert_eq!(got, want, "p={p} a={a:?} b={b:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn vmac_matches_unpacked_dot_all_patterns() {
+        let mut seed = 42u64;
+        let mut next = move || {
+            seed ^= seed << 13;
+            seed ^= seed >> 7;
+            seed ^= seed << 17;
+            seed
+        };
+        for pat in all_patterns() {
+            let gen = |next: &mut dyn FnMut() -> u64| -> Vec<f32> {
+                (0..pat.capacity())
+                    .map(|i| {
+                        let p = pat.element_precision(i);
+                        quant::code_to_value((next() as u32) & ((1 << p) - 1), p)
+                    })
+                    .collect()
+            };
+            let a = gen(&mut next);
+            let b = gen(&mut next);
+            let va = pack_values(&pat, &a);
+            let vb = pack_values(&pat, &b);
+            let sum = reduce_acc(&vmac(&va, &vb, &pat)) as f32 / 64.0;
+            let want: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+            assert_eq!(sum, want, "pattern {pat:?}");
+        }
+    }
+
+    #[test]
+    fn mul_roundtrip_all_precisions() {
+        for p in [1u8, 2, 4] {
+            let vals = all_values(p);
+            let n = 16 / p as usize;
+            // exhaustive over single-slot pairs
+            for &x in &vals {
+                for &y in &vals {
+                    let mut qn = 0u16;
+                    let mut qm = 0u16;
+                    qn |= (quant::value_to_code(x, p) as u16) << 0;
+                    qm |= (quant::value_to_code(y, p) as u16) << 0;
+                    let buf = mul_lane(qn, qm, p);
+                    let prods = decode_mul_lane((buf & 0xFFFF) as u16, (buf >> 16) as u16, p);
+                    assert_eq!(prods.len(), n);
+                    // slot 0 carries x*y in mantissa units (2^{2-2p} each)
+                    let unit = quant::step_for(p) * quant::step_for(p);
+                    assert_eq!(prods[0] as f32 * unit, x * y, "p={p} {x}*{y}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn lane_sums_fit_16_6() {
+        // max per-lane sums: 4*225 = 900, 8*9*16 = 1152, 16*64 = 1024 (in
+        // 2^-6 units) — all well inside i16.
+        let max4 = 4 * 225;
+        let max2 = 8 * 9 << 4;
+        let max1 = 16i32 << 6;
+        assert!(max4 < i16::MAX as i32 && max2 < i16::MAX as i32 && max1 < i16::MAX as i32);
+    }
+}

@@ -1,0 +1,169 @@
+//! The vector ISA the code generator targets (ARMv8-NEON analog + the two
+//! new instructions `vmac_Pn` / `vmul_Pn` from Sec. IV-B, Fig. 6).
+//!
+//! Instruction encodings follow Fig. 6 (11-bit opcode, Qn/Qm/Qd register
+//! fields, 6-bit Pn pattern-index field); [`encode`] produces the 32-bit
+//! word and the decoder in [`crate::sim`] consumes the structured form.
+
+
+/// Vector register id (32 architectural registers, as in NEON).
+pub type Reg = u8;
+pub const NUM_VREGS: usize = 32;
+
+/// Buffer handle into simulator memory (activations / weights / outputs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BufId(pub u16);
+
+/// A memory operand: byte offset into a buffer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Addr {
+    pub buf: BufId,
+    pub off: u32,
+}
+
+/// Pattern-table index local to a generated program (the `Pn` field).
+pub type PatId = u8;
+
+/// One instruction of the generated inference kernel.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Instr {
+    /// 128-bit vector load.
+    LdQ { dst: Reg, addr: Addr },
+    /// 128-bit vector store.
+    StQ { src: Reg, addr: Addr },
+    /// Zero a vector register (`vmov(0)` in Algorithm 4).
+    VmovZ { dst: Reg },
+    /// Bitwise AND (tail masking, Algorithm 4 line 20).
+    Vand { dst: Reg, a: Reg, b: Reg },
+    /// New: configurable mixed-precision MAC (`vmac_Pn`).
+    VmacP { dst: Reg, a: Reg, b: Reg, pat: PatId },
+    /// New: configurable mixed-precision MUL (`vmul_Pn`) — two-cycle;
+    /// results land in `dst` (cycle 1) and `dst2` (cycle 2).
+    VmulP { dst: Reg, dst2: Reg, a: Reg, b: Reg, pat: PatId },
+    /// `vaddq_s16` lanewise accumulate.
+    Vaddq16 { dst: Reg, a: Reg, b: Reg },
+    /// `vaddvq_s32(vpaddlq_s16(src))` then `out[addr] += sum` (i32, 2^-6
+    /// units). The paper's Algorithm 4 line 26 (reduce + store), fused
+    /// here with the cross-chunk scalar accumulate; costed as 2 vector
+    /// ops + 1 load + 1 store.
+    ReduceAcc { src: Reg, addr: Addr },
+    /// Depthwise epilogue: decode the two-cycle MUL product registers
+    /// (`lo`,`hi`), apply the software LSB correction (Sec. III-C),
+    /// scale each product to 2^-6 units and accumulate into out[addr +
+    /// 4*e] for the first `n_valid` elements. Costed as the correction +
+    /// widen + add sequence (4 vector ops + n/4 stores).
+    MulAcc { lo: Reg, hi: Reg, pat: PatId, addr: Addr, n_valid: u16 },
+    /// Full-precision baseline: 4 x f32 FMA (`vfmaq_f32`).
+    VfmaF32 { dst: Reg, a: Reg, b: Reg },
+    /// INT8 baseline MAC: 16 x i8 dot into 16.6-style lanes (`vdotq`-like).
+    VmacI8 { dst: Reg, a: Reg, b: Reg },
+}
+
+/// Static cost/class of one instruction for the timing model.
+#[derive(Debug, Clone, Copy)]
+pub struct InstrCost {
+    /// vector-ALU issue cycles
+    pub alu: u32,
+    /// memory accesses as (addr, bytes, is_store) count
+    pub mem: u32,
+    /// extra pipeline bubbles (e.g. the vmul second-cycle stall)
+    pub bubble: u32,
+}
+
+impl Instr {
+    pub fn cost(&self) -> InstrCost {
+        match self {
+            Instr::LdQ { .. } => InstrCost { alu: 0, mem: 1, bubble: 0 },
+            Instr::StQ { .. } => InstrCost { alu: 0, mem: 1, bubble: 0 },
+            Instr::VmovZ { .. } => InstrCost { alu: 1, mem: 0, bubble: 0 },
+            Instr::Vand { .. } => InstrCost { alu: 1, mem: 0, bubble: 0 },
+            Instr::VmacP { .. } => InstrCost { alu: 1, mem: 0, bubble: 0 },
+            // MUL returns over two cycles with an auto-inserted bubble
+            // (Sec. III-D).
+            Instr::VmulP { .. } => InstrCost { alu: 2, mem: 0, bubble: 1 },
+            Instr::Vaddq16 { .. } => InstrCost { alu: 1, mem: 0, bubble: 0 },
+            Instr::ReduceAcc { .. } => InstrCost { alu: 2, mem: 2, bubble: 0 },
+            // unpack-correct-accumulate epilogue for depthwise products
+            Instr::MulAcc { .. } => InstrCost { alu: 4, mem: 1, bubble: 0 },
+            Instr::VfmaF32 { .. } => InstrCost { alu: 1, mem: 0, bubble: 0 },
+            Instr::VmacI8 { .. } => InstrCost { alu: 1, mem: 0, bubble: 0 },
+        }
+    }
+
+    /// Memory operand, if any.
+    pub fn addr(&self) -> Option<(Addr, bool)> {
+        match self {
+            Instr::LdQ { addr, .. } => Some((*addr, false)),
+            Instr::StQ { addr, .. } => Some((*addr, true)),
+            Instr::ReduceAcc { addr, .. } => Some((*addr, true)),
+            Instr::MulAcc { addr, .. } => Some((*addr, true)),
+            _ => None,
+        }
+    }
+}
+
+/// Encode an instruction word per Fig. 6 (for the decoder round-trip test
+/// and the I-cache footprint model; the simulator executes the structured
+/// form). Layout: [31:21] opcode, [20:16] Qn, [15:11] Qm, [10:5] Pn,
+/// [4:0] Qd.
+pub fn encode(i: &Instr) -> u32 {
+    let (op, qn, qm, pn, qd) = match *i {
+        Instr::LdQ { dst, .. } => (0b000_0000_0001u32, 0, 0, 0, dst),
+        Instr::StQ { src, .. } => (0b000_0000_0010, src, 0, 0, 0),
+        Instr::VmovZ { dst } => (0b000_0000_0011, 0, 0, 0, dst),
+        Instr::Vand { dst, a, b } => (0b000_0000_0100, a, b, 0, dst),
+        Instr::VmacP { dst, a, b, pat } => (0b100_0000_0000, a, b, pat, dst),
+        Instr::VmulP { dst, a, b, pat, .. } => (0b100_0000_0001, a, b, pat, dst),
+        Instr::Vaddq16 { dst, a, b } => (0b000_0000_0101, a, b, 0, dst),
+        Instr::ReduceAcc { src, .. } => (0b000_0000_0110, src, 0, 0, 0),
+        Instr::MulAcc { lo, hi, pat, .. } => (0b100_0000_0010, lo, hi, pat, 0),
+        Instr::VfmaF32 { dst, a, b } => (0b000_0000_0111, a, b, 0, dst),
+        Instr::VmacI8 { dst, a, b } => (0b000_0000_1000, a, b, 0, dst),
+    };
+    (op << 21) | ((qn as u32) << 16) | ((qm as u32) << 11) | ((pn as u32) << 5) | qd as u32
+}
+
+/// One-hot precision control signals for all 8 lanes from a pattern index
+/// (Listing 1/3's `one_hot_precision_decoder`): 3 bits per lane,
+/// 0b001 = 1-bit, 0b010 = 2-bit, 0b100 = 4-bit.
+pub fn one_hot_precision_decoder(pattern: &crate::simd::patterns::Pattern) -> [u8; 8] {
+    let mut out = [0u8; 8];
+    for (o, p) in out.iter_mut().zip(pattern.lane_precisions()) {
+        *o = match p {
+            1 => 0b001,
+            2 => 0b010,
+            4 => 0b100,
+            _ => unreachable!(),
+        };
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simd::patterns::Pattern;
+
+    #[test]
+    fn encoding_fields_fit() {
+        let i = Instr::VmacP { dst: 31, a: 30, b: 29, pat: 44 };
+        let w = encode(&i);
+        assert_eq!(w >> 21, 0b100_0000_0000);
+        assert_eq!((w >> 16) & 0x1F, 30);
+        assert_eq!((w >> 11) & 0x1F, 29);
+        assert_eq!((w >> 5) & 0x3F, 44);
+        assert_eq!(w & 0x1F, 31);
+    }
+
+    #[test]
+    fn one_hot_decoder_uniform() {
+        assert_eq!(one_hot_precision_decoder(&Pattern::uniform(4)), [0b100; 8]);
+        assert_eq!(one_hot_precision_decoder(&Pattern::uniform(1)), [0b001; 8]);
+        // P3 = (0,16,24): 6 4-bit lanes then 2 2-bit lanes (Listing 3)
+        let p3 = Pattern::new(0, 16, 24);
+        assert_eq!(
+            one_hot_precision_decoder(&p3),
+            [0b100, 0b100, 0b100, 0b100, 0b100, 0b100, 0b010, 0b010]
+        );
+    }
+}

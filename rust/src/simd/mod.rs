@@ -1,0 +1,12 @@
+//! The configurable ultra-low-precision SIMD architecture (paper Sec. III):
+//! precision patterns (Table II), the bit-exact configurable ALU (Fig. 3),
+//! 128-bit vector registers with SMOL code packing, and the extended ISA
+//! (`vmac_Pn` / `vmul_Pn`, Fig. 6).
+
+pub mod alu;
+pub mod isa;
+pub mod patterns;
+pub mod vector;
+
+pub use patterns::{all_patterns, design_subset, Pattern};
+pub use vector::V128;

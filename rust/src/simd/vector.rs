@@ -1,0 +1,182 @@
+//! 128-bit vector register model and SMOL code packing.
+//!
+//! A [`V128`] is eight 16-bit lanes. For low-precision data, each lane
+//! packs 4/8/16 SMOL codes of 4/2/1 bits (per its configured precision),
+//! element 0 in the least-significant bits of lane 0 (little-endian within
+//! the lane, lanes ordered low to high). A vector's element layout is
+//! given by a [`Pattern`]: all 4-bit elements first, then 2-bit, then
+//! 1-bit (Observation 4 grouping).
+
+use crate::simd::patterns::{Pattern, NUM_LANES};
+use crate::smol::quant;
+
+/// One 128-bit vector register (eight 16-bit lanes).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct V128 {
+    pub lanes: [u16; NUM_LANES],
+}
+
+impl V128 {
+    pub const ZERO: V128 = V128 { lanes: [0; 8] };
+
+    pub fn from_lanes(lanes: [u16; NUM_LANES]) -> Self {
+        V128 { lanes }
+    }
+
+    pub fn from_i16(vals: [i16; NUM_LANES]) -> Self {
+        let mut lanes = [0u16; NUM_LANES];
+        for (l, v) in lanes.iter_mut().zip(vals) {
+            *l = v as u16;
+        }
+        V128 { lanes }
+    }
+
+    pub fn as_i16(&self) -> [i16; NUM_LANES] {
+        let mut out = [0i16; NUM_LANES];
+        for (o, l) in out.iter_mut().zip(self.lanes) {
+            *o = l as i16;
+        }
+        out
+    }
+
+    pub fn to_bytes(&self) -> [u8; 16] {
+        let mut b = [0u8; 16];
+        for (i, l) in self.lanes.iter().enumerate() {
+            b[2 * i..2 * i + 2].copy_from_slice(&l.to_le_bytes());
+        }
+        b
+    }
+
+    pub fn from_bytes(b: &[u8]) -> Self {
+        let mut lanes = [0u16; NUM_LANES];
+        for (i, l) in lanes.iter_mut().enumerate() {
+            *l = u16::from_le_bytes([b[2 * i], b[2 * i + 1]]);
+        }
+        V128 { lanes }
+    }
+
+    pub fn and(&self, other: &V128) -> V128 {
+        let mut lanes = [0u16; NUM_LANES];
+        for (l, (a, b)) in lanes.iter_mut().zip(self.lanes.iter().zip(other.lanes)) {
+            *l = a & b;
+        }
+        V128 { lanes }
+    }
+
+    /// Read the `idx`-th element under `pattern` as an unsigned code.
+    pub fn get_code(&self, pattern: &Pattern, idx: u32) -> u32 {
+        let (lane, slot, width) = element_slot(pattern, idx);
+        let mask = (1u32 << width) - 1;
+        ((self.lanes[lane] as u32) >> (slot * width)) & mask
+    }
+
+    /// Write the `idx`-th element under `pattern` as an unsigned code.
+    pub fn set_code(&mut self, pattern: &Pattern, idx: u32, code: u32) {
+        let (lane, slot, width) = element_slot(pattern, idx);
+        let mask = ((1u32 << width) - 1) << (slot * width);
+        let l = self.lanes[lane] as u32;
+        self.lanes[lane] = ((l & !mask) | ((code << (slot * width)) & mask)) as u16;
+    }
+}
+
+/// (lane, slot-within-lane, bit-width) of element `idx` under `pattern`.
+fn element_slot(pattern: &Pattern, idx: u32) -> (usize, u32, u32) {
+    let n4 = pattern.n4 as u32;
+    let n2 = pattern.n2 as u32;
+    let l4 = n4 / 4; // 4-bit lanes
+    let l2 = n2 / 8;
+    if idx < n4 {
+        ((idx / 4) as usize, idx % 4, 4)
+    } else if idx < n4 + n2 {
+        let j = idx - n4;
+        ((l4 + j / 8) as usize, j % 8, 2)
+    } else {
+        let j = idx - n4 - n2;
+        ((l4 + l2 + j / 16) as usize, j % 16, 1)
+    }
+}
+
+/// Pack quantized SMOL values into a vector under `pattern`.
+///
+/// `values[i]` must already be quantized to `pattern.element_precision(i)`;
+/// missing tail values (fewer than capacity) are packed as code 0 and must
+/// be masked by the caller (Algorithm 4's `vand` tail handling).
+pub fn pack_values(pattern: &Pattern, values: &[f32]) -> V128 {
+    let mut v = V128::ZERO;
+    for idx in 0..pattern.capacity() {
+        let p = pattern.element_precision(idx);
+        let code = match values.get(idx as usize) {
+            Some(&x) => quant::value_to_code(x, p),
+            None => 0,
+        };
+        v.set_code(pattern, idx, code);
+    }
+    v
+}
+
+/// Unpack a vector into SMOL values under `pattern`.
+pub fn unpack_values(pattern: &Pattern, v: &V128) -> Vec<f32> {
+    (0..pattern.capacity())
+        .map(|i| quant::code_to_value(v.get_code(pattern, i), pattern.element_precision(i)))
+        .collect()
+}
+
+/// Tail mask: a vector with all-ones for the first `n_valid` elements of
+/// `pattern` and zeros after — both operands of a masked `vmac` are ANDed
+/// with this so out-of-range elements contribute code 0 x code 0.
+///
+/// NOTE: code 0 is NOT value 0 in SMOL (there is no zero), so masking both
+/// operands makes tail products equal (+1-ish constants); the generated
+/// code instead *subtracts a precomputed tail bias* — see
+/// `codegen::tail_bias`. This mirrors the paper's `vand` + correction.
+pub fn tail_mask(pattern: &Pattern, n_valid: u32) -> V128 {
+    let mut m = V128::ZERO;
+    for idx in 0..n_valid.min(pattern.capacity()) {
+        let p = pattern.element_precision(idx);
+        m.set_code(pattern, idx, (1u32 << p) - 1);
+    }
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simd::patterns::all_patterns;
+
+    #[test]
+    fn pack_unpack_roundtrip_all_patterns() {
+        for pat in all_patterns() {
+            let vals: Vec<f32> = (0..pat.capacity())
+                .map(|i| {
+                    let p = pat.element_precision(i);
+                    let codes = 1u32 << p;
+                    quant::code_to_value(i % codes, p)
+                })
+                .collect();
+            let v = pack_values(&pat, &vals);
+            let back = unpack_values(&pat, &v);
+            assert_eq!(vals, back, "pattern {pat:?}");
+        }
+    }
+
+    #[test]
+    fn bytes_roundtrip() {
+        let v = V128::from_lanes([1, 2, 0xFFFF, 4, 5, 6, 7, 0x8000]);
+        assert_eq!(V128::from_bytes(&v.to_bytes()), v);
+    }
+
+    #[test]
+    fn element_slots_disjoint() {
+        for pat in all_patterns() {
+            let mut used = [0u16; NUM_LANES];
+            for idx in 0..pat.capacity() {
+                let (lane, slot, w) = element_slot(&pat, idx);
+                let mask = (((1u32 << w) - 1) << (slot * w)) as u16;
+                assert_eq!(used[lane] & mask, 0, "overlap in {pat:?} at {idx}");
+                used[lane] |= mask;
+            }
+            // all 128 bits covered
+            assert!(used.iter().all(|&m| m == 0xFFFF), "{pat:?}");
+        }
+    }
+}

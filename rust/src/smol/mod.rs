@@ -1,0 +1,12 @@
+//! SMOL quantization math, the Problem-1 pattern-combination solver,
+//! Algorithm 3's pattern matching / channel rearrangement, network-size
+//! statistics and metadata (Huffman) analysis.
+
+pub mod huffman;
+pub mod pattern_match;
+pub mod problem1;
+pub mod quant;
+pub mod stats;
+
+pub use pattern_match::{pattern_match, Assignment};
+pub use problem1::{solve as solve_problem1, Combination, Demand};

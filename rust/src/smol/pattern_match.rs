@@ -1,0 +1,226 @@
+//! Algorithm 3: pattern matching between SASMOL phase I and phase II, and
+//! the channel rearrangement of Observation 4.
+//!
+//! After phase I, each layer has one trained `s` value per input channel.
+//! Channels are ranked by importance (lower `s` = higher importance), the
+//! Problem-1 combination is solved for the layer's demand, and precisions
+//! are (re)assigned so the channel set exactly fills the combination's
+//! slots: the most important channels take the 4-bit slots, then 2-bit,
+//! then 1-bit (`PatternMatch` in Algorithm 3 — realized here directly as
+//! the precision assignment rather than as an `s`-tensor transform; the
+//! phase-II step consumes per-channel (step, qmax) arrays derived from
+//! it).
+
+use crate::simd::patterns::Pattern;
+use crate::smol::problem1::{self, Demand};
+use crate::smol::quant;
+
+/// The per-layer outcome of pattern matching.
+#[derive(Debug, Clone)]
+pub struct Assignment {
+    /// chunk patterns in layout order (4-bit-heavy first)
+    pub chunks: Vec<Pattern>,
+    /// valid element count per chunk (last chunk may be partial)
+    pub valid: Vec<u32>,
+    /// per *original* channel index: assigned precision in {1,2,4}
+    pub precision: Vec<u8>,
+    /// rearranged order: `order[j]` = original channel index stored at
+    /// packed position j (Observation 4 rearrangement)
+    pub order: Vec<u32>,
+}
+
+impl Assignment {
+    pub fn num_channels(&self) -> usize {
+        self.precision.len()
+    }
+
+    /// Weight/activation bits per element for this layer.
+    pub fn bits_per_element(&self) -> f64 {
+        let total: u64 = self.precision.iter().map(|&p| p as u64).sum();
+        total as f64 / self.precision.len() as f64
+    }
+
+    /// Per-channel (step, qmax) arrays for the phase-II / eval artifacts.
+    pub fn step_qmax(&self) -> (Vec<f32>, Vec<f32>) {
+        let step: Vec<f32> = self.precision.iter().map(|&p| quant::step_for(p)).collect();
+        let qmax: Vec<f32> = self.precision.iter().map(|&p| quant::qmax_for(p)).collect();
+        (step, qmax)
+    }
+
+    /// Uniform assignment (U2/U4/INT8-style design points): every channel
+    /// at precision `p`, chunked into uniform patterns.
+    pub fn uniform(channels: usize, p: u8) -> Assignment {
+        let pat = Pattern::uniform(p);
+        let cap = pat.capacity() as usize;
+        let n_chunks = channels.div_ceil(cap);
+        let mut valid = vec![cap as u32; n_chunks];
+        if channels % cap != 0 {
+            *valid.last_mut().unwrap() = (channels % cap) as u32;
+        }
+        Assignment {
+            chunks: vec![pat; n_chunks],
+            valid,
+            precision: vec![p; channels],
+            order: (0..channels as u32).collect(),
+        }
+    }
+}
+
+/// Demand from trained per-channel `s` values (snap to {1,2,4}).
+pub fn demand_from_s(s: &[f32]) -> Demand {
+    let prec: Vec<u8> = s
+        .iter()
+        .map(|&v| quant::snap_precision(quant::precision_from_s(v)))
+        .collect();
+    Demand::from_precisions(&prec)
+}
+
+/// Run Problem 1 + PatternMatch for one layer.
+///
+/// `s`: trained per-channel sensitivity parameters (phase I output).
+/// `supported`: the hardware design point's pattern subset.
+pub fn pattern_match(s: &[f32], supported: &[Pattern]) -> Assignment {
+    let channels = s.len();
+    let demand = demand_from_s(s);
+    let comb = problem1::solve(&demand, supported).expect("non-empty pattern set");
+
+    // Rank channels by importance: ascending s (lower s = higher
+    // precision demanded = more important).
+    let mut rank: Vec<u32> = (0..channels as u32).collect();
+    rank.sort_by(|&a, &b| {
+        s[a as usize]
+            .partial_cmp(&s[b as usize])
+            .unwrap()
+            .then(a.cmp(&b))
+    });
+
+    // Slot budget from the combination; the most important channels take
+    // the 4-bit slots, then 2-bit, then 1-bit. Unfilled slots (capacity
+    // overshoot) are dropped from the *lowest*-precision end.
+    let (s4, s2) = (comb.slots(4) as usize, comb.slots(2) as usize);
+    let mut precision = vec![0u8; channels];
+    for (i, &ch) in rank.iter().enumerate() {
+        precision[ch as usize] = if i < s4 {
+            4
+        } else if i < s4 + s2 {
+            2
+        } else {
+            1
+        };
+    }
+
+    // Layout: walk chunks, pull channels from the per-precision pools in
+    // rank order. Track how many elements of the final chunk are valid.
+    let mut pools: [std::collections::VecDeque<u32>; 3] = Default::default();
+    for &ch in &rank {
+        let p = precision[ch as usize];
+        let pool = match p {
+            4 => 0,
+            2 => 1,
+            _ => 2,
+        };
+        pools[pool].push_back(ch);
+    }
+    let mut order = Vec::with_capacity(channels);
+    let mut valid = Vec::with_capacity(comb.chunks.len());
+    for pat in &comb.chunks {
+        let mut v = 0u32;
+        for (pool, want) in [(0usize, pat.n4), (1, pat.n2), (2, pat.n1)] {
+            for _ in 0..want {
+                if let Some(ch) = pools[pool].pop_front() {
+                    order.push(ch);
+                    v += 1;
+                }
+            }
+        }
+        valid.push(v);
+    }
+    debug_assert_eq!(order.len(), channels, "all channels must be placed");
+
+    Assignment { chunks: comb.chunks, valid, precision, order }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simd::patterns::{all_patterns, design_subset};
+
+    fn s_for(p: u8) -> f32 {
+        match p {
+            1 => 20.0,
+            2 => 0.0,
+            4 => -((2.0f32.powi(3) - 1.0).ln()),
+            _ => unreachable!(),
+        }
+    }
+
+    #[test]
+    fn uniform_s_gives_uniform_assignment() {
+        let s = vec![s_for(4); 64];
+        let a = pattern_match(&s, &all_patterns());
+        assert!(a.precision.iter().all(|&p| p == 4));
+        assert_eq!(a.chunks.len(), 2);
+        assert_eq!(a.order.len(), 64);
+    }
+
+    #[test]
+    fn important_channels_get_more_bits() {
+        // 8 important channels (low s), 120 unimportant
+        let mut s = vec![s_for(1); 128];
+        for i in 0..8 {
+            s[i] = s_for(4);
+        }
+        let a = pattern_match(&s, &all_patterns());
+        for i in 0..8 {
+            assert!(a.precision[i] >= a.precision[64], "ch{i}");
+        }
+        // coverage: total valid slots == channels
+        let total_valid: u32 = a.valid.iter().sum();
+        assert_eq!(total_valid, 128);
+    }
+
+    #[test]
+    fn order_is_a_permutation() {
+        let s: Vec<f32> = (0..100).map(|i| (i as f32) * 0.1 - 5.0).collect();
+        for np in [4, 8, 45] {
+            let a = pattern_match(&s, &design_subset(np));
+            let mut seen = vec![false; 100];
+            for &ch in &a.order {
+                assert!(!seen[ch as usize]);
+                seen[ch as usize] = true;
+            }
+            assert!(seen.iter().all(|&b| b));
+        }
+    }
+
+    #[test]
+    fn promotion_never_demotes() {
+        // All channels demand 4 bits: with only uniform-1 patterns
+        // supported... impossible to honor; but with P4 subset the
+        // combination must supply >= N4 4-bit slots, so everyone stays 4.
+        let s = vec![s_for(4); 48];
+        let a = pattern_match(&s, &design_subset(4));
+        assert!(a.precision.iter().all(|&p| p == 4));
+    }
+
+    #[test]
+    fn layout_matches_chunk_shapes() {
+        let mut s = vec![s_for(2); 60];
+        for i in 0..10 {
+            s[i] = s_for(4);
+        }
+        for i in 50..60 {
+            s[i] = s_for(1);
+        }
+        let a = pattern_match(&s, &all_patterns());
+        // walking the layout, precisions are consistent with chunk slots
+        let mut pos = 0usize;
+        for (ci, pat) in a.chunks.iter().enumerate() {
+            for e in 0..a.valid[ci] {
+                let ch = a.order[pos] as usize;
+                assert_eq!(a.precision[ch], pat.element_precision(e), "chunk {ci} elem {e}");
+                pos += 1;
+            }
+        }
+    }
+}

@@ -1,0 +1,202 @@
+//! Problem 1 (Sec. IV-A): pick the pattern combination for one layer.
+//!
+//! Given the per-channel trained precision counts `(N1, N2, N4)` and the
+//! hardware-supported pattern set, find the multiset of patterns that
+//! (a) minimizes the number of 128-bit vectors needed to store all
+//! channels, subject to the cumulative coverage constraints
+//!
+//! ```text
+//! sum n4_i            >= N4
+//! sum (n4_i + n2_i)   >= N4 + N2
+//! sum capacity_i      >= N4 + N2 + N1
+//! ```
+//!
+//! and (b) among those, maximizes the average precision per element —
+//! equivalently (every pattern spends exactly 128 bits) minimizes the
+//! total element capacity. Lower-precision data may be *promoted* into
+//! higher-precision slots, never the reverse.
+//!
+//! Solved exactly by breadth-first dynamic programming over capped
+//! coverage states, one vector per round.
+
+use crate::simd::patterns::Pattern;
+use std::collections::HashMap;
+
+/// Per-layer trained precision demand (channel counts by precision).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Demand {
+    pub n1: u32,
+    pub n2: u32,
+    pub n4: u32,
+}
+
+impl Demand {
+    pub fn total(&self) -> u32 {
+        self.n1 + self.n2 + self.n4
+    }
+
+    pub fn from_precisions(prec: &[u8]) -> Self {
+        let mut d = Demand { n1: 0, n2: 0, n4: 0 };
+        for &p in prec {
+            match p {
+                1 => d.n1 += 1,
+                2 => d.n2 += 1,
+                4 => d.n4 += 1,
+                _ => panic!("unsupported precision {p}"),
+            }
+        }
+        d
+    }
+}
+
+/// The solved combination: the chunk patterns, in the canonical layout
+/// order (descending n4, then descending n2) the channel rearrangement
+/// uses.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Combination {
+    pub chunks: Vec<Pattern>,
+}
+
+impl Combination {
+    pub fn capacity(&self) -> u32 {
+        self.chunks.iter().map(|p| p.capacity()).sum()
+    }
+
+    pub fn slots(&self, p: u8) -> u32 {
+        self.chunks.iter().map(|c| c.count(p)).sum()
+    }
+
+    pub fn num_vectors(&self) -> usize {
+        self.chunks.len()
+    }
+
+    pub fn avg_precision(&self) -> f64 {
+        128.0 * self.chunks.len() as f64 / self.capacity() as f64
+    }
+}
+
+/// Solve Problem 1 for one layer. Returns `None` only if `supported` is
+/// empty (any non-empty set containing at least one pattern can cover any
+/// demand by adding vectors — 4-bit slots satisfy every constraint).
+pub fn solve(demand: &Demand, supported: &[Pattern]) -> Option<Combination> {
+    if supported.is_empty() || demand.total() == 0 {
+        return if demand.total() == 0 {
+            Some(Combination { chunks: vec![] })
+        } else {
+            None
+        };
+    }
+    let need4 = demand.n4;
+    let need24 = demand.n4 + demand.n2;
+    let need_all = demand.total();
+
+    // State: coverage (c4, c24, call) capped at needs; value: (min total
+    // capacity, parent state, pattern used).
+    type State = (u32, u32, u32);
+    let cap = |c4: u32, c24: u32, call: u32| -> State {
+        (c4.min(need4), c24.min(need24), call.min(need_all))
+    };
+    let goal = (need4, need24, need_all);
+
+    let mut frontier: HashMap<State, (u32, Option<(State, usize)>)> = HashMap::new();
+    frontier.insert((0, 0, 0), (0, None));
+    let mut history: Vec<HashMap<State, (u32, Option<(State, usize)>)>> = vec![frontier.clone()];
+
+    for _round in 0..4096usize {
+        if let Some(_) = history.last().unwrap().get(&goal) {
+            break;
+        }
+        let prev = history.last().unwrap().clone();
+        let mut next: HashMap<State, (u32, Option<(State, usize)>)> = HashMap::new();
+        for (st, (capac, _)) in prev.iter() {
+            for (pi, pat) in supported.iter().enumerate() {
+                let ns = cap(
+                    st.0 + pat.n4 as u32,
+                    st.1 + pat.n4 as u32 + pat.n2 as u32,
+                    st.2 + pat.capacity(),
+                );
+                let ncap = capac + pat.capacity();
+                let e = next.entry(ns).or_insert((u32::MAX, None));
+                if ncap < e.0 {
+                    *e = (ncap, Some((*st, pi)));
+                }
+            }
+        }
+        history.push(next);
+    }
+
+    // Walk back from the goal state in the first round that reached it.
+    let round = history.iter().position(|f| f.contains_key(&goal))?;
+    let mut chunks = Vec::new();
+    let mut st = goal;
+    for r in (1..=round).rev() {
+        let (_, parent) = history[r][&st];
+        let (pst, pi) = parent.expect("non-root state must have a parent");
+        chunks.push(supported[pi]);
+        st = pst;
+    }
+    // Canonical layout order: 4-bit-heavy chunks first.
+    chunks.sort_by(|a, b| (b.n4, b.n2).cmp(&(a.n4, a.n2)));
+    Some(Combination { chunks })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simd::patterns::{all_patterns, design_subset};
+
+    #[test]
+    fn uniform_demand_uses_uniform_patterns() {
+        let d = Demand { n1: 0, n2: 0, n4: 64 };
+        let c = solve(&d, &all_patterns()).unwrap();
+        assert_eq!(c.num_vectors(), 2);
+        assert!(c.chunks.iter().all(|p| *p == Pattern::uniform(4)));
+    }
+
+    #[test]
+    fn coverage_constraints_hold() {
+        let demands = [
+            Demand { n1: 10, n2: 20, n4: 30 },
+            Demand { n1: 100, n2: 0, n4: 4 },
+            Demand { n1: 0, n2: 96, n4: 0 },
+            Demand { n1: 3, n2: 1, n4: 1 },
+            Demand { n1: 200, n2: 100, n4: 50 },
+        ];
+        for np in [4usize, 8, 45] {
+            let pats = design_subset(np);
+            for d in &demands {
+                let c = solve(d, &pats).unwrap();
+                assert!(c.slots(4) >= d.n4, "np={np} {d:?}");
+                assert!(c.slots(4) + c.slots(2) >= d.n4 + d.n2, "np={np} {d:?}");
+                assert!(c.capacity() >= d.total(), "np={np} {d:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn min_vectors_beats_naive() {
+        // 128 1-bit channels fit one vector with P45
+        let d = Demand { n1: 128, n2: 0, n4: 0 };
+        let c = solve(&d, &all_patterns()).unwrap();
+        assert_eq!(c.num_vectors(), 1);
+        // with only uniform-4 supported, need 4 vectors
+        let c4 = solve(&d, &[Pattern::uniform(4)]).unwrap();
+        assert_eq!(c4.num_vectors(), 4);
+    }
+
+    #[test]
+    fn max_avg_precision_tiebreak() {
+        // 32 channels, all 1-bit: one vector suffices; best single vector
+        // by avg precision is uniform-4 (capacity exactly 32).
+        let d = Demand { n1: 32, n2: 0, n4: 0 };
+        let c = solve(&d, &all_patterns()).unwrap();
+        assert_eq!(c.num_vectors(), 1);
+        assert_eq!(c.chunks[0], Pattern::uniform(4));
+    }
+
+    #[test]
+    fn empty_demand() {
+        let d = Demand { n1: 0, n2: 0, n4: 0 };
+        assert_eq!(solve(&d, &all_patterns()).unwrap().num_vectors(), 0);
+    }
+}

@@ -1,0 +1,193 @@
+//! SMOL quantization numerics — the rust mirror of `python/compile/smol.py`.
+//!
+//! An n-bit SMOL value is an odd multiple of `step = 2^(1-n)` in
+//! `[-(2-step), +(2-step)]`; the unsigned n-bit code `u` maps to the value
+//! `(2u - (2^n - 1)) * step` (paper Sec. II-B: 4-bit `1101` -> 1.375).
+//! There is no zero value. All values and pairwise products are exact
+//! dyadic rationals with >= 2^-6 granularity, hence exact in the 16.6
+//! fixed-point lanes (and in f32).
+
+/// Fraction bits of the fixed-point accumulator (16.6 lanes widened to
+/// 32-bit by `vpaddlq_s16`/`vaddvq_s32`).
+pub const ACC_FRAC_BITS: u32 = 6;
+/// `2^ACC_FRAC_BITS`.
+pub const ACC_SCALE: f32 = (1u32 << ACC_FRAC_BITS) as f32;
+
+/// Precisions the system-aware SMOL variant allows (Observation 2).
+pub const SUPPORTED_PRECISIONS: [u8; 3] = [1, 2, 4];
+
+/// Quantization step `2^(1-p)` for a p-bit value.
+#[inline]
+pub fn step_for(p: u8) -> f32 {
+    (2.0f32).powi(1 - p as i32)
+}
+
+/// Largest representable magnitude `2 - 2^(1-p)`.
+#[inline]
+pub fn qmax_for(p: u8) -> f32 {
+    2.0 - step_for(p)
+}
+
+/// Unsigned n-bit code -> SMOL value `(2u - (2^p - 1)) * 2^(1-p)`.
+#[inline]
+pub fn code_to_value(u: u32, p: u8) -> f32 {
+    let m = 2.0 * u as f32 - ((1u32 << p) - 1) as f32;
+    m * step_for(p)
+}
+
+/// SMOL value -> unsigned n-bit code (inverse of [`code_to_value`]).
+#[inline]
+pub fn value_to_code(v: f32, p: u8) -> u32 {
+    let m = v / step_for(p); // odd integer in [-(2^p-1), 2^p-1]
+    let u = (m + ((1u32 << p) - 1) as f32) * 0.5;
+    u.round() as u32
+}
+
+/// Signed odd mantissa `m = v / step` of a quantized value.
+#[inline]
+pub fn value_to_mantissa(v: f32, p: u8) -> i32 {
+    (v / step_for(p)).round() as i32
+}
+
+/// Quantize `x` to the nearest odd multiple of `step_for(p)`, clamped.
+///
+/// Ties round half-to-even on the odd-integer grid, matching
+/// `jnp.round((u-1)/2)` in the Python oracle (banker's rounding).
+#[inline]
+pub fn quantize(x: f32, p: u8) -> f32 {
+    let step = step_for(p);
+    let u = x / step;
+    // nearest odd integer: 2 * round_half_even((u - 1) / 2) + 1
+    let o = 2.0 * round_half_even((u - 1.0) * 0.5) + 1.0;
+    let m_max = ((1u32 << p) - 1) as f32;
+    o.clamp(-m_max, m_max) * step
+}
+
+/// f32 round-half-to-even (the IEEE default; `f32::round` rounds half away
+/// from zero, which would diverge from the Python/XLA oracle on ties).
+#[inline]
+pub fn round_half_even(x: f32) -> f32 {
+    let r = x.round();
+    if (x - x.trunc()).abs() == 0.5 {
+        // tie: pick the even neighbour
+        let lo = x.floor();
+        let hi = x.ceil();
+        if (lo as i64) % 2 == 0 {
+            lo
+        } else {
+            hi
+        }
+    } else {
+        r
+    }
+}
+
+/// Round to the accumulator grid (identity for exact SMOL arithmetic).
+#[inline]
+pub fn fixed_point_round(x: f32) -> f32 {
+    round_half_even(x * ACC_SCALE) / ACC_SCALE
+}
+
+/// The bits-per-value proxy `log2(1 + e^-s)` used by the regularizer.
+#[inline]
+pub fn soft_bits(s: f32) -> f32 {
+    ((-s).exp().ln_1p()) / std::f32::consts::LN_2
+}
+
+/// `p = 1 + round(log2(1 + e^-s))` (Algorithm 1 line 9).
+#[inline]
+pub fn precision_from_s(s: f32) -> f32 {
+    1.0 + soft_bits(s).round()
+}
+
+/// Snap a real precision to the closest of {1, 2, 4} (Algorithm 2 line 11).
+#[inline]
+pub fn snap_precision(p: f32) -> u8 {
+    if p < 1.5 {
+        1
+    } else if p < 3.0 {
+        2
+    } else {
+        4
+    }
+}
+
+/// Noise scale `sigma(s) = sigmoid(s)` (the quantization half-step).
+#[inline]
+pub fn sigma(s: f32) -> f32 {
+    1.0 / (1.0 + (-s).exp())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_examples() {
+        // 4-bit 1101 = 1.375; 2-bit 10 = 0.5; 1-bit {0,1} = {-1,+1}
+        assert_eq!(code_to_value(0b1101, 4), 1.375);
+        assert_eq!(code_to_value(0b10, 2), 0.5);
+        assert_eq!(code_to_value(0, 1), -1.0);
+        assert_eq!(code_to_value(1, 1), 1.0);
+    }
+
+    #[test]
+    fn code_roundtrip_all() {
+        for p in SUPPORTED_PRECISIONS {
+            for u in 0..(1u32 << p) {
+                let v = code_to_value(u, p);
+                assert_eq!(value_to_code(v, p), u, "p={p} u={u}");
+                // values are odd multiples of step
+                let m = v / step_for(p);
+                assert_eq!(m.fract(), 0.0);
+                assert_eq!((m as i64) % 2 != 0, true);
+                assert!(v.abs() <= qmax_for(p));
+            }
+        }
+    }
+
+    #[test]
+    fn quantize_is_idempotent_and_in_range() {
+        for p in SUPPORTED_PRECISIONS {
+            for i in -100..=100 {
+                let x = i as f32 * 0.037;
+                let q = quantize(x, p);
+                assert_eq!(quantize(q, p), q, "p={p} x={x}");
+                assert!(q.abs() <= qmax_for(p));
+                assert!(q.abs() >= step_for(p)); // no zero value
+            }
+        }
+    }
+
+    #[test]
+    fn quantize_error_bounded_by_step() {
+        for p in SUPPORTED_PRECISIONS {
+            let qm = qmax_for(p);
+            for i in -200..=200 {
+                let x = i as f32 * 0.009;
+                if x.abs() <= qm {
+                    assert!((quantize(x, p) - x).abs() <= step_for(p) + 1e-6);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn s_to_precision_mapping() {
+        // sigma(s_init(p)) = 2^(1-p)  =>  precision_from_s(s_init(p)) = p
+        for p in [2u8, 3, 4, 6, 8] {
+            let s_init = -((2.0f32.powi(p as i32 - 1) - 1.0).ln());
+            assert_eq!(precision_from_s(s_init), p as f32, "p={p}");
+        }
+    }
+
+    #[test]
+    fn snap_boundaries() {
+        assert_eq!(snap_precision(1.0), 1);
+        assert_eq!(snap_precision(1.4), 1);
+        assert_eq!(snap_precision(2.0), 2);
+        assert_eq!(snap_precision(2.9), 2);
+        assert_eq!(snap_precision(3.1), 4);
+        assert_eq!(snap_precision(8.0), 4);
+    }
+}

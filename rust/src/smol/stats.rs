@@ -1,0 +1,142 @@
+//! Network-size statistics: bits-per-parameter (Fig. 7/8/9), precision
+//! distributions (Observations 1-5), and metadata overhead accounting.
+
+use crate::smol::pattern_match::Assignment;
+
+/// Shape of one layer's weights for bpp accounting.
+#[derive(Debug, Clone)]
+pub struct LayerShape {
+    pub name: String,
+    /// input channels (the precision axis)
+    pub cin: usize,
+    /// weights per input channel (cout * kh * kw / groups adjustments
+    /// folded in by the caller)
+    pub elems_per_channel: usize,
+}
+
+/// Bits-per-parameter of one layer under an assignment.
+pub fn layer_bpp(shape: &LayerShape, asg: &Assignment) -> f64 {
+    assert_eq!(shape.cin, asg.precision.len(), "{}", shape.name);
+    let bits: u64 = asg
+        .precision
+        .iter()
+        .map(|&p| p as u64 * shape.elems_per_channel as u64)
+        .sum();
+    bits as f64 / (shape.cin * shape.elems_per_channel) as f64
+}
+
+/// Network bpp: weighted average over layers + per-layer pattern metadata
+/// (three integers per layer — Observation 4's "only three integers are
+/// required", charged at 32 bits each).
+pub fn network_bpp(layers: &[(LayerShape, Assignment)]) -> f64 {
+    let mut bits: u64 = 0;
+    let mut params: u64 = 0;
+    for (shape, asg) in layers {
+        let b: u64 = asg
+            .precision
+            .iter()
+            .map(|&p| p as u64 * shape.elems_per_channel as u64)
+            .sum();
+        bits += b + 3 * 32; // metadata: #4b, #2b, #1b channel counts
+        params += (shape.cin * shape.elems_per_channel) as u64;
+    }
+    bits as f64 / params as f64
+}
+
+/// Precision histogram over channels, weighted by elements.
+pub fn precision_histogram(layers: &[(LayerShape, Assignment)]) -> [f64; 5] {
+    let mut counts = [0u64; 5];
+    let mut total = 0u64;
+    for (shape, asg) in layers {
+        for &p in &asg.precision {
+            counts[p as usize] += shape.elems_per_channel as u64;
+            total += shape.elems_per_channel as u64;
+        }
+    }
+    let mut out = [0.0; 5];
+    for (o, c) in out.iter_mut().zip(counts) {
+        *o = c as f64 / total.max(1) as f64;
+    }
+    out
+}
+
+/// Observation 1/2 analysis on arbitrary per-element precisions (original
+/// SMOL): fraction of elements at <= 4 bits.
+pub fn fraction_le_4bits(precisions: &[u8]) -> f64 {
+    let le4 = precisions.iter().filter(|&&p| p <= 4).count();
+    le4 as f64 / precisions.len().max(1) as f64
+}
+
+/// Observation 5: fraction of same-precision runs (along the rearranged
+/// channel dimension) whose total bit-length is >= 16 — the justification
+/// for 16-bit lane granularity.
+pub fn same_precision_run_coverage(asg: &Assignment) -> f64 {
+    if asg.order.is_empty() {
+        return 1.0;
+    }
+    let prec_in_order: Vec<u8> = asg.order.iter().map(|&c| asg.precision[c as usize]).collect();
+    let mut runs: Vec<(u8, u32)> = Vec::new();
+    for &p in &prec_in_order {
+        match runs.last_mut() {
+            Some((q, n)) if *q == p => *n += 1,
+            _ => runs.push((p, 1)),
+        }
+    }
+    let ge16 = runs
+        .iter()
+        .filter(|(p, n)| (*p as u32) * n >= 16)
+        .map(|(p, n)| (*p as u64) * (*n as u64))
+        .sum::<u64>();
+    let total: u64 = runs.iter().map(|(p, n)| (*p as u64) * (*n as u64)).sum();
+    ge16 as f64 / total.max(1) as f64
+}
+
+/// Per-layer average trained bits (Fig. 9 series).
+pub fn per_layer_bpp(layers: &[(LayerShape, Assignment)]) -> Vec<(String, f64)> {
+    layers
+        .iter()
+        .map(|(s, a)| (s.name.clone(), a.bits_per_element()))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn asg(prec: Vec<u8>) -> Assignment {
+        let order = (0..prec.len() as u32).collect();
+        Assignment { chunks: vec![], valid: vec![], precision: prec, order }
+    }
+
+    #[test]
+    fn bpp_uniform() {
+        let shape = LayerShape { name: "l".into(), cin: 8, elems_per_channel: 9 };
+        assert_eq!(layer_bpp(&shape, &asg(vec![4; 8])), 4.0);
+        assert_eq!(layer_bpp(&shape, &asg(vec![1; 8])), 1.0);
+    }
+
+    #[test]
+    fn bpp_mixed() {
+        let shape = LayerShape { name: "l".into(), cin: 4, elems_per_channel: 1 };
+        // 4,4,2,2 -> 3.0
+        assert_eq!(layer_bpp(&shape, &asg(vec![4, 4, 2, 2])), 3.0);
+    }
+
+    #[test]
+    fn network_bpp_includes_metadata() {
+        let shape = LayerShape { name: "l".into(), cin: 4, elems_per_channel: 1 };
+        let layers = vec![(shape, asg(vec![4, 4, 4, 4]))];
+        // 16 bits data + 96 bits metadata over 4 params = 28 bpp
+        assert_eq!(network_bpp(&layers), 28.0);
+    }
+
+    #[test]
+    fn run_coverage() {
+        // 16 channels of 1-bit in a row = run of 16 bits -> covered
+        let a = asg(vec![1; 16]);
+        assert_eq!(same_precision_run_coverage(&a), 1.0);
+        // alternating 4,2 in 2-channel runs: 4*1=4 bits < 16 -> 0 coverage
+        let a2 = asg(vec![4, 2, 4, 2]);
+        assert_eq!(same_precision_run_coverage(&a2), 0.0);
+    }
+}

@@ -1,0 +1,230 @@
+//! Training orchestrator: drives the AOT-compiled SASMOL steps through
+//! PJRT. Owns the state store, feeds batches/keys/hyperparameters, and
+//! implements the two-phase schedule (phase I noise search -> pattern
+//! match -> phase II fine-tune) plus the uniform/fp32 baselines.
+
+use crate::data::Dataset;
+use crate::runtime::{HostTensor, Runtime, StateStore, TensorSpec};
+use anyhow::{bail, Result};
+use std::collections::HashMap;
+
+/// Per-layer (step, qmax) arrays fed to phase2/eval steps.
+pub type PrecMap = HashMap<String, (Vec<f32>, Vec<f32>)>;
+
+/// One logged training step.
+#[derive(Debug, Clone, Copy)]
+pub struct StepLog {
+    pub step: usize,
+    pub loss: f32,
+    pub acc: f32,
+}
+
+pub struct Trainer<'a> {
+    pub rt: &'a Runtime,
+    pub state: StateStore,
+    pub dataset: &'a Dataset,
+    pub seed: u32,
+    pub history: Vec<StepLog>,
+}
+
+impl<'a> Trainer<'a> {
+    pub fn new(rt: &'a Runtime, dataset: &'a Dataset) -> Result<Self> {
+        let state = StateStore::load_init(rt.dir(), &rt.meta.init_bin, &rt.meta.init_tensors)?;
+        Ok(Trainer { rt, state, dataset, seed: 0, history: Vec::new() })
+    }
+
+    fn batch_tensors(&self, step_idx: usize) -> (HostTensor, HostTensor) {
+        let b = self.dataset.batch(0, step_idx as u64, self.rt.meta.train_batch);
+        let img = self.rt.meta.image;
+        (
+            HostTensor::f32(vec![b.n, img, img, 3], b.images),
+            HostTensor::i32(vec![b.n], b.labels),
+        )
+    }
+
+    fn apply_outputs(&mut self, outs: Vec<HostTensor>, specs: &[TensorSpec]) -> (f32, f32) {
+        let mut loss = f32::NAN;
+        let mut acc = f32::NAN;
+        for (out, spec) in outs.into_iter().zip(specs) {
+            if let Some(path) = spec.name.strip_prefix("0.") {
+                self.state.set(path, out);
+            } else if spec.name == "1" {
+                loss = out.scalar().unwrap_or(f32::NAN);
+            } else if spec.name == "2" {
+                acc = out.scalar().unwrap_or(f32::NAN);
+            }
+        }
+        (loss, acc)
+    }
+
+    fn run_train_step(
+        &mut self,
+        step_name: &str,
+        step_idx: usize,
+        prec: Option<&PrecMap>,
+        lr: f32,
+        lam: f32,
+    ) -> Result<(f32, f32)> {
+        let (images, labels) = self.batch_tensors(step_idx);
+        let key = HostTensor::u32(vec![2], vec![self.seed, step_idx as u32]);
+        let state = &self.state;
+        let out_specs = self.rt.step(step_name)?.meta.outputs.clone();
+        let outs = self.rt.execute(step_name, |spec| {
+            resolve_input(
+                step_name, spec, state, prec, &images, &labels, &key, lr, lam,
+            )
+        })?;
+        let (loss, acc) = self.apply_outputs(outs, &out_specs);
+        self.history.push(StepLog { step: step_idx, loss, acc });
+        Ok((loss, acc))
+    }
+
+    /// SASMOL phase I (noise-injected precision search).
+    pub fn phase1_step(&mut self, step_idx: usize, lr: f32, lam: f32) -> Result<(f32, f32)> {
+        self.run_train_step("phase1_step", step_idx, None, lr, lam)
+    }
+
+    /// Phase II / uniform QAT under fixed per-channel precisions.
+    pub fn phase2_step(&mut self, step_idx: usize, prec: &PrecMap, lr: f32) -> Result<(f32, f32)> {
+        self.run_train_step("phase2_step", step_idx, Some(prec), lr, 0.0)
+    }
+
+    /// Full-precision baseline step.
+    pub fn fp32_step(&mut self, step_idx: usize, lr: f32) -> Result<(f32, f32)> {
+        self.run_train_step("fp32_step", step_idx, None, lr, 0.0)
+    }
+
+    /// Evaluate accuracy over `n_batches` deterministic eval batches.
+    /// `prec` selects the quantized path (`eval_quant`); `None` = fp32.
+    pub fn eval(&self, prec: Option<&PrecMap>, n_batches: usize) -> Result<f32> {
+        let step_name = if prec.is_some() { "eval_quant" } else { "eval_fp32" };
+        let img = self.rt.meta.image;
+        let eb = self.rt.meta.eval_batch;
+        let mut correct = 0usize;
+        let mut total = 0usize;
+        for bi in 0..n_batches {
+            let b = self.dataset.batch(1, bi as u64, eb);
+            let images = HostTensor::f32(vec![eb, img, img, 3], b.images.clone());
+            let logits = self.eval_logits_inner(step_name, prec, &images)?;
+            let classes = self.rt.meta.num_classes;
+            for (i, &label) in b.labels.iter().enumerate() {
+                let row = &logits[i * classes..(i + 1) * classes];
+                let pred = row
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .unwrap()
+                    .0;
+                if pred == label as usize {
+                    correct += 1;
+                }
+                total += 1;
+            }
+        }
+        Ok(correct as f32 / total as f32)
+    }
+
+    /// Raw logits for a batch of images (integration tests / serving).
+    pub fn eval_logits(&self, prec: Option<&PrecMap>, images: &HostTensor) -> Result<Vec<f32>> {
+        let step_name = if prec.is_some() { "eval_quant" } else { "eval_fp32" };
+        self.eval_logits_inner(step_name, prec, images)
+    }
+
+    fn eval_logits_inner(
+        &self,
+        step_name: &str,
+        prec: Option<&PrecMap>,
+        images: &HostTensor,
+    ) -> Result<Vec<f32>> {
+        let state = &self.state;
+        let dummy_labels = HostTensor::i32(vec![1], vec![0]);
+        let dummy_key = HostTensor::u32(vec![2], vec![0, 0]);
+        let outs = self.rt.execute(step_name, |spec| {
+            resolve_input(
+                step_name, spec, state, prec, images, &dummy_labels, &dummy_key, 0.0, 0.0,
+            )
+        })?;
+        Ok(outs.into_iter().next().unwrap().as_f32()?.to_vec())
+    }
+}
+
+/// Map one HLO input parameter to its host tensor, per step signature:
+/// phase1: (state, images, labels, key, lr, lam)
+/// phase2: (state, prec, images, labels, lr)
+/// fp32:   (state, images, labels, lr)
+/// eval_quant: (state, prec, images);  eval_fp32: (state, images)
+#[allow(clippy::too_many_arguments)]
+fn resolve_input(
+    step_name: &str,
+    spec: &TensorSpec,
+    state: &StateStore,
+    prec: Option<&PrecMap>,
+    images: &HostTensor,
+    labels: &HostTensor,
+    key: &HostTensor,
+    lr: f32,
+    lam: f32,
+) -> Result<HostTensor> {
+    let arg = spec.arg_index();
+    let has_prec = matches!(step_name, "phase2_step" | "eval_quant");
+    // positional role of this argument index
+    let role = match (step_name, arg) {
+        (_, 0) => "state",
+        ("phase1_step", 1) | ("fp32_step", 1) | ("eval_fp32", 1) => "images",
+        ("phase2_step", 1) | ("eval_quant", 1) => "prec",
+        ("phase1_step", 2) | ("fp32_step", 2) => "labels",
+        ("phase2_step", 2) | ("eval_quant", 2) => "images",
+        ("phase1_step", 3) => "key",
+        ("phase2_step", 3) => "labels",
+        ("phase1_step", 4) | ("phase2_step", 4) | ("fp32_step", 3) => "lr",
+        ("phase1_step", 5) => "lam",
+        _ => bail!("unexpected arg {arg} for {step_name}"),
+    };
+    let _ = has_prec;
+    Ok(match role {
+        "state" => state.get(spec.sub_path())?.clone(),
+        "images" => images.clone(),
+        "labels" => labels.clone(),
+        "key" => key.clone(),
+        "lr" => HostTensor::scalar_f32(lr),
+        "lam" => HostTensor::scalar_f32(lam),
+        "prec" => {
+            let prec = prec.ok_or_else(|| anyhow::anyhow!("prec map required"))?;
+            // sub_path is "<layer>.<0|1>" (layer names contain no '.')
+            let sub = spec.sub_path();
+            let (layer, which) = sub
+                .rsplit_once('.')
+                .ok_or_else(|| anyhow::anyhow!("bad prec path {sub}"))?;
+            let (step_v, qmax_v) = prec
+                .get(layer)
+                .ok_or_else(|| anyhow::anyhow!("prec for layer {layer} missing"))?;
+            let v = if which == "0" { step_v } else { qmax_v };
+            HostTensor::f32(vec![v.len()], v.clone())
+        }
+        _ => unreachable!(),
+    })
+}
+
+/// Cosine-with-floor learning-rate schedule used by the experiments.
+pub fn lr_schedule(step: usize, total: usize, base: f32) -> f32 {
+    let t = step as f32 / total.max(1) as f32;
+    let cos = 0.5 * (1.0 + (std::f32::consts::PI * t).cos());
+    base * (0.1 + 0.9 * cos)
+}
+
+/// Build a uniform-precision PrecMap for a model's layers.
+pub fn uniform_prec(layers: &[crate::runtime::LayerSpec], bits: u8) -> PrecMap {
+    use crate::smol::quant;
+    layers
+        .iter()
+        .map(|l| {
+            (
+                l.name.clone(),
+                (
+                    vec![quant::step_for(bits); l.cin],
+                    vec![quant::qmax_for(bits); l.cin],
+                ),
+            )
+        })
+        .collect()
+}

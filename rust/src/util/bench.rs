@@ -1,0 +1,97 @@
+//! Micro-benchmark harness (offline substitute for criterion): warmup,
+//! timed iterations, median/mean/min reporting. Benches are plain
+//! `harness = false` binaries using this module.
+
+use std::time::Instant;
+
+/// Result of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub min_ns: f64,
+}
+
+impl BenchResult {
+    pub fn throughput(&self, items: f64) -> f64 {
+        items / (self.mean_ns / 1e9)
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Run a closure repeatedly and report timing. The closure should return a
+/// value to keep the optimizer honest (it is black-boxed).
+pub fn bench<T, F: FnMut() -> T>(name: &str, mut f: F) -> BenchResult {
+    // warmup + calibration
+    let t0 = Instant::now();
+    let mut warm = 0u64;
+    loop {
+        std::hint::black_box(f());
+        warm += 1;
+        if t0.elapsed().as_millis() > 50 || warm >= 1000 {
+            break;
+        }
+    }
+    let per_iter = t0.elapsed().as_nanos() as f64 / warm as f64;
+    // aim for ~0.5 s of samples, between 5 and 200 sample groups
+    let group_iters = ((5e6 / per_iter).ceil() as u64).clamp(1, 10_000);
+    let groups = ((5e8 / (per_iter * group_iters as f64)).ceil() as u64).clamp(5, 200);
+
+    let mut samples = Vec::with_capacity(groups as usize);
+    for _ in 0..groups {
+        let t = Instant::now();
+        for _ in 0..group_iters {
+            std::hint::black_box(f());
+        }
+        samples.push(t.elapsed().as_nanos() as f64 / group_iters as f64);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    let median = samples[samples.len() / 2];
+    let min = samples[0];
+    let r = BenchResult {
+        name: name.to_string(),
+        iters: groups * group_iters,
+        mean_ns: mean,
+        median_ns: median,
+        min_ns: min,
+    };
+    println!(
+        "{:<48} mean {:>12}  median {:>12}  min {:>12}  ({} iters)",
+        r.name,
+        fmt_ns(r.mean_ns),
+        fmt_ns(r.median_ns),
+        fmt_ns(r.min_ns),
+        r.iters
+    );
+    r
+}
+
+/// Print a section header.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let r = bench("noop-add", || std::hint::black_box(1u64) + 1);
+        assert!(r.mean_ns > 0.0 && r.iters > 0);
+    }
+}

@@ -1,0 +1,10 @@
+//! Small in-tree substitutes for crates unavailable in this offline build
+//! environment (see Cargo.toml): JSON (serde_json), a micro-benchmark
+//! harness (criterion), a seeded property-test driver (proptest), CLI
+//! parsing (clap) and a splitmix/xoshiro RNG (rand).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;

@@ -1,0 +1,47 @@
+//! Seeded property-test driver (offline substitute for proptest):
+//! runs a property over many generated cases; on failure, reports the
+//! seed and case index for exact reproduction.
+
+use crate::util::rng::Rng;
+
+/// Run `cases` random trials of `prop`, which receives a seeded RNG.
+/// Panics with the reproducing seed on the first failure.
+pub fn check<F: FnMut(&mut Rng) -> Result<(), String>>(name: &str, cases: u64, mut prop: F) {
+    let base = 0x50319_u64 ^ fxhash(name);
+    for case in 0..cases {
+        let seed = base.wrapping_add(case.wrapping_mul(0x9E3779B97F4A7C15));
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!("property '{name}' failed at case {case} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// FNV-1a, const so property names hash at compile time where possible.
+const fn fxhash(s: &str) -> u64 {
+    let b = s.as_bytes();
+    let mut h = 0xcbf29ce484222325u64;
+    let mut i = 0;
+    while i < b.len() {
+        h ^= b[i] as u64;
+        h = h.wrapping_mul(0x100000001b3);
+        i += 1;
+    }
+    h
+}
+
+/// Assert-eq helper returning Err instead of panicking (for use in
+/// properties).
+#[macro_export]
+macro_rules! prop_assert_eq {
+    ($a:expr, $b:expr, $($ctx:tt)*) => {
+        if $a != $b {
+            return Err(format!(
+                "{} != {} ({})",
+                stringify!($a),
+                stringify!($b),
+                format!($($ctx)*)
+            ));
+        }
+    };
+}

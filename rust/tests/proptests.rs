@@ -1,0 +1,269 @@
+//! Property-based tests (seeded sweeps via util::prop — the offline
+//! substitute for proptest) over the coordinator-side invariants:
+//! quantization, packing, the ALU datapath, Problem-1 coverage, pattern
+//! matching, and the code generator vs. a direct reference.
+
+use soniq::codegen::{self, Counter, DataFormat, LayerBufs, LayerKind, LayerPlan};
+use soniq::simd::alu;
+use soniq::simd::isa::BufId;
+use soniq::simd::patterns::{all_patterns, design_subset, Pattern};
+use soniq::simd::vector::{pack_values, unpack_values};
+use soniq::smol::pattern_match::{demand_from_s, pattern_match};
+use soniq::smol::problem1::solve;
+use soniq::smol::quant;
+use soniq::util::prop::check;
+use soniq::util::rng::Rng;
+
+fn rand_precision(rng: &mut Rng) -> u8 {
+    *rng.choice(&[1u8, 2, 4])
+}
+
+fn rand_qvalue(rng: &mut Rng, p: u8) -> f32 {
+    quant::code_to_value(rng.below(1 << p) as u32, p)
+}
+
+#[test]
+fn prop_quantize_idempotent_bounded_odd() {
+    check("quantize", 3000, |rng| {
+        let p = rand_precision(rng);
+        let x = rng.range(-5.0, 5.0);
+        let q = quant::quantize(x, p);
+        if quant::quantize(q, p) != q {
+            return Err(format!("not idempotent: p={p} x={x} q={q}"));
+        }
+        if q.abs() > quant::qmax_for(p) || q.abs() < quant::step_for(p) {
+            return Err(format!("out of range: p={p} q={q}"));
+        }
+        let m = (q / quant::step_for(p)) as i64;
+        if m % 2 == 0 {
+            return Err(format!("even mantissa: p={p} q={q}"));
+        }
+        // within clip range the error is at most one step
+        if x.abs() <= quant::qmax_for(p) && (q - x).abs() > quant::step_for(p) + 1e-6 {
+            return Err(format!("error too large: p={p} x={x} q={q}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_pack_unpack_roundtrip() {
+    let pats = all_patterns();
+    check("pack-roundtrip", 500, |rng| {
+        let pat = *rng.choice(&pats);
+        let vals: Vec<f32> = (0..pat.capacity())
+            .map(|i| rand_qvalue(rng, pat.element_precision(i)))
+            .collect();
+        let v = pack_values(&pat, &vals);
+        let back = unpack_values(&pat, &v);
+        if back != vals {
+            return Err(format!("roundtrip mismatch for {pat:?}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_vmac_equals_float_dot() {
+    let pats = all_patterns();
+    check("vmac-dot", 400, |rng| {
+        let pat = *rng.choice(&pats);
+        let a: Vec<f32> = (0..pat.capacity())
+            .map(|i| rand_qvalue(rng, pat.element_precision(i)))
+            .collect();
+        let b: Vec<f32> = (0..pat.capacity())
+            .map(|i| rand_qvalue(rng, pat.element_precision(i)))
+            .collect();
+        let va = pack_values(&pat, &a);
+        let vb = pack_values(&pat, &b);
+        let got = alu::reduce_acc(&alu::vmac(&va, &vb, &pat)) as f32 / 64.0;
+        let want: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+        if got != want {
+            return Err(format!("{pat:?}: {got} != {want}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_vmul_decode_recovers_products() {
+    check("vmul-decode", 500, |rng| {
+        let p = rand_precision(rng);
+        let pat = Pattern::uniform(p);
+        let a: Vec<f32> = (0..pat.capacity()).map(|_| rand_qvalue(rng, p)).collect();
+        let b: Vec<f32> = (0..pat.capacity()).map(|_| rand_qvalue(rng, p)).collect();
+        let va = pack_values(&pat, &a);
+        let vb = pack_values(&pat, &b);
+        let (lo, hi) = alu::vmul(&va, &vb, &pat);
+        let unit = quant::step_for(p) * quant::step_for(p);
+        let per_lane = 16 / p as usize;
+        for lane in 0..8usize {
+            let prods = alu::decode_mul_lane(lo.lanes[lane], hi.lanes[lane], p);
+            for (k, prod) in prods.iter().enumerate() {
+                let e = lane * per_lane + k;
+                let want = a[e] * b[e];
+                if *prod as f32 * unit != want {
+                    return Err(format!("p={p} lane={lane} k={k}"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_problem1_coverage_and_minimality() {
+    check("problem1", 200, |rng| {
+        let np = *rng.choice(&[4usize, 8, 45]);
+        let pats = design_subset(np);
+        let s: Vec<f32> = (0..(8 + rng.below(200) as usize))
+            .map(|_| rng.range(-4.0, 8.0))
+            .collect();
+        let d = demand_from_s(&s);
+        let c = solve(&d, &pats).ok_or("no solution")?;
+        if c.slots(4) < d.n4 {
+            return Err(format!("4-bit coverage violated: {c:?} vs {d:?}"));
+        }
+        if c.slots(4) + c.slots(2) < d.n4 + d.n2 {
+            return Err(format!("2-bit coverage violated"));
+        }
+        if c.capacity() < d.total() {
+            return Err(format!("total coverage violated"));
+        }
+        // minimality: removing any one chunk must break a constraint
+        if !c.chunks.is_empty() {
+            for drop in 0..c.chunks.len() {
+                let mut rest: Vec<Pattern> = c.chunks.clone();
+                rest.remove(drop);
+                let s4: u32 = rest.iter().map(|p| p.count(4)).sum();
+                let s24: u32 = rest.iter().map(|p| p.count(4) + p.count(2)).sum();
+                let cap: u32 = rest.iter().map(|p| p.capacity()).sum();
+                if s4 >= d.n4 && s24 >= d.n4 + d.n2 && cap >= d.total() {
+                    return Err(format!("solution not minimal: chunk {drop} removable"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_pattern_match_is_permutation_and_monotone() {
+    check("pattern-match", 200, |rng| {
+        let np = *rng.choice(&[4usize, 8, 45]);
+        let n = 4 + rng.below(150) as usize;
+        let s: Vec<f32> = (0..n).map(|_| rng.range(-4.0, 8.0)).collect();
+        let a = pattern_match(&s, &design_subset(np));
+        // permutation
+        let mut seen = vec![false; n];
+        for &ch in &a.order {
+            if seen[ch as usize] {
+                return Err(format!("duplicate channel {ch}"));
+            }
+            seen[ch as usize] = true;
+        }
+        if !seen.iter().all(|&b| b) {
+            return Err("missing channel".into());
+        }
+        // monotone: if s_i <= s_j (i more important) then prec_i >= prec_j
+        for i in 0..n {
+            for j in 0..n {
+                if s[i] < s[j] && a.precision[i] < a.precision[j] {
+                    return Err(format!(
+                        "importance violated: s[{i}]={} < s[{j}]={} but {} < {}",
+                        s[i], s[j], a.precision[i], a.precision[j]
+                    ));
+                }
+            }
+        }
+        // layout consistency
+        let total_valid: u32 = a.valid.iter().sum();
+        if total_valid != n as u32 {
+            return Err(format!("valid {total_valid} != channels {n}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_codegen_instruction_count_scales_with_chunks() {
+    check("codegen-scaling", 60, |rng| {
+        let cin = 16 + rng.below(120) as usize;
+        let hw = 3 + rng.below(6) as usize;
+        let cout = 1 + rng.below(6) as usize;
+        let bufs = LayerBufs {
+            input: BufId(0),
+            weights: BufId(1),
+            out: BufId(2),
+            masks: BufId(3),
+        };
+        let mk = |bits: u8| LayerPlan {
+            name: "t".into(),
+            kind: LayerKind::Dense,
+            cin,
+            cout,
+            kh: 3,
+            kw: 3,
+            stride: 1,
+            hin: hw,
+            win: hw,
+            asg: soniq::smol::pattern_match::Assignment::uniform(cin, bits),
+            fmt: DataFormat::Smol,
+        };
+        let count = |plan: &LayerPlan| {
+            let mut c = Counter::default();
+            codegen::emit_layer(plan, &bufs, 0, &mut c);
+            c
+        };
+        let c4 = count(&mk(4));
+        let c1 = count(&mk(1));
+        // vmac count proportional to chunk count
+        let chunks4 = cin.div_ceil(32) as u64;
+        let chunks1 = cin.div_ceil(128) as u64;
+        if c4.vmac * chunks1 != c1.vmac * chunks4 {
+            return Err(format!(
+                "vmac not proportional: {}*{} != {}*{}",
+                c4.vmac, chunks1, c1.vmac, chunks4
+            ));
+        }
+        // stores = out elements per chunk sweep
+        if c4.stores != (cout * hw * hw) as u64 * chunks4 {
+            return Err(format!("store count {}", c4.stores));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_json_roundtrip() {
+    use soniq::util::json::{parse, Json};
+    check("json-roundtrip", 300, |rng| {
+        // generate a random value tree
+        fn gen(rng: &mut Rng, depth: u32) -> Json {
+            match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+                0 => Json::Null,
+                1 => Json::Bool(rng.below(2) == 1),
+                2 => Json::Num((rng.below(2_000_000) as f64 - 1e6) / 64.0),
+                3 => {
+                    let n = rng.below(10) as usize;
+                    Json::Str((0..n).map(|_| *rng.choice(&['a', 'é', '"', '\\', '\n', 'z'])).collect())
+                }
+                4 => Json::Arr((0..rng.below(5)).map(|_| gen(rng, depth - 1)).collect()),
+                _ => {
+                    let mut m = std::collections::BTreeMap::new();
+                    for i in 0..rng.below(5) {
+                        m.insert(format!("k{i}"), gen(rng, depth - 1));
+                    }
+                    Json::Obj(m)
+                }
+            }
+        }
+        let v = gen(rng, 3);
+        let text = v.to_string();
+        let back = parse(&text).map_err(|e| format!("parse failed: {e} on {text}"))?;
+        if back != v {
+            return Err(format!("roundtrip mismatch: {text}"));
+        }
+        Ok(())
+    });
+}

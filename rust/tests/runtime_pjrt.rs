@@ -1,0 +1,173 @@
+//! Integration tests over the PJRT runtime: load the AOT artifacts, run
+//! train/eval steps, and cross-validate the rust SIMD simulator against
+//! the JAX/Pallas eval path end to end.
+//!
+//! Requires `make artifacts` (skipped with a message otherwise).
+
+use soniq::coordinator::netbuild;
+use soniq::data::Dataset;
+use soniq::runtime::{HostTensor, Runtime};
+use soniq::sim::network::{run_network, Tensor};
+use soniq::smol::pattern_match::Assignment;
+use soniq::smol::quant;
+use soniq::train::{uniform_prec, Trainer};
+use std::collections::HashMap;
+
+fn artifacts_dir() -> Option<String> {
+    let dir = format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"));
+    if std::path::Path::new(&dir).join("tinynet.meta.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("artifacts/ missing — run `make artifacts` first; skipping");
+        None
+    }
+}
+
+#[test]
+fn kernel_qmm_artifact_matches_rust_reference() {
+    let Some(dir) = artifacts_dir() else { return };
+    let client = xla::PjRtClient::cpu().unwrap();
+    let proto =
+        xla::HloModuleProto::from_text_file(&format!("{dir}/kernel_qmm.hlo.txt")).unwrap();
+    let exe = client.compile(&xla::XlaComputation::from_proto(&proto)).unwrap();
+
+    let (m, k, n) = (32usize, 64usize, 16usize);
+    let mut rng = soniq::util::rng::Rng::new(7);
+    let x: Vec<f32> = (0..m * k).map(|_| rng.range(-3.0, 3.0)).collect();
+    let prec: Vec<u8> = (0..k).map(|_| *rng.choice(&[1u8, 2, 4])).collect();
+    let step: Vec<f32> = prec.iter().map(|&p| quant::step_for(p)).collect();
+    let qmax: Vec<f32> = prec.iter().map(|&p| quant::qmax_for(p)).collect();
+    let wq: Vec<f32> = (0..k * n)
+        .map(|i| quant::quantize(rng.range(-2.0, 2.0), prec[i / n]))
+        .collect();
+
+    let lx = xla::Literal::vec1(&x).reshape(&[m as i64, k as i64]).unwrap();
+    let lw = xla::Literal::vec1(&wq).reshape(&[k as i64, n as i64]).unwrap();
+    let ls = xla::Literal::vec1(&step);
+    let lq = xla::Literal::vec1(&qmax);
+    let out = exe.execute::<xla::Literal>(&[lx, lw, ls, lq]).unwrap()[0][0]
+        .to_literal_sync()
+        .unwrap();
+    let got = out.to_tuple1().unwrap().to_vec::<f32>().unwrap();
+
+    // rust reference: quantize activations per channel, exact dot
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = 0f64;
+            for c in 0..k {
+                let xq = quant::quantize(x[i * k + c], prec[c]);
+                acc += (xq as f64) * (wq[c * n + j] as f64);
+            }
+            assert_eq!(got[i * n + j], acc as f32, "({i},{j})");
+        }
+    }
+}
+
+#[test]
+fn tinynet_training_steps_run_and_learn() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::load(&dir, "tinynet", Some(&["fp32_step", "eval_fp32"])).unwrap();
+    let dataset = Dataset::new(rt.meta.image, rt.meta.num_classes, 0);
+    let mut tr = Trainer::new(&rt, &dataset).unwrap();
+    let (first_loss, _) = tr.fp32_step(0, 0.05).unwrap();
+    assert!(first_loss.is_finite() && first_loss > 0.0);
+    for i in 1..30 {
+        tr.fp32_step(i, 0.05).unwrap();
+    }
+    let last = tr.history.last().unwrap().loss;
+    assert!(last < first_loss, "loss should decrease: {first_loss} -> {last}");
+    let acc = tr.eval(None, 2).unwrap();
+    assert!((0.0..=1.0).contains(&acc));
+    assert!(acc > 0.15, "fp32 accuracy after 30 steps should beat chance: {acc}");
+}
+
+#[test]
+fn tinynet_phase1_phase2_roundtrip() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt =
+        Runtime::load(&dir, "tinynet", Some(&["phase1_step", "phase2_step", "eval_quant"]))
+            .unwrap();
+    let dataset = Dataset::new(rt.meta.image, rt.meta.num_classes, 0);
+    let mut tr = Trainer::new(&rt, &dataset).unwrap();
+    for i in 0..5 {
+        let (loss, _) = tr.phase1_step(i, 0.05, 1e-7).unwrap();
+        assert!(loss.is_finite());
+    }
+    // s vectors must exist for every layer and be finite
+    let s = tr.state.s_vectors();
+    for l in &rt.meta.layers {
+        let v = &s[&l.name];
+        assert_eq!(v.len(), l.cin);
+        assert!(v.iter().all(|x| x.is_finite()));
+    }
+    let prec = uniform_prec(&rt.meta.layers, 4);
+    for i in 0..5 {
+        let (loss, _) = tr.phase2_step(5 + i, &prec, 0.05).unwrap();
+        assert!(loss.is_finite());
+    }
+    let acc = tr.eval(Some(&prec), 1).unwrap();
+    assert!((0.0..=1.0).contains(&acc));
+}
+
+/// The big cross-layer check: the rust SIMD simulator's functional output
+/// must track the JAX/Pallas eval artifact on the same trained weights.
+/// BN epilogues run in f32 on both sides with different op orders, so we
+/// compare logit closeness + prediction agreement rather than bit
+/// equality (the MAC datapaths themselves are proven bit-exact at the
+/// kernel level in python/tests and in the rust unit tests).
+#[test]
+fn simulator_tracks_pjrt_eval_on_tinynet_u4() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::load(&dir, "tinynet", Some(&["phase2_step", "eval_quant"])).unwrap();
+    let dataset = Dataset::new(rt.meta.image, rt.meta.num_classes, 0);
+    let mut tr = Trainer::new(&rt, &dataset).unwrap();
+    let prec = uniform_prec(&rt.meta.layers, 4);
+    for i in 0..20 {
+        tr.phase2_step(i, &prec, 0.05).unwrap();
+    }
+
+    // PJRT logits on an eval batch
+    let img = rt.meta.image;
+    let eb = rt.meta.eval_batch;
+    let b = dataset.batch(1, 0, eb);
+    let images = HostTensor::f32(vec![eb, img, img, 3], b.images.clone());
+    let pjrt_logits = tr.eval_logits(Some(&prec), &images).unwrap();
+
+    // simulator logits, image by image
+    let asg: HashMap<String, Assignment> = rt
+        .meta
+        .layers
+        .iter()
+        .map(|l| (l.name.clone(), Assignment::uniform(l.cin, 4)))
+        .collect();
+    let graph = netbuild::build_graph(
+        &rt.meta,
+        &tr.state,
+        &asg,
+        soniq::codegen::DataFormat::Smol,
+    )
+    .unwrap();
+    let classes = rt.meta.num_classes;
+    let mut agree = 0usize;
+    let n_check = 8usize;
+    for i in 0..n_check {
+        let data = b.images[i * img * img * 3..(i + 1) * img * img * 3].to_vec();
+        let input = Tensor { h: img, w: img, c: 3, data };
+        let net = run_network(&graph, &input);
+        let sim_row = &net.output.data;
+        let pjrt_row = &pjrt_logits[i * classes..(i + 1) * classes];
+        let max_diff = sim_row
+            .iter()
+            .zip(pjrt_row)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0f32, f32::max);
+        assert!(max_diff < 0.05, "image {i}: sim vs pjrt logit diff {max_diff}");
+        let argmax = |v: &[f32]| {
+            v.iter().enumerate().max_by(|a, b| a.1.partial_cmp(b.1).unwrap()).unwrap().0
+        };
+        if argmax(sim_row) == argmax(pjrt_row) {
+            agree += 1;
+        }
+    }
+    assert_eq!(agree, n_check, "sim and PJRT must agree on predictions");
+}

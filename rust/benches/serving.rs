@@ -1,0 +1,46 @@
+//! Serving bench: how much of an inference the prepared-model engine
+//! amortizes away (weight packing, codegen, buffer allocation), and how
+//! end-to-end server throughput scales with workers — the host-side
+//! counterpart of the Fig. 8 simulated-cycle results.
+
+use soniq::coordinator::{synthetic_inputs, synthetic_network, DesignPoint};
+use soniq::serve::{serve_all, BatchConfig, EngineMachine, PreparedModel, ServeConfig};
+use soniq::sim::network::run_network;
+use soniq::util::bench::{bench, section};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn main() {
+    for (model, dp) in [("tinynet", DesignPoint::Patterns(4)), ("tinydw", DesignPoint::Uniform(2))]
+    {
+        let net = synthetic_network(model, dp, 7).expect("synthetic net");
+        let inputs = synthetic_inputs(&net, 64, 11);
+
+        section(&format!("prepared-model amortization — {model} / {}", dp.label()));
+        let legacy = bench("legacy run_network (pack + codegen every call)", || {
+            run_network(&net.nodes, &inputs[0]).output.data[0]
+        });
+        let prepared = Arc::new(PreparedModel::prepare(&net.nodes));
+        let mut engine = EngineMachine::new(&prepared);
+        let amortized = bench("prepared engine.run (pack once, replay kernel)", || {
+            engine.run(&inputs[0]).output.data[0]
+        });
+        println!("amortization speedup: {:.2}x", legacy.mean_ns / amortized.mean_ns);
+
+        section(&format!("server throughput scaling — {model} / {}", dp.label()));
+        for workers in [1usize, 2, 4] {
+            let cfg = ServeConfig {
+                workers,
+                batch: BatchConfig { max_batch: 16, max_delay: Duration::from_millis(1) },
+            };
+            let t0 = Instant::now();
+            let done = serve_all(&prepared, &cfg, inputs.clone());
+            let wall = t0.elapsed();
+            println!(
+                "  {workers} worker(s): {} requests in {wall:.2?} -> {:.1} req/s",
+                done.len(),
+                done.len() as f64 / wall.as_secs_f64().max(1e-9)
+            );
+        }
+    }
+}

@@ -161,4 +161,56 @@ mod tests {
             assert_eq!(vals[ch], want, "ch{ch}");
         }
     }
+
+    /// Guards the serve engine's cache-once-reuse-forever contract: for a
+    /// fixed plan, packing must be a pure function of its inputs (and of
+    /// the plan *value*, not its identity).
+    #[test]
+    fn packing_is_deterministic_for_a_fixed_plan() {
+        use crate::simd::patterns::design_subset;
+        use crate::smol::pattern_match::pattern_match;
+        let cin = 40usize;
+        let s: Vec<f32> = (0..cin).map(|i| ((i * 37 % 17) as f32) - 6.0).collect();
+        let plan = LayerPlan {
+            name: "det".into(),
+            kind: LayerKind::Dense,
+            cin,
+            cout: 3,
+            kh: 3,
+            kw: 3,
+            stride: 1,
+            hin: 5,
+            win: 5,
+            asg: pattern_match(&s, &design_subset(8)),
+            fmt: DataFormat::Smol,
+        };
+        let w: Vec<f32> = (0..3 * 3 * cin * 3).map(|i| (i as f32 * 0.731).sin()).collect();
+        let x: Vec<f32> = (0..5 * 5 * cin).map(|i| (i as f32 * 0.413).cos() * 1.7).collect();
+        assert_eq!(pack_weights(&plan, &w), pack_weights(&plan, &w));
+        assert_eq!(pack_activations(&plan, &x), pack_activations(&plan, &x));
+        assert_eq!(pack_masks(&plan), pack_masks(&plan));
+        let plan2 = plan.clone();
+        assert_eq!(pack_weights(&plan, &w), pack_weights(&plan2, &w));
+        assert_eq!(pack_activations(&plan, &x), pack_activations(&plan2, &x));
+        assert_eq!(pack_masks(&plan), pack_masks(&plan2));
+
+        // depthwise layout too
+        let sdw: Vec<f32> = (0..24).map(|i| ((i * 11 % 7) as f32) - 2.0).collect();
+        let dw = LayerPlan {
+            name: "det_dw".into(),
+            kind: LayerKind::Depthwise,
+            cin: 24,
+            cout: 24,
+            kh: 3,
+            kw: 3,
+            stride: 1,
+            hin: 4,
+            win: 4,
+            asg: pattern_match(&sdw, &design_subset(4)),
+            fmt: DataFormat::Smol,
+        };
+        let wdw: Vec<f32> = (0..3 * 3 * 24).map(|i| (i as f32 * 0.517).sin()).collect();
+        assert_eq!(pack_weights(&dw, &wdw), pack_weights(&dw, &wdw));
+        assert_eq!(pack_masks(&dw), pack_masks(&dw));
+    }
 }

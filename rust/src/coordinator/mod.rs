@@ -321,6 +321,159 @@ pub fn simulate_paper_scale(
     (total, per_layer)
 }
 
+/// A synthetic, artifact-free network (serving benchmarks / tests).
+#[derive(Debug, Clone)]
+pub struct SyntheticNet {
+    pub nodes: Vec<crate::sim::network::Node>,
+    pub image: usize,
+    pub num_classes: usize,
+}
+
+/// Build a small deterministic network for a design point without any
+/// trained artifacts: weights/BN come from a seeded xorshift stream and
+/// P-point precision assignments run PatternMatch on synthetic
+/// per-channel sensitivities (DESIGN.md). Used by `soniq serve-bench`,
+/// the serving integration tests and `benches/serving.rs`, where the
+/// PJRT training pipeline is unavailable or unnecessary.
+///
+/// Models: `tinynet` (3 dense convs + GAP + FC, the netbuild topology)
+/// and `tinydw` (dense stem + depthwise + pointwise + GAP + FC, to
+/// exercise the two-cycle multiply path).
+pub fn synthetic_network(model: &str, dp: DesignPoint, seed: u64) -> Result<SyntheticNet> {
+    use crate::codegen::{LayerKind, LayerPlan};
+    use crate::sim::network::{ConvLayerCfg, Node, INPUT};
+    use crate::util::rng::Rng;
+    use anyhow::bail;
+
+    let fmt = dp.fmt();
+    let mut rng = Rng::new(0x5049_4e4f ^ seed);
+
+    let assign = |rng: &mut Rng, cin: usize| -> Assignment {
+        match dp {
+            DesignPoint::Fp32 | DesignPoint::Int8 => Assignment::uniform(cin, 4),
+            DesignPoint::Uniform(b) => Assignment::uniform(cin, b),
+            DesignPoint::Patterns(np) => {
+                let s: Vec<f32> = (0..cin).map(|_| rng.range(-3.0, 6.0)).collect();
+                pattern_match(&s, &design_subset(np))
+            }
+        }
+    };
+
+    #[allow(clippy::too_many_arguments)]
+    fn conv(
+        rng: &mut Rng,
+        asg: Assignment,
+        fmt: DataFormat,
+        name: &str,
+        kind: LayerKind,
+        cin: usize,
+        cout: usize,
+        k: usize,
+        stride: usize,
+        hw: usize,
+        bn: bool,
+        relu: bool,
+    ) -> ConvLayerCfg {
+        let nw = match kind {
+            LayerKind::Dense => k * k * cin * cout,
+            LayerKind::Depthwise => k * k * cin,
+        };
+        let weights: Vec<f32> = (0..nw).map(|_| rng.range(-1.2, 1.2)).collect();
+        let bn_ch = match kind {
+            LayerKind::Dense => cout,
+            LayerKind::Depthwise => cin,
+        };
+        let (bn_scale, bn_bias, bn_mean, bn_var) = if bn {
+            (
+                (0..bn_ch).map(|_| rng.range(0.6, 1.4)).collect(),
+                (0..bn_ch).map(|_| rng.range(-0.3, 0.3)).collect(),
+                (0..bn_ch).map(|_| rng.range(-0.5, 0.5)).collect(),
+                (0..bn_ch).map(|_| rng.range(0.4, 1.6)).collect(),
+            )
+        } else {
+            (vec![], vec![], vec![], vec![])
+        };
+        ConvLayerCfg {
+            plan: LayerPlan {
+                name: name.into(),
+                kind,
+                cin,
+                cout,
+                kh: k,
+                kw: k,
+                stride,
+                hin: hw,
+                win: hw,
+                asg,
+                fmt,
+            },
+            weights,
+            bn_scale,
+            bn_bias,
+            bn_mean,
+            bn_var,
+            relu,
+        }
+    }
+
+    let image = 8usize;
+    let num_classes = 10usize;
+    let mut nodes: Vec<Node> = Vec::new();
+    match model {
+        "tinynet" => {
+            let a = assign(&mut rng, 3);
+            let c1 = conv(&mut rng, a, fmt, "c1", LayerKind::Dense, 3, 16, 3, 1, 8, true, true);
+            nodes.push(Node::Conv { cfg: Box::new(c1), input: INPUT });
+            let a = assign(&mut rng, 16);
+            let c2 = conv(&mut rng, a, fmt, "c2", LayerKind::Dense, 16, 32, 3, 2, 8, true, true);
+            nodes.push(Node::Conv { cfg: Box::new(c2), input: 0 });
+            let a = assign(&mut rng, 32);
+            let c3 = conv(&mut rng, a, fmt, "c3", LayerKind::Dense, 32, 32, 3, 1, 4, true, true);
+            nodes.push(Node::Conv { cfg: Box::new(c3), input: 1 });
+            nodes.push(Node::Gap { x: 2 });
+            let a = assign(&mut rng, 32);
+            let fc = conv(
+                &mut rng, a, fmt, "fc", LayerKind::Dense, 32, num_classes, 1, 1, 1, false, false,
+            );
+            nodes.push(Node::Conv { cfg: Box::new(fc), input: 3 });
+        }
+        "tinydw" => {
+            let a = assign(&mut rng, 3);
+            let c1 = conv(&mut rng, a, fmt, "c1", LayerKind::Dense, 3, 24, 3, 1, 8, true, true);
+            nodes.push(Node::Conv { cfg: Box::new(c1), input: INPUT });
+            let a = assign(&mut rng, 24);
+            let dw = conv(
+                &mut rng, a, fmt, "dw", LayerKind::Depthwise, 24, 24, 3, 1, 8, true, true,
+            );
+            nodes.push(Node::Conv { cfg: Box::new(dw), input: 0 });
+            let a = assign(&mut rng, 24);
+            let pw = conv(&mut rng, a, fmt, "pw", LayerKind::Dense, 24, 32, 1, 1, 8, true, true);
+            nodes.push(Node::Conv { cfg: Box::new(pw), input: 1 });
+            nodes.push(Node::Gap { x: 2 });
+            let a = assign(&mut rng, 32);
+            let fc = conv(
+                &mut rng, a, fmt, "fc", LayerKind::Dense, 32, num_classes, 1, 1, 1, false, false,
+            );
+            nodes.push(Node::Conv { cfg: Box::new(fc), input: 3 });
+        }
+        other => bail!("no synthetic topology for model {other} (try tinynet or tinydw)"),
+    }
+    Ok(SyntheticNet { nodes, image, num_classes })
+}
+
+/// Deterministic request inputs matching a synthetic network's shape.
+pub fn synthetic_inputs(net: &SyntheticNet, n: usize, seed: u64) -> Vec<Tensor> {
+    use crate::util::rng::Rng;
+    let mut rng = Rng::new(seed.wrapping_mul(0x9e37_79b9).wrapping_add(1));
+    (0..n)
+        .map(|_| {
+            let data: Vec<f32> =
+                (0..net.image * net.image * 3).map(|_| rng.range(-2.0, 2.0)).collect();
+            Tensor { h: net.image, w: net.image, c: 3, data }
+        })
+        .collect()
+}
+
 /// Pretty-print a metrics table (paper Fig. 7/8 style rows).
 pub fn print_table(rows: &[Metrics], baseline: Option<&str>) {
     let base_cycles: HashMap<&str, u64> = rows

@@ -4,8 +4,10 @@
 //! ultra-low-precision SIMD architecture (bit-exact ALU + ISA), the
 //! inference code generator, the timing/energy simulator (gem5
 //! substitute), the hardware cost model, the SMOL pattern-selection
-//! optimizer, and the co-design coordinator that drives SASMOL training
-//! through AOT-compiled JAX/Pallas artifacts via PJRT.
+//! optimizer, the co-design coordinator that drives SASMOL training
+//! through AOT-compiled JAX/Pallas artifacts via PJRT, and the batched
+//! multi-threaded inference serving engine ([`serve`]) with prepared-
+//! model caching.
 //!
 //! Layer map (see DESIGN.md):
 //! - L3 (this crate): coordination, simulation, codegen, optimization.
@@ -17,6 +19,7 @@ pub mod coordinator;
 pub mod data;
 pub mod hw;
 pub mod runtime;
+pub mod serve;
 pub mod sim;
 pub mod simd;
 pub mod smol;

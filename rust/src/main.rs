@@ -1,18 +1,23 @@
 //! SONIQ leader binary: the co-design CLI.
 //!
 //! Subcommands:
-//!   train    — run one design point end to end (train -> eval -> sim)
-//!   explore  — sweep design points for one or more models (Fig. 7/8)
-//!   hw       — print hardware cost / timing reports (Table V, Sec. V-B)
-//!   patterns — print the 45 precision patterns (Table II) and subsets
+//!   train       — run one design point end to end (train -> eval -> sim)
+//!   explore     — sweep design points for one or more models (Fig. 7/8)
+//!   hw          — print hardware cost / timing reports (Table V, Sec. V-B)
+//!   patterns    — print the 45 precision patterns (Table II) and subsets
+//!   serve-bench — batched serving engine vs the legacy one-shot path
 //!
 //! Examples:
 //!   soniq train --model tinynet --design P4 --p1-steps 60 --p2-steps 60
 //!   soniq explore --models tinynet --designs FP32,U4,U2,P4
 //!   soniq hw
+//!   soniq serve-bench --model tinynet --design P4 --requests 1024 \
+//!         --workers 4 --max-batch 16
 
 use anyhow::{bail, Result};
-use soniq::coordinator::{print_table, run_design_point, DesignPoint, TrainCfg};
+use soniq::coordinator::{
+    print_table, run_design_point, synthetic_inputs, synthetic_network, DesignPoint, TrainCfg,
+};
 use soniq::hw::{gates, timing};
 use soniq::simd::patterns;
 use soniq::util::cli::Args;
@@ -114,8 +119,82 @@ fn main() -> Result<()> {
                 patterns::grouped_configurations()
             );
         }
+        Some("serve-bench") => {
+            use soniq::serve::{self, BatchConfig, ServeConfig};
+            use soniq::sim::network::run_network;
+            use std::time::{Duration, Instant};
+
+            let model = args.get_or("model", "tinynet");
+            let design = parse_design(&args.get_or("design", "P4"))?;
+            let n_requests = args.get_usize("requests", 1024).max(1);
+            let workers = args.get_usize("workers", 4).max(1);
+            let max_batch = args.get_usize("max-batch", 16).max(1);
+            let max_delay_ms = args.get_usize("max-delay-ms", 2);
+            let seed = args.get_usize("seed", 0) as u64;
+            // the legacy loop re-packs weights + re-runs codegen per call;
+            // cap it separately so huge request counts stay benchable
+            let legacy_n = args
+                .get_usize("legacy-requests", n_requests.min(256))
+                .clamp(1, n_requests);
+
+            let net = synthetic_network(&model, design, seed)?;
+            let inputs = synthetic_inputs(&net, n_requests, seed + 1);
+
+            println!("== soniq serve-bench — {model} / {} ==", design.label());
+            println!("legacy one-shot path ({legacy_n} requests, pack + codegen every call):");
+            let t0 = Instant::now();
+            let mut legacy_out = Vec::with_capacity(legacy_n);
+            for x in inputs.iter().take(legacy_n) {
+                legacy_out.push(run_network(&net.nodes, x).output);
+            }
+            let legacy_wall = t0.elapsed();
+            let legacy_rps = legacy_n as f64 / legacy_wall.as_secs_f64().max(1e-9);
+            println!("  {legacy_n} requests in {legacy_wall:.2?}  ->  {legacy_rps:.1} req/s");
+
+            let registry = serve::ModelRegistry::new();
+            let key = serve::model_key(&model, &design.label());
+            let t1 = Instant::now();
+            let prepared = registry.get_or_prepare(&key, || net.nodes.clone());
+            println!(
+                "prepared model `{key}` in {:.2?} ({} layers; registry caches it for reuse)",
+                t1.elapsed(),
+                prepared.num_layers()
+            );
+
+            let cfg = ServeConfig {
+                workers,
+                batch: BatchConfig {
+                    max_batch,
+                    max_delay: Duration::from_millis(max_delay_ms as u64),
+                },
+            };
+            println!(
+                "serving engine ({workers} workers, max batch {max_batch}, \
+                 deadline {max_delay_ms} ms):"
+            );
+            let t2 = Instant::now();
+            let completions = serve::serve_all(&prepared, &cfg, inputs.clone());
+            let report = serve::summarize(&completions, t2.elapsed());
+            report.print();
+
+            let bitexact = completions
+                .iter()
+                .take(legacy_n)
+                .all(|c| c.output.data == legacy_out[c.id as usize].data);
+            println!("  outputs bit-identical to legacy path: {bitexact}");
+            println!(
+                "  serving throughput vs legacy: {:.2}x",
+                report.throughput_rps / legacy_rps
+            );
+            if args.has_flag("json") {
+                println!("{}", report.to_json().to_string());
+            }
+        }
         _ => {
-            eprintln!("usage: soniq <train|explore|hw|patterns> [--model M] [--design D] [--artifacts DIR]");
+            eprintln!(
+                "usage: soniq <train|explore|hw|patterns|serve-bench> \
+                 [--model M] [--design D] [--artifacts DIR]"
+            );
             eprintln!("       see README.md for the full CLI");
         }
     }

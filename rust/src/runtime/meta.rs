@@ -145,7 +145,12 @@ impl ModelMeta {
             .map(|t| {
                 Ok(InitTensor {
                     name: t.get("name")?.as_str()?.to_string(),
-                    shape: t.get("shape")?.as_arr()?.iter().map(|d| d.as_usize().unwrap()).collect(),
+                    shape: t
+                        .get("shape")?
+                        .as_arr()?
+                        .iter()
+                        .map(|d| d.as_usize().unwrap())
+                        .collect(),
                     offset: t.get("offset")?.as_usize()?,
                 })
             })

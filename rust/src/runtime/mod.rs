@@ -3,6 +3,12 @@
 //! Python never runs here — the rust binary is self-contained once
 //! `make artifacts` has been run.
 //!
+//! The PJRT executor needs the external `xla` bindings and is gated
+//! behind the `pjrt` cargo feature. Without it, artifact metadata and
+//! state loading still work (they feed the simulator/serving paths), but
+//! `Runtime::execute` reports that training/eval support is not compiled
+//! in.
+//!
 //! Interchange contract (see aot.py): each model ships
 //! - `<model>_<step>.hlo.txt` — HLO text (xla_extension 0.5.1 rejects
 //!   jax>=0.5 serialized protos; the text parser reassigns ids),
@@ -23,11 +29,13 @@ pub use state::{HostTensor, StateStore};
 /// A compiled, ready-to-execute step (train/eval) of one model.
 pub struct Step {
     pub meta: StepMeta,
+    #[cfg(feature = "pjrt")]
     exe: xla::PjRtLoadedExecutable,
 }
 
 /// The PJRT runtime: one CPU client + the compiled steps of one model.
 pub struct Runtime {
+    #[cfg(feature = "pjrt")]
     client: xla::PjRtClient,
     dir: PathBuf,
     pub meta: ModelMeta,
@@ -36,14 +44,23 @@ pub struct Runtime {
 
 impl Runtime {
     /// Load a model's artifacts from `dir` and eagerly compile the listed
-    /// steps (pass `None` to compile all of them).
+    /// steps (pass `None` to compile all of them). Without the `pjrt`
+    /// feature only the metadata is loaded; steps are registered but not
+    /// executable.
     pub fn load(dir: impl AsRef<Path>, model: &str, steps: Option<&[&str]>) -> Result<Runtime> {
         let dir = dir.as_ref().to_path_buf();
         let meta_text = std::fs::read_to_string(dir.join(format!("{model}.meta.json")))
             .with_context(|| format!("reading {model}.meta.json (run `make artifacts`)"))?;
         let meta = ModelMeta::parse(&meta_text)?;
+        #[cfg(feature = "pjrt")]
         let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt: {e:?}"))?;
-        let mut rt = Runtime { client, dir, meta, steps: HashMap::new() };
+        let mut rt = Runtime {
+            #[cfg(feature = "pjrt")]
+            client,
+            dir,
+            meta,
+            steps: HashMap::new(),
+        };
         let names: Vec<String> = match steps {
             Some(list) => list.iter().map(|s| s.to_string()).collect(),
             None => rt.meta.steps.keys().cloned().collect(),
@@ -59,6 +76,7 @@ impl Runtime {
         &self.dir
     }
 
+    #[cfg(feature = "pjrt")]
     fn compile_step(&mut self, name: &str) -> Result<()> {
         let smeta = self
             .meta
@@ -77,6 +95,20 @@ impl Runtime {
         Ok(())
     }
 
+    /// Without PJRT: register the step so its metadata (input/output
+    /// layouts) is queryable, but leave it non-executable.
+    #[cfg(not(feature = "pjrt"))]
+    fn compile_step(&mut self, name: &str) -> Result<()> {
+        let smeta = self
+            .meta
+            .steps
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown step {name}"))?
+            .clone();
+        self.steps.insert(name.to_string(), Step { meta: smeta });
+        Ok(())
+    }
+
     pub fn step(&self, name: &str) -> Result<&Step> {
         self.steps.get(name).ok_or_else(|| anyhow!("step {name} not compiled"))
     }
@@ -84,6 +116,7 @@ impl Runtime {
     /// Execute a step. `resolve` supplies one [`HostTensor`] per input
     /// spec (called in HLO parameter order); returns the flattened
     /// outputs, one per output spec.
+    #[cfg(feature = "pjrt")]
     pub fn execute(
         &self,
         name: &str,
@@ -122,5 +155,19 @@ impl Runtime {
             .zip(&step.meta.outputs)
             .map(|(lit, spec)| HostTensor::from_literal(&lit, spec))
             .collect()
+    }
+
+    /// Stub executor for builds without the `pjrt` feature.
+    #[cfg(not(feature = "pjrt"))]
+    pub fn execute(
+        &self,
+        name: &str,
+        _resolve: impl FnMut(&TensorSpec) -> Result<HostTensor>,
+    ) -> Result<Vec<HostTensor>> {
+        let _ = self.step(name)?;
+        Err(anyhow!(
+            "cannot execute step {name}: this build does not include PJRT support \
+             (rebuild with `--features pjrt` and an xla crate in the dependency graph)"
+        ))
     }
 }

@@ -1,7 +1,9 @@
 //! Host-side tensors and the training-state store the coordinator threads
 //! through the PJRT step executions.
 
-use crate::runtime::meta::{Dtype, InitTensor, TensorSpec};
+use crate::runtime::meta::InitTensor;
+#[cfg(feature = "pjrt")]
+use crate::runtime::meta::{Dtype, TensorSpec};
 use anyhow::{anyhow, Result};
 use std::collections::HashMap;
 use std::path::Path;
@@ -48,6 +50,7 @@ impl HostTensor {
         Ok(self.as_f32()?[0])
     }
 
+    #[cfg(feature = "pjrt")]
     pub fn to_literal(&self) -> Result<xla::Literal> {
         let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
         let lit = match &self.data {
@@ -58,6 +61,7 @@ impl HostTensor {
         lit.reshape(&dims).map_err(|e| anyhow!("reshape: {e:?}"))
     }
 
+    #[cfg(feature = "pjrt")]
     pub fn from_literal(lit: &xla::Literal, spec: &TensorSpec) -> Result<HostTensor> {
         let data = match spec.dtype {
             Dtype::F32 => TensorData::F32(lit.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?),

@@ -1,0 +1,105 @@
+//! Dynamic request batching: a batch closes when it reaches
+//! `max_batch` requests (size trigger) or when its oldest request has
+//! waited `max_delay` (latency-deadline trigger), whichever comes first.
+//!
+//! The policy lives in [`DynamicBatcher`], a plain synchronous state
+//! machine (unit-testable without threads); the dispatcher thread in
+//! [`crate::serve::workers`] drives it from the submit channel.
+
+use crate::sim::network::Tensor;
+use std::time::{Duration, Instant};
+
+/// Batching policy knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchConfig {
+    /// close a batch as soon as it holds this many requests
+    pub max_batch: usize,
+    /// close a non-empty batch once its oldest request is this old
+    pub max_delay: Duration,
+}
+
+impl Default for BatchConfig {
+    fn default() -> Self {
+        BatchConfig { max_batch: 16, max_delay: Duration::from_millis(2) }
+    }
+}
+
+/// One queued inference request.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    pub input: Tensor,
+    /// when the request entered the queue (latency is measured from here)
+    pub enqueued: Instant,
+}
+
+/// A closed batch, ready for a worker.
+#[derive(Debug)]
+pub struct Batch {
+    pub requests: Vec<Request>,
+}
+
+/// The batch-close policy: accumulates requests, emits a [`Batch`] on
+/// the size trigger ([`push`](Self::push)) or the deadline trigger
+/// ([`poll_deadline`](Self::poll_deadline)).
+#[derive(Debug)]
+pub struct DynamicBatcher {
+    cfg: BatchConfig,
+    pending: Vec<Request>,
+}
+
+impl DynamicBatcher {
+    pub fn new(cfg: BatchConfig) -> DynamicBatcher {
+        // normalize rather than panic: a zero max_batch from a CLI flag
+        // degenerates to single-request batches
+        let cfg = BatchConfig { max_batch: cfg.max_batch.max(1), ..cfg };
+        DynamicBatcher { cfg, pending: Vec::with_capacity(cfg.max_batch) }
+    }
+
+    /// Requests currently waiting for a batch to close.
+    pub fn len(&self) -> usize {
+        self.pending.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pending.is_empty()
+    }
+
+    /// Enqueue one request; returns the closed batch if this push filled
+    /// it to `max_batch`.
+    pub fn push(&mut self, r: Request) -> Option<Batch> {
+        self.pending.push(r);
+        if self.pending.len() >= self.cfg.max_batch {
+            self.take()
+        } else {
+            None
+        }
+    }
+
+    /// The instant at which the current batch must close (oldest request
+    /// + `max_delay`); `None` while empty.
+    pub fn next_deadline(&self) -> Option<Instant> {
+        self.pending.first().map(|r| r.enqueued + self.cfg.max_delay)
+    }
+
+    /// Close the batch if its deadline has passed as of `now`.
+    pub fn poll_deadline(&mut self, now: Instant) -> Option<Batch> {
+        match self.next_deadline() {
+            Some(deadline) if now >= deadline => self.take(),
+            _ => None,
+        }
+    }
+
+    /// Close whatever is pending (shutdown path).
+    pub fn flush(&mut self) -> Option<Batch> {
+        self.take()
+    }
+
+    fn take(&mut self) -> Option<Batch> {
+        if self.pending.is_empty() {
+            None
+        } else {
+            Some(Batch { requests: std::mem::take(&mut self.pending) })
+        }
+    }
+}

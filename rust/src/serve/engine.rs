@@ -1,0 +1,491 @@
+//! Prepare-once execution engine (refactored out of `sim::network`).
+//!
+//! The legacy path re-quantized and re-packed every layer's weights, re-
+//! emitted the Algorithm-4 kernel and re-allocated machine buffers on
+//! *every* inference. Serving amortizes all of that: [`prepare_conv`]
+//! runs codegen + weight/mask packing exactly once per layer, and
+//! [`EngineMachine`] binds the prepared layers to per-worker machine
+//! buffers exactly once, so a request only pays for activation packing,
+//! kernel replay and the epilogue. Outputs are bit-identical to the
+//! legacy path (`sim::network::run_conv` / `run_network` are now thin
+//! wrappers over this module).
+
+use crate::codegen::{self, pack, LayerBufs, LayerKind, LayerPlan};
+use crate::sim::machine::{Machine, RunStats};
+use crate::sim::network::{ConvLayerCfg, LayerStat, NetResult, Node, Tensor, INPUT};
+use crate::simd::isa::{Addr, BufId, Instr};
+use crate::simd::patterns::Pattern;
+use crate::smol::quant;
+use std::sync::Arc;
+
+/// One conv/FC layer with everything per-request work does NOT need to
+/// recompute: the emitted kernel, SMOL-packed weights, tail masks, the
+/// pattern table and the epilogue parameters.
+#[derive(Debug, Clone)]
+pub struct PreparedConv {
+    pub plan: LayerPlan,
+    bn_scale: Vec<f32>,
+    bn_bias: Vec<f32>,
+    bn_mean: Vec<f32>,
+    bn_var: Vec<f32>,
+    relu: bool,
+    /// Algorithm-4 kernel emitted against the symbolic buffer ids
+    /// 0=input, 1=weights, 2=out, 3=masks (retargeted at bind time).
+    program: Vec<Instr>,
+    /// the layer's chunk patterns (machine table base 0, as emitted)
+    patterns: Vec<Pattern>,
+    packed_weights: Vec<u8>,
+    packed_masks: Vec<u8>,
+    act_bytes: usize,
+    out_bytes: usize,
+    out_elems: usize,
+}
+
+/// A prepared layer bound to concrete buffers of one [`Machine`]:
+/// weights + masks are written once; input/out act as reusable scratch.
+#[derive(Debug, Clone)]
+pub struct BoundConv {
+    bufs: LayerBufs,
+    program: Vec<Instr>,
+}
+
+/// Buffer sizing shared by the prepared and streaming paths:
+/// (packed-activation bytes, output elements, output-buffer bytes).
+fn layer_sizes(plan: &LayerPlan) -> (usize, usize, usize) {
+    let (hout, wout) = (plan.hout(), plan.wout());
+    let n_chunks = plan.chunks().len();
+    let act_bytes = plan.hin * plan.win * n_chunks * 16;
+    let out_elems = match plan.kind {
+        LayerKind::Dense => plan.cout * hout * wout,
+        LayerKind::Depthwise => plan.cin * hout * wout,
+    };
+    // baseline depthwise stores whole 16B chunk vectors per position,
+    // which can exceed cin*4 bytes when cin is not a multiple of the
+    // lane capacity — size the buffer for both layouts
+    let out_bytes = (out_elems * 4).max(hout * wout * n_chunks * 16);
+    (act_bytes, out_elems, out_bytes)
+}
+
+/// Run codegen + weight/mask packing for one layer (the prepare-once
+/// half of what `run_conv` used to do per call).
+pub fn prepare_conv(cfg: &ConvLayerCfg) -> PreparedConv {
+    let plan = cfg.plan.clone();
+    let (act_bytes, out_elems, out_bytes) = layer_sizes(&plan);
+
+    let packed_weights = pack::pack_weights(&plan, &cfg.weights);
+    let packed_masks = pack::pack_masks(&plan);
+
+    let mut patterns = Vec::new();
+    let base = codegen::register_patterns(&plan, &mut patterns);
+    let symbolic = LayerBufs {
+        input: BufId(0),
+        weights: BufId(1),
+        out: BufId(2),
+        masks: BufId(3),
+    };
+    let mut program = Vec::new();
+    codegen::emit_layer(&plan, &symbolic, base, &mut program);
+
+    PreparedConv {
+        plan,
+        bn_scale: cfg.bn_scale.clone(),
+        bn_bias: cfg.bn_bias.clone(),
+        bn_mean: cfg.bn_mean.clone(),
+        bn_var: cfg.bn_var.clone(),
+        relu: cfg.relu,
+        program,
+        patterns,
+        packed_weights,
+        packed_masks,
+        act_bytes,
+        out_bytes,
+        out_elems,
+    }
+}
+
+impl PreparedConv {
+    /// Allocate this layer's buffers on `m` (same order and sizes as the
+    /// legacy per-call path: input, weights, out, masks), write the
+    /// cached weights + masks once, and retarget the kernel to the
+    /// allocated buffer ids.
+    pub fn bind(&self, m: &mut Machine) -> BoundConv {
+        let bufs = LayerBufs {
+            input: m.alloc(self.act_bytes),
+            weights: m.alloc(self.packed_weights.len()),
+            out: m.alloc(self.out_bytes),
+            masks: m.alloc(self.packed_masks.len()),
+        };
+        m.write_bytes(bufs.weights, 0, &self.packed_weights);
+        m.write_bytes(bufs.masks, 0, &self.packed_masks);
+        let program = retarget(&self.program, &bufs);
+        BoundConv { bufs, program }
+    }
+}
+
+/// Rewrite the symbolic buffer ids of a prepared kernel to the buffers a
+/// machine actually allocated.
+fn retarget(prog: &[Instr], bufs: &LayerBufs) -> Vec<Instr> {
+    let map = |a: Addr| -> Addr {
+        let buf = match a.buf.0 {
+            0 => bufs.input,
+            1 => bufs.weights,
+            2 => bufs.out,
+            3 => bufs.masks,
+            _ => a.buf,
+        };
+        Addr { buf, off: a.off }
+    };
+    prog.iter()
+        .map(|i| match *i {
+            Instr::LdQ { dst, addr } => Instr::LdQ { dst, addr: map(addr) },
+            Instr::StQ { src, addr } => Instr::StQ { src, addr: map(addr) },
+            Instr::ReduceAcc { src, addr } => Instr::ReduceAcc { src, addr: map(addr) },
+            Instr::MulAcc { lo, hi, pat, addr, n_valid } => {
+                Instr::MulAcc { lo, hi, pat, addr: map(addr), n_valid }
+            }
+            other => other,
+        })
+        .collect()
+}
+
+/// Number of in-bounds taps for output position (h, w).
+pub(crate) fn valid_taps(plan: &LayerPlan, h: usize, w: usize) -> usize {
+    let (pt, pl) = (plan.pad_top(), plan.pad_left());
+    let mut n = 0;
+    for r in 0..plan.kh {
+        for s in 0..plan.kw {
+            let ih = h as isize * plan.stride as isize + r as isize - pt;
+            let iw = w as isize * plan.stride as isize + s as isize - pl;
+            if ih >= 0 && iw >= 0 && ih < plan.hin as isize && iw < plan.win as isize {
+                n += 1;
+            }
+        }
+    }
+    n
+}
+
+/// Per-request input staging, shared by both execution paths: pack the
+/// activations into the input buffer, zero the accumulator scratch and
+/// charge the quantize/rearrange/pack pass as streaming cache traffic.
+fn stage_input(m: &mut Machine, plan: &LayerPlan, bufs: &LayerBufs, x: &Tensor) {
+    assert_eq!(x.c, plan.cin, "{}: cin mismatch", plan.name);
+    assert_eq!((x.h, x.w), (plan.hin, plan.win), "{}: spatial mismatch", plan.name);
+    let act = pack::pack_activations(plan, &x.data);
+    m.write_bytes(bufs.input, 0, &act);
+    m.clear_buffer(bufs.out);
+    m.stream_touch(bufs.input, act.len(), true);
+    m.charge_bulk(x.data.len() as u64, 0);
+}
+
+/// Epilogue shared by both execution paths: accumulators -> f32 with
+/// tail-bias correction, BN, ReLU, output traffic charge; returns the
+/// layer output and this layer's run statistics.
+#[allow(clippy::too_many_arguments)]
+fn finish_layer(
+    m: &mut Machine,
+    plan: &LayerPlan,
+    bn: (&[f32], &[f32], &[f32], &[f32]),
+    relu: bool,
+    bufs: &LayerBufs,
+    out_elems: usize,
+) -> (Tensor, RunStats) {
+    let (bn_scale, bn_bias, bn_mean, bn_var) = bn;
+    let (hout, wout) = (plan.hout(), plan.wout());
+    let bias = plan.tail_bias();
+    let mut out = match plan.kind {
+        LayerKind::Dense => {
+            let mut t = Tensor::zeros(hout, wout, plan.cout);
+            for k in 0..plan.cout {
+                for h in 0..hout {
+                    for w in 0..wout {
+                        let acc = m.read_i32(bufs.out, ((k * hout + h) * wout + w) * 4);
+                        let taps = valid_taps(plan, h, w) as i64;
+                        let v = (acc as i64 - bias * taps) as f32 / quant::ACC_SCALE;
+                        t.data[(h * wout + w) * plan.cout + k] = v;
+                    }
+                }
+            }
+            t
+        }
+        LayerKind::Depthwise => {
+            // depthwise MulAcc wrote in *packed* channel order; un-permute
+            let mut t = Tensor::zeros(hout, wout, plan.cin);
+            for h in 0..hout {
+                for w in 0..wout {
+                    for (pos, &ch) in plan.asg.order.iter().enumerate() {
+                        let acc = m.read_i32(bufs.out, ((h * wout + w) * plan.cin + pos) * 4);
+                        t.data[(h * wout + w) * plan.cin + ch as usize] =
+                            acc as f32 / quant::ACC_SCALE;
+                    }
+                }
+            }
+            t
+        }
+    };
+
+    // BN + ReLU epilogue (f32, vectorized in hardware; bulk-costed)
+    if !bn_scale.is_empty() {
+        let cch = out.c;
+        for i in 0..out.data.len() {
+            let k = i % cch;
+            let inv = 1.0 / (bn_var[k] + 1e-5).sqrt();
+            out.data[i] = (out.data[i] - bn_mean[k]) * inv * bn_scale[k] + bn_bias[k];
+        }
+    }
+    if relu {
+        for v in out.data.iter_mut() {
+            *v = v.max(0.0);
+        }
+    }
+    m.stream_touch(bufs.out, out_elems * 4, false);
+    m.charge_bulk(out.data.len() as u64, (out.data.len() * 4) as u64);
+
+    (out, m.take_stats())
+}
+
+/// Execute one bound layer: pack + write the activations, replay the
+/// cached kernel, run the epilogue. This is the per-request half of the
+/// legacy `run_conv` — weight packing and codegen are gone from it.
+pub fn run_bound(
+    m: &mut Machine,
+    prep: &PreparedConv,
+    bound: &BoundConv,
+    x: &Tensor,
+) -> (Tensor, RunStats) {
+    let plan = &prep.plan;
+    stage_input(m, plan, &bound.bufs, x);
+
+    // replay the cached Algorithm-4 kernel under the layer's patterns
+    m.patterns.clear();
+    m.patterns.extend_from_slice(&prep.patterns);
+    m.run(&bound.program);
+
+    let bn = (
+        prep.bn_scale.as_slice(),
+        prep.bn_bias.as_slice(),
+        prep.bn_mean.as_slice(),
+        prep.bn_var.as_slice(),
+    );
+    finish_layer(m, plan, bn, prep.relu, &bound.bufs, prep.out_elems)
+}
+
+/// One-shot streaming execution (the legacy `run_conv` shape): pack
+/// weights, allocate fresh buffers and emit the kernel *directly into
+/// the executing machine*, so no instruction stream is ever
+/// materialized. Keeps single-call memory O(1) for paper-scale layers;
+/// repeated inference should use [`prepare_conv`] + [`run_bound`]
+/// instead. Staging and epilogue are shared with the prepared path, so
+/// outputs are bit-identical between the two.
+pub fn run_conv_streaming(m: &mut Machine, cfg: &ConvLayerCfg, x: &Tensor) -> (Tensor, RunStats) {
+    let plan = &cfg.plan;
+    let (act_bytes, out_elems, out_bytes) = layer_sizes(plan);
+    let wts = pack::pack_weights(plan, &cfg.weights);
+    let msk = pack::pack_masks(plan);
+    let bufs = LayerBufs {
+        input: m.alloc(act_bytes),
+        weights: m.alloc(wts.len()),
+        out: m.alloc(out_bytes),
+        masks: m.alloc(msk.len()),
+    };
+    m.write_bytes(bufs.weights, 0, &wts);
+    m.write_bytes(bufs.masks, 0, &msk);
+    stage_input(m, plan, &bufs, x);
+
+    // generate + execute the Algorithm-4 kernel (Machine is the Sink)
+    m.patterns.clear();
+    let base = codegen::register_patterns(plan, &mut m.patterns);
+    codegen::emit_layer(plan, &bufs, base, m);
+
+    let bn = (
+        cfg.bn_scale.as_slice(),
+        cfg.bn_bias.as_slice(),
+        cfg.bn_mean.as_slice(),
+        cfg.bn_var.as_slice(),
+    );
+    finish_layer(m, plan, bn, cfg.relu, &bufs, out_elems)
+}
+
+/// A prepared network node (conv layers carry their prepared form).
+#[derive(Debug, Clone)]
+pub enum PreparedNode {
+    Conv { prep: PreparedConv, input: usize },
+    Add { a: usize, b: usize, relu: bool },
+    ConcatC { a: usize, b: usize },
+    SliceC { x: usize, from: usize, to: usize },
+    ShuffleC { x: usize, groups: usize },
+    Gap { x: usize },
+}
+
+/// A whole network prepared once: codegen plans, packed weights and mask
+/// tables cached per layer. Shareable across worker threads via `Arc`.
+#[derive(Debug, Clone)]
+pub struct PreparedModel {
+    pub nodes: Vec<PreparedNode>,
+}
+
+impl PreparedModel {
+    /// Prepare every conv/FC layer of a graph exactly once.
+    pub fn prepare(nodes: &[Node]) -> PreparedModel {
+        let nodes = nodes
+            .iter()
+            .map(|n| match n {
+                Node::Conv { cfg, input } => {
+                    PreparedNode::Conv { prep: prepare_conv(cfg), input: *input }
+                }
+                Node::Add { a, b, relu } => PreparedNode::Add { a: *a, b: *b, relu: *relu },
+                Node::ConcatC { a, b } => PreparedNode::ConcatC { a: *a, b: *b },
+                Node::SliceC { x, from, to } => {
+                    PreparedNode::SliceC { x: *x, from: *from, to: *to }
+                }
+                Node::ShuffleC { x, groups } => {
+                    PreparedNode::ShuffleC { x: *x, groups: *groups }
+                }
+                Node::Gap { x } => PreparedNode::Gap { x: *x },
+            })
+            .collect();
+        PreparedModel { nodes }
+    }
+
+    /// Number of prepared conv/FC layers.
+    pub fn num_layers(&self) -> usize {
+        self.nodes
+            .iter()
+            .filter(|n| matches!(n, PreparedNode::Conv { .. }))
+            .count()
+    }
+}
+
+/// One worker's execution context: a simulated machine with every layer's
+/// weights resident, reused across all requests the worker serves.
+pub struct EngineMachine {
+    model: Arc<PreparedModel>,
+    m: Machine,
+    bound: Vec<Option<BoundConv>>,
+}
+
+fn node_input<'a>(outputs: &'a [Tensor], input: &'a Tensor, id: usize) -> &'a Tensor {
+    if id == INPUT {
+        input
+    } else {
+        &outputs[id]
+    }
+}
+
+impl EngineMachine {
+    /// Bind a prepared model to a fresh simulated machine (one per
+    /// worker): buffers allocated and weights/masks written exactly once.
+    pub fn new(model: &Arc<PreparedModel>) -> EngineMachine {
+        let mut m = Machine::new();
+        let bound: Vec<Option<BoundConv>> = model
+            .nodes
+            .iter()
+            .map(|n| match n {
+                PreparedNode::Conv { prep, .. } => Some(prep.bind(&mut m)),
+                _ => None,
+            })
+            .collect();
+        EngineMachine { model: Arc::clone(model), m, bound }
+    }
+
+    /// Run one inference over the prepared graph. Functionally identical
+    /// to the legacy `run_network`, minus the per-call weight packing,
+    /// codegen and buffer allocation.
+    pub fn run(&mut self, input: &Tensor) -> NetResult {
+        let model = Arc::clone(&self.model);
+        let mut outputs: Vec<Tensor> = Vec::with_capacity(model.nodes.len());
+        let mut layers = Vec::new();
+        let mut total = RunStats::default();
+        for (ni, node) in model.nodes.iter().enumerate() {
+            let out = match node {
+                PreparedNode::Conv { prep, input: id } => {
+                    let x = node_input(&outputs, input, *id);
+                    let bound = self.bound[ni].as_ref().expect("conv layer bound");
+                    let (t, stats) = run_bound(&mut self.m, prep, bound, x);
+                    total.merge(&stats);
+                    layers.push(LayerStat { name: prep.plan.name.clone(), stats });
+                    t
+                }
+                PreparedNode::Add { a, b, relu } => {
+                    let ta = node_input(&outputs, input, *a);
+                    let tb = node_input(&outputs, input, *b);
+                    assert_eq!(ta.data.len(), tb.data.len());
+                    let mut t = ta.clone();
+                    for (v, w) in t.data.iter_mut().zip(&tb.data) {
+                        *v += w;
+                        if *relu {
+                            *v = v.max(0.0);
+                        }
+                    }
+                    let bytes = (t.data.len() * 8) as u64;
+                    total.add_bulk(t.data.len() as u64, bytes, &self.m.energy_cfg);
+                    t
+                }
+                PreparedNode::ConcatC { a, b } => {
+                    let ta = node_input(&outputs, input, *a);
+                    let tb = node_input(&outputs, input, *b);
+                    assert_eq!((ta.h, ta.w), (tb.h, tb.w));
+                    let mut t = Tensor::zeros(ta.h, ta.w, ta.c + tb.c);
+                    for h in 0..ta.h {
+                        for w in 0..ta.w {
+                            for c in 0..ta.c {
+                                t.data[(h * t.w + w) * t.c + c] = ta.at(h, w, c);
+                            }
+                            for c in 0..tb.c {
+                                t.data[(h * t.w + w) * t.c + ta.c + c] = tb.at(h, w, c);
+                            }
+                        }
+                    }
+                    t
+                }
+                PreparedNode::SliceC { x, from, to } => {
+                    let tx = node_input(&outputs, input, *x);
+                    let mut t = Tensor::zeros(tx.h, tx.w, to - from);
+                    for h in 0..tx.h {
+                        for w in 0..tx.w {
+                            for c in *from..*to {
+                                t.data[(h * t.w + w) * t.c + (c - from)] = tx.at(h, w, c);
+                            }
+                        }
+                    }
+                    t
+                }
+                PreparedNode::ShuffleC { x, groups } => {
+                    let tx = node_input(&outputs, input, *x);
+                    let g = *groups;
+                    let per = tx.c / g;
+                    let mut t = Tensor::zeros(tx.h, tx.w, tx.c);
+                    // NHWC shuffle: out[.., i*g + j] = in[.., j*per + i]
+                    for h in 0..tx.h {
+                        for w in 0..tx.w {
+                            for j in 0..g {
+                                for i in 0..per {
+                                    t.data[(h * t.w + w) * t.c + (i * g + j)] =
+                                        tx.at(h, w, j * per + i);
+                                }
+                            }
+                        }
+                    }
+                    t
+                }
+                PreparedNode::Gap { x } => {
+                    let tx = node_input(&outputs, input, *x);
+                    let mut t = Tensor::zeros(1, 1, tx.c);
+                    for c in 0..tx.c {
+                        let mut s = 0.0f32;
+                        for h in 0..tx.h {
+                            for w in 0..tx.w {
+                                s += tx.at(h, w, c);
+                            }
+                        }
+                        t.data[c] = s / (tx.h * tx.w) as f32;
+                    }
+                    let bytes = (tx.data.len() * 4) as u64;
+                    total.add_bulk(tx.data.len() as u64, bytes, &self.m.energy_cfg);
+                    t
+                }
+            };
+            outputs.push(out);
+        }
+        NetResult { output: outputs.pop().unwrap(), layers, total }
+    }
+}

@@ -1,0 +1,167 @@
+//! Serving metrics: host-side throughput and latency percentiles plus
+//! aggregated simulated-hardware counters (cycles / energy, per layer
+//! and total), serialized to a [`ServeReport`] JSON via `util::json`.
+
+use crate::serve::workers::Completion;
+use crate::sim::machine::RunStats;
+use crate::util::json::Json;
+use std::collections::{BTreeMap, HashMap, HashSet};
+use std::time::Duration;
+
+/// Aggregated simulated cost of one layer across all served requests.
+#[derive(Debug, Clone)]
+pub struct LayerAgg {
+    pub name: String,
+    pub cycles: u64,
+    pub energy_pj: f64,
+}
+
+/// The serving run summary.
+#[derive(Debug, Clone)]
+pub struct ServeReport {
+    pub requests: usize,
+    pub batches: usize,
+    pub mean_batch_size: f64,
+    pub wall: Duration,
+    /// host-side requests per second over the whole run
+    pub throughput_rps: f64,
+    pub mean_ms: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    /// simulated-hardware totals summed over all requests
+    pub sim: RunStats,
+    pub per_layer: Vec<LayerAgg>,
+}
+
+/// Percentile over an ascending-sorted slice by rounded linear index
+/// (`round(q * (n-1))`); `q` in [0,1]. NaN on an empty slice.
+pub fn percentile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return f64::NAN;
+    }
+    let idx = ((sorted.len() - 1) as f64 * q).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+/// Fold a run's completions into a [`ServeReport`].
+pub fn summarize(completions: &[Completion], wall: Duration) -> ServeReport {
+    let n = completions.len();
+    let mut lat_ms: Vec<f64> =
+        completions.iter().map(|c| c.latency.as_secs_f64() * 1e3).collect();
+    lat_ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean_ms = if n == 0 { f64::NAN } else { lat_ms.iter().sum::<f64>() / n as f64 };
+
+    let mut sim = RunStats::default();
+    let mut batch_ids: HashSet<u64> = HashSet::new();
+    let mut order: Vec<String> = Vec::new();
+    let mut agg: HashMap<String, (u64, f64)> = HashMap::new();
+    for c in completions {
+        sim.merge(&c.total);
+        batch_ids.insert(c.batch_id);
+        for l in &c.per_layer {
+            if !agg.contains_key(&l.name) {
+                order.push(l.name.clone());
+            }
+            let e = agg.entry(l.name.clone()).or_insert((0, 0.0));
+            e.0 += l.stats.cycles();
+            e.1 += l.stats.energy_pj;
+        }
+    }
+    let batches = batch_ids.len();
+    let per_layer = order
+        .into_iter()
+        .map(|name| {
+            let &(cycles, energy_pj) = &agg[&name];
+            LayerAgg { name, cycles, energy_pj }
+        })
+        .collect();
+
+    ServeReport {
+        requests: n,
+        batches,
+        mean_batch_size: if batches == 0 { 0.0 } else { n as f64 / batches as f64 },
+        wall,
+        throughput_rps: n as f64 / wall.as_secs_f64().max(1e-9),
+        mean_ms,
+        p50_ms: percentile(&lat_ms, 0.50),
+        p95_ms: percentile(&lat_ms, 0.95),
+        p99_ms: percentile(&lat_ms, 0.99),
+        sim,
+        per_layer,
+    }
+}
+
+/// NaN/inf (e.g. percentiles of an empty run) have no JSON encoding;
+/// emit null instead of an unparseable literal.
+fn num(v: f64) -> Json {
+    if v.is_finite() {
+        Json::Num(v)
+    } else {
+        Json::Null
+    }
+}
+
+impl ServeReport {
+    /// Serialize for dashboards / regression tracking.
+    pub fn to_json(&self) -> Json {
+        let mut o: BTreeMap<String, Json> = BTreeMap::new();
+        o.insert("requests".into(), num(self.requests as f64));
+        o.insert("batches".into(), num(self.batches as f64));
+        o.insert("mean_batch_size".into(), num(self.mean_batch_size));
+        o.insert("wall_ms".into(), num(self.wall.as_secs_f64() * 1e3));
+        o.insert("throughput_rps".into(), num(self.throughput_rps));
+        o.insert("latency_mean_ms".into(), num(self.mean_ms));
+        o.insert("latency_p50_ms".into(), num(self.p50_ms));
+        o.insert("latency_p95_ms".into(), num(self.p95_ms));
+        o.insert("latency_p99_ms".into(), num(self.p99_ms));
+        o.insert("sim_cycles".into(), num(self.sim.cycles() as f64));
+        o.insert("sim_energy_pj".into(), num(self.sim.energy_pj));
+        o.insert("sim_instrs".into(), num(self.sim.instrs as f64));
+        let layers: Vec<Json> = self
+            .per_layer
+            .iter()
+            .map(|l| {
+                let mut lo: BTreeMap<String, Json> = BTreeMap::new();
+                lo.insert("name".into(), Json::Str(l.name.clone()));
+                lo.insert("cycles".into(), num(l.cycles as f64));
+                lo.insert("energy_pj".into(), num(l.energy_pj));
+                Json::Obj(lo)
+            })
+            .collect();
+        o.insert("per_layer".into(), Json::Arr(layers));
+        Json::Obj(o)
+    }
+
+    /// Human-readable summary block.
+    pub fn print(&self) {
+        println!(
+            "  requests {:>6}   batches {:>5}   mean batch {:>5.1}   wall {:>8.1?}",
+            self.requests, self.batches, self.mean_batch_size, self.wall
+        );
+        println!(
+            "  throughput {:>9.1} req/s   latency mean {:.2} ms  p50 {:.2}  p95 {:.2}  p99 {:.2}",
+            self.throughput_rps, self.mean_ms, self.p50_ms, self.p95_ms, self.p99_ms
+        );
+        println!(
+            "  simulated: {} cycles, {:.1} uJ over {} instrs",
+            self.sim.cycles(),
+            self.sim.energy_pj / 1e6,
+            self.sim.instrs
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_rounded_linear_index() {
+        let v: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile(&v, 0.0), 1.0);
+        assert_eq!(percentile(&v, 1.0), 100.0);
+        assert_eq!(percentile(&v, 0.50), 51.0); // round(99*0.5)=50 -> v[50]
+        assert!(percentile(&[], 0.5).is_nan());
+    }
+}

@@ -1,0 +1,95 @@
+//! `soniq::serve` — the batched, multi-threaded inference serving engine.
+//!
+//! The deployability story of the paper (simple, fast mixed-precision
+//! kernels on commodity SIMD) only pays off when the quantize/pack/
+//! codegen work is amortized across requests. This subsystem prepares a
+//! model **once** — codegen plans, SMOL-packed weights, mask tables and
+//! scratch buffers cached per layer ([`engine`]) — and then serves
+//! request streams through a dynamic batcher ([`batcher`]: max-batch +
+//! latency-deadline close policy) feeding a pool of worker threads, one
+//! simulated SIMD machine per worker ([`workers`]). [`metrics`]
+//! aggregates host throughput / latency percentiles and the simulated
+//! per-layer cycle/energy totals into a JSON [`ServeReport`].
+//!
+//! Outputs are bit-identical to the legacy one-shot path; see DESIGN.md
+//! for the architecture and `soniq serve-bench` for the end-to-end
+//! throughput comparison.
+
+pub mod batcher;
+pub mod engine;
+pub mod metrics;
+pub mod workers;
+
+pub use batcher::{Batch, BatchConfig, DynamicBatcher, Request};
+pub use engine::{prepare_conv, EngineMachine, PreparedConv, PreparedModel};
+pub use metrics::{percentile, summarize, LayerAgg, ServeReport};
+pub use workers::{Completion, ServeConfig, Server};
+
+use crate::sim::network::{Node, Tensor};
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+/// Canonical registry key for a `{model, design point}` pair.
+pub fn model_key(model: &str, design: &str) -> String {
+    format!("{model}/{design}")
+}
+
+/// Process-wide cache of prepared models, keyed by
+/// [`model_key`]`(model, design)`: a model is prepared on first request
+/// and every later lookup reuses the cached plans + packed weights.
+#[derive(Default)]
+pub struct ModelRegistry {
+    inner: Mutex<HashMap<String, Arc<PreparedModel>>>,
+}
+
+impl ModelRegistry {
+    pub fn new() -> ModelRegistry {
+        ModelRegistry::default()
+    }
+
+    /// Look up `key`, preparing the model from `build()`'s graph on a
+    /// miss. Preparation runs outside the registry lock so cached
+    /// lookups never wait behind an unrelated expensive miss; if two
+    /// threads race the same cold key both may build, and the first
+    /// insert wins (later callers all share that one).
+    pub fn get_or_prepare(
+        &self,
+        key: &str,
+        build: impl FnOnce() -> Vec<Node>,
+    ) -> Arc<PreparedModel> {
+        if let Some(m) = self.inner.lock().unwrap().get(key) {
+            return Arc::clone(m);
+        }
+        let prepared = Arc::new(PreparedModel::prepare(&build()));
+        let mut guard = self.inner.lock().unwrap();
+        Arc::clone(guard.entry(key.to_string()).or_insert(prepared))
+    }
+
+    pub fn contains(&self, key: &str) -> bool {
+        self.inner.lock().unwrap().contains_key(key)
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Convenience driver: start a server, submit every input, drain and
+/// return all completions (sorted by request id).
+pub fn serve_all(
+    model: &Arc<PreparedModel>,
+    cfg: &ServeConfig,
+    inputs: Vec<Tensor>,
+) -> Vec<Completion> {
+    let mut server = Server::start(Arc::clone(model), cfg);
+    for x in inputs {
+        server.submit(x);
+    }
+    let mut done = server.shutdown();
+    done.sort_by_key(|c| c.id);
+    done
+}

@@ -1,0 +1,206 @@
+//! The serving worker pool: one dispatcher thread driving the
+//! [`DynamicBatcher`], N worker threads each owning a private
+//! [`EngineMachine`] (simulated SIMD machine with all prepared weights
+//! resident), and unbounded mpsc channels tying them together.
+//!
+//! Flow: `submit` -> submit channel -> dispatcher (batch close policy)
+//! -> batch channel (shared by workers) -> worker executes each request
+//! on its machine -> completion channel -> `shutdown` drains.
+
+use crate::serve::batcher::{Batch, BatchConfig, DynamicBatcher, Request};
+use crate::serve::engine::{EngineMachine, PreparedModel};
+use crate::sim::machine::RunStats;
+use crate::sim::network::{LayerStat, Tensor};
+use std::sync::mpsc::{self, RecvTimeoutError};
+use std::sync::{Arc, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+/// Worker-pool + batching configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct ServeConfig {
+    /// worker threads (each with its own simulated machine)
+    pub workers: usize,
+    pub batch: BatchConfig,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig { workers: 4, batch: BatchConfig::default() }
+    }
+}
+
+/// One finished request with its result and measurements.
+#[derive(Debug)]
+pub struct Completion {
+    pub id: u64,
+    /// index of the worker that executed it
+    pub worker: usize,
+    /// id of the batch it rode in (sequential close order)
+    pub batch_id: u64,
+    /// size of that batch
+    pub batch_size: usize,
+    /// enqueue-to-completion latency
+    pub latency: Duration,
+    pub output: Tensor,
+    /// simulated-hardware totals for this inference
+    pub total: RunStats,
+    pub per_layer: Vec<LayerStat>,
+}
+
+/// A running serving instance over one prepared model.
+pub struct Server {
+    submit: Option<mpsc::Sender<Request>>,
+    results: mpsc::Receiver<Completion>,
+    dispatcher: Option<thread::JoinHandle<()>>,
+    workers: Vec<thread::JoinHandle<()>>,
+    next_id: u64,
+}
+
+impl Server {
+    /// Spawn the dispatcher and worker threads. Each worker instantiates
+    /// its own machine from the shared prepared model (weights written
+    /// once per worker, then reused for every request it serves).
+    pub fn start(model: Arc<PreparedModel>, cfg: &ServeConfig) -> Server {
+        let (submit_tx, submit_rx) = mpsc::channel::<Request>();
+        let (batch_tx, batch_rx) = mpsc::channel::<(u64, Batch)>();
+        let (result_tx, result_rx) = mpsc::channel::<Completion>();
+        let batch_rx = Arc::new(Mutex::new(batch_rx));
+
+        let bcfg = cfg.batch;
+        let dispatcher = thread::spawn(move || {
+            let mut batcher = DynamicBatcher::new(bcfg);
+            let mut batch_id = 0u64;
+            loop {
+                let closed = match batcher.next_deadline() {
+                    // nothing pending: block until a request (or shutdown)
+                    // arrives instead of waking on a polling interval
+                    None => match submit_rx.recv() {
+                        Ok(req) => batcher.push(req),
+                        Err(_) => {
+                            if let Some(b) = batcher.flush() {
+                                let _ = batch_tx.send((batch_id, b));
+                            }
+                            break;
+                        }
+                    },
+                    // batch open: wait at most until its deadline; a push
+                    // that doesn't fill the batch still re-checks the
+                    // deadline so sustained arrivals can't starve it
+                    Some(deadline) => {
+                        let timeout = deadline.saturating_duration_since(Instant::now());
+                        match submit_rx.recv_timeout(timeout) {
+                            Ok(req) => batcher
+                                .push(req)
+                                .or_else(|| batcher.poll_deadline(Instant::now())),
+                            Err(RecvTimeoutError::Timeout) => {
+                                batcher.poll_deadline(Instant::now())
+                            }
+                            Err(RecvTimeoutError::Disconnected) => {
+                                if let Some(b) = batcher.flush() {
+                                    let _ = batch_tx.send((batch_id, b));
+                                }
+                                break;
+                            }
+                        }
+                    }
+                };
+                if let Some(b) = closed {
+                    if batch_tx.send((batch_id, b)).is_err() {
+                        break; // all workers gone
+                    }
+                    batch_id += 1;
+                }
+            }
+        });
+
+        let workers = (0..cfg.workers.max(1))
+            .map(|wi| {
+                let model = Arc::clone(&model);
+                let rx = Arc::clone(&batch_rx);
+                let tx = result_tx.clone();
+                thread::spawn(move || {
+                    let mut engine = EngineMachine::new(&model);
+                    loop {
+                        // holding the lock only for the dequeue; workers
+                        // execute batches concurrently
+                        let msg = rx.lock().unwrap().recv();
+                        let (batch_id, batch) = match msg {
+                            Ok(v) => v,
+                            Err(_) => break, // dispatcher done, queue drained
+                        };
+                        let batch_size = batch.requests.len();
+                        for req in batch.requests {
+                            let res = engine.run(&req.input);
+                            let done = Completion {
+                                id: req.id,
+                                worker: wi,
+                                batch_id,
+                                batch_size,
+                                latency: req.enqueued.elapsed(),
+                                output: res.output,
+                                total: res.total,
+                                per_layer: res.layers,
+                            };
+                            if tx.send(done).is_err() {
+                                return; // receiver dropped, stop serving
+                            }
+                        }
+                    }
+                })
+            })
+            .collect();
+        drop(result_tx); // workers hold the only senders
+
+        Server {
+            submit: Some(submit_tx),
+            results: result_rx,
+            dispatcher: Some(dispatcher),
+            workers,
+            next_id: 0,
+        }
+    }
+
+    /// Enqueue one request; returns its id (completions carry it back).
+    pub fn submit(&mut self, input: Tensor) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        let req = Request { id, input, enqueued: Instant::now() };
+        self.submit
+            .as_ref()
+            .expect("server already shut down")
+            .send(req)
+            .expect("dispatcher thread alive");
+        id
+    }
+
+    /// Completions that have already arrived (non-blocking).
+    pub fn drain_ready(&mut self) -> Vec<Completion> {
+        self.results.try_iter().collect()
+    }
+
+    /// Stop accepting requests, let the pipeline drain, join every
+    /// thread and return all remaining completions.
+    ///
+    /// Panics if any serving thread panicked (e.g. a request whose shape
+    /// does not match the model): silently returning fewer completions
+    /// than submissions would make the loss invisible to callers that
+    /// pair results to requests.
+    pub fn shutdown(mut self) -> Vec<Completion> {
+        drop(self.submit.take());
+        let mut panicked = 0usize;
+        if let Some(d) = self.dispatcher.take() {
+            panicked += d.join().is_err() as usize;
+        }
+        for w in self.workers.drain(..) {
+            panicked += w.join().is_err() as usize;
+        }
+        let done: Vec<Completion> = self.results.try_iter().collect();
+        assert!(
+            panicked == 0,
+            "{panicked} serving thread(s) panicked; only {} completions survived",
+            done.len()
+        );
+        done
+    }
+}

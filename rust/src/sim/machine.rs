@@ -129,6 +129,19 @@ impl Machine {
         self.buffers[buf.0 as usize].data[off..off + bytes.len()].copy_from_slice(bytes);
     }
 
+    /// Zero a buffer in place (reused accumulator scratch between runs;
+    /// functional only, no cache traffic — fresh allocations are zeroed
+    /// the same way).
+    pub fn clear_buffer(&mut self, buf: BufId) {
+        self.buffers[buf.0 as usize].data.fill(0);
+    }
+
+    /// Charge a bulk epilogue/packing pass against this machine's energy
+    /// model (avoids cloning the energy config at every call site).
+    pub fn charge_bulk(&mut self, n_elems: u64, bytes: u64) {
+        self.stats.add_bulk(n_elems, bytes, &self.energy_cfg);
+    }
+
     pub fn read_i32(&self, buf: BufId, off: usize) -> i32 {
         let d = &self.buffers[buf.0 as usize].data;
         i32::from_le_bytes([d[off], d[off + 1], d[off + 2], d[off + 3]])
@@ -358,7 +371,10 @@ mod tests {
         m.patterns.push(Pattern::uniform(1));
         let abuf = m.alloc(1 << 16);
         let prog: Vec<Instr> = (0..1000)
-            .map(|i| Instr::LdQ { dst: (i % 30) as u8, addr: Addr { buf: abuf, off: (i * 16) % 65536 } })
+            .map(|i| Instr::LdQ {
+                dst: (i % 30) as u8,
+                addr: Addr { buf: abuf, off: (i * 16) % 65536 },
+            })
             .collect();
         m.run(&prog);
         let c1 = m.stats.cycles();

@@ -5,13 +5,20 @@
 //!
 //! Between layers, tensors live as f32 HWC (the paper's 32-bit / 6
 //! fraction-bit fixed-point domain); at each conv/FC entry the driver
-//! quantizes + rearranges + packs to the layer's precision patterns (the
-//! cost of that pass is charged via streaming cache traffic), then the
+//! quantizes + rearranges + packs the *activations* to the layer's
+//! precision patterns (charged as streaming cache traffic), then the
 //! generated Algorithm-4 kernel runs on the machine.
+//!
+//! The execution engine itself lives in [`crate::serve::engine`]: models
+//! are prepared once (codegen + weight packing cached per layer) and
+//! replayed per request. The one-shot entry points here — [`run_conv`]
+//! and [`run_network`] — are thin wrappers that prepare and immediately
+//! execute, with outputs bit-identical to the prepared serving path.
 
-use crate::codegen::{self, pack, DataFormat, LayerBufs, LayerKind, LayerPlan};
+use crate::codegen::LayerPlan;
+use crate::serve::engine::{run_conv_streaming, EngineMachine, PreparedModel};
 use crate::sim::machine::{Machine, RunStats};
-use crate::smol::quant;
+use std::sync::Arc;
 
 /// A tensor in the inter-layer 32-bit fixed-point domain (f32-carried).
 #[derive(Debug, Clone)]
@@ -76,221 +83,33 @@ pub struct NetResult {
 }
 
 /// Run one conv/FC layer on the machine. Returns the epilogued output.
+///
+/// One-shot wrapper over the engine's streaming path: weights are packed
+/// and the kernel is emitted straight into the machine for this single
+/// call (O(1) memory even for paper-scale layers). Callers that run the
+/// same layer repeatedly should prepare once instead (see
+/// [`crate::serve::engine::prepare_conv`]).
 pub fn run_conv(m: &mut Machine, cfg: &ConvLayerCfg, x: &Tensor) -> (Tensor, RunStats) {
-    let plan = &cfg.plan;
-    assert_eq!(x.c, plan.cin, "{}: cin mismatch", plan.name);
-    assert_eq!((x.h, x.w), (plan.hin, plan.win), "{}: spatial mismatch", plan.name);
-    let (hout, wout) = (plan.hout(), plan.wout());
-
-    // pack inputs + weights + masks into fresh machine buffers
-    let act = pack::pack_activations(plan, &x.data);
-    let wts = pack::pack_weights(plan, &cfg.weights);
-    let msk = pack::pack_masks(plan);
-    let out_elems = match plan.kind {
-        LayerKind::Dense => plan.cout * hout * wout,
-        LayerKind::Depthwise => plan.cin * hout * wout,
-    };
-    // baseline depthwise stores whole 16B chunk vectors per position,
-    // which can exceed cin*4 bytes when cin is not a multiple of the
-    // lane capacity — size the buffer for both layouts
-    let out_bytes = (out_elems * 4).max(hout * wout * plan.chunks().len() * 16);
-    let bufs = LayerBufs {
-        input: m.alloc(act.len()),
-        weights: m.alloc(wts.len()),
-        out: m.alloc(out_bytes),
-        masks: m.alloc(msk.len()),
-    };
-    m.write_bytes(bufs.input, 0, &act);
-    m.write_bytes(bufs.weights, 0, &wts);
-    m.write_bytes(bufs.masks, 0, &msk);
-
-    // charge the quantize/rearrange/pack pass (reads raw f32, writes
-    // packed) as streaming traffic through the cache
-    m.stream_touch(bufs.input, act.len(), true);
-    m.stats.add_bulk((x.data.len()) as u64, 0, &m.energy_cfg.clone());
-
-    // generate + execute the Algorithm-4 kernel
-    m.patterns.clear();
-    let base = codegen::register_patterns(plan, &mut m.patterns);
-    codegen::emit_layer(plan, &bufs, base, m);
-
-    // epilogue: accumulators -> f32, tail-bias correction, BN, ReLU
-    let bias = plan.tail_bias();
-    let mut out = match plan.kind {
-        LayerKind::Dense => {
-            let mut t = Tensor::zeros(hout, wout, plan.cout);
-            for k in 0..plan.cout {
-                for h in 0..hout {
-                    for w in 0..wout {
-                        let acc = m.read_i32(bufs.out, ((k * hout + h) * wout + w) * 4);
-                        let taps = valid_taps(plan, h, w) as i64;
-                        let v = (acc as i64 - bias * taps) as f32 / quant::ACC_SCALE;
-                        t.data[(h * wout + w) * plan.cout + k] = v;
-                    }
-                }
-            }
-            t
-        }
-        LayerKind::Depthwise => {
-            // depthwise MulAcc wrote in *packed* channel order; un-permute
-            let mut t = Tensor::zeros(hout, wout, plan.cin);
-            for h in 0..hout {
-                for w in 0..wout {
-                    for (pos, &ch) in plan.asg.order.iter().enumerate() {
-                        let acc = m.read_i32(bufs.out, ((h * wout + w) * plan.cin + pos) * 4);
-                        t.data[(h * wout + w) * plan.cin + ch as usize] =
-                            acc as f32 / quant::ACC_SCALE;
-                    }
-                }
-            }
-            t
-        }
-    };
-
-    // BN + ReLU epilogue (f32, vectorized in hardware; bulk-costed)
-    if !cfg.bn_scale.is_empty() {
-        let cch = out.c;
-        for i in 0..out.data.len() {
-            let k = i % cch;
-            let inv = 1.0 / (cfg.bn_var[k] + 1e-5).sqrt();
-            out.data[i] = (out.data[i] - cfg.bn_mean[k]) * inv * cfg.bn_scale[k] + cfg.bn_bias[k];
-        }
-    }
-    if cfg.relu {
-        for v in out.data.iter_mut() {
-            *v = v.max(0.0);
-        }
-    }
-    m.stream_touch(bufs.out, out_elems * 4, false);
-    m.stats.add_bulk(out.data.len() as u64, (out.data.len() * 4) as u64, &m.energy_cfg.clone());
-
-    (out, m.take_stats())
-}
-
-/// Number of in-bounds taps for output position (h, w).
-fn valid_taps(plan: &LayerPlan, h: usize, w: usize) -> usize {
-    let (pt, pl) = (plan.pad_top(), plan.pad_left());
-    let mut n = 0;
-    for r in 0..plan.kh {
-        for s in 0..plan.kw {
-            let ih = h as isize * plan.stride as isize + r as isize - pt;
-            let iw = w as isize * plan.stride as isize + s as isize - pl;
-            if ih >= 0 && iw >= 0 && ih < plan.hin as isize && iw < plan.win as isize {
-                n += 1;
-            }
-        }
-    }
-    n
+    run_conv_streaming(m, cfg, x)
 }
 
 /// Execute a network graph on a fresh machine.
+///
+/// Thin wrapper over [`PreparedModel`]: prepares every layer, binds one
+/// machine and runs a single inference. For serving many requests, keep
+/// the prepared model (see [`crate::serve`]) — preparation is the
+/// expensive part and is fully reusable.
 pub fn run_network(nodes: &[Node], input: &Tensor) -> NetResult {
-    let mut m = Machine::new();
-    let mut outputs: Vec<Tensor> = Vec::with_capacity(nodes.len());
-    let mut layers = Vec::new();
-    let mut total = RunStats::default();
-    let get = |outputs: &Vec<Tensor>, id: usize| -> Tensor {
-        if id == INPUT {
-            input.clone()
-        } else {
-            outputs[id].clone()
-        }
-    };
-    for node in nodes {
-        let out = match node {
-            Node::Conv { cfg, input: id } => {
-                let x = get(&outputs, *id);
-                let (t, stats) = run_conv(&mut m, cfg, &x);
-                total.merge(&stats);
-                layers.push(LayerStat { name: cfg.plan.name.clone(), stats });
-                t
-            }
-            Node::Add { a, b, relu } => {
-                let ta = get(&outputs, *a);
-                let tb = get(&outputs, *b);
-                assert_eq!(ta.data.len(), tb.data.len());
-                let mut t = ta.clone();
-                for (v, w) in t.data.iter_mut().zip(&tb.data) {
-                    *v += w;
-                    if *relu {
-                        *v = v.max(0.0);
-                    }
-                }
-                total.add_bulk(t.data.len() as u64, (t.data.len() * 8) as u64, &m.energy_cfg);
-                t
-            }
-            Node::ConcatC { a, b } => {
-                let ta = get(&outputs, *a);
-                let tb = get(&outputs, *b);
-                assert_eq!((ta.h, ta.w), (tb.h, tb.w));
-                let mut t = Tensor::zeros(ta.h, ta.w, ta.c + tb.c);
-                for h in 0..ta.h {
-                    for w in 0..ta.w {
-                        for c in 0..ta.c {
-                            t.data[(h * t.w + w) * t.c + c] = ta.at(h, w, c);
-                        }
-                        for c in 0..tb.c {
-                            t.data[(h * t.w + w) * t.c + ta.c + c] = tb.at(h, w, c);
-                        }
-                    }
-                }
-                t
-            }
-            Node::SliceC { x, from, to } => {
-                let tx = get(&outputs, *x);
-                let mut t = Tensor::zeros(tx.h, tx.w, to - from);
-                for h in 0..tx.h {
-                    for w in 0..tx.w {
-                        for c in *from..*to {
-                            t.data[(h * t.w + w) * t.c + (c - from)] = tx.at(h, w, c);
-                        }
-                    }
-                }
-                t
-            }
-            Node::ShuffleC { x, groups } => {
-                let tx = get(&outputs, *x);
-                let g = *groups;
-                let per = tx.c / g;
-                let mut t = Tensor::zeros(tx.h, tx.w, tx.c);
-                // NHWC shuffle: out[.., i*g + j] = in[.., j*per + i]
-                for h in 0..tx.h {
-                    for w in 0..tx.w {
-                        for j in 0..g {
-                            for i in 0..per {
-                                t.data[(h * t.w + w) * t.c + (i * g + j)] =
-                                    tx.at(h, w, j * per + i);
-                            }
-                        }
-                    }
-                }
-                t
-            }
-            Node::Gap { x } => {
-                let tx = get(&outputs, *x);
-                let mut t = Tensor::zeros(1, 1, tx.c);
-                for c in 0..tx.c {
-                    let mut s = 0.0f32;
-                    for h in 0..tx.h {
-                        for w in 0..tx.w {
-                            s += tx.at(h, w, c);
-                        }
-                    }
-                    t.data[c] = s / (tx.h * tx.w) as f32;
-                }
-                total.add_bulk(tx.data.len() as u64, (tx.data.len() * 4) as u64, &m.energy_cfg);
-                t
-            }
-        };
-        outputs.push(out);
-    }
-    NetResult { output: outputs.pop().unwrap(), layers, total }
+    let model = Arc::new(PreparedModel::prepare(nodes));
+    EngineMachine::new(&model).run(input)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::codegen::{DataFormat, LayerKind};
     use crate::smol::pattern_match::Assignment;
+    use crate::smol::quant;
 
     /// Reference conv in plain f64 on quantized values (the oracle the
     /// packed-vector datapath must match exactly).
@@ -329,7 +148,14 @@ mod tests {
         t
     }
 
-    fn mk_cfg(cin: usize, cout: usize, k: usize, stride: usize, hw: usize, asg: Assignment) -> ConvLayerCfg {
+    fn mk_cfg(
+        cin: usize,
+        cout: usize,
+        k: usize,
+        stride: usize,
+        hw: usize,
+        asg: Assignment,
+    ) -> ConvLayerCfg {
         let mut w = vec![0f32; k * k * cin * cout];
         let mut st = 77u64;
         for v in w.iter_mut() {

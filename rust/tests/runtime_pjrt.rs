@@ -2,7 +2,10 @@
 //! train/eval steps, and cross-validate the rust SIMD simulator against
 //! the JAX/Pallas eval path end to end.
 //!
-//! Requires `make artifacts` (skipped with a message otherwise).
+//! Requires `make artifacts` (skipped with a message otherwise) and a
+//! build with the `pjrt` feature (the whole file is compiled out without
+//! it — the executor stub cannot run steps).
+#![cfg(feature = "pjrt")]
 
 use soniq::coordinator::netbuild;
 use soniq::data::Dataset;

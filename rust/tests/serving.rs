@@ -1,0 +1,206 @@
+//! Integration tests for the `serve` subsystem: (a) prepared-model
+//! outputs are bit-identical to the legacy one-shot `run_network` path,
+//! (b) the dynamic batcher closes on both the max-batch and the
+//! latency-deadline trigger, (c) concurrent workers produce
+//! deterministic per-request results — plus registry and report checks.
+
+use soniq::coordinator::{synthetic_inputs, synthetic_network, DesignPoint, SyntheticNet};
+use soniq::serve::{
+    model_key, serve_all, summarize, BatchConfig, DynamicBatcher, EngineMachine, ModelRegistry,
+    PreparedModel, Request, ServeConfig,
+};
+use soniq::sim::network::{run_network, Tensor};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn net_and_inputs(model: &str, dp: DesignPoint, n: usize) -> (SyntheticNet, Vec<Tensor>) {
+    let net = synthetic_network(model, dp, 3).unwrap();
+    let inputs = synthetic_inputs(&net, n, 5);
+    (net, inputs)
+}
+
+#[test]
+fn prepared_model_matches_legacy_bit_exact() {
+    for (model, dp) in [
+        ("tinynet", DesignPoint::Patterns(4)),
+        ("tinynet", DesignPoint::Uniform(2)),
+        ("tinydw", DesignPoint::Patterns(8)),
+    ] {
+        let (net, inputs) = net_and_inputs(model, dp, 4);
+        let prepared = Arc::new(PreparedModel::prepare(&net.nodes));
+        let mut engine = EngineMachine::new(&prepared);
+        for (i, x) in inputs.iter().enumerate() {
+            let legacy = run_network(&net.nodes, x);
+            let served = engine.run(x);
+            assert_eq!(
+                served.output.data,
+                legacy.output.data,
+                "{model}/{} request {i}",
+                dp.label()
+            );
+            assert!(served.output.data.iter().all(|v| v.is_finite()));
+            assert_eq!(served.layers.len(), legacy.layers.len());
+        }
+    }
+}
+
+#[test]
+fn streaming_and_prepared_paths_are_bit_identical_per_layer() {
+    // run_conv (streaming emission, O(1) memory) vs prepare/bind/replay:
+    // same staging + epilogue, same alloc order -> outputs AND stats
+    // must match exactly on fresh machines
+    use soniq::serve::engine::{prepare_conv, run_bound};
+    use soniq::sim::machine::Machine;
+    use soniq::sim::network::{run_conv, Node};
+    let (net, inputs) = net_and_inputs("tinydw", DesignPoint::Patterns(4), 1);
+    for node in &net.nodes {
+        if let Node::Conv { cfg, .. } = node {
+            let shaped = Tensor {
+                h: cfg.plan.hin,
+                w: cfg.plan.win,
+                c: cfg.plan.cin,
+                data: (0..cfg.plan.hin * cfg.plan.win * cfg.plan.cin)
+                    .map(|i| inputs[0].data[i % inputs[0].data.len()] * 0.7)
+                    .collect(),
+            };
+            let mut m1 = Machine::new();
+            let (out1, stats1) = run_conv(&mut m1, cfg, &shaped);
+            let mut m2 = Machine::new();
+            let prep = prepare_conv(cfg);
+            let bound = prep.bind(&mut m2);
+            let (out2, stats2) = run_bound(&mut m2, &prep, &bound, &shaped);
+            assert_eq!(out1.data, out2.data, "layer {}", cfg.plan.name);
+            assert_eq!(stats1.instrs, stats2.instrs, "layer {}", cfg.plan.name);
+            assert_eq!(stats1.cycles(), stats2.cycles(), "layer {}", cfg.plan.name);
+        }
+    }
+}
+
+#[test]
+fn first_request_stats_match_one_shot_path() {
+    // a fresh engine's first request must cost exactly what the one-shot
+    // path reports (same buffers, same cold caches, same kernel)
+    let (net, inputs) = net_and_inputs("tinynet", DesignPoint::Patterns(4), 1);
+    let legacy = run_network(&net.nodes, &inputs[0]);
+    let prepared = Arc::new(PreparedModel::prepare(&net.nodes));
+    let mut engine = EngineMachine::new(&prepared);
+    let served = engine.run(&inputs[0]);
+    assert_eq!(served.total.instrs, legacy.total.instrs);
+    assert_eq!(served.total.cycles(), legacy.total.cycles());
+    assert_eq!(served.total.energy_pj, legacy.total.energy_pj);
+}
+
+#[test]
+fn batcher_closes_on_max_batch() {
+    let cfg = BatchConfig { max_batch: 4, max_delay: Duration::from_secs(3600) };
+    let mut b = DynamicBatcher::new(cfg);
+    let t0 = Instant::now();
+    let mk = |id| Request { id, input: Tensor::zeros(1, 1, 1), enqueued: t0 };
+    assert!(b.push(mk(0)).is_none());
+    assert!(b.push(mk(1)).is_none());
+    assert!(b.push(mk(2)).is_none());
+    let batch = b.push(mk(3)).expect("size trigger closes the batch");
+    assert_eq!(batch.requests.len(), 4);
+    let ids: Vec<u64> = batch.requests.iter().map(|r| r.id).collect();
+    assert_eq!(ids, vec![0, 1, 2, 3]);
+    assert!(b.is_empty());
+    // with an hour of delay budget the deadline never fires
+    assert!(b.poll_deadline(Instant::now()).is_none());
+}
+
+#[test]
+fn batcher_closes_on_deadline() {
+    let cfg = BatchConfig { max_batch: 1000, max_delay: Duration::from_millis(5) };
+    let mut b = DynamicBatcher::new(cfg);
+    let t0 = Instant::now();
+    let mk = |id| Request { id, input: Tensor::zeros(1, 1, 1), enqueued: t0 };
+    assert!(b.push(mk(0)).is_none());
+    assert!(b.push(mk(1)).is_none());
+    assert_eq!(b.len(), 2);
+    // just before the oldest request's deadline: stays open
+    assert!(b.poll_deadline(t0 + Duration::from_millis(4)).is_none());
+    // at the deadline: closes with everything pending
+    let batch = b.poll_deadline(t0 + Duration::from_millis(5)).expect("deadline trigger");
+    assert_eq!(batch.requests.len(), 2);
+    assert!(b.next_deadline().is_none());
+    // flush drains leftovers on shutdown (and is a no-op when empty)
+    assert!(b.flush().is_none());
+    assert!(b.push(mk(2)).is_none());
+    assert_eq!(b.flush().unwrap().requests.len(), 1);
+}
+
+#[test]
+fn concurrent_workers_are_deterministic_and_bit_exact() {
+    let (net, inputs) = net_and_inputs("tinynet", DesignPoint::Patterns(4), 24);
+    let legacy: Vec<Vec<f32>> =
+        inputs.iter().map(|x| run_network(&net.nodes, x).output.data.clone()).collect();
+    let prepared = Arc::new(PreparedModel::prepare(&net.nodes));
+    let cfg = ServeConfig {
+        workers: 3,
+        batch: BatchConfig { max_batch: 4, max_delay: Duration::from_millis(1) },
+    };
+    let run1 = serve_all(&prepared, &cfg, inputs.clone());
+    assert_eq!(run1.len(), inputs.len());
+    for c in &run1 {
+        assert_eq!(c.output.data, legacy[c.id as usize], "request {}", c.id);
+        assert!(c.batch_size >= 1 && c.batch_size <= 4);
+        assert!(c.worker < 3);
+    }
+    // a second serving run over the same prepared model reproduces every
+    // output exactly, regardless of worker/batch scheduling
+    let run2 = serve_all(&prepared, &cfg, inputs.clone());
+    assert_eq!(run1.len(), run2.len());
+    for (a, b) in run1.iter().zip(&run2) {
+        assert_eq!(a.id, b.id);
+        assert_eq!(a.output.data, b.output.data, "request {}", a.id);
+    }
+}
+
+#[test]
+fn registry_prepares_once_per_key() {
+    let (net, _) = net_and_inputs("tinynet", DesignPoint::Uniform(4), 1);
+    let reg = ModelRegistry::new();
+    let key = model_key("tinynet", "U4");
+    assert!(!reg.contains(&key));
+    let mut builds = 0u32;
+    let a = reg.get_or_prepare(&key, || {
+        builds += 1;
+        net.nodes.clone()
+    });
+    let b = reg.get_or_prepare(&key, || {
+        builds += 1;
+        net.nodes.clone()
+    });
+    assert!(Arc::ptr_eq(&a, &b));
+    assert_eq!(builds, 1, "model must be prepared exactly once per key");
+    assert!(reg.contains(&key));
+    assert_eq!(reg.len(), 1);
+    assert_eq!(a.num_layers(), 4);
+}
+
+#[test]
+fn serve_report_aggregates_and_serializes() {
+    let (net, inputs) = net_and_inputs("tinynet", DesignPoint::Uniform(4), 12);
+    let prepared = Arc::new(PreparedModel::prepare(&net.nodes));
+    let cfg = ServeConfig {
+        workers: 2,
+        batch: BatchConfig { max_batch: 4, max_delay: Duration::from_millis(1) },
+    };
+    let t0 = Instant::now();
+    let done = serve_all(&prepared, &cfg, inputs);
+    let report = summarize(&done, t0.elapsed());
+    assert_eq!(report.requests, 12);
+    assert!(report.batches >= 3 && report.batches <= 12, "batches {}", report.batches);
+    assert!(report.mean_batch_size >= 1.0 && report.mean_batch_size <= 4.0);
+    assert!(report.throughput_rps > 0.0);
+    assert!(report.p50_ms <= report.p99_ms);
+    assert!(report.sim.cycles() > 0 && report.sim.energy_pj > 0.0);
+    // one aggregate per conv/FC layer: c1, c2, c3, fc
+    assert_eq!(report.per_layer.len(), 4);
+    assert!(report.per_layer.iter().all(|l| l.cycles > 0));
+    // JSON round-trips through the offline parser
+    let text = report.to_json().to_string();
+    let parsed = soniq::util::json::parse(&text).unwrap();
+    assert_eq!(parsed.get("requests").unwrap().as_usize().unwrap(), 12);
+    assert_eq!(parsed.get("per_layer").unwrap().as_arr().unwrap().len(), 4);
+}

@@ -1,0 +1,205 @@
+//! Algorithm-4 GEMM emitter: matmul kernels for the Transformer path on
+//! the same packed-vector MAC datapath as the conv/FC generator.
+//!
+//! A GEMM `C[m,n] = A[m,k] · B[k,n]` contracts over `k`, which is the
+//! per-channel precision axis (the SMOL assignment quantizes both
+//! operands channel-wise, exactly like a 1x1 convolution's `cin`). The
+//! memory layouts reuse the conv pack format verbatim — A packs as the
+//! activations of a `kh=kw=1, hin=m, win=1` dense plan, B as its HWIO
+//! weights (`[k][n]` row-major) — so [`crate::codegen::pack`] serves
+//! both static (prepare-once) and dynamic (packed-per-request) operands.
+//!
+//! The loop structure is GEMM-shaped rather than conv-shaped: A rows
+//! have no spatial reuse window, so the emitter *register-blocks* them —
+//! a block of up to 8 row vectors is stashed once per chunk, then each
+//! B column vector is loaded once per block and MACed against every
+//! stashed row. That cuts vector loads from `chunks * n * (m + 1)`
+//! (what the conv emitter's dataflow would do) to
+//! `chunks * (m + n * ceil(m/8))`.
+//!
+//! Tail handling matches Algorithm 4: partial chunks `vand` the loaded A
+//! rows against the chunk mask (B is pre-masked at pack time), and the
+//! epilogue subtracts one `tail_bias()` per output element (a GEMM is a
+//! single-tap layer — every output accumulates each partial chunk once).
+
+use crate::codegen::{DataFormat, LayerBufs, LayerKind, LayerPlan, Sink};
+use crate::simd::isa::{Addr, Instr};
+use crate::smol::pattern_match::Assignment;
+
+/// Everything the generator needs for one GEMM.
+#[derive(Debug, Clone)]
+pub struct GemmPlan {
+    pub name: String,
+    /// output rows (sequence positions)
+    pub m: usize,
+    /// contraction dim — the per-channel precision axis
+    pub k: usize,
+    /// output columns
+    pub n: usize,
+    /// per-`k`-channel precisions (both operands quantize through it)
+    pub asg: Assignment,
+    pub fmt: DataFormat,
+}
+
+impl GemmPlan {
+    /// Lower to the equivalent 1x1 dense conv plan (`hin=m, win=1`):
+    /// chunking, packing, buffer sizing and tail bias all reuse the conv
+    /// machinery through this view.
+    pub fn layer_plan(&self) -> LayerPlan {
+        LayerPlan {
+            name: self.name.clone(),
+            kind: LayerKind::Dense,
+            cin: self.k,
+            cout: self.n,
+            kh: 1,
+            kw: 1,
+            stride: 1,
+            hin: self.m,
+            win: 1,
+            asg: self.asg.clone(),
+            fmt: self.fmt,
+        }
+    }
+}
+
+/// Register allocation (mirrors the conv emitter's split):
+/// 0 current B column chunk vector, 9..17 A row stash (block of <= 8),
+/// 28 acc (baseline formats), 27 mac tmp, 26 mask.
+const B_REG: u8 = 0;
+const A_REG: u8 = 9;
+const ROW_BLOCK: usize = 8;
+const MASK: u8 = 26;
+const TMP: u8 = 27;
+const ACC: u8 = 28;
+
+/// Emit the full GEMM kernel into `sink`. Buffer layouts (shared with
+/// [`crate::codegen::pack`] via [`GemmPlan::layer_plan`]):
+/// input `(i * n_chunks + c) * 16`, weights `(j * n_chunks + c) * 16`,
+/// out `(j * m + i) * 4` i32 accumulators, masks `c * 16`.
+pub fn emit_gemm(plan: &GemmPlan, bufs: &LayerBufs, pattern_base: u8, sink: &mut dyn Sink) {
+    let chunks = plan.layer_plan().chunks();
+    let nch = chunks.len();
+    for (ci, &(pat, valid)) in chunks.iter().enumerate() {
+        let partial = valid < pat.capacity() && plan.fmt == DataFormat::Smol;
+        if partial {
+            sink.emit(Instr::LdQ {
+                dst: MASK,
+                addr: Addr { buf: bufs.masks, off: (ci * 16) as u32 },
+            });
+        }
+        let pat_id = pattern_base + ci as u8;
+        let mut i0 = 0usize;
+        while i0 < plan.m {
+            let rows = ROW_BLOCK.min(plan.m - i0);
+            // stash this block of A rows once per chunk
+            for r in 0..rows {
+                let reg = A_REG + r as u8;
+                sink.emit(Instr::LdQ {
+                    dst: reg,
+                    addr: Addr { buf: bufs.input, off: (((i0 + r) * nch + ci) * 16) as u32 },
+                });
+                if partial {
+                    sink.emit(Instr::Vand { dst: reg, a: reg, b: MASK });
+                }
+            }
+            for j in 0..plan.n {
+                // one B-column load serves the whole row block
+                sink.emit(Instr::LdQ {
+                    dst: B_REG,
+                    addr: Addr { buf: bufs.weights, off: ((j * nch + ci) * 16) as u32 },
+                });
+                for r in 0..rows {
+                    let a_reg = A_REG + r as u8;
+                    let out = Addr {
+                        buf: bufs.out,
+                        off: ((j * plan.m + i0 + r) * 4) as u32,
+                    };
+                    match plan.fmt {
+                        DataFormat::Smol => {
+                            // single tap: MAC straight into the reduce,
+                            // no in-register tap accumulation needed
+                            sink.emit(Instr::VmacP { dst: TMP, a: a_reg, b: B_REG, pat: pat_id });
+                            sink.emit(Instr::ReduceAcc { src: TMP, addr: out });
+                        }
+                        DataFormat::Int8 => {
+                            // single tap, like the Smol arm: no
+                            // in-register accumulation needed
+                            sink.emit(Instr::VmacI8 { dst: TMP, a: a_reg, b: B_REG });
+                            sink.emit(Instr::ReduceAcc { src: TMP, addr: out });
+                        }
+                        DataFormat::Fp32 => {
+                            sink.emit(Instr::VmovZ { dst: ACC });
+                            sink.emit(Instr::VfmaF32 { dst: ACC, a: a_reg, b: B_REG });
+                            sink.emit(Instr::ReduceAcc { src: ACC, addr: out });
+                        }
+                    }
+                }
+            }
+            i0 += rows;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codegen::Counter;
+    use crate::simd::isa::BufId;
+
+    fn bufs() -> LayerBufs {
+        LayerBufs { input: BufId(0), weights: BufId(1), out: BufId(2), masks: BufId(3) }
+    }
+
+    fn plan(m: usize, k: usize, n: usize, p: u8) -> GemmPlan {
+        GemmPlan {
+            name: "g".into(),
+            m,
+            k,
+            n,
+            asg: Assignment::uniform(k, p),
+            fmt: DataFormat::Smol,
+        }
+    }
+
+    #[test]
+    fn instruction_mix_matches_gemm_shape() {
+        // k=32 @4b -> 1 full chunk; no masking
+        let p = plan(10, 32, 5, 4);
+        let mut c = Counter::default();
+        emit_gemm(&p, &bufs(), 0, &mut c);
+        assert_eq!(c.vmac, 10 * 5); // one MAC per output per chunk
+        assert_eq!(c.stores, 10 * 5); // one ReduceAcc per output per chunk
+        assert_eq!(c.vand, 0);
+        // loads: 10 A rows + 5 B columns per row block (blocks of 8 -> 2)
+        assert_eq!(c.loads, 10 + 2 * 5);
+    }
+
+    #[test]
+    fn row_blocking_amortizes_b_loads() {
+        // conv-shaped dataflow would load A m*n times; blocking loads
+        // each A row once and each B column ceil(m/8) times per chunk
+        let p = plan(16, 32, 16, 4);
+        let mut c = Counter::default();
+        emit_gemm(&p, &bufs(), 0, &mut c);
+        assert_eq!(c.loads, 16 + 2 * 16);
+        assert!(c.loads < (16 * 16) as u64);
+    }
+
+    #[test]
+    fn partial_chunk_masks_a_rows() {
+        // k=24 in a 32-capacity chunk: every A row load is vand-masked
+        let p = plan(6, 24, 3, 4);
+        let mut c = Counter::default();
+        emit_gemm(&p, &bufs(), 0, &mut c);
+        assert_eq!(c.vand, 6); // one per stashed A row
+        assert_eq!(p.layer_plan().tail_bias(), 8 * 225);
+    }
+
+    #[test]
+    fn layer_plan_is_single_tap() {
+        let lp = plan(7, 40, 2, 2).layer_plan();
+        assert_eq!((lp.hout(), lp.wout()), (7, 1));
+        assert_eq!((lp.pad_top(), lp.pad_left()), (0, 0));
+        assert_eq!(lp.chunks().iter().map(|&(_, v)| v).sum::<u32>(), 40);
+    }
+}

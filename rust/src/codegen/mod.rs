@@ -15,6 +15,7 @@
 //! Baseline formats (`Fp32`, `Int8`) emit the same dataflow with
 //! `vfmaq_f32` / int8-MAC ops for the Key-Finding-1 comparisons.
 
+pub mod gemm;
 pub mod pack;
 
 use crate::simd::isa::{Addr, BufId, Instr};

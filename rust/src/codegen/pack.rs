@@ -12,11 +12,20 @@ use crate::smol::quant;
 /// values the previous layer produced); output layout is
 /// `((h*win + w) * n_chunks + c) * 16` bytes.
 pub fn pack_activations(plan: &LayerPlan, x: &[f32]) -> Vec<u8> {
+    let mut out = Vec::new();
+    pack_activations_into(plan, x, &mut out);
+    out
+}
+
+/// [`pack_activations`] into a caller-owned buffer (cleared + resized),
+/// so per-request packing in the serving hot path reuses one allocation.
+pub fn pack_activations_into(plan: &LayerPlan, x: &[f32], out: &mut Vec<u8>) {
     assert_eq!(x.len(), plan.hin * plan.win * plan.cin);
     let chunks = plan.chunks();
-    let mut out = vec![0u8; plan.hin * plan.win * chunks.len() * 16];
+    out.clear();
+    out.resize(plan.hin * plan.win * chunks.len() * 16, 0u8);
     if plan.fmt != DataFormat::Smol {
-        return out; // baselines: footprint-only buffers
+        return; // baselines: footprint-only buffers
     }
     let mut pos = 0usize;
     let chunk_bases: Vec<usize> = chunks
@@ -43,7 +52,6 @@ pub fn pack_activations(plan: &LayerPlan, x: &[f32]) -> Vec<u8> {
             }
         }
     }
-    out
 }
 
 /// Quantize + rearrange + pack weights.
@@ -52,6 +60,15 @@ pub fn pack_activations(plan: &LayerPlan, x: &[f32]) -> Vec<u8> {
 /// `(((k*kh + r)*kw + s) * n_chunks + c) * 16`.
 /// Depthwise: `w` indexed `[r][s][c]`, layout `((r*kw + s)*n_chunks + c)*16`.
 pub fn pack_weights(plan: &LayerPlan, w: &[f32]) -> Vec<u8> {
+    let mut out = Vec::new();
+    pack_weights_into(plan, w, &mut out);
+    out
+}
+
+/// [`pack_weights`] into a caller-owned buffer (cleared + resized): the
+/// serving engine packs *dynamic* GEMM operands (QK^T / A·V "weights")
+/// per request through reusable per-worker scratch.
+pub fn pack_weights_into(plan: &LayerPlan, w: &[f32], out: &mut Vec<u8>) {
     let chunks = plan.chunks();
     let n = chunks.len();
     let mut pos = 0usize;
@@ -66,9 +83,10 @@ pub fn pack_weights(plan: &LayerPlan, w: &[f32]) -> Vec<u8> {
     match plan.kind {
         LayerKind::Dense => {
             assert_eq!(w.len(), plan.kh * plan.kw * plan.cin * plan.cout);
-            let mut out = vec![0u8; plan.cout * plan.kh * plan.kw * n * 16];
+            out.clear();
+            out.resize(plan.cout * plan.kh * plan.kw * n * 16, 0u8);
             if plan.fmt != DataFormat::Smol {
-                return out;
+                return;
             }
             for k in 0..plan.cout {
                 for r in 0..plan.kh {
@@ -88,13 +106,13 @@ pub fn pack_weights(plan: &LayerPlan, w: &[f32]) -> Vec<u8> {
                     }
                 }
             }
-            out
         }
         LayerKind::Depthwise => {
             assert_eq!(w.len(), plan.kh * plan.kw * plan.cin);
-            let mut out = vec![0u8; plan.kh * plan.kw * n * 16];
+            out.clear();
+            out.resize(plan.kh * plan.kw * n * 16, 0u8);
             if plan.fmt != DataFormat::Smol {
-                return out;
+                return;
             }
             for r in 0..plan.kh {
                 for s in 0..plan.kw {
@@ -112,7 +130,6 @@ pub fn pack_weights(plan: &LayerPlan, w: &[f32]) -> Vec<u8> {
                     }
                 }
             }
-            out
         }
     }
 }

@@ -325,7 +325,9 @@ pub fn simulate_paper_scale(
 #[derive(Debug, Clone)]
 pub struct SyntheticNet {
     pub nodes: Vec<crate::sim::network::Node>,
-    pub image: usize,
+    /// network input shape `(h, w, c)`; image models use `(img, img, 3)`,
+    /// sequence models `(1, seq_len, d_model)`
+    pub input_shape: (usize, usize, usize),
     pub num_classes: usize,
 }
 
@@ -336,12 +338,16 @@ pub struct SyntheticNet {
 /// the serving integration tests and `benches/serving.rs`, where the
 /// PJRT training pipeline is unavailable or unnecessary.
 ///
-/// Models: `tinynet` (3 dense convs + GAP + FC, the netbuild topology)
-/// and `tinydw` (dense stem + depthwise + pointwise + GAP + FC, to
-/// exercise the two-cycle multiply path).
+/// Models: `tinynet` (3 dense convs + GAP + FC, the netbuild topology),
+/// `tinydw` (dense stem + depthwise + pointwise + GAP + FC, to exercise
+/// the two-cycle multiply path) and `tinyattn` (a 2-block pre-LN
+/// Transformer encoder: static Q/K/V/out/FFN projections on the GEMM
+/// emitter plus dynamic-operand QK^T and A·V, softmax/layernorm/GELU
+/// epilogues).
 pub fn synthetic_network(model: &str, dp: DesignPoint, seed: u64) -> Result<SyntheticNet> {
+    use crate::codegen::gemm::GemmPlan;
     use crate::codegen::{LayerKind, LayerPlan};
-    use crate::sim::network::{ConvLayerCfg, Node, INPUT};
+    use crate::sim::network::{ConvLayerCfg, MatmulCfg, Node, INPUT};
     use crate::util::rng::Rng;
     use anyhow::bail;
 
@@ -416,7 +422,55 @@ pub fn synthetic_network(model: &str, dp: DesignPoint, seed: u64) -> Result<Synt
         }
     }
 
-    let image = 8usize;
+    /// Static-operand GEMM node (`X · W`) with seeded weights.
+    #[allow(clippy::too_many_arguments)]
+    fn matmul(
+        rng: &mut Rng,
+        asg: Assignment,
+        fmt: DataFormat,
+        name: &str,
+        m: usize,
+        k: usize,
+        n: usize,
+        input: usize,
+    ) -> Node {
+        let weights: Vec<f32> = (0..k * n).map(|_| rng.range(-0.8, 0.8)).collect();
+        Node::Matmul {
+            cfg: Box::new(MatmulCfg {
+                plan: GemmPlan { name: name.into(), m, k, n, asg, fmt },
+                scale: 1.0,
+            }),
+            weights,
+            input,
+        }
+    }
+
+    /// Dynamic-operand GEMM node (both sides are node outputs).
+    #[allow(clippy::too_many_arguments)]
+    fn matmul_dyn(
+        asg: Assignment,
+        fmt: DataFormat,
+        name: &str,
+        m: usize,
+        k: usize,
+        n: usize,
+        scale: f32,
+        a: usize,
+        b: usize,
+        transpose_b: bool,
+    ) -> Node {
+        Node::MatmulDyn {
+            cfg: Box::new(MatmulCfg {
+                plan: GemmPlan { name: name.into(), m, k, n, asg, fmt },
+                scale,
+            }),
+            a,
+            b,
+            transpose_b,
+        }
+    }
+
+    let mut input_shape = (8usize, 8usize, 3usize);
     let num_classes = 10usize;
     let mut nodes: Vec<Node> = Vec::new();
     match model {
@@ -456,20 +510,132 @@ pub fn synthetic_network(model: &str, dp: DesignPoint, seed: u64) -> Result<Synt
             );
             nodes.push(Node::Conv { cfg: Box::new(fc), input: 3 });
         }
-        other => bail!("no synthetic topology for model {other} (try tinynet or tinydw)"),
+        "tinyattn" => {
+            // 2-block pre-LN Transformer encoder over (1, s, d) sequence
+            // tensors. Q/K/V/out/FFN projections are static GEMMs
+            // (prepare-once packed weights); QK^T and A·V are dynamic-
+            // operand GEMMs whose "weight" side is packed per request.
+            let (s, d, heads, ffn) = (8usize, 16usize, 2usize, 32usize);
+            let dh = d / heads;
+            let mut x = INPUT;
+            for blk in 0..2 {
+                let nm = |op: &str| format!("b{blk}/{op}");
+                let ln_params = |rng: &mut Rng| -> (Vec<f32>, Vec<f32>) {
+                    (
+                        (0..d).map(|_| rng.range(0.7, 1.3)).collect(),
+                        (0..d).map(|_| rng.range(-0.2, 0.2)).collect(),
+                    )
+                };
+                let (gamma, beta) = ln_params(&mut rng);
+                nodes.push(Node::LayerNorm { x, gamma, beta });
+                let ln1 = nodes.len() - 1;
+                let a = assign(&mut rng, d);
+                nodes.push(matmul(&mut rng, a, fmt, &nm("wq"), s, d, d, ln1));
+                let q = nodes.len() - 1;
+                let a = assign(&mut rng, d);
+                nodes.push(matmul(&mut rng, a, fmt, &nm("wk"), s, d, d, ln1));
+                let k = nodes.len() - 1;
+                let a = assign(&mut rng, d);
+                nodes.push(matmul(&mut rng, a, fmt, &nm("wv"), s, d, d, ln1));
+                let v = nodes.len() - 1;
+                nodes.push(Node::SplitHeads { x: q, heads });
+                let qh = nodes.len() - 1;
+                nodes.push(Node::SplitHeads { x: k, heads });
+                let kh = nodes.len() - 1;
+                nodes.push(Node::SplitHeads { x: v, heads });
+                let vh = nodes.len() - 1;
+                let a = assign(&mut rng, dh);
+                let scale = 1.0 / (dh as f32).sqrt();
+                nodes.push(matmul_dyn(a, fmt, &nm("qk"), s, dh, s, scale, qh, kh, true));
+                nodes.push(Node::Softmax { x: nodes.len() - 1 });
+                let attn = nodes.len() - 1;
+                let a = assign(&mut rng, s);
+                nodes.push(matmul_dyn(a, fmt, &nm("av"), s, s, dh, 1.0, attn, vh, false));
+                nodes.push(Node::MergeHeads { x: nodes.len() - 1 });
+                let merged = nodes.len() - 1;
+                let a = assign(&mut rng, d);
+                nodes.push(matmul(&mut rng, a, fmt, &nm("wo"), s, d, d, merged));
+                nodes.push(Node::Add { a: nodes.len() - 1, b: x, relu: false });
+                let res1 = nodes.len() - 1;
+                let (gamma, beta) = ln_params(&mut rng);
+                nodes.push(Node::LayerNorm { x: res1, gamma, beta });
+                let ln2 = nodes.len() - 1;
+                let a = assign(&mut rng, d);
+                nodes.push(matmul(&mut rng, a, fmt, &nm("ff1"), s, d, ffn, ln2));
+                nodes.push(Node::Gelu { x: nodes.len() - 1 });
+                let gelu = nodes.len() - 1;
+                let a = assign(&mut rng, ffn);
+                nodes.push(matmul(&mut rng, a, fmt, &nm("ff2"), s, ffn, d, gelu));
+                nodes.push(Node::Add { a: nodes.len() - 1, b: res1, relu: false });
+                x = nodes.len() - 1;
+            }
+            input_shape = (1, s, d);
+        }
+        other => {
+            bail!("no synthetic topology for model {other} (try tinynet, tinydw or tinyattn)")
+        }
     }
-    Ok(SyntheticNet { nodes, image, num_classes })
+    Ok(SyntheticNet { nodes, input_shape, num_classes })
+}
+
+/// Weight bits-per-parameter of a synthetic network, including pattern
+/// metadata: conv/FC layers count like the coordinator metric and static
+/// GEMM ("linear") layers count `k x n` weights over the `k` precision
+/// axis. Dynamic-operand GEMMs store no weights and are skipped. `None`
+/// for baseline (non-SMOL) formats, whose bpp is fixed (32/8).
+pub fn synthetic_bpp(net: &SyntheticNet) -> Option<f64> {
+    use crate::codegen::LayerKind;
+    use crate::sim::network::Node;
+    use crate::smol::stats::LayerShape;
+
+    let mut shapes: Vec<(LayerShape, Assignment)> = Vec::new();
+    for node in &net.nodes {
+        match node {
+            Node::Conv { cfg, .. } => {
+                if cfg.plan.fmt != DataFormat::Smol {
+                    return None;
+                }
+                let elems = match cfg.plan.kind {
+                    LayerKind::Dense => cfg.plan.cout * cfg.plan.kh * cfg.plan.kw,
+                    LayerKind::Depthwise => cfg.plan.kh * cfg.plan.kw,
+                };
+                shapes.push((
+                    LayerShape {
+                        name: cfg.plan.name.clone(),
+                        cin: cfg.plan.cin,
+                        elems_per_channel: elems,
+                    },
+                    cfg.plan.asg.clone(),
+                ));
+            }
+            Node::Matmul { cfg, .. } => {
+                if cfg.plan.fmt != DataFormat::Smol {
+                    return None;
+                }
+                shapes.push((
+                    LayerShape::linear(&cfg.plan.name, cfg.plan.k, cfg.plan.n),
+                    cfg.plan.asg.clone(),
+                ));
+            }
+            _ => {}
+        }
+    }
+    if shapes.is_empty() {
+        None
+    } else {
+        Some(crate::smol::stats::network_bpp(&shapes))
+    }
 }
 
 /// Deterministic request inputs matching a synthetic network's shape.
 pub fn synthetic_inputs(net: &SyntheticNet, n: usize, seed: u64) -> Vec<Tensor> {
     use crate::util::rng::Rng;
     let mut rng = Rng::new(seed.wrapping_mul(0x9e37_79b9).wrapping_add(1));
+    let (h, w, c) = net.input_shape;
     (0..n)
         .map(|_| {
-            let data: Vec<f32> =
-                (0..net.image * net.image * 3).map(|_| rng.range(-2.0, 2.0)).collect();
-            Tensor { h: net.image, w: net.image, c: 3, data }
+            let data: Vec<f32> = (0..h * w * c).map(|_| rng.range(-2.0, 2.0)).collect();
+            Tensor { h, w, c, data }
         })
         .collect()
 }

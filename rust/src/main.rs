@@ -13,10 +13,12 @@
 //!   soniq hw
 //!   soniq serve-bench --model tinynet --design P4 --requests 1024 \
 //!         --workers 4 --max-batch 16
+//!   soniq serve-bench --model tinyattn --design P4   # Transformer encoder
 
 use anyhow::{bail, Result};
 use soniq::coordinator::{
-    print_table, run_design_point, synthetic_inputs, synthetic_network, DesignPoint, TrainCfg,
+    print_table, run_design_point, synthetic_bpp, synthetic_inputs, synthetic_network,
+    DesignPoint, TrainCfg,
 };
 use soniq::hw::{gates, timing};
 use soniq::simd::patterns;
@@ -160,6 +162,9 @@ fn main() -> Result<()> {
                 t1.elapsed(),
                 prepared.num_layers()
             );
+            if let Some(bpp) = synthetic_bpp(&net) {
+                println!("  weight size: {bpp:.2} bits/param (incl. pattern metadata)");
+            }
 
             let cfg = ServeConfig {
                 workers,

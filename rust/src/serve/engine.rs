@@ -10,9 +10,11 @@
 //! legacy path (`sim::network::run_conv` / `run_network` are now thin
 //! wrappers over this module).
 
+use crate::codegen::gemm;
 use crate::codegen::{self, pack, LayerBufs, LayerKind, LayerPlan};
+use crate::sim::eltwise;
 use crate::sim::machine::{Machine, RunStats};
-use crate::sim::network::{ConvLayerCfg, LayerStat, NetResult, Node, Tensor, INPUT};
+use crate::sim::network::{ConvLayerCfg, LayerStat, MatmulCfg, NetResult, Node, Tensor, INPUT};
 use crate::simd::isa::{Addr, BufId, Instr};
 use crate::simd::patterns::Pattern;
 use crate::smol::quant;
@@ -41,10 +43,11 @@ pub struct PreparedConv {
     out_elems: usize,
 }
 
-/// A prepared layer bound to concrete buffers of one [`Machine`]:
-/// weights + masks are written once; input/out act as reusable scratch.
+/// A prepared kernel (conv or GEMM) bound to concrete buffers of one
+/// [`Machine`]: masks — and, for static operands, weights — are written
+/// once; input/out (and dynamic-operand weights) act as reusable scratch.
 #[derive(Debug, Clone)]
-pub struct BoundConv {
+pub struct BoundKernel {
     bufs: LayerBufs,
     program: Vec<Instr>,
 }
@@ -108,7 +111,7 @@ impl PreparedConv {
     /// legacy per-call path: input, weights, out, masks), write the
     /// cached weights + masks once, and retarget the kernel to the
     /// allocated buffer ids.
-    pub fn bind(&self, m: &mut Machine) -> BoundConv {
+    pub fn bind(&self, m: &mut Machine) -> BoundKernel {
         let bufs = LayerBufs {
             input: m.alloc(self.act_bytes),
             weights: m.alloc(self.packed_weights.len()),
@@ -118,7 +121,84 @@ impl PreparedConv {
         m.write_bytes(bufs.weights, 0, &self.packed_weights);
         m.write_bytes(bufs.masks, 0, &self.packed_masks);
         let program = retarget(&self.program, &bufs);
-        BoundConv { bufs, program }
+        BoundKernel { bufs, program }
+    }
+}
+
+/// One GEMM node with everything per-request work does NOT need to
+/// recompute. Static projections (`X · W`) cache their packed weights
+/// here exactly like a conv layer; dynamic-operand GEMMs (QK^T, A·V)
+/// cache the kernel, masks and pattern table but pack their "weight"
+/// side per request into the bound scratch buffer.
+#[derive(Debug, Clone)]
+pub struct PreparedMatmul {
+    /// the GEMM lowered to its 1x1 dense plan (`hin=m, win=1, cin=k,
+    /// cout=n`) — packing, chunking and tail bias reuse the conv view
+    pub plan: LayerPlan,
+    scale: f32,
+    program: Vec<Instr>,
+    patterns: Vec<Pattern>,
+    /// `Some` = static operand packed once; `None` = dynamic operand
+    packed_weights: Option<Vec<u8>>,
+    packed_masks: Vec<u8>,
+    act_bytes: usize,
+    weight_bytes: usize,
+    out_bytes: usize,
+}
+
+/// Run codegen (+ static weight packing) for one GEMM node. `weights`
+/// is the `[k][n]` row-major static operand, or `None` for a
+/// dynamic-operand GEMM.
+pub fn prepare_matmul(cfg: &MatmulCfg, weights: Option<&[f32]>) -> PreparedMatmul {
+    let plan = cfg.plan.layer_plan();
+    let (act_bytes, _, out_bytes) = layer_sizes(&plan);
+    let weight_bytes = plan.cout * plan.chunks().len() * 16;
+
+    let packed_weights = weights.map(|w| pack::pack_weights(&plan, w));
+    let packed_masks = pack::pack_masks(&plan);
+
+    let mut patterns = Vec::new();
+    let base = codegen::register_patterns(&plan, &mut patterns);
+    let symbolic = LayerBufs {
+        input: BufId(0),
+        weights: BufId(1),
+        out: BufId(2),
+        masks: BufId(3),
+    };
+    let mut program = Vec::new();
+    gemm::emit_gemm(&cfg.plan, &symbolic, base, &mut program);
+
+    PreparedMatmul {
+        plan,
+        scale: cfg.scale,
+        program,
+        patterns,
+        packed_weights,
+        packed_masks,
+        act_bytes,
+        weight_bytes,
+        out_bytes,
+    }
+}
+
+impl PreparedMatmul {
+    /// Allocate this GEMM's buffers on `m`, write masks (and, for a
+    /// static operand, the cached packed weights) once, and retarget the
+    /// kernel. For dynamic operands the weights buffer is per-worker
+    /// scratch refilled on every request.
+    pub fn bind(&self, m: &mut Machine) -> BoundKernel {
+        let bufs = LayerBufs {
+            input: m.alloc(self.act_bytes),
+            weights: m.alloc(self.weight_bytes),
+            out: m.alloc(self.out_bytes),
+            masks: m.alloc(self.packed_masks.len()),
+        };
+        if let Some(w) = &self.packed_weights {
+            m.write_bytes(bufs.weights, 0, w);
+        }
+        m.write_bytes(bufs.masks, 0, &self.packed_masks);
+        let program = retarget(&self.program, &bufs);
+        BoundKernel { bufs, program }
     }
 }
 
@@ -164,17 +244,23 @@ pub(crate) fn valid_taps(plan: &LayerPlan, h: usize, w: usize) -> usize {
     n
 }
 
-/// Per-request input staging, shared by both execution paths: pack the
-/// activations into the input buffer, zero the accumulator scratch and
-/// charge the quantize/rearrange/pack pass as streaming cache traffic.
-fn stage_input(m: &mut Machine, plan: &LayerPlan, bufs: &LayerBufs, x: &Tensor) {
-    assert_eq!(x.c, plan.cin, "{}: cin mismatch", plan.name);
-    assert_eq!((x.h, x.w), (plan.hin, plan.win), "{}: spatial mismatch", plan.name);
-    let act = pack::pack_activations(plan, &x.data);
-    m.write_bytes(bufs.input, 0, &act);
+/// Per-request input staging, shared by every execution path (conv and
+/// GEMM, one-shot and prepared): pack the activations into the input
+/// buffer through caller-owned scratch, zero the accumulator scratch
+/// and charge the quantize/rearrange/pack pass as streaming cache
+/// traffic.
+fn stage_input(
+    m: &mut Machine,
+    plan: &LayerPlan,
+    bufs: &LayerBufs,
+    x: &[f32],
+    scratch: &mut Vec<u8>,
+) {
+    pack::pack_activations_into(plan, x, scratch);
+    m.write_bytes(bufs.input, 0, scratch);
     m.clear_buffer(bufs.out);
-    m.stream_touch(bufs.input, act.len(), true);
-    m.charge_bulk(x.data.len() as u64, 0);
+    m.stream_touch(bufs.input, scratch.len(), true);
+    m.charge_bulk(x.len() as u64, 0);
 }
 
 /// Epilogue shared by both execution paths: accumulators -> f32 with
@@ -249,11 +335,26 @@ fn finish_layer(
 pub fn run_bound(
     m: &mut Machine,
     prep: &PreparedConv,
-    bound: &BoundConv,
+    bound: &BoundKernel,
     x: &Tensor,
 ) -> (Tensor, RunStats) {
+    run_bound_with_scratch(m, prep, bound, x, &mut Vec::new())
+}
+
+/// [`run_bound`] through reusable caller scratch for the packed
+/// activations — the serving hot path, where per-request allocations
+/// are unwelcome.
+pub fn run_bound_with_scratch(
+    m: &mut Machine,
+    prep: &PreparedConv,
+    bound: &BoundKernel,
+    x: &Tensor,
+    scratch: &mut Vec<u8>,
+) -> (Tensor, RunStats) {
     let plan = &prep.plan;
-    stage_input(m, plan, &bound.bufs, x);
+    assert_eq!(x.c, plan.cin, "{}: cin mismatch", plan.name);
+    assert_eq!((x.h, x.w), (plan.hin, plan.win), "{}: spatial mismatch", plan.name);
+    stage_input(m, plan, &bound.bufs, &x.data, scratch);
 
     // replay the cached Algorithm-4 kernel under the layer's patterns
     m.patterns.clear();
@@ -267,6 +368,95 @@ pub fn run_bound(
         prep.bn_var.as_slice(),
     );
     finish_layer(m, plan, bn, prep.relu, &bound.bufs, prep.out_elems)
+}
+
+/// Reusable per-worker packing scratch: the transposed/materialized
+/// dynamic "weight" matrix, its packed bytes, and the packed-activation
+/// bytes every layer's staging runs through. One per [`EngineMachine`],
+/// reused across all requests the worker serves (no per-request
+/// allocation in the hot path).
+#[derive(Debug, Default, Clone)]
+pub struct MatmulScratch {
+    b: Vec<f32>,
+    packed_b: Vec<u8>,
+    packed_act: Vec<u8>,
+}
+
+/// Execute one bound GEMM, batched over the `h` (head) axis of `a`.
+///
+/// `b_dyn = None` runs the static-operand form (weights already resident
+/// from bind time). `b_dyn = Some((tensor, transpose_b))` quantizes +
+/// packs the dynamic operand per head through `scratch` and writes it
+/// into the bound weights buffer before replaying the kernel — the
+/// per-request half of a dynamic-operand GEMM.
+pub fn run_matmul(
+    m: &mut Machine,
+    prep: &PreparedMatmul,
+    bound: &BoundKernel,
+    a: &Tensor,
+    b_dyn: Option<(&Tensor, bool)>,
+    scratch: &mut MatmulScratch,
+) -> (Tensor, RunStats) {
+    let plan = &prep.plan;
+    let (mm, kk, nn) = (plan.hin, plan.cin, plan.cout);
+    assert_eq!(a.w, mm, "{}: row (sequence) mismatch", plan.name);
+    assert_eq!(a.c, kk, "{}: contraction dim mismatch", plan.name);
+    if let Some((b, transpose_b)) = b_dyn {
+        assert_eq!(b.h, a.h, "{}: head-batch mismatch", plan.name);
+        if transpose_b {
+            assert_eq!((b.c, b.w), (kk, nn), "{}: B^T shape mismatch", plan.name);
+        } else {
+            assert_eq!((b.w, b.c), (kk, nn), "{}: B shape mismatch", plan.name);
+        }
+    }
+
+    let bias = plan.tail_bias();
+    let mut out = Tensor::zeros(a.h, mm, nn);
+    for h in 0..a.h {
+        // stage this head's A rows (quantize + pack, charged as
+        // streaming traffic like conv activation staging)
+        let a_head = &a.data[h * mm * kk..(h + 1) * mm * kk];
+        stage_input(m, plan, &bound.bufs, a_head, &mut scratch.packed_act);
+
+        if let Some((b, transpose_b)) = b_dyn {
+            // pack the dynamic operand: quantize to the contraction
+            // axis's per-channel precisions, exactly like static weights
+            let b_head = &b.data[h * b.w * b.c..(h + 1) * b.w * b.c];
+            if transpose_b {
+                // materialize B^T ([k][n] row-major) in scratch
+                scratch.b.clear();
+                scratch.b.reserve(kk * nn);
+                for kx in 0..kk {
+                    for j in 0..nn {
+                        scratch.b.push(b_head[j * kk + kx]);
+                    }
+                }
+                pack::pack_weights_into(plan, &scratch.b, &mut scratch.packed_b);
+            } else {
+                pack::pack_weights_into(plan, b_head, &mut scratch.packed_b);
+            }
+            m.write_bytes(bound.bufs.weights, 0, &scratch.packed_b);
+            m.stream_touch(bound.bufs.weights, scratch.packed_b.len(), true);
+            m.charge_bulk(b_head.len() as u64, 0);
+        }
+
+        // replay the cached GEMM kernel under the layer's patterns
+        m.patterns.clear();
+        m.patterns.extend_from_slice(&prep.patterns);
+        m.run(&bound.program);
+
+        // epilogue: accumulators -> f32 (single-tap tail bias) + scale
+        for j in 0..nn {
+            for i in 0..mm {
+                let acc = m.read_i32(bound.bufs.out, (j * mm + i) * 4);
+                let v = (acc as i64 - bias) as f32 / quant::ACC_SCALE * prep.scale;
+                out.data[(h * mm + i) * nn + j] = v;
+            }
+        }
+        m.stream_touch(bound.bufs.out, mm * nn * 4, false);
+        m.charge_bulk((mm * nn) as u64, (mm * nn * 4) as u64);
+    }
+    (out, m.take_stats())
 }
 
 /// One-shot streaming execution (the legacy `run_conv` shape): pack
@@ -289,7 +479,9 @@ pub fn run_conv_streaming(m: &mut Machine, cfg: &ConvLayerCfg, x: &Tensor) -> (T
     };
     m.write_bytes(bufs.weights, 0, &wts);
     m.write_bytes(bufs.masks, 0, &msk);
-    stage_input(m, plan, &bufs, x);
+    assert_eq!(x.c, plan.cin, "{}: cin mismatch", plan.name);
+    assert_eq!((x.h, x.w), (plan.hin, plan.win), "{}: spatial mismatch", plan.name);
+    stage_input(m, plan, &bufs, &x.data, &mut Vec::new());
 
     // generate + execute the Algorithm-4 kernel (Machine is the Sink)
     m.patterns.clear();
@@ -305,10 +497,18 @@ pub fn run_conv_streaming(m: &mut Machine, cfg: &ConvLayerCfg, x: &Tensor) -> (T
     finish_layer(m, plan, bn, cfg.relu, &bufs, out_elems)
 }
 
-/// A prepared network node (conv layers carry their prepared form).
+/// A prepared network node (conv/GEMM layers carry their prepared form).
 #[derive(Debug, Clone)]
 pub enum PreparedNode {
     Conv { prep: PreparedConv, input: usize },
+    MatmulStatic { prep: PreparedMatmul, input: usize },
+    MatmulDyn { prep: PreparedMatmul, a: usize, b: usize, transpose_b: bool },
+    Softmax { x: usize },
+    LayerNorm { x: usize, gamma: Vec<f32>, beta: Vec<f32> },
+    Gelu { x: usize },
+    TransposeHW { x: usize },
+    SplitHeads { x: usize, heads: usize },
+    MergeHeads { x: usize },
     Add { a: usize, b: usize, relu: bool },
     ConcatC { a: usize, b: usize },
     SliceC { x: usize, from: usize, to: usize },
@@ -324,7 +524,7 @@ pub struct PreparedModel {
 }
 
 impl PreparedModel {
-    /// Prepare every conv/FC layer of a graph exactly once.
+    /// Prepare every conv/FC/GEMM layer of a graph exactly once.
     pub fn prepare(nodes: &[Node]) -> PreparedModel {
         let nodes = nodes
             .iter()
@@ -332,6 +532,28 @@ impl PreparedModel {
                 Node::Conv { cfg, input } => {
                     PreparedNode::Conv { prep: prepare_conv(cfg), input: *input }
                 }
+                Node::Matmul { cfg, weights, input } => PreparedNode::MatmulStatic {
+                    prep: prepare_matmul(cfg, Some(weights)),
+                    input: *input,
+                },
+                Node::MatmulDyn { cfg, a, b, transpose_b } => PreparedNode::MatmulDyn {
+                    prep: prepare_matmul(cfg, None),
+                    a: *a,
+                    b: *b,
+                    transpose_b: *transpose_b,
+                },
+                Node::Softmax { x } => PreparedNode::Softmax { x: *x },
+                Node::LayerNorm { x, gamma, beta } => PreparedNode::LayerNorm {
+                    x: *x,
+                    gamma: gamma.clone(),
+                    beta: beta.clone(),
+                },
+                Node::Gelu { x } => PreparedNode::Gelu { x: *x },
+                Node::TransposeHW { x } => PreparedNode::TransposeHW { x: *x },
+                Node::SplitHeads { x, heads } => {
+                    PreparedNode::SplitHeads { x: *x, heads: *heads }
+                }
+                Node::MergeHeads { x } => PreparedNode::MergeHeads { x: *x },
                 Node::Add { a, b, relu } => PreparedNode::Add { a: *a, b: *b, relu: *relu },
                 Node::ConcatC { a, b } => PreparedNode::ConcatC { a: *a, b: *b },
                 Node::SliceC { x, from, to } => {
@@ -346,11 +568,18 @@ impl PreparedModel {
         PreparedModel { nodes }
     }
 
-    /// Number of prepared conv/FC layers.
+    /// Number of prepared kernels (conv/FC layers and GEMMs).
     pub fn num_layers(&self) -> usize {
         self.nodes
             .iter()
-            .filter(|n| matches!(n, PreparedNode::Conv { .. }))
+            .filter(|n| {
+                matches!(
+                    n,
+                    PreparedNode::Conv { .. }
+                        | PreparedNode::MatmulStatic { .. }
+                        | PreparedNode::MatmulDyn { .. }
+                )
+            })
             .count()
     }
 }
@@ -360,7 +589,9 @@ impl PreparedModel {
 pub struct EngineMachine {
     model: Arc<PreparedModel>,
     m: Machine,
-    bound: Vec<Option<BoundConv>>,
+    bound: Vec<Option<BoundKernel>>,
+    /// reusable pack scratch for dynamic GEMM operands
+    scratch: MatmulScratch,
 }
 
 fn node_input<'a>(outputs: &'a [Tensor], input: &'a Tensor, id: usize) -> &'a Tensor {
@@ -376,15 +607,17 @@ impl EngineMachine {
     /// worker): buffers allocated and weights/masks written exactly once.
     pub fn new(model: &Arc<PreparedModel>) -> EngineMachine {
         let mut m = Machine::new();
-        let bound: Vec<Option<BoundConv>> = model
+        let bound: Vec<Option<BoundKernel>> = model
             .nodes
             .iter()
             .map(|n| match n {
                 PreparedNode::Conv { prep, .. } => Some(prep.bind(&mut m)),
+                PreparedNode::MatmulStatic { prep, .. }
+                | PreparedNode::MatmulDyn { prep, .. } => Some(prep.bind(&mut m)),
                 _ => None,
             })
             .collect();
-        EngineMachine { model: Arc::clone(model), m, bound }
+        EngineMachine { model: Arc::clone(model), m, bound, scratch: MatmulScratch::default() }
     }
 
     /// Run one inference over the prepared graph. Functionally identical
@@ -400,9 +633,113 @@ impl EngineMachine {
                 PreparedNode::Conv { prep, input: id } => {
                     let x = node_input(&outputs, input, *id);
                     let bound = self.bound[ni].as_ref().expect("conv layer bound");
-                    let (t, stats) = run_bound(&mut self.m, prep, bound, x);
+                    let (t, stats) = run_bound_with_scratch(
+                        &mut self.m,
+                        prep,
+                        bound,
+                        x,
+                        &mut self.scratch.packed_act,
+                    );
                     total.merge(&stats);
                     layers.push(LayerStat { name: prep.plan.name.clone(), stats });
+                    t
+                }
+                PreparedNode::MatmulStatic { prep, input: id } => {
+                    let x = node_input(&outputs, input, *id);
+                    let bound = self.bound[ni].as_ref().expect("matmul bound");
+                    let (t, stats) =
+                        run_matmul(&mut self.m, prep, bound, x, None, &mut self.scratch);
+                    total.merge(&stats);
+                    layers.push(LayerStat { name: prep.plan.name.clone(), stats });
+                    t
+                }
+                PreparedNode::MatmulDyn { prep, a, b, transpose_b } => {
+                    let ta = node_input(&outputs, input, *a);
+                    let tb = node_input(&outputs, input, *b);
+                    let bound = self.bound[ni].as_ref().expect("matmul bound");
+                    let (t, stats) = run_matmul(
+                        &mut self.m,
+                        prep,
+                        bound,
+                        ta,
+                        Some((tb, *transpose_b)),
+                        &mut self.scratch,
+                    );
+                    total.merge(&stats);
+                    layers.push(LayerStat { name: prep.plan.name.clone(), stats });
+                    t
+                }
+                PreparedNode::Softmax { x } => {
+                    let tx = node_input(&outputs, input, *x);
+                    let mut t = tx.clone();
+                    eltwise::softmax_rows(&mut t.data, t.c);
+                    let bytes = (t.data.len() * 8) as u64;
+                    total.add_bulk(t.data.len() as u64, bytes, &self.m.energy_cfg);
+                    t
+                }
+                PreparedNode::LayerNorm { x, gamma, beta } => {
+                    let tx = node_input(&outputs, input, *x);
+                    let mut t = tx.clone();
+                    eltwise::layernorm_rows(&mut t.data, t.c, gamma, beta);
+                    let bytes = (t.data.len() * 8) as u64;
+                    total.add_bulk(t.data.len() as u64, bytes, &self.m.energy_cfg);
+                    t
+                }
+                PreparedNode::Gelu { x } => {
+                    let tx = node_input(&outputs, input, *x);
+                    let mut t = tx.clone();
+                    eltwise::gelu_rows(&mut t.data);
+                    let bytes = (t.data.len() * 8) as u64;
+                    total.add_bulk(t.data.len() as u64, bytes, &self.m.energy_cfg);
+                    t
+                }
+                PreparedNode::TransposeHW { x } => {
+                    let tx = node_input(&outputs, input, *x);
+                    let mut t = Tensor::zeros(tx.w, tx.h, tx.c);
+                    for h in 0..tx.h {
+                        for w in 0..tx.w {
+                            for c in 0..tx.c {
+                                t.data[(w * t.w + h) * t.c + c] = tx.at(h, w, c);
+                            }
+                        }
+                    }
+                    let bytes = (t.data.len() * 8) as u64;
+                    total.add_bulk(t.data.len() as u64, bytes, &self.m.energy_cfg);
+                    t
+                }
+                PreparedNode::SplitHeads { x, heads } => {
+                    let tx = node_input(&outputs, input, *x);
+                    let hd = *heads;
+                    assert_eq!(tx.h, 1, "SplitHeads expects an unsplit (h=1) tensor");
+                    assert_eq!(tx.c % hd, 0, "channels not divisible by heads");
+                    let dh = tx.c / hd;
+                    let mut t = Tensor::zeros(hd, tx.w, dh);
+                    for s in 0..tx.w {
+                        for head in 0..hd {
+                            for c in 0..dh {
+                                t.data[(head * t.w + s) * dh + c] =
+                                    tx.data[s * tx.c + head * dh + c];
+                            }
+                        }
+                    }
+                    let bytes = (t.data.len() * 8) as u64;
+                    total.add_bulk(t.data.len() as u64, bytes, &self.m.energy_cfg);
+                    t
+                }
+                PreparedNode::MergeHeads { x } => {
+                    let tx = node_input(&outputs, input, *x);
+                    let (hd, dh) = (tx.h, tx.c);
+                    let mut t = Tensor::zeros(1, tx.w, hd * dh);
+                    for s in 0..tx.w {
+                        for head in 0..hd {
+                            for c in 0..dh {
+                                t.data[s * t.c + head * dh + c] =
+                                    tx.data[(head * tx.w + s) * dh + c];
+                            }
+                        }
+                    }
+                    let bytes = (t.data.len() * 8) as u64;
+                    total.add_bulk(t.data.len() as u64, bytes, &self.m.energy_cfg);
                     t
                 }
                 PreparedNode::Add { a, b, relu } => {

@@ -21,7 +21,10 @@ pub mod metrics;
 pub mod workers;
 
 pub use batcher::{Batch, BatchConfig, DynamicBatcher, Request};
-pub use engine::{prepare_conv, EngineMachine, PreparedConv, PreparedModel};
+pub use engine::{
+    prepare_conv, prepare_matmul, run_matmul, EngineMachine, MatmulScratch, PreparedConv,
+    PreparedMatmul, PreparedModel,
+};
 pub use metrics::{percentile, summarize, LayerAgg, ServeReport};
 pub use workers::{Completion, ServeConfig, Server};
 

@@ -1,0 +1,115 @@
+//! Element-wise f32 epilogues for the Transformer path: row softmax,
+//! layer normalization and GELU.
+//!
+//! Like the conv path's BN + ReLU, these run in the inter-layer 32-bit
+//! fixed-point domain (f32-carried) and are charged as vectorized bulk
+//! work by the caller. They live in one place so the execution engine
+//! and the oracle tests share the *exact* f32 operation sequence —
+//! bit-identical serving outputs depend on it.
+
+/// Epsilon inside the layer-norm variance square root.
+pub const LN_EPS: f32 = 1e-5;
+
+/// In-place softmax over each consecutive `row`-length slice
+/// (numerically stabilized by the row max).
+pub fn softmax_rows(data: &mut [f32], row: usize) {
+    assert!(row > 0 && data.len() % row == 0, "softmax row length {row}");
+    for r in data.chunks_mut(row) {
+        let max = r.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0.0f32;
+        for v in r.iter_mut() {
+            *v = (*v - max).exp();
+            sum += *v;
+        }
+        let inv = 1.0 / sum;
+        for v in r.iter_mut() {
+            *v *= inv;
+        }
+    }
+}
+
+/// In-place layer normalization over each consecutive `row`-length slice,
+/// with per-feature `gamma` / `beta` (lengths = `row`).
+pub fn layernorm_rows(data: &mut [f32], row: usize, gamma: &[f32], beta: &[f32]) {
+    assert!(row > 0 && data.len() % row == 0, "layernorm row length {row}");
+    assert_eq!(gamma.len(), row);
+    assert_eq!(beta.len(), row);
+    for r in data.chunks_mut(row) {
+        let mean = r.iter().sum::<f32>() / row as f32;
+        let var = r.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / row as f32;
+        let inv = 1.0 / (var + LN_EPS).sqrt();
+        for (v, (g, b)) in r.iter_mut().zip(gamma.iter().zip(beta)) {
+            *v = (*v - mean) * inv * g + b;
+        }
+    }
+}
+
+/// GELU, tanh approximation:
+/// `0.5 x (1 + tanh(sqrt(2/pi) (x + 0.044715 x^3)))`.
+pub fn gelu(x: f32) -> f32 {
+    const C: f32 = 0.797_884_6; // sqrt(2/pi)
+    0.5 * x * (1.0 + (C * (x + 0.044715 * x * x * x)).tanh())
+}
+
+/// In-place GELU over a tensor.
+pub fn gelu_rows(data: &mut [f32]) {
+    for v in data.iter_mut() {
+        *v = gelu(*v);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn softmax_rows_sum_to_one_and_order() {
+        let mut d = vec![0.0, 1.0, 2.0, -3.0, 5.0, 5.0];
+        softmax_rows(&mut d, 3);
+        for r in d.chunks(3) {
+            let s: f32 = r.iter().sum();
+            assert!((s - 1.0).abs() < 1e-6, "{s}");
+            assert!(r.iter().all(|&v| v > 0.0 && v <= 1.0));
+        }
+        assert!(d[0] < d[1] && d[1] < d[2]);
+        assert_eq!(d[4], d[5]); // ties stay tied
+    }
+
+    #[test]
+    fn softmax_is_shift_invariant() {
+        let mut a = vec![0.5, -1.0, 2.0, 0.25];
+        let mut b: Vec<f32> = a.iter().map(|v| v + 100.0).collect();
+        softmax_rows(&mut a, 4);
+        softmax_rows(&mut b, 4);
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn layernorm_centers_and_scales() {
+        let mut d = vec![1.0, 2.0, 3.0, 4.0];
+        let gamma = vec![1.0; 4];
+        let beta = vec![0.0; 4];
+        layernorm_rows(&mut d, 4, &gamma, &beta);
+        let mean: f32 = d.iter().sum::<f32>() / 4.0;
+        let var: f32 = d.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / 4.0;
+        assert!(mean.abs() < 1e-6, "{mean}");
+        assert!((var - 1.0).abs() < 1e-3, "{var}");
+        // affine: gamma scales, beta shifts
+        let mut d2 = vec![1.0, 2.0, 3.0, 4.0];
+        layernorm_rows(&mut d2, 4, &[2.0; 4], &[1.0; 4]);
+        for (a, b) in d.iter().zip(&d2) {
+            assert!((2.0 * a + 1.0 - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn gelu_fixed_points_and_sign() {
+        assert_eq!(gelu(0.0), 0.0);
+        assert!((gelu(10.0) - 10.0).abs() < 1e-4); // ~identity for large x
+        assert!(gelu(-10.0).abs() < 1e-4); // ~zero for very negative x
+        assert!(gelu(1.0) > 0.8 && gelu(1.0) < 0.9); // ~0.8412
+        assert!(gelu(-1.0) < 0.0 && gelu(-1.0) > -0.2);
+    }
+}

@@ -3,6 +3,7 @@
 //! network-level inference driver.
 
 pub mod cache;
+pub mod eltwise;
 pub mod energy;
 pub mod machine;
 pub mod network;

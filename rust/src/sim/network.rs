@@ -9,12 +9,20 @@
 //! precision patterns (charged as streaming cache traffic), then the
 //! generated Algorithm-4 kernel runs on the machine.
 //!
+//! Transformer-encoder graphs use the same tensor type with sequence
+//! data mapped as `(h = heads-or-1, w = position, c = features)`:
+//! [`Node::Matmul`] / [`Node::MatmulDyn`] run on the GEMM emitter
+//! ([`crate::codegen::gemm`]) and [`Node::Softmax`] /
+//! [`Node::LayerNorm`] / [`Node::Gelu`] are f32 epilogues
+//! ([`crate::sim::eltwise`]).
+//!
 //! The execution engine itself lives in [`crate::serve::engine`]: models
 //! are prepared once (codegen + weight packing cached per layer) and
 //! replayed per request. The one-shot entry points here — [`run_conv`]
 //! and [`run_network`] — are thin wrappers that prepare and immediately
 //! execute, with outputs bit-identical to the prepared serving path.
 
+use crate::codegen::gemm::GemmPlan;
 use crate::codegen::LayerPlan;
 use crate::serve::engine::{run_conv_streaming, EngineMachine, PreparedModel};
 use crate::sim::machine::{Machine, RunStats};
@@ -53,10 +61,43 @@ pub struct ConvLayerCfg {
     pub relu: bool,
 }
 
+/// One GEMM node's configuration (inference form). Sequence tensors map
+/// onto the HWC layout as `(h = heads-or-1, w = sequence position,
+/// c = features)`; the GEMM batches over `h` and contracts over `c`.
+#[derive(Debug, Clone)]
+pub struct MatmulCfg {
+    pub plan: GemmPlan,
+    /// f32 epilogue scaling applied after dequantization
+    /// (e.g. `1/sqrt(d_head)` for attention scores); 1.0 = none
+    pub scale: f32,
+}
+
 /// Graph node (indices refer to node outputs; usize::MAX = network input).
 #[derive(Debug, Clone)]
 pub enum Node {
     Conv { cfg: Box<ConvLayerCfg>, input: usize },
+    /// static-operand GEMM `X · W` (projections, FFN): `weights` is
+    /// `[k][n]` row-major and packs once at prepare time
+    Matmul { cfg: Box<MatmulCfg>, weights: Vec<f32>, input: usize },
+    /// dynamic-operand GEMM between two node outputs (QK^T, A·V): the
+    /// "weight" side `b` is quantized + packed per request.
+    /// `transpose_b = false` contracts `a`'s channels with `b`'s
+    /// sequence axis (`C[h,i,j] = sum_c a[h,i,c] * b[h,c->w,j->c]`);
+    /// `transpose_b = true` contracts channels with channels
+    /// (`C[h,i,j] = sum_c a[h,i,c] * b[h,j,c]`, the QK^T shape)
+    MatmulDyn { cfg: Box<MatmulCfg>, a: usize, b: usize, transpose_b: bool },
+    /// row softmax along `c` for every (h, w)
+    Softmax { x: usize },
+    /// layer normalization along `c` with per-feature affine
+    LayerNorm { x: usize, gamma: Vec<f32>, beta: Vec<f32> },
+    /// GELU activation (tanh approximation)
+    Gelu { x: usize },
+    /// swap the `h` and `w` axes
+    TransposeHW { x: usize },
+    /// `(1, s, heads*dh)` -> `(heads, s, dh)`
+    SplitHeads { x: usize, heads: usize },
+    /// `(heads, s, dh)` -> `(1, s, heads*dh)` (inverse of SplitHeads)
+    MergeHeads { x: usize },
     Add { a: usize, b: usize, relu: bool },
     ConcatC { a: usize, b: usize },
     SliceC { x: usize, from: usize, to: usize },

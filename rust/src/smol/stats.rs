@@ -14,6 +14,15 @@ pub struct LayerShape {
     pub elems_per_channel: usize,
 }
 
+impl LayerShape {
+    /// A linear/GEMM layer `[k, n]`: `k` contraction channels (the
+    /// precision axis), `n` weights per channel. Covers the Transformer
+    /// path's static projections and FFN matrices.
+    pub fn linear(name: &str, k: usize, n: usize) -> LayerShape {
+        LayerShape { name: name.into(), cin: k, elems_per_channel: n }
+    }
+}
+
 /// Bits-per-parameter of one layer under an assignment.
 pub fn layer_bpp(shape: &LayerShape, asg: &Assignment) -> f64 {
     assert_eq!(shape.cin, asg.precision.len(), "{}", shape.name);
@@ -113,6 +122,17 @@ mod tests {
         let shape = LayerShape { name: "l".into(), cin: 8, elems_per_channel: 9 };
         assert_eq!(layer_bpp(&shape, &asg(vec![4; 8])), 4.0);
         assert_eq!(layer_bpp(&shape, &asg(vec![1; 8])), 1.0);
+    }
+
+    #[test]
+    fn bpp_linear_layer() {
+        // a [k=8, n=4] GEMM: 32 weights, precision per k-channel
+        let shape = LayerShape::linear("wq", 8, 4);
+        assert_eq!(shape.cin, 8);
+        assert_eq!(shape.elems_per_channel, 4);
+        assert_eq!(layer_bpp(&shape, &asg(vec![4; 8])), 4.0);
+        // half the contraction channels at 4b, half at 2b -> 3 bpp
+        assert_eq!(layer_bpp(&shape, &asg(vec![4, 4, 4, 4, 2, 2, 2, 2])), 3.0);
     }
 
     #[test]

@@ -3,12 +3,17 @@
 //! quantization, packing, the ALU datapath, Problem-1 coverage, pattern
 //! matching, and the code generator vs. a direct reference.
 
+use soniq::codegen::gemm::GemmPlan;
 use soniq::codegen::{self, Counter, DataFormat, LayerBufs, LayerKind, LayerPlan};
+use soniq::serve::{prepare_matmul, run_matmul, MatmulScratch};
+use soniq::sim::eltwise;
+use soniq::sim::machine::Machine;
+use soniq::sim::network::{MatmulCfg, Tensor};
 use soniq::simd::alu;
 use soniq::simd::isa::BufId;
 use soniq::simd::patterns::{all_patterns, design_subset, Pattern};
 use soniq::simd::vector::{pack_values, unpack_values};
-use soniq::smol::pattern_match::{demand_from_s, pattern_match};
+use soniq::smol::pattern_match::{demand_from_s, pattern_match, Assignment};
 use soniq::smol::problem1::solve;
 use soniq::smol::quant;
 use soniq::util::prop::check;
@@ -230,6 +235,201 @@ fn prop_codegen_instruction_count_scales_with_chunks() {
         if c4.stores != (cout * hw * hw) as u64 * chunks4 {
             return Err(format!("store count {}", c4.stores));
         }
+        Ok(())
+    });
+}
+
+/// Random per-channel assignment over `ch` channels: uniform precision
+/// or PatternMatch on random sensitivities under a random design subset.
+fn rand_assignment(rng: &mut Rng, ch: usize) -> Assignment {
+    if rng.below(3) == 0 {
+        Assignment::uniform(ch, rand_precision(rng))
+    } else {
+        let np = *rng.choice(&[4usize, 8, 45]);
+        let s: Vec<f32> = (0..ch).map(|_| rng.range(-4.0, 8.0)).collect();
+        pattern_match(&s, &design_subset(np))
+    }
+}
+
+fn rand_seq_tensor(rng: &mut Rng, h: usize, w: usize, c: usize, lo: f32, hi: f32) -> Tensor {
+    let data: Vec<f32> = (0..h * w * c).map(|_| rng.range(lo, hi)).collect();
+    Tensor { h, w, c, data }
+}
+
+/// Plain f64 GEMM oracle (the `ref_conv` of the Transformer path): both
+/// operands quantized per contraction channel, exact dyadic products
+/// summed in f64, then the engine's f32 scale. `b(head, kk, j)` indexes
+/// the effective `[k][n]` right operand.
+fn ref_gemm<F: Fn(usize, usize, usize) -> f32>(
+    plan: &GemmPlan,
+    scale: f32,
+    heads: usize,
+    a: &Tensor,
+    b: F,
+) -> Tensor {
+    let (m, k, n) = (plan.m, plan.k, plan.n);
+    let mut out = Tensor::zeros(heads, m, n);
+    for h in 0..heads {
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0f64;
+                for kk in 0..k {
+                    let p = plan.asg.precision[kk];
+                    let av = quant::quantize(a.at(h, i, kk), p);
+                    let bv = quant::quantize(b(h, kk, j), p);
+                    acc += av as f64 * bv as f64;
+                }
+                out.data[(h * m + i) * n + j] = acc as f32 * scale;
+            }
+        }
+    }
+    out
+}
+
+/// The ISSUE-2 oracle sweep: the GEMM emitter (static and dynamic
+/// operands, including the engine's row-blocked kernel, tail masking and
+/// tail-bias epilogue) must match a plain f64 oracle *exactly*, and the
+/// softmax/layernorm/GELU epilogues must match f64 references to f32
+/// tolerance — across random {seq_len, d_model(=heads*dh), heads,
+/// precision pattern}.
+#[test]
+fn prop_gemm_and_attention_epilogues_match_oracle() {
+    check("gemm-attn-oracle", 500, |rng| {
+        let fmt = DataFormat::Smol;
+        let mut scratch = MatmulScratch::default();
+
+        // --- static-operand GEMM (projection / FFN shape) ---
+        let m = 1 + rng.below(5) as usize;
+        let n = 1 + rng.below(5) as usize;
+        let k = 1 + rng.below(40) as usize;
+        let scale = *rng.choice(&[1.0f32, 0.35]);
+        let cfg = MatmulCfg {
+            plan: GemmPlan { name: "g".into(), m, k, n, asg: rand_assignment(rng, k), fmt },
+            scale,
+        };
+        let a = rand_seq_tensor(rng, 1, m, k, -2.0, 2.0);
+        let b: Vec<f32> = (0..k * n).map(|_| rng.range(-1.5, 1.5)).collect();
+        let prep = prepare_matmul(&cfg, Some(&b));
+        let mut machine = Machine::new();
+        let bound = prep.bind(&mut machine);
+        let (got, stats) = run_matmul(&mut machine, &prep, &bound, &a, None, &mut scratch);
+        let want = ref_gemm(&cfg.plan, scale, 1, &a, |_, kk, j| b[kk * n + j]);
+        if got.data != want.data {
+            return Err(format!("static gemm mismatch (m={m} k={k} n={n})"));
+        }
+        if stats.vmac == 0 || stats.cycles() == 0 {
+            return Err("static gemm ran no MACs".into());
+        }
+
+        // --- dynamic-operand attention core: QK^T -> softmax -> A·V ---
+        let heads = *rng.choice(&[1usize, 2]);
+        let dh = *rng.choice(&[2usize, 4]);
+        let s = 2 + rng.below(4) as usize;
+        let q = rand_seq_tensor(rng, heads, s, dh, -2.0, 2.0);
+        let kx = rand_seq_tensor(rng, heads, s, dh, -2.0, 2.0);
+        let vx = rand_seq_tensor(rng, heads, s, dh, -1.5, 1.5);
+        let qk_cfg = MatmulCfg {
+            plan: GemmPlan {
+                name: "qk".into(),
+                m: s,
+                k: dh,
+                n: s,
+                asg: rand_assignment(rng, dh),
+                fmt,
+            },
+            scale: 1.0 / (dh as f32).sqrt(),
+        };
+        let av_cfg = MatmulCfg {
+            plan: GemmPlan {
+                name: "av".into(),
+                m: s,
+                k: s,
+                n: dh,
+                asg: rand_assignment(rng, s),
+                fmt,
+            },
+            scale: 1.0,
+        };
+        let qk_prep = prepare_matmul(&qk_cfg, None);
+        let av_prep = prepare_matmul(&av_cfg, None);
+        let qk_bound = qk_prep.bind(&mut machine);
+        let av_bound = av_prep.bind(&mut machine);
+
+        // QK^T (transpose_b): contracts channels with channels
+        let (mut scores, _) =
+            run_matmul(&mut machine, &qk_prep, &qk_bound, &q, Some((&kx, true)), &mut scratch);
+        let want_scores =
+            ref_gemm(&qk_cfg.plan, qk_cfg.scale, heads, &q, |h, kk, j| kx.at(h, j, kk));
+        if scores.data != want_scores.data {
+            return Err(format!("QK^T mismatch (heads={heads} s={s} dh={dh})"));
+        }
+
+        // the engine's own f32 softmax keeps the chain exact end-to-end
+        eltwise::softmax_rows(&mut scores.data, scores.c);
+
+        // A·V: contracts A's channels with V's sequence axis
+        let (ctx, _) = run_matmul(
+            &mut machine,
+            &av_prep,
+            &av_bound,
+            &scores,
+            Some((&vx, false)),
+            &mut scratch,
+        );
+        let want_ctx = ref_gemm(&av_cfg.plan, 1.0, heads, &scores, |h, kk, j| vx.at(h, kk, j));
+        if ctx.data != want_ctx.data {
+            return Err(format!("A*V mismatch (heads={heads} s={s} dh={dh})"));
+        }
+
+        // --- element-wise epilogues vs plain f64 references ---
+        let row = 1 + rng.below(12) as usize;
+        let rows = 1 + rng.below(4) as usize;
+        let vals: Vec<f32> = (0..rows * row).map(|_| rng.range(-4.0, 4.0)).collect();
+
+        let mut sm = vals.clone();
+        eltwise::softmax_rows(&mut sm, row);
+        for (r, chunk) in vals.chunks(row).enumerate() {
+            let max = chunk.iter().copied().fold(f64::NEG_INFINITY, |x, v| x.max(v as f64));
+            let exps: Vec<f64> = chunk.iter().map(|&v| (v as f64 - max).exp()).collect();
+            let sum: f64 = exps.iter().sum();
+            for (c, e) in exps.iter().enumerate() {
+                let diff = (sm[r * row + c] as f64 - e / sum).abs();
+                if diff > 1e-5 {
+                    return Err(format!("softmax off f64 oracle by {diff}"));
+                }
+            }
+        }
+
+        let gamma: Vec<f32> = (0..row).map(|_| rng.range(0.5, 1.5)).collect();
+        let beta: Vec<f32> = (0..row).map(|_| rng.range(-0.5, 0.5)).collect();
+        let mut ln = vals.clone();
+        eltwise::layernorm_rows(&mut ln, row, &gamma, &beta);
+        for (r, chunk) in vals.chunks(row).enumerate() {
+            let mean = chunk.iter().map(|&v| v as f64).sum::<f64>() / row as f64;
+            let var = chunk.iter().map(|&v| (v as f64 - mean) * (v as f64 - mean)).sum::<f64>()
+                / row as f64;
+            let inv = 1.0 / (var + eltwise::LN_EPS as f64).sqrt();
+            for (c, &v) in chunk.iter().enumerate() {
+                let want = (v as f64 - mean) * inv * gamma[c] as f64 + beta[c] as f64;
+                let diff = (ln[r * row + c] as f64 - want).abs();
+                // near-degenerate rows amplify f32 cancellation by `inv`
+                if diff > 1e-5 + 4e-6 * inv {
+                    return Err(format!("layernorm off f64 oracle by {diff}"));
+                }
+            }
+        }
+
+        let mut ge = vals.clone();
+        eltwise::gelu_rows(&mut ge);
+        let c = (2.0 / std::f64::consts::PI).sqrt();
+        for (i, &v) in vals.iter().enumerate() {
+            let x = v as f64;
+            let want = 0.5 * x * (1.0 + (c * (x + 0.044715 * x * x * x)).tanh());
+            if (ge[i] as f64 - want).abs() > 1e-5 {
+                return Err(format!("gelu off f64 oracle at x={x}"));
+            }
+        }
+
         Ok(())
     });
 }

@@ -25,6 +25,8 @@ fn prepared_model_matches_legacy_bit_exact() {
         ("tinynet", DesignPoint::Patterns(4)),
         ("tinynet", DesignPoint::Uniform(2)),
         ("tinydw", DesignPoint::Patterns(8)),
+        ("tinyattn", DesignPoint::Patterns(4)),
+        ("tinyattn", DesignPoint::Uniform(2)),
     ] {
         let (net, inputs) = net_and_inputs(model, dp, 4);
         let prepared = Arc::new(PreparedModel::prepare(&net.nodes));
@@ -153,6 +155,118 @@ fn concurrent_workers_are_deterministic_and_bit_exact() {
     for (a, b) in run1.iter().zip(&run2) {
         assert_eq!(a.id, b.id);
         assert_eq!(a.output.data, b.output.data, "request {}", a.id);
+    }
+}
+
+#[test]
+fn tinyattn_prepared_matches_one_shot_under_4_workers() {
+    let (net, inputs) = net_and_inputs("tinyattn", DesignPoint::Patterns(4), 16);
+    let legacy: Vec<Vec<f32>> =
+        inputs.iter().map(|x| run_network(&net.nodes, x).output.data.clone()).collect();
+    let prepared = Arc::new(PreparedModel::prepare(&net.nodes));
+    // 2 blocks x (wq, wk, wv, qk, av, wo, ff1, ff2) prepared kernels
+    assert_eq!(prepared.num_layers(), 16);
+    for max_batch in [1usize, 4] {
+        let cfg = ServeConfig {
+            workers: 4,
+            batch: BatchConfig { max_batch, max_delay: Duration::from_millis(1) },
+        };
+        let done = serve_all(&prepared, &cfg, inputs.clone());
+        assert_eq!(done.len(), inputs.len());
+        for c in &done {
+            assert_eq!(
+                c.output.data,
+                legacy[c.id as usize],
+                "request {} (max_batch {max_batch})",
+                c.id
+            );
+            assert!(c.output.data.iter().all(|v| v.is_finite()));
+            assert_eq!(c.per_layer.len(), 16);
+        }
+    }
+}
+
+#[test]
+fn tinyattn_dynamic_operands_deterministic_across_placement() {
+    // QK^T / A·V pack their "weight" operand per request into per-worker
+    // scratch — the same request must produce bit-identical results no
+    // matter which worker or batch slot it lands in, and no matter how
+    // warm the worker's machine already is.
+    let (net, inputs) = net_and_inputs("tinyattn", DesignPoint::Patterns(8), 1);
+    let prepared = Arc::new(PreparedModel::prepare(&net.nodes));
+    let mut engine = EngineMachine::new(&prepared);
+    let reference = engine.run(&inputs[0]);
+    let again = engine.run(&inputs[0]); // warm machine, same request
+    assert_eq!(reference.output.data, again.output.data);
+    assert_eq!(reference.total.instrs, again.total.instrs);
+
+    let cfg = ServeConfig {
+        workers: 4,
+        batch: BatchConfig { max_batch: 3, max_delay: Duration::from_millis(1) },
+    };
+    let copies = vec![inputs[0].clone(); 12];
+    let done = serve_all(&prepared, &cfg, copies);
+    assert_eq!(done.len(), 12);
+    for c in &done {
+        assert_eq!(
+            c.output.data, reference.output.data,
+            "request {} on worker {} batch {}",
+            c.id, c.worker, c.batch_id
+        );
+    }
+}
+
+#[test]
+fn transpose_hw_swaps_axes_and_roundtrips() {
+    use soniq::sim::network::{Node, INPUT};
+    let t = Tensor { h: 3, w: 5, c: 2, data: (0..30).map(|i| i as f32).collect() };
+    let once = run_network(&[Node::TransposeHW { x: INPUT }], &t);
+    assert_eq!((once.output.h, once.output.w, once.output.c), (5, 3, 2));
+    for h in 0..3 {
+        for w in 0..5 {
+            for c in 0..2 {
+                assert_eq!(once.output.at(w, h, c), t.at(h, w, c), "h{h} w{w} c{c}");
+            }
+        }
+    }
+    // transposing twice is the identity
+    let twice = run_network(&[Node::TransposeHW { x: INPUT }, Node::TransposeHW { x: 0 }], &t);
+    assert_eq!(twice.output.data, t.data);
+}
+
+#[test]
+fn batcher_edge_cases() {
+    let mk = |id, t| Request { id, input: Tensor::zeros(1, 1, 1), enqueued: t };
+
+    // flush on a never-used empty batcher is a no-op
+    let mut b = DynamicBatcher::new(BatchConfig {
+        max_batch: 8,
+        max_delay: Duration::from_millis(5),
+    });
+    assert!(b.flush().is_none());
+    assert!(b.next_deadline().is_none());
+
+    // the deadline trigger fires at the exact deadline instant (>=, not >)
+    let t0 = Instant::now();
+    assert!(b.push(mk(0, t0)).is_none());
+    let deadline = b.next_deadline().expect("deadline while pending");
+    assert_eq!(deadline, t0 + Duration::from_millis(5));
+    assert!(b.poll_deadline(deadline - Duration::from_nanos(1)).is_none());
+    let batch = b.poll_deadline(deadline).expect("exact-instant close");
+    assert_eq!(batch.requests.len(), 1);
+    assert!(b.is_empty());
+
+    // max_batch = 1 closes every push as its own batch
+    let mut b1 = DynamicBatcher::new(BatchConfig {
+        max_batch: 1,
+        max_delay: Duration::from_secs(3600),
+    });
+    for id in 0..3u64 {
+        let batch = b1.push(mk(id, Instant::now())).expect("size trigger on every push");
+        assert_eq!(batch.requests.len(), 1);
+        assert_eq!(batch.requests[0].id, id);
+        assert!(b1.is_empty());
+        assert!(b1.next_deadline().is_none());
     }
 }
 

@@ -140,6 +140,80 @@ pub fn emit_gemm(plan: &GemmPlan, bufs: &LayerBufs, pattern_base: u8, sink: &mut
     }
 }
 
+/// Causal-mask variant of [`emit_gemm`] for attention score GEMMs
+/// (`m = n` = sequence positions): output `(i, j)` is only accumulated
+/// for `j <= i`, and fully-masked columns are skipped outright, so a
+/// prefix run never spends MACs (or B-column loads) on future positions.
+/// The epilogue is expected to fill the untouched upper triangle with
+/// `-inf` before softmax; the skipped accumulators are never read.
+///
+/// Register blocking matches [`emit_gemm`]: a block of up to 8 A rows is
+/// stashed per chunk, and each B column is loaded once per block that
+/// contains at least one unmasked row (column `j` feeds rows `i >= j`,
+/// so columns past the block's last row are dropped from the `j` loop).
+pub fn emit_gemm_causal(plan: &GemmPlan, bufs: &LayerBufs, pattern_base: u8, sink: &mut dyn Sink) {
+    assert_eq!(plan.m, plan.n, "causal mask needs a square (position x position) GEMM");
+    let chunks = plan.layer_plan().chunks();
+    let nch = chunks.len();
+    for (ci, &(pat, valid)) in chunks.iter().enumerate() {
+        let partial = valid < pat.capacity() && plan.fmt == DataFormat::Smol;
+        if partial {
+            sink.emit(Instr::LdQ {
+                dst: MASK,
+                addr: Addr { buf: bufs.masks, off: (ci * 16) as u32 },
+            });
+        }
+        let pat_id = pattern_base + ci as u8;
+        let mut i0 = 0usize;
+        while i0 < plan.m {
+            let rows = ROW_BLOCK.min(plan.m - i0);
+            for r in 0..rows {
+                let reg = A_REG + r as u8;
+                sink.emit(Instr::LdQ {
+                    dst: reg,
+                    addr: Addr { buf: bufs.input, off: (((i0 + r) * nch + ci) * 16) as u32 },
+                });
+                if partial {
+                    sink.emit(Instr::Vand { dst: reg, a: reg, b: MASK });
+                }
+            }
+            // columns past the block's last row feed no row of this block
+            for j in 0..=(i0 + rows - 1) {
+                sink.emit(Instr::LdQ {
+                    dst: B_REG,
+                    addr: Addr { buf: bufs.weights, off: ((j * nch + ci) * 16) as u32 },
+                });
+                for r in 0..rows {
+                    if i0 + r < j {
+                        continue; // future position: masked out
+                    }
+                    let a_reg = A_REG + r as u8;
+                    let out = Addr {
+                        buf: bufs.out,
+                        off: ((j * plan.m + i0 + r) * 4) as u32,
+                    };
+                    match plan.fmt {
+                        DataFormat::Smol => {
+                            sink.emit(Instr::VmacP { dst: TMP, a: a_reg, b: B_REG, pat: pat_id });
+                            sink.emit(Instr::ReduceAcc { src: TMP, addr: out });
+                        }
+                        DataFormat::Int8 => {
+                            sink.emit(Instr::VmacI8 { dst: TMP, a: a_reg, b: B_REG });
+                            sink.emit(Instr::ReduceAcc { src: TMP, addr: out });
+                        }
+                        DataFormat::Fp32 => {
+                            sink.emit(Instr::VmovZ { dst: ACC });
+                            sink.emit(Instr::VfmaF32 { dst: ACC, a: a_reg, b: B_REG });
+                            sink.emit(Instr::ReduceAcc { src: ACC, addr: out });
+                        }
+                    }
+                }
+            }
+            i0 += rows;
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -193,6 +267,34 @@ mod tests {
         emit_gemm(&p, &bufs(), 0, &mut c);
         assert_eq!(c.vand, 6); // one per stashed A row
         assert_eq!(p.layer_plan().tail_bias(), 8 * 225);
+    }
+
+    #[test]
+    fn causal_emitter_skips_upper_triangle() {
+        // m = n = 10, k = 32 @4b (1 full chunk): only j <= i pairs MAC
+        let p = plan(10, 32, 10, 4);
+        let mut c = Counter::default();
+        emit_gemm_causal(&p, &bufs(), 0, &mut c);
+        let lower = (10 * 11 / 2) as u64;
+        assert_eq!(c.vmac, lower);
+        assert_eq!(c.stores, lower);
+        // loads: 10 A rows once; block 0 (rows 0..8) needs B cols 0..8,
+        // block 1 (rows 8..10) needs B cols 0..10
+        assert_eq!(c.loads, 10 + 8 + 10);
+        // strictly cheaper than the full emitter
+        let mut full = Counter::default();
+        emit_gemm(&p, &bufs(), 0, &mut full);
+        assert!(c.vmac < full.vmac && c.loads < full.loads);
+    }
+
+    #[test]
+    fn causal_emitter_masks_partial_chunks() {
+        // k = 24 in a 32-capacity chunk: every stashed A row is vand-masked
+        let p = plan(4, 24, 4, 4);
+        let mut c = Counter::default();
+        emit_gemm_causal(&p, &bufs(), 0, &mut c);
+        assert_eq!(c.vand, 4);
+        assert_eq!(c.vmac, 4 * 5 / 2);
     }
 
     #[test]

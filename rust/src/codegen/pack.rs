@@ -4,6 +4,7 @@
 
 use crate::codegen::{DataFormat, LayerKind, LayerPlan};
 use crate::simd::vector::{pack_values, tail_mask};
+use crate::smol::pattern_match::Assignment;
 use crate::smol::quant;
 
 /// Quantize + rearrange + pack input activations.
@@ -134,15 +135,51 @@ pub fn pack_weights_into(plan: &LayerPlan, w: &[f32], out: &mut Vec<u8>) {
     }
 }
 
+/// Quantize + pack one *column* of a SMOL operand: `vals` holds the
+/// column's `cin` values in original channel order, and the appended
+/// bytes are its chunk vectors in layout order — exactly the
+/// `n_chunks * 16` bytes one `cout` index (or one sequence position of a
+/// dynamic GEMM operand) occupies in [`pack_weights_into`]'s output, and
+/// equally the packed-activation bytes of a single-row (`hin=1, win=1`)
+/// plan. This is the per-position unit the serving KV cache appends:
+/// one call per new decode position, against a fixed assignment, through
+/// caller-owned scratch (`tmp`), so the append path never re-packs the
+/// prefix and never allocates beyond amortized `out` growth.
+pub fn pack_column_into(asg: &Assignment, vals: &[f32], tmp: &mut Vec<f32>, out: &mut Vec<u8>) {
+    assert_eq!(vals.len(), asg.num_channels());
+    let mut base = 0usize;
+    for (pat, &valid) in asg.chunks.iter().zip(asg.valid.iter()) {
+        if valid == 0 {
+            continue;
+        }
+        tmp.clear();
+        for e in 0..valid as usize {
+            let ch = asg.order[base + e] as usize;
+            tmp.push(quant::quantize(vals[ch], asg.precision[ch]));
+        }
+        out.extend_from_slice(&pack_values(pat, tmp).to_bytes());
+        base += valid as usize;
+    }
+}
+
 /// Per-chunk tail masks (16 bytes each).
 pub fn pack_masks(plan: &LayerPlan) -> Vec<u8> {
+    let mut out = Vec::new();
+    pack_masks_into(plan, &mut out);
+    out
+}
+
+/// [`pack_masks`] into a caller-owned buffer (cleared + resized): the
+/// decode path re-derives masks per prefix length through reusable
+/// scratch.
+pub fn pack_masks_into(plan: &LayerPlan, out: &mut Vec<u8>) {
     let chunks = plan.chunks();
-    let mut out = vec![0u8; chunks.len().max(1) * 16];
+    out.clear();
+    out.resize(chunks.len().max(1) * 16, 0u8);
     for (ci, &(pat, valid)) in chunks.iter().enumerate() {
         let m = tail_mask(&pat, valid);
         out[ci * 16..ci * 16 + 16].copy_from_slice(&m.to_bytes());
     }
-    out
 }
 
 #[cfg(test)]
@@ -229,5 +266,44 @@ mod tests {
         let wdw: Vec<f32> = (0..3 * 3 * 24).map(|i| (i as f32 * 0.517).sin()).collect();
         assert_eq!(pack_weights(&dw, &wdw), pack_weights(&dw, &wdw));
         assert_eq!(pack_masks(&dw), pack_masks(&dw));
+    }
+
+    /// The KV-cache append unit must produce exactly the bytes the bulk
+    /// packer lays down for the same column: appending positions one at
+    /// a time is byte-identical to packing the whole operand at once.
+    #[test]
+    fn column_pack_matches_bulk_weight_pack() {
+        use crate::simd::patterns::design_subset;
+        use crate::smol::pattern_match::pattern_match;
+        let cin = 20usize;
+        let cout = 5usize;
+        let s: Vec<f32> = (0..cin).map(|i| ((i * 13 % 11) as f32) - 4.0).collect();
+        for asg in [Assignment::uniform(cin, 2), pattern_match(&s, &design_subset(8))] {
+            let plan = LayerPlan {
+                name: "col".into(),
+                kind: LayerKind::Dense,
+                cin,
+                cout,
+                kh: 1,
+                kw: 1,
+                stride: 1,
+                hin: 1,
+                win: 1,
+                asg: asg.clone(),
+                fmt: DataFormat::Smol,
+            };
+            let w: Vec<f32> = (0..cin * cout).map(|i| (i as f32 * 0.291).sin()).collect();
+            let bulk = pack_weights(&plan, &w);
+            let nch = plan.chunks().len();
+            let mut tmp = Vec::new();
+            let mut appended = Vec::new();
+            for j in 0..cout {
+                // column j of the [cin][cout] row-major operand
+                let col: Vec<f32> = (0..cin).map(|c| w[c * cout + j]).collect();
+                pack_column_into(&asg, &col, &mut tmp, &mut appended);
+                assert_eq!(appended.len(), (j + 1) * nch * 16);
+            }
+            assert_eq!(appended, bulk);
+        }
     }
 }

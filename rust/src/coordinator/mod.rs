@@ -329,6 +329,15 @@ pub struct SyntheticNet {
     /// sequence models `(1, seq_len, d_model)`
     pub input_shape: (usize, usize, usize),
     pub num_classes: usize,
+    /// decoder models: the per-token decode step graph over the same
+    /// weights as `nodes` (whose attention is then causal); prepare both
+    /// via `serve::PreparedModel::prepare_decoder`
+    pub step_nodes: Option<Vec<crate::sim::network::Node>>,
+    /// decode step input shape (`(1, 1, d_model)`)
+    pub step_input_shape: Option<(usize, usize, usize)>,
+    /// decoder models: KV caches / decode buffers are sized for this
+    /// many positions (0 for encoders)
+    pub max_positions: usize,
 }
 
 /// Build a small deterministic network for a design point without any
@@ -340,11 +349,30 @@ pub struct SyntheticNet {
 ///
 /// Models: `tinynet` (3 dense convs + GAP + FC, the netbuild topology),
 /// `tinydw` (dense stem + depthwise + pointwise + GAP + FC, to exercise
-/// the two-cycle multiply path) and `tinyattn` (a 2-block pre-LN
+/// the two-cycle multiply path), `tinyattn` (a 2-block pre-LN
 /// Transformer encoder: static Q/K/V/out/FFN projections on the GEMM
 /// emitter plus dynamic-operand QK^T and A·V, softmax/layernorm/GELU
-/// epilogues).
+/// epilogues) and `tinydec` (the causal *decoder* twin of `tinyattn`,
+/// with a per-token decode step graph for KV-cached serving — see
+/// [`synthetic_decoder`]).
 pub fn synthetic_network(model: &str, dp: DesignPoint, seed: u64) -> Result<SyntheticNet> {
+    synthetic_network_seq(model, dp, seed, None)
+}
+
+/// [`synthetic_network`] with an explicit sequence length for the
+/// sequence models (`tinyattn`, `tinydec`); `None` keeps the default
+/// (8). For `tinydec` the rng stream does not depend on the length, so
+/// the same `(dp, seed)` at two lengths is the identical model over a
+/// shorter or longer sequence — the decode tests compare cached steps
+/// against one-shot prefix runs this way. (`tinyattn` carries no such
+/// contract: its A·V node draws per-*position* sensitivities under
+/// P-points, so its stream shifts with the length.)
+pub fn synthetic_network_seq(
+    model: &str,
+    dp: DesignPoint,
+    seed: u64,
+    seq_len: Option<usize>,
+) -> Result<SyntheticNet> {
     use crate::codegen::gemm::GemmPlan;
     use crate::codegen::{LayerKind, LayerPlan};
     use crate::sim::network::{ConvLayerCfg, MatmulCfg, Node, INPUT};
@@ -439,6 +467,7 @@ pub fn synthetic_network(model: &str, dp: DesignPoint, seed: u64) -> Result<Synt
             cfg: Box::new(MatmulCfg {
                 plan: GemmPlan { name: name.into(), m, k, n, asg, fmt },
                 scale: 1.0,
+                causal: false,
             }),
             weights,
             input,
@@ -463,6 +492,7 @@ pub fn synthetic_network(model: &str, dp: DesignPoint, seed: u64) -> Result<Synt
             cfg: Box::new(MatmulCfg {
                 plan: GemmPlan { name: name.into(), m, k, n, asg, fmt },
                 scale,
+                causal: false,
             }),
             a,
             b,
@@ -515,7 +545,7 @@ pub fn synthetic_network(model: &str, dp: DesignPoint, seed: u64) -> Result<Synt
             // tensors. Q/K/V/out/FFN projections are static GEMMs
             // (prepare-once packed weights); QK^T and A·V are dynamic-
             // operand GEMMs whose "weight" side is packed per request.
-            let (s, d, heads, ffn) = (8usize, 16usize, 2usize, 32usize);
+            let (s, d, heads, ffn) = (seq_len.unwrap_or(8), 16usize, 2usize, 32usize);
             let dh = d / heads;
             let mut x = INPUT;
             for blk in 0..2 {
@@ -571,11 +601,241 @@ pub fn synthetic_network(model: &str, dp: DesignPoint, seed: u64) -> Result<Synt
             }
             input_shape = (1, s, d);
         }
+        "tinydec" => {
+            let cfg = DecoderCfg { seq: seq_len.unwrap_or(8), ..DecoderCfg::default() };
+            return synthetic_decoder(dp, seed, &cfg);
+        }
         other => {
-            bail!("no synthetic topology for model {other} (try tinynet, tinydw or tinyattn)")
+            bail!(
+                "no synthetic topology for model {other} \
+                 (try tinynet, tinydw, tinyattn or tinydec)"
+            )
         }
     }
-    Ok(SyntheticNet { nodes, input_shape, num_classes })
+    Ok(SyntheticNet {
+        nodes,
+        input_shape,
+        num_classes,
+        step_nodes: None,
+        step_input_shape: None,
+        max_positions: 0,
+    })
+}
+
+/// Shape of a synthetic decoder ([`synthetic_decoder`]).
+#[derive(Debug, Clone, Copy)]
+pub struct DecoderCfg {
+    /// prefill / one-shot sequence length (the step graph is length-free)
+    pub seq: usize,
+    pub d_model: usize,
+    pub heads: usize,
+    pub ffn: usize,
+    pub blocks: usize,
+    /// session KV caches and decode buffers are sized for this many
+    /// positions
+    pub max_positions: usize,
+}
+
+impl Default for DecoderCfg {
+    fn default() -> Self {
+        DecoderCfg { seq: 8, d_model: 16, heads: 2, ffn: 32, blocks: 2, max_positions: 128 }
+    }
+}
+
+/// Build a pre-LN *decoder* as twin graphs over one weight draw: a full
+/// causal (prefill / one-shot) graph at `cfg.seq` positions — causal
+/// QK^T scores, softmax, causal A·V — and the per-token decode step
+/// graph whose attention is the fused KV-cached [`Node::CachedAttn`]
+/// (`Node` = [`crate::sim::network::Node`]). The rng stream does not
+/// depend on `cfg.seq`, so rebuilding at another length yields the
+/// identical model; each cached decode step is bit-identical to running
+/// its full prefix through the one-shot graph.
+pub fn synthetic_decoder(dp: DesignPoint, seed: u64, cfg: &DecoderCfg) -> Result<SyntheticNet> {
+    use crate::codegen::gemm::GemmPlan;
+    use crate::sim::network::{AttnCfg, MatmulCfg, Node, INPUT};
+    use crate::util::rng::Rng;
+    use anyhow::bail;
+
+    let fmt = dp.fmt();
+    if fmt != DataFormat::Smol {
+        bail!("tinydec decode needs a quantized (SMOL) design point, got {}", dp.label());
+    }
+    let (s, d, heads, ffn) = (cfg.seq, cfg.d_model, cfg.heads, cfg.ffn);
+    assert!((1..=cfg.max_positions).contains(&s), "seq {s} out of [1, max_positions]");
+    assert_eq!(d % heads, 0, "d_model not divisible by heads");
+    let dh = d / heads;
+    // positions stream in one at a time, so the position (context
+    // contraction) axis carries a uniform precision: the design point's
+    // own width for U-points, 4 bits otherwise
+    let pos_prec: u8 = match dp {
+        DesignPoint::Uniform(b) => b,
+        _ => 4,
+    };
+    let scale = 1.0 / (dh as f32).sqrt();
+    let mut rng = Rng::new(0x4445_434f ^ seed);
+
+    let assign = |rng: &mut Rng, cin: usize| -> Assignment {
+        match dp {
+            DesignPoint::Fp32 | DesignPoint::Int8 => Assignment::uniform(cin, 4),
+            DesignPoint::Uniform(b) => Assignment::uniform(cin, b),
+            DesignPoint::Patterns(np) => {
+                let sv: Vec<f32> = (0..cin).map(|_| rng.range(-3.0, 6.0)).collect();
+                pattern_match(&sv, &design_subset(np))
+            }
+        }
+    };
+
+    /// Static projection GEMM node over pre-drawn weights.
+    #[allow(clippy::too_many_arguments)]
+    fn proj(
+        name: &str,
+        m: usize,
+        k: usize,
+        n: usize,
+        asg: Assignment,
+        weights: Vec<f32>,
+        input: usize,
+        fmt: DataFormat,
+    ) -> Node {
+        Node::Matmul {
+            cfg: Box::new(MatmulCfg {
+                plan: GemmPlan { name: name.into(), m, k, n, asg, fmt },
+                scale: 1.0,
+                causal: false,
+            }),
+            weights,
+            input,
+        }
+    }
+
+    let mut full: Vec<Node> = Vec::new();
+    let mut step: Vec<Node> = Vec::new();
+    let (mut xf, mut xs) = (INPUT, INPUT);
+    for blk in 0..cfg.blocks {
+        let nm = |op: &str| format!("b{blk}/{op}");
+        let gamma: Vec<f32> = (0..d).map(|_| rng.range(0.7, 1.3)).collect();
+        let beta: Vec<f32> = (0..d).map(|_| rng.range(-0.2, 0.2)).collect();
+        full.push(Node::LayerNorm { x: xf, gamma: gamma.clone(), beta: beta.clone() });
+        step.push(Node::LayerNorm { x: xs, gamma, beta });
+        let (ln1f, ln1s) = (full.len() - 1, step.len() - 1);
+
+        // q/k/v projections + head split, same weights in both graphs
+        let mut qkv_f = [0usize; 3];
+        let mut qkv_s = [0usize; 3];
+        for (pi, pname) in ["wq", "wk", "wv"].iter().enumerate() {
+            let a = assign(&mut rng, d);
+            let w: Vec<f32> = (0..d * d).map(|_| rng.range(-0.8, 0.8)).collect();
+            full.push(proj(&nm(pname), s, d, d, a.clone(), w.clone(), ln1f, fmt));
+            step.push(proj(&nm(pname), 1, d, d, a, w, ln1s, fmt));
+            full.push(Node::SplitHeads { x: full.len() - 1, heads });
+            step.push(Node::SplitHeads { x: step.len() - 1, heads });
+            qkv_f[pi] = full.len() - 1;
+            qkv_s[pi] = step.len() - 1;
+        }
+
+        let qk_asg = assign(&mut rng, dh);
+        // full graph: causal scores -> softmax -> causal A·V
+        full.push(Node::MatmulDyn {
+            cfg: Box::new(MatmulCfg {
+                plan: GemmPlan { name: nm("qk"), m: s, k: dh, n: s, asg: qk_asg.clone(), fmt },
+                scale,
+                causal: true,
+            }),
+            a: qkv_f[0],
+            b: qkv_f[1],
+            transpose_b: true,
+        });
+        full.push(Node::Softmax { x: full.len() - 1 });
+        full.push(Node::MatmulDyn {
+            cfg: Box::new(MatmulCfg {
+                plan: GemmPlan {
+                    name: nm("av"),
+                    m: s,
+                    k: s,
+                    n: dh,
+                    asg: Assignment::uniform(s, pos_prec),
+                    fmt,
+                },
+                scale: 1.0,
+                causal: true,
+            }),
+            a: full.len() - 1,
+            b: qkv_f[2],
+            transpose_b: false,
+        });
+        // step graph: the fused KV-cached attention over the same
+        // precisions (qk_asg on the dh axis, uniform on positions)
+        step.push(Node::CachedAttn {
+            cfg: Box::new(AttnCfg {
+                name: nm("attn"),
+                heads,
+                dh,
+                scale,
+                pos_prec,
+                dh_asg: qk_asg,
+                max_positions: cfg.max_positions,
+                fmt,
+            }),
+            q: qkv_s[0],
+            k: qkv_s[1],
+            v: qkv_s[2],
+        });
+        full.push(Node::MergeHeads { x: full.len() - 1 });
+        step.push(Node::MergeHeads { x: step.len() - 1 });
+
+        let a = assign(&mut rng, d);
+        let w: Vec<f32> = (0..d * d).map(|_| rng.range(-0.8, 0.8)).collect();
+        full.push(proj(&nm("wo"), s, d, d, a.clone(), w.clone(), full.len() - 1, fmt));
+        step.push(proj(&nm("wo"), 1, d, d, a, w, step.len() - 1, fmt));
+        full.push(Node::Add { a: full.len() - 1, b: xf, relu: false });
+        step.push(Node::Add { a: step.len() - 1, b: xs, relu: false });
+        let (res1f, res1s) = (full.len() - 1, step.len() - 1);
+
+        let gamma2: Vec<f32> = (0..d).map(|_| rng.range(0.7, 1.3)).collect();
+        let beta2: Vec<f32> = (0..d).map(|_| rng.range(-0.2, 0.2)).collect();
+        full.push(Node::LayerNorm { x: res1f, gamma: gamma2.clone(), beta: beta2.clone() });
+        step.push(Node::LayerNorm { x: res1s, gamma: gamma2, beta: beta2 });
+
+        let a = assign(&mut rng, d);
+        let w: Vec<f32> = (0..d * ffn).map(|_| rng.range(-0.8, 0.8)).collect();
+        full.push(proj(&nm("ff1"), s, d, ffn, a.clone(), w.clone(), full.len() - 1, fmt));
+        step.push(proj(&nm("ff1"), 1, d, ffn, a, w, step.len() - 1, fmt));
+        full.push(Node::Gelu { x: full.len() - 1 });
+        step.push(Node::Gelu { x: step.len() - 1 });
+
+        let a = assign(&mut rng, ffn);
+        let w: Vec<f32> = (0..ffn * d).map(|_| rng.range(-0.8, 0.8)).collect();
+        full.push(proj(&nm("ff2"), s, ffn, d, a.clone(), w.clone(), full.len() - 1, fmt));
+        step.push(proj(&nm("ff2"), 1, ffn, d, a, w, step.len() - 1, fmt));
+        full.push(Node::Add { a: full.len() - 1, b: res1f, relu: false });
+        step.push(Node::Add { a: step.len() - 1, b: res1s, relu: false });
+        xf = full.len() - 1;
+        xs = step.len() - 1;
+    }
+
+    Ok(SyntheticNet {
+        nodes: full,
+        input_shape: (1, s, d),
+        num_classes: d,
+        step_nodes: Some(step),
+        step_input_shape: Some((1, 1, d)),
+        max_positions: cfg.max_positions,
+    })
+}
+
+/// Deterministic decode-step token tensors (`(1, 1, d_model)`) for a
+/// decoder model; stream `k` is independent of the others, so one
+/// session's tokens can be replayed as a one-shot prefix.
+pub fn synthetic_step_inputs(net: &SyntheticNet, k: u64, n: usize, seed: u64) -> Vec<Tensor> {
+    use crate::util::rng::Rng;
+    let (h, w, c) = net.step_input_shape.expect("not a decoder model");
+    let mut rng = Rng::new(seed.wrapping_mul(0x9e37_79b9).wrapping_add(k.wrapping_mul(2) + 3));
+    (0..n)
+        .map(|_| {
+            let data: Vec<f32> = (0..h * w * c).map(|_| rng.range(-2.0, 2.0)).collect();
+            Tensor { h, w, c, data }
+        })
+        .collect()
 }
 
 /// Weight bits-per-parameter of a synthetic network, including pattern

@@ -14,6 +14,8 @@
 //!   soniq serve-bench --model tinynet --design P4 --requests 1024 \
 //!         --workers 4 --max-batch 16
 //!   soniq serve-bench --model tinyattn --design P4   # Transformer encoder
+//!   soniq serve-bench --model tinydec --decode --steps 64 --sessions 4 \
+//!         # KV-cached autoregressive decode vs prefix-repack baseline
 
 use anyhow::{bail, Result};
 use soniq::coordinator::{
@@ -122,8 +124,10 @@ fn main() -> Result<()> {
             );
         }
         Some("serve-bench") => {
-            use soniq::serve::{self, BatchConfig, ServeConfig};
-            use soniq::sim::network::run_network;
+            use soniq::coordinator::{synthetic_network_seq, synthetic_step_inputs};
+            use soniq::serve::{self, BatchConfig, ServeConfig, SetupTiming};
+            use soniq::sim::network::{run_network, Tensor};
+            use std::sync::Arc;
             use std::time::{Duration, Instant};
 
             let model = args.get_or("model", "tinynet");
@@ -133,16 +137,122 @@ fn main() -> Result<()> {
             let max_batch = args.get_usize("max-batch", 16).max(1);
             let max_delay_ms = args.get_usize("max-delay-ms", 2);
             let seed = args.get_usize("seed", 0) as u64;
+            let decode = args.has_flag("decode");
+
+            let net = synthetic_network(&model, design, seed)?;
+            let registry = serve::ModelRegistry::new();
+            let key = serve::ModelKey::new(model.clone(), design.label());
+            let cfg = ServeConfig {
+                workers,
+                batch: BatchConfig {
+                    max_batch,
+                    max_delay: Duration::from_millis(max_delay_ms as u64),
+                },
+            };
+            println!("== soniq serve-bench — {key} ==");
+
+            if decode {
+                // --- KV-cached autoregressive decode vs prefix repack ---
+                let steps = args.get_usize("steps", 64).max(1);
+                let n_sessions = args.get_usize("sessions", 4).max(1);
+                if net.step_nodes.is_none() {
+                    bail!("--decode needs a decoder model (try --model tinydec)");
+                }
+                if steps > net.max_positions {
+                    bail!("--steps {steps} exceeds max_positions {}", net.max_positions);
+                }
+                let tokens: Vec<Vec<Tensor>> = (0..n_sessions)
+                    .map(|k| synthetic_step_inputs(&net, k as u64, steps, seed + 1))
+                    .collect();
+
+                let t1 = Instant::now();
+                let prepared = registry.get_or_prepare(&key, || {
+                    serve::PreparedModel::prepare_decoder(
+                        &net.nodes,
+                        net.step_nodes.as_ref().unwrap(),
+                    )
+                });
+                let prepare = t1.elapsed();
+                // (decoder models always cache their decoder form under
+                // this key — see ModelRegistry::get_or_prepare)
+                println!(
+                    "prepared decoder `{key}` in {prepare:.2?} \
+                     ({} kernels; sessions cache packed K/V per step)",
+                    prepared.num_layers()
+                );
+
+                println!(
+                    "cached decode ({n_sessions} sessions x {steps} steps, \
+                     {workers} workers, session-affine batching):"
+                );
+                let t2 = Instant::now();
+                let mut server = serve::Server::start(Arc::clone(&prepared), &cfg);
+                let binds = server.bind_times();
+                let sids: Vec<serve::SessionId> =
+                    (0..n_sessions).map(|_| server.open_session()).collect();
+                for t in 0..steps {
+                    for (si, sid) in sids.iter().enumerate() {
+                        server.submit_step(*sid, tokens[si][t].clone());
+                    }
+                }
+                let mut done = server.shutdown();
+                let wall = t2.elapsed();
+                done.sort_by_key(|c| c.id);
+                let bind = binds.lock().unwrap().iter().max().copied().unwrap_or_default();
+                let report = serve::summarize(&done, wall, SetupTiming { prepare, bind });
+                report.print();
+
+                // prefix-repack baseline: re-run session 0's whole prefix
+                // through the one-shot causal graph at every step
+                println!("prefix-repack baseline (one-shot causal graph per step, 1 session):");
+                let t3 = Instant::now();
+                let mut baseline_cycles = 0u64;
+                let mut baseline_last: Vec<Vec<f32>> = Vec::with_capacity(steps);
+                for t in 0..steps {
+                    let net_t = synthetic_network_seq(&model, design, seed, Some(t + 1))?;
+                    let (h, w, c) = net_t.input_shape;
+                    let mut data = Vec::with_capacity(w * c);
+                    for tok in tokens[0].iter().take(t + 1) {
+                        data.extend_from_slice(&tok.data);
+                    }
+                    let res = run_network(&net_t.nodes, &Tensor { h, w, c, data });
+                    baseline_cycles += res.total.cycles();
+                    baseline_last.push(res.output.data[t * c..(t + 1) * c].to_vec());
+                }
+                let baseline_wall = t3.elapsed();
+
+                let s0: Vec<_> =
+                    done.iter().filter(|c| c.session == Some(sids[0].0)).collect();
+                let cached_cycles: u64 = s0.iter().map(|c| c.total.cycles()).sum();
+                let bitexact = s0.len() == steps
+                    && s0
+                        .iter()
+                        .enumerate()
+                        .all(|(t, c)| c.output.data == baseline_last[t]);
+                println!(
+                    "  {} simulated cycles/session ({:.2?} host wall)",
+                    baseline_cycles, baseline_wall
+                );
+                println!("  cached decode: {cached_cycles} simulated cycles/session");
+                println!("  decode steps bit-identical to prefix re-runs: {bitexact}");
+                println!(
+                    "  cached vs prefix-repack: {:.2}x fewer simulated cycles",
+                    baseline_cycles as f64 / cached_cycles.max(1) as f64
+                );
+                if args.has_flag("json") {
+                    println!("{}", report.to_json().to_string());
+                }
+                return Ok(());
+            }
+
+            // --- stateless serving vs the legacy one-shot path ---
             // the legacy loop re-packs weights + re-runs codegen per call;
             // cap it separately so huge request counts stay benchable
             let legacy_n = args
                 .get_usize("legacy-requests", n_requests.min(256))
                 .clamp(1, n_requests);
-
-            let net = synthetic_network(&model, design, seed)?;
             let inputs = synthetic_inputs(&net, n_requests, seed + 1);
 
-            println!("== soniq serve-bench — {model} / {} ==", design.label());
             println!("legacy one-shot path ({legacy_n} requests, pack + codegen every call):");
             let t0 = Instant::now();
             let mut legacy_out = Vec::with_capacity(legacy_n);
@@ -153,33 +263,38 @@ fn main() -> Result<()> {
             let legacy_rps = legacy_n as f64 / legacy_wall.as_secs_f64().max(1e-9);
             println!("  {legacy_n} requests in {legacy_wall:.2?}  ->  {legacy_rps:.1} req/s");
 
-            let registry = serve::ModelRegistry::new();
-            let key = serve::model_key(&model, &design.label());
             let t1 = Instant::now();
-            let prepared = registry.get_or_prepare(&key, || net.nodes.clone());
+            // decoder models cache their decoder form even for stateless
+            // serving, so one registry entry per key serves both paths
+            let prepared = registry.get_or_prepare(&key, || match &net.step_nodes {
+                Some(sn) => serve::PreparedModel::prepare_decoder(&net.nodes, sn),
+                None => serve::PreparedModel::prepare(&net.nodes),
+            });
+            let prepare = t1.elapsed();
             println!(
-                "prepared model `{key}` in {:.2?} ({} layers; registry caches it for reuse)",
-                t1.elapsed(),
+                "prepared model `{key}` in {prepare:.2?} \
+                 ({} layers; registry caches it for reuse)",
                 prepared.num_layers()
             );
             if let Some(bpp) = synthetic_bpp(&net) {
                 println!("  weight size: {bpp:.2} bits/param (incl. pattern metadata)");
             }
 
-            let cfg = ServeConfig {
-                workers,
-                batch: BatchConfig {
-                    max_batch,
-                    max_delay: Duration::from_millis(max_delay_ms as u64),
-                },
-            };
             println!(
                 "serving engine ({workers} workers, max batch {max_batch}, \
                  deadline {max_delay_ms} ms):"
             );
             let t2 = Instant::now();
-            let completions = serve::serve_all(&prepared, &cfg, inputs.clone());
-            let report = serve::summarize(&completions, t2.elapsed());
+            let mut server = serve::Server::start(Arc::clone(&prepared), &cfg);
+            let binds = server.bind_times();
+            for x in inputs.iter().cloned() {
+                server.submit(x);
+            }
+            let mut completions = server.shutdown();
+            let wall = t2.elapsed();
+            completions.sort_by_key(|c| c.id);
+            let bind = binds.lock().unwrap().iter().max().copied().unwrap_or_default();
+            let report = serve::summarize(&completions, wall, SetupTiming { prepare, bind });
             report.print();
 
             let bitexact = completions

@@ -1,12 +1,19 @@
-//! Dynamic request batching: a batch closes when it reaches
-//! `max_batch` requests (size trigger) or when its oldest request has
-//! waited `max_delay` (latency-deadline trigger), whichever comes first.
+//! Dynamic request batching with session affinity: requests group by
+//! *target* (a decode session's pinned worker, or `None` for stateless
+//! inference), a group closes when it reaches `max_batch` requests
+//! (size trigger) or when its oldest request has waited `max_delay`
+//! (latency-deadline trigger), and groups close in FIFO order of their
+//! oldest request, so interleaved encode/decode traffic cannot starve
+//! either side.
 //!
 //! The policy lives in [`DynamicBatcher`], a plain synchronous state
 //! machine (unit-testable without threads); the dispatcher thread in
-//! [`crate::serve::workers`] drives it from the submit channel.
+//! [`crate::serve::workers`] drives it from the submit channel and
+//! routes closed batches to the shared queue (`target: None`) or the
+//! pinned worker's queue (`target: Some(w)`).
 
 use crate::sim::network::Tensor;
+use std::collections::VecDeque;
 use std::time::{Duration, Instant};
 
 /// Batching policy knobs.
@@ -24,28 +31,69 @@ impl Default for BatchConfig {
     }
 }
 
-/// One queued inference request.
+/// What a request asks the engine to do.
+#[derive(Debug, Clone)]
+pub enum Payload {
+    /// stateless one-shot inference over the full prepared graph
+    Infer(Tensor),
+    /// one autoregressive decode step for an open session
+    Step { session: u64, token: Tensor },
+    /// free a finished session's KV caches on its pinned worker
+    /// (produces no completion)
+    Close { session: u64 },
+}
+
+/// One queued request.
 #[derive(Debug, Clone)]
 pub struct Request {
     pub id: u64,
-    pub input: Tensor,
+    pub payload: Payload,
     /// when the request entered the queue (latency is measured from here)
     pub enqueued: Instant,
+    /// worker affinity: decode steps pin to the worker holding their
+    /// session's KV cache; `None` = any worker
+    pub target: Option<usize>,
 }
 
-/// A closed batch, ready for a worker.
+impl Request {
+    /// A stateless inference request (no worker affinity).
+    pub fn infer(id: u64, input: Tensor, enqueued: Instant) -> Request {
+        Request { id, payload: Payload::Infer(input), enqueued, target: None }
+    }
+
+    /// A decode-step request pinned to `target` (the worker holding the
+    /// session's KV cache).
+    pub fn step(id: u64, session: u64, token: Tensor, target: usize, enqueued: Instant) -> Request {
+        Request { id, payload: Payload::Step { session, token }, enqueued, target: Some(target) }
+    }
+
+    /// A session-close request pinned to `target`; rides the same FIFO
+    /// as the session's steps, so it frees the caches only after every
+    /// earlier step has executed.
+    pub fn close(id: u64, session: u64, target: usize, enqueued: Instant) -> Request {
+        Request { id, payload: Payload::Close { session }, enqueued, target: Some(target) }
+    }
+}
+
+/// A closed batch, ready for a worker. All requests share `target`:
+/// same-step decode requests of co-located sessions batch together,
+/// and never mix with another worker's pinned traffic.
 #[derive(Debug)]
 pub struct Batch {
+    pub target: Option<usize>,
     pub requests: Vec<Request>,
 }
 
-/// The batch-close policy: accumulates requests, emits a [`Batch`] on
-/// the size trigger ([`push`](Self::push)) or the deadline trigger
-/// ([`poll_deadline`](Self::poll_deadline)).
+/// The batch-close policy: accumulates requests into per-target groups
+/// (open [`Batch`]es), emits one on the size trigger
+/// ([`push`](Self::push)) or the deadline trigger
+/// ([`poll_deadline`](Self::poll_deadline)). Groups are kept in arrival
+/// order of their oldest request, so the front group always carries the
+/// earliest deadline (FIFO fairness).
 #[derive(Debug)]
 pub struct DynamicBatcher {
     cfg: BatchConfig,
-    pending: Vec<Request>,
+    groups: VecDeque<Batch>,
 }
 
 impl DynamicBatcher {
@@ -53,53 +101,59 @@ impl DynamicBatcher {
         // normalize rather than panic: a zero max_batch from a CLI flag
         // degenerates to single-request batches
         let cfg = BatchConfig { max_batch: cfg.max_batch.max(1), ..cfg };
-        DynamicBatcher { cfg, pending: Vec::with_capacity(cfg.max_batch) }
+        DynamicBatcher { cfg, groups: VecDeque::new() }
     }
 
     /// Requests currently waiting for a batch to close.
     pub fn len(&self) -> usize {
-        self.pending.len()
+        self.groups.iter().map(|g| g.requests.len()).sum()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.pending.is_empty()
+        self.groups.is_empty()
     }
 
-    /// Enqueue one request; returns the closed batch if this push filled
-    /// it to `max_batch`.
+    /// Enqueue one request into its target's group; returns that group
+    /// as a closed batch if this push filled it to `max_batch`.
     pub fn push(&mut self, r: Request) -> Option<Batch> {
-        self.pending.push(r);
-        if self.pending.len() >= self.cfg.max_batch {
-            self.take()
+        let idx = match self.groups.iter().position(|g| g.target == r.target) {
+            Some(i) => {
+                self.groups[i].requests.push(r);
+                i
+            }
+            None => {
+                self.groups.push_back(Batch { target: r.target, requests: vec![r] });
+                self.groups.len() - 1
+            }
+        };
+        if self.groups[idx].requests.len() >= self.cfg.max_batch {
+            self.groups.remove(idx)
         } else {
             None
         }
     }
 
-    /// The instant at which the current batch must close (oldest request
-    /// + `max_delay`); `None` while empty.
+    /// The instant at which the oldest open group must close (its first
+    /// request + `max_delay`); `None` while empty. Because groups are
+    /// ordered by first arrival, this is the earliest deadline overall.
     pub fn next_deadline(&self) -> Option<Instant> {
-        self.pending.first().map(|r| r.enqueued + self.cfg.max_delay)
+        self.groups
+            .front()
+            .map(|g| g.requests[0].enqueued + self.cfg.max_delay)
     }
 
-    /// Close the batch if its deadline has passed as of `now`.
+    /// Close the oldest group if its deadline has passed as of `now`
+    /// (call repeatedly to drain every due group).
     pub fn poll_deadline(&mut self, now: Instant) -> Option<Batch> {
         match self.next_deadline() {
-            Some(deadline) if now >= deadline => self.take(),
+            Some(deadline) if now >= deadline => self.flush(),
             _ => None,
         }
     }
 
-    /// Close whatever is pending (shutdown path).
+    /// Close the oldest open group unconditionally (shutdown drain;
+    /// call until `None`).
     pub fn flush(&mut self) -> Option<Batch> {
-        self.take()
-    }
-
-    fn take(&mut self) -> Option<Batch> {
-        if self.pending.is_empty() {
-            None
-        } else {
-            Some(Batch { requests: std::mem::take(&mut self.pending) })
-        }
+        self.groups.pop_front()
     }
 }

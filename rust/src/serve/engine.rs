@@ -1,58 +1,101 @@
-//! Prepare-once execution engine (refactored out of `sim::network`).
+//! The unified execution API: every graph node — conv/FC kernels, GEMMs,
+//! f32 epilogues and the KV-cached decode attention — is a
+//! [`PreparedOp`]: `prepare` (codegen + operand packing, once per model)
+//! `-> bind` (machine buffers + resident weights, once per worker)
+//! `-> run(ctx)` (the per-request work), with a typed [`ExecCtx`]
+//! carrying the simulated machine, per-worker scratch and — for decode
+//! steps — the request's per-session K/V state.
 //!
-//! The legacy path re-quantized and re-packed every layer's weights, re-
-//! emitted the Algorithm-4 kernel and re-allocated machine buffers on
-//! *every* inference. Serving amortizes all of that: [`prepare_conv`]
-//! runs codegen + weight/mask packing exactly once per layer, and
-//! [`EngineMachine`] binds the prepared layers to per-worker machine
-//! buffers exactly once, so a request only pays for activation packing,
-//! kernel replay and the epilogue. Outputs are bit-identical to the
-//! legacy path (`sim::network::run_conv` / `run_network` are now thin
-//! wrappers over this module).
+//! The legacy free-function zoo (`run_bound`, `run_matmul`,
+//! `run_conv_streaming`) and the `PreparedNode` match-dispatch are gone:
+//! [`run_graph`] walks a prepared graph and dispatches through the trait
+//! object, and `sim::network::{run_conv, run_network}` are thin clients
+//! of the same API. Outputs are bit-identical to the pre-trait engine.
+//!
+//! Kernel ops support two execution modes: *bound* (the serving path —
+//! replay a cached instruction stream against buffers bound once per
+//! worker) and *streaming* (`ctx.bound == None` — emit the kernel
+//! straight into the machine, O(1) memory even for paper-scale layers;
+//! the one-shot `run_conv` mode). Both share staging and epilogue, so
+//! their outputs and stats match exactly.
 
-use crate::codegen::gemm;
+use crate::codegen::gemm::{emit_gemm, emit_gemm_causal};
 use crate::codegen::{self, pack, LayerBufs, LayerKind, LayerPlan};
+use crate::serve::session::{CachedAttnOp, CausalAvOp, SessionState};
 use crate::sim::eltwise;
 use crate::sim::machine::{Machine, RunStats};
 use crate::sim::network::{ConvLayerCfg, LayerStat, MatmulCfg, NetResult, Node, Tensor, INPUT};
 use crate::simd::isa::{Addr, BufId, Instr};
 use crate::simd::patterns::Pattern;
 use crate::smol::quant;
+use std::collections::HashMap;
 use std::sync::Arc;
 
-/// One conv/FC layer with everything per-request work does NOT need to
-/// recompute: the emitted kernel, SMOL-packed weights, tail masks, the
-/// pattern table and the epilogue parameters.
-#[derive(Debug, Clone)]
-pub struct PreparedConv {
-    pub plan: LayerPlan,
-    bn_scale: Vec<f32>,
-    bn_bias: Vec<f32>,
-    bn_mean: Vec<f32>,
-    bn_var: Vec<f32>,
-    relu: bool,
-    /// Algorithm-4 kernel emitted against the symbolic buffer ids
-    /// 0=input, 1=weights, 2=out, 3=masks (retargeted at bind time).
-    program: Vec<Instr>,
-    /// the layer's chunk patterns (machine table base 0, as emitted)
-    patterns: Vec<Pattern>,
-    packed_weights: Vec<u8>,
-    packed_masks: Vec<u8>,
-    act_bytes: usize,
-    out_bytes: usize,
-    out_elems: usize,
+/// Reusable per-worker scratch shared by every op a worker executes:
+/// packed-activation staging bytes, the materialized/packed dynamic
+/// GEMM operand, and the quantize/mask buffers of the variable-length
+/// decode GEMMs. One per [`EngineMachine`], reused across all requests
+/// the worker serves, so the staging/packing hot path — in particular
+/// the decode K/V append path — performs no per-request allocation
+/// (output tensors and per-length kernel plans still allocate).
+#[derive(Debug, Default, Clone)]
+pub struct WorkerScratch {
+    /// materialized B^T for `transpose_b` dynamic operands
+    pub(crate) b: Vec<f32>,
+    /// packed dynamic "weight" operand bytes
+    pub(crate) packed_b: Vec<u8>,
+    /// packed-activation bytes every kernel's staging runs through
+    pub(crate) packed_act: Vec<u8>,
+    /// quantized-value gather buffer (KV appends, row packing)
+    pub(crate) vals: Vec<f32>,
+    /// per-chunk tail-mask bytes of variable-length row GEMMs
+    pub(crate) masks: Vec<u8>,
 }
 
-/// A prepared kernel (conv or GEMM) bound to concrete buffers of one
-/// [`Machine`]: masks — and, for static operands, weights — are written
-/// once; input/out (and dynamic-operand weights) act as reusable scratch.
+/// Everything an op may touch while running: the worker's simulated
+/// machine, this op's bound buffers (`None` in streaming mode), the
+/// worker scratch, and — inside a decode step — the session state that
+/// owns the growable packed K/V caches.
+pub struct ExecCtx<'a> {
+    pub m: &'a mut Machine,
+    pub bound: Option<&'a BoundKernel>,
+    pub scratch: &'a mut WorkerScratch,
+    pub session: Option<&'a mut SessionState>,
+}
+
+/// One prepared graph operation. Object-safe: a prepared model is a
+/// `Vec` of `Box<dyn PreparedOp>` plus input wiring, and the graph
+/// runner dispatches through this trait instead of an enum match.
+pub trait PreparedOp: std::fmt::Debug + Send + Sync {
+    /// Stats label; `Some` for kernel ops (they appear in per-layer
+    /// reports), `None` for epilogue/layout ops.
+    fn name(&self) -> Option<&str> {
+        None
+    }
+
+    /// Allocate this op's machine buffers and write its resident
+    /// operands (packed weights, tail masks) once per worker. Ops with
+    /// no machine state return `None`.
+    fn bind(&self, _m: &mut Machine) -> Option<BoundKernel> {
+        None
+    }
+
+    /// Execute against resolved input tensors, returning the output.
+    /// Simulated-cost accounting accumulates on `ctx.m`; the graph
+    /// runner collects it per node via `take_stats`.
+    fn run(&self, ctx: &mut ExecCtx<'_>, inputs: &[&Tensor]) -> Tensor;
+}
+
+/// A prepared kernel bound to concrete buffers of one [`Machine`]:
+/// masks — and, for static operands, weights — are written once;
+/// input/out (and dynamic-operand weights) act as reusable scratch.
 #[derive(Debug, Clone)]
 pub struct BoundKernel {
-    bufs: LayerBufs,
-    program: Vec<Instr>,
+    pub(crate) bufs: LayerBufs,
+    pub(crate) program: Vec<Instr>,
 }
 
-/// Buffer sizing shared by the prepared and streaming paths:
+/// Buffer sizing shared by the bound and streaming paths:
 /// (packed-activation bytes, output elements, output-buffer bytes).
 fn layer_sizes(plan: &LayerPlan) -> (usize, usize, usize) {
     let (hout, wout) = (plan.hout(), plan.wout());
@@ -67,139 +110,6 @@ fn layer_sizes(plan: &LayerPlan) -> (usize, usize, usize) {
     // lane capacity — size the buffer for both layouts
     let out_bytes = (out_elems * 4).max(hout * wout * n_chunks * 16);
     (act_bytes, out_elems, out_bytes)
-}
-
-/// Run codegen + weight/mask packing for one layer (the prepare-once
-/// half of what `run_conv` used to do per call).
-pub fn prepare_conv(cfg: &ConvLayerCfg) -> PreparedConv {
-    let plan = cfg.plan.clone();
-    let (act_bytes, out_elems, out_bytes) = layer_sizes(&plan);
-
-    let packed_weights = pack::pack_weights(&plan, &cfg.weights);
-    let packed_masks = pack::pack_masks(&plan);
-
-    let mut patterns = Vec::new();
-    let base = codegen::register_patterns(&plan, &mut patterns);
-    let symbolic = LayerBufs {
-        input: BufId(0),
-        weights: BufId(1),
-        out: BufId(2),
-        masks: BufId(3),
-    };
-    let mut program = Vec::new();
-    codegen::emit_layer(&plan, &symbolic, base, &mut program);
-
-    PreparedConv {
-        plan,
-        bn_scale: cfg.bn_scale.clone(),
-        bn_bias: cfg.bn_bias.clone(),
-        bn_mean: cfg.bn_mean.clone(),
-        bn_var: cfg.bn_var.clone(),
-        relu: cfg.relu,
-        program,
-        patterns,
-        packed_weights,
-        packed_masks,
-        act_bytes,
-        out_bytes,
-        out_elems,
-    }
-}
-
-impl PreparedConv {
-    /// Allocate this layer's buffers on `m` (same order and sizes as the
-    /// legacy per-call path: input, weights, out, masks), write the
-    /// cached weights + masks once, and retarget the kernel to the
-    /// allocated buffer ids.
-    pub fn bind(&self, m: &mut Machine) -> BoundKernel {
-        let bufs = LayerBufs {
-            input: m.alloc(self.act_bytes),
-            weights: m.alloc(self.packed_weights.len()),
-            out: m.alloc(self.out_bytes),
-            masks: m.alloc(self.packed_masks.len()),
-        };
-        m.write_bytes(bufs.weights, 0, &self.packed_weights);
-        m.write_bytes(bufs.masks, 0, &self.packed_masks);
-        let program = retarget(&self.program, &bufs);
-        BoundKernel { bufs, program }
-    }
-}
-
-/// One GEMM node with everything per-request work does NOT need to
-/// recompute. Static projections (`X · W`) cache their packed weights
-/// here exactly like a conv layer; dynamic-operand GEMMs (QK^T, A·V)
-/// cache the kernel, masks and pattern table but pack their "weight"
-/// side per request into the bound scratch buffer.
-#[derive(Debug, Clone)]
-pub struct PreparedMatmul {
-    /// the GEMM lowered to its 1x1 dense plan (`hin=m, win=1, cin=k,
-    /// cout=n`) — packing, chunking and tail bias reuse the conv view
-    pub plan: LayerPlan,
-    scale: f32,
-    program: Vec<Instr>,
-    patterns: Vec<Pattern>,
-    /// `Some` = static operand packed once; `None` = dynamic operand
-    packed_weights: Option<Vec<u8>>,
-    packed_masks: Vec<u8>,
-    act_bytes: usize,
-    weight_bytes: usize,
-    out_bytes: usize,
-}
-
-/// Run codegen (+ static weight packing) for one GEMM node. `weights`
-/// is the `[k][n]` row-major static operand, or `None` for a
-/// dynamic-operand GEMM.
-pub fn prepare_matmul(cfg: &MatmulCfg, weights: Option<&[f32]>) -> PreparedMatmul {
-    let plan = cfg.plan.layer_plan();
-    let (act_bytes, _, out_bytes) = layer_sizes(&plan);
-    let weight_bytes = plan.cout * plan.chunks().len() * 16;
-
-    let packed_weights = weights.map(|w| pack::pack_weights(&plan, w));
-    let packed_masks = pack::pack_masks(&plan);
-
-    let mut patterns = Vec::new();
-    let base = codegen::register_patterns(&plan, &mut patterns);
-    let symbolic = LayerBufs {
-        input: BufId(0),
-        weights: BufId(1),
-        out: BufId(2),
-        masks: BufId(3),
-    };
-    let mut program = Vec::new();
-    gemm::emit_gemm(&cfg.plan, &symbolic, base, &mut program);
-
-    PreparedMatmul {
-        plan,
-        scale: cfg.scale,
-        program,
-        patterns,
-        packed_weights,
-        packed_masks,
-        act_bytes,
-        weight_bytes,
-        out_bytes,
-    }
-}
-
-impl PreparedMatmul {
-    /// Allocate this GEMM's buffers on `m`, write masks (and, for a
-    /// static operand, the cached packed weights) once, and retarget the
-    /// kernel. For dynamic operands the weights buffer is per-worker
-    /// scratch refilled on every request.
-    pub fn bind(&self, m: &mut Machine) -> BoundKernel {
-        let bufs = LayerBufs {
-            input: m.alloc(self.act_bytes),
-            weights: m.alloc(self.weight_bytes),
-            out: m.alloc(self.out_bytes),
-            masks: m.alloc(self.packed_masks.len()),
-        };
-        if let Some(w) = &self.packed_weights {
-            m.write_bytes(bufs.weights, 0, w);
-        }
-        m.write_bytes(bufs.masks, 0, &self.packed_masks);
-        let program = retarget(&self.program, &bufs);
-        BoundKernel { bufs, program }
-    }
 }
 
 /// Rewrite the symbolic buffer ids of a prepared kernel to the buffers a
@@ -245,7 +155,7 @@ pub(crate) fn valid_taps(plan: &LayerPlan, h: usize, w: usize) -> usize {
 }
 
 /// Per-request input staging, shared by every execution path (conv and
-/// GEMM, one-shot and prepared): pack the activations into the input
+/// GEMM, streaming and bound): pack the activations into the input
 /// buffer through caller-owned scratch, zero the accumulator scratch
 /// and charge the quantize/rearrange/pack pass as streaming cache
 /// traffic.
@@ -265,8 +175,7 @@ fn stage_input(
 
 /// Epilogue shared by both execution paths: accumulators -> f32 with
 /// tail-bias correction, BN, ReLU, output traffic charge; returns the
-/// layer output and this layer's run statistics.
-#[allow(clippy::too_many_arguments)]
+/// layer output.
 fn finish_layer(
     m: &mut Machine,
     plan: &LayerPlan,
@@ -274,7 +183,7 @@ fn finish_layer(
     relu: bool,
     bufs: &LayerBufs,
     out_elems: usize,
-) -> (Tensor, RunStats) {
+) -> Tensor {
     let (bn_scale, bn_bias, bn_mean, bn_var) = bn;
     let (hout, wout) = (plan.hout(), plan.wout());
     let bias = plan.tail_bias();
@@ -326,272 +235,692 @@ fn finish_layer(
     m.stream_touch(bufs.out, out_elems * 4, false);
     m.charge_bulk(out.data.len() as u64, (out.data.len() * 4) as u64);
 
-    (out, m.take_stats())
+    out
 }
 
-/// Execute one bound layer: pack + write the activations, replay the
-/// cached kernel, run the epilogue. This is the per-request half of the
-/// legacy `run_conv` — weight packing and codegen are gone from it.
-pub fn run_bound(
-    m: &mut Machine,
-    prep: &PreparedConv,
-    bound: &BoundKernel,
-    x: &Tensor,
-) -> (Tensor, RunStats) {
-    run_bound_with_scratch(m, prep, bound, x, &mut Vec::new())
+/// One conv/FC layer with everything per-request work does NOT need to
+/// recompute: the emitted kernel (bound mode only), SMOL-packed weights,
+/// tail masks, the pattern table and the epilogue parameters.
+#[derive(Debug, Clone)]
+pub struct PreparedConv {
+    pub plan: LayerPlan,
+    bn_scale: Vec<f32>,
+    bn_bias: Vec<f32>,
+    bn_mean: Vec<f32>,
+    bn_var: Vec<f32>,
+    relu: bool,
+    /// Algorithm-4 kernel emitted against the symbolic buffer ids
+    /// 0=input, 1=weights, 2=out, 3=masks (retargeted at bind time).
+    /// `None` for a streaming-mode op: the kernel is emitted straight
+    /// into the executing machine on every `run`, so no instruction
+    /// stream is ever materialized (O(1) memory for paper-scale layers).
+    program: Option<Vec<Instr>>,
+    /// the layer's chunk patterns (machine table base 0, as emitted)
+    patterns: Vec<Pattern>,
+    packed_weights: Vec<u8>,
+    packed_masks: Vec<u8>,
+    act_bytes: usize,
+    out_bytes: usize,
+    out_elems: usize,
 }
 
-/// [`run_bound`] through reusable caller scratch for the packed
-/// activations — the serving hot path, where per-request allocations
-/// are unwelcome.
-pub fn run_bound_with_scratch(
-    m: &mut Machine,
-    prep: &PreparedConv,
-    bound: &BoundKernel,
-    x: &Tensor,
-    scratch: &mut Vec<u8>,
-) -> (Tensor, RunStats) {
-    let plan = &prep.plan;
-    assert_eq!(x.c, plan.cin, "{}: cin mismatch", plan.name);
-    assert_eq!((x.h, x.w), (plan.hin, plan.win), "{}: spatial mismatch", plan.name);
-    stage_input(m, plan, &bound.bufs, &x.data, scratch);
+impl PreparedConv {
+    fn build(cfg: &ConvLayerCfg, materialize: bool) -> PreparedConv {
+        let plan = cfg.plan.clone();
+        let (act_bytes, out_elems, out_bytes) = layer_sizes(&plan);
 
-    // replay the cached Algorithm-4 kernel under the layer's patterns
-    m.patterns.clear();
-    m.patterns.extend_from_slice(&prep.patterns);
-    m.run(&bound.program);
+        let packed_weights = pack::pack_weights(&plan, &cfg.weights);
+        let packed_masks = pack::pack_masks(&plan);
 
-    let bn = (
-        prep.bn_scale.as_slice(),
-        prep.bn_bias.as_slice(),
-        prep.bn_mean.as_slice(),
-        prep.bn_var.as_slice(),
-    );
-    finish_layer(m, plan, bn, prep.relu, &bound.bufs, prep.out_elems)
-}
-
-/// Reusable per-worker packing scratch: the transposed/materialized
-/// dynamic "weight" matrix, its packed bytes, and the packed-activation
-/// bytes every layer's staging runs through. One per [`EngineMachine`],
-/// reused across all requests the worker serves (no per-request
-/// allocation in the hot path).
-#[derive(Debug, Default, Clone)]
-pub struct MatmulScratch {
-    b: Vec<f32>,
-    packed_b: Vec<u8>,
-    packed_act: Vec<u8>,
-}
-
-/// Execute one bound GEMM, batched over the `h` (head) axis of `a`.
-///
-/// `b_dyn = None` runs the static-operand form (weights already resident
-/// from bind time). `b_dyn = Some((tensor, transpose_b))` quantizes +
-/// packs the dynamic operand per head through `scratch` and writes it
-/// into the bound weights buffer before replaying the kernel — the
-/// per-request half of a dynamic-operand GEMM.
-pub fn run_matmul(
-    m: &mut Machine,
-    prep: &PreparedMatmul,
-    bound: &BoundKernel,
-    a: &Tensor,
-    b_dyn: Option<(&Tensor, bool)>,
-    scratch: &mut MatmulScratch,
-) -> (Tensor, RunStats) {
-    let plan = &prep.plan;
-    let (mm, kk, nn) = (plan.hin, plan.cin, plan.cout);
-    assert_eq!(a.w, mm, "{}: row (sequence) mismatch", plan.name);
-    assert_eq!(a.c, kk, "{}: contraction dim mismatch", plan.name);
-    if let Some((b, transpose_b)) = b_dyn {
-        assert_eq!(b.h, a.h, "{}: head-batch mismatch", plan.name);
-        if transpose_b {
-            assert_eq!((b.c, b.w), (kk, nn), "{}: B^T shape mismatch", plan.name);
+        let mut patterns = Vec::new();
+        let program = if materialize {
+            let base = codegen::register_patterns(&plan, &mut patterns);
+            let symbolic = LayerBufs {
+                input: BufId(0),
+                weights: BufId(1),
+                out: BufId(2),
+                masks: BufId(3),
+            };
+            let mut program = Vec::new();
+            codegen::emit_layer(&plan, &symbolic, base, &mut program);
+            Some(program)
         } else {
-            assert_eq!((b.w, b.c), (kk, nn), "{}: B shape mismatch", plan.name);
+            None
+        };
+
+        PreparedConv {
+            plan,
+            bn_scale: cfg.bn_scale.clone(),
+            bn_bias: cfg.bn_bias.clone(),
+            bn_mean: cfg.bn_mean.clone(),
+            bn_var: cfg.bn_var.clone(),
+            relu: cfg.relu,
+            program,
+            patterns,
+            packed_weights,
+            packed_masks,
+            act_bytes,
+            out_bytes,
+            out_elems,
         }
     }
 
-    let bias = plan.tail_bias();
-    let mut out = Tensor::zeros(a.h, mm, nn);
-    for h in 0..a.h {
-        // stage this head's A rows (quantize + pack, charged as
-        // streaming traffic like conv activation staging)
-        let a_head = &a.data[h * mm * kk..(h + 1) * mm * kk];
-        stage_input(m, plan, &bound.bufs, a_head, &mut scratch.packed_act);
+    /// Run codegen + weight/mask packing once; the resulting op is
+    /// bindable (serving mode: replay the cached kernel per request).
+    pub fn prepare(cfg: &ConvLayerCfg) -> PreparedConv {
+        PreparedConv::build(cfg, true)
+    }
 
-        if let Some((b, transpose_b)) = b_dyn {
-            // pack the dynamic operand: quantize to the contraction
-            // axis's per-channel precisions, exactly like static weights
-            let b_head = &b.data[h * b.w * b.c..(h + 1) * b.w * b.c];
-            if transpose_b {
-                // materialize B^T ([k][n] row-major) in scratch
-                scratch.b.clear();
-                scratch.b.reserve(kk * nn);
-                for kx in 0..kk {
-                    for j in 0..nn {
-                        scratch.b.push(b_head[j * kk + kx]);
+    /// Streaming-mode op: weights/masks are packed but no instruction
+    /// stream is materialized; every `run` emits the kernel directly
+    /// into the machine against freshly allocated buffers. The one-shot
+    /// `sim::network::run_conv` mode.
+    pub fn streaming(cfg: &ConvLayerCfg) -> PreparedConv {
+        PreparedConv::build(cfg, false)
+    }
+
+    fn bn(&self) -> (&[f32], &[f32], &[f32], &[f32]) {
+        (&self.bn_scale, &self.bn_bias, &self.bn_mean, &self.bn_var)
+    }
+}
+
+impl PreparedOp for PreparedConv {
+    fn name(&self) -> Option<&str> {
+        Some(&self.plan.name)
+    }
+
+    /// Allocate this layer's buffers (same order and sizes as the
+    /// streaming path: input, weights, out, masks), write the cached
+    /// weights + masks once, and retarget the kernel to the allocated
+    /// buffer ids.
+    fn bind(&self, m: &mut Machine) -> Option<BoundKernel> {
+        let program = self.program.as_ref().expect("streaming-mode conv cannot be bound");
+        let bufs = LayerBufs {
+            input: m.alloc(self.act_bytes),
+            weights: m.alloc(self.packed_weights.len()),
+            out: m.alloc(self.out_bytes),
+            masks: m.alloc(self.packed_masks.len()),
+        };
+        m.write_bytes(bufs.weights, 0, &self.packed_weights);
+        m.write_bytes(bufs.masks, 0, &self.packed_masks);
+        let program = retarget(program, &bufs);
+        Some(BoundKernel { bufs, program })
+    }
+
+    fn run(&self, ctx: &mut ExecCtx<'_>, inputs: &[&Tensor]) -> Tensor {
+        let x = inputs[0];
+        let plan = &self.plan;
+        assert_eq!(x.c, plan.cin, "{}: cin mismatch", plan.name);
+        assert_eq!((x.h, x.w), (plan.hin, plan.win), "{}: spatial mismatch", plan.name);
+
+        match ctx.bound {
+            Some(bound) => {
+                // serving path: stage activations, replay the cached
+                // kernel under the layer's patterns, epilogue
+                stage_input(ctx.m, plan, &bound.bufs, &x.data, &mut ctx.scratch.packed_act);
+                ctx.m.patterns.clear();
+                ctx.m.patterns.extend_from_slice(&self.patterns);
+                ctx.m.run(&bound.program);
+                finish_layer(ctx.m, plan, self.bn(), self.relu, &bound.bufs, self.out_elems)
+            }
+            None => {
+                // streaming path: fresh buffers, kernel emitted straight
+                // into the machine (Machine is the Sink)
+                let m = &mut *ctx.m;
+                let bufs = LayerBufs {
+                    input: m.alloc(self.act_bytes),
+                    weights: m.alloc(self.packed_weights.len()),
+                    out: m.alloc(self.out_bytes),
+                    masks: m.alloc(self.packed_masks.len()),
+                };
+                m.write_bytes(bufs.weights, 0, &self.packed_weights);
+                m.write_bytes(bufs.masks, 0, &self.packed_masks);
+                stage_input(m, plan, &bufs, &x.data, &mut ctx.scratch.packed_act);
+                m.patterns.clear();
+                let base = codegen::register_patterns(plan, &mut m.patterns);
+                codegen::emit_layer(plan, &bufs, base, m);
+                finish_layer(m, plan, self.bn(), self.relu, &bufs, self.out_elems)
+            }
+        }
+    }
+}
+
+/// One GEMM node with everything per-request work does NOT need to
+/// recompute. Static projections (`X · W`) cache their packed weights
+/// exactly like a conv layer; dynamic-operand GEMMs (QK^T, A·V) cache
+/// the kernel, masks and pattern table but pack their "weight" side per
+/// request into the bound scratch buffer. The causal score variant
+/// emits the masked kernel and epilogues the upper triangle to `-inf`.
+#[derive(Debug, Clone)]
+pub struct PreparedMatmul {
+    /// the GEMM lowered to its 1x1 dense plan (`hin=m, win=1, cin=k,
+    /// cout=n`) — packing, chunking and tail bias reuse the conv view
+    pub plan: LayerPlan,
+    scale: f32,
+    /// `None` = static operand (packed once at prepare); `Some(t)` =
+    /// dynamic operand with `transpose_b = t`, packed per request
+    dynamic: Option<bool>,
+    causal: bool,
+    program: Vec<Instr>,
+    patterns: Vec<Pattern>,
+    packed_weights: Option<Vec<u8>>,
+    packed_masks: Vec<u8>,
+    act_bytes: usize,
+    weight_bytes: usize,
+    out_bytes: usize,
+}
+
+impl PreparedMatmul {
+    fn build(cfg: &MatmulCfg, weights: Option<&[f32]>, dynamic: Option<bool>) -> PreparedMatmul {
+        let plan = cfg.plan.layer_plan();
+        let (act_bytes, _, out_bytes) = layer_sizes(&plan);
+        let weight_bytes = plan.cout * plan.chunks().len() * 16;
+
+        let packed_weights = weights.map(|w| pack::pack_weights(&plan, w));
+        let packed_masks = pack::pack_masks(&plan);
+
+        let mut patterns = Vec::new();
+        let base = codegen::register_patterns(&plan, &mut patterns);
+        let symbolic = LayerBufs {
+            input: BufId(0),
+            weights: BufId(1),
+            out: BufId(2),
+            masks: BufId(3),
+        };
+        let mut program = Vec::new();
+        if cfg.causal {
+            emit_gemm_causal(&cfg.plan, &symbolic, base, &mut program);
+        } else {
+            emit_gemm(&cfg.plan, &symbolic, base, &mut program);
+        }
+
+        PreparedMatmul {
+            plan,
+            scale: cfg.scale,
+            dynamic,
+            causal: cfg.causal,
+            program,
+            patterns,
+            packed_weights,
+            packed_masks,
+            act_bytes,
+            weight_bytes,
+            out_bytes,
+        }
+    }
+
+    /// Run codegen + static weight packing for an `X · W` node.
+    /// `weights` is the `[k][n]` row-major static operand.
+    pub fn prepare_static(cfg: &MatmulCfg, weights: &[f32]) -> PreparedMatmul {
+        assert!(!cfg.causal, "{}: causal masking needs a dynamic operand", cfg.plan.name);
+        PreparedMatmul::build(cfg, Some(weights), None)
+    }
+
+    /// Run codegen for a dynamic-operand GEMM (both sides are node
+    /// outputs); the "weight" side is quantized + packed per request.
+    pub fn prepare_dyn(cfg: &MatmulCfg, transpose_b: bool) -> PreparedMatmul {
+        PreparedMatmul::build(cfg, None, Some(transpose_b))
+    }
+}
+
+impl PreparedOp for PreparedMatmul {
+    fn name(&self) -> Option<&str> {
+        Some(&self.plan.name)
+    }
+
+    /// Allocate this GEMM's buffers, write masks (and, for a static
+    /// operand, the cached packed weights) once, and retarget the
+    /// kernel. For dynamic operands the weights buffer is per-worker
+    /// scratch refilled on every request.
+    fn bind(&self, m: &mut Machine) -> Option<BoundKernel> {
+        let bufs = LayerBufs {
+            input: m.alloc(self.act_bytes),
+            weights: m.alloc(self.weight_bytes),
+            out: m.alloc(self.out_bytes),
+            masks: m.alloc(self.packed_masks.len()),
+        };
+        if let Some(w) = &self.packed_weights {
+            m.write_bytes(bufs.weights, 0, w);
+        }
+        m.write_bytes(bufs.masks, 0, &self.packed_masks);
+        let program = retarget(&self.program, &bufs);
+        Some(BoundKernel { bufs, program })
+    }
+
+    /// Execute the GEMM, batched over the `h` (head) axis of the first
+    /// input. One input runs the static-operand form (weights resident
+    /// from bind time); two inputs quantize + pack the second operand
+    /// per head through the worker scratch before replaying the kernel.
+    fn run(&self, ctx: &mut ExecCtx<'_>, inputs: &[&Tensor]) -> Tensor {
+        let bound = ctx.bound.expect("GEMM ops run against bound buffers");
+        let plan = &self.plan;
+        let (mm, kk, nn) = (plan.hin, plan.cin, plan.cout);
+        let a = inputs[0];
+        assert_eq!(a.w, mm, "{}: row (sequence) mismatch", plan.name);
+        assert_eq!(a.c, kk, "{}: contraction dim mismatch", plan.name);
+        let b_dyn: Option<(&Tensor, bool)> = match self.dynamic {
+            None => {
+                assert_eq!(inputs.len(), 1, "{}: static GEMM takes one input", plan.name);
+                None
+            }
+            Some(transpose_b) => {
+                let b = inputs[1];
+                assert_eq!(b.h, a.h, "{}: head-batch mismatch", plan.name);
+                if transpose_b {
+                    assert_eq!((b.c, b.w), (kk, nn), "{}: B^T shape mismatch", plan.name);
+                } else {
+                    assert_eq!((b.w, b.c), (kk, nn), "{}: B shape mismatch", plan.name);
+                }
+                Some((b, transpose_b))
+            }
+        };
+
+        let m = &mut *ctx.m;
+        let scratch = &mut *ctx.scratch;
+        let bias = plan.tail_bias();
+        let mut out = Tensor::zeros(a.h, mm, nn);
+        for h in 0..a.h {
+            // stage this head's A rows (quantize + pack, charged as
+            // streaming traffic like conv activation staging)
+            let a_head = &a.data[h * mm * kk..(h + 1) * mm * kk];
+            stage_input(m, plan, &bound.bufs, a_head, &mut scratch.packed_act);
+
+            if let Some((b, transpose_b)) = b_dyn {
+                // pack the dynamic operand: quantize to the contraction
+                // axis's per-channel precisions, exactly like static weights
+                let b_head = &b.data[h * b.w * b.c..(h + 1) * b.w * b.c];
+                if transpose_b {
+                    // materialize B^T ([k][n] row-major) in scratch
+                    scratch.b.clear();
+                    scratch.b.reserve(kk * nn);
+                    for kx in 0..kk {
+                        for j in 0..nn {
+                            scratch.b.push(b_head[j * kk + kx]);
+                        }
+                    }
+                    pack::pack_weights_into(plan, &scratch.b, &mut scratch.packed_b);
+                } else {
+                    pack::pack_weights_into(plan, b_head, &mut scratch.packed_b);
+                }
+                m.write_bytes(bound.bufs.weights, 0, &scratch.packed_b);
+                m.stream_touch(bound.bufs.weights, scratch.packed_b.len(), true);
+                m.charge_bulk(b_head.len() as u64, 0);
+            }
+
+            // replay the cached GEMM kernel under the layer's patterns
+            m.patterns.clear();
+            m.patterns.extend_from_slice(&self.patterns);
+            m.run(&bound.program);
+
+            // epilogue: accumulators -> f32 (single-tap tail bias) +
+            // scale; the causal upper triangle was never accumulated and
+            // is filled with -inf for the downstream softmax
+            for j in 0..nn {
+                for i in 0..mm {
+                    let v = if self.causal && j > i {
+                        f32::NEG_INFINITY
+                    } else {
+                        let acc = m.read_i32(bound.bufs.out, (j * mm + i) * 4);
+                        (acc as i64 - bias) as f32 / quant::ACC_SCALE * self.scale
+                    };
+                    out.data[(h * mm + i) * nn + j] = v;
+                }
+            }
+            m.stream_touch(bound.bufs.out, mm * nn * 4, false);
+            m.charge_bulk((mm * nn) as u64, (mm * nn * 4) as u64);
+        }
+        out
+    }
+}
+
+/// Row softmax along `c` for every (h, w).
+#[derive(Debug)]
+struct SoftmaxOp;
+
+impl PreparedOp for SoftmaxOp {
+    fn run(&self, ctx: &mut ExecCtx<'_>, inputs: &[&Tensor]) -> Tensor {
+        let mut t = inputs[0].clone();
+        eltwise::softmax_rows(&mut t.data, t.c);
+        let bytes = (t.data.len() * 8) as u64;
+        ctx.m.charge_bulk(t.data.len() as u64, bytes);
+        t
+    }
+}
+
+/// Layer normalization along `c` with per-feature affine.
+#[derive(Debug)]
+struct LayerNormOp {
+    gamma: Vec<f32>,
+    beta: Vec<f32>,
+}
+
+impl PreparedOp for LayerNormOp {
+    fn run(&self, ctx: &mut ExecCtx<'_>, inputs: &[&Tensor]) -> Tensor {
+        let mut t = inputs[0].clone();
+        eltwise::layernorm_rows(&mut t.data, t.c, &self.gamma, &self.beta);
+        let bytes = (t.data.len() * 8) as u64;
+        ctx.m.charge_bulk(t.data.len() as u64, bytes);
+        t
+    }
+}
+
+/// GELU activation (tanh approximation).
+#[derive(Debug)]
+struct GeluOp;
+
+impl PreparedOp for GeluOp {
+    fn run(&self, ctx: &mut ExecCtx<'_>, inputs: &[&Tensor]) -> Tensor {
+        let mut t = inputs[0].clone();
+        eltwise::gelu_rows(&mut t.data);
+        let bytes = (t.data.len() * 8) as u64;
+        ctx.m.charge_bulk(t.data.len() as u64, bytes);
+        t
+    }
+}
+
+/// Swap the `h` and `w` axes.
+#[derive(Debug)]
+struct TransposeHWOp;
+
+impl PreparedOp for TransposeHWOp {
+    fn run(&self, ctx: &mut ExecCtx<'_>, inputs: &[&Tensor]) -> Tensor {
+        let tx = inputs[0];
+        let mut t = Tensor::zeros(tx.w, tx.h, tx.c);
+        for h in 0..tx.h {
+            for w in 0..tx.w {
+                for c in 0..tx.c {
+                    t.data[(w * t.w + h) * t.c + c] = tx.at(h, w, c);
+                }
+            }
+        }
+        let bytes = (t.data.len() * 8) as u64;
+        ctx.m.charge_bulk(t.data.len() as u64, bytes);
+        t
+    }
+}
+
+/// `(1, s, heads*dh)` -> `(heads, s, dh)`.
+#[derive(Debug)]
+struct SplitHeadsOp {
+    heads: usize,
+}
+
+impl PreparedOp for SplitHeadsOp {
+    fn run(&self, ctx: &mut ExecCtx<'_>, inputs: &[&Tensor]) -> Tensor {
+        let tx = inputs[0];
+        let hd = self.heads;
+        assert_eq!(tx.h, 1, "SplitHeads expects an unsplit (h=1) tensor");
+        assert_eq!(tx.c % hd, 0, "channels not divisible by heads");
+        let dh = tx.c / hd;
+        let mut t = Tensor::zeros(hd, tx.w, dh);
+        for s in 0..tx.w {
+            for head in 0..hd {
+                for c in 0..dh {
+                    t.data[(head * t.w + s) * dh + c] = tx.data[s * tx.c + head * dh + c];
+                }
+            }
+        }
+        let bytes = (t.data.len() * 8) as u64;
+        ctx.m.charge_bulk(t.data.len() as u64, bytes);
+        t
+    }
+}
+
+/// `(heads, s, dh)` -> `(1, s, heads*dh)` (inverse of SplitHeads).
+#[derive(Debug)]
+struct MergeHeadsOp;
+
+impl PreparedOp for MergeHeadsOp {
+    fn run(&self, ctx: &mut ExecCtx<'_>, inputs: &[&Tensor]) -> Tensor {
+        let tx = inputs[0];
+        let (hd, dh) = (tx.h, tx.c);
+        let mut t = Tensor::zeros(1, tx.w, hd * dh);
+        for s in 0..tx.w {
+            for head in 0..hd {
+                for c in 0..dh {
+                    t.data[s * t.c + head * dh + c] = tx.data[(head * tx.w + s) * dh + c];
+                }
+            }
+        }
+        let bytes = (t.data.len() * 8) as u64;
+        ctx.m.charge_bulk(t.data.len() as u64, bytes);
+        t
+    }
+}
+
+/// Element-wise residual add, optionally fused with ReLU.
+#[derive(Debug)]
+struct AddOp {
+    relu: bool,
+}
+
+impl PreparedOp for AddOp {
+    fn run(&self, ctx: &mut ExecCtx<'_>, inputs: &[&Tensor]) -> Tensor {
+        let (ta, tb) = (inputs[0], inputs[1]);
+        assert_eq!(ta.data.len(), tb.data.len());
+        let mut t = ta.clone();
+        for (v, w) in t.data.iter_mut().zip(&tb.data) {
+            *v += w;
+            if self.relu {
+                *v = v.max(0.0);
+            }
+        }
+        let bytes = (t.data.len() * 8) as u64;
+        ctx.m.charge_bulk(t.data.len() as u64, bytes);
+        t
+    }
+}
+
+/// Channel concatenation.
+#[derive(Debug)]
+struct ConcatCOp;
+
+impl PreparedOp for ConcatCOp {
+    fn run(&self, _ctx: &mut ExecCtx<'_>, inputs: &[&Tensor]) -> Tensor {
+        let (ta, tb) = (inputs[0], inputs[1]);
+        assert_eq!((ta.h, ta.w), (tb.h, tb.w));
+        let mut t = Tensor::zeros(ta.h, ta.w, ta.c + tb.c);
+        for h in 0..ta.h {
+            for w in 0..ta.w {
+                for c in 0..ta.c {
+                    t.data[(h * t.w + w) * t.c + c] = ta.at(h, w, c);
+                }
+                for c in 0..tb.c {
+                    t.data[(h * t.w + w) * t.c + ta.c + c] = tb.at(h, w, c);
+                }
+            }
+        }
+        t
+    }
+}
+
+/// Channel slice `[from, to)`.
+#[derive(Debug)]
+struct SliceCOp {
+    from: usize,
+    to: usize,
+}
+
+impl PreparedOp for SliceCOp {
+    fn run(&self, _ctx: &mut ExecCtx<'_>, inputs: &[&Tensor]) -> Tensor {
+        let tx = inputs[0];
+        let (from, to) = (self.from, self.to);
+        let mut t = Tensor::zeros(tx.h, tx.w, to - from);
+        for h in 0..tx.h {
+            for w in 0..tx.w {
+                for c in from..to {
+                    t.data[(h * t.w + w) * t.c + (c - from)] = tx.at(h, w, c);
+                }
+            }
+        }
+        t
+    }
+}
+
+/// Grouped channel shuffle.
+#[derive(Debug)]
+struct ShuffleCOp {
+    groups: usize,
+}
+
+impl PreparedOp for ShuffleCOp {
+    fn run(&self, _ctx: &mut ExecCtx<'_>, inputs: &[&Tensor]) -> Tensor {
+        let tx = inputs[0];
+        let g = self.groups;
+        let per = tx.c / g;
+        let mut t = Tensor::zeros(tx.h, tx.w, tx.c);
+        // NHWC shuffle: out[.., i*g + j] = in[.., j*per + i]
+        for h in 0..tx.h {
+            for w in 0..tx.w {
+                for j in 0..g {
+                    for i in 0..per {
+                        t.data[(h * t.w + w) * t.c + (i * g + j)] = tx.at(h, w, j * per + i);
                     }
                 }
-                pack::pack_weights_into(plan, &scratch.b, &mut scratch.packed_b);
-            } else {
-                pack::pack_weights_into(plan, b_head, &mut scratch.packed_b);
-            }
-            m.write_bytes(bound.bufs.weights, 0, &scratch.packed_b);
-            m.stream_touch(bound.bufs.weights, scratch.packed_b.len(), true);
-            m.charge_bulk(b_head.len() as u64, 0);
-        }
-
-        // replay the cached GEMM kernel under the layer's patterns
-        m.patterns.clear();
-        m.patterns.extend_from_slice(&prep.patterns);
-        m.run(&bound.program);
-
-        // epilogue: accumulators -> f32 (single-tap tail bias) + scale
-        for j in 0..nn {
-            for i in 0..mm {
-                let acc = m.read_i32(bound.bufs.out, (j * mm + i) * 4);
-                let v = (acc as i64 - bias) as f32 / quant::ACC_SCALE * prep.scale;
-                out.data[(h * mm + i) * nn + j] = v;
             }
         }
-        m.stream_touch(bound.bufs.out, mm * nn * 4, false);
-        m.charge_bulk((mm * nn) as u64, (mm * nn * 4) as u64);
+        t
     }
-    (out, m.take_stats())
 }
 
-/// One-shot streaming execution (the legacy `run_conv` shape): pack
-/// weights, allocate fresh buffers and emit the kernel *directly into
-/// the executing machine*, so no instruction stream is ever
-/// materialized. Keeps single-call memory O(1) for paper-scale layers;
-/// repeated inference should use [`prepare_conv`] + [`run_bound`]
-/// instead. Staging and epilogue are shared with the prepared path, so
-/// outputs are bit-identical between the two.
-pub fn run_conv_streaming(m: &mut Machine, cfg: &ConvLayerCfg, x: &Tensor) -> (Tensor, RunStats) {
-    let plan = &cfg.plan;
-    let (act_bytes, out_elems, out_bytes) = layer_sizes(plan);
-    let wts = pack::pack_weights(plan, &cfg.weights);
-    let msk = pack::pack_masks(plan);
-    let bufs = LayerBufs {
-        input: m.alloc(act_bytes),
-        weights: m.alloc(wts.len()),
-        out: m.alloc(out_bytes),
-        masks: m.alloc(msk.len()),
-    };
-    m.write_bytes(bufs.weights, 0, &wts);
-    m.write_bytes(bufs.masks, 0, &msk);
-    assert_eq!(x.c, plan.cin, "{}: cin mismatch", plan.name);
-    assert_eq!((x.h, x.w), (plan.hin, plan.win), "{}: spatial mismatch", plan.name);
-    stage_input(m, plan, &bufs, &x.data, &mut Vec::new());
+/// Global average pooling.
+#[derive(Debug)]
+struct GapOp;
 
-    // generate + execute the Algorithm-4 kernel (Machine is the Sink)
-    m.patterns.clear();
-    let base = codegen::register_patterns(plan, &mut m.patterns);
-    codegen::emit_layer(plan, &bufs, base, m);
-
-    let bn = (
-        cfg.bn_scale.as_slice(),
-        cfg.bn_bias.as_slice(),
-        cfg.bn_mean.as_slice(),
-        cfg.bn_var.as_slice(),
-    );
-    finish_layer(m, plan, bn, cfg.relu, &bufs, out_elems)
+impl PreparedOp for GapOp {
+    fn run(&self, ctx: &mut ExecCtx<'_>, inputs: &[&Tensor]) -> Tensor {
+        let tx = inputs[0];
+        let mut t = Tensor::zeros(1, 1, tx.c);
+        for c in 0..tx.c {
+            let mut s = 0.0f32;
+            for h in 0..tx.h {
+                for w in 0..tx.w {
+                    s += tx.at(h, w, c);
+                }
+            }
+            t.data[c] = s / (tx.h * tx.w) as f32;
+        }
+        let bytes = (tx.data.len() * 4) as u64;
+        ctx.m.charge_bulk(tx.data.len() as u64, bytes);
+        t
+    }
 }
 
-/// A prepared network node (conv/GEMM layers carry their prepared form).
-#[derive(Debug, Clone)]
-pub enum PreparedNode {
-    Conv { prep: PreparedConv, input: usize },
-    MatmulStatic { prep: PreparedMatmul, input: usize },
-    MatmulDyn { prep: PreparedMatmul, a: usize, b: usize, transpose_b: bool },
-    Softmax { x: usize },
-    LayerNorm { x: usize, gamma: Vec<f32>, beta: Vec<f32> },
-    Gelu { x: usize },
-    TransposeHW { x: usize },
-    SplitHeads { x: usize, heads: usize },
-    MergeHeads { x: usize },
-    Add { a: usize, b: usize, relu: bool },
-    ConcatC { a: usize, b: usize },
-    SliceC { x: usize, from: usize, to: usize },
-    ShuffleC { x: usize, groups: usize },
-    Gap { x: usize },
+/// A prepared graph node: the op plus its input wiring (`INPUT` = the
+/// graph input tensor).
+#[derive(Debug)]
+pub struct PreparedNode {
+    pub op: Box<dyn PreparedOp>,
+    pub inputs: Vec<usize>,
+}
+
+/// A decode step graph (`m = 1` projections + [`CachedAttnOp`] nodes)
+/// prepared alongside the full graph of a decoder model.
+#[derive(Debug)]
+pub struct StepModel {
+    pub nodes: Vec<PreparedNode>,
+    /// number of KV cache slots a session of this model owns (one per
+    /// `CachedAttn` node, in graph order)
+    pub slots: usize,
+    /// tightest `max_positions` across the attention nodes: the hard
+    /// per-session step limit (`usize::MAX` if the graph has none)
+    pub max_positions: usize,
 }
 
 /// A whole network prepared once: codegen plans, packed weights and mask
 /// tables cached per layer. Shareable across worker threads via `Arc`.
-#[derive(Debug, Clone)]
+#[derive(Debug)]
 pub struct PreparedModel {
     pub nodes: Vec<PreparedNode>,
+    /// decode step graph (decoder models only)
+    pub step: Option<StepModel>,
+}
+
+fn prepare_nodes(nodes: &[Node]) -> (Vec<PreparedNode>, usize) {
+    let mut slots = 0usize;
+    let prepared = nodes
+        .iter()
+        .map(|n| {
+            let (op, inputs): (Box<dyn PreparedOp>, Vec<usize>) = match n {
+                Node::Conv { cfg, input } => {
+                    (Box::new(PreparedConv::prepare(cfg)), vec![*input])
+                }
+                Node::Matmul { cfg, weights, input } => {
+                    (Box::new(PreparedMatmul::prepare_static(cfg, weights)), vec![*input])
+                }
+                Node::MatmulDyn { cfg, a, b, transpose_b } => {
+                    if cfg.causal && !*transpose_b {
+                        // causal A·V: per-row growing contraction — the
+                        // one-shot twin of the KV-cached decode step
+                        (Box::new(CausalAvOp::prepare(cfg)), vec![*a, *b])
+                    } else {
+                        (Box::new(PreparedMatmul::prepare_dyn(cfg, *transpose_b)), vec![*a, *b])
+                    }
+                }
+                Node::CachedAttn { cfg, q, k, v } => {
+                    let op = CachedAttnOp::prepare(cfg, slots);
+                    slots += 1;
+                    (Box::new(op), vec![*q, *k, *v])
+                }
+                Node::Softmax { x } => (Box::new(SoftmaxOp), vec![*x]),
+                Node::LayerNorm { x, gamma, beta } => (
+                    Box::new(LayerNormOp { gamma: gamma.clone(), beta: beta.clone() }),
+                    vec![*x],
+                ),
+                Node::Gelu { x } => (Box::new(GeluOp), vec![*x]),
+                Node::TransposeHW { x } => (Box::new(TransposeHWOp), vec![*x]),
+                Node::SplitHeads { x, heads } => {
+                    (Box::new(SplitHeadsOp { heads: *heads }), vec![*x])
+                }
+                Node::MergeHeads { x } => (Box::new(MergeHeadsOp), vec![*x]),
+                Node::Add { a, b, relu } => (Box::new(AddOp { relu: *relu }), vec![*a, *b]),
+                Node::ConcatC { a, b } => (Box::new(ConcatCOp), vec![*a, *b]),
+                Node::SliceC { x, from, to } => {
+                    (Box::new(SliceCOp { from: *from, to: *to }), vec![*x])
+                }
+                Node::ShuffleC { x, groups } => {
+                    (Box::new(ShuffleCOp { groups: *groups }), vec![*x])
+                }
+                Node::Gap { x } => (Box::new(GapOp), vec![*x]),
+            };
+            PreparedNode { op, inputs }
+        })
+        .collect();
+    (prepared, slots)
 }
 
 impl PreparedModel {
-    /// Prepare every conv/FC/GEMM layer of a graph exactly once.
+    /// Prepare every layer of a graph exactly once.
     pub fn prepare(nodes: &[Node]) -> PreparedModel {
-        let nodes = nodes
-            .iter()
-            .map(|n| match n {
-                Node::Conv { cfg, input } => {
-                    PreparedNode::Conv { prep: prepare_conv(cfg), input: *input }
-                }
-                Node::Matmul { cfg, weights, input } => PreparedNode::MatmulStatic {
-                    prep: prepare_matmul(cfg, Some(weights)),
-                    input: *input,
-                },
-                Node::MatmulDyn { cfg, a, b, transpose_b } => PreparedNode::MatmulDyn {
-                    prep: prepare_matmul(cfg, None),
-                    a: *a,
-                    b: *b,
-                    transpose_b: *transpose_b,
-                },
-                Node::Softmax { x } => PreparedNode::Softmax { x: *x },
-                Node::LayerNorm { x, gamma, beta } => PreparedNode::LayerNorm {
-                    x: *x,
-                    gamma: gamma.clone(),
-                    beta: beta.clone(),
-                },
-                Node::Gelu { x } => PreparedNode::Gelu { x: *x },
-                Node::TransposeHW { x } => PreparedNode::TransposeHW { x: *x },
-                Node::SplitHeads { x, heads } => {
-                    PreparedNode::SplitHeads { x: *x, heads: *heads }
-                }
-                Node::MergeHeads { x } => PreparedNode::MergeHeads { x: *x },
-                Node::Add { a, b, relu } => PreparedNode::Add { a: *a, b: *b, relu: *relu },
-                Node::ConcatC { a, b } => PreparedNode::ConcatC { a: *a, b: *b },
-                Node::SliceC { x, from, to } => {
-                    PreparedNode::SliceC { x: *x, from: *from, to: *to }
-                }
-                Node::ShuffleC { x, groups } => {
-                    PreparedNode::ShuffleC { x: *x, groups: *groups }
-                }
-                Node::Gap { x } => PreparedNode::Gap { x: *x },
-            })
-            .collect();
-        PreparedModel { nodes }
+        let (nodes, _) = prepare_nodes(nodes);
+        PreparedModel { nodes, step: None }
     }
 
-    /// Number of prepared kernels (conv/FC layers and GEMMs).
+    /// Prepare a decoder: the full (one-shot / prefill) graph plus its
+    /// per-token decode step graph, which sessions execute via
+    /// [`EngineMachine::run_step`].
+    pub fn prepare_decoder(nodes: &[Node], step_nodes: &[Node]) -> PreparedModel {
+        let (nodes, _) = prepare_nodes(nodes);
+        let (step_prepared, slots) = prepare_nodes(step_nodes);
+        let max_positions = step_nodes
+            .iter()
+            .filter_map(|n| match n {
+                Node::CachedAttn { cfg, .. } => Some(cfg.max_positions),
+                _ => None,
+            })
+            .min()
+            .unwrap_or(usize::MAX);
+        PreparedModel {
+            nodes,
+            step: Some(StepModel { nodes: step_prepared, slots, max_positions }),
+        }
+    }
+
+    /// Number of prepared kernels (conv/FC layers, GEMMs and cached
+    /// attention nodes) in the full graph.
     pub fn num_layers(&self) -> usize {
-        self.nodes
-            .iter()
-            .filter(|n| {
-                matches!(
-                    n,
-                    PreparedNode::Conv { .. }
-                        | PreparedNode::MatmulStatic { .. }
-                        | PreparedNode::MatmulDyn { .. }
-                )
-            })
-            .count()
+        self.nodes.iter().filter(|n| n.op.name().is_some()).count()
     }
-}
-
-/// One worker's execution context: a simulated machine with every layer's
-/// weights resident, reused across all requests the worker serves.
-pub struct EngineMachine {
-    model: Arc<PreparedModel>,
-    m: Machine,
-    bound: Vec<Option<BoundKernel>>,
-    /// reusable pack scratch for dynamic GEMM operands
-    scratch: MatmulScratch,
 }
 
 fn node_input<'a>(outputs: &'a [Tensor], input: &'a Tensor, id: usize) -> &'a Tensor {
@@ -602,227 +931,115 @@ fn node_input<'a>(outputs: &'a [Tensor], input: &'a Tensor, id: usize) -> &'a Te
     }
 }
 
+/// Walk a prepared graph: resolve each node's inputs, dispatch through
+/// [`PreparedOp::run`], and collect per-node machine stats. The single
+/// execution loop behind one-shot inference, serving and decode steps.
+fn run_graph(
+    nodes: &[PreparedNode],
+    bound: &[Option<BoundKernel>],
+    m: &mut Machine,
+    scratch: &mut WorkerScratch,
+    mut session: Option<&mut SessionState>,
+    input: &Tensor,
+) -> NetResult {
+    let mut outputs: Vec<Tensor> = Vec::with_capacity(nodes.len());
+    let mut layers = Vec::new();
+    let mut total = RunStats::default();
+    for (ni, node) in nodes.iter().enumerate() {
+        let inputs: Vec<&Tensor> =
+            node.inputs.iter().map(|&id| node_input(&outputs, input, id)).collect();
+        let mut ctx = ExecCtx {
+            m: &mut *m,
+            bound: bound[ni].as_ref(),
+            scratch: &mut *scratch,
+            session: session.as_deref_mut(),
+        };
+        let out = node.op.run(&mut ctx, &inputs);
+        drop(inputs);
+        let stats = m.take_stats();
+        total.merge(&stats);
+        if let Some(name) = node.op.name() {
+            layers.push(LayerStat { name: name.to_string(), stats });
+        }
+        outputs.push(out);
+    }
+    NetResult { output: outputs.pop().unwrap(), layers, total }
+}
+
+/// One worker's execution context: a simulated machine with every
+/// prepared op's buffers bound and static weights resident, reused
+/// across all requests the worker serves — plus the KV-cache state of
+/// every decode session pinned to this worker.
+pub struct EngineMachine {
+    model: Arc<PreparedModel>,
+    m: Machine,
+    bound: Vec<Option<BoundKernel>>,
+    step_bound: Vec<Option<BoundKernel>>,
+    scratch: WorkerScratch,
+    sessions: HashMap<u64, SessionState>,
+}
+
 impl EngineMachine {
     /// Bind a prepared model to a fresh simulated machine (one per
-    /// worker): buffers allocated and weights/masks written exactly once.
+    /// worker): buffers allocated and weights/masks written exactly
+    /// once, for the full graph and — on decoders — the step graph.
     pub fn new(model: &Arc<PreparedModel>) -> EngineMachine {
         let mut m = Machine::new();
-        let bound: Vec<Option<BoundKernel>> = model
-            .nodes
-            .iter()
-            .map(|n| match n {
-                PreparedNode::Conv { prep, .. } => Some(prep.bind(&mut m)),
-                PreparedNode::MatmulStatic { prep, .. }
-                | PreparedNode::MatmulDyn { prep, .. } => Some(prep.bind(&mut m)),
-                _ => None,
-            })
-            .collect();
-        EngineMachine { model: Arc::clone(model), m, bound, scratch: MatmulScratch::default() }
+        let bound: Vec<Option<BoundKernel>> =
+            model.nodes.iter().map(|n| n.op.bind(&mut m)).collect();
+        let step_bound: Vec<Option<BoundKernel>> = match &model.step {
+            Some(step) => step.nodes.iter().map(|n| n.op.bind(&mut m)).collect(),
+            None => Vec::new(),
+        };
+        EngineMachine {
+            model: Arc::clone(model),
+            m,
+            bound,
+            step_bound,
+            scratch: WorkerScratch::default(),
+            sessions: HashMap::new(),
+        }
     }
 
-    /// Run one inference over the prepared graph. Functionally identical
-    /// to the legacy `run_network`, minus the per-call weight packing,
-    /// codegen and buffer allocation.
+    /// Run one inference over the prepared full graph.
     pub fn run(&mut self, input: &Tensor) -> NetResult {
-        let model = Arc::clone(&self.model);
-        let mut outputs: Vec<Tensor> = Vec::with_capacity(model.nodes.len());
-        let mut layers = Vec::new();
-        let mut total = RunStats::default();
-        for (ni, node) in model.nodes.iter().enumerate() {
-            let out = match node {
-                PreparedNode::Conv { prep, input: id } => {
-                    let x = node_input(&outputs, input, *id);
-                    let bound = self.bound[ni].as_ref().expect("conv layer bound");
-                    let (t, stats) = run_bound_with_scratch(
-                        &mut self.m,
-                        prep,
-                        bound,
-                        x,
-                        &mut self.scratch.packed_act,
-                    );
-                    total.merge(&stats);
-                    layers.push(LayerStat { name: prep.plan.name.clone(), stats });
-                    t
-                }
-                PreparedNode::MatmulStatic { prep, input: id } => {
-                    let x = node_input(&outputs, input, *id);
-                    let bound = self.bound[ni].as_ref().expect("matmul bound");
-                    let (t, stats) =
-                        run_matmul(&mut self.m, prep, bound, x, None, &mut self.scratch);
-                    total.merge(&stats);
-                    layers.push(LayerStat { name: prep.plan.name.clone(), stats });
-                    t
-                }
-                PreparedNode::MatmulDyn { prep, a, b, transpose_b } => {
-                    let ta = node_input(&outputs, input, *a);
-                    let tb = node_input(&outputs, input, *b);
-                    let bound = self.bound[ni].as_ref().expect("matmul bound");
-                    let (t, stats) = run_matmul(
-                        &mut self.m,
-                        prep,
-                        bound,
-                        ta,
-                        Some((tb, *transpose_b)),
-                        &mut self.scratch,
-                    );
-                    total.merge(&stats);
-                    layers.push(LayerStat { name: prep.plan.name.clone(), stats });
-                    t
-                }
-                PreparedNode::Softmax { x } => {
-                    let tx = node_input(&outputs, input, *x);
-                    let mut t = tx.clone();
-                    eltwise::softmax_rows(&mut t.data, t.c);
-                    let bytes = (t.data.len() * 8) as u64;
-                    total.add_bulk(t.data.len() as u64, bytes, &self.m.energy_cfg);
-                    t
-                }
-                PreparedNode::LayerNorm { x, gamma, beta } => {
-                    let tx = node_input(&outputs, input, *x);
-                    let mut t = tx.clone();
-                    eltwise::layernorm_rows(&mut t.data, t.c, gamma, beta);
-                    let bytes = (t.data.len() * 8) as u64;
-                    total.add_bulk(t.data.len() as u64, bytes, &self.m.energy_cfg);
-                    t
-                }
-                PreparedNode::Gelu { x } => {
-                    let tx = node_input(&outputs, input, *x);
-                    let mut t = tx.clone();
-                    eltwise::gelu_rows(&mut t.data);
-                    let bytes = (t.data.len() * 8) as u64;
-                    total.add_bulk(t.data.len() as u64, bytes, &self.m.energy_cfg);
-                    t
-                }
-                PreparedNode::TransposeHW { x } => {
-                    let tx = node_input(&outputs, input, *x);
-                    let mut t = Tensor::zeros(tx.w, tx.h, tx.c);
-                    for h in 0..tx.h {
-                        for w in 0..tx.w {
-                            for c in 0..tx.c {
-                                t.data[(w * t.w + h) * t.c + c] = tx.at(h, w, c);
-                            }
-                        }
-                    }
-                    let bytes = (t.data.len() * 8) as u64;
-                    total.add_bulk(t.data.len() as u64, bytes, &self.m.energy_cfg);
-                    t
-                }
-                PreparedNode::SplitHeads { x, heads } => {
-                    let tx = node_input(&outputs, input, *x);
-                    let hd = *heads;
-                    assert_eq!(tx.h, 1, "SplitHeads expects an unsplit (h=1) tensor");
-                    assert_eq!(tx.c % hd, 0, "channels not divisible by heads");
-                    let dh = tx.c / hd;
-                    let mut t = Tensor::zeros(hd, tx.w, dh);
-                    for s in 0..tx.w {
-                        for head in 0..hd {
-                            for c in 0..dh {
-                                t.data[(head * t.w + s) * dh + c] =
-                                    tx.data[s * tx.c + head * dh + c];
-                            }
-                        }
-                    }
-                    let bytes = (t.data.len() * 8) as u64;
-                    total.add_bulk(t.data.len() as u64, bytes, &self.m.energy_cfg);
-                    t
-                }
-                PreparedNode::MergeHeads { x } => {
-                    let tx = node_input(&outputs, input, *x);
-                    let (hd, dh) = (tx.h, tx.c);
-                    let mut t = Tensor::zeros(1, tx.w, hd * dh);
-                    for s in 0..tx.w {
-                        for head in 0..hd {
-                            for c in 0..dh {
-                                t.data[s * t.c + head * dh + c] =
-                                    tx.data[(head * tx.w + s) * dh + c];
-                            }
-                        }
-                    }
-                    let bytes = (t.data.len() * 8) as u64;
-                    total.add_bulk(t.data.len() as u64, bytes, &self.m.energy_cfg);
-                    t
-                }
-                PreparedNode::Add { a, b, relu } => {
-                    let ta = node_input(&outputs, input, *a);
-                    let tb = node_input(&outputs, input, *b);
-                    assert_eq!(ta.data.len(), tb.data.len());
-                    let mut t = ta.clone();
-                    for (v, w) in t.data.iter_mut().zip(&tb.data) {
-                        *v += w;
-                        if *relu {
-                            *v = v.max(0.0);
-                        }
-                    }
-                    let bytes = (t.data.len() * 8) as u64;
-                    total.add_bulk(t.data.len() as u64, bytes, &self.m.energy_cfg);
-                    t
-                }
-                PreparedNode::ConcatC { a, b } => {
-                    let ta = node_input(&outputs, input, *a);
-                    let tb = node_input(&outputs, input, *b);
-                    assert_eq!((ta.h, ta.w), (tb.h, tb.w));
-                    let mut t = Tensor::zeros(ta.h, ta.w, ta.c + tb.c);
-                    for h in 0..ta.h {
-                        for w in 0..ta.w {
-                            for c in 0..ta.c {
-                                t.data[(h * t.w + w) * t.c + c] = ta.at(h, w, c);
-                            }
-                            for c in 0..tb.c {
-                                t.data[(h * t.w + w) * t.c + ta.c + c] = tb.at(h, w, c);
-                            }
-                        }
-                    }
-                    t
-                }
-                PreparedNode::SliceC { x, from, to } => {
-                    let tx = node_input(&outputs, input, *x);
-                    let mut t = Tensor::zeros(tx.h, tx.w, to - from);
-                    for h in 0..tx.h {
-                        for w in 0..tx.w {
-                            for c in *from..*to {
-                                t.data[(h * t.w + w) * t.c + (c - from)] = tx.at(h, w, c);
-                            }
-                        }
-                    }
-                    t
-                }
-                PreparedNode::ShuffleC { x, groups } => {
-                    let tx = node_input(&outputs, input, *x);
-                    let g = *groups;
-                    let per = tx.c / g;
-                    let mut t = Tensor::zeros(tx.h, tx.w, tx.c);
-                    // NHWC shuffle: out[.., i*g + j] = in[.., j*per + i]
-                    for h in 0..tx.h {
-                        for w in 0..tx.w {
-                            for j in 0..g {
-                                for i in 0..per {
-                                    t.data[(h * t.w + w) * t.c + (i * g + j)] =
-                                        tx.at(h, w, j * per + i);
-                                }
-                            }
-                        }
-                    }
-                    t
-                }
-                PreparedNode::Gap { x } => {
-                    let tx = node_input(&outputs, input, *x);
-                    let mut t = Tensor::zeros(1, 1, tx.c);
-                    for c in 0..tx.c {
-                        let mut s = 0.0f32;
-                        for h in 0..tx.h {
-                            for w in 0..tx.w {
-                                s += tx.at(h, w, c);
-                            }
-                        }
-                        t.data[c] = s / (tx.h * tx.w) as f32;
-                    }
-                    let bytes = (tx.data.len() * 4) as u64;
-                    total.add_bulk(tx.data.len() as u64, bytes, &self.m.energy_cfg);
-                    t
-                }
-            };
-            outputs.push(out);
-        }
-        NetResult { output: outputs.pop().unwrap(), layers, total }
+        run_graph(
+            &self.model.nodes,
+            &self.bound,
+            &mut self.m,
+            &mut self.scratch,
+            None,
+            input,
+        )
+    }
+
+    /// Run one autoregressive decode step for `session`: the step graph
+    /// executes against the session's KV caches, which grow by exactly
+    /// one position. A new session id starts an empty session.
+    pub fn run_step(&mut self, session: u64, token: &Tensor) -> NetResult {
+        let step = self.model.step.as_ref().expect("model has no decode step graph");
+        let state = self
+            .sessions
+            .entry(session)
+            .or_insert_with(|| SessionState::new(step.slots));
+        run_graph(
+            &step.nodes,
+            &self.step_bound,
+            &mut self.m,
+            &mut self.scratch,
+            Some(state),
+            token,
+        )
+    }
+
+    /// Free a session's KV caches (no-op for an unknown id). A later
+    /// `run_step` with the same id starts a fresh, empty session.
+    pub fn end_session(&mut self, session: u64) {
+        self.sessions.remove(&session);
+    }
+
+    /// Number of decode sessions resident on this worker.
+    pub fn num_sessions(&self) -> usize {
+        self.sessions.len()
     }
 }

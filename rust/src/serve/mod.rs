@@ -3,46 +3,73 @@
 //! The deployability story of the paper (simple, fast mixed-precision
 //! kernels on commodity SIMD) only pays off when the quantize/pack/
 //! codegen work is amortized across requests. This subsystem prepares a
-//! model **once** — codegen plans, SMOL-packed weights, mask tables and
-//! scratch buffers cached per layer ([`engine`]) — and then serves
-//! request streams through a dynamic batcher ([`batcher`]: max-batch +
-//! latency-deadline close policy) feeding a pool of worker threads, one
-//! simulated SIMD machine per worker ([`workers`]). [`metrics`]
-//! aggregates host throughput / latency percentiles and the simulated
-//! per-layer cycle/energy totals into a JSON [`ServeReport`].
+//! model **once** — every graph op is a [`engine::PreparedOp`]
+//! (`prepare -> bind -> run(ctx)`), with codegen plans, SMOL-packed
+//! weights and mask tables cached per layer ([`engine`]) — and then
+//! serves request streams through a session-affine dynamic batcher
+//! ([`batcher`]: per-target groups, max-batch + latency-deadline close
+//! policy) feeding a pool of worker threads, one simulated SIMD machine
+//! per worker ([`workers`]).
 //!
-//! Outputs are bit-identical to the legacy one-shot path; see DESIGN.md
-//! for the architecture and `soniq serve-bench` for the end-to-end
-//! throughput comparison.
+//! Decoder models additionally serve **autoregressive decode**: a
+//! [`workers::Server`] session ([`workers::Server::open_session`] /
+//! [`workers::Server::submit_step`]) owns growable packed K/V operand
+//! caches ([`session`]) on its pinned worker, so each step appends one
+//! position instead of re-packing the whole prefix. [`metrics`]
+//! aggregates host throughput / latency percentiles (setup reported
+//! separately from steady state) and the simulated per-layer
+//! cycle/energy totals into a JSON [`ServeReport`].
+//!
+//! Outputs are bit-identical to the one-shot path; see DESIGN.md for
+//! the architecture and `soniq serve-bench` (with `--decode` for the
+//! KV-cache comparison) for the end-to-end numbers.
 
 pub mod batcher;
 pub mod engine;
 pub mod metrics;
+pub mod session;
 pub mod workers;
 
-pub use batcher::{Batch, BatchConfig, DynamicBatcher, Request};
+pub use batcher::{Batch, BatchConfig, DynamicBatcher, Payload, Request};
 pub use engine::{
-    prepare_conv, prepare_matmul, run_matmul, EngineMachine, MatmulScratch, PreparedConv,
-    PreparedMatmul, PreparedModel,
+    BoundKernel, EngineMachine, ExecCtx, PreparedConv, PreparedMatmul, PreparedModel,
+    PreparedNode, PreparedOp, StepModel, WorkerScratch,
 };
-pub use metrics::{percentile, summarize, LayerAgg, ServeReport};
-pub use workers::{Completion, ServeConfig, Server};
+pub use metrics::{percentile, summarize, LayerAgg, ServeReport, SetupTiming};
+pub use session::SessionState;
+pub use workers::{Completion, ServeConfig, Server, SessionId};
 
-use crate::sim::network::{Node, Tensor};
+use crate::sim::network::Tensor;
 use std::collections::HashMap;
+use std::fmt;
 use std::sync::{Arc, Mutex};
 
-/// Canonical registry key for a `{model, design point}` pair.
-pub fn model_key(model: &str, design: &str) -> String {
-    format!("{model}/{design}")
+/// Typed registry key for a `{model, design point}` pair (replaces the
+/// old stringly `"model/design"` key).
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct ModelKey {
+    pub model: String,
+    pub design: String,
 }
 
-/// Process-wide cache of prepared models, keyed by
-/// [`model_key`]`(model, design)`: a model is prepared on first request
-/// and every later lookup reuses the cached plans + packed weights.
+impl ModelKey {
+    pub fn new(model: impl Into<String>, design: impl Into<String>) -> ModelKey {
+        ModelKey { model: model.into(), design: design.into() }
+    }
+}
+
+impl fmt::Display for ModelKey {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}/{}", self.model, self.design)
+    }
+}
+
+/// Process-wide cache of prepared models, keyed by [`ModelKey`]: a
+/// model is prepared on first request and every later lookup reuses the
+/// cached plans + packed weights.
 #[derive(Default)]
 pub struct ModelRegistry {
-    inner: Mutex<HashMap<String, Arc<PreparedModel>>>,
+    inner: Mutex<HashMap<ModelKey, Arc<PreparedModel>>>,
 }
 
 impl ModelRegistry {
@@ -50,25 +77,32 @@ impl ModelRegistry {
         ModelRegistry::default()
     }
 
-    /// Look up `key`, preparing the model from `build()`'s graph on a
-    /// miss. Preparation runs outside the registry lock so cached
-    /// lookups never wait behind an unrelated expensive miss; if two
-    /// threads race the same cold key both may build, and the first
-    /// insert wins (later callers all share that one).
+    /// Look up `key`, preparing the model from `build()` on a miss.
+    ///
+    /// The key does not encode *how* the model was prepared, so a
+    /// decoder model must always be built with
+    /// [`PreparedModel::prepare_decoder`] — its full graph serves
+    /// stateless traffic too, while a step-less `prepare()` cached
+    /// under the same key would make a later `open_session` panic.
+    ///
+    /// Preparation runs outside the registry lock so cached lookups
+    /// never wait behind an unrelated expensive miss; if two threads
+    /// race the same cold key both may build, and the first insert wins
+    /// (later callers all share that one).
     pub fn get_or_prepare(
         &self,
-        key: &str,
-        build: impl FnOnce() -> Vec<Node>,
+        key: &ModelKey,
+        build: impl FnOnce() -> PreparedModel,
     ) -> Arc<PreparedModel> {
         if let Some(m) = self.inner.lock().unwrap().get(key) {
             return Arc::clone(m);
         }
-        let prepared = Arc::new(PreparedModel::prepare(&build()));
+        let prepared = Arc::new(build());
         let mut guard = self.inner.lock().unwrap();
-        Arc::clone(guard.entry(key.to_string()).or_insert(prepared))
+        Arc::clone(guard.entry(key.clone()).or_insert(prepared))
     }
 
-    pub fn contains(&self, key: &str) -> bool {
+    pub fn contains(&self, key: &ModelKey) -> bool {
         self.inner.lock().unwrap().contains_key(key)
     }
 

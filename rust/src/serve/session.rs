@@ -1,0 +1,434 @@
+//! Per-session decode state and the KV-cached attention ops.
+//!
+//! An autoregressive decode session's K/V operands only *grow*: position
+//! `t` adds one packed K column (the score GEMM's "weight" layout is
+//! append-only: `(position * n_chunks + chunk) * 16`) and one quantized
+//! V value per feature (the context GEMM chunks along the position
+//! axis, so only each feature's *tail* chunk vector is rewritten in
+//! place). [`CachedAttnOp`] appends, then runs score GEMM -> softmax ->
+//! context GEMM for the single new row — O(prefix) work per step, with
+//! no per-step heap allocation in the append path beyond amortized
+//! cache growth.
+//!
+//! [`CausalAvOp`] is the one-shot twin: the causal A·V of a *full*
+//! prefix run, which re-quantizes and re-packs the whole V prefix for
+//! every row (the cost the session cache amortizes away). Both funnel
+//! through [`run_gemm_row`], so a cached step is bit-identical to
+//! re-running its full prefix through the one-shot causal graph.
+//!
+//! The position axis must carry a *uniform* precision: positions stream
+//! in one at a time, and PatternMatch's importance reordering is
+//! undefined for positions that have not been seen yet. The `dh` axis
+//! keeps its arbitrary per-channel assignment.
+
+use crate::codegen::gemm::{emit_gemm, GemmPlan};
+use crate::codegen::{self, pack, DataFormat, LayerBufs};
+use crate::serve::engine::{BoundKernel, ExecCtx, PreparedOp};
+use crate::sim::eltwise;
+use crate::sim::machine::Machine;
+use crate::sim::network::{AttnCfg, MatmulCfg, Tensor};
+use crate::simd::patterns::Pattern;
+use crate::simd::vector::pack_values;
+use crate::smol::pattern_match::Assignment;
+use crate::smol::quant;
+
+/// One attention node's growable K/V cache within a session.
+#[derive(Debug, Default, Clone)]
+pub struct KvSlot {
+    /// positions appended so far
+    pub len: usize,
+    /// per head: packed K columns, `(position * nch_dh + chunk) * 16`
+    /// layout — append-only bytes
+    k_packed: Vec<Vec<u8>>,
+    /// per head: quantized V values, position-major `[pos * dh + feat]`
+    v_quant: Vec<Vec<f32>>,
+    /// per head, per feature: packed V chunk vectors along the position
+    /// axis (the last chunk is partial and rewritten in place on append)
+    v_packed: Vec<Vec<Vec<u8>>>,
+}
+
+impl KvSlot {
+    fn ensure_shape(&mut self, heads: usize, dh: usize) {
+        if self.k_packed.is_empty() {
+            self.k_packed = vec![Vec::new(); heads];
+            self.v_quant = vec![Vec::new(); heads];
+            self.v_packed = vec![vec![Vec::new(); dh]; heads];
+        }
+    }
+}
+
+/// All KV caches of one decode session (one [`KvSlot`] per
+/// `CachedAttn` node of the step graph, in graph order). Owned by the
+/// worker the session is pinned to.
+#[derive(Debug, Default, Clone)]
+pub struct SessionState {
+    pub slots: Vec<KvSlot>,
+}
+
+impl SessionState {
+    pub fn new(slots: usize) -> SessionState {
+        SessionState { slots: vec![KvSlot::default(); slots] }
+    }
+
+    /// Decoded positions so far (0 for a fresh session).
+    pub fn positions(&self) -> usize {
+        self.slots.first().map(|s| s.len).unwrap_or(0)
+    }
+}
+
+/// Execute one `m = 1` GEMM row: quantize + pack `a_vals` (original
+/// channel order) as the single activation row, write this contraction
+/// length's tail masks, stream-emit the Algorithm-4 GEMM kernel into
+/// the machine (no instruction stream is materialized — the kernel
+/// varies with the prefix length), and read the epilogued outputs.
+/// The right operand must already be resident in `bufs.weights` in the
+/// `(column * n_chunks + chunk) * 16` layout.
+///
+/// Both the cached decode step and the one-shot causal A·V run their
+/// rows through this function, which is what makes them bit-identical.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn run_gemm_row(
+    m: &mut Machine,
+    bufs: &LayerBufs,
+    plan: &GemmPlan,
+    a_vals: &[f32],
+    scale: f32,
+    vals: &mut Vec<f32>,
+    packed_act: &mut Vec<u8>,
+    masks: &mut Vec<u8>,
+    out: &mut [f32],
+) {
+    assert_eq!(plan.m, 1, "{}: row GEMMs are single-row", plan.name);
+    assert_eq!(out.len(), plan.n, "{}: output row length", plan.name);
+    let lp = plan.layer_plan();
+
+    // stage the A row (quantize + rearrange + pack through scratch,
+    // charged as streaming traffic like every kernel's staging)
+    packed_act.clear();
+    pack::pack_column_into(&plan.asg, a_vals, vals, packed_act);
+    m.write_bytes(bufs.input, 0, packed_act);
+    m.clear_buffer(bufs.out);
+    m.stream_touch(bufs.input, packed_act.len(), true);
+    m.charge_bulk(a_vals.len() as u64, 0);
+
+    // this contraction length's tail masks
+    pack::pack_masks_into(&lp, masks);
+    m.write_bytes(bufs.masks, 0, masks);
+
+    // stream-emit the kernel under the row's chunk patterns
+    m.patterns.clear();
+    let base = codegen::register_patterns(&lp, &mut m.patterns);
+    emit_gemm(plan, bufs, base, m);
+
+    // epilogue: accumulators -> f32, single-tap tail bias + scale
+    let bias = lp.tail_bias();
+    for (j, o) in out.iter_mut().enumerate() {
+        let acc = m.read_i32(bufs.out, j * 4);
+        *o = (acc as i64 - bias) as f32 / quant::ACC_SCALE * scale;
+    }
+    m.stream_touch(bufs.out, out.len() * 4, false);
+    m.charge_bulk(out.len() as u64, (out.len() * 4) as u64);
+}
+
+/// Fused KV-cached decode attention (one step): append this position's
+/// K/V to the session's packed caches, score the new query row against
+/// the cached prefix, softmax, and contract the probabilities with the
+/// cached packed V.
+#[derive(Debug)]
+pub struct CachedAttnOp {
+    name: String,
+    /// index into [`SessionState::slots`]
+    slot: usize,
+    heads: usize,
+    dh: usize,
+    scale: f32,
+    pos_prec: u8,
+    dh_asg: Assignment,
+    max_positions: usize,
+    fmt: DataFormat,
+    /// chunk count of the dh (score contraction) axis
+    nch_dh: usize,
+}
+
+impl CachedAttnOp {
+    pub fn prepare(cfg: &AttnCfg, slot: usize) -> CachedAttnOp {
+        assert_eq!(cfg.fmt, DataFormat::Smol, "{}: cached decode needs SMOL operands", cfg.name);
+        assert_eq!(cfg.dh_asg.num_channels(), cfg.dh, "{}: dh assignment size", cfg.name);
+        assert!(cfg.max_positions > 0, "{}: max_positions must be positive", cfg.name);
+        let nch_dh = cfg
+            .dh_asg
+            .chunks
+            .iter()
+            .zip(cfg.dh_asg.valid.iter())
+            .filter(|&(_, &v)| v > 0)
+            .count();
+        CachedAttnOp {
+            name: cfg.name.clone(),
+            slot,
+            heads: cfg.heads,
+            dh: cfg.dh,
+            scale: cfg.scale,
+            pos_prec: cfg.pos_prec,
+            dh_asg: cfg.dh_asg.clone(),
+            max_positions: cfg.max_positions,
+            fmt: cfg.fmt,
+            nch_dh,
+        }
+    }
+}
+
+impl PreparedOp for CachedAttnOp {
+    fn name(&self) -> Option<&str> {
+        Some(&self.name)
+    }
+
+    /// Buffers sized once for `max_positions`, shared by the score and
+    /// context GEMMs of every session on this worker.
+    fn bind(&self, m: &mut Machine) -> Option<BoundKernel> {
+        let cap = Pattern::uniform(self.pos_prec).capacity() as usize;
+        let nch_pos = self.max_positions.div_ceil(cap);
+        let nch_max = self.nch_dh.max(nch_pos);
+        let bufs = LayerBufs {
+            input: m.alloc(16 * nch_max),
+            weights: m.alloc(16 * (self.max_positions * self.nch_dh).max(self.dh * nch_pos)),
+            out: m.alloc((4 * self.max_positions.max(self.dh)).max(16 * nch_max)),
+            masks: m.alloc(16 * nch_max),
+        };
+        Some(BoundKernel { bufs, program: Vec::new() })
+    }
+
+    fn run(&self, ctx: &mut ExecCtx<'_>, inputs: &[&Tensor]) -> Tensor {
+        let (q, k, v) = (inputs[0], inputs[1], inputs[2]);
+        for t in [q, k, v] {
+            assert_eq!(
+                (t.h, t.w, t.c),
+                (self.heads, 1, self.dh),
+                "{}: step tensors must be (heads, 1, dh)",
+                self.name
+            );
+        }
+        let bound = ctx.bound.expect("cached attention runs against bound buffers");
+        let state = ctx
+            .session
+            .as_deref_mut()
+            .expect("CachedAttn needs a session (decode step graphs run via submit_step)");
+        let slot = &mut state.slots[self.slot];
+        slot.ensure_shape(self.heads, self.dh);
+        assert!(
+            slot.len < self.max_positions,
+            "{}: session exceeded max_positions = {}",
+            self.name,
+            self.max_positions
+        );
+        let m = &mut *ctx.m;
+        let scratch = &mut *ctx.scratch;
+        let cap = Pattern::uniform(self.pos_prec).capacity() as usize;
+        let pat = Pattern::uniform(self.pos_prec);
+        let t = slot.len;
+
+        // --- append this position's K/V (no per-step allocation beyond
+        // amortized cache growth: the gather buffer is worker scratch) ---
+        for h in 0..self.heads {
+            let k_vals = &k.data[h * self.dh..(h + 1) * self.dh];
+            pack::pack_column_into(&self.dh_asg, k_vals, &mut scratch.vals, &mut slot.k_packed[h]);
+            for j in 0..self.dh {
+                slot.v_quant[h].push(quant::quantize(v.data[h * self.dh + j], self.pos_prec));
+            }
+            // refresh the tail chunk of each feature's packed V column
+            let chunk = t / cap;
+            let start = chunk * cap;
+            for j in 0..self.dh {
+                scratch.vals.clear();
+                for pos in start..=t {
+                    scratch.vals.push(slot.v_quant[h][pos * self.dh + j]);
+                }
+                let bytes = pack_values(&pat, &scratch.vals).to_bytes();
+                let col = &mut slot.v_packed[h][j];
+                if t % cap == 0 {
+                    col.extend_from_slice(&bytes);
+                } else {
+                    col[chunk * 16..chunk * 16 + 16].copy_from_slice(&bytes);
+                }
+            }
+        }
+        // quantize/pack charge for the appended position only (the
+        // prefix-repack baseline pays this for the *whole* prefix)
+        m.charge_bulk((2 * self.heads * self.dh) as u64, 0);
+        slot.len += 1;
+        let len = slot.len;
+
+        // --- score GEMM against the cached packed K, then softmax ---
+        let mut scores = Tensor::zeros(self.heads, 1, len);
+        let qk_plan = GemmPlan {
+            name: self.name.clone(),
+            m: 1,
+            k: self.dh,
+            n: len,
+            asg: self.dh_asg.clone(),
+            fmt: self.fmt,
+        };
+        for h in 0..self.heads {
+            m.write_bytes(bound.bufs.weights, 0, &slot.k_packed[h]);
+            m.stream_touch(bound.bufs.weights, slot.k_packed[h].len(), true);
+            let q_vals = &q.data[h * self.dh..(h + 1) * self.dh];
+            run_gemm_row(
+                m,
+                &bound.bufs,
+                &qk_plan,
+                q_vals,
+                self.scale,
+                &mut scratch.vals,
+                &mut scratch.packed_act,
+                &mut scratch.masks,
+                &mut scores.data[h * len..(h + 1) * len],
+            );
+        }
+        eltwise::softmax_rows(&mut scores.data, len);
+        m.charge_bulk(scores.data.len() as u64, (scores.data.len() * 8) as u64);
+
+        // --- context GEMM against the cached packed V ---
+        let mut out = Tensor::zeros(self.heads, 1, self.dh);
+        let av_plan = GemmPlan {
+            name: self.name.clone(),
+            m: 1,
+            k: len,
+            n: self.dh,
+            asg: Assignment::uniform(len, self.pos_prec),
+            fmt: self.fmt,
+        };
+        let nch_pos = len.div_ceil(cap);
+        for h in 0..self.heads {
+            for j in 0..self.dh {
+                m.write_bytes(bound.bufs.weights, j * nch_pos * 16, &slot.v_packed[h][j]);
+            }
+            m.stream_touch(bound.bufs.weights, self.dh * nch_pos * 16, true);
+            run_gemm_row(
+                m,
+                &bound.bufs,
+                &av_plan,
+                &scores.data[h * len..(h + 1) * len],
+                1.0,
+                &mut scratch.vals,
+                &mut scratch.packed_act,
+                &mut scratch.masks,
+                &mut out.data[h * self.dh..(h + 1) * self.dh],
+            );
+        }
+        out
+    }
+}
+
+/// The one-shot causal A·V: row `i` contracts the probability row with
+/// the V prefix `<= i` only, re-quantizing and re-packing that prefix
+/// for every row — the prefix-repack baseline the session KV cache is
+/// measured against, and the bit-exact oracle for cached decode.
+#[derive(Debug)]
+pub struct CausalAvOp {
+    name: String,
+    /// sequence length (= m = k of the underlying GEMM)
+    s: usize,
+    dh: usize,
+    scale: f32,
+    pos_prec: u8,
+    fmt: DataFormat,
+}
+
+impl CausalAvOp {
+    pub fn prepare(cfg: &MatmulCfg) -> CausalAvOp {
+        let plan = &cfg.plan;
+        assert!(cfg.causal, "{}: CausalAvOp needs a causal cfg", plan.name);
+        assert_eq!(plan.m, plan.k, "{}: causal A·V contracts positions", plan.name);
+        assert_eq!(plan.fmt, DataFormat::Smol, "{}: causal A·V needs SMOL operands", plan.name);
+        let p = plan.asg.precision.first().copied().unwrap_or(4);
+        assert!(
+            plan.asg.precision.iter().all(|&q| q == p),
+            "{}: causal A·V needs a uniform position-axis assignment",
+            plan.name
+        );
+        CausalAvOp {
+            name: plan.name.clone(),
+            s: plan.m,
+            dh: plan.n,
+            scale: cfg.scale,
+            pos_prec: p,
+            fmt: plan.fmt,
+        }
+    }
+}
+
+impl PreparedOp for CausalAvOp {
+    fn name(&self) -> Option<&str> {
+        Some(&self.name)
+    }
+
+    fn bind(&self, m: &mut Machine) -> Option<BoundKernel> {
+        let cap = Pattern::uniform(self.pos_prec).capacity() as usize;
+        let nch = self.s.div_ceil(cap);
+        let bufs = LayerBufs {
+            input: m.alloc(16 * nch),
+            weights: m.alloc(16 * self.dh * nch),
+            out: m.alloc((4 * self.dh).max(16 * nch)),
+            masks: m.alloc(16 * nch),
+        };
+        Some(BoundKernel { bufs, program: Vec::new() })
+    }
+
+    fn run(&self, ctx: &mut ExecCtx<'_>, inputs: &[&Tensor]) -> Tensor {
+        let (a, b) = (inputs[0], inputs[1]);
+        assert_eq!((a.w, a.c), (self.s, self.s), "{}: probs shape", self.name);
+        assert_eq!(b.h, a.h, "{}: head-batch mismatch", self.name);
+        assert_eq!((b.w, b.c), (self.s, self.dh), "{}: V shape", self.name);
+        let bound = ctx.bound.expect("causal A·V runs against bound buffers");
+        let m = &mut *ctx.m;
+        let scratch = &mut *ctx.scratch;
+        let heads = a.h;
+        let mut out = Tensor::zeros(heads, self.s, self.dh);
+        for h in 0..heads {
+            for t in 0..self.s {
+                let len = t + 1;
+                let asg = Assignment::uniform(len, self.pos_prec);
+                // re-quantize + re-pack the whole V prefix for this row,
+                // one feature column at a time (the same append unit the
+                // KV cache uses, so the bytes are identical)
+                scratch.packed_b.clear();
+                for j in 0..self.dh {
+                    scratch.b.clear();
+                    for pos in 0..len {
+                        scratch.b.push(b.at(h, pos, j));
+                    }
+                    pack::pack_column_into(
+                        &asg,
+                        &scratch.b,
+                        &mut scratch.vals,
+                        &mut scratch.packed_b,
+                    );
+                }
+                m.write_bytes(bound.bufs.weights, 0, &scratch.packed_b);
+                m.stream_touch(bound.bufs.weights, scratch.packed_b.len(), true);
+                m.charge_bulk((len * self.dh) as u64, 0);
+
+                let plan = GemmPlan {
+                    name: self.name.clone(),
+                    m: 1,
+                    k: len,
+                    n: self.dh,
+                    asg,
+                    fmt: self.fmt,
+                };
+                let row = (h * self.s + t) * self.s;
+                run_gemm_row(
+                    m,
+                    &bound.bufs,
+                    &plan,
+                    &a.data[row..row + len],
+                    self.scale,
+                    &mut scratch.vals,
+                    &mut scratch.packed_act,
+                    &mut scratch.masks,
+                    &mut out.data[(h * self.s + t) * self.dh..(h * self.s + t + 1) * self.dh],
+                );
+            }
+        }
+        out
+    }
+}

@@ -1,18 +1,26 @@
 //! The serving worker pool: one dispatcher thread driving the
 //! [`DynamicBatcher`], N worker threads each owning a private
 //! [`EngineMachine`] (simulated SIMD machine with all prepared weights
-//! resident), and unbounded mpsc channels tying them together.
+//! resident, plus the KV caches of every decode session pinned to it).
 //!
-//! Flow: `submit` -> submit channel -> dispatcher (batch close policy)
-//! -> batch channel (shared by workers) -> worker executes each request
-//! on its machine -> completion channel -> `shutdown` drains.
+//! Flow: `submit`/`submit_step` -> submit channel -> dispatcher (batch
+//! close policy, per-target groups) -> dispatch queue (a shared FIFO
+//! for stateless batches + one pinned FIFO per worker for session
+//! batches) -> worker executes each request on its machine ->
+//! completion channel -> `shutdown` drains.
+//!
+//! Session affinity: a session opened with [`Server::open_session`] is
+//! pinned to one worker for its whole life (`session id % workers`),
+//! because that worker's machine owns the session's packed K/V caches.
+//! Stateless batches stay work-stealable through the shared FIFO.
 
-use crate::serve::batcher::{Batch, BatchConfig, DynamicBatcher, Request};
+use crate::serve::batcher::{Batch, BatchConfig, DynamicBatcher, Payload, Request};
 use crate::serve::engine::{EngineMachine, PreparedModel};
 use crate::sim::machine::RunStats;
 use crate::sim::network::{LayerStat, Tensor};
+use std::collections::VecDeque;
 use std::sync::mpsc::{self, RecvTimeoutError};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread;
 use std::time::{Duration, Instant};
 
@@ -30,6 +38,10 @@ impl Default for ServeConfig {
     }
 }
 
+/// Handle to an open decode session (pinned to one worker).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct SessionId(pub u64);
+
 /// One finished request with its result and measurements.
 #[derive(Debug)]
 pub struct Completion {
@@ -42,10 +54,86 @@ pub struct Completion {
     pub batch_size: usize,
     /// enqueue-to-completion latency
     pub latency: Duration,
+    /// the session this completion belongs to (`None` = stateless)
+    pub session: Option<u64>,
     pub output: Tensor,
     /// simulated-hardware totals for this inference
     pub total: RunStats,
     pub per_layer: Vec<LayerStat>,
+}
+
+/// The dispatch queue between the dispatcher and the workers: closed
+/// batches land in the shared FIFO (any worker may take them) or a
+/// worker's pinned FIFO (session batches, which can never be stolen
+/// away from the worker holding their KV caches). A worker pops its
+/// two queue heads in batch-id order, i.e. global close-order FIFO.
+struct DispatchQueue {
+    state: Mutex<QueueState>,
+    cv: Condvar,
+}
+
+struct QueueState {
+    shared: VecDeque<(u64, Batch)>,
+    pinned: Vec<VecDeque<(u64, Batch)>>,
+    closed: bool,
+}
+
+impl DispatchQueue {
+    fn new(workers: usize) -> DispatchQueue {
+        DispatchQueue {
+            state: Mutex::new(QueueState {
+                shared: VecDeque::new(),
+                pinned: (0..workers).map(|_| VecDeque::new()).collect(),
+                closed: false,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    fn push(&self, batch_id: u64, batch: Batch) {
+        let mut st = self.state.lock().unwrap();
+        match batch.target {
+            Some(w) => st.pinned[w].push_back((batch_id, batch)),
+            None => st.shared.push_back((batch_id, batch)),
+        }
+        drop(st);
+        self.cv.notify_all();
+    }
+
+    fn close(&self) {
+        self.state.lock().unwrap().closed = true;
+        self.cv.notify_all();
+    }
+
+    /// Blocking pop for `worker`. Batch ids are assigned in close
+    /// order, so taking whichever head (pinned or shared) has the
+    /// smaller id preserves global FIFO across the two queues —
+    /// sustained decode traffic cannot starve an older stateless batch
+    /// or vice versa. `None` once the queue is closed and drained.
+    fn pop(&self, worker: usize) -> Option<(u64, Batch)> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            let p_id = st.pinned[worker].front().map(|&(id, _)| id);
+            let s_id = st.shared.front().map(|&(id, _)| id);
+            match (p_id, s_id) {
+                (Some(p), Some(s)) => {
+                    return if p < s {
+                        st.pinned[worker].pop_front()
+                    } else {
+                        st.shared.pop_front()
+                    }
+                }
+                (Some(_), None) => return st.pinned[worker].pop_front(),
+                (None, Some(_)) => return st.shared.pop_front(),
+                (None, None) => {
+                    if st.closed {
+                        return None;
+                    }
+                    st = self.cv.wait(st).unwrap();
+                }
+            }
+        }
+    }
 }
 
 /// A running serving instance over one prepared model.
@@ -55,6 +143,15 @@ pub struct Server {
     dispatcher: Option<thread::JoinHandle<()>>,
     workers: Vec<thread::JoinHandle<()>>,
     next_id: u64,
+    next_session: u64,
+    n_workers: usize,
+    has_step: bool,
+    /// per-session step limit (the model's tightest `max_positions`)
+    step_limit: usize,
+    /// steps submitted per open session, to reject over-long sessions
+    /// in the caller's thread instead of panicking a worker
+    session_steps: std::collections::HashMap<u64, usize>,
+    bind_times: Arc<Mutex<Vec<Duration>>>,
 }
 
 impl Server {
@@ -62,12 +159,16 @@ impl Server {
     /// its own machine from the shared prepared model (weights written
     /// once per worker, then reused for every request it serves).
     pub fn start(model: Arc<PreparedModel>, cfg: &ServeConfig) -> Server {
+        let n_workers = cfg.workers.max(1);
         let (submit_tx, submit_rx) = mpsc::channel::<Request>();
-        let (batch_tx, batch_rx) = mpsc::channel::<(u64, Batch)>();
         let (result_tx, result_rx) = mpsc::channel::<Completion>();
-        let batch_rx = Arc::new(Mutex::new(batch_rx));
+        let queue = Arc::new(DispatchQueue::new(n_workers));
+        let bind_times = Arc::new(Mutex::new(Vec::with_capacity(n_workers)));
+        let has_step = model.step.is_some();
+        let step_limit = model.step.as_ref().map(|s| s.max_positions).unwrap_or(usize::MAX);
 
         let bcfg = cfg.batch;
+        let dq = Arc::clone(&queue);
         let dispatcher = thread::spawn(move || {
             let mut batcher = DynamicBatcher::new(bcfg);
             let mut batch_id = 0u64;
@@ -77,70 +178,81 @@ impl Server {
                     // arrives instead of waking on a polling interval
                     None => match submit_rx.recv() {
                         Ok(req) => batcher.push(req),
-                        Err(_) => {
-                            if let Some(b) = batcher.flush() {
-                                let _ = batch_tx.send((batch_id, b));
-                            }
-                            break;
-                        }
+                        Err(_) => break,
                     },
-                    // batch open: wait at most until its deadline; a push
-                    // that doesn't fill the batch still re-checks the
-                    // deadline so sustained arrivals can't starve it
+                    // a group is open: wait at most until the earliest
+                    // deadline; the drain loop below re-checks it, so
+                    // sustained arrivals can't starve an open group
                     Some(deadline) => {
                         let timeout = deadline.saturating_duration_since(Instant::now());
                         match submit_rx.recv_timeout(timeout) {
-                            Ok(req) => batcher
-                                .push(req)
-                                .or_else(|| batcher.poll_deadline(Instant::now())),
-                            Err(RecvTimeoutError::Timeout) => {
-                                batcher.poll_deadline(Instant::now())
-                            }
-                            Err(RecvTimeoutError::Disconnected) => {
-                                if let Some(b) = batcher.flush() {
-                                    let _ = batch_tx.send((batch_id, b));
-                                }
-                                break;
-                            }
+                            Ok(req) => batcher.push(req),
+                            Err(RecvTimeoutError::Timeout) => None,
+                            Err(RecvTimeoutError::Disconnected) => break,
                         }
                     }
                 };
                 if let Some(b) = closed {
-                    if batch_tx.send((batch_id, b)).is_err() {
-                        break; // all workers gone
-                    }
+                    dq.push(batch_id, b);
+                    batch_id += 1;
+                }
+                while let Some(b) = batcher.poll_deadline(Instant::now()) {
+                    dq.push(batch_id, b);
                     batch_id += 1;
                 }
             }
+            // shutdown: close whatever is pending, in FIFO order
+            while let Some(b) = batcher.flush() {
+                dq.push(batch_id, b);
+                batch_id += 1;
+            }
+            dq.close();
         });
 
-        let workers = (0..cfg.workers.max(1))
+        let workers = (0..n_workers)
             .map(|wi| {
                 let model = Arc::clone(&model);
-                let rx = Arc::clone(&batch_rx);
+                let queue = Arc::clone(&queue);
                 let tx = result_tx.clone();
+                let binds = Arc::clone(&bind_times);
                 thread::spawn(move || {
+                    let t0 = Instant::now();
                     let mut engine = EngineMachine::new(&model);
-                    loop {
-                        // holding the lock only for the dequeue; workers
-                        // execute batches concurrently
-                        let msg = rx.lock().unwrap().recv();
-                        let (batch_id, batch) = match msg {
-                            Ok(v) => v,
-                            Err(_) => break, // dispatcher done, queue drained
-                        };
-                        let batch_size = batch.requests.len();
+                    binds.lock().unwrap().push(t0.elapsed());
+                    while let Some((batch_id, batch)) = queue.pop(wi) {
+                        // completion-producing requests only, so the
+                        // field stays consistent with report batch math
+                        let batch_size = batch
+                            .requests
+                            .iter()
+                            .filter(|r| !matches!(r.payload, Payload::Close { .. }))
+                            .count();
                         for req in batch.requests {
-                            let res = engine.run(&req.input);
+                            let (output, total, per_layer, session) = match req.payload {
+                                Payload::Infer(input) => {
+                                    let r = engine.run(&input);
+                                    (r.output, r.total, r.layers, None)
+                                }
+                                Payload::Step { session, token } => {
+                                    let r = engine.run_step(session, &token);
+                                    (r.output, r.total, r.layers, Some(session))
+                                }
+                                Payload::Close { session } => {
+                                    // frees the KV caches; no completion
+                                    engine.end_session(session);
+                                    continue;
+                                }
+                            };
                             let done = Completion {
                                 id: req.id,
                                 worker: wi,
                                 batch_id,
                                 batch_size,
                                 latency: req.enqueued.elapsed(),
-                                output: res.output,
-                                total: res.total,
-                                per_layer: res.layers,
+                                session,
+                                output,
+                                total,
+                                per_layer,
                             };
                             if tx.send(done).is_err() {
                                 return; // receiver dropped, stop serving
@@ -158,20 +270,83 @@ impl Server {
             dispatcher: Some(dispatcher),
             workers,
             next_id: 0,
+            next_session: 0,
+            n_workers,
+            has_step,
+            step_limit,
+            session_steps: std::collections::HashMap::new(),
+            bind_times,
         }
     }
 
-    /// Enqueue one request; returns its id (completions carry it back).
-    pub fn submit(&mut self, input: Tensor) -> u64 {
-        let id = self.next_id;
+    fn send(&mut self, req: Request) -> u64 {
+        let id = req.id;
         self.next_id += 1;
-        let req = Request { id, input, enqueued: Instant::now() };
         self.submit
             .as_ref()
             .expect("server already shut down")
             .send(req)
             .expect("dispatcher thread alive");
         id
+    }
+
+    /// Enqueue one stateless request; returns its id (completions carry
+    /// it back).
+    pub fn submit(&mut self, input: Tensor) -> u64 {
+        let req = Request::infer(self.next_id, input, Instant::now());
+        self.send(req)
+    }
+
+    /// Open a decode session. The session is pinned to one worker
+    /// (`id % workers`), whose machine will own its K/V caches; every
+    /// step of this session executes there.
+    pub fn open_session(&mut self) -> SessionId {
+        assert!(self.has_step, "model has no decode step graph (open_session needs a decoder)");
+        let sid = SessionId(self.next_session);
+        self.next_session += 1;
+        sid
+    }
+
+    /// Enqueue one decode step for an open session; returns its request
+    /// id. Steps of one session execute in submission order on its
+    /// pinned worker; same-step submissions of co-located sessions may
+    /// batch together.
+    ///
+    /// Panics in the *caller's* thread if the session would exceed the
+    /// model's `max_positions` — an over-long session must not take a
+    /// worker (and with it every co-located session) down.
+    pub fn submit_step(&mut self, session: SessionId, token: Tensor) -> u64 {
+        let steps = self.session_steps.entry(session.0).or_insert(0);
+        assert!(
+            *steps < self.step_limit,
+            "session {} exceeded max_positions = {}",
+            session.0,
+            self.step_limit
+        );
+        *steps += 1;
+        let target = (session.0 as usize) % self.n_workers;
+        let req = Request::step(self.next_id, session.0, token, target, Instant::now());
+        self.send(req)
+    }
+
+    /// Close a finished session, freeing its KV caches on the pinned
+    /// worker once every previously submitted step has executed (the
+    /// close rides the session's FIFO). Long-lived servers should close
+    /// every session they open, or worker memory grows per session.
+    /// Produces no completion.
+    pub fn close_session(&mut self, session: SessionId) {
+        self.session_steps.remove(&session.0);
+        let target = (session.0 as usize) % self.n_workers;
+        let req = Request::close(self.next_id, session.0, target, Instant::now());
+        self.send(req);
+    }
+
+    /// Per-worker bind (prepare-to-machine) times. Complete once
+    /// serving has started on every worker — in particular after
+    /// `shutdown` — and used to report setup separately from
+    /// steady-state throughput.
+    pub fn bind_times(&self) -> Arc<Mutex<Vec<Duration>>> {
+        Arc::clone(&self.bind_times)
     }
 
     /// Completions that have already arrived (non-blocking).

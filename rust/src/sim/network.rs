@@ -16,16 +16,21 @@
 //! [`Node::LayerNorm`] / [`Node::Gelu`] are f32 epilogues
 //! ([`crate::sim::eltwise`]).
 //!
-//! The execution engine itself lives in [`crate::serve::engine`]: models
-//! are prepared once (codegen + weight packing cached per layer) and
-//! replayed per request. The one-shot entry points here — [`run_conv`]
-//! and [`run_network`] — are thin wrappers that prepare and immediately
-//! execute, with outputs bit-identical to the prepared serving path.
+//! The execution engine itself lives in [`crate::serve::engine`]: every
+//! node kind implements the [`crate::serve::engine::PreparedOp`] trait
+//! (`prepare -> bind -> run(ctx)`), models are prepared once (codegen +
+//! weight packing cached per layer) and replayed per request. The
+//! one-shot entry points here — [`run_conv`] and [`run_network`] — are
+//! thin clients of that same API, with outputs bit-identical to the
+//! prepared serving path.
 
 use crate::codegen::gemm::GemmPlan;
-use crate::codegen::LayerPlan;
-use crate::serve::engine::{run_conv_streaming, EngineMachine, PreparedModel};
+use crate::codegen::{DataFormat, LayerPlan};
+use crate::serve::engine::{
+    EngineMachine, ExecCtx, PreparedConv, PreparedModel, PreparedOp, WorkerScratch,
+};
 use crate::sim::machine::{Machine, RunStats};
+use crate::smol::pattern_match::Assignment;
 use std::sync::Arc;
 
 /// A tensor in the inter-layer 32-bit fixed-point domain (f32-carried).
@@ -70,6 +75,38 @@ pub struct MatmulCfg {
     /// f32 epilogue scaling applied after dequantization
     /// (e.g. `1/sqrt(d_head)` for attention scores); 1.0 = none
     pub scale: f32,
+    /// causal (autoregressive) masking for dynamic-operand GEMMs over
+    /// `(position, position)` shapes: with `transpose_b` (the QK^T
+    /// score shape) the upper triangle is skipped at codegen time and
+    /// epilogued to `-inf`; without it (the A·V context shape) row `i`
+    /// contracts only positions `<= i` — the one-shot twin of the
+    /// serving engine's KV-cached decode step
+    pub causal: bool,
+}
+
+/// Configuration of a fused KV-cached decode attention node
+/// ([`Node::CachedAttn`]). The position (contraction) axis of the
+/// context GEMM must be *uniform* precision: positions arrive one at a
+/// time, and PatternMatch's importance reordering is undefined for
+/// positions that have not been seen yet. The `dh` axis of the score
+/// GEMM carries an arbitrary per-channel assignment, exactly like the
+/// encoder's QK^T node.
+#[derive(Debug, Clone)]
+pub struct AttnCfg {
+    pub name: String,
+    pub heads: usize,
+    /// per-head feature dimension (the score GEMM's contraction axis)
+    pub dh: usize,
+    /// score scale (`1/sqrt(dh)`)
+    pub scale: f32,
+    /// uniform precision of the position axis (context-GEMM contraction)
+    pub pos_prec: u8,
+    /// per-channel precisions of the `dh` axis (score-GEMM contraction)
+    pub dh_asg: Assignment,
+    /// session K/V caches (and bound buffers) are sized for this many
+    /// positions; a session that decodes past it panics
+    pub max_positions: usize,
+    pub fmt: DataFormat,
 }
 
 /// Graph node (indices refer to node outputs; usize::MAX = network input).
@@ -86,6 +123,12 @@ pub enum Node {
     /// `transpose_b = true` contracts channels with channels
     /// (`C[h,i,j] = sum_c a[h,i,c] * b[h,j,c]`, the QK^T shape)
     MatmulDyn { cfg: Box<MatmulCfg>, a: usize, b: usize, transpose_b: bool },
+    /// fused KV-cached decode attention over split-head `(heads, 1, dh)`
+    /// step tensors: appends this step's K/V to the request session's
+    /// packed operand caches, then runs score GEMM + softmax + context
+    /// GEMM against the cached prefix. Only valid in a decode *step*
+    /// graph executed through a session (`serve::Server::submit_step`).
+    CachedAttn { cfg: Box<AttnCfg>, q: usize, k: usize, v: usize },
     /// row softmax along `c` for every (h, w)
     Softmax { x: usize },
     /// layer normalization along `c` with per-feature affine
@@ -125,13 +168,17 @@ pub struct NetResult {
 
 /// Run one conv/FC layer on the machine. Returns the epilogued output.
 ///
-/// One-shot wrapper over the engine's streaming path: weights are packed
-/// and the kernel is emitted straight into the machine for this single
-/// call (O(1) memory even for paper-scale layers). Callers that run the
-/// same layer repeatedly should prepare once instead (see
-/// [`crate::serve::engine::prepare_conv`]).
+/// One-shot client of the engine's [`PreparedOp`] API in *streaming*
+/// mode (no bound kernel): weights are packed and the kernel is emitted
+/// straight into the machine for this single call (O(1) memory even for
+/// paper-scale layers). Callers that run the same layer repeatedly
+/// should prepare + bind once instead (see [`crate::serve`]).
 pub fn run_conv(m: &mut Machine, cfg: &ConvLayerCfg, x: &Tensor) -> (Tensor, RunStats) {
-    run_conv_streaming(m, cfg, x)
+    let op = PreparedConv::streaming(cfg);
+    let mut scratch = WorkerScratch::default();
+    let mut ctx = ExecCtx { m: &mut *m, bound: None, scratch: &mut scratch, session: None };
+    let out = op.run(&mut ctx, &[x]);
+    (out, m.take_stats())
 }
 
 /// Execute a network graph on a fresh machine.

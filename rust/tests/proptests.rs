@@ -5,7 +5,7 @@
 
 use soniq::codegen::gemm::GemmPlan;
 use soniq::codegen::{self, Counter, DataFormat, LayerBufs, LayerKind, LayerPlan};
-use soniq::serve::{prepare_matmul, run_matmul, MatmulScratch};
+use soniq::serve::{BoundKernel, ExecCtx, PreparedMatmul, PreparedOp, WorkerScratch};
 use soniq::sim::eltwise;
 use soniq::sim::machine::Machine;
 use soniq::sim::network::{MatmulCfg, Tensor};
@@ -256,6 +256,23 @@ fn rand_seq_tensor(rng: &mut Rng, h: usize, w: usize, c: usize, lo: f32, hi: f32
     Tensor { h, w, c, data }
 }
 
+/// Run a prepared GEMM op against a bound machine through the trait API.
+fn run_mm(
+    machine: &mut Machine,
+    op: &PreparedMatmul,
+    bound: &BoundKernel,
+    inputs: &[&Tensor],
+    scratch: &mut WorkerScratch,
+) -> Tensor {
+    let mut ctx = ExecCtx {
+        m: &mut *machine,
+        bound: Some(bound),
+        scratch: &mut *scratch,
+        session: None,
+    };
+    op.run(&mut ctx, inputs)
+}
+
 /// Plain f64 GEMM oracle (the `ref_conv` of the Transformer path): both
 /// operands quantized per contraction channel, exact dyadic products
 /// summed in f64, then the engine's f32 scale. `b(head, kk, j)` indexes
@@ -296,7 +313,7 @@ fn ref_gemm<F: Fn(usize, usize, usize) -> f32>(
 fn prop_gemm_and_attention_epilogues_match_oracle() {
     check("gemm-attn-oracle", 500, |rng| {
         let fmt = DataFormat::Smol;
-        let mut scratch = MatmulScratch::default();
+        let mut scratch = WorkerScratch::default();
 
         // --- static-operand GEMM (projection / FFN shape) ---
         let m = 1 + rng.below(5) as usize;
@@ -306,13 +323,15 @@ fn prop_gemm_and_attention_epilogues_match_oracle() {
         let cfg = MatmulCfg {
             plan: GemmPlan { name: "g".into(), m, k, n, asg: rand_assignment(rng, k), fmt },
             scale,
+            causal: false,
         };
         let a = rand_seq_tensor(rng, 1, m, k, -2.0, 2.0);
         let b: Vec<f32> = (0..k * n).map(|_| rng.range(-1.5, 1.5)).collect();
-        let prep = prepare_matmul(&cfg, Some(&b));
+        let prep = PreparedMatmul::prepare_static(&cfg, &b);
         let mut machine = Machine::new();
-        let bound = prep.bind(&mut machine);
-        let (got, stats) = run_matmul(&mut machine, &prep, &bound, &a, None, &mut scratch);
+        let bound = prep.bind(&mut machine).expect("gemm binds");
+        let got = run_mm(&mut machine, &prep, &bound, &[&a], &mut scratch);
+        let stats = machine.take_stats();
         let want = ref_gemm(&cfg.plan, scale, 1, &a, |_, kk, j| b[kk * n + j]);
         if got.data != want.data {
             return Err(format!("static gemm mismatch (m={m} k={k} n={n})"));
@@ -338,6 +357,7 @@ fn prop_gemm_and_attention_epilogues_match_oracle() {
                 fmt,
             },
             scale: 1.0 / (dh as f32).sqrt(),
+            causal: false,
         };
         let av_cfg = MatmulCfg {
             plan: GemmPlan {
@@ -349,15 +369,15 @@ fn prop_gemm_and_attention_epilogues_match_oracle() {
                 fmt,
             },
             scale: 1.0,
+            causal: false,
         };
-        let qk_prep = prepare_matmul(&qk_cfg, None);
-        let av_prep = prepare_matmul(&av_cfg, None);
-        let qk_bound = qk_prep.bind(&mut machine);
-        let av_bound = av_prep.bind(&mut machine);
+        let qk_prep = PreparedMatmul::prepare_dyn(&qk_cfg, true);
+        let av_prep = PreparedMatmul::prepare_dyn(&av_cfg, false);
+        let qk_bound = qk_prep.bind(&mut machine).expect("qk binds");
+        let av_bound = av_prep.bind(&mut machine).expect("av binds");
 
         // QK^T (transpose_b): contracts channels with channels
-        let (mut scores, _) =
-            run_matmul(&mut machine, &qk_prep, &qk_bound, &q, Some((&kx, true)), &mut scratch);
+        let mut scores = run_mm(&mut machine, &qk_prep, &qk_bound, &[&q, &kx], &mut scratch);
         let want_scores =
             ref_gemm(&qk_cfg.plan, qk_cfg.scale, heads, &q, |h, kk, j| kx.at(h, j, kk));
         if scores.data != want_scores.data {
@@ -368,14 +388,7 @@ fn prop_gemm_and_attention_epilogues_match_oracle() {
         eltwise::softmax_rows(&mut scores.data, scores.c);
 
         // A·V: contracts A's channels with V's sequence axis
-        let (ctx, _) = run_matmul(
-            &mut machine,
-            &av_prep,
-            &av_bound,
-            &scores,
-            Some((&vx, false)),
-            &mut scratch,
-        );
+        let ctx = run_mm(&mut machine, &av_prep, &av_bound, &[&scores, &vx], &mut scratch);
         let want_ctx = ref_gemm(&av_cfg.plan, 1.0, heads, &scores, |h, kk, j| vx.at(h, kk, j));
         if ctx.data != want_ctx.data {
             return Err(format!("A*V mismatch (heads={heads} s={s} dh={dh})"));
@@ -430,6 +443,136 @@ fn prop_gemm_and_attention_epilogues_match_oracle() {
             }
         }
 
+        Ok(())
+    });
+}
+
+/// The causal-mask score GEMM vs the f64 oracle: the lower triangle
+/// (including the diagonal) must match the plain quantized dot product
+/// exactly, the upper triangle must be `-inf`, and softmax over the
+/// masked rows must put exactly zero probability on future positions.
+#[test]
+fn prop_causal_score_gemm_matches_oracle() {
+    check("causal-qk-oracle", 300, |rng| {
+        let fmt = DataFormat::Smol;
+        let mut scratch = WorkerScratch::default();
+        let heads = *rng.choice(&[1usize, 2]);
+        let dh = *rng.choice(&[2usize, 4, 8]);
+        let s = 2 + rng.below(10) as usize;
+        let q = rand_seq_tensor(rng, heads, s, dh, -2.0, 2.0);
+        let kx = rand_seq_tensor(rng, heads, s, dh, -2.0, 2.0);
+        let cfg = MatmulCfg {
+            plan: GemmPlan {
+                name: "cqk".into(),
+                m: s,
+                k: dh,
+                n: s,
+                asg: rand_assignment(rng, dh),
+                fmt,
+            },
+            scale: 1.0 / (dh as f32).sqrt(),
+            causal: true,
+        };
+        let prep = PreparedMatmul::prepare_dyn(&cfg, true);
+        let mut machine = Machine::new();
+        let bound = prep.bind(&mut machine).expect("causal qk binds");
+        let got = run_mm(&mut machine, &prep, &bound, &[&q, &kx], &mut scratch);
+        let want = ref_gemm(&cfg.plan, cfg.scale, heads, &q, |h, kk, j| kx.at(h, j, kk));
+        for h in 0..heads {
+            for i in 0..s {
+                for j in 0..s {
+                    let g = got.data[(h * s + i) * s + j];
+                    if j > i {
+                        if g != f32::NEG_INFINITY {
+                            return Err(format!("causal mask leak at ({i},{j}): {g}"));
+                        }
+                    } else if g != want.data[(h * s + i) * s + j] {
+                        return Err(format!("causal score mismatch at ({h},{i},{j})"));
+                    }
+                }
+            }
+        }
+        // softmax over masked rows: finite, normalized, zero on future
+        let mut sm = got.data.clone();
+        eltwise::softmax_rows(&mut sm, s);
+        for (ri, row) in sm.chunks(s).enumerate() {
+            let i = ri % s;
+            let sum: f32 = row.iter().sum();
+            if (sum - 1.0).abs() > 1e-5 {
+                return Err(format!("masked softmax row {ri} sums to {sum}"));
+            }
+            if row[i + 1..].iter().any(|&p| p != 0.0) {
+                return Err(format!("future position has probability in row {ri}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// The ISSUE-3 decode contract: sweeping random `{prefix_len, steps,
+/// heads, precision pattern}`, every KV-cached decode step must be
+/// bit-identical to re-running its full token prefix through the
+/// one-shot causal graph (same weights, rebuilt at the prefix length).
+#[test]
+fn prop_cached_decode_bit_identical_to_prefix_rerun() {
+    use soniq::coordinator::{synthetic_decoder, DecoderCfg, DesignPoint};
+    use soniq::serve::{EngineMachine, PreparedModel};
+    use soniq::sim::network::run_network;
+    use std::sync::Arc;
+    check("cached-decode", 200, |rng| {
+        let heads = *rng.choice(&[1usize, 2, 4]);
+        let dh = *rng.choice(&[2usize, 4]);
+        let d = heads * dh;
+        let dp = match rng.below(4) {
+            0 => DesignPoint::Uniform(2),
+            1 => DesignPoint::Uniform(4),
+            2 => DesignPoint::Patterns(8),
+            _ => DesignPoint::Patterns(45),
+        };
+        let prefix = 1 + rng.below(4) as usize;
+        let steps = 1 + rng.below(3) as usize;
+        let total = prefix + steps;
+        let cfg = DecoderCfg {
+            seq: total,
+            d_model: d,
+            heads,
+            ffn: d * 2,
+            blocks: 1,
+            max_positions: 16,
+        };
+        let seed = rng.below(1 << 30);
+        let net = synthetic_decoder(dp, seed, &cfg).map_err(|e| e.to_string())?;
+        let prepared = Arc::new(PreparedModel::prepare_decoder(
+            &net.nodes,
+            net.step_nodes.as_ref().expect("decoder step graph"),
+        ));
+        let mut engine = EngineMachine::new(&prepared);
+        let tokens: Vec<Tensor> = (0..total)
+            .map(|_| {
+                let data: Vec<f32> = (0..d).map(|_| rng.range(-2.0, 2.0)).collect();
+                Tensor { h: 1, w: 1, c: d, data }
+            })
+            .collect();
+        let mut prefix_data: Vec<f32> = Vec::new();
+        for (t, tok) in tokens.iter().enumerate() {
+            let step = engine.run_step(1, tok);
+            prefix_data.extend_from_slice(&tok.data);
+            // one-shot twin at this prefix length (same rng stream =>
+            // same weights), last row must equal the cached step
+            let sub = DecoderCfg { seq: t + 1, ..cfg };
+            let net_t = synthetic_decoder(dp, seed, &sub).map_err(|e| e.to_string())?;
+            let full = run_network(
+                &net_t.nodes,
+                &Tensor { h: 1, w: t + 1, c: d, data: prefix_data.clone() },
+            );
+            if step.output.data[..] != full.output.data[t * d..(t + 1) * d] {
+                return Err(format!(
+                    "step {t} mismatch (dp={} heads={heads} dh={dh} \
+                     prefix={prefix} steps={steps} seed={seed})",
+                    dp.label()
+                ));
+            }
+        }
         Ok(())
     });
 }

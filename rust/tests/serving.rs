@@ -1,15 +1,21 @@
 //! Integration tests for the `serve` subsystem: (a) prepared-model
-//! outputs are bit-identical to the legacy one-shot `run_network` path,
-//! (b) the dynamic batcher closes on both the max-batch and the
-//! latency-deadline trigger, (c) concurrent workers produce
-//! deterministic per-request results — plus registry and report checks.
+//! outputs are bit-identical to the one-shot `run_network` path, (b)
+//! the session-affine dynamic batcher groups by target and closes on
+//! the max-batch / latency-deadline / FIFO rules, (c) concurrent
+//! workers produce deterministic per-request results, (d) KV-cached
+//! decode steps are bit-identical to prefix re-runs and cost fewer
+//! simulated cycles — plus registry and report checks.
 
-use soniq::coordinator::{synthetic_inputs, synthetic_network, DesignPoint, SyntheticNet};
+use soniq::coordinator::{
+    synthetic_inputs, synthetic_network, synthetic_network_seq, synthetic_step_inputs,
+    DesignPoint, SyntheticNet,
+};
 use soniq::serve::{
-    model_key, serve_all, summarize, BatchConfig, DynamicBatcher, EngineMachine, ModelRegistry,
-    PreparedModel, Request, ServeConfig,
+    serve_all, summarize, BatchConfig, DynamicBatcher, EngineMachine, ModelKey, ModelRegistry,
+    PreparedModel, Request, ServeConfig, Server, SessionId, SetupTiming,
 };
 use soniq::sim::network::{run_network, Tensor};
+use std::collections::HashMap;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -27,6 +33,7 @@ fn prepared_model_matches_legacy_bit_exact() {
         ("tinydw", DesignPoint::Patterns(8)),
         ("tinyattn", DesignPoint::Patterns(4)),
         ("tinyattn", DesignPoint::Uniform(2)),
+        ("tinydec", DesignPoint::Patterns(4)),
     ] {
         let (net, inputs) = net_and_inputs(model, dp, 4);
         let prepared = Arc::new(PreparedModel::prepare(&net.nodes));
@@ -48,10 +55,10 @@ fn prepared_model_matches_legacy_bit_exact() {
 
 #[test]
 fn streaming_and_prepared_paths_are_bit_identical_per_layer() {
-    // run_conv (streaming emission, O(1) memory) vs prepare/bind/replay:
-    // same staging + epilogue, same alloc order -> outputs AND stats
-    // must match exactly on fresh machines
-    use soniq::serve::engine::{prepare_conv, run_bound};
+    // run_conv (streaming emission, O(1) memory) vs prepare/bind/run
+    // through the PreparedOp trait: same staging + epilogue, same alloc
+    // order -> outputs AND stats must match exactly on fresh machines
+    use soniq::serve::{ExecCtx, PreparedConv, PreparedOp, WorkerScratch};
     use soniq::sim::machine::Machine;
     use soniq::sim::network::{run_conv, Node};
     let (net, inputs) = net_and_inputs("tinydw", DesignPoint::Patterns(4), 1);
@@ -68,9 +75,17 @@ fn streaming_and_prepared_paths_are_bit_identical_per_layer() {
             let mut m1 = Machine::new();
             let (out1, stats1) = run_conv(&mut m1, cfg, &shaped);
             let mut m2 = Machine::new();
-            let prep = prepare_conv(cfg);
-            let bound = prep.bind(&mut m2);
-            let (out2, stats2) = run_bound(&mut m2, &prep, &bound, &shaped);
+            let prep = PreparedConv::prepare(cfg);
+            let bound = prep.bind(&mut m2).expect("conv binds");
+            let mut scratch = WorkerScratch::default();
+            let mut ctx = ExecCtx {
+                m: &mut m2,
+                bound: Some(&bound),
+                scratch: &mut scratch,
+                session: None,
+            };
+            let out2 = prep.run(&mut ctx, &[&shaped]);
+            let stats2 = m2.take_stats();
             assert_eq!(out1.data, out2.data, "layer {}", cfg.plan.name);
             assert_eq!(stats1.instrs, stats2.instrs, "layer {}", cfg.plan.name);
             assert_eq!(stats1.cycles(), stats2.cycles(), "layer {}", cfg.plan.name);
@@ -97,12 +112,13 @@ fn batcher_closes_on_max_batch() {
     let cfg = BatchConfig { max_batch: 4, max_delay: Duration::from_secs(3600) };
     let mut b = DynamicBatcher::new(cfg);
     let t0 = Instant::now();
-    let mk = |id| Request { id, input: Tensor::zeros(1, 1, 1), enqueued: t0 };
+    let mk = |id| Request::infer(id, Tensor::zeros(1, 1, 1), t0);
     assert!(b.push(mk(0)).is_none());
     assert!(b.push(mk(1)).is_none());
     assert!(b.push(mk(2)).is_none());
     let batch = b.push(mk(3)).expect("size trigger closes the batch");
     assert_eq!(batch.requests.len(), 4);
+    assert_eq!(batch.target, None);
     let ids: Vec<u64> = batch.requests.iter().map(|r| r.id).collect();
     assert_eq!(ids, vec![0, 1, 2, 3]);
     assert!(b.is_empty());
@@ -115,7 +131,7 @@ fn batcher_closes_on_deadline() {
     let cfg = BatchConfig { max_batch: 1000, max_delay: Duration::from_millis(5) };
     let mut b = DynamicBatcher::new(cfg);
     let t0 = Instant::now();
-    let mk = |id| Request { id, input: Tensor::zeros(1, 1, 1), enqueued: t0 };
+    let mk = |id| Request::infer(id, Tensor::zeros(1, 1, 1), t0);
     assert!(b.push(mk(0)).is_none());
     assert!(b.push(mk(1)).is_none());
     assert_eq!(b.len(), 2);
@@ -129,6 +145,124 @@ fn batcher_closes_on_deadline() {
     assert!(b.flush().is_none());
     assert!(b.push(mk(2)).is_none());
     assert_eq!(b.flush().unwrap().requests.len(), 1);
+}
+
+#[test]
+fn batcher_groups_by_target_and_closes_fifo() {
+    let cfg = BatchConfig { max_batch: 8, max_delay: Duration::from_millis(5) };
+    let mut b = DynamicBatcher::new(cfg);
+    let t0 = Instant::now();
+    let tok = || Tensor::zeros(1, 1, 1);
+    // interleaved arrival: infer, step->w0, infer, step->w1, step->w0
+    assert!(b.push(Request::infer(0, tok(), t0)).is_none());
+    assert!(b.push(Request::step(1, 7, tok(), 0, t0 + Duration::from_micros(1))).is_none());
+    assert!(b.push(Request::infer(2, tok(), t0 + Duration::from_micros(2))).is_none());
+    assert!(b.push(Request::step(3, 8, tok(), 1, t0 + Duration::from_micros(3))).is_none());
+    assert!(b.push(Request::step(4, 10, tok(), 0, t0 + Duration::from_micros(4))).is_none());
+    assert_eq!(b.len(), 5);
+    // deadline closes groups FIFO by their oldest request: shared {0,2},
+    // then worker-0 {1,4} (same-step sessions batch together), then
+    // worker-1 {3} — encode and decode traffic cannot starve each other
+    let now = t0 + Duration::from_millis(10);
+    let g1 = b.poll_deadline(now).expect("shared group first");
+    assert_eq!(g1.target, None);
+    assert_eq!(g1.requests.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 2]);
+    let g2 = b.poll_deadline(now).expect("worker-0 group second");
+    assert_eq!(g2.target, Some(0));
+    assert_eq!(g2.requests.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1, 4]);
+    let g3 = b.poll_deadline(now).expect("worker-1 group last");
+    assert_eq!(g3.target, Some(1));
+    assert_eq!(g3.requests.iter().map(|r| r.id).collect::<Vec<_>>(), vec![3]);
+    assert!(b.poll_deadline(now).is_none());
+    assert!(b.is_empty());
+
+    // the size trigger closes only the full group; others keep waiting
+    let mut b = DynamicBatcher::new(BatchConfig {
+        max_batch: 2,
+        max_delay: Duration::from_secs(3600),
+    });
+    assert!(b.push(Request::infer(0, tok(), t0)).is_none());
+    assert!(b.push(Request::step(1, 0, tok(), 1, t0)).is_none());
+    let full = b.push(Request::step(2, 1, tok(), 1, t0)).expect("size trigger");
+    assert_eq!(full.target, Some(1));
+    assert_eq!(full.requests.len(), 2);
+    assert_eq!(b.len(), 1);
+    assert_eq!(b.flush().unwrap().requests[0].id, 0);
+}
+
+#[test]
+fn batcher_edge_cases() {
+    let mk = |id, t| Request::infer(id, Tensor::zeros(1, 1, 1), t);
+
+    // flush on a never-used empty batcher is a no-op (the dispatcher's
+    // shutdown drain loop relies on it)
+    let mut b = DynamicBatcher::new(BatchConfig {
+        max_batch: 8,
+        max_delay: Duration::from_millis(5),
+    });
+    assert!(b.flush().is_none());
+    assert!(b.next_deadline().is_none());
+
+    // the deadline trigger fires at the exact deadline instant (>=, not >)
+    let t0 = Instant::now();
+    assert!(b.push(mk(0, t0)).is_none());
+    let deadline = b.next_deadline().expect("deadline while pending");
+    assert_eq!(deadline, t0 + Duration::from_millis(5));
+    assert!(b.poll_deadline(deadline - Duration::from_nanos(1)).is_none());
+    let batch = b.poll_deadline(deadline).expect("exact-instant close");
+    assert_eq!(batch.requests.len(), 1);
+    assert!(b.is_empty());
+
+    // max_batch = 0 normalizes to 1: every push closes as its own batch
+    let mut b1 = DynamicBatcher::new(BatchConfig {
+        max_batch: 0,
+        max_delay: Duration::from_secs(3600),
+    });
+    for id in 0..3u64 {
+        let batch = b1.push(mk(id, Instant::now())).expect("size trigger on every push");
+        assert_eq!(batch.requests.len(), 1);
+        assert_eq!(batch.requests[0].id, id);
+        assert!(b1.is_empty());
+        assert!(b1.next_deadline().is_none());
+    }
+}
+
+#[test]
+fn closed_sessions_free_their_caches_and_restart_empty() {
+    let net = synthetic_network("tinydec", DesignPoint::Patterns(4), 3).unwrap();
+    let prepared = Arc::new(PreparedModel::prepare_decoder(
+        &net.nodes,
+        net.step_nodes.as_ref().expect("decoder step graph"),
+    ));
+    // engine level: end_session drops the KV state, and reusing the id
+    // starts from position 0 (bit-identical to the original first step)
+    let mut engine = EngineMachine::new(&prepared);
+    let tokens = synthetic_step_inputs(&net, 0, 3, 17);
+    let first = engine.run_step(5, &tokens[0]);
+    engine.run_step(5, &tokens[1]);
+    assert_eq!(engine.num_sessions(), 1);
+    engine.end_session(5);
+    assert_eq!(engine.num_sessions(), 0);
+    let restarted = engine.run_step(5, &tokens[0]);
+    assert_eq!(first.output.data, restarted.output.data);
+    engine.end_session(99); // unknown id: no-op
+
+    // server level: close rides the session FIFO, so all prior steps
+    // still complete with their outputs intact
+    let cfg = ServeConfig {
+        workers: 2,
+        batch: BatchConfig { max_batch: 4, max_delay: Duration::from_millis(1) },
+    };
+    let mut server = Server::start(Arc::clone(&prepared), &cfg);
+    let sid = server.open_session();
+    for tok in &tokens {
+        server.submit_step(sid, tok.clone());
+    }
+    server.close_session(sid);
+    let mut done = server.shutdown();
+    done.sort_by_key(|c| c.id);
+    assert_eq!(done.len(), tokens.len()); // close produces no completion
+    assert_eq!(done[0].output.data, first.output.data);
 }
 
 #[test]
@@ -147,6 +281,7 @@ fn concurrent_workers_are_deterministic_and_bit_exact() {
         assert_eq!(c.output.data, legacy[c.id as usize], "request {}", c.id);
         assert!(c.batch_size >= 1 && c.batch_size <= 4);
         assert!(c.worker < 3);
+        assert_eq!(c.session, None);
     }
     // a second serving run over the same prepared model reproduces every
     // output exactly, regardless of worker/batch scheduling
@@ -217,6 +352,102 @@ fn tinyattn_dynamic_operands_deterministic_across_placement() {
 }
 
 #[test]
+fn cached_decode_matches_prefix_rerun_and_costs_fewer_cycles() {
+    // the tentpole contract: every cached decode step is bit-identical
+    // to re-running its full prefix through the one-shot causal graph,
+    // at a fraction of the simulated cycles
+    let dp = DesignPoint::Patterns(8);
+    let net = synthetic_network("tinydec", dp, 5).unwrap();
+    let prepared = Arc::new(PreparedModel::prepare_decoder(
+        &net.nodes,
+        net.step_nodes.as_ref().expect("decoder step graph"),
+    ));
+    let mut engine = EngineMachine::new(&prepared);
+    let steps = 6usize;
+    let tokens = synthetic_step_inputs(&net, 0, steps, 13);
+    let mut cached_cycles = 0u64;
+    let mut baseline_cycles = 0u64;
+    for t in 0..steps {
+        let step_res = engine.run_step(42, &tokens[t]);
+        cached_cycles += step_res.total.cycles();
+        let net_t = synthetic_network_seq("tinydec", dp, 5, Some(t + 1)).unwrap();
+        let (h, w, c) = net_t.input_shape;
+        let mut data = Vec::new();
+        for tok in tokens.iter().take(t + 1) {
+            data.extend_from_slice(&tok.data);
+        }
+        let full = run_network(&net_t.nodes, &Tensor { h, w, c, data });
+        baseline_cycles += full.total.cycles();
+        assert_eq!(
+            step_res.output.data[..],
+            full.output.data[t * c..(t + 1) * c],
+            "decode step {t} != one-shot prefix row"
+        );
+        assert!(step_res.output.data.iter().all(|v| v.is_finite()));
+    }
+    assert_eq!(engine.num_sessions(), 1);
+    assert!(
+        cached_cycles < baseline_cycles,
+        "cached decode ({cached_cycles} cycles) must beat prefix repack ({baseline_cycles})"
+    );
+}
+
+#[test]
+fn decode_sessions_stay_on_their_pinned_worker() {
+    // session affinity: every step of a session lands on the worker
+    // that owns its KV cache, across many interleaved sessions
+    let net = synthetic_network("tinydec", DesignPoint::Patterns(4), 3).unwrap();
+    let prepared = Arc::new(PreparedModel::prepare_decoder(
+        &net.nodes,
+        net.step_nodes.as_ref().expect("decoder step graph"),
+    ));
+    let cfg = ServeConfig {
+        workers: 3,
+        batch: BatchConfig { max_batch: 4, max_delay: Duration::from_millis(1) },
+    };
+    let mut server = Server::start(Arc::clone(&prepared), &cfg);
+    let sids: Vec<SessionId> = (0..6).map(|_| server.open_session()).collect();
+    let steps = 5usize;
+    let tokens: Vec<Vec<Tensor>> =
+        (0..6).map(|k| synthetic_step_inputs(&net, k, steps, 9)).collect();
+    for t in 0..steps {
+        for (si, sid) in sids.iter().enumerate() {
+            server.submit_step(*sid, tokens[si][t].clone());
+        }
+    }
+    let mut done = server.shutdown();
+    done.sort_by_key(|c| c.id);
+    assert_eq!(done.len(), 6 * steps);
+    let mut worker_of: HashMap<u64, usize> = HashMap::new();
+    let mut steps_of: HashMap<u64, usize> = HashMap::new();
+    for c in &done {
+        let sid = c.session.expect("decode completion carries its session");
+        *steps_of.entry(sid).or_insert(0) += 1;
+        match worker_of.get(&sid) {
+            Some(&w) => assert_eq!(w, c.worker, "session {sid} split across workers"),
+            None => {
+                worker_of.insert(sid, c.worker);
+            }
+        }
+    }
+    assert_eq!(worker_of.len(), 6);
+    for (sid, w) in &worker_of {
+        assert_eq!(*w, (*sid as usize) % 3, "session {sid} not on its pinned worker");
+    }
+    assert!(steps_of.values().all(|&n| n == steps));
+
+    // deterministic: the served outputs match a single-engine replay
+    let mut engine = EngineMachine::new(&prepared);
+    for c in &done {
+        if c.session == Some(sids[0].0) {
+            let t = (c.id as usize) / sids.len(); // step-major submission
+            let want = engine.run_step(999, &tokens[0][t]);
+            assert_eq!(c.output.data, want.output.data, "session 0 step {t}");
+        }
+    }
+}
+
+#[test]
 fn transpose_hw_swaps_axes_and_roundtrips() {
     use soniq::sim::network::{Node, INPUT};
     let t = Tensor { h: 3, w: 5, c: 2, data: (0..30).map(|i| i as f32).collect() };
@@ -235,55 +466,20 @@ fn transpose_hw_swaps_axes_and_roundtrips() {
 }
 
 #[test]
-fn batcher_edge_cases() {
-    let mk = |id, t| Request { id, input: Tensor::zeros(1, 1, 1), enqueued: t };
-
-    // flush on a never-used empty batcher is a no-op
-    let mut b = DynamicBatcher::new(BatchConfig {
-        max_batch: 8,
-        max_delay: Duration::from_millis(5),
-    });
-    assert!(b.flush().is_none());
-    assert!(b.next_deadline().is_none());
-
-    // the deadline trigger fires at the exact deadline instant (>=, not >)
-    let t0 = Instant::now();
-    assert!(b.push(mk(0, t0)).is_none());
-    let deadline = b.next_deadline().expect("deadline while pending");
-    assert_eq!(deadline, t0 + Duration::from_millis(5));
-    assert!(b.poll_deadline(deadline - Duration::from_nanos(1)).is_none());
-    let batch = b.poll_deadline(deadline).expect("exact-instant close");
-    assert_eq!(batch.requests.len(), 1);
-    assert!(b.is_empty());
-
-    // max_batch = 1 closes every push as its own batch
-    let mut b1 = DynamicBatcher::new(BatchConfig {
-        max_batch: 1,
-        max_delay: Duration::from_secs(3600),
-    });
-    for id in 0..3u64 {
-        let batch = b1.push(mk(id, Instant::now())).expect("size trigger on every push");
-        assert_eq!(batch.requests.len(), 1);
-        assert_eq!(batch.requests[0].id, id);
-        assert!(b1.is_empty());
-        assert!(b1.next_deadline().is_none());
-    }
-}
-
-#[test]
 fn registry_prepares_once_per_key() {
     let (net, _) = net_and_inputs("tinynet", DesignPoint::Uniform(4), 1);
     let reg = ModelRegistry::new();
-    let key = model_key("tinynet", "U4");
+    let key = ModelKey::new("tinynet", "U4");
+    assert_eq!(key.to_string(), "tinynet/U4");
     assert!(!reg.contains(&key));
     let mut builds = 0u32;
     let a = reg.get_or_prepare(&key, || {
         builds += 1;
-        net.nodes.clone()
+        PreparedModel::prepare(&net.nodes)
     });
     let b = reg.get_or_prepare(&key, || {
         builds += 1;
-        net.nodes.clone()
+        PreparedModel::prepare(&net.nodes)
     });
     assert!(Arc::ptr_eq(&a, &b));
     assert_eq!(builds, 1, "model must be prepared exactly once per key");
@@ -302,11 +498,18 @@ fn serve_report_aggregates_and_serializes() {
     };
     let t0 = Instant::now();
     let done = serve_all(&prepared, &cfg, inputs);
-    let report = summarize(&done, t0.elapsed());
+    let setup = SetupTiming {
+        prepare: Duration::from_millis(3),
+        bind: Duration::from_micros(500),
+    };
+    let report = summarize(&done, t0.elapsed(), setup);
     assert_eq!(report.requests, 12);
     assert!(report.batches >= 3 && report.batches <= 12, "batches {}", report.batches);
     assert!(report.mean_batch_size >= 1.0 && report.mean_batch_size <= 4.0);
     assert!(report.throughput_rps > 0.0);
+    // steady-state excludes bind time, so it can only be faster
+    assert!(report.steady_rps >= report.throughput_rps);
+    assert_eq!(report.setup.prepare, Duration::from_millis(3));
     assert!(report.p50_ms <= report.p99_ms);
     assert!(report.sim.cycles() > 0 && report.sim.energy_pj > 0.0);
     // one aggregate per conv/FC layer: c1, c2, c3, fc
@@ -317,4 +520,7 @@ fn serve_report_aggregates_and_serializes() {
     let parsed = soniq::util::json::parse(&text).unwrap();
     assert_eq!(parsed.get("requests").unwrap().as_usize().unwrap(), 12);
     assert_eq!(parsed.get("per_layer").unwrap().as_arr().unwrap().len(), 4);
+    assert!(parsed.get("prepare_ms").is_some());
+    assert!(parsed.get("bind_ms").is_some());
+    assert!(parsed.get("steady_throughput_rps").is_some());
 }

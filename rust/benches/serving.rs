@@ -7,7 +7,9 @@ use soniq::coordinator::{
     synthetic_inputs, synthetic_network, synthetic_network_seq, synthetic_step_inputs,
     DesignPoint,
 };
-use soniq::serve::{serve_all, BatchConfig, EngineMachine, PreparedModel, ServeConfig};
+use soniq::serve::{
+    serve_all, BatchConfig, EngineMachine, ModelKey, PreparedModel, ServeConfig, Server,
+};
 use soniq::sim::network::{run_network, Tensor};
 use soniq::util::bench::{bench, section};
 use std::sync::Arc;
@@ -41,6 +43,7 @@ fn main() {
             let cfg = ServeConfig {
                 workers,
                 batch: BatchConfig { max_batch: 16, max_delay: Duration::from_millis(1) },
+                ..ServeConfig::default()
             };
             let t0 = Instant::now();
             let done = serve_all(&prepared, &cfg, inputs.clone());
@@ -49,6 +52,71 @@ fn main() {
                 "  {workers} worker(s): {} requests in {wall:.2?} -> {:.1} req/s",
                 done.len(),
                 done.len() as f64 / wall.as_secs_f64().max(1e-9)
+            );
+        }
+    }
+
+    // Multi-model serving: two models' mixed traffic through ONE pool
+    // vs one dedicated pool per model run back to back — the pooled
+    // form shares workers (and pays per-batch bind-table switches), the
+    // dedicated form pays a second fleet. Also shown: the same mixed
+    // traffic under a 1-model resident budget, i.e. worst-case LRU
+    // eviction churn (rebind on every model switch).
+    {
+        let dp = DesignPoint::Patterns(4);
+        section("multi-model pool — tinynet + tinyattn mixed traffic");
+        let keys_nets: Vec<_> = ["tinynet", "tinyattn"]
+            .iter()
+            .map(|name| {
+                let net = synthetic_network(name, dp, 7).expect("synthetic net");
+                let inputs = synthetic_inputs(&net, 32, 11);
+                let key = ModelKey::new(*name, dp.label());
+                let prepared = Arc::new(PreparedModel::prepare(&net.nodes));
+                (key, prepared, inputs)
+            })
+            .collect();
+
+        let t0 = Instant::now();
+        for (key, prepared, inputs) in &keys_nets {
+            let cfg = ServeConfig {
+                workers: 4,
+                batch: BatchConfig { max_batch: 16, max_delay: Duration::from_millis(1) },
+                ..ServeConfig::default()
+            };
+            let mut server = Server::start_named(key.clone(), Arc::clone(prepared), &cfg);
+            for x in inputs {
+                server.submit(x.clone());
+            }
+            let done = server.shutdown();
+            assert_eq!(done.len(), inputs.len());
+        }
+        let dedicated_wall = t0.elapsed();
+        println!("  dedicated pools (4 workers each, sequential): {dedicated_wall:.2?}");
+
+        for budget in [usize::MAX, 1usize] {
+            let cfg = ServeConfig {
+                workers: 4,
+                batch: BatchConfig { max_batch: 16, max_delay: Duration::from_millis(1) },
+                resident_models: budget,
+            };
+            let t1 = Instant::now();
+            let mut server = Server::start_pool(&cfg);
+            for (key, prepared, _) in &keys_nets {
+                server.register(key.clone(), Arc::clone(prepared));
+            }
+            for i in 0..32 {
+                for (key, _, inputs) in &keys_nets {
+                    server.submit_model(key, inputs[i].clone());
+                }
+            }
+            let done = server.shutdown();
+            assert_eq!(done.len(), 64);
+            let wall = t1.elapsed();
+            let label =
+                if budget == usize::MAX { "both resident" } else { "budget 1 (evict churn)" };
+            println!(
+                "  one pool, interleaved, {label}: {wall:.2?} -> {:.1} req/s",
+                64.0 / wall.as_secs_f64().max(1e-9)
             );
         }
     }

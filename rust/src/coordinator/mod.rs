@@ -340,6 +340,20 @@ pub struct SyntheticNet {
     pub max_positions: usize,
 }
 
+impl SyntheticNet {
+    /// Prepare this graph for serving: the decoder form (full + step
+    /// graph) whenever the model has one, the plain form otherwise —
+    /// the single dispatch the CLI, benches and tests must agree on (a
+    /// step-less `prepare()` cached for a decoder would panic a later
+    /// `open_session`).
+    pub fn prepare(&self) -> crate::serve::PreparedModel {
+        match &self.step_nodes {
+            Some(sn) => crate::serve::PreparedModel::prepare_decoder(&self.nodes, sn),
+            None => crate::serve::PreparedModel::prepare(&self.nodes),
+        }
+    }
+}
+
 /// Build a small deterministic network for a design point without any
 /// trained artifacts: weights/BN come from a seeded xorshift stream and
 /// P-point precision assignments run PatternMatch on synthetic

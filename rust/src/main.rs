@@ -16,6 +16,8 @@
 //!   soniq serve-bench --model tinyattn --design P4   # Transformer encoder
 //!   soniq serve-bench --model tinydec --decode --steps 64 --sessions 4 \
 //!         # KV-cached autoregressive decode vs prefix-repack baseline
+//!   soniq serve-bench --models tinynet,tinyattn,tinydec --requests 384 \
+//!         # mixed multi-model traffic through ONE worker pool
 
 use anyhow::{bail, Result};
 use soniq::coordinator::{
@@ -139,16 +141,116 @@ fn main() -> Result<()> {
             let seed = args.get_usize("seed", 0) as u64;
             let decode = args.has_flag("decode");
 
-            let net = synthetic_network(&model, design, seed)?;
             let registry = serve::ModelRegistry::new();
-            let key = serve::ModelKey::new(model.clone(), design.label());
             let cfg = ServeConfig {
                 workers,
                 batch: BatchConfig {
                     max_batch,
                     max_delay: Duration::from_millis(max_delay_ms as u64),
                 },
+                resident_models: args.get_usize("resident-models", usize::MAX).max(1),
             };
+
+            let models_arg = args.get_or("models", "");
+            if !models_arg.is_empty() {
+                // --- mixed multi-model traffic through ONE worker pool ---
+                if decode {
+                    bail!(
+                        "--decode benchmarks one decoder's sessions; it does not \
+                         combine with --models (use --model tinydec --decode)"
+                    );
+                }
+                let names: Vec<String> = models_arg
+                    .split(',')
+                    .map(|s| s.trim().to_string())
+                    .filter(|s| !s.is_empty())
+                    .collect();
+                if names.is_empty() {
+                    bail!("--models wants a comma-separated model list");
+                }
+                println!(
+                    "== soniq serve-bench — multi-model pool [{}] / {} ==",
+                    names.join(", "),
+                    design.label()
+                );
+                let per_model = (n_requests / names.len()).max(1);
+
+                let mut nets = Vec::new(); // (key, net, inputs)
+                for name in &names {
+                    let net = synthetic_network(name, design, seed)?;
+                    let key = serve::ModelKey::new(name.clone(), design.label());
+                    let inputs = synthetic_inputs(&net, per_model, seed + 1);
+                    nets.push((key, net, inputs));
+                }
+                // time only preparation (codegen + packing), matching
+                // what the single-model path reports as prepare_ms
+                let t1 = Instant::now();
+                let fleet: Vec<_> = nets
+                    .into_iter()
+                    .map(|(key, net, inputs)| {
+                        let prepared = registry.get_or_prepare(&key, || net.prepare());
+                        (key, prepared, inputs)
+                    })
+                    .collect();
+                let prepare = t1.elapsed();
+                println!(
+                    "prepared {} models in {prepare:.2?} (registry caches them for reuse)",
+                    fleet.len()
+                );
+
+                // dedicated single-model engines: the bit-exactness oracle
+                let dedicated: Vec<Vec<Vec<f32>>> = fleet
+                    .iter()
+                    .map(|(_, prepared, inputs)| {
+                        let mut engine = serve::EngineMachine::new(prepared);
+                        inputs.iter().map(|x| engine.run(x).output.data.clone()).collect()
+                    })
+                    .collect();
+
+                println!(
+                    "one pool, {} models interleaved ({workers} workers, max batch \
+                     {max_batch}, {per_model} requests/model):",
+                    fleet.len()
+                );
+                let t2 = Instant::now();
+                let mut server = serve::Server::start_pool(&cfg);
+                for (key, prepared, _) in &fleet {
+                    server.register(key.clone(), Arc::clone(prepared));
+                }
+                let binds = server.bind_times();
+                // round-robin submission: every batching window sees
+                // every model, the worst case for bind-table churn
+                for i in 0..per_model {
+                    for (key, _, inputs) in &fleet {
+                        server.submit_model(key, inputs[i].clone());
+                    }
+                }
+                let mut done = server.shutdown();
+                let wall = t2.elapsed();
+                done.sort_by_key(|c| c.id);
+                let bind = binds.lock().unwrap().iter().max().copied().unwrap_or_default();
+                let report = serve::summarize(&done, wall, SetupTiming { prepare, bind });
+                report.print();
+
+                // ids were assigned round-robin: id = i * n_models + mi
+                let bitexact = done.len() == per_model * fleet.len()
+                    && done.iter().all(|c| {
+                        let mi = (c.id as usize) % fleet.len();
+                        let ri = (c.id as usize) / fleet.len();
+                        c.output.data == dedicated[mi][ri]
+                    });
+                println!("  outputs bit-identical to dedicated single-model engines: {bitexact}");
+                if args.has_flag("json") {
+                    println!("{}", report.to_json().to_string());
+                }
+                if !bitexact {
+                    bail!("multi-model pool outputs diverged from dedicated engines");
+                }
+                return Ok(());
+            }
+
+            let net = synthetic_network(&model, design, seed)?;
+            let key = serve::ModelKey::new(model.clone(), design.label());
             println!("== soniq serve-bench — {key} ==");
 
             if decode {
@@ -166,12 +268,7 @@ fn main() -> Result<()> {
                     .collect();
 
                 let t1 = Instant::now();
-                let prepared = registry.get_or_prepare(&key, || {
-                    serve::PreparedModel::prepare_decoder(
-                        &net.nodes,
-                        net.step_nodes.as_ref().unwrap(),
-                    )
-                });
+                let prepared = registry.get_or_prepare(&key, || net.prepare());
                 let prepare = t1.elapsed();
                 // (decoder models always cache their decoder form under
                 // this key — see ModelRegistry::get_or_prepare)
@@ -186,7 +283,8 @@ fn main() -> Result<()> {
                      {workers} workers, session-affine batching):"
                 );
                 let t2 = Instant::now();
-                let mut server = serve::Server::start(Arc::clone(&prepared), &cfg);
+                let mut server =
+                    serve::Server::start_named(key.clone(), Arc::clone(&prepared), &cfg);
                 let binds = server.bind_times();
                 let sids: Vec<serve::SessionId> =
                     (0..n_sessions).map(|_| server.open_session()).collect();
@@ -266,10 +364,7 @@ fn main() -> Result<()> {
             let t1 = Instant::now();
             // decoder models cache their decoder form even for stateless
             // serving, so one registry entry per key serves both paths
-            let prepared = registry.get_or_prepare(&key, || match &net.step_nodes {
-                Some(sn) => serve::PreparedModel::prepare_decoder(&net.nodes, sn),
-                None => serve::PreparedModel::prepare(&net.nodes),
-            });
+            let prepared = registry.get_or_prepare(&key, || net.prepare());
             let prepare = t1.elapsed();
             println!(
                 "prepared model `{key}` in {prepare:.2?} \
@@ -285,7 +380,7 @@ fn main() -> Result<()> {
                  deadline {max_delay_ms} ms):"
             );
             let t2 = Instant::now();
-            let mut server = serve::Server::start(Arc::clone(&prepared), &cfg);
+            let mut server = serve::Server::start_named(key.clone(), Arc::clone(&prepared), &cfg);
             let binds = server.bind_times();
             for x in inputs.iter().cloned() {
                 server.submit(x);

@@ -1,10 +1,14 @@
-//! Dynamic request batching with session affinity: requests group by
-//! *target* (a decode session's pinned worker, or `None` for stateless
-//! inference), a group closes when it reaches `max_batch` requests
-//! (size trigger) or when its oldest request has waited `max_delay`
-//! (latency-deadline trigger), and groups close in FIFO order of their
-//! oldest request, so interleaved encode/decode traffic cannot starve
-//! either side.
+//! Dynamic request batching with model and session affinity: requests
+//! group by `(model, target)` — the model they address plus the decode
+//! session's pinned worker (`None` for stateless inference) — so every
+//! batch stays homogeneous per kernel replay: one resident model per
+//! batch, so even under an eviction budget a batch triggers at most
+//! one (re)bind and never interleaves two models' kernels. A
+//! group closes when it reaches `max_batch` requests (size trigger) or
+//! when its oldest request has waited `max_delay` (latency-deadline
+//! trigger), and groups close in FIFO order of their oldest request, so
+//! interleaved traffic — encode vs decode, hot model vs cold — cannot
+//! starve any group.
 //!
 //! The policy lives in [`DynamicBatcher`], a plain synchronous state
 //! machine (unit-testable without threads); the dispatcher thread in
@@ -12,6 +16,7 @@
 //! routes closed batches to the shared queue (`target: None`) or the
 //! pinned worker's queue (`target: Some(w)`).
 
+use crate::serve::ModelHandle;
 use crate::sim::network::Tensor;
 use std::collections::VecDeque;
 use std::time::{Duration, Instant};
@@ -47,6 +52,9 @@ pub enum Payload {
 #[derive(Debug, Clone)]
 pub struct Request {
     pub id: u64,
+    /// the model this request addresses; the executing worker binds it
+    /// lazily from the handle on its first batch
+    pub model: ModelHandle,
     pub payload: Payload,
     /// when the request entered the queue (latency is measured from here)
     pub enqueued: Instant,
@@ -57,35 +65,62 @@ pub struct Request {
 
 impl Request {
     /// A stateless inference request (no worker affinity).
-    pub fn infer(id: u64, input: Tensor, enqueued: Instant) -> Request {
-        Request { id, payload: Payload::Infer(input), enqueued, target: None }
+    pub fn infer(id: u64, model: &ModelHandle, input: Tensor, enqueued: Instant) -> Request {
+        Request { id, model: model.clone(), payload: Payload::Infer(input), enqueued, target: None }
     }
 
     /// A decode-step request pinned to `target` (the worker holding the
     /// session's KV cache).
-    pub fn step(id: u64, session: u64, token: Tensor, target: usize, enqueued: Instant) -> Request {
-        Request { id, payload: Payload::Step { session, token }, enqueued, target: Some(target) }
+    pub fn step(
+        id: u64,
+        model: &ModelHandle,
+        session: u64,
+        token: Tensor,
+        target: usize,
+        enqueued: Instant,
+    ) -> Request {
+        Request {
+            id,
+            model: model.clone(),
+            payload: Payload::Step { session, token },
+            enqueued,
+            target: Some(target),
+        }
     }
 
     /// A session-close request pinned to `target`; rides the same FIFO
     /// as the session's steps, so it frees the caches only after every
     /// earlier step has executed.
-    pub fn close(id: u64, session: u64, target: usize, enqueued: Instant) -> Request {
-        Request { id, payload: Payload::Close { session }, enqueued, target: Some(target) }
+    pub fn close(
+        id: u64,
+        model: &ModelHandle,
+        session: u64,
+        target: usize,
+        enqueued: Instant,
+    ) -> Request {
+        Request {
+            id,
+            model: model.clone(),
+            payload: Payload::Close { session },
+            enqueued,
+            target: Some(target),
+        }
     }
 }
 
-/// A closed batch, ready for a worker. All requests share `target`:
-/// same-step decode requests of co-located sessions batch together,
-/// and never mix with another worker's pinned traffic.
+/// A closed batch, ready for a worker. All requests share `model` and
+/// `target`: same-step decode requests of co-located sessions batch
+/// together, requests for different models never mix (each batch is one
+/// bind-table replay), and pinned traffic never mixes across workers.
 #[derive(Debug)]
 pub struct Batch {
+    pub model: ModelHandle,
     pub target: Option<usize>,
     pub requests: Vec<Request>,
 }
 
-/// The batch-close policy: accumulates requests into per-target groups
-/// (open [`Batch`]es), emits one on the size trigger
+/// The batch-close policy: accumulates requests into per-`(model,
+/// target)` groups (open [`Batch`]es), emits one on the size trigger
 /// ([`push`](Self::push)) or the deadline trigger
 /// ([`poll_deadline`](Self::poll_deadline)). Groups are kept in arrival
 /// order of their oldest request, so the front group always carries the
@@ -113,16 +148,22 @@ impl DynamicBatcher {
         self.groups.is_empty()
     }
 
-    /// Enqueue one request into its target's group; returns that group
-    /// as a closed batch if this push filled it to `max_batch`.
+    /// Enqueue one request into its `(model, target)` group; returns
+    /// that group as a closed batch if this push filled it to
+    /// `max_batch`.
     pub fn push(&mut self, r: Request) -> Option<Batch> {
-        let idx = match self.groups.iter().position(|g| g.target == r.target) {
+        let pos = self
+            .groups
+            .iter()
+            .position(|g| g.model.key == r.model.key && g.target == r.target);
+        let idx = match pos {
             Some(i) => {
                 self.groups[i].requests.push(r);
                 i
             }
             None => {
-                self.groups.push_back(Batch { target: r.target, requests: vec![r] });
+                let model = r.model.clone();
+                self.groups.push_back(Batch { model, target: r.target, requests: vec![r] });
                 self.groups.len() - 1
             }
         };

@@ -22,6 +22,7 @@
 use crate::codegen::gemm::{emit_gemm, emit_gemm_causal};
 use crate::codegen::{self, pack, LayerBufs, LayerKind, LayerPlan};
 use crate::serve::session::{CachedAttnOp, CausalAvOp, SessionState};
+use crate::serve::{ModelHandle, ModelKey};
 use crate::sim::eltwise;
 use crate::sim::machine::{Machine, RunStats};
 use crate::sim::network::{ConvLayerCfg, LayerStat, MatmulCfg, NetResult, Node, Tensor, INPUT};
@@ -825,6 +826,11 @@ pub struct StepModel {
     /// tightest `max_positions` across the attention nodes: the hard
     /// per-session step limit (`usize::MAX` if the graph has none)
     pub max_positions: usize,
+    /// KV-cache bytes one decode step appends across all attention
+    /// nodes (packed K column + quantized and packed V, amortized) —
+    /// what the server's footprint-based session placement charges a
+    /// worker per submitted step
+    pub kv_bytes_per_position: usize,
 }
 
 /// A whole network prepared once: codegen plans, packed weights and mask
@@ -910,9 +916,34 @@ impl PreparedModel {
             })
             .min()
             .unwrap_or(usize::MAX);
+        let kv_bytes_per_position = step_nodes
+            .iter()
+            .map(|n| match n {
+                Node::CachedAttn { cfg, .. } => {
+                    let cap = Pattern::uniform(cfg.pos_prec).capacity() as usize;
+                    let nch_dh = cfg
+                        .dh_asg
+                        .chunks
+                        .iter()
+                        .zip(cfg.dh_asg.valid.iter())
+                        .filter(|&(_, &v)| v > 0)
+                        .count();
+                    // per appended position, per head: one packed K
+                    // column, dh quantized V values, and the packed V
+                    // columns' amortized growth (16 B per cap positions)
+                    cfg.heads * (nch_dh * 16 + cfg.dh * 4 + cfg.dh * 16 / cap.max(1))
+                }
+                _ => 0,
+            })
+            .sum();
         PreparedModel {
             nodes,
-            step: Some(StepModel { nodes: step_prepared, slots, max_positions }),
+            step: Some(StepModel {
+                nodes: step_prepared,
+                slots,
+                max_positions,
+                kv_bytes_per_position,
+            }),
         }
     }
 
@@ -966,70 +997,179 @@ fn run_graph(
     NetResult { output: outputs.pop().unwrap(), layers, total }
 }
 
-/// One worker's execution context: a simulated machine with every
-/// prepared op's buffers bound and static weights resident, reused
-/// across all requests the worker serves — plus the KV-cache state of
-/// every decode session pinned to this worker.
-pub struct EngineMachine {
+/// One resident model on a worker machine: the per-node bind tables of
+/// its full and step graphs, plus the LRU stamp eviction orders by.
+#[derive(Debug)]
+struct ResidentModel {
     model: Arc<PreparedModel>,
-    m: Machine,
     bound: Vec<Option<BoundKernel>>,
     step_bound: Vec<Option<BoundKernel>>,
+    last_used: u64,
+}
+
+/// One decode session's state plus the model it belongs to — a session
+/// id is meaningful only within its model, and a step that addresses it
+/// through a different model's handle is a caller bug (the KV slot
+/// layout would not match), caught by assertion.
+#[derive(Debug)]
+struct SessionEntry {
+    key: Arc<ModelKey>,
+    state: SessionState,
+}
+
+/// One worker's execution context: a simulated machine serving one or
+/// more prepared models. Each model gets a per-model bind table
+/// (buffers + resident weights), populated lazily on the first request
+/// that addresses it and evicted LRU once more than `budget` models are
+/// resident — plus the KV-cache state of every decode session pinned to
+/// this worker.
+///
+/// Session KV caches live in host-side [`SessionState`], *not* in the
+/// evictable machine buffers: evicting and later rebinding a model
+/// never loses an open session's cache (the attention ops re-write the
+/// resident operand buffers from the session state on every step).
+pub struct EngineMachine {
+    m: Machine,
     scratch: WorkerScratch,
-    sessions: HashMap<u64, SessionState>,
+    resident: HashMap<ModelKey, ResidentModel>,
+    /// monotone use counter driving LRU eviction
+    tick: u64,
+    /// max resident models before the least-recently-used is evicted
+    budget: usize,
+    /// the model `run`/`run_step` address (single-model compatibility)
+    default_model: Option<ModelHandle>,
+    sessions: HashMap<u64, SessionEntry>,
 }
 
 impl EngineMachine {
-    /// Bind a prepared model to a fresh simulated machine (one per
-    /// worker): buffers allocated and weights/masks written exactly
-    /// once, for the full graph and — on decoders — the step graph.
-    pub fn new(model: &Arc<PreparedModel>) -> EngineMachine {
-        let mut m = Machine::new();
-        let bound: Vec<Option<BoundKernel>> =
-            model.nodes.iter().map(|n| n.op.bind(&mut m)).collect();
-        let step_bound: Vec<Option<BoundKernel>> = match &model.step {
-            Some(step) => step.nodes.iter().map(|n| n.op.bind(&mut m)).collect(),
-            None => Vec::new(),
-        };
+    /// A machine with no resident models yet: models bind lazily via
+    /// [`run_model`](Self::run_model) / [`bind_model`](Self::bind_model)
+    /// and at most `budget` stay resident (LRU-evicted beyond that).
+    pub fn with_budget(budget: usize) -> EngineMachine {
         EngineMachine {
-            model: Arc::clone(model),
-            m,
-            bound,
-            step_bound,
+            m: Machine::new(),
             scratch: WorkerScratch::default(),
+            resident: HashMap::new(),
+            tick: 0,
+            budget: budget.max(1),
+            default_model: None,
             sessions: HashMap::new(),
         }
     }
 
-    /// Run one inference over the prepared full graph.
-    pub fn run(&mut self, input: &Tensor) -> NetResult {
-        run_graph(
-            &self.model.nodes,
-            &self.bound,
-            &mut self.m,
-            &mut self.scratch,
-            None,
-            input,
-        )
+    /// Bind one prepared model to a fresh simulated machine (the
+    /// single-model worker of [`crate::serve::Server::start`] and the
+    /// one-shot `run_network` path): buffers allocated and weights/masks
+    /// written exactly once, for the full graph and — on decoders — the
+    /// step graph. [`run`](Self::run) / [`run_step`](Self::run_step)
+    /// address this model; the budget is unlimited.
+    pub fn new(model: &Arc<PreparedModel>) -> EngineMachine {
+        let mut engine = EngineMachine::with_budget(usize::MAX);
+        let handle = ModelHandle::new(ModelKey::new("default", "default"), Arc::clone(model));
+        engine.bind_model(&handle);
+        engine.default_model = Some(handle);
+        engine
     }
 
-    /// Run one autoregressive decode step for `session`: the step graph
-    /// executes against the session's KV caches, which grow by exactly
-    /// one position. A new session id starts an empty session.
+    /// Make `handle`'s model resident: allocate its buffers and write
+    /// its weights/masks (full + step graph) unless already bound, and
+    /// stamp it most-recently-used. Evicts LRU models first if the
+    /// resident budget would be exceeded.
+    pub fn bind_model(&mut self, handle: &ModelHandle) {
+        self.tick += 1;
+        let tick = self.tick;
+        if let Some(r) = self.resident.get_mut(&*handle.key) {
+            r.last_used = tick;
+            return;
+        }
+        while self.resident.len() >= self.budget {
+            let lru = self
+                .resident
+                .iter()
+                .min_by_key(|(_, r)| r.last_used)
+                .map(|(k, _)| k.clone());
+            match lru {
+                Some(k) => self.evict_model(&k),
+                None => break,
+            }
+        }
+        let bound: Vec<Option<BoundKernel>> =
+            handle.prepared.nodes.iter().map(|n| n.op.bind(&mut self.m)).collect();
+        let step_bound: Vec<Option<BoundKernel>> = match &handle.prepared.step {
+            Some(step) => step.nodes.iter().map(|n| n.op.bind(&mut self.m)).collect(),
+            None => Vec::new(),
+        };
+        self.resident.insert(
+            (*handle.key).clone(),
+            ResidentModel {
+                model: Arc::clone(&handle.prepared),
+                bound,
+                step_bound,
+                last_used: tick,
+            },
+        );
+    }
+
+    /// Unbind a resident model, freeing every machine buffer its bind
+    /// tables own (no-op for a non-resident key). Open sessions of the
+    /// model survive: their KV caches are host-side state, and the next
+    /// step rebinds the model from its request's handle.
+    pub fn evict_model(&mut self, key: &ModelKey) {
+        if let Some(r) = self.resident.remove(key) {
+            for b in r.bound.iter().chain(r.step_bound.iter()).flatten() {
+                self.m.free(b.bufs.input);
+                self.m.free(b.bufs.weights);
+                self.m.free(b.bufs.out);
+                self.m.free(b.bufs.masks);
+            }
+        }
+    }
+
+    /// Run one inference over `handle`'s prepared full graph, binding
+    /// the model first if it is not resident.
+    pub fn run_model(&mut self, handle: &ModelHandle, input: &Tensor) -> NetResult {
+        self.bind_model(handle);
+        let r = self.resident.get(&*handle.key).expect("model resident after bind");
+        run_graph(&r.model.nodes, &r.bound, &mut self.m, &mut self.scratch, None, input)
+    }
+
+    /// Run one autoregressive decode step of `handle`'s model for
+    /// `session`: the step graph executes against the session's KV
+    /// caches, which grow by exactly one position. A new session id
+    /// starts an empty session.
+    pub fn run_step_model(
+        &mut self,
+        handle: &ModelHandle,
+        session: u64,
+        token: &Tensor,
+    ) -> NetResult {
+        self.bind_model(handle);
+        let r = self.resident.get(&*handle.key).expect("model resident after bind");
+        let step = r.model.step.as_ref().expect("model has no decode step graph");
+        let entry = self.sessions.entry(session).or_insert_with(|| SessionEntry {
+            key: Arc::clone(&handle.key),
+            state: SessionState::new(step.slots),
+        });
+        assert_eq!(
+            *entry.key, *handle.key,
+            "session {session} belongs to model {}, not {} (end it before reusing the id)",
+            entry.key, handle.key
+        );
+        let state = &mut entry.state;
+        run_graph(&step.nodes, &r.step_bound, &mut self.m, &mut self.scratch, Some(state), token)
+    }
+
+    /// Run one inference against the default model (the one this engine
+    /// was [`new`](Self::new)'d with).
+    pub fn run(&mut self, input: &Tensor) -> NetResult {
+        let handle = self.default_model.clone().expect("engine has no default model");
+        self.run_model(&handle, input)
+    }
+
+    /// Run one decode step against the default model.
     pub fn run_step(&mut self, session: u64, token: &Tensor) -> NetResult {
-        let step = self.model.step.as_ref().expect("model has no decode step graph");
-        let state = self
-            .sessions
-            .entry(session)
-            .or_insert_with(|| SessionState::new(step.slots));
-        run_graph(
-            &step.nodes,
-            &self.step_bound,
-            &mut self.m,
-            &mut self.scratch,
-            Some(state),
-            token,
-        )
+        let handle = self.default_model.clone().expect("engine has no default model");
+        self.run_step_model(&handle, session, token)
     }
 
     /// Free a session's KV caches (no-op for an unknown id). A later
@@ -1041,5 +1181,16 @@ impl EngineMachine {
     /// Number of decode sessions resident on this worker.
     pub fn num_sessions(&self) -> usize {
         self.sessions.len()
+    }
+
+    /// Number of models currently bound to this machine.
+    pub fn num_resident(&self) -> usize {
+        self.resident.len()
+    }
+
+    /// Actual bytes held by the KV caches of this worker's sessions
+    /// (what the server-side placement estimate approximates).
+    pub fn session_kv_bytes(&self) -> usize {
+        self.sessions.values().map(|e| e.state.kv_bytes()).sum()
     }
 }

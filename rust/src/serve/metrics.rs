@@ -1,11 +1,18 @@
 //! Serving metrics: host-side throughput and latency percentiles plus
-//! aggregated simulated-hardware counters (cycles / energy, per layer
-//! and total), serialized to a [`ServeReport`] JSON via `util::json`.
+//! aggregated simulated-hardware counters (cycles / energy), serialized
+//! to a [`ServeReport`] JSON via `util::json`.
+//!
+//! Multi-model pools aggregate per model ([`ModelAgg`]: request count,
+//! throughput, simulated totals) and per `(model, layer)` ([`LayerAgg`])
+//! — two models that happen to share a layer name never merge.
 //!
 //! Setup cost is reported *separately* from steady-state throughput:
 //! model preparation (once per model, amortized by the registry) and
 //! per-worker bind time are one-off costs that would otherwise be
-//! folded into the request rate and understate the cached-path win.
+//! folded into the request rate and understate the cached-path win. A
+//! run whose wall clock is entirely bind time has no steady-state
+//! window at all; its `steady_rps` is NaN (JSON `null`), never a
+//! divide-by-almost-zero fantasy number.
 
 use crate::serve::workers::Completion;
 use crate::sim::machine::RunStats;
@@ -13,10 +20,26 @@ use crate::util::json::Json;
 use std::collections::{BTreeMap, HashMap, HashSet};
 use std::time::Duration;
 
-/// Aggregated simulated cost of one layer across all served requests.
+/// Aggregated simulated cost of one model's layer across all served
+/// requests. Keyed by `(model, name)`: layer names repeat across models.
 #[derive(Debug, Clone)]
 pub struct LayerAgg {
+    /// the owning model (`ModelKey` display form, `model/design`)
+    pub model: String,
     pub name: String,
+    pub cycles: u64,
+    pub energy_pj: f64,
+}
+
+/// Aggregated serving stats of one model in a (possibly multi-model)
+/// run.
+#[derive(Debug, Clone)]
+pub struct ModelAgg {
+    /// `ModelKey` display form (`model/design`)
+    pub model: String,
+    pub requests: usize,
+    /// this model's completions over the whole run's wall clock
+    pub throughput_rps: f64,
     pub cycles: u64,
     pub energy_pj: f64,
 }
@@ -44,7 +67,9 @@ pub struct ServeReport {
     /// requests per second over the full-pool window (`wall - bind`,
     /// the time after the slowest worker finished binding). Slightly
     /// optimistic: requests served by already-bound workers during that
-    /// bind are credited to the shrunken window.
+    /// bind are credited to the shrunken window. NaN (JSON `null`) when
+    /// the window is empty or negligible (`bind` at or within jitter of
+    /// `wall`, e.g. a tiny run).
     pub steady_rps: f64,
     pub setup: SetupTiming,
     pub mean_ms: f64,
@@ -53,6 +78,9 @@ pub struct ServeReport {
     pub p99_ms: f64,
     /// simulated-hardware totals summed over all requests
     pub sim: RunStats,
+    /// per-model aggregation, in first-completion order
+    pub per_model: Vec<ModelAgg>,
+    /// per-(model, layer) aggregation, in first-completion order
     pub per_layer: Vec<LayerAgg>,
 }
 
@@ -66,6 +94,13 @@ pub fn percentile(sorted: &[f64], q: f64) -> f64 {
     sorted[idx.min(sorted.len() - 1)]
 }
 
+/// Ascending latency sort under `f64::total_cmp`: a degenerate value
+/// (NaN from a future latency source) sorts last instead of panicking
+/// report generation the way `partial_cmp(..).unwrap()` did.
+fn sort_latencies(lat_ms: &mut [f64]) {
+    lat_ms.sort_by(|a, b| a.total_cmp(b));
+}
+
 /// Fold a run's completions into a [`ServeReport`]. `setup` carries the
 /// one-off prepare/bind costs measured by the caller
 /// (`SetupTiming::default()` when not measured).
@@ -73,48 +108,87 @@ pub fn summarize(completions: &[Completion], wall: Duration, setup: SetupTiming)
     let n = completions.len();
     let mut lat_ms: Vec<f64> =
         completions.iter().map(|c| c.latency.as_secs_f64() * 1e3).collect();
-    lat_ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    sort_latencies(&mut lat_ms);
     let mean_ms = if n == 0 { f64::NAN } else { lat_ms.iter().sum::<f64>() / n as f64 };
 
     let mut sim = RunStats::default();
     let mut batch_ids: HashSet<u64> = HashSet::new();
-    let mut order: Vec<String> = Vec::new();
-    let mut agg: HashMap<String, (u64, f64)> = HashMap::new();
+    // per-(model, layer), first-seen order
+    let mut layer_order: Vec<(String, String)> = Vec::new();
+    let mut layer_agg: HashMap<(String, String), (u64, f64)> = HashMap::new();
+    // per-model, first-seen order
+    let mut model_order: Vec<String> = Vec::new();
+    let mut model_agg: HashMap<String, (usize, u64, f64)> = HashMap::new();
     for c in completions {
         sim.merge(&c.total);
         batch_ids.insert(c.batch_id);
+        let model = c.model.to_string();
+        if !model_agg.contains_key(&model) {
+            model_order.push(model.clone());
+        }
+        let me = model_agg.entry(model.clone()).or_insert((0, 0, 0.0));
+        me.0 += 1;
+        me.1 += c.total.cycles();
+        me.2 += c.total.energy_pj;
         for l in &c.per_layer {
-            if !agg.contains_key(&l.name) {
-                order.push(l.name.clone());
+            let key = (model.clone(), l.name.clone());
+            if !layer_agg.contains_key(&key) {
+                layer_order.push(key.clone());
             }
-            let e = agg.entry(l.name.clone()).or_insert((0, 0.0));
+            let e = layer_agg.entry(key).or_insert((0, 0.0));
             e.0 += l.stats.cycles();
             e.1 += l.stats.energy_pj;
         }
     }
     let batches = batch_ids.len();
-    let per_layer = order
+    let per_layer = layer_order
         .into_iter()
-        .map(|name| {
-            let &(cycles, energy_pj) = &agg[&name];
-            LayerAgg { name, cycles, energy_pj }
+        .map(|key| {
+            let &(cycles, energy_pj) = &layer_agg[&key];
+            let (model, name) = key;
+            LayerAgg { model, name, cycles, energy_pj }
+        })
+        .collect();
+    let wall_s = wall.as_secs_f64().max(1e-9);
+    let per_model = model_order
+        .into_iter()
+        .map(|model| {
+            let &(requests, cycles, energy_pj) = &model_agg[&model];
+            ModelAgg {
+                model,
+                requests,
+                throughput_rps: requests as f64 / wall_s,
+                cycles,
+                energy_pj,
+            }
         })
         .collect();
 
     let steady = wall.saturating_sub(setup.bind);
+    let steady_s = steady.as_secs_f64();
     ServeReport {
         requests: n,
         batches,
         mean_batch_size: if batches == 0 { 0.0 } else { n as f64 / batches as f64 },
         wall,
-        throughput_rps: n as f64 / wall.as_secs_f64().max(1e-9),
-        steady_rps: n as f64 / steady.as_secs_f64().max(1e-9),
+        throughput_rps: n as f64 / wall_s,
+        // an empty steady window means "no steady state was observed",
+        // not "infinitely fast": report NaN -> JSON null. bind and wall
+        // are measured on different threads, so bind can land within
+        // measurement jitter of wall — a window under 0.1% of the run
+        // is that jitter, never a denominator
+        steady_rps: if steady.is_zero() || steady_s < wall_s * 1e-3 {
+            f64::NAN
+        } else {
+            n as f64 / steady_s
+        },
         setup,
         mean_ms,
         p50_ms: percentile(&lat_ms, 0.50),
         p95_ms: percentile(&lat_ms, 0.95),
         p99_ms: percentile(&lat_ms, 0.99),
         sim,
+        per_model,
         per_layer,
     }
 }
@@ -148,11 +222,26 @@ impl ServeReport {
         o.insert("sim_cycles".into(), num(self.sim.cycles() as f64));
         o.insert("sim_energy_pj".into(), num(self.sim.energy_pj));
         o.insert("sim_instrs".into(), num(self.sim.instrs as f64));
+        let models: Vec<Json> = self
+            .per_model
+            .iter()
+            .map(|m| {
+                let mut mo: BTreeMap<String, Json> = BTreeMap::new();
+                mo.insert("model".into(), Json::Str(m.model.clone()));
+                mo.insert("requests".into(), num(m.requests as f64));
+                mo.insert("throughput_rps".into(), num(m.throughput_rps));
+                mo.insert("cycles".into(), num(m.cycles as f64));
+                mo.insert("energy_pj".into(), num(m.energy_pj));
+                Json::Obj(mo)
+            })
+            .collect();
+        o.insert("per_model".into(), Json::Arr(models));
         let layers: Vec<Json> = self
             .per_layer
             .iter()
             .map(|l| {
                 let mut lo: BTreeMap<String, Json> = BTreeMap::new();
+                lo.insert("model".into(), Json::Str(l.model.clone()));
                 lo.insert("name".into(), Json::Str(l.name.clone()));
                 lo.insert("cycles".into(), num(l.cycles as f64));
                 lo.insert("energy_pj".into(), num(l.energy_pj));
@@ -187,6 +276,18 @@ impl ServeReport {
             self.sim.energy_pj / 1e6,
             self.sim.instrs
         );
+        if self.per_model.len() > 1 {
+            for m in &self.per_model {
+                println!(
+                    "  model {:<20} {:>6} req  {:>9.1} req/s  {} cycles  {:.1} uJ",
+                    m.model,
+                    m.requests,
+                    m.throughput_rps,
+                    m.cycles,
+                    m.energy_pj / 1e6
+                );
+            }
+        }
     }
 }
 
@@ -201,5 +302,18 @@ mod tests {
         assert_eq!(percentile(&v, 1.0), 100.0);
         assert_eq!(percentile(&v, 0.50), 51.0); // round(99*0.5)=50 -> v[50]
         assert!(percentile(&[], 0.5).is_nan());
+    }
+
+    #[test]
+    fn latency_sort_survives_nan() {
+        // regression: the old partial_cmp(..).unwrap() comparator
+        // panicked on NaN, taking down report generation for the whole
+        // run; total_cmp orders NaN after every finite latency
+        let mut v = vec![3.0, f64::NAN, 1.0, 2.0];
+        sort_latencies(&mut v);
+        assert_eq!(&v[..3], &[1.0, 2.0, 3.0]);
+        assert!(v[3].is_nan());
+        // and percentiles over the finite prefix still behave
+        assert_eq!(percentile(&v[..3], 0.5), 2.0);
     }
 }

@@ -7,9 +7,15 @@
 //! (`prepare -> bind -> run(ctx)`), with codegen plans, SMOL-packed
 //! weights and mask tables cached per layer ([`engine`]) — and then
 //! serves request streams through a session-affine dynamic batcher
-//! ([`batcher`]: per-target groups, max-batch + latency-deadline close
-//! policy) feeding a pool of worker threads, one simulated SIMD machine
-//! per worker ([`workers`]).
+//! ([`batcher`]: per-`(model, target)` groups, max-batch +
+//! latency-deadline close policy) feeding a pool of worker threads, one
+//! simulated SIMD machine per worker ([`workers`]).
+//!
+//! One pool serves **many** models: every request carries a
+//! [`ModelHandle`], each worker machine keeps a per-model bind table
+//! populated lazily on the first batch of that model (and evicted LRU
+//! under a configurable resident-model budget), and reports aggregate
+//! per `(model, layer)`.
 //!
 //! Decoder models additionally serve **autoregressive decode**: a
 //! [`workers::Server`] session ([`workers::Server::open_session`] /
@@ -35,7 +41,7 @@ pub use engine::{
     BoundKernel, EngineMachine, ExecCtx, PreparedConv, PreparedMatmul, PreparedModel,
     PreparedNode, PreparedOp, StepModel, WorkerScratch,
 };
-pub use metrics::{percentile, summarize, LayerAgg, ServeReport, SetupTiming};
+pub use metrics::{percentile, summarize, LayerAgg, ModelAgg, ServeReport, SetupTiming};
 pub use session::SessionState;
 pub use workers::{Completion, ServeConfig, Server, SessionId};
 
@@ -61,6 +67,28 @@ impl ModelKey {
 impl fmt::Display for ModelKey {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         write!(f, "{}/{}", self.model, self.design)
+    }
+}
+
+/// A `{key, prepared model}` pair — the unit requests, batches and
+/// per-worker bind tables route by. Cloning is two `Arc` bumps, so a
+/// handle rides every [`Request`] without copying the model, and the
+/// worker that executes the request can lazily bind the model from the
+/// handle alone (no shared registry lookup on the hot path).
+///
+/// A key must identify one `PreparedModel` instance for the lifetime of
+/// a server: workers cache bind tables per *key*, so two different
+/// prepared instances under one key would replay the first instance's
+/// kernels for both. [`ModelRegistry`] guarantees this by construction.
+#[derive(Debug, Clone)]
+pub struct ModelHandle {
+    pub key: Arc<ModelKey>,
+    pub prepared: Arc<PreparedModel>,
+}
+
+impl ModelHandle {
+    pub fn new(key: ModelKey, prepared: Arc<PreparedModel>) -> ModelHandle {
+        ModelHandle { key: Arc::new(key), prepared }
     }
 }
 

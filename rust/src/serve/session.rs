@@ -55,6 +55,13 @@ impl KvSlot {
             self.v_packed = vec![vec![Vec::new(); dh]; heads];
         }
     }
+
+    /// Bytes resident in this slot's packed/quantized caches.
+    pub fn kv_bytes(&self) -> usize {
+        self.k_packed.iter().map(Vec::len).sum::<usize>()
+            + self.v_quant.iter().map(|v| v.len() * 4).sum::<usize>()
+            + self.v_packed.iter().flatten().map(Vec::len).sum::<usize>()
+    }
 }
 
 /// All KV caches of one decode session (one [`KvSlot`] per
@@ -73,6 +80,12 @@ impl SessionState {
     /// Decoded positions so far (0 for a fresh session).
     pub fn positions(&self) -> usize {
         self.slots.first().map(|s| s.len).unwrap_or(0)
+    }
+
+    /// Bytes resident across all of this session's KV caches — the
+    /// per-session footprint that worker placement balances on.
+    pub fn kv_bytes(&self) -> usize {
+        self.slots.iter().map(KvSlot::kv_bytes).sum()
     }
 }
 

@@ -1,24 +1,38 @@
 //! The serving worker pool: one dispatcher thread driving the
 //! [`DynamicBatcher`], N worker threads each owning a private
-//! [`EngineMachine`] (simulated SIMD machine with all prepared weights
-//! resident, plus the KV caches of every decode session pinned to it).
+//! [`EngineMachine`] (simulated SIMD machine with a per-model bind
+//! table, plus the KV caches of every decode session pinned to it).
 //!
 //! Flow: `submit`/`submit_step` -> submit channel -> dispatcher (batch
-//! close policy, per-target groups) -> dispatch queue (a shared FIFO
-//! for stateless batches + one pinned FIFO per worker for session
-//! batches) -> worker executes each request on its machine ->
-//! completion channel -> `shutdown` drains.
+//! close policy, per-`(model, target)` groups) -> dispatch queue (a
+//! shared FIFO for stateless batches + one pinned FIFO per worker for
+//! session batches) -> worker executes each request on its machine
+//! (binding the request's model lazily on its first batch, evicting LRU
+//! under the resident-model budget) -> completion channel -> `shutdown`
+//! drains.
 //!
-//! Session affinity: a session opened with [`Server::open_session`] is
-//! pinned to one worker for its whole life (`session id % workers`),
-//! because that worker's machine owns the session's packed K/V caches.
-//! Stateless batches stay work-stealable through the shared FIFO.
+//! One pool serves many models: [`Server::start_pool`] +
+//! [`Server::register`] route every registered model's traffic through
+//! the same workers, so the quantize/pack/codegen amortization of a hot
+//! model is never paid again just because a second model shares the
+//! fleet. [`Server::start`] remains the single-model convenience form.
+//!
+//! Session affinity and placement: a session opened with
+//! [`Server::open_session`] / [`Server::open_session_on`] is pinned to
+//! one worker for its whole life, because that worker's machine owns
+//! the session's packed K/V caches. Placement picks the worker with the
+//! smallest resident KV-cache footprint (estimated caller-side from the
+//! model's per-step append bytes; ties break on open-session count,
+//! then index), so long-lived heavy sessions spread instead of piling
+//! onto one machine. Stateless batches stay work-stealable through the
+//! shared FIFO.
 
 use crate::serve::batcher::{Batch, BatchConfig, DynamicBatcher, Payload, Request};
 use crate::serve::engine::{EngineMachine, PreparedModel};
+use crate::serve::{ModelHandle, ModelKey};
 use crate::sim::machine::RunStats;
 use crate::sim::network::{LayerStat, Tensor};
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 use std::sync::mpsc::{self, RecvTimeoutError};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread;
@@ -30,11 +44,15 @@ pub struct ServeConfig {
     /// worker threads (each with its own simulated machine)
     pub workers: usize,
     pub batch: BatchConfig,
+    /// per-worker resident-model budget: a worker machine keeps at most
+    /// this many models bound, evicting the least-recently-used beyond
+    /// it (`usize::MAX` = never evict)
+    pub resident_models: usize,
 }
 
 impl Default for ServeConfig {
     fn default() -> Self {
-        ServeConfig { workers: 4, batch: BatchConfig::default() }
+        ServeConfig { workers: 4, batch: BatchConfig::default(), resident_models: usize::MAX }
     }
 }
 
@@ -46,6 +64,8 @@ pub struct SessionId(pub u64);
 #[derive(Debug)]
 pub struct Completion {
     pub id: u64,
+    /// the model that served it (report aggregation keys on this)
+    pub model: Arc<ModelKey>,
     /// index of the worker that executed it
     pub worker: usize,
     /// id of the batch it rode in (sequential close order)
@@ -136,7 +156,22 @@ impl DispatchQueue {
     }
 }
 
-/// A running serving instance over one prepared model.
+/// Caller-side bookkeeping for one open decode session.
+struct SessionMeta {
+    handle: ModelHandle,
+    /// pinned worker (owns the session's KV caches)
+    worker: usize,
+    /// steps submitted so far
+    steps: usize,
+    /// the model's tightest `max_positions`
+    step_limit: usize,
+    /// estimated KV bytes each step appends on the pinned worker
+    kv_bytes_per_step: u64,
+}
+
+/// A running serving instance: one worker pool serving every model
+/// registered with it (or just the one it was [`start`](Self::start)ed
+/// with).
 pub struct Server {
     submit: Option<mpsc::Sender<Request>>,
     results: mpsc::Receiver<Completion>,
@@ -145,27 +180,51 @@ pub struct Server {
     next_id: u64,
     next_session: u64,
     n_workers: usize,
-    has_step: bool,
-    /// per-session step limit (the model's tightest `max_positions`)
-    step_limit: usize,
-    /// steps submitted per open session, to reject over-long sessions
-    /// in the caller's thread instead of panicking a worker
-    session_steps: std::collections::HashMap<u64, usize>,
+    /// the model `submit`/`open_session` address (single-model form)
+    default_model: Option<ModelHandle>,
+    /// models addressable by key via `submit_model`/`open_session_on`
+    registered: HashMap<ModelKey, ModelHandle>,
+    /// open sessions; an id absent here (but below `next_session`) is
+    /// closed, and a step for it is rejected in the caller's thread
+    sessions: HashMap<u64, SessionMeta>,
+    /// estimated resident session KV bytes per worker (placement key)
+    worker_kv_bytes: Vec<u64>,
+    /// open sessions per worker (placement tiebreak)
+    worker_sessions: Vec<usize>,
     bind_times: Arc<Mutex<Vec<Duration>>>,
 }
 
 impl Server {
-    /// Spawn the dispatcher and worker threads. Each worker instantiates
-    /// its own machine from the shared prepared model (weights written
-    /// once per worker, then reused for every request it serves).
+    /// Spawn a pool with no models yet: [`register`](Self::register)
+    /// models, then route traffic with
+    /// [`submit_model`](Self::submit_model) /
+    /// [`open_session_on`](Self::open_session_on).
+    pub fn start_pool(cfg: &ServeConfig) -> Server {
+        Server::spawn(None, cfg)
+    }
+
+    /// Spawn the pool around one model (the single-model convenience
+    /// form): `submit`/`open_session` address it directly. Each worker
+    /// binds it eagerly at startup (weights written once per worker,
+    /// then reused for every request it serves), so `bind_times`
+    /// reflects the full model-to-machine cost.
     pub fn start(model: Arc<PreparedModel>, cfg: &ServeConfig) -> Server {
+        Server::start_named(ModelKey::new("default", "default"), model, cfg)
+    }
+
+    /// [`start`](Self::start) with an explicit key, so completions and
+    /// reports carry the real model identity instead of `default`.
+    pub fn start_named(key: ModelKey, model: Arc<PreparedModel>, cfg: &ServeConfig) -> Server {
+        Server::spawn(Some(ModelHandle::new(key, model)), cfg)
+    }
+
+    fn spawn(default_model: Option<ModelHandle>, cfg: &ServeConfig) -> Server {
         let n_workers = cfg.workers.max(1);
+        let resident_models = cfg.resident_models.max(1);
         let (submit_tx, submit_rx) = mpsc::channel::<Request>();
         let (result_tx, result_rx) = mpsc::channel::<Completion>();
         let queue = Arc::new(DispatchQueue::new(n_workers));
         let bind_times = Arc::new(Mutex::new(Vec::with_capacity(n_workers)));
-        let has_step = model.step.is_some();
-        let step_limit = model.step.as_ref().map(|s| s.max_positions).unwrap_or(usize::MAX);
 
         let bcfg = cfg.batch;
         let dq = Arc::clone(&queue);
@@ -211,13 +270,16 @@ impl Server {
 
         let workers = (0..n_workers)
             .map(|wi| {
-                let model = Arc::clone(&model);
+                let default = default_model.clone();
                 let queue = Arc::clone(&queue);
                 let tx = result_tx.clone();
                 let binds = Arc::clone(&bind_times);
                 thread::spawn(move || {
                     let t0 = Instant::now();
-                    let mut engine = EngineMachine::new(&model);
+                    let mut engine = EngineMachine::with_budget(resident_models);
+                    if let Some(h) = &default {
+                        engine.bind_model(h);
+                    }
                     binds.lock().unwrap().push(t0.elapsed());
                     while let Some((batch_id, batch)) = queue.pop(wi) {
                         // completion-producing requests only, so the
@@ -228,13 +290,14 @@ impl Server {
                             .filter(|r| !matches!(r.payload, Payload::Close { .. }))
                             .count();
                         for req in batch.requests {
-                            let (output, total, per_layer, session) = match req.payload {
+                            let Request { id, model, payload, enqueued, .. } = req;
+                            let (output, total, per_layer, session) = match payload {
                                 Payload::Infer(input) => {
-                                    let r = engine.run(&input);
+                                    let r = engine.run_model(&model, &input);
                                     (r.output, r.total, r.layers, None)
                                 }
                                 Payload::Step { session, token } => {
-                                    let r = engine.run_step(session, &token);
+                                    let r = engine.run_step_model(&model, session, &token);
                                     (r.output, r.total, r.layers, Some(session))
                                 }
                                 Payload::Close { session } => {
@@ -244,11 +307,12 @@ impl Server {
                                 }
                             };
                             let done = Completion {
-                                id: req.id,
+                                id,
+                                model: Arc::clone(&model.key),
                                 worker: wi,
                                 batch_id,
                                 batch_size,
-                                latency: req.enqueued.elapsed(),
+                                latency: enqueued.elapsed(),
                                 session,
                                 output,
                                 total,
@@ -264,6 +328,10 @@ impl Server {
             .collect();
         drop(result_tx); // workers hold the only senders
 
+        let mut registered = HashMap::new();
+        if let Some(h) = &default_model {
+            registered.insert((*h.key).clone(), h.clone());
+        }
         Server {
             submit: Some(submit_tx),
             results: result_rx,
@@ -272,11 +340,57 @@ impl Server {
             next_id: 0,
             next_session: 0,
             n_workers,
-            has_step,
-            step_limit,
-            session_steps: std::collections::HashMap::new(),
+            default_model,
+            registered,
+            sessions: HashMap::new(),
+            worker_kv_bytes: vec![0; n_workers],
+            worker_sessions: vec![0; n_workers],
             bind_times,
         }
+    }
+
+    /// Register a prepared model under `key`, making it addressable via
+    /// [`submit_model`](Self::submit_model) /
+    /// [`open_session_on`](Self::open_session_on). Registration is
+    /// caller-side only — workers bind the model lazily on its first
+    /// batch — so registering is cheap and can happen while the pool is
+    /// already serving other models. Returns the handle.
+    ///
+    /// Re-registering a key with the *same* prepared instance is a
+    /// no-op; a *different* instance panics: workers cache bind tables
+    /// per key, so they would keep replaying the first instance's
+    /// kernels for the new one's requests. Deploy a changed model under
+    /// a new key (e.g. bump the design label) or start a fresh pool.
+    pub fn register(&mut self, key: ModelKey, prepared: Arc<PreparedModel>) -> ModelHandle {
+        if let Some(existing) = self.registered.get(&key) {
+            assert!(
+                Arc::ptr_eq(&existing.prepared, &prepared),
+                "model {key} is already registered with a different prepared instance \
+                 (workers cache bind tables per key)"
+            );
+            return existing.clone();
+        }
+        let handle = ModelHandle::new(key, prepared);
+        self.registered.insert((*handle.key).clone(), handle.clone());
+        handle
+    }
+
+    /// Keys of every model registered with this pool.
+    pub fn model_keys(&self) -> Vec<ModelKey> {
+        self.registered.keys().cloned().collect()
+    }
+
+    fn registered_handle(&self, key: &ModelKey) -> ModelHandle {
+        self.registered
+            .get(key)
+            .cloned()
+            .unwrap_or_else(|| panic!("model {key} is not registered with this server"))
+    }
+
+    fn default_handle(&self) -> ModelHandle {
+        self.default_model
+            .clone()
+            .expect("pool server has no default model (use the *_model / *_on forms)")
     }
 
     fn send(&mut self, req: Request) -> u64 {
@@ -290,61 +404,132 @@ impl Server {
         id
     }
 
-    /// Enqueue one stateless request; returns its id (completions carry
-    /// it back).
+    /// Enqueue one stateless request for the default model; returns its
+    /// id (completions carry it back).
     pub fn submit(&mut self, input: Tensor) -> u64 {
-        let req = Request::infer(self.next_id, input, Instant::now());
+        let handle = self.default_handle();
+        let req = Request::infer(self.next_id, &handle, input, Instant::now());
         self.send(req)
     }
 
-    /// Open a decode session. The session is pinned to one worker
-    /// (`id % workers`), whose machine will own its K/V caches; every
-    /// step of this session executes there.
-    pub fn open_session(&mut self) -> SessionId {
-        assert!(self.has_step, "model has no decode step graph (open_session needs a decoder)");
+    /// Enqueue one stateless request for a registered model.
+    pub fn submit_model(&mut self, key: &ModelKey, input: Tensor) -> u64 {
+        let handle = self.registered_handle(key);
+        let req = Request::infer(self.next_id, &handle, input, Instant::now());
+        self.send(req)
+    }
+
+    /// The worker a new session lands on: smallest estimated KV-cache
+    /// footprint, ties broken by fewest open sessions, then index (so a
+    /// fresh pool fills round-robin instead of piling onto worker 0).
+    fn place_session(&self) -> usize {
+        (0..self.n_workers)
+            .min_by_key(|&w| (self.worker_kv_bytes[w], self.worker_sessions[w], w))
+            .expect("at least one worker")
+    }
+
+    fn open_session_handle(&mut self, handle: ModelHandle) -> SessionId {
+        let step = handle
+            .prepared
+            .step
+            .as_ref()
+            .expect("model has no decode step graph (open_session needs a decoder)");
+        let worker = self.place_session();
         let sid = SessionId(self.next_session);
         self.next_session += 1;
+        self.worker_sessions[worker] += 1;
+        self.sessions.insert(
+            sid.0,
+            SessionMeta {
+                worker,
+                steps: 0,
+                step_limit: step.max_positions,
+                kv_bytes_per_step: step.kv_bytes_per_position as u64,
+                handle,
+            },
+        );
         sid
+    }
+
+    /// Open a decode session on the default model. The session is
+    /// pinned to the worker with the smallest current KV-cache
+    /// footprint, whose machine will own its K/V caches; every step of
+    /// this session executes there.
+    pub fn open_session(&mut self) -> SessionId {
+        let handle = self.default_handle();
+        self.open_session_handle(handle)
+    }
+
+    /// Open a decode session on a registered model (same placement as
+    /// [`open_session`](Self::open_session)).
+    pub fn open_session_on(&mut self, key: &ModelKey) -> SessionId {
+        let handle = self.registered_handle(key);
+        self.open_session_handle(handle)
     }
 
     /// Enqueue one decode step for an open session; returns its request
     /// id. Steps of one session execute in submission order on its
-    /// pinned worker; same-step submissions of co-located sessions may
-    /// batch together.
+    /// pinned worker; same-step submissions of co-located same-model
+    /// sessions may batch together.
     ///
-    /// Panics in the *caller's* thread if the session would exceed the
-    /// model's `max_positions` — an over-long session must not take a
-    /// worker (and with it every co-located session) down.
+    /// Panics in the *caller's* thread — never a worker's — if the
+    /// session is closed, was never opened, or would exceed the model's
+    /// `max_positions`: a stale or runaway caller must not take a
+    /// worker (and with it every co-located session) down, and a step
+    /// sent after `close_session` would execute against freed KV caches
+    /// as a silently restarted session.
     pub fn submit_step(&mut self, session: SessionId, token: Tensor) -> u64 {
-        let steps = self.session_steps.entry(session.0).or_insert(0);
+        let next_session = self.next_session;
+        let meta = match self.sessions.get_mut(&session.0) {
+            Some(m) => m,
+            None if session.0 < next_session => {
+                panic!("session {} is closed; step rejected in caller", session.0)
+            }
+            None => panic!("session {} was never opened", session.0),
+        };
         assert!(
-            *steps < self.step_limit,
+            meta.steps < meta.step_limit,
             "session {} exceeded max_positions = {}",
             session.0,
-            self.step_limit
+            meta.step_limit
         );
-        *steps += 1;
-        let target = (session.0 as usize) % self.n_workers;
-        let req = Request::step(self.next_id, session.0, token, target, Instant::now());
+        meta.steps += 1;
+        let worker = meta.worker;
+        let handle = meta.handle.clone();
+        let kv = meta.kv_bytes_per_step;
+        self.worker_kv_bytes[worker] += kv;
+        let req = Request::step(self.next_id, &handle, session.0, token, worker, Instant::now());
         self.send(req)
     }
 
     /// Close a finished session, freeing its KV caches on the pinned
     /// worker once every previously submitted step has executed (the
-    /// close rides the session's FIFO). Long-lived servers should close
-    /// every session they open, or worker memory grows per session.
-    /// Produces no completion.
+    /// close rides the session's FIFO) and releasing its footprint from
+    /// the placement accounting. Long-lived servers should close every
+    /// session they open, or worker memory grows per session. Produces
+    /// no completion. A later [`submit_step`](Self::submit_step) for
+    /// this session is rejected in the caller's thread.
+    ///
+    /// Panics if the session is not open (double close included).
     pub fn close_session(&mut self, session: SessionId) {
-        self.session_steps.remove(&session.0);
-        let target = (session.0 as usize) % self.n_workers;
-        let req = Request::close(self.next_id, session.0, target, Instant::now());
+        let meta = self
+            .sessions
+            .remove(&session.0)
+            .unwrap_or_else(|| panic!("session {} is not open", session.0));
+        self.worker_sessions[meta.worker] -= 1;
+        self.worker_kv_bytes[meta.worker] = self.worker_kv_bytes[meta.worker]
+            .saturating_sub(meta.steps as u64 * meta.kv_bytes_per_step);
+        let req =
+            Request::close(self.next_id, &meta.handle, session.0, meta.worker, Instant::now());
         self.send(req);
     }
 
     /// Per-worker bind (prepare-to-machine) times. Complete once
     /// serving has started on every worker — in particular after
     /// `shutdown` — and used to report setup separately from
-    /// steady-state throughput.
+    /// steady-state throughput. Pool servers bind lazily per model, so
+    /// their startup entries are near zero and per-model bind cost
+    /// lands in the serving window instead.
     pub fn bind_times(&self) -> Arc<Mutex<Vec<Duration>>> {
         Arc::clone(&self.bind_times)
     }

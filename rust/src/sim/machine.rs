@@ -94,6 +94,8 @@ pub struct Machine {
     pub stats: RunStats,
     next_base: u64,
     pc: u64,
+    /// freed buffer-id slots awaiting reuse (see [`Machine::free`])
+    free_slots: Vec<u16>,
 }
 
 impl Default for Machine {
@@ -113,16 +115,44 @@ impl Machine {
             stats: RunStats::default(),
             next_base: 0x1000_0000,
             pc: 0x40_0000,
+            free_slots: Vec::new(),
         }
     }
 
-    /// Allocate a buffer of `bytes`, returning its id.
+    /// Allocate a buffer of `bytes`, returning its id. Freed id slots
+    /// are recycled (at a fresh base address), so sustained bind/evict
+    /// churn is bounded by the *peak live* buffer count, not the total
+    /// ever allocated.
     pub fn alloc(&mut self, bytes: usize) -> BufId {
         let base = self.next_base;
-        // 4 KiB-align buffer bases so distinct buffers never share lines
+        // 4 KiB-align buffer bases so distinct buffers never share
+        // lines; freed slots still get a fresh base, so a recycled id
+        // never aliases a previous tenant's cached lines
         self.next_base += ((bytes as u64 + 4095) / 4096) * 4096 + 4096;
+        if let Some(slot) = self.free_slots.pop() {
+            self.buffers[slot as usize] = Buffer { data: vec![0u8; bytes], base };
+            return BufId(slot);
+        }
         self.buffers.push(Buffer { data: vec![0u8; bytes], base });
+        assert!(self.buffers.len() <= u16::MAX as usize, "machine buffer ids exhausted");
         BufId((self.buffers.len() - 1) as u16)
+    }
+
+    /// Release a buffer's backing bytes (model eviction) and recycle
+    /// its id slot for a later `alloc`. Until then the slot is empty,
+    /// so any further access through the stale id is a bounds panic
+    /// rather than a silent read of stale data. Each id must be freed
+    /// at most once per tenancy (a double free would hand one slot to
+    /// two future allocations).
+    pub fn free(&mut self, buf: BufId) {
+        debug_assert!(!self.free_slots.contains(&buf.0), "double free of buffer {}", buf.0);
+        self.buffers[buf.0 as usize].data = Vec::new();
+        self.free_slots.push(buf.0);
+    }
+
+    /// Bytes currently backing machine buffers (freed buffers count 0).
+    pub fn resident_bytes(&self) -> usize {
+        self.buffers.iter().map(|b| b.data.len()).sum()
     }
 
     pub fn write_bytes(&mut self, buf: BufId, off: usize, bytes: &[u8]) {

@@ -1,21 +1,25 @@
 //! Integration tests for the `serve` subsystem: (a) prepared-model
 //! outputs are bit-identical to the one-shot `run_network` path, (b)
-//! the session-affine dynamic batcher groups by target and closes on
-//! the max-batch / latency-deadline / FIFO rules, (c) concurrent
-//! workers produce deterministic per-request results, (d) KV-cached
-//! decode steps are bit-identical to prefix re-runs and cost fewer
-//! simulated cycles — plus registry and report checks.
+//! the model/session-affine dynamic batcher groups by `(model, target)`
+//! and closes on the max-batch / latency-deadline / FIFO rules, (c)
+//! concurrent workers produce deterministic per-request results, (d)
+//! KV-cached decode steps are bit-identical to prefix re-runs and cost
+//! fewer simulated cycles, (e) one worker pool serves several models —
+//! bit-identical to dedicated single-model pools, through LRU
+//! bind-table eviction and footprint-based session placement — plus
+//! registry, lifecycle-guard and report checks.
 
 use soniq::coordinator::{
     synthetic_inputs, synthetic_network, synthetic_network_seq, synthetic_step_inputs,
     DesignPoint, SyntheticNet,
 };
 use soniq::serve::{
-    serve_all, summarize, BatchConfig, DynamicBatcher, EngineMachine, ModelKey, ModelRegistry,
-    PreparedModel, Request, ServeConfig, Server, SessionId, SetupTiming,
+    serve_all, summarize, BatchConfig, Completion, DynamicBatcher, EngineMachine, ModelHandle,
+    ModelKey, ModelRegistry, PreparedModel, Request, ServeConfig, Server, SessionId, SetupTiming,
 };
-use soniq::sim::network::{run_network, Tensor};
-use std::collections::HashMap;
+use soniq::sim::machine::RunStats;
+use soniq::sim::network::{run_network, LayerStat, Tensor};
+use std::collections::{HashMap, HashSet};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -23,6 +27,25 @@ fn net_and_inputs(model: &str, dp: DesignPoint, n: usize) -> (SyntheticNet, Vec<
     let net = synthetic_network(model, dp, 3).unwrap();
     let inputs = synthetic_inputs(&net, n, 5);
     (net, inputs)
+}
+
+fn pool_cfg(workers: usize, max_batch: usize) -> ServeConfig {
+    ServeConfig {
+        workers,
+        batch: BatchConfig { max_batch, max_delay: Duration::from_millis(1) },
+        ..ServeConfig::default()
+    }
+}
+
+/// Prepare a synthetic model the way the registry would (decoder form
+/// whenever the model has a step graph).
+fn prepare_any(net: &SyntheticNet) -> Arc<PreparedModel> {
+    Arc::new(net.prepare())
+}
+
+/// A handle for batcher-only tests (the model is never executed).
+fn dummy_handle(name: &str) -> ModelHandle {
+    ModelHandle::new(ModelKey::new(name, "P4"), Arc::new(PreparedModel::prepare(&[])))
 }
 
 #[test]
@@ -112,7 +135,8 @@ fn batcher_closes_on_max_batch() {
     let cfg = BatchConfig { max_batch: 4, max_delay: Duration::from_secs(3600) };
     let mut b = DynamicBatcher::new(cfg);
     let t0 = Instant::now();
-    let mk = |id| Request::infer(id, Tensor::zeros(1, 1, 1), t0);
+    let h = dummy_handle("m");
+    let mk = |id| Request::infer(id, &h, Tensor::zeros(1, 1, 1), t0);
     assert!(b.push(mk(0)).is_none());
     assert!(b.push(mk(1)).is_none());
     assert!(b.push(mk(2)).is_none());
@@ -131,7 +155,8 @@ fn batcher_closes_on_deadline() {
     let cfg = BatchConfig { max_batch: 1000, max_delay: Duration::from_millis(5) };
     let mut b = DynamicBatcher::new(cfg);
     let t0 = Instant::now();
-    let mk = |id| Request::infer(id, Tensor::zeros(1, 1, 1), t0);
+    let h = dummy_handle("m");
+    let mk = |id| Request::infer(id, &h, Tensor::zeros(1, 1, 1), t0);
     assert!(b.push(mk(0)).is_none());
     assert!(b.push(mk(1)).is_none());
     assert_eq!(b.len(), 2);
@@ -152,13 +177,20 @@ fn batcher_groups_by_target_and_closes_fifo() {
     let cfg = BatchConfig { max_batch: 8, max_delay: Duration::from_millis(5) };
     let mut b = DynamicBatcher::new(cfg);
     let t0 = Instant::now();
+    let h = dummy_handle("m");
     let tok = || Tensor::zeros(1, 1, 1);
     // interleaved arrival: infer, step->w0, infer, step->w1, step->w0
-    assert!(b.push(Request::infer(0, tok(), t0)).is_none());
-    assert!(b.push(Request::step(1, 7, tok(), 0, t0 + Duration::from_micros(1))).is_none());
-    assert!(b.push(Request::infer(2, tok(), t0 + Duration::from_micros(2))).is_none());
-    assert!(b.push(Request::step(3, 8, tok(), 1, t0 + Duration::from_micros(3))).is_none());
-    assert!(b.push(Request::step(4, 10, tok(), 0, t0 + Duration::from_micros(4))).is_none());
+    assert!(b.push(Request::infer(0, &h, tok(), t0)).is_none());
+    assert!(b
+        .push(Request::step(1, &h, 7, tok(), 0, t0 + Duration::from_micros(1)))
+        .is_none());
+    assert!(b.push(Request::infer(2, &h, tok(), t0 + Duration::from_micros(2))).is_none());
+    assert!(b
+        .push(Request::step(3, &h, 8, tok(), 1, t0 + Duration::from_micros(3)))
+        .is_none());
+    assert!(b
+        .push(Request::step(4, &h, 10, tok(), 0, t0 + Duration::from_micros(4)))
+        .is_none());
     assert_eq!(b.len(), 5);
     // deadline closes groups FIFO by their oldest request: shared {0,2},
     // then worker-0 {1,4} (same-step sessions batch together), then
@@ -181,9 +213,9 @@ fn batcher_groups_by_target_and_closes_fifo() {
         max_batch: 2,
         max_delay: Duration::from_secs(3600),
     });
-    assert!(b.push(Request::infer(0, tok(), t0)).is_none());
-    assert!(b.push(Request::step(1, 0, tok(), 1, t0)).is_none());
-    let full = b.push(Request::step(2, 1, tok(), 1, t0)).expect("size trigger");
+    assert!(b.push(Request::infer(0, &h, tok(), t0)).is_none());
+    assert!(b.push(Request::step(1, &h, 0, tok(), 1, t0)).is_none());
+    let full = b.push(Request::step(2, &h, 1, tok(), 1, t0)).expect("size trigger");
     assert_eq!(full.target, Some(1));
     assert_eq!(full.requests.len(), 2);
     assert_eq!(b.len(), 1);
@@ -191,8 +223,40 @@ fn batcher_groups_by_target_and_closes_fifo() {
 }
 
 #[test]
+fn batcher_groups_by_model_and_target() {
+    let cfg = BatchConfig { max_batch: 8, max_delay: Duration::from_millis(5) };
+    let mut b = DynamicBatcher::new(cfg);
+    let t0 = Instant::now();
+    let tok = || Tensor::zeros(1, 1, 1);
+    let ha = dummy_handle("a");
+    let hb = dummy_handle("b");
+    // same (shared) target, different models: batches never mix, so a
+    // worker replays exactly one bind table per batch
+    assert!(b.push(Request::infer(0, &ha, tok(), t0)).is_none());
+    assert!(b.push(Request::infer(1, &hb, tok(), t0 + Duration::from_micros(1))).is_none());
+    assert!(b.push(Request::infer(2, &ha, tok(), t0 + Duration::from_micros(2))).is_none());
+    let now = t0 + Duration::from_millis(10);
+    let g1 = b.poll_deadline(now).expect("model-a group first (oldest)");
+    assert_eq!(g1.model.key.model, "a");
+    assert_eq!(g1.requests.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 2]);
+    let g2 = b.poll_deadline(now).expect("model-b group second");
+    assert_eq!(g2.model.key.model, "b");
+    assert_eq!(g2.requests.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1]);
+    assert!(b.poll_deadline(now).is_none());
+
+    // same model, different pinned targets still split (decode pinning)
+    assert!(b.push(Request::step(3, &ha, 0, tok(), 0, t0)).is_none());
+    assert!(b.push(Request::step(4, &ha, 1, tok(), 1, t0)).is_none());
+    assert_eq!(b.len(), 2);
+    let s1 = b.flush().unwrap();
+    let s2 = b.flush().unwrap();
+    assert_eq!((s1.target, s2.target), (Some(0), Some(1)));
+}
+
+#[test]
 fn batcher_edge_cases() {
-    let mk = |id, t| Request::infer(id, Tensor::zeros(1, 1, 1), t);
+    let h = dummy_handle("m");
+    let mk = |id, t| Request::infer(id, &h, Tensor::zeros(1, 1, 1), t);
 
     // flush on a never-used empty batcher is a no-op (the dispatcher's
     // shutdown drain loop relies on it)
@@ -249,10 +313,7 @@ fn closed_sessions_free_their_caches_and_restart_empty() {
 
     // server level: close rides the session FIFO, so all prior steps
     // still complete with their outputs intact
-    let cfg = ServeConfig {
-        workers: 2,
-        batch: BatchConfig { max_batch: 4, max_delay: Duration::from_millis(1) },
-    };
+    let cfg = pool_cfg(2, 4);
     let mut server = Server::start(Arc::clone(&prepared), &cfg);
     let sid = server.open_session();
     for tok in &tokens {
@@ -266,15 +327,53 @@ fn closed_sessions_free_their_caches_and_restart_empty() {
 }
 
 #[test]
+fn step_after_close_is_rejected_in_caller_not_worker() {
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+    let net = synthetic_network("tinydec", DesignPoint::Patterns(4), 3).unwrap();
+    let prepared = prepare_any(&net);
+    let cfg = pool_cfg(2, 4);
+    let mut server = Server::start(Arc::clone(&prepared), &cfg);
+    let tokens = synthetic_step_inputs(&net, 0, 3, 11);
+
+    let sid = server.open_session();
+    server.submit_step(sid, tokens[0].clone());
+    server.close_session(sid);
+
+    // regression: a step after close used to silently re-insert a fresh
+    // step guard and ship the step to a worker whose KV caches were
+    // already freed — restarting the session (or panicking the worker
+    // and every co-located session with it). It must fail here instead.
+    let stale = catch_unwind(AssertUnwindSafe(|| {
+        server.submit_step(sid, tokens[1].clone());
+    }));
+    assert!(stale.is_err(), "step on a closed session must fail in the caller's thread");
+
+    // double close and never-opened sessions are caller errors too
+    let closed_twice = catch_unwind(AssertUnwindSafe(|| server.close_session(sid)));
+    assert!(closed_twice.is_err());
+    let never_opened = catch_unwind(AssertUnwindSafe(|| {
+        server.submit_step(SessionId(999), tokens[0].clone());
+    }));
+    assert!(never_opened.is_err());
+
+    // the pool is unharmed: a new session still serves steps, and
+    // shutdown joins every worker cleanly (it panics if one died)
+    let sid2 = server.open_session();
+    server.submit_step(sid2, tokens[0].clone());
+    server.submit_step(sid2, tokens[1].clone());
+    server.close_session(sid2);
+    let done = server.shutdown();
+    assert_eq!(done.len(), 3, "1 step before close + 2 steps on the new session");
+    assert!(done.iter().all(|c| c.output.data.iter().all(|v| v.is_finite())));
+}
+
+#[test]
 fn concurrent_workers_are_deterministic_and_bit_exact() {
     let (net, inputs) = net_and_inputs("tinynet", DesignPoint::Patterns(4), 24);
     let legacy: Vec<Vec<f32>> =
         inputs.iter().map(|x| run_network(&net.nodes, x).output.data.clone()).collect();
     let prepared = Arc::new(PreparedModel::prepare(&net.nodes));
-    let cfg = ServeConfig {
-        workers: 3,
-        batch: BatchConfig { max_batch: 4, max_delay: Duration::from_millis(1) },
-    };
+    let cfg = pool_cfg(3, 4);
     let run1 = serve_all(&prepared, &cfg, inputs.clone());
     assert_eq!(run1.len(), inputs.len());
     for c in &run1 {
@@ -302,10 +401,7 @@ fn tinyattn_prepared_matches_one_shot_under_4_workers() {
     // 2 blocks x (wq, wk, wv, qk, av, wo, ff1, ff2) prepared kernels
     assert_eq!(prepared.num_layers(), 16);
     for max_batch in [1usize, 4] {
-        let cfg = ServeConfig {
-            workers: 4,
-            batch: BatchConfig { max_batch, max_delay: Duration::from_millis(1) },
-        };
+        let cfg = pool_cfg(4, max_batch);
         let done = serve_all(&prepared, &cfg, inputs.clone());
         assert_eq!(done.len(), inputs.len());
         for c in &done {
@@ -335,10 +431,7 @@ fn tinyattn_dynamic_operands_deterministic_across_placement() {
     assert_eq!(reference.output.data, again.output.data);
     assert_eq!(reference.total.instrs, again.total.instrs);
 
-    let cfg = ServeConfig {
-        workers: 4,
-        batch: BatchConfig { max_batch: 3, max_delay: Duration::from_millis(1) },
-    };
+    let cfg = pool_cfg(4, 3);
     let copies = vec![inputs[0].clone(); 12];
     let done = serve_all(&prepared, &cfg, copies);
     assert_eq!(done.len(), 12);
@@ -352,8 +445,222 @@ fn tinyattn_dynamic_operands_deterministic_across_placement() {
 }
 
 #[test]
+fn one_pool_serves_three_models_bit_identical_to_dedicated_servers() {
+    // the tentpole contract: tinynet + tinyattn + tinydec interleaved
+    // through ONE worker pool, outputs bit-identical to what each model
+    // gets from a pool of its own
+    let dp = DesignPoint::Patterns(4);
+    let n = 6usize;
+    let mut fleet = Vec::new(); // (key, prepared, inputs)
+    for name in ["tinynet", "tinyattn", "tinydec"] {
+        let net = synthetic_network(name, dp, 3).unwrap();
+        let inputs = synthetic_inputs(&net, n, 5);
+        fleet.push((ModelKey::new(name, dp.label()), prepare_any(&net), inputs));
+    }
+
+    // dedicated single-model pools: the parity oracle
+    let dedicated: Vec<Vec<Vec<f32>>> = fleet
+        .iter()
+        .map(|(key, prepared, inputs)| {
+            let mut server =
+                Server::start_named(key.clone(), Arc::clone(prepared), &pool_cfg(2, 4));
+            for x in inputs {
+                server.submit(x.clone());
+            }
+            let mut done = server.shutdown();
+            done.sort_by_key(|c| c.id);
+            done.into_iter().map(|c| c.output.data).collect()
+        })
+        .collect();
+
+    // one shared pool, round-robin interleaved traffic
+    let mut server = Server::start_pool(&pool_cfg(3, 4));
+    for (key, prepared, _) in &fleet {
+        server.register(key.clone(), Arc::clone(prepared));
+    }
+    assert_eq!(server.model_keys().len(), 3);
+    for i in 0..n {
+        for (key, _, inputs) in &fleet {
+            server.submit_model(key, inputs[i].clone());
+        }
+    }
+    let mut done = server.shutdown();
+    let wall = Duration::from_millis(50);
+    assert_eq!(done.len(), 3 * n);
+    done.sort_by_key(|c| c.id);
+    let mut seen_models: HashSet<ModelKey> = HashSet::new();
+    for c in &done {
+        // ids were assigned round-robin: id = i * n_models + mi
+        let mi = (c.id as usize) % fleet.len();
+        let ri = (c.id as usize) / fleet.len();
+        assert_eq!(*c.model, fleet[mi].0, "completion {} carries its model", c.id);
+        assert_eq!(c.output.data, dedicated[mi][ri], "model {} request {ri}", fleet[mi].0);
+        seen_models.insert((*c.model).clone());
+    }
+    assert_eq!(seen_models.len(), 3, "all three models served concurrently");
+
+    // and the report aggregates per model and per (model, layer)
+    let report = summarize(&done, wall, SetupTiming::default());
+    assert_eq!(report.per_model.len(), 3);
+    assert!(report.per_model.iter().all(|m| m.requests == n));
+    for m in &report.per_model {
+        assert!(m.cycles > 0);
+        assert!(report.per_layer.iter().any(|l| l.model == m.model));
+    }
+}
+
+#[test]
+fn lru_eviction_rebinds_models_correctly() {
+    let dp = DesignPoint::Patterns(4);
+    let (net_a, in_a) = net_and_inputs("tinynet", dp, 1);
+    let (net_b, in_b) = net_and_inputs("tinydw", dp, 1);
+    let pa = Arc::new(PreparedModel::prepare(&net_a.nodes));
+    let pb = Arc::new(PreparedModel::prepare(&net_b.nodes));
+    let ka = ModelKey::new("tinynet", "P4");
+    let kb = ModelKey::new("tinydw", "P4");
+    let ha = ModelHandle::new(ka.clone(), Arc::clone(&pa));
+    let hb = ModelHandle::new(kb.clone(), Arc::clone(&pb));
+    let want_a = {
+        let mut e = EngineMachine::new(&pa);
+        e.run(&in_a[0]).output.data
+    };
+    let want_b = {
+        let mut e = EngineMachine::new(&pb);
+        e.run(&in_b[0]).output.data
+    };
+
+    // budget 1: every alternation evicts the other model's bind table
+    // and rebinds from the handle — outputs must never drift
+    let mut engine = EngineMachine::with_budget(1);
+    for round in 0..3 {
+        let got_a = engine.run_model(&ha, &in_a[0]);
+        assert_eq!(engine.num_resident(), 1);
+        let got_b = engine.run_model(&hb, &in_b[0]);
+        assert_eq!(engine.num_resident(), 1);
+        assert_eq!(got_a.output.data, want_a, "round {round}");
+        assert_eq!(got_b.output.data, want_b, "round {round}");
+    }
+
+    // budget 2: both stay resident, no churn
+    let mut engine = EngineMachine::with_budget(2);
+    engine.run_model(&ha, &in_a[0]);
+    engine.run_model(&hb, &in_b[0]);
+    assert_eq!(engine.num_resident(), 2);
+
+    // pool level: a 1-model budget under interleaved two-model traffic
+    let cfg = ServeConfig {
+        workers: 1,
+        batch: BatchConfig { max_batch: 2, max_delay: Duration::from_millis(1) },
+        resident_models: 1,
+    };
+    let mut server = Server::start_pool(&cfg);
+    server.register(ka.clone(), Arc::clone(&pa));
+    server.register(kb.clone(), Arc::clone(&pb));
+    for _ in 0..3 {
+        server.submit_model(&ka, in_a[0].clone());
+        server.submit_model(&kb, in_b[0].clone());
+    }
+    let done = server.shutdown();
+    assert_eq!(done.len(), 6);
+    for c in &done {
+        let want = if c.model.model == "tinynet" { &want_a } else { &want_b };
+        assert_eq!(&c.output.data, want, "request {}", c.id);
+    }
+}
+
+#[test]
+fn machine_recycles_freed_buffer_slots() {
+    // sustained bind/evict churn must be bounded by peak live buffers,
+    // not total ever allocated (the id space is u16)
+    use soniq::sim::machine::Machine;
+    let mut m = Machine::new();
+    let a = m.alloc(64);
+    let live = m.resident_bytes();
+    m.free(a);
+    assert!(m.resident_bytes() < live, "free must release backing bytes");
+    let b = m.alloc(128);
+    assert_eq!(a, b, "freed id slot must be recycled");
+    // far more alloc/free cycles than the id space holds
+    for _ in 0..100_000 {
+        let x = m.alloc(4096);
+        m.free(x);
+    }
+}
+
+#[test]
+fn register_rejects_conflicting_reprepare_under_same_key() {
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+    let (net, _) = net_and_inputs("tinynet", DesignPoint::Patterns(4), 1);
+    let pa = Arc::new(PreparedModel::prepare(&net.nodes));
+    let pa2 = Arc::new(PreparedModel::prepare(&net.nodes)); // distinct instance
+    let key = ModelKey::new("tinynet", "P4");
+    let mut server = Server::start_pool(&pool_cfg(1, 2));
+    server.register(key.clone(), Arc::clone(&pa));
+    // same instance again: a no-op
+    server.register(key.clone(), Arc::clone(&pa));
+    assert_eq!(server.model_keys().len(), 1);
+    // a different instance under a taken key would make workers replay
+    // the old bind table for the new model's requests — refused
+    let clash =
+        catch_unwind(AssertUnwindSafe(|| server.register(key.clone(), Arc::clone(&pa2))));
+    assert!(clash.is_err(), "conflicting re-registration must be rejected");
+    server.shutdown();
+}
+
+#[test]
+fn engine_rejects_session_id_reuse_across_models() {
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+    let net = synthetic_network("tinydec", DesignPoint::Patterns(4), 3).unwrap();
+    let prepared = prepare_any(&net);
+    let h1 = ModelHandle::new(ModelKey::new("dec", "A"), Arc::clone(&prepared));
+    let h2 = ModelHandle::new(ModelKey::new("dec", "B"), Arc::clone(&prepared));
+    let tokens = synthetic_step_inputs(&net, 0, 2, 21);
+    let mut engine = EngineMachine::with_budget(4);
+    engine.run_step_model(&h1, 7, &tokens[0]);
+    // a session id is meaningful only within its model: stepping it
+    // through another model's handle would corrupt the KV slot layout
+    let clash = catch_unwind(AssertUnwindSafe(|| {
+        engine.run_step_model(&h2, 7, &tokens[1]);
+    }));
+    assert!(clash.is_err(), "cross-model session id reuse must be rejected");
+    // ending the session releases the id for any model
+    engine.end_session(7);
+    engine.run_step_model(&h2, 7, &tokens[0]);
+}
+
+#[test]
+fn evicted_decoder_rebinds_with_sessions_intact() {
+    // KV caches are host-side session state, not machine buffers:
+    // evicting a decoder between steps must not lose the session
+    let dp = DesignPoint::Patterns(4);
+    let net = synthetic_network("tinydec", dp, 3).unwrap();
+    let prepared = prepare_any(&net);
+    let hd = ModelHandle::new(ModelKey::new("tinydec", "P4"), Arc::clone(&prepared));
+    let (net_b, in_b) = net_and_inputs("tinynet", dp, 1);
+    let pb = Arc::new(PreparedModel::prepare(&net_b.nodes));
+    let hb = ModelHandle::new(ModelKey::new("tinynet", "P4"), Arc::clone(&pb));
+    let tokens = synthetic_step_inputs(&net, 0, 4, 17);
+
+    // oracle: the same session stepped on a dedicated engine
+    let mut oracle = EngineMachine::new(&prepared);
+    let want: Vec<Vec<f32>> =
+        tokens.iter().map(|t| oracle.run_step(7, t).output.data.clone()).collect();
+
+    let mut engine = EngineMachine::with_budget(1);
+    for (t, tok) in tokens.iter().enumerate() {
+        let got = engine.run_step_model(&hd, 7, tok);
+        assert_eq!(got.output.data, want[t], "step {t} after eviction/rebind");
+        engine.run_model(&hb, &in_b[0]); // evicts the decoder
+        assert_eq!(engine.num_resident(), 1);
+    }
+    assert!(engine.session_kv_bytes() > 0);
+    engine.end_session(7);
+    assert_eq!(engine.session_kv_bytes(), 0);
+}
+
+#[test]
 fn cached_decode_matches_prefix_rerun_and_costs_fewer_cycles() {
-    // the tentpole contract: every cached decode step is bit-identical
+    // the decode contract: every cached decode step is bit-identical
     // to re-running its full prefix through the one-shot causal graph,
     // at a fraction of the simulated cycles
     let dp = DesignPoint::Patterns(8);
@@ -393,18 +700,69 @@ fn cached_decode_matches_prefix_rerun_and_costs_fewer_cycles() {
 }
 
 #[test]
-fn decode_sessions_stay_on_their_pinned_worker() {
-    // session affinity: every step of a session lands on the worker
-    // that owns its KV cache, across many interleaved sessions
+fn footprint_placement_spreads_sessions_and_never_splits() {
+    // session placement follows the KV-byte footprint: a worker loaded
+    // with a long-prefix session stops receiving new sessions, and no
+    // session's steps ever land on two workers
+    let dp = DesignPoint::Patterns(4);
+    let net = synthetic_network("tinydec", dp, 3).unwrap();
+    let prepared = prepare_any(&net);
+    let key = ModelKey::new("tinydec", dp.label());
+    let mut server = Server::start_pool(&pool_cfg(3, 4));
+    server.register(key.clone(), Arc::clone(&prepared));
+
+    let tokens: Vec<Vec<Tensor>> =
+        (0..4).map(|k| synthetic_step_inputs(&net, k, 6, 9)).collect();
+    // s0 gets a heavy prefix before anyone else opens
+    let s0 = server.open_session_on(&key);
+    for t in 0..6 {
+        server.submit_step(s0, tokens[0][t].clone());
+    }
+    let s1 = server.open_session_on(&key);
+    for t in 0..2 {
+        server.submit_step(s1, tokens[1][t].clone());
+    }
+    let s2 = server.open_session_on(&key);
+    server.submit_step(s2, tokens[2][0].clone());
+    let s3 = server.open_session_on(&key);
+    server.submit_step(s3, tokens[3][0].clone());
+    let mut done = server.shutdown();
+    done.sort_by_key(|c| c.id);
+    assert_eq!(done.len(), 6 + 2 + 1 + 1);
+
+    let mut worker_of: HashMap<u64, usize> = HashMap::new();
+    for c in &done {
+        let sid = c.session.expect("decode completion carries its session");
+        match worker_of.get(&sid) {
+            Some(&w) => assert_eq!(w, c.worker, "session {sid} split across workers"),
+            None => {
+                worker_of.insert(sid, c.worker);
+            }
+        }
+    }
+    assert_eq!(worker_of.len(), 4);
+    // every later session avoided s0's loaded worker, and s2 avoided
+    // s1's bytes too — footprint, not round-robin
+    let w0 = worker_of[&s0.0];
+    assert_ne!(worker_of[&s1.0], w0, "heaviest worker must not get the next session");
+    assert_ne!(worker_of[&s2.0], w0);
+    assert_ne!(worker_of[&s3.0], w0);
+    assert_ne!(worker_of[&s2.0], worker_of[&s1.0]);
+    let used: HashSet<usize> = worker_of.values().copied().collect();
+    assert_eq!(used.len(), 3, "sessions spread across the whole pool");
+}
+
+#[test]
+fn decode_sessions_stay_on_one_worker_each() {
+    // every step of a session lands on the worker that owns its KV
+    // cache, across many interleaved sessions; with all sessions opened
+    // up front (equal footprints) placement spreads them evenly
     let net = synthetic_network("tinydec", DesignPoint::Patterns(4), 3).unwrap();
     let prepared = Arc::new(PreparedModel::prepare_decoder(
         &net.nodes,
         net.step_nodes.as_ref().expect("decoder step graph"),
     ));
-    let cfg = ServeConfig {
-        workers: 3,
-        batch: BatchConfig { max_batch: 4, max_delay: Duration::from_millis(1) },
-    };
+    let cfg = pool_cfg(3, 4);
     let mut server = Server::start(Arc::clone(&prepared), &cfg);
     let sids: Vec<SessionId> = (0..6).map(|_| server.open_session()).collect();
     let steps = 5usize;
@@ -431,9 +789,11 @@ fn decode_sessions_stay_on_their_pinned_worker() {
         }
     }
     assert_eq!(worker_of.len(), 6);
-    for (sid, w) in &worker_of {
-        assert_eq!(*w, (*sid as usize) % 3, "session {sid} not on its pinned worker");
+    let mut sessions_per_worker = [0usize; 3];
+    for w in worker_of.values() {
+        sessions_per_worker[*w] += 1;
     }
+    assert_eq!(sessions_per_worker, [2, 2, 2], "equal-footprint sessions spread evenly");
     assert!(steps_of.values().all(|&n| n == steps));
 
     // deterministic: the served outputs match a single-engine replay
@@ -488,14 +848,91 @@ fn registry_prepares_once_per_key() {
     assert_eq!(a.num_layers(), 4);
 }
 
+/// A synthetic completion for metrics-only tests (never executed).
+fn fake_completion(id: u64, key: &ModelKey, layer: &str, cycles: u64) -> Completion {
+    let stats = RunStats { alu_cycles: cycles, ..RunStats::default() };
+    Completion {
+        id,
+        model: Arc::new(key.clone()),
+        worker: 0,
+        batch_id: id,
+        batch_size: 1,
+        latency: Duration::from_millis(1 + id),
+        session: None,
+        output: Tensor::zeros(1, 1, 1),
+        total: stats.clone(),
+        per_layer: vec![LayerStat { name: layer.to_string(), stats }],
+    }
+}
+
+#[test]
+fn metrics_never_merge_layers_across_models() {
+    // regression: per-layer aggregation used to key by bare layer name,
+    // silently merging two models' cycles/energy whenever their layer
+    // names collided (which synthetic twins always do)
+    let ka = ModelKey::new("alpha", "P4");
+    let kb = ModelKey::new("beta", "P4");
+    let done = vec![
+        fake_completion(0, &ka, "c1", 100),
+        fake_completion(1, &kb, "c1", 40),
+        fake_completion(2, &ka, "c1", 100),
+    ];
+    let report = summarize(&done, Duration::from_millis(10), SetupTiming::default());
+    assert_eq!(report.per_model.len(), 2);
+    assert_eq!(report.per_layer.len(), 2, "shared layer name must not merge across models");
+    let a = report.per_layer.iter().find(|l| l.model == "alpha/P4").unwrap();
+    let b = report.per_layer.iter().find(|l| l.model == "beta/P4").unwrap();
+    assert_eq!((a.name.as_str(), a.cycles), ("c1", 200));
+    assert_eq!((b.name.as_str(), b.cycles), ("c1", 40));
+    let alpha = report.per_model.iter().find(|m| m.model == "alpha/P4").unwrap();
+    assert_eq!((alpha.requests, alpha.cycles), (2, 200));
+
+    // JSON rows carry the model dimension
+    let text = report.to_json().to_string();
+    let parsed = soniq::util::json::parse(&text).unwrap();
+    let layers = parsed.get("per_layer").unwrap().as_arr().unwrap();
+    assert_eq!(layers.len(), 2);
+    assert!(layers.iter().all(|l| l.get("model").is_ok()));
+    assert_eq!(parsed.get("per_model").unwrap().as_arr().unwrap().len(), 2);
+}
+
+#[test]
+fn steady_rps_is_null_when_bind_swallows_the_window() {
+    // regression: `bind >= wall` used to divide by the 1e-9 clamp and
+    // report absurd throughput for tiny runs; an empty steady window
+    // has no steady state to report
+    let key = ModelKey::new("m", "P4");
+    let done = vec![fake_completion(0, &key, "l", 1)];
+    let setup = SetupTiming { prepare: Duration::ZERO, bind: Duration::from_millis(5) };
+    let report = summarize(&done, Duration::from_millis(5), setup);
+    assert!(report.steady_rps.is_nan(), "empty steady window must not fake throughput");
+    assert!(report.throughput_rps > 0.0);
+    let parsed = soniq::util::json::parse(&report.to_json().to_string()).unwrap();
+    assert!(
+        matches!(parsed.get("steady_throughput_rps"), Ok(soniq::util::json::Json::Null)),
+        "NaN steady_rps must serialize as JSON null"
+    );
+    // bind > wall (clocks measured on different threads) is the same
+    let report = summarize(&done, Duration::from_millis(3), setup);
+    assert!(report.steady_rps.is_nan());
+    // a residual window inside cross-thread measurement jitter (here
+    // 100 ns of a 5 ms run) must not become a fantasy denominator
+    let jitter = SetupTiming {
+        prepare: Duration::ZERO,
+        bind: Duration::from_millis(5) - Duration::from_nanos(100),
+    };
+    let report = summarize(&done, Duration::from_millis(5), jitter);
+    assert!(report.steady_rps.is_nan());
+    // a real window still reports a number
+    let report = summarize(&done, Duration::from_millis(6), setup);
+    assert!(report.steady_rps.is_finite());
+}
+
 #[test]
 fn serve_report_aggregates_and_serializes() {
     let (net, inputs) = net_and_inputs("tinynet", DesignPoint::Uniform(4), 12);
     let prepared = Arc::new(PreparedModel::prepare(&net.nodes));
-    let cfg = ServeConfig {
-        workers: 2,
-        batch: BatchConfig { max_batch: 4, max_delay: Duration::from_millis(1) },
-    };
+    let cfg = pool_cfg(2, 4);
     let t0 = Instant::now();
     let done = serve_all(&prepared, &cfg, inputs);
     let setup = SetupTiming {
@@ -507,11 +944,16 @@ fn serve_report_aggregates_and_serializes() {
     assert!(report.batches >= 3 && report.batches <= 12, "batches {}", report.batches);
     assert!(report.mean_batch_size >= 1.0 && report.mean_batch_size <= 4.0);
     assert!(report.throughput_rps > 0.0);
-    // steady-state excludes bind time, so it can only be faster
-    assert!(report.steady_rps >= report.throughput_rps);
+    // steady-state excludes bind time, so when a window exists it can
+    // only be faster (NaN = the whole wall was bind, possible only on
+    // a degenerate-fast run)
+    assert!(report.steady_rps.is_nan() || report.steady_rps >= report.throughput_rps);
     assert_eq!(report.setup.prepare, Duration::from_millis(3));
     assert!(report.p50_ms <= report.p99_ms);
     assert!(report.sim.cycles() > 0 && report.sim.energy_pj > 0.0);
+    // a single-model run has one model aggregate carrying every request
+    assert_eq!(report.per_model.len(), 1);
+    assert_eq!(report.per_model[0].requests, 12);
     // one aggregate per conv/FC layer: c1, c2, c3, fc
     assert_eq!(report.per_layer.len(), 4);
     assert!(report.per_layer.iter().all(|l| l.cycles > 0));
@@ -520,7 +962,8 @@ fn serve_report_aggregates_and_serializes() {
     let parsed = soniq::util::json::parse(&text).unwrap();
     assert_eq!(parsed.get("requests").unwrap().as_usize().unwrap(), 12);
     assert_eq!(parsed.get("per_layer").unwrap().as_arr().unwrap().len(), 4);
-    assert!(parsed.get("prepare_ms").is_some());
-    assert!(parsed.get("bind_ms").is_some());
-    assert!(parsed.get("steady_throughput_rps").is_some());
+    assert_eq!(parsed.get("per_model").unwrap().as_arr().unwrap().len(), 1);
+    assert!(parsed.get("prepare_ms").is_ok());
+    assert!(parsed.get("bind_ms").is_ok());
+    assert!(parsed.get("steady_throughput_rps").is_ok());
 }

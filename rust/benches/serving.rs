@@ -8,7 +8,8 @@ use soniq::coordinator::{
     DesignPoint,
 };
 use soniq::serve::{
-    serve_all, BatchConfig, EngineMachine, ModelKey, PreparedModel, ServeConfig, Server,
+    serve_all, BatchConfig, DeployConfig, Deployment, EngineMachine, ModelKey, PreparedModel,
+    ServeConfig, Server,
 };
 use soniq::sim::network::{run_network, Tensor};
 use soniq::util::bench::{bench, section};
@@ -98,6 +99,7 @@ fn main() {
                 workers: 4,
                 batch: BatchConfig { max_batch: 16, max_delay: Duration::from_millis(1) },
                 resident_models: budget,
+                ..ServeConfig::default()
             };
             let t1 = Instant::now();
             let mut server = Server::start_pool(&cfg);
@@ -117,6 +119,46 @@ fn main() {
             println!(
                 "  one pool, interleaved, {label}: {wall:.2?} -> {:.1} req/s",
                 64.0 / wall.as_secs_f64().max(1e-9)
+            );
+        }
+    }
+
+    // Sharded deployment: tinywide's wide layer split across workers vs
+    // the whole model on one worker — scatter/gather overhead against
+    // the placement headroom sharding buys (and the only way to serve
+    // at all once a worker buffer budget is smaller than the model)
+    {
+        let dp = DesignPoint::Patterns(4);
+        section("shard-aware placement — tinywide wide-layer split");
+        let net = synthetic_network("tinywide", dp, 7).expect("tinywide");
+        let inputs = synthetic_inputs(&net, 64, 11);
+        let key = ModelKey::new("tinywide", dp.label());
+        for shards in [1usize, 2, 4] {
+            let dcfg = DeployConfig {
+                worker_budget: None,
+                shards: (shards >= 2).then_some(shards),
+            };
+            let dep = Arc::new(
+                Deployment::build(key.clone(), &net.nodes, None, &dcfg).expect("plan"),
+            );
+            let cfg = ServeConfig {
+                workers: 4,
+                batch: BatchConfig { max_batch: 16, max_delay: Duration::from_millis(1) },
+                ..ServeConfig::default()
+            };
+            let t0 = Instant::now();
+            let mut server = Server::start_deployment(Arc::clone(&dep), &cfg);
+            for x in inputs.iter().cloned() {
+                server.submit(x);
+            }
+            let done = server.shutdown();
+            assert_eq!(done.len(), inputs.len());
+            let wall = t0.elapsed();
+            println!(
+                "  {} shard(s) over 4 workers: {} requests in {wall:.2?} -> {:.1} req/s",
+                dep.num_shards(),
+                done.len(),
+                done.len() as f64 / wall.as_secs_f64().max(1e-9)
             );
         }
     }

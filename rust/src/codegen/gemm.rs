@@ -42,6 +42,29 @@ pub struct GemmPlan {
 }
 
 impl GemmPlan {
+    /// Shard-scoped emission: restrict this GEMM to the output-column
+    /// sub-range `[start, end)`. The contraction axis (and with it the
+    /// precision assignment, chunking and tail bias) is untouched, so
+    /// the sliced kernel packs its static operand via the same
+    /// machinery and its packed bytes are exactly the corresponding
+    /// `cout` rows of the full pack.
+    pub fn slice_n(&self, start: usize, end: usize) -> GemmPlan {
+        assert!(start < end && end <= self.n, "{}: n slice [{start}, {end})", self.name);
+        GemmPlan { n: end - start, ..self.clone() }
+    }
+
+    /// Shard-scoped reduction operand: restrict the *contraction* axis
+    /// to `[start, end)` — the consumer-side view when its producer's
+    /// `cout` range was split across shards. Per-channel precisions are
+    /// preserved via [`Assignment::slice`]; each shard's partial
+    /// accumulators reduce exactly (the fixed-point grid sums without
+    /// rounding), so gathered outputs are bit-identical to the whole
+    /// kernel.
+    pub fn slice_k(&self, start: usize, end: usize) -> GemmPlan {
+        assert!(start < end && end <= self.k, "{}: k slice [{start}, {end})", self.name);
+        GemmPlan { k: end - start, asg: self.asg.slice(start, end), ..self.clone() }
+    }
+
     /// Lower to the equivalent 1x1 dense conv plan (`hin=m, win=1`):
     /// chunking, packing, buffer sizing and tail bias all reuse the conv
     /// machinery through this view.

@@ -17,6 +17,7 @@
 
 pub mod gemm;
 pub mod pack;
+pub mod shard;
 
 use crate::simd::isa::{Addr, BufId, Instr};
 use crate::simd::patterns::Pattern;

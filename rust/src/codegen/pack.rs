@@ -162,6 +162,16 @@ pub fn pack_column_into(asg: &Assignment, vals: &[f32], tmp: &mut Vec<f32>, out:
     }
 }
 
+/// Packed bytes one `cout` index occupies in a dense layer's weight
+/// pack — the layout is `cout`-major, so a contiguous `cout` sub-range
+/// of the full pack is exactly `(end - start) * packed_cout_row_bytes`
+/// bytes starting at `start * packed_cout_row_bytes`. The shard-scoped
+/// emitter relies on this to slice packed weights without re-packing
+/// (see `codegen::shard`).
+pub fn packed_cout_row_bytes(plan: &LayerPlan) -> usize {
+    plan.kh * plan.kw * plan.chunks().len() * 16
+}
+
 /// Per-chunk tail masks (16 bytes each).
 pub fn pack_masks(plan: &LayerPlan) -> Vec<u8> {
     let mut out = Vec::new();

@@ -1,0 +1,152 @@
+//! Shard-scoped codegen: restrict a layer's plan and raw weights to a
+//! contiguous `cout` sub-range (the producer side of a sharded
+//! deployment) or a contiguous contraction sub-range (the consumer side
+//! that reduces over a split producer).
+//!
+//! The whole point of sharding by output channel is that nothing about
+//! the kernel changes: a `cout`-sliced plan has the same `cin`
+//! assignment, the same chunking and the same tail bias, so the sliced
+//! emitter is the *ordinary* emitter over a narrower plan, and the
+//! sliced pack is byte-identical to the corresponding rows of the full
+//! pack (the dense weight layout is `cout`-major — see
+//! [`pack::packed_cout_row_bytes`]). Contraction slices re-chunk their
+//! per-channel precisions via [`Assignment::slice`]
+//! (`crate::smol::pattern_match::Assignment`); the fixed-point partial
+//! sums of the shards reduce without rounding, so gathered outputs stay
+//! bit-identical to the whole-model kernel.
+
+use crate::codegen::pack;
+use crate::codegen::{LayerKind, LayerPlan};
+
+/// Restrict a dense conv/FC plan to output channels `[start, end)`.
+pub fn slice_plan_cout(plan: &LayerPlan, start: usize, end: usize) -> LayerPlan {
+    assert_eq!(plan.kind, LayerKind::Dense, "{}: only dense layers shard by cout", plan.name);
+    assert!(start < end && end <= plan.cout, "{}: cout slice [{start}, {end})", plan.name);
+    LayerPlan { cout: end - start, ..plan.clone() }
+}
+
+/// The HWIO (`[r][s][cin][cout]`) weight slice matching
+/// [`slice_plan_cout`].
+pub fn slice_dense_weights_cout(plan: &LayerPlan, w: &[f32], start: usize, end: usize) -> Vec<f32> {
+    assert_eq!(w.len(), plan.kh * plan.kw * plan.cin * plan.cout, "{}: weights", plan.name);
+    let mut out = Vec::with_capacity(plan.kh * plan.kw * plan.cin * (end - start));
+    for rs_c in 0..plan.kh * plan.kw * plan.cin {
+        out.extend_from_slice(&w[rs_c * plan.cout + start..rs_c * plan.cout + end]);
+    }
+    out
+}
+
+/// Restrict a dense conv/FC plan to *input* channels `[start, end)` —
+/// the reduce-consumer view when its producer's `cout` was split. The
+/// per-channel precision assignment is sliced alongside (precisions
+/// preserved, chunks rebuilt over the slice).
+pub fn slice_plan_cin(plan: &LayerPlan, start: usize, end: usize) -> LayerPlan {
+    assert_eq!(plan.kind, LayerKind::Dense, "{}: only dense layers shard by cin", plan.name);
+    assert!(start < end && end <= plan.cin, "{}: cin slice [{start}, {end})", plan.name);
+    LayerPlan { cin: end - start, asg: plan.asg.slice(start, end), ..plan.clone() }
+}
+
+/// The HWIO weight slice matching [`slice_plan_cin`].
+pub fn slice_dense_weights_cin(plan: &LayerPlan, w: &[f32], start: usize, end: usize) -> Vec<f32> {
+    assert_eq!(w.len(), plan.kh * plan.kw * plan.cin * plan.cout, "{}: weights", plan.name);
+    let mut out = Vec::with_capacity(plan.kh * plan.kw * (end - start) * plan.cout);
+    for rs in 0..plan.kh * plan.kw {
+        let base = rs * plan.cin;
+        out.extend_from_slice(&w[(base + start) * plan.cout..(base + end) * plan.cout]);
+    }
+    out
+}
+
+/// Column slice `[start, end)` of a `[k][n]` row-major GEMM operand
+/// (matches [`crate::codegen::gemm::GemmPlan::slice_n`]).
+pub fn slice_gemm_weights_n(k: usize, n: usize, w: &[f32], start: usize, end: usize) -> Vec<f32> {
+    assert_eq!(w.len(), k * n, "gemm weights shape");
+    assert!(start < end && end <= n, "n slice [{start}, {end})");
+    let mut out = Vec::with_capacity(k * (end - start));
+    for row in 0..k {
+        out.extend_from_slice(&w[row * n + start..row * n + end]);
+    }
+    out
+}
+
+/// Row slice `[start, end)` of a `[k][n]` row-major GEMM operand
+/// (matches [`crate::codegen::gemm::GemmPlan::slice_k`]).
+pub fn slice_gemm_weights_k(k: usize, n: usize, w: &[f32], start: usize, end: usize) -> Vec<f32> {
+    assert_eq!(w.len(), k * n, "gemm weights shape");
+    assert!(start < end && end <= k, "k slice [{start}, {end})");
+    w[start * n..end * n].to_vec()
+}
+
+/// Pack a `cout` sub-range of a dense layer through the shard-scoped
+/// plan — the ordinary [`pack::pack_weights_into`] machinery over the
+/// slice. Bit-identical to the corresponding byte range of the
+/// full-model pack (`[start, end) * packed_cout_row_bytes`), which the
+/// shard-pack proptests assert across precisions.
+pub fn pack_weights_cout_range(plan: &LayerPlan, w: &[f32], start: usize, end: usize) -> Vec<u8> {
+    let sliced = slice_plan_cout(plan, start, end);
+    let sliced_w = slice_dense_weights_cout(plan, w, start, end);
+    pack::pack_weights(&sliced, &sliced_w)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codegen::DataFormat;
+    use crate::simd::patterns::design_subset;
+    use crate::smol::pattern_match::{pattern_match, Assignment};
+
+    fn plan(cin: usize, cout: usize, k: usize, asg: Assignment) -> LayerPlan {
+        LayerPlan {
+            name: "sh".into(),
+            kind: LayerKind::Dense,
+            cin,
+            cout,
+            kh: k,
+            kw: k,
+            stride: 1,
+            hin: 4,
+            win: 4,
+            asg,
+            fmt: DataFormat::Smol,
+        }
+    }
+
+    #[test]
+    fn cout_range_pack_is_a_byte_slice_of_the_full_pack() {
+        let s: Vec<f32> = (0..24).map(|i| ((i * 7 % 13) as f32) - 5.0).collect();
+        for asg in [Assignment::uniform(24, 4), pattern_match(&s, &design_subset(8))] {
+            let p = plan(24, 10, 3, asg);
+            let w: Vec<f32> = (0..3 * 3 * 24 * 10).map(|i| (i as f32 * 0.37).sin()).collect();
+            let full = pack::pack_weights(&p, &w);
+            let row = pack::packed_cout_row_bytes(&p);
+            for (start, end) in [(0usize, 5usize), (5, 10), (3, 7)] {
+                let shard = pack_weights_cout_range(&p, &w, start, end);
+                assert_eq!(shard, full[start * row..end * row], "[{start}, {end})");
+            }
+        }
+    }
+
+    #[test]
+    fn cin_slices_partition_the_weights() {
+        let p = plan(20, 6, 1, Assignment::uniform(20, 2));
+        let w: Vec<f32> = (0..20 * 6).map(|i| i as f32).collect();
+        let lo = slice_dense_weights_cin(&p, &w, 0, 12);
+        let hi = slice_dense_weights_cin(&p, &w, 12, 20);
+        let rejoined: Vec<f32> = lo.into_iter().chain(hi).collect();
+        assert_eq!(rejoined, w);
+        let lp = slice_plan_cin(&p, 12, 20);
+        assert_eq!((lp.cin, lp.asg.num_channels()), (8, 8));
+    }
+
+    #[test]
+    fn gemm_column_and_row_slices_match_layout() {
+        let (k, n) = (6usize, 8usize);
+        let w: Vec<f32> = (0..k * n).map(|i| i as f32).collect();
+        let cols = slice_gemm_weights_n(k, n, &w, 2, 5);
+        for row in 0..k {
+            assert_eq!(&cols[row * 3..row * 3 + 3], &w[row * n + 2..row * n + 5]);
+        }
+        let rows = slice_gemm_weights_k(k, n, &w, 1, 4);
+        assert_eq!(rows, w[n..4 * n]);
+    }
+}

@@ -363,12 +363,17 @@ impl SyntheticNet {
 ///
 /// Models: `tinynet` (3 dense convs + GAP + FC, the netbuild topology),
 /// `tinydw` (dense stem + depthwise + pointwise + GAP + FC, to exercise
-/// the two-cycle multiply path), `tinyattn` (a 2-block pre-LN
-/// Transformer encoder: static Q/K/V/out/FFN projections on the GEMM
-/// emitter plus dynamic-operand QK^T and A·V, softmax/layernorm/GELU
-/// epilogues) and `tinydec` (the causal *decoder* twin of `tinyattn`,
-/// with a per-token decode step graph for KV-cached serving — see
-/// [`synthetic_decoder`]).
+/// the two-cycle multiply path), `tinywide` (stem + a 1x1 conv whose
+/// `cout` dwarfs every other layer + GAP + plain FC contracting that
+/// axis — the shard-aware deployment workload: its middle layer is
+/// built to exceed a budgeted worker machine, and the stem/wide/GAP/FC
+/// chain is exactly the replicate -> cout-split -> channel-aligned ->
+/// reduce shape `serve::Deployment` shards), `tinyattn` (a 2-block
+/// pre-LN Transformer encoder: static Q/K/V/out/FFN projections on the
+/// GEMM emitter plus dynamic-operand QK^T and A·V,
+/// softmax/layernorm/GELU epilogues) and `tinydec` (the causal
+/// *decoder* twin of `tinyattn`, with a per-token decode step graph for
+/// KV-cached serving — see [`synthetic_decoder`]).
 pub fn synthetic_network(model: &str, dp: DesignPoint, seed: u64) -> Result<SyntheticNet> {
     synthetic_network_seq(model, dp, seed, None)
 }
@@ -554,6 +559,28 @@ pub fn synthetic_network_seq(
             );
             nodes.push(Node::Conv { cfg: Box::new(fc), input: 3 });
         }
+        "tinywide" => {
+            // the sharded-serving workload: `wide`'s bind footprint
+            // (dominated by its 4x4 x 512-channel accumulator buffer)
+            // exceeds any reasonable single-machine budget for this
+            // model family, and the graph is the canonical shardable
+            // chain — stem (replicated per shard), wide (cout-split),
+            // GAP (channel-aligned, runs in sliced space), fc (plain:
+            // no BN/ReLU, so per-shard partial sums reduce exactly)
+            let a = assign(&mut rng, 3);
+            let c1 = conv(&mut rng, a, fmt, "c1", LayerKind::Dense, 3, 16, 3, 2, 8, true, true);
+            nodes.push(Node::Conv { cfg: Box::new(c1), input: INPUT });
+            let a = assign(&mut rng, 16);
+            let wide =
+                conv(&mut rng, a, fmt, "wide", LayerKind::Dense, 16, 512, 1, 1, 4, true, true);
+            nodes.push(Node::Conv { cfg: Box::new(wide), input: 0 });
+            nodes.push(Node::Gap { x: 1 });
+            let a = assign(&mut rng, 512);
+            let fc = conv(
+                &mut rng, a, fmt, "fc", LayerKind::Dense, 512, num_classes, 1, 1, 1, false, false,
+            );
+            nodes.push(Node::Conv { cfg: Box::new(fc), input: 2 });
+        }
         "tinyattn" => {
             // 2-block pre-LN Transformer encoder over (1, s, d) sequence
             // tensors. Q/K/V/out/FFN projections are static GEMMs
@@ -622,7 +649,7 @@ pub fn synthetic_network_seq(
         other => {
             bail!(
                 "no synthetic topology for model {other} \
-                 (try tinynet, tinydw, tinyattn or tinydec)"
+                 (try tinynet, tinydw, tinywide, tinyattn or tinydec)"
             )
         }
     }

@@ -18,6 +18,9 @@
 //!         # KV-cached autoregressive decode vs prefix-repack baseline
 //!   soniq serve-bench --models tinynet,tinyattn,tinydec --requests 384 \
 //!         # mixed multi-model traffic through ONE worker pool
+//!   soniq serve-bench --model tinywide --shards 2 [--worker-budget BYTES] \
+//!         # shard-aware placement: the wide layer splits across workers,
+//!         # scatter/gather outputs bit-identical to the unsharded run
 
 use anyhow::{bail, Result};
 use soniq::coordinator::{
@@ -140,6 +143,8 @@ fn main() -> Result<()> {
             let max_delay_ms = args.get_usize("max-delay-ms", 2);
             let seed = args.get_usize("seed", 0) as u64;
             let decode = args.has_flag("decode");
+            let shards = args.get_usize("shards", 0); // 0/1 = no explicit split
+            let worker_budget = args.get_usize("worker-budget", 0); // bytes; 0 = unlimited
 
             let registry = serve::ModelRegistry::new();
             let cfg = ServeConfig {
@@ -149,6 +154,7 @@ fn main() -> Result<()> {
                     max_delay: Duration::from_millis(max_delay_ms as u64),
                 },
                 resident_models: args.get_usize("resident-models", usize::MAX).max(1),
+                worker_budget: (worker_budget > 0).then_some(worker_budget),
             };
 
             let models_arg = args.get_or("models", "");
@@ -158,6 +164,12 @@ fn main() -> Result<()> {
                     bail!(
                         "--decode benchmarks one decoder's sessions; it does not \
                          combine with --models (use --model tinydec --decode)"
+                    );
+                }
+                if shards >= 2 {
+                    bail!(
+                        "--shards applies to a single --model deployment; it does \
+                         not combine with --models"
                     );
                 }
                 let names: Vec<String> = models_arg
@@ -217,7 +229,6 @@ fn main() -> Result<()> {
                 for (key, prepared, _) in &fleet {
                     server.register(key.clone(), Arc::clone(prepared));
                 }
-                let binds = server.bind_times();
                 // round-robin submission: every batching window sees
                 // every model, the worst case for bind-table churn
                 for i in 0..per_model {
@@ -228,7 +239,7 @@ fn main() -> Result<()> {
                 let mut done = server.shutdown();
                 let wall = t2.elapsed();
                 done.sort_by_key(|c| c.id);
-                let bind = binds.lock().unwrap().iter().max().copied().unwrap_or_default();
+                let bind = server.bind_times().into_iter().max().unwrap_or_default();
                 let report = serve::summarize(&done, wall, SetupTiming { prepare, bind });
                 report.print();
 
@@ -253,6 +264,76 @@ fn main() -> Result<()> {
             let key = serve::ModelKey::new(model.clone(), design.label());
             println!("== soniq serve-bench — {key} ==");
 
+            if decode && shards >= 2 {
+                bail!(
+                    "--shards does not combine with --decode: sharded decoders are \
+                     unsupported (KV sessions pin whole models)"
+                );
+            }
+            if !decode && (shards >= 2 || worker_budget > 0) {
+                // --- shard-aware placement: scatter/gather across workers ---
+                let dcfg = serve::DeployConfig {
+                    worker_budget: cfg.worker_budget,
+                    shards: (shards >= 2).then_some(shards),
+                };
+                let t1 = Instant::now();
+                let dep = std::sync::Arc::new(serve::Deployment::build(
+                    key.clone(),
+                    &net.nodes,
+                    net.step_nodes.as_deref(),
+                    &dcfg,
+                )?);
+                let prepare = t1.elapsed();
+                println!("deployment plan: {}", dep.describe());
+                if worker_budget > 0 && dep.num_shards() > workers {
+                    bail!(
+                        "{} shards need {} workers under --worker-budget (each shard \
+                         is sized for a machine of its own); raise --workers or the \
+                         budget",
+                        dep.num_shards(),
+                        dep.num_shards()
+                    );
+                }
+
+                // unsharded oracle on one budget-less machine
+                let whole = registry.get_or_prepare(&key, || net.prepare());
+                let mut oracle = serve::EngineMachine::new(&whole);
+                let inputs = synthetic_inputs(&net, n_requests, seed + 1);
+                let want: Vec<Vec<f32>> =
+                    inputs.iter().map(|x| oracle.run(x).output.data.clone()).collect();
+
+                println!(
+                    "sharded serving ({} shards across {workers} workers, max batch \
+                     {max_batch}):",
+                    dep.num_shards()
+                );
+                let t2 = Instant::now();
+                let mut server = serve::Server::start_deployment(Arc::clone(&dep), &cfg);
+                for x in inputs.iter().cloned() {
+                    server.submit(x);
+                }
+                let mut done = server.shutdown();
+                let wall = t2.elapsed();
+                done.sort_by_key(|c| c.id);
+                let bind = server.bind_times().into_iter().max().unwrap_or_default();
+                let report = serve::summarize(&done, wall, SetupTiming { prepare, bind });
+                report.print();
+
+                let bitexact = done.len() == inputs.len()
+                    && done.iter().all(|c| c.output.data == want[c.id as usize]);
+                println!(
+                    "  sharded outputs bit-identical to unsharded single-machine run: \
+                     {bitexact}"
+                );
+                if args.has_flag("json") {
+                    println!("{}", report.to_json().to_string());
+                }
+                if !bitexact {
+                    bail!("sharded outputs diverged from the unsharded run");
+                }
+                return Ok(());
+            }
+
             if decode {
                 // --- KV-cached autoregressive decode vs prefix repack ---
                 let steps = args.get_usize("steps", 64).max(1);
@@ -272,6 +353,15 @@ fn main() -> Result<()> {
                 let prepare = t1.elapsed();
                 // (decoder models always cache their decoder form under
                 // this key — see ModelRegistry::get_or_prepare)
+                if let Some(b) = cfg.worker_budget {
+                    let need = prepared.bind_bytes();
+                    if need > b {
+                        bail!(
+                            "decoder bind needs {need} B but --worker-budget is {b} \
+                             (sharded decoders are unsupported; raise the budget)"
+                        );
+                    }
+                }
                 println!(
                     "prepared decoder `{key}` in {prepare:.2?} \
                      ({} kernels; sessions cache packed K/V per step)",
@@ -285,7 +375,6 @@ fn main() -> Result<()> {
                 let t2 = Instant::now();
                 let mut server =
                     serve::Server::start_named(key.clone(), Arc::clone(&prepared), &cfg);
-                let binds = server.bind_times();
                 let sids: Vec<serve::SessionId> =
                     (0..n_sessions).map(|_| server.open_session()).collect();
                 for t in 0..steps {
@@ -296,7 +385,7 @@ fn main() -> Result<()> {
                 let mut done = server.shutdown();
                 let wall = t2.elapsed();
                 done.sort_by_key(|c| c.id);
-                let bind = binds.lock().unwrap().iter().max().copied().unwrap_or_default();
+                let bind = server.bind_times().into_iter().max().unwrap_or_default();
                 let report = serve::summarize(&done, wall, SetupTiming { prepare, bind });
                 report.print();
 
@@ -381,14 +470,13 @@ fn main() -> Result<()> {
             );
             let t2 = Instant::now();
             let mut server = serve::Server::start_named(key.clone(), Arc::clone(&prepared), &cfg);
-            let binds = server.bind_times();
             for x in inputs.iter().cloned() {
                 server.submit(x);
             }
             let mut completions = server.shutdown();
             let wall = t2.elapsed();
             completions.sort_by_key(|c| c.id);
-            let bind = binds.lock().unwrap().iter().max().copied().unwrap_or_default();
+            let bind = server.bind_times().into_iter().max().unwrap_or_default();
             let report = serve::summarize(&completions, wall, SetupTiming { prepare, bind });
             report.print();
 
@@ -409,6 +497,12 @@ fn main() -> Result<()> {
             eprintln!(
                 "usage: soniq <train|explore|hw|patterns|serve-bench> \
                  [--model M] [--design D] [--artifacts DIR]"
+            );
+            eprintln!(
+                "       serve-bench [--model M | --models A,B,C] [--design D] \
+                 [--requests N] [--workers W] [--max-batch B] [--max-delay-ms MS] \
+                 [--resident-models R] [--shards S] [--worker-budget BYTES] \
+                 [--decode --steps N --sessions S] [--json]"
             );
             eprintln!("       see README.md for the full CLI");
         }

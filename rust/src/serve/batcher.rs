@@ -59,14 +59,48 @@ pub struct Request {
     /// when the request entered the queue (latency is measured from here)
     pub enqueued: Instant,
     /// worker affinity: decode steps pin to the worker holding their
-    /// session's KV cache; `None` = any worker
+    /// session's KV cache, shard sub-requests to the worker their shard
+    /// is placed on; `None` = any worker
     pub target: Option<usize>,
+    /// which shard of a sharded deployment this sub-request addresses
+    /// (`None` = whole-model request). Sub-requests of one logical
+    /// request share its id; the server's gather buffer reassembles
+    /// them by `(id, shard)`.
+    pub shard: Option<usize>,
 }
 
 impl Request {
     /// A stateless inference request (no worker affinity).
     pub fn infer(id: u64, model: &ModelHandle, input: Tensor, enqueued: Instant) -> Request {
-        Request { id, model: model.clone(), payload: Payload::Infer(input), enqueued, target: None }
+        Request {
+            id,
+            model: model.clone(),
+            payload: Payload::Infer(input),
+            enqueued,
+            target: None,
+            shard: None,
+        }
+    }
+
+    /// One shard's sub-request of a scattered inference, pinned to the
+    /// worker the shard is placed on. All of a logical request's shard
+    /// sub-requests share `id`.
+    pub fn infer_shard(
+        id: u64,
+        model: &ModelHandle,
+        shard: usize,
+        input: Tensor,
+        target: usize,
+        enqueued: Instant,
+    ) -> Request {
+        Request {
+            id,
+            model: model.clone(),
+            payload: Payload::Infer(input),
+            enqueued,
+            target: Some(target),
+            shard: Some(shard),
+        }
     }
 
     /// A decode-step request pinned to `target` (the worker holding the
@@ -85,6 +119,7 @@ impl Request {
             payload: Payload::Step { session, token },
             enqueued,
             target: Some(target),
+            shard: None,
         }
     }
 
@@ -104,6 +139,7 @@ impl Request {
             payload: Payload::Close { session },
             enqueued,
             target: Some(target),
+            shard: None,
         }
     }
 }

@@ -1,0 +1,705 @@
+//! Shard-aware model placement: the [`Deployment`] abstraction.
+//!
+//! A `Deployment` replaces "`ModelHandle` = whole model on one worker"
+//! as the unit of serving: it owns a [`ShardPlan`] — a per-layer split
+//! of the widest layer's `cout` range into contiguous shards, computed
+//! from layer width vs. a per-worker machine buffer budget — and one
+//! prepared (sub)model per shard. Small models get `ShardPlan::Whole`,
+//! so the existing one-model-one-worker path is the degenerate case.
+//!
+//! The split exploits the same structure SONIQ's kernels are built on:
+//! the output-channel axis partitions cleanly, the sliced kernel is the
+//! *ordinary* emitter over a narrower plan (`codegen::shard`), and the
+//! reduction where the split axis re-enters as a contraction axis is
+//! exact — every shard's accumulators live on the fixed-point grid, so
+//! the f32 gather sum rounds nothing and sharded outputs stay
+//! **bit-identical** to the whole-model run.
+//!
+//! Shardable shapes: the widest kernel node (`Conv` dense or static
+//! `Matmul`) is sliced by `cout`; from there the planner walks a chain
+//! of channel-aligned ops (`Gap`, `Gelu` — per-channel, so they run in
+//! sliced space) and either reaches the model output
+//! ([`GatherMode::Concat`]: partial `cout` slices concatenate) or a
+//! final dense kernel contracting the split axis
+//! ([`GatherMode::Reduce`]: the consumer is sliced by `cin`/`k` and the
+//! shards' partial sums reduce). Anything else — mid-graph residuals,
+//! softmax over the split axis, dynamic-operand GEMMs, decoder step
+//! graphs — refuses to shard with a descriptive error rather than
+//! serving wrong numbers.
+//!
+//! [`crate::serve::Server::deploy`] pins each shard to a worker and
+//! scatter/gathers requests across them; [`Deployment::gather_outputs`]
+//! is the same assembly the serving gather buffer uses, so tests can
+//! drive shards directly against [`crate::serve::EngineMachine`]s.
+
+use crate::codegen::shard as cshard;
+use crate::codegen::LayerKind;
+use crate::serve::engine::{conv_bind_bytes, matmul_bind_bytes, PreparedModel, PreparedOp};
+use crate::serve::session::CausalAvOp;
+use crate::serve::{ModelHandle, ModelKey};
+use crate::sim::network::{ConvLayerCfg, MatmulCfg, Node, Tensor};
+use anyhow::{bail, Result};
+use std::sync::Arc;
+
+/// How a deployment is sized and split.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct DeployConfig {
+    /// per-worker machine buffer budget in bytes; a model whose bind
+    /// footprint exceeds it is split until every shard fits (`None` =
+    /// unlimited, shard only on explicit request)
+    pub worker_budget: Option<usize>,
+    /// explicit shard count (>= 2 to force sharding; `None`/`Some(1)` =
+    /// derive from the budget)
+    pub shards: Option<usize>,
+}
+
+/// How a sharded deployment's partial outputs combine.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GatherMode {
+    /// the split `cout` axis survives to the model output: concatenate
+    /// the shards' channel slices
+    Concat,
+    /// the split axis re-enters as the final kernel's contraction axis:
+    /// sum the shards' partial outputs (exact — fixed-point grid)
+    Reduce,
+}
+
+/// The per-layer split of a deployment.
+#[derive(Debug, Clone)]
+pub enum ShardPlan {
+    /// the whole model binds to one worker (small models; the
+    /// degenerate, PR-4-compatible case)
+    Whole,
+    Sharded {
+        /// graph index of the `cout`-sliced (wide) kernel node
+        split_node: usize,
+        /// graph index of the `cin`/`k`-sliced reduce consumer
+        /// (`None` for [`GatherMode::Concat`])
+        consumer_node: Option<usize>,
+        /// per-shard contiguous `[start, end)` ranges of the split
+        /// node's `cout` axis
+        slices: Vec<(usize, usize)>,
+        gather: GatherMode,
+    },
+}
+
+impl ShardPlan {
+    /// Number of shards this plan places (1 for `Whole`).
+    pub fn num_shards(&self) -> usize {
+        match self {
+            ShardPlan::Whole => 1,
+            ShardPlan::Sharded { slices, .. } => slices.len(),
+        }
+    }
+}
+
+/// A model prepared for placement: the shard plan plus one prepared
+/// (sub)model per shard. Shard handles carry shard-tagged [`ModelKey`]s
+/// (`design#s<i>of<n>`), so per-worker bind tables — and the batcher's
+/// `(model, target)` groups — never collide even when two shards of one
+/// model land on the same machine.
+#[derive(Debug)]
+pub struct Deployment {
+    key: Arc<ModelKey>,
+    plan: ShardPlan,
+    handles: Vec<ModelHandle>,
+}
+
+/// Ops that are per-channel on the split axis and may sit between the
+/// split kernel and the gather point, executing in sliced space.
+fn channel_aligned(node: &Node) -> bool {
+    matches!(node, Node::Gap { .. } | Node::Gelu { .. })
+}
+
+/// Machine bytes binding this node allocates (0 for buffer-less
+/// epilogue/layout ops). Exact for every kernel kind: conv/GEMM bytes
+/// come from the shared plan arithmetic, and the causal A·V form —
+/// which the executor prepares as the much smaller `CausalAvOp`, not a
+/// full GEMM — asks the op itself (its `prepare` copies dims only, so
+/// this stays cheap). `CachedAttn` appears only in decoder step graphs,
+/// which `Deployment::build` budget-checks via the exact
+/// `PreparedModel::bind_bytes` instead.
+fn node_bind_bytes(node: &Node) -> usize {
+    match node {
+        Node::Conv { cfg, .. } => conv_bind_bytes(&cfg.plan),
+        Node::MatmulDyn { cfg, transpose_b, .. } if cfg.causal && !*transpose_b => {
+            CausalAvOp::prepare(cfg).bind_bytes()
+        }
+        Node::Matmul { cfg, .. } | Node::MatmulDyn { cfg, .. } => matmul_bind_bytes(&cfg.plan),
+        _ => 0,
+    }
+}
+
+/// `cout` width of a sliceable kernel node (None = not sliceable).
+fn split_width(node: &Node) -> Option<usize> {
+    match node {
+        Node::Conv { cfg, .. } if cfg.plan.kind == LayerKind::Dense => Some(cfg.plan.cout),
+        Node::Matmul { cfg, .. } => Some(cfg.plan.n),
+        _ => None,
+    }
+}
+
+/// Nodes whose inputs include `id` (dataflow from the shared
+/// [`Node::inputs`], the same wiring the executor runs).
+fn consumers(nodes: &[Node], id: usize) -> Vec<usize> {
+    nodes
+        .iter()
+        .enumerate()
+        .filter(|(_, n)| n.inputs().contains(&id))
+        .map(|(i, _)| i)
+        .collect()
+}
+
+/// Contiguous `[start, end)` slices splitting `width` channels into `n`
+/// near-equal shards (earlier shards take the remainder).
+fn even_slices(width: usize, n: usize) -> Vec<(usize, usize)> {
+    let (base, rem) = (width / n, width % n);
+    let mut out = Vec::with_capacity(n);
+    let mut pos = 0usize;
+    for i in 0..n {
+        let w = base + usize::from(i < rem);
+        out.push((pos, pos + w));
+        pos += w;
+    }
+    out
+}
+
+/// Bind bytes of the split node restricted to `range`.
+fn sliced_split_bytes(node: &Node, (s, e): (usize, usize)) -> usize {
+    match node {
+        Node::Conv { cfg, .. } => conv_bind_bytes(&cshard::slice_plan_cout(&cfg.plan, s, e)),
+        Node::Matmul { cfg, .. } => matmul_bind_bytes(&cfg.plan.slice_n(s, e)),
+        _ => unreachable!("split node is a dense kernel"),
+    }
+}
+
+/// Bind bytes of the reduce consumer restricted to contraction `range`.
+fn sliced_consumer_bytes(node: &Node, (s, e): (usize, usize)) -> usize {
+    match node {
+        Node::Conv { cfg, .. } => conv_bind_bytes(&cshard::slice_plan_cin(&cfg.plan, s, e)),
+        Node::Matmul { cfg, .. } => matmul_bind_bytes(&cfg.plan.slice_k(s, e)),
+        _ => unreachable!("reduce consumer is a dense kernel"),
+    }
+}
+
+/// Validate a reduce consumer: a dense kernel contracting exactly the
+/// split axis with a pure (grid-exact) epilogue.
+fn check_consumer(nodes: &[Node], ci: usize, width: usize) -> Result<()> {
+    match &nodes[ci] {
+        Node::Conv { cfg, .. } => {
+            if cfg.plan.kind != LayerKind::Dense {
+                bail!("reduce consumer {} is not a dense kernel", cfg.plan.name);
+            }
+            if cfg.plan.cin != width {
+                bail!(
+                    "reduce consumer {} contracts {} channels, split axis has {width}",
+                    cfg.plan.name,
+                    cfg.plan.cin
+                );
+            }
+            if !cfg.bn_scale.is_empty() || cfg.relu {
+                bail!(
+                    "reduce consumer {} has a BN/ReLU epilogue; partial sums would \
+                     round off the fixed-point grid (gather must happen first)",
+                    cfg.plan.name
+                );
+            }
+        }
+        Node::Matmul { cfg, .. } => {
+            if cfg.plan.k != width {
+                bail!(
+                    "reduce consumer {} contracts {} channels, split axis has {width}",
+                    cfg.plan.name,
+                    cfg.plan.k
+                );
+            }
+            if cfg.scale != 1.0 || cfg.causal {
+                bail!(
+                    "reduce consumer {} has a scaled/causal epilogue; partial sums \
+                     would round off the fixed-point grid",
+                    cfg.plan.name
+                );
+            }
+        }
+        _ => bail!("node {ci} consuming the split axis is not a dense kernel"),
+    }
+    Ok(())
+}
+
+/// Compute the shard plan for a stateless graph (see module docs for
+/// the supported shapes).
+fn plan_shards(nodes: &[Node], cfg: &DeployConfig) -> Result<ShardPlan> {
+    let want = cfg.shards.filter(|&n| n >= 2);
+    let est: Vec<usize> = nodes.iter().map(node_bind_bytes).collect();
+    let total: usize = est.iter().sum();
+    let over_budget = cfg.worker_budget.is_some_and(|b| total > b);
+    if want.is_none() && !over_budget {
+        return Ok(ShardPlan::Whole);
+    }
+
+    // the split node: widest bind footprint among sliceable kernels
+    let split = (0..nodes.len())
+        .filter(|&i| split_width(&nodes[i]).is_some() && est[i] > 0)
+        .max_by_key(|&i| est[i]);
+    let Some(split) = split else {
+        bail!("model has no sliceable dense kernel to shard");
+    };
+    let width = split_width(&nodes[split]).expect("split node is sliceable");
+
+    // walk the channel-aligned chain from the split node to the gather
+    // point: the model output (Concat) or a final reduce kernel (Reduce)
+    let last = nodes.len() - 1;
+    let mut cur = split;
+    let consumer_node = loop {
+        let cs = consumers(nodes, cur);
+        match cs.as_slice() {
+            [] => {
+                if cur != last {
+                    bail!("split axis of node {split} dead-ends before the model output");
+                }
+                break None; // sliced channels reach the output: Concat
+            }
+            [c] => {
+                if channel_aligned(&nodes[*c]) {
+                    cur = *c; // per-channel op: runs in sliced space
+                } else if *c == last {
+                    check_consumer(nodes, *c, width)?;
+                    break Some(*c);
+                } else {
+                    bail!(
+                        "node {c} consumes the split axis mid-graph; only \
+                         channel-aligned ops or a final reduce kernel may follow \
+                         the split node"
+                    );
+                }
+            }
+            many => bail!(
+                "split axis of node {split} fans out to {} consumers; sharding \
+                 needs a single-consumer chain",
+                many.len()
+            ),
+        }
+    };
+    let gather = if consumer_node.is_some() { GatherMode::Reduce } else { GatherMode::Concat };
+
+    // shard count: explicit, or the smallest split where every shard's
+    // bind footprint fits the worker budget
+    let replicated: usize = total - est[split] - consumer_node.map(|c| est[c]).unwrap_or(0);
+    let fits = |n: usize| -> bool {
+        let Some(budget) = cfg.worker_budget else {
+            return true;
+        };
+        even_slices(width, n).iter().all(|&r| {
+            let mut bytes = replicated + sliced_split_bytes(&nodes[split], r);
+            if let Some(c) = consumer_node {
+                bytes += sliced_consumer_bytes(&nodes[c], r);
+            }
+            bytes <= budget
+        })
+    };
+    let n = match want {
+        Some(n) => {
+            if n > width {
+                bail!("--shards {n} exceeds the split axis width {width}");
+            }
+            if let Some(budget) = cfg.worker_budget {
+                if !fits(n) {
+                    bail!(
+                        "{n} shards do not fit the {budget} B worker budget (the widest \
+                         shard still exceeds it; raise the budget or the shard count)"
+                    );
+                }
+            }
+            n
+        }
+        None => {
+            let budget = cfg.worker_budget.expect("over_budget implies a budget");
+            let mut n = 2;
+            loop {
+                if n > width {
+                    bail!(
+                        "no shard split fits the {budget} B worker budget \
+                         (replicated layers alone take {replicated} B)"
+                    );
+                }
+                if fits(n) {
+                    break n;
+                }
+                n += 1;
+            }
+        }
+    };
+
+    Ok(ShardPlan::Sharded {
+        split_node: split,
+        consumer_node,
+        slices: even_slices(width, n),
+        gather,
+    })
+}
+
+fn slice_bn(v: &[f32], s: usize, e: usize) -> Vec<f32> {
+    if v.is_empty() {
+        Vec::new()
+    } else {
+        v[s..e].to_vec()
+    }
+}
+
+/// `cout`-sliced clone of a conv node's config (the split kernel): the
+/// cin-side plan, assignment, chunking and tail bias are untouched, and
+/// the per-output-channel BN/ReLU epilogue slices with the channels.
+fn conv_cout_slice(cfg: &ConvLayerCfg, s: usize, e: usize) -> ConvLayerCfg {
+    ConvLayerCfg {
+        plan: cshard::slice_plan_cout(&cfg.plan, s, e),
+        weights: cshard::slice_dense_weights_cout(&cfg.plan, &cfg.weights, s, e),
+        bn_scale: slice_bn(&cfg.bn_scale, s, e),
+        bn_bias: slice_bn(&cfg.bn_bias, s, e),
+        bn_mean: slice_bn(&cfg.bn_mean, s, e),
+        bn_var: slice_bn(&cfg.bn_var, s, e),
+        relu: cfg.relu,
+    }
+}
+
+/// `cin`-sliced clone of a conv node's config (the reduce consumer);
+/// [`check_consumer`] guarantees it carries no BN/ReLU to clone.
+fn conv_cin_slice(cfg: &ConvLayerCfg, s: usize, e: usize) -> ConvLayerCfg {
+    ConvLayerCfg {
+        plan: cshard::slice_plan_cin(&cfg.plan, s, e),
+        weights: cshard::slice_dense_weights_cin(&cfg.plan, &cfg.weights, s, e),
+        bn_scale: cfg.bn_scale.clone(),
+        bn_bias: cfg.bn_bias.clone(),
+        bn_mean: cfg.bn_mean.clone(),
+        bn_var: cfg.bn_var.clone(),
+        relu: cfg.relu,
+    }
+}
+
+fn matmul_n_slice(cfg: &MatmulCfg, w: &[f32], s: usize, e: usize) -> (MatmulCfg, Vec<f32>) {
+    (
+        MatmulCfg { plan: cfg.plan.slice_n(s, e), scale: cfg.scale, causal: cfg.causal },
+        cshard::slice_gemm_weights_n(cfg.plan.k, cfg.plan.n, w, s, e),
+    )
+}
+
+fn matmul_k_slice(cfg: &MatmulCfg, w: &[f32], s: usize, e: usize) -> (MatmulCfg, Vec<f32>) {
+    (
+        MatmulCfg { plan: cfg.plan.slice_k(s, e), scale: cfg.scale, causal: cfg.causal },
+        cshard::slice_gemm_weights_k(cfg.plan.k, cfg.plan.n, w, s, e),
+    )
+}
+
+/// The shard-`i` node list: the split kernel restricted to its `cout`
+/// range, the reduce consumer (if any) restricted to the matching
+/// contraction range, everything else replicated verbatim.
+fn shard_nodes(
+    nodes: &[Node],
+    split: usize,
+    consumer: Option<usize>,
+    (s, e): (usize, usize),
+) -> Vec<Node> {
+    nodes
+        .iter()
+        .enumerate()
+        .map(|(ni, node)| match node {
+            Node::Conv { cfg, input } if ni == split => {
+                Node::Conv { cfg: Box::new(conv_cout_slice(cfg, s, e)), input: *input }
+            }
+            Node::Matmul { cfg, weights, input } if ni == split => {
+                let (cfg, weights) = matmul_n_slice(cfg, weights, s, e);
+                Node::Matmul { cfg: Box::new(cfg), weights, input: *input }
+            }
+            Node::Conv { cfg, input } if Some(ni) == consumer => {
+                Node::Conv { cfg: Box::new(conv_cin_slice(cfg, s, e)), input: *input }
+            }
+            Node::Matmul { cfg, weights, input } if Some(ni) == consumer => {
+                let (cfg, weights) = matmul_k_slice(cfg, weights, s, e);
+                Node::Matmul { cfg: Box::new(cfg), weights, input: *input }
+            }
+            other => other.clone(),
+        })
+        .collect()
+}
+
+impl Deployment {
+    /// The degenerate whole-model deployment: one shard, the base key,
+    /// the prepared model as-is. What [`crate::serve::Server::register`]
+    /// wraps every plain registration in.
+    pub fn whole(key: ModelKey, prepared: Arc<PreparedModel>) -> Deployment {
+        let handle = ModelHandle::new(key, prepared);
+        Deployment {
+            key: Arc::clone(&handle.key),
+            plan: ShardPlan::Whole,
+            handles: vec![handle],
+        }
+    }
+
+    /// Plan and prepare a deployment for `nodes` under `cfg`. Decoder
+    /// models (`step_nodes` present) always deploy whole — KV sessions
+    /// pin entire models — and refuse an explicit shard request.
+    pub fn build(
+        key: ModelKey,
+        nodes: &[Node],
+        step_nodes: Option<&[Node]>,
+        cfg: &DeployConfig,
+    ) -> Result<Deployment> {
+        if let Some(step) = step_nodes {
+            if cfg.shards.is_some_and(|n| n >= 2) {
+                bail!("{key}: sharded decoders are unsupported (KV sessions pin whole models)");
+            }
+            let prepared = Arc::new(PreparedModel::prepare_decoder(nodes, step));
+            if let Some(budget) = cfg.worker_budget {
+                let need = prepared.bind_bytes();
+                if need > budget {
+                    bail!(
+                        "{key}: decoder bind needs {need} B but the worker budget is \
+                         {budget} B, and sharded decoders are unsupported — raise the \
+                         budget"
+                    );
+                }
+            }
+            return Ok(Deployment::whole(key, prepared));
+        }
+        let plan = plan_shards(nodes, cfg)?;
+        let ShardPlan::Sharded { split_node, consumer_node, ref slices, .. } = plan else {
+            let prepared = Arc::new(PreparedModel::prepare(nodes));
+            if let Some(budget) = cfg.worker_budget {
+                // belt over the planner's estimate: the prepared ops
+                // report their exact bind bytes, so estimator drift
+                // surfaces here as a plan-time error, never as a
+                // budgeted worker panicking at bind time
+                let need = prepared.bind_bytes();
+                if need > budget {
+                    bail!(
+                        "{key}: whole-model bind needs {need} B but the worker budget \
+                         is {budget} B (the shard planner's estimate disagreed; this \
+                         is a bug in the bind-byte estimators)"
+                    );
+                }
+            }
+            return Ok(Deployment::whole(key, prepared));
+        };
+        let n = slices.len();
+        let handles = slices
+            .iter()
+            .enumerate()
+            .map(|(i, &range)| {
+                let sub = shard_nodes(nodes, split_node, consumer_node, range);
+                ModelHandle::new(
+                    ModelKey::new(key.model.clone(), format!("{}#s{i}of{n}", key.design)),
+                    Arc::new(PreparedModel::prepare(&sub)),
+                )
+            })
+            .collect();
+        Ok(Deployment { key: Arc::new(key), plan, handles })
+    }
+
+    /// The deployment's base key (shard handles carry tagged variants).
+    pub fn key(&self) -> &Arc<ModelKey> {
+        &self.key
+    }
+
+    pub fn plan(&self) -> &ShardPlan {
+        &self.plan
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.handles.len()
+    }
+
+    pub fn is_sharded(&self) -> bool {
+        self.handles.len() > 1
+    }
+
+    /// One handle per shard (a single whole-model handle when not
+    /// sharded), in shard order.
+    pub fn handles(&self) -> &[ModelHandle] {
+        &self.handles
+    }
+
+    /// One-line plan description for logs/CLI.
+    pub fn describe(&self) -> String {
+        match &self.plan {
+            ShardPlan::Whole => format!("{}: whole (1 shard)", self.key),
+            ShardPlan::Sharded { split_node, slices, gather, .. } => format!(
+                "{}: node {split_node} cout split into {} shards {:?}, gather = {:?}",
+                self.key,
+                slices.len(),
+                slices,
+                gather
+            ),
+        }
+    }
+
+    /// Assemble shard outputs (in shard order) into the model output —
+    /// exactly what the serving gather buffer does. Concat stitches the
+    /// channel slices back together; Reduce sums the partial outputs,
+    /// which is exact because every shard's values sit on the kernel's
+    /// fixed-point accumulator grid.
+    pub fn gather_outputs(&self, parts: &[&Tensor]) -> Tensor {
+        assert_eq!(parts.len(), self.num_shards(), "{}: one part per shard", self.key);
+        match &self.plan {
+            ShardPlan::Whole => parts[0].clone(),
+            ShardPlan::Sharded { slices, gather: GatherMode::Concat, .. } => {
+                let (h, w) = (parts[0].h, parts[0].w);
+                let c_total = slices.last().expect("non-empty slices").1;
+                let mut out = Tensor::zeros(h, w, c_total);
+                for (p, &(s, e)) in parts.iter().zip(slices) {
+                    assert_eq!((p.h, p.w, p.c), (h, w, e - s), "{}: shard shape", self.key);
+                    let width = e - s;
+                    for hw in 0..h * w {
+                        out.data[hw * c_total + s..hw * c_total + e]
+                            .copy_from_slice(&p.data[hw * width..(hw + 1) * width]);
+                    }
+                }
+                out
+            }
+            ShardPlan::Sharded { gather: GatherMode::Reduce, .. } => {
+                let mut out = parts[0].clone();
+                for p in &parts[1..] {
+                    assert_eq!(
+                        (p.h, p.w, p.c),
+                        (out.h, out.w, out.c),
+                        "{}: shard shape",
+                        self.key
+                    );
+                    for (o, v) in out.data.iter_mut().zip(&p.data) {
+                        *o += v;
+                    }
+                }
+                out
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codegen::{DataFormat, LayerPlan};
+    use crate::smol::pattern_match::Assignment;
+
+    fn conv_node(name: &str, cin: usize, cout: usize, hw: usize, input: usize) -> Node {
+        Node::Conv {
+            cfg: Box::new(ConvLayerCfg {
+                plan: LayerPlan {
+                    name: name.into(),
+                    kind: LayerKind::Dense,
+                    cin,
+                    cout,
+                    kh: 1,
+                    kw: 1,
+                    stride: 1,
+                    hin: hw,
+                    win: hw,
+                    asg: Assignment::uniform(cin, 4),
+                    fmt: DataFormat::Smol,
+                },
+                weights: vec![0.25; cin * cout],
+                bn_scale: vec![],
+                bn_bias: vec![],
+                bn_mean: vec![],
+                bn_var: vec![],
+                relu: false,
+            }),
+            input,
+        }
+    }
+
+    #[test]
+    fn small_models_plan_whole() {
+        let nodes = vec![conv_node("a", 8, 16, 4, usize::MAX), conv_node("b", 16, 8, 4, 0)];
+        let plan = plan_shards(&nodes, &DeployConfig::default()).unwrap();
+        assert!(matches!(plan, ShardPlan::Whole));
+        // a generous budget also stays whole
+        let cfg = DeployConfig { worker_budget: Some(1 << 24), shards: None };
+        assert!(matches!(plan_shards(&nodes, &cfg).unwrap(), ShardPlan::Whole));
+    }
+
+    #[test]
+    fn explicit_shards_split_the_widest_layer() {
+        let nodes = vec![
+            conv_node("narrow", 8, 16, 4, usize::MAX),
+            conv_node("wide", 16, 100, 4, 0),
+            conv_node("fc", 100, 10, 4, 1),
+        ];
+        let cfg = DeployConfig { worker_budget: None, shards: Some(3) };
+        let plan = plan_shards(&nodes, &cfg).unwrap();
+        let ShardPlan::Sharded { split_node, consumer_node, slices, gather } = plan else {
+            panic!("expected a sharded plan");
+        };
+        assert_eq!((split_node, consumer_node), (1, Some(2)));
+        assert_eq!(slices, vec![(0, 34), (34, 67), (67, 100)]);
+        assert_eq!(gather, GatherMode::Reduce);
+    }
+
+    #[test]
+    fn final_wide_layer_gathers_by_concat() {
+        let nodes = vec![conv_node("stem", 8, 16, 4, usize::MAX), conv_node("wide", 16, 64, 4, 0)];
+        let cfg = DeployConfig { worker_budget: None, shards: Some(2) };
+        let plan = plan_shards(&nodes, &cfg).unwrap();
+        let ShardPlan::Sharded { gather, consumer_node, .. } = plan else {
+            panic!("expected a sharded plan");
+        };
+        assert_eq!(gather, GatherMode::Concat);
+        assert_eq!(consumer_node, None);
+    }
+
+    #[test]
+    fn budget_drives_the_shard_count() {
+        let nodes = vec![
+            conv_node("narrow", 8, 16, 4, usize::MAX),
+            conv_node("wide", 16, 96, 4, 0),
+            conv_node("fc", 96, 10, 1, 1),
+        ];
+        let whole: usize = nodes.iter().map(node_bind_bytes).sum();
+        let cfg = DeployConfig { worker_budget: Some(whole * 3 / 4), shards: None };
+        let plan = plan_shards(&nodes, &cfg).unwrap();
+        let n = plan.num_shards();
+        assert!(n >= 2, "must shard under a {} B budget", whole * 3 / 4);
+        // every planned shard fits
+        let ShardPlan::Sharded { split_node, consumer_node, slices, .. } = plan else {
+            unreachable!()
+        };
+        let replicated: usize = nodes
+            .iter()
+            .enumerate()
+            .filter(|&(i, _)| i != split_node && Some(i) != consumer_node)
+            .map(|(_, n)| node_bind_bytes(n))
+            .sum();
+        for &r in &slices {
+            let mut bytes = replicated + sliced_split_bytes(&nodes[split_node], r);
+            if let Some(c) = consumer_node {
+                bytes += sliced_consumer_bytes(&nodes[c], r);
+            }
+            assert!(bytes <= whole * 3 / 4, "shard {r:?} exceeds the budget");
+        }
+    }
+
+    #[test]
+    fn explicit_shards_must_fit_a_given_budget() {
+        // an explicit --shards that cannot fit the budget is refused at
+        // plan time with a descriptive error, not left to panic a
+        // worker at bind time
+        let nodes = vec![conv_node("wide", 16, 96, 4, usize::MAX)];
+        let budget = node_bind_bytes(&nodes[0]) / 4;
+        let cfg = DeployConfig { worker_budget: Some(budget), shards: Some(2) };
+        let err = plan_shards(&nodes, &cfg).unwrap_err();
+        assert!(format!("{err}").contains("worker budget"), "{err}");
+        // the same shard count without a budget plans fine
+        let cfg = DeployConfig { worker_budget: None, shards: Some(2) };
+        assert!(plan_shards(&nodes, &cfg).is_ok());
+    }
+
+    #[test]
+    fn unshardable_shapes_refuse_with_an_error() {
+        // mid-graph consumer that is neither channel-aligned nor final
+        let nodes = vec![
+            conv_node("wide", 8, 64, 4, usize::MAX),
+            Node::Softmax { x: 0 },
+            conv_node("fc", 64, 10, 4, 1),
+        ];
+        let cfg = DeployConfig { worker_budget: None, shards: Some(2) };
+        assert!(plan_shards(&nodes, &cfg).is_err());
+    }
+}

@@ -19,7 +19,7 @@
 //! the one-shot `run_conv` mode). Both share staging and epilogue, so
 //! their outputs and stats match exactly.
 
-use crate::codegen::gemm::{emit_gemm, emit_gemm_causal};
+use crate::codegen::gemm::{emit_gemm, emit_gemm_causal, GemmPlan};
 use crate::codegen::{self, pack, LayerBufs, LayerKind, LayerPlan};
 use crate::serve::session::{CachedAttnOp, CausalAvOp, SessionState};
 use crate::serve::{ModelHandle, ModelKey};
@@ -81,6 +81,14 @@ pub trait PreparedOp: std::fmt::Debug + Send + Sync {
         None
     }
 
+    /// Machine buffer bytes [`bind`](Self::bind) allocates (0 for ops
+    /// with no machine state). Kept exactly in sync with each op's
+    /// `bind` so budgeted machines can evict LRU models *before* an
+    /// allocation would overflow the buffer budget.
+    fn bind_bytes(&self) -> usize {
+        0
+    }
+
     /// Execute against resolved input tensors, returning the output.
     /// Simulated-cost accounting accumulates on `ctx.m`; the graph
     /// runner collects it per node via `take_stats`.
@@ -137,6 +145,31 @@ fn retarget(prog: &[Instr], bufs: &LayerBufs) -> Vec<Instr> {
             other => other,
         })
         .collect()
+}
+
+/// Machine bytes [`PreparedConv::bind`] allocates for `plan` (input +
+/// weights + out + masks buffers). Pure plan arithmetic — the shard
+/// planner sizes candidate deployments against the per-worker buffer
+/// budget with it, without packing any weights. Weight bytes come from
+/// the same [`pack::packed_cout_row_bytes`] the pack layout and shard
+/// slicer use, so estimate and layout cannot drift apart.
+pub fn conv_bind_bytes(plan: &LayerPlan) -> usize {
+    let (act_bytes, _, out_bytes) = layer_sizes(plan);
+    let row = pack::packed_cout_row_bytes(plan);
+    let weight_bytes = match plan.kind {
+        LayerKind::Dense => plan.cout * row,
+        LayerKind::Depthwise => row,
+    };
+    act_bytes + weight_bytes + out_bytes + plan.chunks().len().max(1) * 16
+}
+
+/// Machine bytes [`PreparedMatmul::bind`] allocates for `plan` (same
+/// role as [`conv_bind_bytes`] for GEMM nodes).
+pub fn matmul_bind_bytes(plan: &GemmPlan) -> usize {
+    let lp = plan.layer_plan();
+    let (act_bytes, _, out_bytes) = layer_sizes(&lp);
+    let weight_bytes = lp.cout * pack::packed_cout_row_bytes(&lp);
+    act_bytes + weight_bytes + out_bytes + lp.chunks().len().max(1) * 16
 }
 
 /// Number of in-bounds taps for output position (h, w).
@@ -348,6 +381,10 @@ impl PreparedOp for PreparedConv {
         Some(BoundKernel { bufs, program })
     }
 
+    fn bind_bytes(&self) -> usize {
+        self.act_bytes + self.packed_weights.len() + self.out_bytes + self.packed_masks.len()
+    }
+
     fn run(&self, ctx: &mut ExecCtx<'_>, inputs: &[&Tensor]) -> Tensor {
         let x = inputs[0];
         let plan = &self.plan;
@@ -486,6 +523,10 @@ impl PreparedOp for PreparedMatmul {
         m.write_bytes(bufs.masks, 0, &self.packed_masks);
         let program = retarget(&self.program, &bufs);
         Some(BoundKernel { bufs, program })
+    }
+
+    fn bind_bytes(&self) -> usize {
+        self.act_bytes + self.weight_bytes + self.out_bytes + self.packed_masks.len()
     }
 
     /// Execute the GEMM, batched over the `h` (head) axis of the first
@@ -847,49 +888,42 @@ fn prepare_nodes(nodes: &[Node]) -> (Vec<PreparedNode>, usize) {
     let prepared = nodes
         .iter()
         .map(|n| {
-            let (op, inputs): (Box<dyn PreparedOp>, Vec<usize>) = match n {
-                Node::Conv { cfg, input } => {
-                    (Box::new(PreparedConv::prepare(cfg)), vec![*input])
+            let op: Box<dyn PreparedOp> = match n {
+                Node::Conv { cfg, .. } => Box::new(PreparedConv::prepare(cfg)),
+                Node::Matmul { cfg, weights, .. } => {
+                    Box::new(PreparedMatmul::prepare_static(cfg, weights))
                 }
-                Node::Matmul { cfg, weights, input } => {
-                    (Box::new(PreparedMatmul::prepare_static(cfg, weights)), vec![*input])
-                }
-                Node::MatmulDyn { cfg, a, b, transpose_b } => {
+                Node::MatmulDyn { cfg, transpose_b, .. } => {
                     if cfg.causal && !*transpose_b {
                         // causal A·V: per-row growing contraction — the
                         // one-shot twin of the KV-cached decode step
-                        (Box::new(CausalAvOp::prepare(cfg)), vec![*a, *b])
+                        Box::new(CausalAvOp::prepare(cfg))
                     } else {
-                        (Box::new(PreparedMatmul::prepare_dyn(cfg, *transpose_b)), vec![*a, *b])
+                        Box::new(PreparedMatmul::prepare_dyn(cfg, *transpose_b))
                     }
                 }
-                Node::CachedAttn { cfg, q, k, v } => {
+                Node::CachedAttn { cfg, .. } => {
                     let op = CachedAttnOp::prepare(cfg, slots);
                     slots += 1;
-                    (Box::new(op), vec![*q, *k, *v])
+                    Box::new(op)
                 }
-                Node::Softmax { x } => (Box::new(SoftmaxOp), vec![*x]),
-                Node::LayerNorm { x, gamma, beta } => (
-                    Box::new(LayerNormOp { gamma: gamma.clone(), beta: beta.clone() }),
-                    vec![*x],
-                ),
-                Node::Gelu { x } => (Box::new(GeluOp), vec![*x]),
-                Node::TransposeHW { x } => (Box::new(TransposeHWOp), vec![*x]),
-                Node::SplitHeads { x, heads } => {
-                    (Box::new(SplitHeadsOp { heads: *heads }), vec![*x])
+                Node::Softmax { .. } => Box::new(SoftmaxOp),
+                Node::LayerNorm { gamma, beta, .. } => {
+                    Box::new(LayerNormOp { gamma: gamma.clone(), beta: beta.clone() })
                 }
-                Node::MergeHeads { x } => (Box::new(MergeHeadsOp), vec![*x]),
-                Node::Add { a, b, relu } => (Box::new(AddOp { relu: *relu }), vec![*a, *b]),
-                Node::ConcatC { a, b } => (Box::new(ConcatCOp), vec![*a, *b]),
-                Node::SliceC { x, from, to } => {
-                    (Box::new(SliceCOp { from: *from, to: *to }), vec![*x])
-                }
-                Node::ShuffleC { x, groups } => {
-                    (Box::new(ShuffleCOp { groups: *groups }), vec![*x])
-                }
-                Node::Gap { x } => (Box::new(GapOp), vec![*x]),
+                Node::Gelu { .. } => Box::new(GeluOp),
+                Node::TransposeHW { .. } => Box::new(TransposeHWOp),
+                Node::SplitHeads { heads, .. } => Box::new(SplitHeadsOp { heads: *heads }),
+                Node::MergeHeads { .. } => Box::new(MergeHeadsOp),
+                Node::Add { relu, .. } => Box::new(AddOp { relu: *relu }),
+                Node::ConcatC { .. } => Box::new(ConcatCOp),
+                Node::SliceC { from, to, .. } => Box::new(SliceCOp { from: *from, to: *to }),
+                Node::ShuffleC { groups, .. } => Box::new(ShuffleCOp { groups: *groups }),
+                Node::Gap { .. } => Box::new(GapOp),
             };
-            PreparedNode { op, inputs }
+            // input wiring comes from the shared Node::inputs so the
+            // executor and the shard planner read one dataflow graph
+            PreparedNode { op, inputs: n.inputs() }
         })
         .collect();
     (prepared, slots)
@@ -952,6 +986,14 @@ impl PreparedModel {
     pub fn num_layers(&self) -> usize {
         self.nodes.iter().filter(|n| n.op.name().is_some()).count()
     }
+
+    /// Machine buffer bytes binding this model allocates (full + step
+    /// graphs) — what a budget-capped worker must have free to host it,
+    /// and what capacity-driven LRU eviction makes room for.
+    pub fn bind_bytes(&self) -> usize {
+        let step = self.step.iter().flat_map(|s| s.nodes.iter());
+        self.nodes.iter().chain(step).map(|n| n.op.bind_bytes()).sum()
+    }
 }
 
 fn node_input<'a>(outputs: &'a [Tensor], input: &'a Tensor, id: usize) -> &'a Tensor {
@@ -990,7 +1032,7 @@ fn run_graph(
         let stats = m.take_stats();
         total.merge(&stats);
         if let Some(name) = node.op.name() {
-            layers.push(LayerStat { name: name.to_string(), stats });
+            layers.push(LayerStat { name: name.to_string(), shard: None, stats });
         }
         outputs.push(out);
     }
@@ -1046,8 +1088,20 @@ impl EngineMachine {
     /// [`run_model`](Self::run_model) / [`bind_model`](Self::bind_model)
     /// and at most `budget` stay resident (LRU-evicted beyond that).
     pub fn with_budget(budget: usize) -> EngineMachine {
+        EngineMachine::with_limits(budget, None)
+    }
+
+    /// [`with_budget`](Self::with_budget) plus a machine buffer budget
+    /// in bytes: binding a model whose buffers do not fit panics (see
+    /// [`Machine::with_capacity`]) — a shard-scoped deployment
+    /// ([`crate::serve::Deployment`]) is how an over-wide model serves
+    /// on budgeted workers.
+    pub fn with_limits(budget: usize, buffer_bytes: Option<usize>) -> EngineMachine {
         EngineMachine {
-            m: Machine::new(),
+            m: match buffer_bytes {
+                Some(b) => Machine::with_capacity(b),
+                None => Machine::new(),
+            },
             scratch: WorkerScratch::default(),
             resident: HashMap::new(),
             tick: 0,
@@ -1074,7 +1128,9 @@ impl EngineMachine {
     /// Make `handle`'s model resident: allocate its buffers and write
     /// its weights/masks (full + step graph) unless already bound, and
     /// stamp it most-recently-used. Evicts LRU models first if the
-    /// resident budget would be exceeded.
+    /// resident-count budget — or, on a buffer-capacity machine, the
+    /// byte budget — would be exceeded; only a model that does not fit
+    /// an *empty* machine still panics the capacity assert.
     pub fn bind_model(&mut self, handle: &ModelHandle) {
         self.tick += 1;
         let tick = self.tick;
@@ -1083,14 +1139,18 @@ impl EngineMachine {
             return;
         }
         while self.resident.len() >= self.budget {
-            let lru = self
-                .resident
-                .iter()
-                .min_by_key(|(_, r)| r.last_used)
-                .map(|(k, _)| k.clone());
-            match lru {
+            match self.lru_key() {
                 Some(k) => self.evict_model(&k),
                 None => break,
+            }
+        }
+        if let Some(cap) = self.m.capacity() {
+            let need = handle.prepared.bind_bytes();
+            while self.m.resident_bytes() + need > cap {
+                match self.lru_key() {
+                    Some(k) => self.evict_model(&k),
+                    None => break, // nothing left to evict: alloc enforces
+                }
             }
         }
         let bound: Vec<Option<BoundKernel>> =
@@ -1108,6 +1168,11 @@ impl EngineMachine {
                 last_used: tick,
             },
         );
+    }
+
+    /// Key of the least-recently-used resident model, if any.
+    fn lru_key(&self) -> Option<ModelKey> {
+        self.resident.iter().min_by_key(|(_, r)| r.last_used).map(|(k, _)| k.clone())
     }
 
     /// Unbind a resident model, freeing every machine buffer its bind

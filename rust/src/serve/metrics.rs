@@ -20,13 +20,24 @@ use crate::util::json::Json;
 use std::collections::{BTreeMap, HashMap, HashSet};
 use std::time::Duration;
 
+/// JSON schema version of [`ServeReport::to_json`]. Bumped to 2 when
+/// per-layer rows gained the `shard` dimension (sharded deployments
+/// attribute cycles/energy per `(model, layer, shard)`); bench tooling
+/// asserts it instead of guessing from row shapes.
+pub const SERVE_REPORT_SCHEMA: u64 = 2;
+
 /// Aggregated simulated cost of one model's layer across all served
-/// requests. Keyed by `(model, name)`: layer names repeat across models.
+/// requests. Keyed by `(model, name, shard)`: layer names repeat across
+/// models, and a sharded deployment runs the same layer name on every
+/// shard.
 #[derive(Debug, Clone)]
 pub struct LayerAgg {
     /// the owning model (`ModelKey` display form, `model/design`)
     pub model: String,
     pub name: String,
+    /// which shard of a sharded deployment ran the layer (`None` =
+    /// whole-model execution)
+    pub shard: Option<usize>,
     pub cycles: u64,
     pub energy_pj: f64,
 }
@@ -113,9 +124,10 @@ pub fn summarize(completions: &[Completion], wall: Duration, setup: SetupTiming)
 
     let mut sim = RunStats::default();
     let mut batch_ids: HashSet<u64> = HashSet::new();
-    // per-(model, layer), first-seen order
-    let mut layer_order: Vec<(String, String)> = Vec::new();
-    let mut layer_agg: HashMap<(String, String), (u64, f64)> = HashMap::new();
+    // per-(model, layer, shard), first-seen order
+    type LayerKey = (String, String, Option<usize>);
+    let mut layer_order: Vec<LayerKey> = Vec::new();
+    let mut layer_agg: HashMap<LayerKey, (u64, f64)> = HashMap::new();
     // per-model, first-seen order
     let mut model_order: Vec<String> = Vec::new();
     let mut model_agg: HashMap<String, (usize, u64, f64)> = HashMap::new();
@@ -131,7 +143,7 @@ pub fn summarize(completions: &[Completion], wall: Duration, setup: SetupTiming)
         me.1 += c.total.cycles();
         me.2 += c.total.energy_pj;
         for l in &c.per_layer {
-            let key = (model.clone(), l.name.clone());
+            let key = (model.clone(), l.name.clone(), l.shard);
             if !layer_agg.contains_key(&key) {
                 layer_order.push(key.clone());
             }
@@ -145,8 +157,8 @@ pub fn summarize(completions: &[Completion], wall: Duration, setup: SetupTiming)
         .into_iter()
         .map(|key| {
             let &(cycles, energy_pj) = &layer_agg[&key];
-            let (model, name) = key;
-            LayerAgg { model, name, cycles, energy_pj }
+            let (model, name, shard) = key;
+            LayerAgg { model, name, shard, cycles, energy_pj }
         })
         .collect();
     let wall_s = wall.as_secs_f64().max(1e-9);
@@ -207,6 +219,7 @@ impl ServeReport {
     /// Serialize for dashboards / regression tracking.
     pub fn to_json(&self) -> Json {
         let mut o: BTreeMap<String, Json> = BTreeMap::new();
+        o.insert("schema".into(), num(SERVE_REPORT_SCHEMA as f64));
         o.insert("requests".into(), num(self.requests as f64));
         o.insert("batches".into(), num(self.batches as f64));
         o.insert("mean_batch_size".into(), num(self.mean_batch_size));
@@ -243,6 +256,13 @@ impl ServeReport {
                 let mut lo: BTreeMap<String, Json> = BTreeMap::new();
                 lo.insert("model".into(), Json::Str(l.model.clone()));
                 lo.insert("name".into(), Json::Str(l.name.clone()));
+                lo.insert(
+                    "shard".into(),
+                    match l.shard {
+                        Some(s) => num(s as f64),
+                        None => Json::Null,
+                    },
+                );
                 lo.insert("cycles".into(), num(l.cycles as f64));
                 lo.insert("energy_pj".into(), num(l.energy_pj));
                 Json::Obj(lo)

@@ -17,6 +17,15 @@
 //! under a configurable resident-model budget), and reports aggregate
 //! per `(model, layer)`.
 //!
+//! Models wider than one machine deploy **sharded**: a [`Deployment`]
+//! ([`deploy`]) owns a [`ShardPlan`] splitting the widest layer's
+//! `cout` range across per-worker shards, requests scatter to each
+//! shard's pinned worker and gather (concat or exact fixed-point
+//! reduce) before completion, bit-identical to the whole-model run,
+//! with per-shard cycles/energy reported under `(model, layer, shard)`.
+//! `ShardPlan::Whole` is the degenerate single-worker case, so plain
+//! registrations are unchanged.
+//!
 //! Decoder models additionally serve **autoregressive decode**: a
 //! [`workers::Server`] session ([`workers::Server::open_session`] /
 //! [`workers::Server::submit_step`]) owns growable packed K/V operand
@@ -31,17 +40,21 @@
 //! KV-cache comparison) for the end-to-end numbers.
 
 pub mod batcher;
+pub mod deploy;
 pub mod engine;
 pub mod metrics;
 pub mod session;
 pub mod workers;
 
 pub use batcher::{Batch, BatchConfig, DynamicBatcher, Payload, Request};
+pub use deploy::{DeployConfig, Deployment, GatherMode, ShardPlan};
 pub use engine::{
     BoundKernel, EngineMachine, ExecCtx, PreparedConv, PreparedMatmul, PreparedModel,
     PreparedNode, PreparedOp, StepModel, WorkerScratch,
 };
-pub use metrics::{percentile, summarize, LayerAgg, ModelAgg, ServeReport, SetupTiming};
+pub use metrics::{
+    percentile, summarize, LayerAgg, ModelAgg, ServeReport, SetupTiming, SERVE_REPORT_SCHEMA,
+};
 pub use session::SessionState;
 pub use workers::{Completion, ServeConfig, Server, SessionId};
 

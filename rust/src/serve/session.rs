@@ -164,6 +164,20 @@ pub struct CachedAttnOp {
 }
 
 impl CachedAttnOp {
+    /// (input, weights, out, masks) buffer bytes [`PreparedOp::bind`]
+    /// allocates — one place, so `bind` and `bind_bytes` cannot drift.
+    fn buf_bytes(&self) -> (usize, usize, usize, usize) {
+        let cap = Pattern::uniform(self.pos_prec).capacity() as usize;
+        let nch_pos = self.max_positions.div_ceil(cap);
+        let nch_max = self.nch_dh.max(nch_pos);
+        (
+            16 * nch_max,
+            16 * (self.max_positions * self.nch_dh).max(self.dh * nch_pos),
+            (4 * self.max_positions.max(self.dh)).max(16 * nch_max),
+            16 * nch_max,
+        )
+    }
+
     pub fn prepare(cfg: &AttnCfg, slot: usize) -> CachedAttnOp {
         assert_eq!(cfg.fmt, DataFormat::Smol, "{}: cached decode needs SMOL operands", cfg.name);
         assert_eq!(cfg.dh_asg.num_channels(), cfg.dh, "{}: dh assignment size", cfg.name);
@@ -198,16 +212,19 @@ impl PreparedOp for CachedAttnOp {
     /// Buffers sized once for `max_positions`, shared by the score and
     /// context GEMMs of every session on this worker.
     fn bind(&self, m: &mut Machine) -> Option<BoundKernel> {
-        let cap = Pattern::uniform(self.pos_prec).capacity() as usize;
-        let nch_pos = self.max_positions.div_ceil(cap);
-        let nch_max = self.nch_dh.max(nch_pos);
+        let (input, weights, out, masks) = self.buf_bytes();
         let bufs = LayerBufs {
-            input: m.alloc(16 * nch_max),
-            weights: m.alloc(16 * (self.max_positions * self.nch_dh).max(self.dh * nch_pos)),
-            out: m.alloc((4 * self.max_positions.max(self.dh)).max(16 * nch_max)),
-            masks: m.alloc(16 * nch_max),
+            input: m.alloc(input),
+            weights: m.alloc(weights),
+            out: m.alloc(out),
+            masks: m.alloc(masks),
         };
         Some(BoundKernel { bufs, program: Vec::new() })
+    }
+
+    fn bind_bytes(&self) -> usize {
+        let (input, weights, out, masks) = self.buf_bytes();
+        input + weights + out + masks
     }
 
     fn run(&self, ctx: &mut ExecCtx<'_>, inputs: &[&Tensor]) -> Tensor {
@@ -369,21 +386,35 @@ impl CausalAvOp {
     }
 }
 
+impl CausalAvOp {
+    /// (input, weights, out, masks) buffer bytes [`PreparedOp::bind`]
+    /// allocates — one place, so `bind` and `bind_bytes` cannot drift.
+    fn buf_bytes(&self) -> (usize, usize, usize, usize) {
+        let cap = Pattern::uniform(self.pos_prec).capacity() as usize;
+        let nch = self.s.div_ceil(cap);
+        (16 * nch, 16 * self.dh * nch, (4 * self.dh).max(16 * nch), 16 * nch)
+    }
+}
+
 impl PreparedOp for CausalAvOp {
     fn name(&self) -> Option<&str> {
         Some(&self.name)
     }
 
     fn bind(&self, m: &mut Machine) -> Option<BoundKernel> {
-        let cap = Pattern::uniform(self.pos_prec).capacity() as usize;
-        let nch = self.s.div_ceil(cap);
+        let (input, weights, out, masks) = self.buf_bytes();
         let bufs = LayerBufs {
-            input: m.alloc(16 * nch),
-            weights: m.alloc(16 * self.dh * nch),
-            out: m.alloc((4 * self.dh).max(16 * nch)),
-            masks: m.alloc(16 * nch),
+            input: m.alloc(input),
+            weights: m.alloc(weights),
+            out: m.alloc(out),
+            masks: m.alloc(masks),
         };
         Some(BoundKernel { bufs, program: Vec::new() })
+    }
+
+    fn bind_bytes(&self) -> usize {
+        let (input, weights, out, masks) = self.buf_bytes();
+        input + weights + out + masks
     }
 
     fn run(&self, ctx: &mut ExecCtx<'_>, inputs: &[&Tensor]) -> Tensor {

@@ -26,8 +26,22 @@
 //! then index), so long-lived heavy sessions spread instead of piling
 //! onto one machine. Stateless batches stay work-stealable through the
 //! shared FIFO.
+//!
+//! Sharded placement and scatter/gather: models route through
+//! [`crate::serve::Deployment`]s. A whole-model deployment behaves
+//! exactly like the PR-4 path; a *sharded* one pins each shard to a
+//! worker at [`Server::deploy`] time, and every submitted request fans
+//! out as one pinned sub-request per shard (all sharing the logical
+//! request id). Workers execute shards like any other model — the
+//! shard-tagged keys keep their bind tables distinct — and the server's
+//! [`GatherBuffer`] reassembles the partial completions on the drain
+//! path: `cout` slices concatenate, contraction-split partials reduce
+//! (exactly — fixed-point grid), per-shard cycles/energy survive as
+//! shard-tagged layer stats, and the caller sees ONE completion whose
+//! output is bit-identical to the whole-model run.
 
 use crate::serve::batcher::{Batch, BatchConfig, DynamicBatcher, Payload, Request};
+use crate::serve::deploy::Deployment;
 use crate::serve::engine::{EngineMachine, PreparedModel};
 use crate::serve::{ModelHandle, ModelKey};
 use crate::sim::machine::RunStats;
@@ -48,11 +62,22 @@ pub struct ServeConfig {
     /// this many models bound, evicting the least-recently-used beyond
     /// it (`usize::MAX` = never evict)
     pub resident_models: usize,
+    /// per-worker machine buffer budget in bytes: binding a model whose
+    /// buffers exceed it panics the worker, so models wider than one
+    /// machine must be deployed sharded ([`Server::deploy`] with a
+    /// matching [`crate::serve::DeployConfig::worker_budget`]); `None` =
+    /// unlimited
+    pub worker_budget: Option<usize>,
 }
 
 impl Default for ServeConfig {
     fn default() -> Self {
-        ServeConfig { workers: 4, batch: BatchConfig::default(), resident_models: usize::MAX }
+        ServeConfig {
+            workers: 4,
+            batch: BatchConfig::default(),
+            resident_models: usize::MAX,
+            worker_budget: None,
+        }
     }
 }
 
@@ -72,12 +97,18 @@ pub struct Completion {
     pub batch_id: u64,
     /// size of that batch
     pub batch_size: usize,
-    /// enqueue-to-completion latency
+    /// enqueue-to-completion latency (sharded: the slowest shard's)
     pub latency: Duration,
     /// the session this completion belongs to (`None` = stateless)
     pub session: Option<u64>,
+    /// which shard produced this completion. `Some` only on the raw
+    /// partial completions inside the gather path; completions handed
+    /// to callers are always gathered (`None`), with per-shard stats
+    /// surviving as [`LayerStat::shard`] tags in `per_layer`.
+    pub shard: Option<usize>,
     pub output: Tensor,
-    /// simulated-hardware totals for this inference
+    /// simulated-hardware totals for this inference (sharded: merged
+    /// over every shard)
     pub total: RunStats,
     pub per_layer: Vec<LayerStat>,
 }
@@ -169,7 +200,107 @@ struct SessionMeta {
     kv_bytes_per_step: u64,
 }
 
-/// A running serving instance: one worker pool serving every model
+/// A deployed model inside a pool: the deployment plus the worker each
+/// shard is pinned to (empty for whole-model deployments, whose
+/// requests stay work-stealable). Cloning is two `Arc` bumps — entries
+/// are cloned per submit on the serving hot path.
+#[derive(Clone)]
+struct DeployEntry {
+    dep: Arc<Deployment>,
+    /// `workers[i]` = worker shard `i` is pinned to
+    workers: Arc<[usize]>,
+}
+
+/// Reassembles sharded partial completions on the server's drain path.
+/// Keyed by logical request id; an entry completes once every shard's
+/// partial has arrived, producing the single gathered [`Completion`]
+/// callers see.
+#[derive(Default)]
+struct GatherBuffer {
+    pending: HashMap<u64, GatherState>,
+}
+
+struct GatherState {
+    dep: Arc<Deployment>,
+    parts: Vec<Option<Completion>>,
+}
+
+impl GatherBuffer {
+    fn expect(&mut self, id: u64, dep: Arc<Deployment>) {
+        let parts = (0..dep.num_shards()).map(|_| None).collect();
+        let prev = self.pending.insert(id, GatherState { dep, parts });
+        assert!(prev.is_none(), "request id {id} already awaiting gather");
+    }
+
+    /// Feed one raw completion through the buffer: whole-model
+    /// completions pass straight through; shard partials accumulate
+    /// until their logical request is complete, then emerge gathered.
+    fn absorb(&mut self, c: Completion) -> Option<Completion> {
+        let Some(shard) = c.shard else {
+            return Some(c);
+        };
+        let id = c.id;
+        let st = self
+            .pending
+            .get_mut(&id)
+            .unwrap_or_else(|| panic!("no gather entry for sharded completion {id}"));
+        assert!(st.parts[shard].is_none(), "duplicate completion for request {id} shard {shard}");
+        st.parts[shard] = Some(c);
+        if st.parts.iter().any(Option::is_none) {
+            return None;
+        }
+        let st = self.pending.remove(&id).expect("entry exists");
+        let parts: Vec<Completion> = st.parts.into_iter().map(Option::unwrap).collect();
+        Some(gather_completion(&st.dep, parts))
+    }
+
+    fn is_empty(&self) -> bool {
+        self.pending.is_empty()
+    }
+}
+
+/// Combine one logical request's shard partials (in shard order) into
+/// the completion callers see: outputs assemble via
+/// [`Deployment::gather_outputs`] (concat or exact reduce), simulated
+/// totals merge, latency is the slowest shard's, and every layer stat
+/// is tagged with its shard for `(model, layer, shard)` reporting.
+fn gather_completion(dep: &Arc<Deployment>, mut parts: Vec<Completion>) -> Completion {
+    let output = {
+        let outputs: Vec<&Tensor> = parts.iter().map(|c| &c.output).collect();
+        dep.gather_outputs(&outputs)
+    };
+    let mut total = RunStats::default();
+    let mut per_layer = Vec::new();
+    let mut latency = Duration::ZERO;
+    for (i, c) in parts.iter_mut().enumerate() {
+        total.merge(&c.total);
+        latency = latency.max(c.latency);
+        for mut l in c.per_layer.drain(..) {
+            l.shard = Some(i);
+            per_layer.push(l);
+        }
+    }
+    // batching stats come from shard 0's lane: every logical request has
+    // exactly one shard-0 sub-request, so its batches partition the
+    // logical requests and the report's distinct-batch count / mean
+    // batch size stay coherent (a max over shards would correspond to
+    // neither the logical nor any physical batching)
+    Completion {
+        id: parts[0].id,
+        model: Arc::clone(dep.key()),
+        worker: parts[0].worker,
+        batch_id: parts[0].batch_id,
+        batch_size: parts[0].batch_size,
+        latency,
+        session: None,
+        shard: None,
+        output,
+        total,
+        per_layer,
+    }
+}
+
+/// A running serving instance: one worker pool serving every deployment
 /// registered with it (or just the one it was [`start`](Self::start)ed
 /// with).
 pub struct Server {
@@ -180,10 +311,16 @@ pub struct Server {
     next_id: u64,
     next_session: u64,
     n_workers: usize,
-    /// the model `submit`/`open_session` address (single-model form)
-    default_model: Option<ModelHandle>,
-    /// models addressable by key via `submit_model`/`open_session_on`
-    registered: HashMap<ModelKey, ModelHandle>,
+    /// the per-worker machine buffer budget the pool was spawned with
+    /// (deployments with more shards than workers are refused under it:
+    /// shard plans size each shard for a machine of its own)
+    worker_budget: Option<usize>,
+    /// the deployment `submit`/`open_session` address (single-model form)
+    default_model: Option<DeployEntry>,
+    /// deployments addressable by key via `submit_model`/`open_session_on`
+    registered: HashMap<ModelKey, DeployEntry>,
+    /// reassembles sharded partial completions on the drain path
+    gather: GatherBuffer,
     /// open sessions; an id absent here (but below `next_session`) is
     /// closed, and a step for it is rejected in the caller's thread
     sessions: HashMap<u64, SessionMeta>,
@@ -215,12 +352,83 @@ impl Server {
     /// [`start`](Self::start) with an explicit key, so completions and
     /// reports carry the real model identity instead of `default`.
     pub fn start_named(key: ModelKey, model: Arc<PreparedModel>, cfg: &ServeConfig) -> Server {
-        Server::spawn(Some(ModelHandle::new(key, model)), cfg)
+        Server::start_deployment(Arc::new(Deployment::whole(key, model)), cfg)
     }
 
-    fn spawn(default_model: Option<ModelHandle>, cfg: &ServeConfig) -> Server {
+    /// Spawn the pool around one [`Deployment`] as the default model:
+    /// whole deployments bind eagerly on every worker (the classic
+    /// single-model form), sharded ones bind each shard eagerly on its
+    /// pinned worker, and `submit` scatter/gathers across them.
+    pub fn start_deployment(dep: Arc<Deployment>, cfg: &ServeConfig) -> Server {
+        Server::spawn(Some(dep), cfg)
+    }
+
+    /// Worker assignment for a deployment's shards: shard `i` pins to
+    /// worker `(i + offset) % n_workers`, the offset staggering
+    /// successive deployments so their shard-0 hot spots spread.
+    fn assign_shards(dep: &Deployment, n_workers: usize, offset: usize) -> Arc<[usize]> {
+        if !dep.is_sharded() {
+            return Arc::from(Vec::new());
+        }
+        (0..dep.num_shards()).map(|i| (i + offset) % n_workers).collect()
+    }
+
+    /// Under a worker buffer budget, refuse at placement time — in the
+    /// caller's thread — anything that could trip a worker machine's
+    /// capacity assert mid-serve: more shards than workers (a shard
+    /// plan sizes every shard for a machine of its own), or any
+    /// (sub)model whose *exact* bind footprint exceeds the budget (e.g.
+    /// a deployment planned under a different budget than the pool's,
+    /// or a whole model registered into a budgeted pool that it can
+    /// never fit). The CLI mirrors the shards-vs-workers rule with a
+    /// `bail!` for a friendlier message.
+    fn check_budget(dep: &Deployment, n_workers: usize, budget: Option<usize>) {
+        let Some(b) = budget else {
+            return;
+        };
+        assert!(
+            dep.num_shards() <= n_workers,
+            "deployment {} has {} shards but the pool has {n_workers} worker(s) under \
+             a {b} B buffer budget; co-resident shards could exceed it — add workers \
+             or raise the budget",
+            dep.key(),
+            dep.num_shards()
+        );
+        for (i, h) in dep.handles().iter().enumerate() {
+            let need = h.prepared.bind_bytes();
+            assert!(
+                need <= b,
+                "deployment {}: shard {i} binds {need} B but the pool's worker budget \
+                 is {b} B (was the deployment planned under a different budget?)",
+                dep.key()
+            );
+        }
+    }
+
+    fn spawn(default: Option<Arc<Deployment>>, cfg: &ServeConfig) -> Server {
         let n_workers = cfg.workers.max(1);
         let resident_models = cfg.resident_models.max(1);
+        let worker_budget = cfg.worker_budget;
+        let default_model = default.map(|dep| DeployEntry {
+            workers: Server::assign_shards(&dep, n_workers, 0),
+            dep,
+        });
+        if let Some(entry) = &default_model {
+            Server::check_budget(&entry.dep, n_workers, worker_budget);
+        }
+        // the handles each worker binds eagerly at startup
+        let mut eager: Vec<Vec<ModelHandle>> = vec![Vec::new(); n_workers];
+        if let Some(entry) = &default_model {
+            if entry.dep.is_sharded() {
+                for (i, h) in entry.dep.handles().iter().enumerate() {
+                    eager[entry.workers[i]].push(h.clone());
+                }
+            } else {
+                for w in eager.iter_mut() {
+                    w.push(entry.dep.handles()[0].clone());
+                }
+            }
+        }
         let (submit_tx, submit_rx) = mpsc::channel::<Request>();
         let (result_tx, result_rx) = mpsc::channel::<Completion>();
         let queue = Arc::new(DispatchQueue::new(n_workers));
@@ -270,14 +478,14 @@ impl Server {
 
         let workers = (0..n_workers)
             .map(|wi| {
-                let default = default_model.clone();
+                let eager = std::mem::take(&mut eager[wi]);
                 let queue = Arc::clone(&queue);
                 let tx = result_tx.clone();
                 let binds = Arc::clone(&bind_times);
                 thread::spawn(move || {
                     let t0 = Instant::now();
-                    let mut engine = EngineMachine::with_budget(resident_models);
-                    if let Some(h) = &default {
+                    let mut engine = EngineMachine::with_limits(resident_models, worker_budget);
+                    for h in &eager {
                         engine.bind_model(h);
                     }
                     binds.lock().unwrap().push(t0.elapsed());
@@ -290,7 +498,7 @@ impl Server {
                             .filter(|r| !matches!(r.payload, Payload::Close { .. }))
                             .count();
                         for req in batch.requests {
-                            let Request { id, model, payload, enqueued, .. } = req;
+                            let Request { id, model, payload, enqueued, shard, .. } = req;
                             let (output, total, per_layer, session) = match payload {
                                 Payload::Infer(input) => {
                                     let r = engine.run_model(&model, &input);
@@ -314,6 +522,7 @@ impl Server {
                                 batch_size,
                                 latency: enqueued.elapsed(),
                                 session,
+                                shard,
                                 output,
                                 total,
                                 per_layer,
@@ -329,8 +538,8 @@ impl Server {
         drop(result_tx); // workers hold the only senders
 
         let mut registered = HashMap::new();
-        if let Some(h) = &default_model {
-            registered.insert((*h.key).clone(), h.clone());
+        if let Some(entry) = &default_model {
+            registered.insert((**entry.dep.key()).clone(), entry.clone());
         }
         Server {
             submit: Some(submit_tx),
@@ -340,8 +549,10 @@ impl Server {
             next_id: 0,
             next_session: 0,
             n_workers,
+            worker_budget,
             default_model,
             registered,
+            gather: GatherBuffer::default(),
             sessions: HashMap::new(),
             worker_kv_bytes: vec![0; n_workers],
             worker_sessions: vec![0; n_workers],
@@ -349,7 +560,8 @@ impl Server {
         }
     }
 
-    /// Register a prepared model under `key`, making it addressable via
+    /// Register a prepared model under `key` as a whole-model
+    /// deployment, making it addressable via
     /// [`submit_model`](Self::submit_model) /
     /// [`open_session_on`](Self::open_session_on). Registration is
     /// caller-side only — workers bind the model lazily on its first
@@ -362,17 +574,36 @@ impl Server {
     /// kernels for the new one's requests. Deploy a changed model under
     /// a new key (e.g. bump the design label) or start a fresh pool.
     pub fn register(&mut self, key: ModelKey, prepared: Arc<PreparedModel>) -> ModelHandle {
-        if let Some(existing) = self.registered.get(&key) {
+        let dep = self.deploy(Arc::new(Deployment::whole(key, prepared)));
+        dep.handles()[0].clone()
+    }
+
+    /// Register a [`Deployment`] with this pool. Whole deployments
+    /// behave exactly like [`register`](Self::register); sharded ones
+    /// pin each shard to a worker (staggered across deployments) and
+    /// every request submitted for the key scatter/gathers across those
+    /// workers. Returns the deployment actually serving the key.
+    ///
+    /// Re-deploying a key follows the same rule as `register`: the same
+    /// deployment (or the same whole-model prepared instance) is a
+    /// no-op, anything else panics.
+    pub fn deploy(&mut self, dep: Arc<Deployment>) -> Arc<Deployment> {
+        let key: &ModelKey = dep.key();
+        if let Some(existing) = self.registered.get(key) {
+            let same_whole = !existing.dep.is_sharded()
+                && !dep.is_sharded()
+                && Arc::ptr_eq(&existing.dep.handles()[0].prepared, &dep.handles()[0].prepared);
             assert!(
-                Arc::ptr_eq(&existing.prepared, &prepared),
-                "model {key} is already registered with a different prepared instance \
+                Arc::ptr_eq(&existing.dep, &dep) || same_whole,
+                "model {key} is already registered with a different deployment \
                  (workers cache bind tables per key)"
             );
-            return existing.clone();
+            return Arc::clone(&existing.dep);
         }
-        let handle = ModelHandle::new(key, prepared);
-        self.registered.insert((*handle.key).clone(), handle.clone());
-        handle
+        Server::check_budget(&dep, self.n_workers, self.worker_budget);
+        let workers = Server::assign_shards(&dep, self.n_workers, self.registered.len());
+        self.registered.insert(key.clone(), DeployEntry { dep: Arc::clone(&dep), workers });
+        dep
     }
 
     /// Keys of every model registered with this pool.
@@ -380,43 +611,70 @@ impl Server {
         self.registered.keys().cloned().collect()
     }
 
-    fn registered_handle(&self, key: &ModelKey) -> ModelHandle {
+    /// The deployment serving `key`, if any.
+    pub fn deployment(&self, key: &ModelKey) -> Option<Arc<Deployment>> {
+        self.registered.get(key).map(|e| Arc::clone(&e.dep))
+    }
+
+    fn registered_entry(&self, key: &ModelKey) -> DeployEntry {
         self.registered
             .get(key)
             .cloned()
             .unwrap_or_else(|| panic!("model {key} is not registered with this server"))
     }
 
-    fn default_handle(&self) -> ModelHandle {
+    fn default_entry(&self) -> DeployEntry {
         self.default_model
             .clone()
             .expect("pool server has no default model (use the *_model / *_on forms)")
     }
 
-    fn send(&mut self, req: Request) -> u64 {
-        let id = req.id;
+    fn alloc_id(&mut self) -> u64 {
+        let id = self.next_id;
         self.next_id += 1;
+        id
+    }
+
+    fn send(&mut self, req: Request) {
         self.submit
             .as_ref()
             .expect("server already shut down")
             .send(req)
             .expect("dispatcher thread alive");
+    }
+
+    /// Scatter one stateless request across a deployment: one request
+    /// for a whole deployment, one pinned sub-request per shard (all
+    /// sharing the logical id, gathered on the drain path) for a
+    /// sharded one.
+    fn submit_entry(&mut self, entry: DeployEntry, input: Tensor) -> u64 {
+        let id = self.alloc_id();
+        let now = Instant::now();
+        if !entry.dep.is_sharded() {
+            let req = Request::infer(id, &entry.dep.handles()[0], input, now);
+            self.send(req);
+            return id;
+        }
+        self.gather.expect(id, Arc::clone(&entry.dep));
+        for (i, h) in entry.dep.handles().iter().enumerate() {
+            let req = Request::infer_shard(id, h, i, input.clone(), entry.workers[i], now);
+            self.send(req);
+        }
         id
     }
 
     /// Enqueue one stateless request for the default model; returns its
     /// id (completions carry it back).
     pub fn submit(&mut self, input: Tensor) -> u64 {
-        let handle = self.default_handle();
-        let req = Request::infer(self.next_id, &handle, input, Instant::now());
-        self.send(req)
+        let entry = self.default_entry();
+        self.submit_entry(entry, input)
     }
 
-    /// Enqueue one stateless request for a registered model.
+    /// Enqueue one stateless request for a registered model
+    /// (scatter/gathered if its deployment is sharded).
     pub fn submit_model(&mut self, key: &ModelKey, input: Tensor) -> u64 {
-        let handle = self.registered_handle(key);
-        let req = Request::infer(self.next_id, &handle, input, Instant::now());
-        self.send(req)
+        let entry = self.registered_entry(key);
+        self.submit_entry(entry, input)
     }
 
     /// The worker a new session lands on: smallest estimated KV-cache
@@ -428,7 +686,13 @@ impl Server {
             .expect("at least one worker")
     }
 
-    fn open_session_handle(&mut self, handle: ModelHandle) -> SessionId {
+    fn open_session_handle(&mut self, entry: DeployEntry) -> SessionId {
+        assert!(
+            !entry.dep.is_sharded(),
+            "model {} is deployed sharded; decode sessions pin whole models",
+            entry.dep.key()
+        );
+        let handle = entry.dep.handles()[0].clone();
         let step = handle
             .prepared
             .step
@@ -456,15 +720,15 @@ impl Server {
     /// footprint, whose machine will own its K/V caches; every step of
     /// this session executes there.
     pub fn open_session(&mut self) -> SessionId {
-        let handle = self.default_handle();
-        self.open_session_handle(handle)
+        let entry = self.default_entry();
+        self.open_session_handle(entry)
     }
 
     /// Open a decode session on a registered model (same placement as
     /// [`open_session`](Self::open_session)).
     pub fn open_session_on(&mut self, key: &ModelKey) -> SessionId {
-        let handle = self.registered_handle(key);
-        self.open_session_handle(handle)
+        let entry = self.registered_entry(key);
+        self.open_session_handle(entry)
     }
 
     /// Enqueue one decode step for an open session; returns its request
@@ -498,8 +762,10 @@ impl Server {
         let handle = meta.handle.clone();
         let kv = meta.kv_bytes_per_step;
         self.worker_kv_bytes[worker] += kv;
-        let req = Request::step(self.next_id, &handle, session.0, token, worker, Instant::now());
-        self.send(req)
+        let id = self.alloc_id();
+        let req = Request::step(id, &handle, session.0, token, worker, Instant::now());
+        self.send(req);
+        id
     }
 
     /// Close a finished session, freeing its KV caches on the pinned
@@ -519,34 +785,37 @@ impl Server {
         self.worker_sessions[meta.worker] -= 1;
         self.worker_kv_bytes[meta.worker] = self.worker_kv_bytes[meta.worker]
             .saturating_sub(meta.steps as u64 * meta.kv_bytes_per_step);
-        let req =
-            Request::close(self.next_id, &meta.handle, session.0, meta.worker, Instant::now());
+        let id = self.alloc_id();
+        let req = Request::close(id, &meta.handle, session.0, meta.worker, Instant::now());
         self.send(req);
     }
 
-    /// Per-worker bind (prepare-to-machine) times. Complete once
-    /// serving has started on every worker — in particular after
-    /// `shutdown` — and used to report setup separately from
-    /// steady-state throughput. Pool servers bind lazily per model, so
-    /// their startup entries are near zero and per-model bind cost
+    /// Snapshot of the per-worker bind (prepare-to-machine) times, one
+    /// entry per worker that has started serving — complete after
+    /// [`shutdown`](Self::shutdown), which is when benches read it. No
+    /// lock handle escapes the API. Pool servers bind lazily per model,
+    /// so their startup entries are near zero and per-model bind cost
     /// lands in the serving window instead.
-    pub fn bind_times(&self) -> Arc<Mutex<Vec<Duration>>> {
-        Arc::clone(&self.bind_times)
+    pub fn bind_times(&self) -> Vec<Duration> {
+        self.bind_times.lock().unwrap().clone()
     }
 
-    /// Completions that have already arrived (non-blocking).
+    /// Completions that have already arrived (non-blocking). Sharded
+    /// partials are gathered; a logical request whose shards have not
+    /// all finished stays buffered until a later drain.
     pub fn drain_ready(&mut self) -> Vec<Completion> {
-        self.results.try_iter().collect()
+        let raw: Vec<Completion> = self.results.try_iter().collect();
+        raw.into_iter().filter_map(|c| self.gather.absorb(c)).collect()
     }
 
     /// Stop accepting requests, let the pipeline drain, join every
-    /// thread and return all remaining completions.
+    /// thread and return all remaining (gathered) completions.
     ///
     /// Panics if any serving thread panicked (e.g. a request whose shape
     /// does not match the model): silently returning fewer completions
     /// than submissions would make the loss invisible to callers that
     /// pair results to requests.
-    pub fn shutdown(mut self) -> Vec<Completion> {
+    pub fn shutdown(&mut self) -> Vec<Completion> {
         drop(self.submit.take());
         let mut panicked = 0usize;
         if let Some(d) = self.dispatcher.take() {
@@ -555,11 +824,17 @@ impl Server {
         for w in self.workers.drain(..) {
             panicked += w.join().is_err() as usize;
         }
-        let done: Vec<Completion> = self.results.try_iter().collect();
+        let raw: Vec<Completion> = self.results.try_iter().collect();
+        let done: Vec<Completion> =
+            raw.into_iter().filter_map(|c| self.gather.absorb(c)).collect();
         assert!(
             panicked == 0,
             "{panicked} serving thread(s) panicked; only {} completions survived",
             done.len()
+        );
+        assert!(
+            self.gather.is_empty(),
+            "shutdown drained with sharded requests still awaiting gather"
         );
         done
     }

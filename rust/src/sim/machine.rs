@@ -96,6 +96,10 @@ pub struct Machine {
     pc: u64,
     /// freed buffer-id slots awaiting reuse (see [`Machine::free`])
     free_slots: Vec<u16>,
+    /// optional buffer-byte budget: [`Machine::alloc`] refuses to grow
+    /// resident bytes past it (a worker machine models finite on-device
+    /// memory — models too wide for it deploy sharded instead)
+    capacity: Option<usize>,
 }
 
 impl Default for Machine {
@@ -116,14 +120,39 @@ impl Machine {
             next_base: 0x1000_0000,
             pc: 0x40_0000,
             free_slots: Vec::new(),
+            capacity: None,
         }
+    }
+
+    /// A machine with a finite buffer budget: allocations past `bytes`
+    /// of live buffer memory panic. Serving workers run under this to
+    /// model per-machine memory — a layer that cannot bind within the
+    /// budget must be deployed sharded across machines instead.
+    pub fn with_capacity(bytes: usize) -> Self {
+        let mut m = Machine::new();
+        m.capacity = Some(bytes);
+        m
+    }
+
+    /// This machine's buffer-byte budget, if any.
+    pub fn capacity(&self) -> Option<usize> {
+        self.capacity
     }
 
     /// Allocate a buffer of `bytes`, returning its id. Freed id slots
     /// are recycled (at a fresh base address), so sustained bind/evict
     /// churn is bounded by the *peak live* buffer count, not the total
-    /// ever allocated.
+    /// ever allocated. Panics if the allocation would exceed the
+    /// machine's buffer budget (see [`Machine::with_capacity`]).
     pub fn alloc(&mut self, bytes: usize) -> BufId {
+        if let Some(cap) = self.capacity {
+            let live = self.resident_bytes();
+            assert!(
+                live + bytes <= cap,
+                "machine buffer budget exceeded: {live} B live + {bytes} B requested > \
+                 {cap} B capacity (deploy the model sharded across workers)"
+            );
+        }
         let base = self.next_base;
         // 4 KiB-align buffer bases so distinct buffers never share
         // lines; freed slots still get a fresh base, so a recycled id

@@ -150,10 +150,39 @@ pub enum Node {
 
 pub const INPUT: usize = usize::MAX;
 
+impl Node {
+    /// Indices of the node outputs this node consumes ([`INPUT`] = the
+    /// graph input tensor) — the single source of dataflow truth,
+    /// shared by the graph executor (`serve::engine::prepare_nodes`)
+    /// and the shard planner (`serve::deploy`), so the two can never
+    /// disagree about a graph's shape.
+    pub fn inputs(&self) -> Vec<usize> {
+        match self {
+            Node::Conv { input, .. } | Node::Matmul { input, .. } => vec![*input],
+            Node::MatmulDyn { a, b, .. } => vec![*a, *b],
+            Node::CachedAttn { q, k, v, .. } => vec![*q, *k, *v],
+            Node::Softmax { x }
+            | Node::LayerNorm { x, .. }
+            | Node::Gelu { x }
+            | Node::TransposeHW { x }
+            | Node::SplitHeads { x, .. }
+            | Node::MergeHeads { x }
+            | Node::SliceC { x, .. }
+            | Node::ShuffleC { x, .. }
+            | Node::Gap { x } => vec![*x],
+            Node::Add { a, b, .. } | Node::ConcatC { a, b } => vec![*a, *b],
+        }
+    }
+}
+
 /// Per-layer simulation result.
 #[derive(Debug, Clone)]
 pub struct LayerStat {
     pub name: String,
+    /// which shard of a sharded deployment produced this stat (`None`
+    /// for whole-model execution); gathered serving completions tag it
+    /// so reports can attribute cycles/energy per `(model, layer, shard)`
+    pub shard: Option<usize>,
     pub stats: RunStats,
 }
 

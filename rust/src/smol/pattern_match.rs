@@ -47,6 +47,53 @@ impl Assignment {
         (step, qmax)
     }
 
+    /// Restrict this assignment to the contiguous channel range
+    /// `[start, end)` — the contraction-axis view a shard-scoped kernel
+    /// sees when a wide producer's `cout` range is split across workers
+    /// and a consumer contracts only its shard's slice.
+    ///
+    /// Per-channel *precisions* are preserved exactly (quantization is
+    /// per channel, so any chunking over the sliced channels computes
+    /// the identical fixed-point MACs); the sliced channels are
+    /// re-chunked into uniform carrier patterns per precision class,
+    /// 4-bit first — the same uniform-pattern execution the decode
+    /// position axis already uses. Channel indices in the result are
+    /// slice-local (`0..end-start`).
+    pub fn slice(&self, start: usize, end: usize) -> Assignment {
+        assert!(
+            start < end && end <= self.num_channels(),
+            "assignment slice [{start}, {end}) out of 0..{}",
+            self.num_channels()
+        );
+        let precision: Vec<u8> = self.precision[start..end].to_vec();
+        assert!(
+            precision.iter().all(|&p| matches!(p, 1 | 2 | 4)),
+            "sliceable assignments carry {{1, 2, 4}}-bit channels only"
+        );
+        let mut chunks = Vec::new();
+        let mut valid = Vec::new();
+        let mut order = Vec::new();
+        for p in [4u8, 2, 1] {
+            let class: Vec<u32> = precision
+                .iter()
+                .enumerate()
+                .filter(|&(_, &q)| q == p)
+                .map(|(i, _)| i as u32)
+                .collect();
+            if class.is_empty() {
+                continue;
+            }
+            let pat = Pattern::uniform(p);
+            let cap = pat.capacity() as usize;
+            for chunk in class.chunks(cap) {
+                chunks.push(pat);
+                valid.push(chunk.len() as u32);
+                order.extend_from_slice(chunk);
+            }
+        }
+        Assignment { chunks, valid, precision, order }
+    }
+
     /// Uniform assignment (U2/U4/INT8-style design points): every channel
     /// at precision `p`, chunked into uniform patterns.
     pub fn uniform(channels: usize, p: u8) -> Assignment {
@@ -201,6 +248,37 @@ mod tests {
         let s = vec![s_for(4); 48];
         let a = pattern_match(&s, &design_subset(4));
         assert!(a.precision.iter().all(|&p| p == 4));
+    }
+
+    #[test]
+    fn slice_preserves_precisions_and_covers_channels() {
+        let s: Vec<f32> = (0..96).map(|i| (i as f32) * 0.2 - 8.0).collect();
+        let full = pattern_match(&s, &design_subset(8));
+        for (start, end) in [(0usize, 48usize), (48, 96), (10, 70), (95, 96)] {
+            let a = full.slice(start, end);
+            assert_eq!(a.num_channels(), end - start);
+            // per-channel precisions survive verbatim
+            for i in 0..end - start {
+                assert_eq!(a.precision[i], full.precision[start + i], "ch {i}");
+            }
+            // order is a permutation of the slice-local channels
+            let mut seen = vec![false; end - start];
+            for &ch in &a.order {
+                assert!(!seen[ch as usize]);
+                seen[ch as usize] = true;
+            }
+            assert!(seen.iter().all(|&b| b));
+            // chunk slots agree with the assigned precisions
+            let mut pos = 0usize;
+            for (ci, pat) in a.chunks.iter().enumerate() {
+                for e in 0..a.valid[ci] {
+                    let ch = a.order[pos] as usize;
+                    assert_eq!(a.precision[ch], pat.element_precision(e));
+                    pos += 1;
+                }
+            }
+            assert_eq!(pos, end - start);
+        }
     }
 
     #[test]

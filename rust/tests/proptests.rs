@@ -117,6 +117,74 @@ fn prop_vmul_decode_recovers_products() {
 }
 
 #[test]
+fn prop_shard_pack_matches_full_pack_slice() {
+    // >= 200 cases across precisions (uniform 1/2/4 and PatternMatch
+    // mixes under the P4/P8 subsets): packing a cout sub-range through
+    // the shard-scoped plan is bit-identical to the corresponding byte
+    // slice of the full-model pack — for conv kernels and for the GEMM
+    // layer_plan view (slice_n + column-sliced [k][n] operand)
+    check("shard-pack", 300, |rng| {
+        let cin = 1 + rng.below(48) as usize;
+        let cout = 2 + rng.below(24) as usize;
+        let kk = *rng.choice(&[1usize, 3]);
+        let asg = match rng.below(5) {
+            0 => Assignment::uniform(cin, 1),
+            1 => Assignment::uniform(cin, 2),
+            2 => Assignment::uniform(cin, 4),
+            n => {
+                let s: Vec<f32> = (0..cin).map(|_| rng.range(-3.0, 6.0)).collect();
+                pattern_match(&s, &design_subset(if n == 3 { 4 } else { 8 }))
+            }
+        };
+        let plan = LayerPlan {
+            name: "shardpack".into(),
+            kind: LayerKind::Dense,
+            cin,
+            cout,
+            kh: kk,
+            kw: kk,
+            stride: 1,
+            hin: 2,
+            win: 2,
+            asg,
+            fmt: DataFormat::Smol,
+        };
+        let w: Vec<f32> = (0..kk * kk * cin * cout).map(|_| rng.range(-1.1, 1.1)).collect();
+        let full = codegen::pack::pack_weights(&plan, &w);
+        let row = codegen::pack::packed_cout_row_bytes(&plan);
+        if full.len() != cout * row {
+            return Err(format!("pack len {} != cout {cout} * row {row}", full.len()));
+        }
+        let start = rng.below(cout as u64 - 1) as usize;
+        let end = start + 1 + rng.below((cout - start) as u64) as usize;
+        let shard = codegen::shard::pack_weights_cout_range(&plan, &w, start, end);
+        if shard[..] != full[start * row..end * row] {
+            return Err(format!("cout [{start}, {end}) of {cout}: shard pack diverged"));
+        }
+
+        let gp = GemmPlan {
+            name: "g".into(),
+            m: 3,
+            k: cin,
+            n: cout,
+            asg: plan.asg.clone(),
+            fmt: DataFormat::Smol,
+        };
+        let gw: Vec<f32> = (0..cin * cout).map(|_| rng.range(-0.9, 0.9)).collect();
+        let gfull = codegen::pack::pack_weights(&gp.layer_plan(), &gw);
+        let grow = codegen::pack::packed_cout_row_bytes(&gp.layer_plan());
+        let gshard = codegen::pack::pack_weights(
+            &gp.slice_n(start, end).layer_plan(),
+            &codegen::shard::slice_gemm_weights_n(cin, cout, &gw, start, end),
+        );
+        if gshard[..] != gfull[start * grow..end * grow] {
+            return Err(format!("gemm n slice [{start}, {end}) pack diverged"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_problem1_coverage_and_minimality() {
     check("problem1", 200, |rng| {
         let np = *rng.choice(&[4usize, 8, 45]);

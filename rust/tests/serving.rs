@@ -14,11 +14,12 @@ use soniq::coordinator::{
     DesignPoint, SyntheticNet,
 };
 use soniq::serve::{
-    serve_all, summarize, BatchConfig, Completion, DynamicBatcher, EngineMachine, ModelHandle,
-    ModelKey, ModelRegistry, PreparedModel, Request, ServeConfig, Server, SessionId, SetupTiming,
+    serve_all, summarize, BatchConfig, Completion, DeployConfig, Deployment, DynamicBatcher,
+    EngineMachine, GatherMode, ModelHandle, ModelKey, ModelRegistry, PreparedModel, Request,
+    ServeConfig, Server, SessionId, SetupTiming, ShardPlan, SERVE_REPORT_SCHEMA,
 };
 use soniq::sim::machine::RunStats;
-use soniq::sim::network::{run_network, LayerStat, Tensor};
+use soniq::sim::network::{run_network, LayerStat, Node, Tensor};
 use std::collections::{HashMap, HashSet};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -552,6 +553,7 @@ fn lru_eviction_rebinds_models_correctly() {
         workers: 1,
         batch: BatchConfig { max_batch: 2, max_delay: Duration::from_millis(1) },
         resident_models: 1,
+        worker_budget: None,
     };
     let mut server = Server::start_pool(&cfg);
     server.register(ka.clone(), Arc::clone(&pa));
@@ -859,9 +861,10 @@ fn fake_completion(id: u64, key: &ModelKey, layer: &str, cycles: u64) -> Complet
         batch_size: 1,
         latency: Duration::from_millis(1 + id),
         session: None,
+        shard: None,
         output: Tensor::zeros(1, 1, 1),
         total: stats.clone(),
-        per_layer: vec![LayerStat { name: layer.to_string(), stats }],
+        per_layer: vec![LayerStat { name: layer.to_string(), shard: None, stats }],
     }
 }
 
@@ -966,4 +969,276 @@ fn serve_report_aggregates_and_serializes() {
     assert!(parsed.get("prepare_ms").is_ok());
     assert!(parsed.get("bind_ms").is_ok());
     assert!(parsed.get("steady_throughput_rps").is_ok());
+    // schema versioning: bench tooling detects the per-shard layer keys
+    // from this field instead of guessing from row shapes
+    assert_eq!(parsed.get("schema").unwrap().as_usize().unwrap(), SERVE_REPORT_SCHEMA as usize);
+}
+
+// ---------------------------------------------------------------------
+// shard-aware deployment: scatter/gather serving
+// ---------------------------------------------------------------------
+
+#[test]
+fn sharded_tinywide_is_bit_identical_to_unsharded() {
+    // the tentpole contract: tinywide's wide layer split across >= 2
+    // workers, scatter/gathered outputs bit-identical to the whole
+    // model on one unbudgeted machine
+    let dp = DesignPoint::Patterns(4);
+    let net = synthetic_network("tinywide", dp, 3).unwrap();
+    let inputs = synthetic_inputs(&net, 8, 5);
+    let key = ModelKey::new("tinywide", dp.label());
+    let whole = Arc::new(PreparedModel::prepare(&net.nodes));
+    let mut oracle = EngineMachine::new(&whole);
+    let want: Vec<Vec<f32>> = inputs.iter().map(|x| oracle.run(x).output.data.clone()).collect();
+
+    // 3 shards on 2 workers also exercises two shards co-resident on
+    // one machine (their shard-tagged keys keep bind tables distinct)
+    for shards in [2usize, 3] {
+        let dcfg = DeployConfig { worker_budget: None, shards: Some(shards) };
+        let dep = Arc::new(Deployment::build(key.clone(), &net.nodes, None, &dcfg).unwrap());
+        assert_eq!(dep.num_shards(), shards);
+        assert!(dep.is_sharded());
+        let mut server = Server::start_deployment(Arc::clone(&dep), &pool_cfg(2, 4));
+        for x in &inputs {
+            server.submit(x.clone());
+        }
+        let mut done = server.shutdown();
+        done.sort_by_key(|c| c.id);
+        assert_eq!(done.len(), inputs.len(), "one gathered completion per request");
+        for c in &done {
+            assert_eq!(c.output.data, want[c.id as usize], "{shards} shards, request {}", c.id);
+            assert_eq!(c.shard, None, "callers see gathered completions only");
+            assert_eq!(*c.model, key, "gathered completions carry the base key");
+            // per-shard attribution: every shard contributed layer stats
+            let tags: HashSet<Option<usize>> = c.per_layer.iter().map(|l| l.shard).collect();
+            assert_eq!(tags.len(), shards, "request {}", c.id);
+            assert!((0..shards).all(|i| tags.contains(&Some(i))));
+        }
+    }
+}
+
+#[test]
+fn over_budget_model_serves_only_via_sharding() {
+    // acceptance: a model whose widest layer exceeds one machine's
+    // buffer budget cannot bind whole, and serves bit-exactly sharded
+    use soniq::serve::engine::conv_bind_bytes;
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+    let dp = DesignPoint::Patterns(4);
+    let net = synthetic_network("tinywide", dp, 3).unwrap();
+    let inputs = synthetic_inputs(&net, 4, 9);
+    let key = ModelKey::new("tinywide", dp.label());
+    let whole = Arc::new(PreparedModel::prepare(&net.nodes));
+    let mut oracle = EngineMachine::new(&whole);
+    let want: Vec<Vec<f32>> = inputs.iter().map(|x| oracle.run(x).output.data.clone()).collect();
+
+    // budget = exactly the wide layer's own bind footprint: the whole
+    // model (wide + stem + fc) can never fit one machine
+    let Node::Conv { cfg: wide_cfg, .. } = &net.nodes[1] else {
+        panic!("tinywide node 1 is the wide conv");
+    };
+    let budget = conv_bind_bytes(&wide_cfg.plan);
+    let whole_handle = ModelHandle::new(key.clone(), Arc::clone(&whole));
+    let blocked = catch_unwind(AssertUnwindSafe(|| {
+        let mut engine = EngineMachine::with_limits(usize::MAX, Some(budget));
+        engine.bind_model(&whole_handle);
+    }));
+    assert!(blocked.is_err(), "whole-model bind must exceed the {budget} B budget");
+
+    // the budget-derived deployment shards automatically and serves
+    // through budgeted workers
+    let dcfg = DeployConfig { worker_budget: Some(budget), shards: None };
+    let dep = Arc::new(Deployment::build(key.clone(), &net.nodes, None, &dcfg).unwrap());
+    assert!(dep.is_sharded(), "plan: {}", dep.describe());
+    let cfg = ServeConfig { worker_budget: Some(budget), ..pool_cfg(2, 4) };
+    let mut server = Server::start_deployment(Arc::clone(&dep), &cfg);
+    for x in &inputs {
+        server.submit(x.clone());
+    }
+    let mut done = server.shutdown();
+    done.sort_by_key(|c| c.id);
+    assert_eq!(done.len(), inputs.len());
+    for c in &done {
+        assert_eq!(c.output.data, want[c.id as usize], "request {}", c.id);
+    }
+}
+
+#[test]
+fn sharded_report_keys_layers_by_model_layer_shard() {
+    let dp = DesignPoint::Patterns(4);
+    let net = synthetic_network("tinywide", dp, 3).unwrap();
+    let inputs = synthetic_inputs(&net, 4, 7);
+    let key = ModelKey::new("tinywide", dp.label());
+    let dcfg = DeployConfig { worker_budget: None, shards: Some(2) };
+    let dep = Arc::new(Deployment::build(key.clone(), &net.nodes, None, &dcfg).unwrap());
+
+    // deploy into a pool (the registered-model form of the sharded path)
+    let mut server = Server::start_pool(&pool_cfg(2, 4));
+    server.deploy(Arc::clone(&dep));
+    assert!(server.deployment(&key).is_some_and(|d| d.is_sharded()));
+    for x in &inputs {
+        server.submit_model(&key, x.clone());
+    }
+    let done = server.shutdown();
+    assert_eq!(done.len(), inputs.len());
+
+    let report = summarize(&done, Duration::from_millis(10), SetupTiming::default());
+    assert_eq!(report.per_model.len(), 1, "shards aggregate under the base model");
+    assert_eq!(report.per_model[0].requests, inputs.len());
+    // wide runs sliced on both shards: one LayerAgg per (layer, shard)
+    let wide: Vec<_> = report.per_layer.iter().filter(|l| l.name == "wide").collect();
+    assert_eq!(wide.len(), 2, "one aggregate per shard of the wide layer");
+    assert!(wide.iter().all(|l| l.shard.is_some() && l.cycles > 0));
+
+    let parsed = soniq::util::json::parse(&report.to_json().to_string()).unwrap();
+    assert_eq!(parsed.get("schema").unwrap().as_usize().unwrap(), SERVE_REPORT_SCHEMA as usize);
+    let layers = parsed.get("per_layer").unwrap().as_arr().unwrap();
+    assert!(layers.iter().all(|l| l.get("shard").is_ok()), "layer rows carry shard");
+}
+
+#[test]
+fn tinyattn_deploys_whole_and_refuses_forced_sharding() {
+    // sharded-vs-whole on tinyattn: under any realistic budget the plan
+    // degenerates to Whole (the PR-4 path), bit-identical end to end;
+    // forcing a split is refused because its wide GEMM feeds mid-graph
+    // consumers (residual adds), where a gather would be required
+    // mid-request — refusing beats serving wrong numbers
+    let dp = DesignPoint::Patterns(4);
+    let (net, inputs) = net_and_inputs("tinyattn", dp, 6);
+    let key = ModelKey::new("tinyattn", dp.label());
+    let dcfg = DeployConfig { worker_budget: Some(1 << 26), shards: None };
+    let dep = Arc::new(Deployment::build(key.clone(), &net.nodes, None, &dcfg).unwrap());
+    assert!(!dep.is_sharded());
+    assert!(matches!(dep.plan(), ShardPlan::Whole));
+
+    let legacy: Vec<Vec<f32>> =
+        inputs.iter().map(|x| run_network(&net.nodes, x).output.data.clone()).collect();
+    let mut server = Server::start_deployment(Arc::clone(&dep), &pool_cfg(2, 4));
+    for x in &inputs {
+        server.submit(x.clone());
+    }
+    let mut done = server.shutdown();
+    done.sort_by_key(|c| c.id);
+    assert_eq!(done.len(), inputs.len());
+    for c in &done {
+        assert_eq!(c.output.data, legacy[c.id as usize], "request {}", c.id);
+        assert!(c.per_layer.iter().all(|l| l.shard.is_none()));
+    }
+
+    let force = DeployConfig { worker_budget: None, shards: Some(2) };
+    let forced = Deployment::build(key, &net.nodes, None, &force);
+    assert!(forced.is_err(), "tinyattn's split axis feeds mid-graph consumers");
+}
+
+#[test]
+fn concat_gather_via_engines_matches_whole() {
+    // a graph whose wide layer IS the output: gather = channel concat.
+    // Shards run on plain engines here — Deployment::gather_outputs is
+    // the same assembly the server's gather buffer uses.
+    let dp = DesignPoint::Patterns(4);
+    let net = synthetic_network("tinywide", dp, 3).unwrap();
+    let head = &net.nodes[..2]; // c1 + wide: the wide tensor is the output
+    let key = ModelKey::new("tinywide-head", dp.label());
+    let dcfg = DeployConfig { worker_budget: None, shards: Some(2) };
+    let dep = Deployment::build(key, head, None, &dcfg).unwrap();
+    assert!(matches!(
+        dep.plan(),
+        ShardPlan::Sharded { gather: GatherMode::Concat, consumer_node: None, .. }
+    ));
+    let x = synthetic_inputs(&net, 1, 5).remove(0);
+    let whole = run_network(head, &x);
+    let parts: Vec<Tensor> = dep
+        .handles()
+        .iter()
+        .map(|h| EngineMachine::new(&h.prepared).run(&x).output)
+        .collect();
+    let refs: Vec<&Tensor> = parts.iter().collect();
+    assert_eq!(dep.gather_outputs(&refs).data, whole.output.data);
+}
+
+#[test]
+fn sharded_decoders_are_refused() {
+    let net = synthetic_network("tinydec", DesignPoint::Patterns(4), 3).unwrap();
+    let key = ModelKey::new("tinydec", "P4");
+    let step = net.step_nodes.as_deref();
+    let force = DeployConfig { worker_budget: None, shards: Some(2) };
+    let forced = Deployment::build(key.clone(), &net.nodes, step, &force);
+    assert!(forced.is_err(), "KV sessions pin whole models");
+    // without a forced split, decoders deploy whole and keep serving
+    let dep = Deployment::build(key, &net.nodes, step, &DeployConfig::default()).unwrap();
+    assert!(!dep.is_sharded());
+    assert!(dep.handles()[0].prepared.step.is_some(), "decoder form preserved");
+}
+
+#[test]
+fn capacity_eviction_swaps_models_instead_of_panicking() {
+    // two models that each fit a budgeted machine alone but not
+    // together: bind_model evicts the LRU one to make byte room (the
+    // multi-deployment analogue of the resident-count LRU), so budgeted
+    // pools serving several models churn instead of panicking a worker
+    let dp = DesignPoint::Patterns(4);
+    let (net_a, in_a) = net_and_inputs("tinynet", dp, 1);
+    let (net_b, in_b) = net_and_inputs("tinydw", dp, 1);
+    let pa = Arc::new(PreparedModel::prepare(&net_a.nodes));
+    let pb = Arc::new(PreparedModel::prepare(&net_b.nodes));
+    let budget = pa.bind_bytes().max(pb.bind_bytes()) + 1024;
+    assert!(pa.bind_bytes() + pb.bind_bytes() > budget, "budget must not fit both");
+    let ha = ModelHandle::new(ModelKey::new("a", "P4"), Arc::clone(&pa));
+    let hb = ModelHandle::new(ModelKey::new("b", "P4"), Arc::clone(&pb));
+    let want_a = EngineMachine::new(&pa).run(&in_a[0]).output.data;
+    let want_b = EngineMachine::new(&pb).run(&in_b[0]).output.data;
+
+    let mut engine = EngineMachine::with_limits(usize::MAX, Some(budget));
+    for round in 0..2 {
+        assert_eq!(engine.run_model(&ha, &in_a[0]).output.data, want_a, "round {round}");
+        assert_eq!(engine.run_model(&hb, &in_b[0]).output.data, want_b, "round {round}");
+        assert_eq!(engine.num_resident(), 1, "byte budget keeps one model resident");
+    }
+}
+
+#[test]
+fn budgeted_pools_refuse_more_shards_than_workers() {
+    // a shard plan sizes every shard for a machine of its own; wrapping
+    // two shards onto one *budgeted* worker could exceed its buffer
+    // budget mid-serve, so placement refuses it up front (unbudgeted
+    // pools still allow co-residency — covered by the 3-shards-on-2-
+    // workers case above)
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+    let dp = DesignPoint::Patterns(4);
+    let net = synthetic_network("tinywide", dp, 3).unwrap();
+    let key = ModelKey::new("tinywide", dp.label());
+    let dcfg = DeployConfig { worker_budget: None, shards: Some(3) };
+    let dep = Arc::new(Deployment::build(key.clone(), &net.nodes, None, &dcfg).unwrap());
+    let cfg = ServeConfig { worker_budget: Some(1 << 20), ..pool_cfg(2, 4) };
+    let mut server = Server::start_pool(&cfg);
+    let refused = catch_unwind(AssertUnwindSafe(|| server.deploy(Arc::clone(&dep))));
+    assert!(refused.is_err(), "3 shards on 2 budgeted workers must be refused");
+    server.shutdown();
+
+    // a deployment planned under a different (here: no) budget is also
+    // refused when a shard's exact bind footprint exceeds the pool's
+    let dcfg = DeployConfig { worker_budget: None, shards: Some(2) };
+    let dep = Arc::new(Deployment::build(key, &net.nodes, None, &dcfg).unwrap());
+    let cfg = ServeConfig { worker_budget: Some(4096), ..pool_cfg(2, 4) };
+    let mut server = Server::start_pool(&cfg);
+    let refused = catch_unwind(AssertUnwindSafe(|| server.deploy(Arc::clone(&dep))));
+    assert!(refused.is_err(), "shards wider than the pool budget must be refused");
+    server.shutdown();
+}
+
+#[test]
+fn bind_times_returns_a_snapshot_per_worker() {
+    // regression for the leaky accessor: bind_times used to hand out
+    // the Arc<Mutex<..>> itself; it now returns a plain snapshot, valid
+    // to read after shutdown (shutdown no longer consumes the server)
+    let (net, inputs) = net_and_inputs("tinynet", DesignPoint::Uniform(4), 4);
+    let prepared = Arc::new(PreparedModel::prepare(&net.nodes));
+    let mut server = Server::start(Arc::clone(&prepared), &pool_cfg(3, 2));
+    for x in inputs {
+        server.submit(x);
+    }
+    let done = server.shutdown();
+    assert_eq!(done.len(), 4);
+    let binds: Vec<Duration> = server.bind_times();
+    assert_eq!(binds.len(), 3, "one eager-bind entry per worker");
+    assert!(binds.iter().all(|d| *d > Duration::ZERO));
 }

@@ -55,6 +55,27 @@ fn train_cfg(args: &Args) -> TrainCfg {
     }
 }
 
+/// Shared serve-bench output sinks: `--json` prints the schema-3 report
+/// to stdout, `--json-out FILE` writes the same JSON to disk, and
+/// `--trace FILE` writes the Chrome trace-event file (load it in
+/// Perfetto or `chrome://tracing`).
+fn emit_serve_outputs(
+    args: &Args,
+    report: &soniq::serve::ServeReport,
+    server: &soniq::serve::Server,
+) -> Result<()> {
+    if args.has_flag("json") {
+        println!("{}", report.to_json().to_string());
+    }
+    if let Some(path) = args.get("json-out") {
+        std::fs::write(path, report.to_json().to_string() + "\n")?;
+    }
+    if let Some(path) = args.get("trace") {
+        std::fs::write(path, server.obs().chrome_trace_json().to_string() + "\n")?;
+    }
+    Ok(())
+}
+
 fn main() -> Result<()> {
     let args = Args::from_env();
     let artifacts = args.get_or("artifacts", "artifacts");
@@ -155,6 +176,7 @@ fn main() -> Result<()> {
                 },
                 resident_models: args.get_usize("resident-models", usize::MAX).max(1),
                 worker_budget: (worker_budget > 0).then_some(worker_budget),
+                trace: args.get("trace").is_some(),
             };
 
             let models_arg = args.get_or("models", "");
@@ -240,7 +262,9 @@ fn main() -> Result<()> {
                 let wall = t2.elapsed();
                 done.sort_by_key(|c| c.id);
                 let bind = server.bind_times().into_iter().max().unwrap_or_default();
-                let report = serve::summarize(&done, wall, SetupTiming { prepare, bind });
+                let snap = server.snapshot();
+                let report =
+                    serve::summarize_with(&done, wall, SetupTiming { prepare, bind }, Some(&snap));
                 report.print();
 
                 // ids were assigned round-robin: id = i * n_models + mi
@@ -251,9 +275,7 @@ fn main() -> Result<()> {
                         c.output.data == dedicated[mi][ri]
                     });
                 println!("  outputs bit-identical to dedicated single-model engines: {bitexact}");
-                if args.has_flag("json") {
-                    println!("{}", report.to_json().to_string());
-                }
+                emit_serve_outputs(&args, &report, &server)?;
                 if !bitexact {
                     bail!("multi-model pool outputs diverged from dedicated engines");
                 }
@@ -316,7 +338,9 @@ fn main() -> Result<()> {
                 let wall = t2.elapsed();
                 done.sort_by_key(|c| c.id);
                 let bind = server.bind_times().into_iter().max().unwrap_or_default();
-                let report = serve::summarize(&done, wall, SetupTiming { prepare, bind });
+                let snap = server.snapshot();
+                let report =
+                    serve::summarize_with(&done, wall, SetupTiming { prepare, bind }, Some(&snap));
                 report.print();
 
                 let bitexact = done.len() == inputs.len()
@@ -325,9 +349,7 @@ fn main() -> Result<()> {
                     "  sharded outputs bit-identical to unsharded single-machine run: \
                      {bitexact}"
                 );
-                if args.has_flag("json") {
-                    println!("{}", report.to_json().to_string());
-                }
+                emit_serve_outputs(&args, &report, &server)?;
                 if !bitexact {
                     bail!("sharded outputs diverged from the unsharded run");
                 }
@@ -386,7 +408,9 @@ fn main() -> Result<()> {
                 let wall = t2.elapsed();
                 done.sort_by_key(|c| c.id);
                 let bind = server.bind_times().into_iter().max().unwrap_or_default();
-                let report = serve::summarize(&done, wall, SetupTiming { prepare, bind });
+                let snap = server.snapshot();
+                let report =
+                    serve::summarize_with(&done, wall, SetupTiming { prepare, bind }, Some(&snap));
                 report.print();
 
                 // prefix-repack baseline: re-run session 0's whole prefix
@@ -426,9 +450,7 @@ fn main() -> Result<()> {
                     "  cached vs prefix-repack: {:.2}x fewer simulated cycles",
                     baseline_cycles as f64 / cached_cycles.max(1) as f64
                 );
-                if args.has_flag("json") {
-                    println!("{}", report.to_json().to_string());
-                }
+                emit_serve_outputs(&args, &report, &server)?;
                 return Ok(());
             }
 
@@ -477,7 +499,13 @@ fn main() -> Result<()> {
             let wall = t2.elapsed();
             completions.sort_by_key(|c| c.id);
             let bind = server.bind_times().into_iter().max().unwrap_or_default();
-            let report = serve::summarize(&completions, wall, SetupTiming { prepare, bind });
+            let snap = server.snapshot();
+            let report = serve::summarize_with(
+                &completions,
+                wall,
+                SetupTiming { prepare, bind },
+                Some(&snap),
+            );
             report.print();
 
             let bitexact = completions
@@ -489,9 +517,7 @@ fn main() -> Result<()> {
                 "  serving throughput vs legacy: {:.2}x",
                 report.throughput_rps / legacy_rps
             );
-            if args.has_flag("json") {
-                println!("{}", report.to_json().to_string());
-            }
+            emit_serve_outputs(&args, &report, &server)?;
         }
         _ => {
             eprintln!(
@@ -502,7 +528,8 @@ fn main() -> Result<()> {
                 "       serve-bench [--model M | --models A,B,C] [--design D] \
                  [--requests N] [--workers W] [--max-batch B] [--max-delay-ms MS] \
                  [--resident-models R] [--shards S] [--worker-budget BYTES] \
-                 [--decode --steps N --sessions S] [--json]"
+                 [--decode --steps N --sessions S] [--json] [--json-out FILE] \
+                 [--trace FILE]"
             );
             eprintln!("       see README.md for the full CLI");
         }

@@ -16,6 +16,7 @@
 //! routes closed batches to the shared queue (`target: None`) or the
 //! pinned worker's queue (`target: Some(w)`).
 
+use crate::serve::obs::SpanTrack;
 use crate::serve::ModelHandle;
 use crate::sim::network::Tensor;
 use std::collections::VecDeque;
@@ -67,6 +68,9 @@ pub struct Request {
     /// request share its id; the server's gather buffer reassembles
     /// them by `(id, shard)`.
     pub shard: Option<usize>,
+    /// lifecycle timestamps, stamped by the dispatcher and the
+    /// executing worker as the request moves through the pool
+    pub span: SpanTrack,
 }
 
 impl Request {
@@ -79,6 +83,7 @@ impl Request {
             enqueued,
             target: None,
             shard: None,
+            span: SpanTrack::new(enqueued),
         }
     }
 
@@ -100,6 +105,7 @@ impl Request {
             enqueued,
             target: Some(target),
             shard: Some(shard),
+            span: SpanTrack::new(enqueued),
         }
     }
 
@@ -120,6 +126,7 @@ impl Request {
             enqueued,
             target: Some(target),
             shard: None,
+            span: SpanTrack::new(enqueued),
         }
     }
 
@@ -140,6 +147,7 @@ impl Request {
             enqueued,
             target: Some(target),
             shard: None,
+            span: SpanTrack::new(enqueued),
         }
     }
 }

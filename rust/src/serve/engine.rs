@@ -1059,6 +1059,29 @@ struct SessionEntry {
     state: SessionState,
 }
 
+/// Monotone bind-table churn totals an [`EngineMachine`] accumulates
+/// over its lifetime (reads are free; see
+/// [`counters`](EngineMachine::counters)).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct EngineCounters {
+    /// Cold binds: a model made resident (first touch or re-bind after
+    /// eviction). LRU hits don't count.
+    pub binds: u64,
+    /// Resident models evicted to satisfy a count or byte budget.
+    pub evictions: u64,
+}
+
+/// One bind-table state change, recorded only when event recording is
+/// on ([`set_record_events`](EngineMachine::set_record_events)) —
+/// drained by the observability layer for trace export.
+#[derive(Debug, Clone)]
+pub enum EngineEvent {
+    /// `key` was made resident (cold bind or re-bind).
+    Bound(ModelKey),
+    /// `key` was evicted to make room.
+    Evicted(ModelKey),
+}
+
 /// One worker's execution context: a simulated machine serving one or
 /// more prepared models. Each model gets a per-model bind table
 /// (buffers + resident weights), populated lazily on the first request
@@ -1081,6 +1104,11 @@ pub struct EngineMachine {
     /// the model `run`/`run_step` address (single-model compatibility)
     default_model: Option<ModelHandle>,
     sessions: HashMap<u64, SessionEntry>,
+    counters: EngineCounters,
+    /// bind/evict events since the last `take_events` (only filled
+    /// when `record_events` is on)
+    events: Vec<EngineEvent>,
+    record_events: bool,
 }
 
 impl EngineMachine {
@@ -1108,6 +1136,9 @@ impl EngineMachine {
             budget: budget.max(1),
             default_model: None,
             sessions: HashMap::new(),
+            counters: EngineCounters::default(),
+            events: Vec::new(),
+            record_events: false,
         }
     }
 
@@ -1159,6 +1190,10 @@ impl EngineMachine {
             Some(step) => step.nodes.iter().map(|n| n.op.bind(&mut self.m)).collect(),
             None => Vec::new(),
         };
+        self.counters.binds += 1;
+        if self.record_events {
+            self.events.push(EngineEvent::Bound((*handle.key).clone()));
+        }
         self.resident.insert(
             (*handle.key).clone(),
             ResidentModel {
@@ -1186,6 +1221,10 @@ impl EngineMachine {
                 self.m.free(b.bufs.weights);
                 self.m.free(b.bufs.out);
                 self.m.free(b.bufs.masks);
+            }
+            self.counters.evictions += 1;
+            if self.record_events {
+                self.events.push(EngineEvent::Evicted(key.clone()));
             }
         }
     }
@@ -1257,5 +1296,26 @@ impl EngineMachine {
     /// (what the server-side placement estimate approximates).
     pub fn session_kv_bytes(&self) -> usize {
         self.sessions.values().map(|e| e.state.kv_bytes()).sum()
+    }
+
+    /// Lifetime bind/eviction totals (cheap copy).
+    pub fn counters(&self) -> EngineCounters {
+        self.counters
+    }
+
+    /// Machine buffer bytes currently held by resident bind tables.
+    pub fn resident_bytes(&self) -> usize {
+        self.m.resident_bytes()
+    }
+
+    /// Turn per-event recording on/off (off by default — counters are
+    /// always maintained, events cost an allocation each).
+    pub fn set_record_events(&mut self, on: bool) {
+        self.record_events = on;
+    }
+
+    /// Drain the bind/evict events recorded since the last call.
+    pub fn take_events(&mut self) -> Vec<EngineEvent> {
+        std::mem::take(&mut self.events)
     }
 }

@@ -14,6 +14,7 @@
 //! window at all; its `steady_rps` is NaN (JSON `null`), never a
 //! divide-by-almost-zero fantasy number.
 
+use crate::serve::obs::ObsSnapshot;
 use crate::serve::workers::Completion;
 use crate::sim::machine::RunStats;
 use crate::util::json::Json;
@@ -22,9 +23,11 @@ use std::time::Duration;
 
 /// JSON schema version of [`ServeReport::to_json`]. Bumped to 2 when
 /// per-layer rows gained the `shard` dimension (sharded deployments
-/// attribute cycles/energy per `(model, layer, shard)`); bench tooling
+/// attribute cycles/energy per `(model, layer, shard)`); to 3 when the
+/// report grew the span breakdown (queue/bind/service/gather wait),
+/// per-worker utilization rows and bind/eviction totals. Bench tooling
 /// asserts it instead of guessing from row shapes.
-pub const SERVE_REPORT_SCHEMA: u64 = 2;
+pub const SERVE_REPORT_SCHEMA: u64 = 3;
 
 /// Aggregated simulated cost of one model's layer across all served
 /// requests. Keyed by `(model, name, shard)`: layer names repeat across
@@ -53,6 +56,41 @@ pub struct ModelAgg {
     pub throughput_rps: f64,
     pub cycles: u64,
     pub energy_pj: f64,
+}
+
+/// Exact mean/p99 of one lifecycle span over a run's completions
+/// (computed from [`Completion::spans`] at summary time, not from the
+/// streaming histograms, so end-of-run reports stay exact).
+#[derive(Debug, Clone, Copy)]
+pub struct SpanAgg {
+    pub mean_ms: f64,
+    pub p99_ms: f64,
+}
+
+impl SpanAgg {
+    fn over(completions: &[Completion], f: impl Fn(&Completion) -> Duration) -> SpanAgg {
+        let mut ms: Vec<f64> = completions.iter().map(|c| f(c).as_secs_f64() * 1e3).collect();
+        sort_latencies(&mut ms);
+        let mean =
+            if ms.is_empty() { f64::NAN } else { ms.iter().sum::<f64>() / ms.len() as f64 };
+        SpanAgg { mean_ms: mean, p99_ms: percentile(&ms, 0.99) }
+    }
+}
+
+/// One worker's utilization row (from the [`ObsSnapshot`] passed to
+/// [`summarize_with`]; reports built without one have no rows).
+#[derive(Debug, Clone)]
+pub struct WorkerRow {
+    pub worker: usize,
+    /// busy / (busy + idle); NaN if the worker never woke
+    pub utilization: f64,
+    pub busy_ms: f64,
+    pub batches: u64,
+    pub requests: u64,
+    pub binds: u64,
+    pub evictions: u64,
+    pub resident_bytes: u64,
+    pub kv_bytes: u64,
 }
 
 /// One-off setup cost of a serving run, kept out of the steady-state
@@ -89,6 +127,21 @@ pub struct ServeReport {
     pub p99_ms: f64,
     /// simulated-hardware totals summed over all requests
     pub sim: RunStats,
+    /// enqueue → worker pop: time before the executing worker first
+    /// touched the request
+    pub queue_wait: SpanAgg,
+    /// worker pop → model resident (LRU bind/rebind cost)
+    pub bind_wait: SpanAgg,
+    /// a request's own execution time
+    pub service: SpanAgg,
+    /// sharded requests: shard 0 waiting on the slowest sibling
+    pub gather_wait: SpanAgg,
+    /// per-worker utilization rows (empty without a snapshot)
+    pub workers: Vec<WorkerRow>,
+    /// cold binds across all workers (0 without a snapshot)
+    pub binds: u64,
+    /// LRU evictions across all workers (0 without a snapshot)
+    pub evictions: u64,
     /// per-model aggregation, in first-completion order
     pub per_model: Vec<ModelAgg>,
     /// per-(model, layer) aggregation, in first-completion order
@@ -116,6 +169,18 @@ fn sort_latencies(lat_ms: &mut [f64]) {
 /// one-off prepare/bind costs measured by the caller
 /// (`SetupTiming::default()` when not measured).
 pub fn summarize(completions: &[Completion], wall: Duration, setup: SetupTiming) -> ServeReport {
+    summarize_with(completions, wall, setup, None)
+}
+
+/// [`summarize`] plus an end-of-run [`ObsSnapshot`], which fills the
+/// per-worker utilization rows and the bind/eviction totals (the span
+/// breakdown comes from the completions either way).
+pub fn summarize_with(
+    completions: &[Completion],
+    wall: Duration,
+    setup: SetupTiming,
+    snap: Option<&ObsSnapshot>,
+) -> ServeReport {
     let n = completions.len();
     let mut lat_ms: Vec<f64> =
         completions.iter().map(|c| c.latency.as_secs_f64() * 1e3).collect();
@@ -161,20 +226,39 @@ pub fn summarize(completions: &[Completion], wall: Duration, setup: SetupTiming)
             LayerAgg { model, name, shard, cycles, energy_pj }
         })
         .collect();
-    let wall_s = wall.as_secs_f64().max(1e-9);
+    // a degenerate zero-wall run has no rate — report NaN (JSON null),
+    // the same convention as steady_rps, never a clamped-denominator
+    // fantasy number
+    let wall_s = wall.as_secs_f64();
+    let rps = |count: f64| if wall_s > 0.0 { count / wall_s } else { f64::NAN };
     let per_model = model_order
         .into_iter()
         .map(|model| {
             let &(requests, cycles, energy_pj) = &model_agg[&model];
-            ModelAgg {
-                model,
-                requests,
-                throughput_rps: requests as f64 / wall_s,
-                cycles,
-                energy_pj,
-            }
+            ModelAgg { model, requests, throughput_rps: rps(requests as f64), cycles, energy_pj }
         })
         .collect();
+
+    let workers: Vec<WorkerRow> = snap
+        .map(|s| {
+            s.workers
+                .iter()
+                .map(|w| WorkerRow {
+                    worker: w.worker,
+                    utilization: w.utilization,
+                    busy_ms: w.busy.as_secs_f64() * 1e3,
+                    batches: w.batches,
+                    requests: w.requests,
+                    binds: w.binds,
+                    evictions: w.evictions,
+                    resident_bytes: w.resident_bytes,
+                    kv_bytes: w.kv_bytes,
+                })
+                .collect()
+        })
+        .unwrap_or_default();
+    let binds = workers.iter().map(|w| w.binds).sum();
+    let evictions = workers.iter().map(|w| w.evictions).sum();
 
     let steady = wall.saturating_sub(setup.bind);
     let steady_s = steady.as_secs_f64();
@@ -183,7 +267,7 @@ pub fn summarize(completions: &[Completion], wall: Duration, setup: SetupTiming)
         batches,
         mean_batch_size: if batches == 0 { 0.0 } else { n as f64 / batches as f64 },
         wall,
-        throughput_rps: n as f64 / wall_s,
+        throughput_rps: rps(n as f64),
         // an empty steady window means "no steady state was observed",
         // not "infinitely fast": report NaN -> JSON null. bind and wall
         // are measured on different threads, so bind can land within
@@ -200,6 +284,13 @@ pub fn summarize(completions: &[Completion], wall: Duration, setup: SetupTiming)
         p95_ms: percentile(&lat_ms, 0.95),
         p99_ms: percentile(&lat_ms, 0.99),
         sim,
+        queue_wait: SpanAgg::over(completions, |c| c.spans.queue_wait()),
+        bind_wait: SpanAgg::over(completions, |c| c.spans.bind_wait()),
+        service: SpanAgg::over(completions, |c| c.spans.service()),
+        gather_wait: SpanAgg::over(completions, |c| c.spans.gather_wait()),
+        workers,
+        binds,
+        evictions,
         per_model,
         per_layer,
     }
@@ -212,6 +303,16 @@ fn num(v: f64) -> Json {
         Json::Num(v)
     } else {
         Json::Null
+    }
+}
+
+/// `{v:.prec$}` with non-finite values rendered as `n/a` (the print
+/// analogue of the JSON-null convention), never a literal `NaN`.
+fn fmt_or_na(v: f64, prec: usize) -> String {
+    if v.is_finite() {
+        format!("{v:.prec$}")
+    } else {
+        "n/a".to_string()
     }
 }
 
@@ -235,6 +336,34 @@ impl ServeReport {
         o.insert("sim_cycles".into(), num(self.sim.cycles() as f64));
         o.insert("sim_energy_pj".into(), num(self.sim.energy_pj));
         o.insert("sim_instrs".into(), num(self.sim.instrs as f64));
+        o.insert("queue_wait_mean_ms".into(), num(self.queue_wait.mean_ms));
+        o.insert("queue_wait_p99_ms".into(), num(self.queue_wait.p99_ms));
+        o.insert("bind_wait_mean_ms".into(), num(self.bind_wait.mean_ms));
+        o.insert("bind_wait_p99_ms".into(), num(self.bind_wait.p99_ms));
+        o.insert("service_mean_ms".into(), num(self.service.mean_ms));
+        o.insert("service_p99_ms".into(), num(self.service.p99_ms));
+        o.insert("gather_wait_mean_ms".into(), num(self.gather_wait.mean_ms));
+        o.insert("gather_wait_p99_ms".into(), num(self.gather_wait.p99_ms));
+        o.insert("binds".into(), num(self.binds as f64));
+        o.insert("evictions".into(), num(self.evictions as f64));
+        let workers: Vec<Json> = self
+            .workers
+            .iter()
+            .map(|w| {
+                let mut wo: BTreeMap<String, Json> = BTreeMap::new();
+                wo.insert("worker".into(), num(w.worker as f64));
+                wo.insert("utilization".into(), num(w.utilization));
+                wo.insert("busy_ms".into(), num(w.busy_ms));
+                wo.insert("batches".into(), num(w.batches as f64));
+                wo.insert("requests".into(), num(w.requests as f64));
+                wo.insert("binds".into(), num(w.binds as f64));
+                wo.insert("evictions".into(), num(w.evictions as f64));
+                wo.insert("resident_bytes".into(), num(w.resident_bytes as f64));
+                wo.insert("kv_bytes".into(), num(w.kv_bytes as f64));
+                Json::Obj(wo)
+            })
+            .collect();
+        o.insert("workers".into(), Json::Arr(workers));
         let models: Vec<Json> = self
             .per_model
             .iter()
@@ -283,12 +412,27 @@ impl ServeReport {
             self.setup.prepare, self.setup.bind
         );
         println!(
-            "  throughput {:>9.1} req/s (incl. bind)   steady-state {:>9.1} req/s",
-            self.throughput_rps, self.steady_rps
+            "  throughput {:>9} req/s (incl. bind)   steady-state {:>9} req/s",
+            fmt_or_na(self.throughput_rps, 1),
+            fmt_or_na(self.steady_rps, 1)
         );
         println!(
-            "  latency mean {:.2} ms  p50 {:.2}  p95 {:.2}  p99 {:.2}",
-            self.mean_ms, self.p50_ms, self.p95_ms, self.p99_ms
+            "  latency mean {} ms  p50 {}  p95 {}  p99 {}",
+            fmt_or_na(self.mean_ms, 2),
+            fmt_or_na(self.p50_ms, 2),
+            fmt_or_na(self.p95_ms, 2),
+            fmt_or_na(self.p99_ms, 2)
+        );
+        println!(
+            "  breakdown mean/p99 ms: queue {}/{}  bind {}/{}  service {}/{}  gather {}/{}",
+            fmt_or_na(self.queue_wait.mean_ms, 2),
+            fmt_or_na(self.queue_wait.p99_ms, 2),
+            fmt_or_na(self.bind_wait.mean_ms, 2),
+            fmt_or_na(self.bind_wait.p99_ms, 2),
+            fmt_or_na(self.service.mean_ms, 2),
+            fmt_or_na(self.service.p99_ms, 2),
+            fmt_or_na(self.gather_wait.mean_ms, 2),
+            fmt_or_na(self.gather_wait.p99_ms, 2)
         );
         println!(
             "  simulated: {} cycles, {:.1} uJ over {} instrs",
@@ -296,13 +440,28 @@ impl ServeReport {
             self.sim.energy_pj / 1e6,
             self.sim.instrs
         );
+        for w in &self.workers {
+            println!(
+                "  worker {:<3} util% {:>5}  busy {:>9} ms  {:>6} batches  {:>7} req  \
+                 binds {:>4}  evict {:>4}  resident {} B  kv {} B",
+                w.worker,
+                fmt_or_na(w.utilization * 100.0, 1),
+                fmt_or_na(w.busy_ms, 1),
+                w.batches,
+                w.requests,
+                w.binds,
+                w.evictions,
+                w.resident_bytes,
+                w.kv_bytes
+            );
+        }
         if self.per_model.len() > 1 {
             for m in &self.per_model {
                 println!(
-                    "  model {:<20} {:>6} req  {:>9.1} req/s  {} cycles  {:.1} uJ",
+                    "  model {:<20} {:>6} req  {:>9} req/s  {} cycles  {:.1} uJ",
                     m.model,
                     m.requests,
-                    m.throughput_rps,
+                    fmt_or_na(m.throughput_rps, 1),
                     m.cycles,
                     m.energy_pj / 1e6
                 );
@@ -335,5 +494,22 @@ mod tests {
         assert!(v[3].is_nan());
         // and percentiles over the finite prefix still behave
         assert_eq!(percentile(&v[..3], 0.5), 2.0);
+    }
+
+    #[test]
+    fn non_finite_prints_as_na() {
+        assert_eq!(fmt_or_na(1.25, 1), "1.2");
+        assert_eq!(fmt_or_na(f64::NAN, 2), "n/a");
+        assert_eq!(fmt_or_na(f64::INFINITY, 1), "n/a");
+    }
+
+    #[test]
+    fn zero_wall_run_has_no_rate() {
+        // unified with the steady_rps convention: NaN -> JSON null,
+        // not a clamped-denominator fantasy throughput
+        let r = summarize(&[], Duration::ZERO, SetupTiming::default());
+        assert!(r.throughput_rps.is_nan());
+        assert!(r.steady_rps.is_nan());
+        assert_eq!(r.to_json().get("throughput_rps").unwrap(), &Json::Null);
     }
 }

@@ -35,6 +35,13 @@
 //! separately from steady state) and the simulated per-layer
 //! cycle/energy totals into a JSON [`ServeReport`].
 //!
+//! Every request additionally carries a lifecycle span
+//! ([`obs::SpanTrack`]: enqueued → batch-closed → dispatched → bound →
+//! executed → gathered), and the pool keeps a live, lock-cheap metrics
+//! registry ([`obs::Obs`]) queryable mid-run through
+//! [`workers::Server::snapshot`] and exportable as a Chrome
+//! `trace_event` file (`serve-bench --trace`); see [`obs`].
+//!
 //! Outputs are bit-identical to the one-shot path; see DESIGN.md for
 //! the architecture and `soniq serve-bench` (with `--decode` for the
 //! KV-cache comparison) for the end-to-end numbers.
@@ -43,6 +50,7 @@ pub mod batcher;
 pub mod deploy;
 pub mod engine;
 pub mod metrics;
+pub mod obs;
 pub mod session;
 pub mod workers;
 
@@ -53,8 +61,10 @@ pub use engine::{
     PreparedNode, PreparedOp, StepModel, WorkerScratch,
 };
 pub use metrics::{
-    percentile, summarize, LayerAgg, ModelAgg, ServeReport, SetupTiming, SERVE_REPORT_SCHEMA,
+    percentile, summarize, summarize_with, LayerAgg, ModelAgg, ServeReport, SetupTiming, SpanAgg,
+    WorkerRow, SERVE_REPORT_SCHEMA,
 };
+pub use obs::{GroupDepth, HistSummary, LogHist, Obs, ObsSnapshot, SpanTrack, WorkerSnapshot};
 pub use session::SessionState;
 pub use workers::{Completion, ServeConfig, Server, SessionId};
 

@@ -1,0 +1,975 @@
+//! `serve::obs` — live observability for the serving pool.
+//!
+//! Three layers, all cheap on the hot path:
+//!
+//! 1. **Per-request lifecycle spans.** Every [`Request`] carries a
+//!    [`SpanTrack`] of timestamps (enqueued → batch-closed → dispatched
+//!    → bound → started → executed → gathered); the dispatcher and the
+//!    executing worker stamp the marks as the request moves through the
+//!    pool, and every [`Completion`] returns the track, so callers get
+//!    a queue-wait / bind-wait / service / gather-wait breakdown
+//!    instead of one opaque latency.
+//! 2. **A live metrics registry** ([`Obs`]): monotone counters, signed
+//!    gauges and fixed-memory log-bucketed histograms ([`LogHist`]),
+//!    readable mid-run from any thread via [`Obs::snapshot`] without
+//!    pausing the pool. Per-worker slots ([`WorkerObs`]) are relaxed
+//!    atomics written by exactly one worker thread — never a global
+//!    mutex on the hot path. The only locks are the dispatcher-owned
+//!    per-group queue-depth map and the trace lanes below, each with a
+//!    single steady-state writer.
+//! 3. **Chrome trace export** ([`Obs::chrome_trace_json`]): when the
+//!    server starts with tracing on, span events also land in bounded
+//!    per-lane buffers (lane 0 = dispatcher + caller marks, lane
+//!    `1 + w` = worker `w`) and serialize as Chrome `trace_event` JSON
+//!    loadable in Perfetto / `chrome://tracing`. With tracing off no
+//!    event strings are ever built.
+//!
+//! [`Request`]: crate::serve::Request
+//! [`Completion`]: crate::serve::Completion
+
+use crate::serve::engine::EngineEvent;
+use crate::serve::ModelKey;
+use crate::util::json::Json;
+use std::collections::HashMap;
+use std::sync::atomic::Ordering::{Acquire, Relaxed, Release};
+use std::sync::atomic::{AtomicI64, AtomicU64};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Nanoseconds of `d`, saturating at `u64::MAX`.
+pub(crate) fn dur_ns(d: Duration) -> u64 {
+    u64::try_from(d.as_nanos()).unwrap_or(u64::MAX)
+}
+
+fn dur_us(a: Instant, b: Instant) -> f64 {
+    b.saturating_duration_since(a).as_secs_f64() * 1e6
+}
+
+fn jobj(pairs: Vec<(&str, Json)>) -> Json {
+    Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+/// Non-finite values serialize as `null`, matching the `ServeReport`
+/// convention.
+fn jnum(v: f64) -> Json {
+    if v.is_finite() {
+        Json::Num(v)
+    } else {
+        Json::Null
+    }
+}
+
+fn jint(v: u64) -> Json {
+    Json::Num(v as f64)
+}
+
+// ---------------------------------------------------------------------------
+// Per-request lifecycle spans
+// ---------------------------------------------------------------------------
+
+/// Timestamp marks a request accumulates on its way through the pool.
+/// Marks are optional because a request dies mid-flight on shutdown;
+/// every derived duration treats a missing or out-of-order mark as
+/// zero (saturating) rather than panicking.
+#[derive(Debug, Clone, Copy)]
+pub struct SpanTrack {
+    /// Caller handed the request to the server.
+    pub enqueued: Instant,
+    /// Dispatcher closed the batch containing this request.
+    pub batch_closed: Option<Instant>,
+    /// The executing worker popped the batch from the dispatch queue.
+    pub dispatched: Option<Instant>,
+    /// The batch's model was resident on the worker (bind/rebind done).
+    pub bound: Option<Instant>,
+    /// This request's own execution started (earlier requests of the
+    /// batch ran in between `bound` and here).
+    pub started: Option<Instant>,
+    /// This request's own execution finished.
+    pub executed: Option<Instant>,
+    /// All sibling shards finished (sharded requests only).
+    pub gathered: Option<Instant>,
+}
+
+impl SpanTrack {
+    pub fn new(enqueued: Instant) -> SpanTrack {
+        SpanTrack {
+            enqueued,
+            batch_closed: None,
+            dispatched: None,
+            bound: None,
+            started: None,
+            executed: None,
+            gathered: None,
+        }
+    }
+
+    fn span(a: Option<Instant>, b: Option<Instant>) -> Duration {
+        match (a, b) {
+            (Some(a), Some(b)) => b.saturating_duration_since(a),
+            _ => Duration::ZERO,
+        }
+    }
+
+    /// Enqueue → dispatch-queue pop: everything before the executing
+    /// worker first touched the request (batcher close window
+    /// included).
+    pub fn queue_wait(&self) -> Duration {
+        SpanTrack::span(Some(self.enqueued), self.dispatched)
+    }
+
+    /// Dispatch-queue pop → model resident: the bind/rebind cost an
+    /// LRU miss charges to this batch (near zero on a hit).
+    pub fn bind_wait(&self) -> Duration {
+        SpanTrack::span(self.dispatched, self.bound)
+    }
+
+    /// Bind done → this request's turn within the batch.
+    pub fn batch_wait(&self) -> Duration {
+        SpanTrack::span(self.bound, self.started)
+    }
+
+    /// This request's own execution time.
+    pub fn service(&self) -> Duration {
+        SpanTrack::span(self.started, self.executed)
+    }
+
+    /// Sharded requests: how long the first shard waited for the
+    /// slowest sibling after finishing its own slice. Zero for
+    /// whole-model requests.
+    pub fn gather_wait(&self) -> Duration {
+        SpanTrack::span(self.executed, self.gathered)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Log-bucketed histogram
+// ---------------------------------------------------------------------------
+
+const SUB_BITS: usize = 3;
+const SUBS: usize = 1 << SUB_BITS;
+/// 62 octaves x 8 sub-buckets covers the full `u64` range with a fixed
+/// ~4 KiB footprint.
+const N_BUCKETS: usize = (64 - SUB_BITS + 1) * SUBS;
+
+/// Fixed-memory log-bucketed histogram (HDR-histogram-lite): values
+/// below 8 are exact, larger values land in one of 8 sub-buckets per
+/// power of two, so any reported quantile overshoots the exact value
+/// by at most 12.5%. `record` is two relaxed atomic increments —
+/// concurrent readers see a consistent-enough view for live quantiles.
+pub struct LogHist {
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum: AtomicU64,
+}
+
+impl Default for LogHist {
+    fn default() -> LogHist {
+        LogHist::new()
+    }
+}
+
+impl LogHist {
+    pub fn new() -> LogHist {
+        LogHist {
+            buckets: (0..N_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+        }
+    }
+
+    fn bucket(v: u64) -> usize {
+        if v < SUBS as u64 {
+            return v as usize;
+        }
+        let msb = 63 - v.leading_zeros() as usize;
+        let sub = ((v >> (msb - SUB_BITS)) - SUBS as u64) as usize;
+        (msb - SUB_BITS + 1) * SUBS + sub
+    }
+
+    /// Largest value mapping to bucket `i` (the value `quantile`
+    /// reports for ranks landing in that bucket).
+    fn bucket_upper(i: usize) -> u64 {
+        if i < SUBS {
+            return i as u64;
+        }
+        let octave = i / SUBS;
+        let sub = i % SUBS;
+        let width = 1u64 << (octave - 1);
+        let lower = ((SUBS + sub) as u64) << (octave - 1);
+        // `lower + width - 1`, written overflow-safe for the top octave
+        // where the upper bound is `u64::MAX`.
+        lower + (width - 1)
+    }
+
+    pub fn record(&self, v: u64) {
+        self.buckets[LogHist::bucket(v)].fetch_add(1, Relaxed);
+        self.sum.fetch_add(v, Relaxed);
+        self.count.fetch_add(1, Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Relaxed)
+    }
+
+    /// Mean of all recorded values; `NaN` when empty.
+    pub fn mean(&self) -> f64 {
+        let n = self.count.load(Relaxed);
+        if n == 0 {
+            return f64::NAN;
+        }
+        self.sum.load(Relaxed) as f64 / n as f64
+    }
+
+    /// Streaming quantile: upper bound of the bucket holding the
+    /// nearest-rank value (within 12.5% of the exact sorted answer).
+    /// `NaN` when empty.
+    pub fn quantile(&self, q: f64) -> f64 {
+        let n = self.count.load(Relaxed);
+        if n == 0 {
+            return f64::NAN;
+        }
+        let rank = (q.clamp(0.0, 1.0) * (n - 1) as f64).round() as u64;
+        let mut cum = 0u64;
+        let mut last = 0usize;
+        for (i, b) in self.buckets.iter().enumerate() {
+            let c = b.load(Relaxed);
+            if c == 0 {
+                continue;
+            }
+            last = i;
+            cum += c;
+            if cum > rank {
+                return LogHist::bucket_upper(i) as f64;
+            }
+        }
+        // A concurrent `record` can bump `count` before its bucket;
+        // the highest populated bucket is the right answer then.
+        LogHist::bucket_upper(last) as f64
+    }
+
+    /// Count / mean / p50 / p95 / p99 with every value scaled by
+    /// `scale` (e.g. `1e-6` to report nanosecond recordings in ms).
+    pub fn summary(&self, scale: f64) -> HistSummary {
+        HistSummary {
+            count: self.count(),
+            mean: self.mean() * scale,
+            p50: self.quantile(0.50) * scale,
+            p95: self.quantile(0.95) * scale,
+            p99: self.quantile(0.99) * scale,
+        }
+    }
+}
+
+/// Point-in-time digest of one [`LogHist`]; non-finite fields
+/// serialize as `null`.
+#[derive(Debug, Clone, Copy)]
+pub struct HistSummary {
+    pub count: u64,
+    pub mean: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+}
+
+impl HistSummary {
+    pub fn to_json(&self) -> Json {
+        jobj(vec![
+            ("count", jint(self.count)),
+            ("mean", jnum(self.mean)),
+            ("p50", jnum(self.p50)),
+            ("p95", jnum(self.p95)),
+            ("p99", jnum(self.p99)),
+        ])
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Chrome trace sink
+// ---------------------------------------------------------------------------
+
+enum Ph {
+    /// `"X"`: a complete span with a duration (µs).
+    Complete(f64),
+    /// `"i"`: a thread-scoped instant.
+    Instant,
+    /// `"b"`: async span begin, paired by id within a category.
+    AsyncBegin(u64),
+    /// `"e"`: async span end.
+    AsyncEnd(u64),
+}
+
+struct TraceEvent {
+    name: String,
+    cat: &'static str,
+    ph: Ph,
+    ts_us: f64,
+    args: Vec<(&'static str, Json)>,
+}
+
+impl TraceEvent {
+    fn new(name: String, cat: &'static str, ph: Ph, ts_us: f64) -> TraceEvent {
+        TraceEvent { name, cat, ph, ts_us, args: Vec::new() }
+    }
+
+    fn to_json(&self, tid: usize) -> Json {
+        let mut pairs = vec![
+            ("name", Json::Str(self.name.clone())),
+            ("cat", Json::Str(self.cat.to_string())),
+            ("pid", Json::Num(1.0)),
+            ("tid", Json::Num(tid as f64)),
+            ("ts", Json::Num(self.ts_us)),
+        ];
+        match self.ph {
+            Ph::Complete(dur_us) => {
+                pairs.push(("ph", Json::Str("X".to_string())));
+                pairs.push(("dur", Json::Num(dur_us)));
+            }
+            Ph::Instant => {
+                pairs.push(("ph", Json::Str("i".to_string())));
+                pairs.push(("s", Json::Str("t".to_string())));
+            }
+            Ph::AsyncBegin(id) => {
+                pairs.push(("ph", Json::Str("b".to_string())));
+                pairs.push(("id", Json::Str(format!("{id}"))));
+            }
+            Ph::AsyncEnd(id) => {
+                pairs.push(("ph", Json::Str("e".to_string())));
+                pairs.push(("id", Json::Str(format!("{id}"))));
+            }
+        }
+        if !self.args.is_empty() {
+            let args = self.args.iter().map(|(k, v)| (*k, v.clone())).collect();
+            pairs.push(("args", jobj(args)));
+        }
+        jobj(pairs)
+    }
+}
+
+/// Per-lane event cap: past this, events are dropped (and counted)
+/// rather than growing without bound on a long run.
+const LANE_CAP: usize = 1 << 20;
+
+/// Bounded per-lane trace buffers. Lane 0 collects dispatcher events
+/// plus the caller-side submit/complete marks; lane `1 + w` belongs to
+/// worker `w` alone. Each lane has at most two writer threads, so the
+/// mutexes are effectively uncontended — and workers never share one.
+struct TraceSink {
+    lanes: Vec<Mutex<Vec<TraceEvent>>>,
+    dropped: AtomicU64,
+}
+
+impl TraceSink {
+    fn new(lanes: usize) -> TraceSink {
+        TraceSink {
+            lanes: (0..lanes).map(|_| Mutex::new(Vec::new())).collect(),
+            dropped: AtomicU64::new(0),
+        }
+    }
+
+    fn push(&self, lane: usize, ev: TraceEvent) {
+        let mut buf = self.lanes[lane].lock().unwrap();
+        if buf.len() < LANE_CAP {
+            buf.push(ev);
+        } else {
+            self.dropped.fetch_add(1, Relaxed);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The registry
+// ---------------------------------------------------------------------------
+
+/// Per-worker metric slots. Written by exactly one worker thread with
+/// relaxed stores (plus `sessions`/`kv_bytes` refreshed after session
+/// ops on that same worker's engine), read by any snapshotting thread.
+#[derive(Default)]
+pub(crate) struct WorkerObs {
+    pub(crate) busy_ns: AtomicU64,
+    pub(crate) idle_ns: AtomicU64,
+    pub(crate) bind_ns: AtomicU64,
+    pub(crate) batches: AtomicU64,
+    pub(crate) requests: AtomicU64,
+    pub(crate) binds: AtomicU64,
+    pub(crate) evictions: AtomicU64,
+    pub(crate) resident_models: AtomicU64,
+    pub(crate) resident_bytes: AtomicU64,
+    pub(crate) kv_bytes: AtomicU64,
+    pub(crate) sessions: AtomicU64,
+}
+
+type GroupKey = (Arc<ModelKey>, Option<usize>);
+
+/// The live metrics registry one [`Server`] owns (shared as an `Arc`
+/// so [`Obs::snapshot`] works mid-run from any thread).
+///
+/// [`Server`]: crate::serve::Server
+pub struct Obs {
+    epoch: Instant,
+    worker_budget: Option<usize>,
+    submitted: AtomicU64,
+    completed: AtomicU64,
+    batches_closed: AtomicU64,
+    sessions_opened: AtomicU64,
+    sessions_closed: AtomicU64,
+    /// Batches waiting in the shared (any-worker) dispatch queue.
+    queue_shared: AtomicI64,
+    /// Batches waiting in each worker-pinned dispatch queue.
+    queue_pinned: Vec<AtomicI64>,
+    /// Requests sitting in the batcher per `(model, target)` group.
+    /// Dispatcher-only writer; entries drop out at zero depth.
+    groups: Mutex<HashMap<GroupKey, i64>>,
+    /// Shards submitted but not yet gathered into a completion.
+    gather_outstanding: AtomicI64,
+    pub(crate) workers: Vec<WorkerObs>,
+    queue_wait_ns: LogHist,
+    bind_wait_ns: LogHist,
+    service_ns: LogHist,
+    gather_wait_ns: LogHist,
+    latency_ns: LogHist,
+    batch_occupancy: LogHist,
+    trace: Option<TraceSink>,
+}
+
+impl Obs {
+    pub(crate) fn new(n_workers: usize, worker_budget: Option<usize>, tracing: bool) -> Obs {
+        Obs {
+            epoch: Instant::now(),
+            worker_budget,
+            submitted: AtomicU64::new(0),
+            completed: AtomicU64::new(0),
+            batches_closed: AtomicU64::new(0),
+            sessions_opened: AtomicU64::new(0),
+            sessions_closed: AtomicU64::new(0),
+            queue_shared: AtomicI64::new(0),
+            queue_pinned: (0..n_workers).map(|_| AtomicI64::new(0)).collect(),
+            groups: Mutex::new(HashMap::new()),
+            gather_outstanding: AtomicI64::new(0),
+            workers: (0..n_workers).map(|_| WorkerObs::default()).collect(),
+            queue_wait_ns: LogHist::new(),
+            bind_wait_ns: LogHist::new(),
+            service_ns: LogHist::new(),
+            gather_wait_ns: LogHist::new(),
+            latency_ns: LogHist::new(),
+            batch_occupancy: LogHist::new(),
+            trace: tracing.then(|| TraceSink::new(n_workers + 1)),
+        }
+    }
+
+    /// Whether trace-event collection is on. Call sites gate any
+    /// event-string building on this so the off path stays free.
+    pub(crate) fn trace_on(&self) -> bool {
+        self.trace.is_some()
+    }
+
+    fn ts_us(&self, t: Instant) -> f64 {
+        dur_us(self.epoch, t)
+    }
+
+    fn push_trace(&self, lane: usize, ev: TraceEvent) {
+        if let Some(sink) = &self.trace {
+            sink.push(lane, ev);
+        }
+    }
+
+    pub(crate) fn on_submit(&self) {
+        self.submitted.fetch_add(1, Relaxed);
+    }
+
+    pub(crate) fn on_session_open(&self) {
+        self.sessions_opened.fetch_add(1, Relaxed);
+    }
+
+    pub(crate) fn on_session_close(&self) {
+        self.sessions_closed.fetch_add(1, Relaxed);
+    }
+
+    /// Dispatch-queue depth gauge (shared queue when `target` is
+    /// `None`). Called under the queue's own lock, so the gauge can
+    /// never go negative.
+    pub(crate) fn queue_add(&self, target: Option<usize>, delta: i64) {
+        match target {
+            Some(w) => self.queue_pinned[w].fetch_add(delta, Relaxed),
+            None => self.queue_shared.fetch_add(delta, Relaxed),
+        };
+    }
+
+    pub(crate) fn gather_add(&self, delta: i64) {
+        self.gather_outstanding.fetch_add(delta, Relaxed);
+    }
+
+    /// Dispatcher-side: one request entered the batcher group.
+    pub(crate) fn on_group_push(&self, key: &Arc<ModelKey>, target: Option<usize>) {
+        let mut g = self.groups.lock().unwrap();
+        *g.entry((Arc::clone(key), target)).or_insert(0) += 1;
+    }
+
+    /// Dispatcher-side: a closed batch left the batcher for the
+    /// dispatch queue.
+    pub(crate) fn on_batch_close(
+        &self,
+        batch_id: u64,
+        key: &Arc<ModelKey>,
+        target: Option<usize>,
+        size: usize,
+        ts: Instant,
+    ) {
+        self.batches_closed.fetch_add(1, Relaxed);
+        self.batch_occupancy.record(size as u64);
+        {
+            let k = (Arc::clone(key), target);
+            let mut g = self.groups.lock().unwrap();
+            if let Some(d) = g.get_mut(&k) {
+                *d -= size as i64;
+                if *d <= 0 {
+                    g.remove(&k);
+                }
+            }
+        }
+        if self.trace_on() {
+            let name = format!("close batch {batch_id} ({key}, n={size})");
+            self.push_trace(0, TraceEvent::new(name, "batcher", Ph::Instant, self.ts_us(ts)));
+        }
+    }
+
+    /// Worker-side: fold one executed request's span breakdown into
+    /// the streaming histograms.
+    pub(crate) fn record_exec(&self, span: &SpanTrack) {
+        self.queue_wait_ns.record(dur_ns(span.queue_wait()));
+        self.bind_wait_ns.record(dur_ns(span.bind_wait()));
+        self.service_ns.record(dur_ns(span.service()));
+    }
+
+    /// Caller-side: a fully gathered completion left the server.
+    pub(crate) fn on_complete(&self, id: u64, latency: Duration, span: &SpanTrack) {
+        // Release pairs with the Acquire load in `snapshot` so a
+        // concurrent reader that sees this completion also sees its
+        // (earlier, same-thread) submit — `completed` can never be
+        // observed ahead of `submitted`.
+        self.completed.fetch_add(1, Release);
+        self.latency_ns.record(dur_ns(latency));
+        self.gather_wait_ns.record(dur_ns(span.gather_wait()));
+        if self.trace_on() {
+            let end = span.gathered.or(span.executed).unwrap_or_else(Instant::now);
+            let ts = self.ts_us(end);
+            let ev = TraceEvent::new(format!("req {id}"), "request", Ph::AsyncEnd(id), ts);
+            self.push_trace(0, ev);
+        }
+    }
+
+    pub(crate) fn trace_request_begin(&self, id: u64, key: &ModelKey, ts: Instant) {
+        if !self.trace_on() {
+            return;
+        }
+        let ts = self.ts_us(ts);
+        let mut ev = TraceEvent::new(format!("req {id}"), "request", Ph::AsyncBegin(id), ts);
+        ev.args.push(("model", Json::Str(key.to_string())));
+        self.push_trace(0, ev);
+    }
+
+    /// One request's own execution, as an `"X"` span on the worker
+    /// lane (nests inside the batch span).
+    pub(crate) fn trace_exec(
+        &self,
+        wi: usize,
+        id: u64,
+        shard: Option<usize>,
+        t0: Instant,
+        t1: Instant,
+    ) {
+        if !self.trace_on() {
+            return;
+        }
+        let name = match shard {
+            Some(s) => format!("req {id} shard {s}"),
+            None => format!("req {id}"),
+        };
+        let ev = TraceEvent::new(name, "exec", Ph::Complete(dur_us(t0, t1)), self.ts_us(t0));
+        self.push_trace(1 + wi, ev);
+    }
+
+    /// A whole batch's residence on a worker, pop → last request done.
+    pub(crate) fn trace_batch(
+        &self,
+        wi: usize,
+        batch_id: u64,
+        key: &ModelKey,
+        size: usize,
+        t0: Instant,
+        t1: Instant,
+    ) {
+        if !self.trace_on() {
+            return;
+        }
+        let name = format!("batch {batch_id} ({key}, n={size})");
+        let ev = TraceEvent::new(name, "batch", Ph::Complete(dur_us(t0, t1)), self.ts_us(t0));
+        self.push_trace(1 + wi, ev);
+    }
+
+    /// The bind/rebind window at the head of a batch (only emitted
+    /// when the engine actually had to bind).
+    pub(crate) fn trace_bind(&self, wi: usize, key: &ModelKey, t0: Instant, t1: Instant) {
+        if !self.trace_on() {
+            return;
+        }
+        let name = format!("bind {key}");
+        let ev = TraceEvent::new(name, "bind", Ph::Complete(dur_us(t0, t1)), self.ts_us(t0));
+        self.push_trace(1 + wi, ev);
+    }
+
+    /// Engine bind-table churn (LRU evictions, new binds) as instants
+    /// on the worker lane.
+    pub(crate) fn trace_engine_events(&self, wi: usize, events: Vec<EngineEvent>, ts: Instant) {
+        if !self.trace_on() {
+            return;
+        }
+        for ev in events {
+            let (name, cat) = match ev {
+                EngineEvent::Bound(k) => (format!("bound {k}"), "engine"),
+                EngineEvent::Evicted(k) => (format!("evict {k}"), "evict"),
+            };
+            self.push_trace(1 + wi, TraceEvent::new(name, cat, Ph::Instant, self.ts_us(ts)));
+        }
+    }
+
+    /// Session open/close marks on the dispatcher lane.
+    pub(crate) fn trace_session(&self, name: String, ts: Instant) {
+        if !self.trace_on() {
+            return;
+        }
+        self.push_trace(0, TraceEvent::new(name, "session", Ph::Instant, self.ts_us(ts)));
+    }
+
+    /// Point-in-time view of every counter, gauge and histogram.
+    /// Callable from any thread while the pool runs; counters are
+    /// monotone across snapshots and gauges are never negative.
+    pub fn snapshot(&self) -> ObsSnapshot {
+        let workers = self
+            .workers
+            .iter()
+            .enumerate()
+            .map(|(i, w)| {
+                let busy = Duration::from_nanos(w.busy_ns.load(Relaxed));
+                let idle = Duration::from_nanos(w.idle_ns.load(Relaxed));
+                let denom = (busy + idle).as_secs_f64();
+                WorkerSnapshot {
+                    worker: i,
+                    busy,
+                    idle,
+                    bind_time: Duration::from_nanos(w.bind_ns.load(Relaxed)),
+                    utilization: if denom > 0.0 { busy.as_secs_f64() / denom } else { f64::NAN },
+                    batches: w.batches.load(Relaxed),
+                    requests: w.requests.load(Relaxed),
+                    binds: w.binds.load(Relaxed),
+                    evictions: w.evictions.load(Relaxed),
+                    resident_models: w.resident_models.load(Relaxed),
+                    resident_bytes: w.resident_bytes.load(Relaxed),
+                    kv_bytes: w.kv_bytes.load(Relaxed),
+                    sessions: w.sessions.load(Relaxed),
+                }
+            })
+            .collect();
+        let mut group_depths: Vec<GroupDepth> = self
+            .groups
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|((key, target), &depth)| GroupDepth {
+                model: key.to_string(),
+                target: *target,
+                depth,
+            })
+            .collect();
+        group_depths.sort_by(|a, b| (&a.model, a.target).cmp(&(&b.model, b.target)));
+        // `completed` is read first (Acquire, pairing with the Release
+        // increment) so the pair is always consistent: any completion
+        // visible here implies its submit is visible too.
+        let completed = self.completed.load(Acquire);
+        ObsSnapshot {
+            uptime: self.epoch.elapsed(),
+            submitted: self.submitted.load(Relaxed),
+            completed,
+            batches_closed: self.batches_closed.load(Relaxed),
+            sessions_opened: self.sessions_opened.load(Relaxed),
+            sessions_closed: self.sessions_closed.load(Relaxed),
+            queue_shared: self.queue_shared.load(Relaxed),
+            queue_pinned: self.queue_pinned.iter().map(|g| g.load(Relaxed)).collect(),
+            group_depths,
+            gather_outstanding: self.gather_outstanding.load(Relaxed),
+            trace_dropped: self.trace.as_ref().map_or(0, |t| t.dropped.load(Relaxed)),
+            worker_budget: self.worker_budget,
+            workers,
+            queue_wait_ms: self.queue_wait_ns.summary(1e-6),
+            bind_wait_ms: self.bind_wait_ns.summary(1e-6),
+            service_ms: self.service_ns.summary(1e-6),
+            gather_wait_ms: self.gather_wait_ns.summary(1e-6),
+            latency_ms: self.latency_ns.summary(1e-6),
+            batch_occupancy: self.batch_occupancy.summary(1.0),
+        }
+    }
+
+    /// Serialize the trace buffers as Chrome `trace_event` JSON
+    /// (object form: `{"traceEvents": [...]}`), loadable in Perfetto
+    /// and `chrome://tracing`. Lane metadata is always present; the
+    /// event list is empty when the server ran without tracing.
+    pub fn chrome_trace_json(&self) -> Json {
+        let mut events: Vec<Json> = Vec::new();
+        for tid in 0..self.workers.len() + 1 {
+            let name =
+                if tid == 0 { "dispatcher".to_string() } else { format!("worker {}", tid - 1) };
+            events.push(jobj(vec![
+                ("name", Json::Str("thread_name".to_string())),
+                ("ph", Json::Str("M".to_string())),
+                ("pid", Json::Num(1.0)),
+                ("tid", Json::Num(tid as f64)),
+                ("args", jobj(vec![("name", Json::Str(name))])),
+            ]));
+        }
+        if let Some(sink) = &self.trace {
+            let mut timed: Vec<(f64, Json)> = Vec::new();
+            for (tid, lane) in sink.lanes.iter().enumerate() {
+                for ev in lane.lock().unwrap().iter() {
+                    timed.push((ev.ts_us, ev.to_json(tid)));
+                }
+            }
+            timed.sort_by(|a, b| a.0.total_cmp(&b.0));
+            events.extend(timed.into_iter().map(|(_, j)| j));
+        }
+        jobj(vec![
+            ("traceEvents", Json::Arr(events)),
+            ("displayTimeUnit", Json::Str("ms".to_string())),
+        ])
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Snapshots
+// ---------------------------------------------------------------------------
+
+/// Requests waiting in one batcher `(model, target)` group.
+#[derive(Debug, Clone)]
+pub struct GroupDepth {
+    pub model: String,
+    pub target: Option<usize>,
+    pub depth: i64,
+}
+
+/// One worker's row in an [`ObsSnapshot`].
+#[derive(Debug, Clone)]
+pub struct WorkerSnapshot {
+    pub worker: usize,
+    /// Time spent executing batches (bind included).
+    pub busy: Duration,
+    /// Time spent blocked on the dispatch queue.
+    pub idle: Duration,
+    /// Portion of `busy` spent binding/rebinding models.
+    pub bind_time: Duration,
+    /// `busy / (busy + idle)`; `NaN` before the worker first wakes.
+    pub utilization: f64,
+    pub batches: u64,
+    pub requests: u64,
+    pub binds: u64,
+    pub evictions: u64,
+    pub resident_models: u64,
+    pub resident_bytes: u64,
+    pub kv_bytes: u64,
+    pub sessions: u64,
+}
+
+impl WorkerSnapshot {
+    pub fn to_json(&self) -> Json {
+        jobj(vec![
+            ("worker", jint(self.worker as u64)),
+            ("busy_ms", jnum(self.busy.as_secs_f64() * 1e3)),
+            ("idle_ms", jnum(self.idle.as_secs_f64() * 1e3)),
+            ("bind_ms", jnum(self.bind_time.as_secs_f64() * 1e3)),
+            ("utilization", jnum(self.utilization)),
+            ("batches", jint(self.batches)),
+            ("requests", jint(self.requests)),
+            ("binds", jint(self.binds)),
+            ("evictions", jint(self.evictions)),
+            ("resident_models", jint(self.resident_models)),
+            ("resident_bytes", jint(self.resident_bytes)),
+            ("kv_bytes", jint(self.kv_bytes)),
+            ("sessions", jint(self.sessions)),
+        ])
+    }
+}
+
+/// Point-in-time view of the registry (see [`Obs::snapshot`]).
+#[derive(Debug, Clone)]
+pub struct ObsSnapshot {
+    pub uptime: Duration,
+    pub submitted: u64,
+    pub completed: u64,
+    pub batches_closed: u64,
+    pub sessions_opened: u64,
+    pub sessions_closed: u64,
+    pub queue_shared: i64,
+    pub queue_pinned: Vec<i64>,
+    pub group_depths: Vec<GroupDepth>,
+    pub gather_outstanding: i64,
+    /// Trace events discarded after a lane hit its cap.
+    pub trace_dropped: u64,
+    /// Per-worker bind-table byte budget, for reading
+    /// `resident_bytes` against it.
+    pub worker_budget: Option<usize>,
+    pub workers: Vec<WorkerSnapshot>,
+    pub queue_wait_ms: HistSummary,
+    pub bind_wait_ms: HistSummary,
+    pub service_ms: HistSummary,
+    pub gather_wait_ms: HistSummary,
+    pub latency_ms: HistSummary,
+    /// Requests per closed batch (unscaled counts).
+    pub batch_occupancy: HistSummary,
+}
+
+impl ObsSnapshot {
+    pub fn to_json(&self) -> Json {
+        let groups = self
+            .group_depths
+            .iter()
+            .map(|g| {
+                jobj(vec![
+                    ("model", Json::Str(g.model.clone())),
+                    ("target", g.target.map_or(Json::Null, |t| jint(t as u64))),
+                    ("depth", Json::Num(g.depth as f64)),
+                ])
+            })
+            .collect();
+        jobj(vec![
+            ("uptime_s", jnum(self.uptime.as_secs_f64())),
+            ("submitted", jint(self.submitted)),
+            ("completed", jint(self.completed)),
+            ("batches_closed", jint(self.batches_closed)),
+            ("sessions_opened", jint(self.sessions_opened)),
+            ("sessions_closed", jint(self.sessions_closed)),
+            ("queue_shared", Json::Num(self.queue_shared as f64)),
+            (
+                "queue_pinned",
+                Json::Arr(self.queue_pinned.iter().map(|&d| Json::Num(d as f64)).collect()),
+            ),
+            ("group_depths", Json::Arr(groups)),
+            ("gather_outstanding", Json::Num(self.gather_outstanding as f64)),
+            ("trace_dropped", jint(self.trace_dropped)),
+            ("worker_budget", self.worker_budget.map_or(Json::Null, |b| jint(b as u64))),
+            ("workers", Json::Arr(self.workers.iter().map(WorkerSnapshot::to_json).collect())),
+            ("queue_wait_ms", self.queue_wait_ms.to_json()),
+            ("bind_wait_ms", self.bind_wait_ms.to_json()),
+            ("service_ms", self.service_ms.to_json()),
+            ("gather_wait_ms", self.gather_wait_ms.to_json()),
+            ("latency_ms", self.latency_ms.to_json()),
+            ("batch_occupancy", self.batch_occupancy.to_json()),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_upper_bounds_value() {
+        let samples: Vec<u64> = (0..4096)
+            .chain((SUB_BITS as u32 + 1..64).map(|s| (1u64 << s) - 1))
+            .chain((SUB_BITS as u32 + 1..64).map(|s| 1u64 << s))
+            .chain([u64::MAX / 7, u64::MAX / 2, u64::MAX - 1, u64::MAX])
+            .collect();
+        for &v in &samples {
+            let b = LogHist::bucket(v);
+            assert!(b < N_BUCKETS, "bucket {b} out of range for {v}");
+            let hi = LogHist::bucket_upper(b);
+            assert!(hi >= v, "upper {hi} < value {v}");
+            assert!(hi - v <= v / 8, "upper {hi} overshoots {v} by more than 12.5%");
+        }
+    }
+
+    #[test]
+    fn buckets_partition_monotonically() {
+        for i in 1..N_BUCKETS {
+            assert!(LogHist::bucket_upper(i) > LogHist::bucket_upper(i - 1), "at {i}");
+        }
+        for v in 1u64..10_000 {
+            assert!(LogHist::bucket(v) >= LogHist::bucket(v - 1), "at {v}");
+        }
+        assert_eq!(LogHist::bucket(u64::MAX), N_BUCKETS - 1);
+        assert_eq!(LogHist::bucket_upper(N_BUCKETS - 1), u64::MAX);
+    }
+
+    #[test]
+    fn quantile_small_values_exact() {
+        let h = LogHist::new();
+        for v in 1..=7u64 {
+            h.record(v);
+        }
+        assert_eq!(h.quantile(0.0), 1.0);
+        assert_eq!(h.quantile(0.5), 4.0);
+        assert_eq!(h.quantile(1.0), 7.0);
+        assert_eq!(h.count(), 7);
+        assert!((h.mean() - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_hist_is_nan_and_null() {
+        let h = LogHist::new();
+        assert!(h.quantile(0.5).is_nan());
+        assert!(h.mean().is_nan());
+        let s = h.summary(1.0);
+        assert_eq!(s.count, 0);
+        assert_eq!(s.to_json().get("p99").unwrap(), &Json::Null);
+    }
+
+    #[test]
+    fn span_missing_or_reordered_marks_are_zero() {
+        let t0 = Instant::now();
+        let mut s = SpanTrack::new(t0);
+        assert_eq!(s.queue_wait(), Duration::ZERO);
+        assert_eq!(s.service(), Duration::ZERO);
+        s.dispatched = Some(t0 + Duration::from_millis(5));
+        assert_eq!(s.queue_wait(), Duration::from_millis(5));
+        // out-of-order marks saturate instead of panicking
+        s.bound = Some(t0);
+        assert_eq!(s.bind_wait(), Duration::ZERO);
+    }
+
+    #[test]
+    fn snapshot_counts_groups_and_json_shape() {
+        let obs = Obs::new(2, Some(1 << 20), true);
+        let key = Arc::new(ModelKey::new("m", "d"));
+        obs.on_submit();
+        obs.on_group_push(&key, None);
+        obs.on_group_push(&key, None);
+        obs.queue_add(None, 1);
+        obs.queue_add(Some(1), 1);
+        let snap = obs.snapshot();
+        assert_eq!(snap.submitted, 1);
+        assert_eq!(snap.queue_shared, 1);
+        assert_eq!(snap.queue_pinned, vec![0, 1]);
+        assert_eq!(snap.group_depths.len(), 1);
+        assert_eq!(snap.group_depths[0].depth, 2);
+        let j = snap.to_json();
+        assert_eq!(j.get("submitted").unwrap().as_f64().unwrap(), 1.0);
+        assert_eq!(j.get("latency_ms").unwrap().get("p99").unwrap(), &Json::Null);
+        assert_eq!(j.get("workers").unwrap().as_arr().unwrap().len(), 2);
+
+        // closing a batch drains the group and drops the entry at zero
+        obs.on_batch_close(0, &key, None, 2, Instant::now());
+        assert!(obs.snapshot().group_depths.is_empty());
+        assert_eq!(obs.snapshot().batches_closed, 1);
+
+        let trace = obs.chrome_trace_json();
+        let evs = trace.get("traceEvents").unwrap().as_arr().unwrap();
+        // 3 lane-name metadata events + the batch-close instant
+        assert_eq!(evs.len(), 4);
+    }
+
+    #[test]
+    fn trace_off_emits_only_lane_metadata() {
+        let obs = Obs::new(1, None, false);
+        assert!(!obs.trace_on());
+        obs.trace_request_begin(0, &ModelKey::new("m", "d"), Instant::now());
+        let evs_json = obs.chrome_trace_json();
+        let evs = evs_json.get("traceEvents").unwrap().as_arr().unwrap();
+        assert_eq!(evs.len(), 2);
+    }
+}

@@ -43,10 +43,12 @@
 use crate::serve::batcher::{Batch, BatchConfig, DynamicBatcher, Payload, Request};
 use crate::serve::deploy::Deployment;
 use crate::serve::engine::{EngineMachine, PreparedModel};
+use crate::serve::obs::{dur_ns, Obs, ObsSnapshot, SpanTrack};
 use crate::serve::{ModelHandle, ModelKey};
 use crate::sim::machine::RunStats;
 use crate::sim::network::{LayerStat, Tensor};
 use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::Ordering::Relaxed;
 use std::sync::mpsc::{self, RecvTimeoutError};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread;
@@ -68,6 +70,10 @@ pub struct ServeConfig {
     /// matching [`crate::serve::DeployConfig::worker_budget`]); `None` =
     /// unlimited
     pub worker_budget: Option<usize>,
+    /// collect Chrome trace events (see [`Obs::chrome_trace_json`]).
+    /// Off by default: with tracing off no event strings are built, so
+    /// the serving hot path stays unchanged.
+    pub trace: bool,
 }
 
 impl Default for ServeConfig {
@@ -77,6 +83,7 @@ impl Default for ServeConfig {
             batch: BatchConfig::default(),
             resident_models: usize::MAX,
             worker_budget: None,
+            trace: false,
         }
     }
 }
@@ -111,6 +118,10 @@ pub struct Completion {
     /// over every shard)
     pub total: RunStats,
     pub per_layer: Vec<LayerStat>,
+    /// lifecycle timestamps: queue-wait / bind-wait / service /
+    /// gather-wait breakdown instead of one opaque latency (sharded:
+    /// shard 0's track, with `gathered` = the slowest shard's finish)
+    pub spans: SpanTrack,
 }
 
 /// The dispatch queue between the dispatcher and the workers: closed
@@ -121,6 +132,9 @@ pub struct Completion {
 struct DispatchQueue {
     state: Mutex<QueueState>,
     cv: Condvar,
+    /// depth gauges update inside the queue lock, so snapshots can
+    /// never observe a negative depth
+    obs: Arc<Obs>,
 }
 
 struct QueueState {
@@ -130,7 +144,7 @@ struct QueueState {
 }
 
 impl DispatchQueue {
-    fn new(workers: usize) -> DispatchQueue {
+    fn new(workers: usize, obs: Arc<Obs>) -> DispatchQueue {
         DispatchQueue {
             state: Mutex::new(QueueState {
                 shared: VecDeque::new(),
@@ -138,11 +152,13 @@ impl DispatchQueue {
                 closed: false,
             }),
             cv: Condvar::new(),
+            obs,
         }
     }
 
     fn push(&self, batch_id: u64, batch: Batch) {
         let mut st = self.state.lock().unwrap();
+        self.obs.queue_add(batch.target, 1);
         match batch.target {
             Some(w) => st.pinned[w].push_back((batch_id, batch)),
             None => st.shared.push_back((batch_id, batch)),
@@ -166,23 +182,25 @@ impl DispatchQueue {
         loop {
             let p_id = st.pinned[worker].front().map(|&(id, _)| id);
             let s_id = st.shared.front().map(|&(id, _)| id);
-            match (p_id, s_id) {
-                (Some(p), Some(s)) => {
-                    return if p < s {
-                        st.pinned[worker].pop_front()
-                    } else {
-                        st.shared.pop_front()
-                    }
-                }
-                (Some(_), None) => return st.pinned[worker].pop_front(),
-                (None, Some(_)) => return st.shared.pop_front(),
+            let take_pinned = match (p_id, s_id) {
+                (Some(p), Some(s)) => p < s,
+                (Some(_), None) => true,
+                (None, Some(_)) => false,
                 (None, None) => {
                     if st.closed {
                         return None;
                     }
                     st = self.cv.wait(st).unwrap();
+                    continue;
                 }
-            }
+            };
+            return if take_pinned {
+                self.obs.queue_add(Some(worker), -1);
+                st.pinned[worker].pop_front()
+            } else {
+                self.obs.queue_add(None, -1);
+                st.shared.pop_front()
+            };
         }
     }
 }
@@ -280,6 +298,11 @@ fn gather_completion(dep: &Arc<Deployment>, mut parts: Vec<Completion>) -> Compl
             per_layer.push(l);
         }
     }
+    // spans likewise come from shard 0's lane, with `gathered` = the
+    // slowest shard's finish, so `gather_wait` reads as the time shard
+    // 0 spent waiting on its siblings
+    let mut spans = parts[0].spans;
+    spans.gathered = parts.iter().filter_map(|c| c.spans.executed).max();
     // batching stats come from shard 0's lane: every logical request has
     // exactly one shard-0 sub-request, so its batches partition the
     // logical requests and the report's distinct-batch count / mean
@@ -297,7 +320,22 @@ fn gather_completion(dep: &Arc<Deployment>, mut parts: Vec<Completion>) -> Compl
         output,
         total,
         per_layer,
+        spans,
     }
+}
+
+/// Refresh worker `wi`'s engine-derived gauges (bind-table and session
+/// state). Called by the owning worker thread after its eager binds and
+/// after every batch; plain relaxed stores, no locks.
+fn sync_engine_gauges(obs: &Obs, wi: usize, engine: &EngineMachine) {
+    let w = &obs.workers[wi];
+    let c = engine.counters();
+    w.binds.store(c.binds, Relaxed);
+    w.evictions.store(c.evictions, Relaxed);
+    w.resident_models.store(engine.num_resident() as u64, Relaxed);
+    w.resident_bytes.store(engine.resident_bytes() as u64, Relaxed);
+    w.kv_bytes.store(engine.session_kv_bytes() as u64, Relaxed);
+    w.sessions.store(engine.num_sessions() as u64, Relaxed);
 }
 
 /// A running serving instance: one worker pool serving every deployment
@@ -329,6 +367,8 @@ pub struct Server {
     /// open sessions per worker (placement tiebreak)
     worker_sessions: Vec<usize>,
     bind_times: Arc<Mutex<Vec<Duration>>>,
+    /// live metrics registry (shared with the dispatcher and workers)
+    obs: Arc<Obs>,
 }
 
 impl Server {
@@ -431,20 +471,35 @@ impl Server {
         }
         let (submit_tx, submit_rx) = mpsc::channel::<Request>();
         let (result_tx, result_rx) = mpsc::channel::<Completion>();
-        let queue = Arc::new(DispatchQueue::new(n_workers));
+        let obs = Arc::new(Obs::new(n_workers, worker_budget, cfg.trace));
+        let queue = Arc::new(DispatchQueue::new(n_workers, Arc::clone(&obs)));
         let bind_times = Arc::new(Mutex::new(Vec::with_capacity(n_workers)));
 
         let bcfg = cfg.batch;
         let dq = Arc::clone(&queue);
+        let obs_d = Arc::clone(&obs);
         let dispatcher = thread::spawn(move || {
             let mut batcher = DynamicBatcher::new(bcfg);
             let mut batch_id = 0u64;
+            // close one batch: stamp its requests, account it, queue it
+            let mut emit = |mut b: Batch| {
+                let now = Instant::now();
+                for r in &mut b.requests {
+                    r.span.batch_closed = Some(now);
+                }
+                obs_d.on_batch_close(batch_id, &b.model.key, b.target, b.requests.len(), now);
+                dq.push(batch_id, b);
+                batch_id += 1;
+            };
             loop {
                 let closed = match batcher.next_deadline() {
                     // nothing pending: block until a request (or shutdown)
                     // arrives instead of waking on a polling interval
                     None => match submit_rx.recv() {
-                        Ok(req) => batcher.push(req),
+                        Ok(req) => {
+                            obs_d.on_group_push(&req.model.key, req.target);
+                            batcher.push(req)
+                        }
                         Err(_) => break,
                     },
                     // a group is open: wait at most until the earliest
@@ -453,25 +508,25 @@ impl Server {
                     Some(deadline) => {
                         let timeout = deadline.saturating_duration_since(Instant::now());
                         match submit_rx.recv_timeout(timeout) {
-                            Ok(req) => batcher.push(req),
+                            Ok(req) => {
+                                obs_d.on_group_push(&req.model.key, req.target);
+                                batcher.push(req)
+                            }
                             Err(RecvTimeoutError::Timeout) => None,
                             Err(RecvTimeoutError::Disconnected) => break,
                         }
                     }
                 };
                 if let Some(b) = closed {
-                    dq.push(batch_id, b);
-                    batch_id += 1;
+                    emit(b);
                 }
                 while let Some(b) = batcher.poll_deadline(Instant::now()) {
-                    dq.push(batch_id, b);
-                    batch_id += 1;
+                    emit(b);
                 }
             }
             // shutdown: close whatever is pending, in FIFO order
             while let Some(b) = batcher.flush() {
-                dq.push(batch_id, b);
-                batch_id += 1;
+                emit(b);
             }
             dq.close();
         });
@@ -482,14 +537,37 @@ impl Server {
                 let queue = Arc::clone(&queue);
                 let tx = result_tx.clone();
                 let binds = Arc::clone(&bind_times);
+                let obs = Arc::clone(&obs);
                 thread::spawn(move || {
                     let t0 = Instant::now();
                     let mut engine = EngineMachine::with_limits(resident_models, worker_budget);
+                    engine.set_record_events(obs.trace_on());
                     for h in &eager {
                         engine.bind_model(h);
                     }
                     binds.lock().unwrap().push(t0.elapsed());
-                    while let Some((batch_id, batch)) = queue.pop(wi) {
+                    sync_engine_gauges(&obs, wi, &engine);
+                    loop {
+                        let idle0 = Instant::now();
+                        let Some((batch_id, batch)) = queue.pop(wi) else {
+                            break;
+                        };
+                        let t_pop = Instant::now();
+                        let wobs = &obs.workers[wi];
+                        wobs.idle_ns
+                            .fetch_add(dur_ns(t_pop.saturating_duration_since(idle0)), Relaxed);
+                        // bind the batch's model up front so the cost
+                        // lands in `bind_wait`, not the first request's
+                        // service time
+                        let c0 = engine.counters();
+                        engine.bind_model(&batch.model);
+                        let t_bound = Instant::now();
+                        wobs.bind_ns
+                            .fetch_add(dur_ns(t_bound.saturating_duration_since(t_pop)), Relaxed);
+                        if engine.counters().binds > c0.binds {
+                            obs.trace_bind(wi, &batch.model.key, t_pop, t_bound);
+                        }
+                        let batch_model = Arc::clone(&batch.model.key);
                         // completion-producing requests only, so the
                         // field stays consistent with report batch math
                         let batch_size = batch
@@ -497,8 +575,13 @@ impl Server {
                             .iter()
                             .filter(|r| !matches!(r.payload, Payload::Close { .. }))
                             .count();
+                        let mut t_prev = t_bound;
                         for req in batch.requests {
-                            let Request { id, model, payload, enqueued, shard, .. } = req;
+                            let Request { id, model, payload, enqueued, shard, mut span, .. } =
+                                req;
+                            span.dispatched = Some(t_pop);
+                            span.bound = Some(t_bound);
+                            span.started = Some(t_prev);
                             let (output, total, per_layer, session) = match payload {
                                 Payload::Infer(input) => {
                                     let r = engine.run_model(&model, &input);
@@ -514,6 +597,11 @@ impl Server {
                                     continue;
                                 }
                             };
+                            let t_done = Instant::now();
+                            span.executed = Some(t_done);
+                            obs.record_exec(&span);
+                            obs.trace_exec(wi, id, shard, t_prev, t_done);
+                            t_prev = t_done;
                             let done = Completion {
                                 id,
                                 model: Arc::clone(&model.key),
@@ -526,10 +614,20 @@ impl Server {
                                 output,
                                 total,
                                 per_layer,
+                                spans: span,
                             };
                             if tx.send(done).is_err() {
                                 return; // receiver dropped, stop serving
                             }
+                        }
+                        wobs.busy_ns
+                            .fetch_add(dur_ns(t_prev.saturating_duration_since(t_pop)), Relaxed);
+                        wobs.batches.fetch_add(1, Relaxed);
+                        wobs.requests.fetch_add(batch_size as u64, Relaxed);
+                        sync_engine_gauges(&obs, wi, &engine);
+                        obs.trace_batch(wi, batch_id, &batch_model, batch_size, t_pop, t_prev);
+                        if obs.trace_on() {
+                            obs.trace_engine_events(wi, engine.take_events(), t_bound);
                         }
                     }
                 })
@@ -557,7 +655,20 @@ impl Server {
             worker_kv_bytes: vec![0; n_workers],
             worker_sessions: vec![0; n_workers],
             bind_times,
+            obs,
         }
+    }
+
+    /// The live metrics registry, shared: clone the `Arc` into another
+    /// thread to [`Obs::snapshot`] the pool while it serves.
+    pub fn obs(&self) -> Arc<Obs> {
+        Arc::clone(&self.obs)
+    }
+
+    /// Point-in-time view of every counter, gauge and histogram
+    /// (sugar for [`Obs::snapshot`]; callable mid-run).
+    pub fn snapshot(&self) -> ObsSnapshot {
+        self.obs.snapshot()
     }
 
     /// Register a prepared model under `key` as a whole-model
@@ -650,12 +761,15 @@ impl Server {
     fn submit_entry(&mut self, entry: DeployEntry, input: Tensor) -> u64 {
         let id = self.alloc_id();
         let now = Instant::now();
+        self.obs.on_submit();
+        self.obs.trace_request_begin(id, entry.dep.key(), now);
         if !entry.dep.is_sharded() {
             let req = Request::infer(id, &entry.dep.handles()[0], input, now);
             self.send(req);
             return id;
         }
         self.gather.expect(id, Arc::clone(&entry.dep));
+        self.obs.gather_add(entry.dep.num_shards() as i64);
         for (i, h) in entry.dep.handles().iter().enumerate() {
             let req = Request::infer_shard(id, h, i, input.clone(), entry.workers[i], now);
             self.send(req);
@@ -712,6 +826,11 @@ impl Server {
                 handle,
             },
         );
+        self.obs.on_session_open();
+        if self.obs.trace_on() {
+            let name = format!("open session {} (worker {worker})", sid.0);
+            self.obs.trace_session(name, Instant::now());
+        }
         sid
     }
 
@@ -763,7 +882,10 @@ impl Server {
         let kv = meta.kv_bytes_per_step;
         self.worker_kv_bytes[worker] += kv;
         let id = self.alloc_id();
-        let req = Request::step(id, &handle, session.0, token, worker, Instant::now());
+        let now = Instant::now();
+        self.obs.on_submit();
+        self.obs.trace_request_begin(id, &handle.key, now);
+        let req = Request::step(id, &handle, session.0, token, worker, now);
         self.send(req);
         id
     }
@@ -788,6 +910,11 @@ impl Server {
         let id = self.alloc_id();
         let req = Request::close(id, &meta.handle, session.0, meta.worker, Instant::now());
         self.send(req);
+        self.obs.on_session_close();
+        if self.obs.trace_on() {
+            let name = format!("close session {}", session.0);
+            self.obs.trace_session(name, Instant::now());
+        }
     }
 
     /// Snapshot of the per-worker bind (prepare-to-machine) times, one
@@ -800,12 +927,29 @@ impl Server {
         self.bind_times.lock().unwrap().clone()
     }
 
+    /// Gather raw completions and fold the finished ones into the
+    /// observability registry (the single exit point for completions,
+    /// so `completed` stays monotone and pairs with `submitted`).
+    fn finish(&mut self, raw: Vec<Completion>) -> Vec<Completion> {
+        let mut out = Vec::with_capacity(raw.len());
+        for c in raw {
+            if c.shard.is_some() {
+                self.obs.gather_add(-1);
+            }
+            if let Some(done) = self.gather.absorb(c) {
+                self.obs.on_complete(done.id, done.latency, &done.spans);
+                out.push(done);
+            }
+        }
+        out
+    }
+
     /// Completions that have already arrived (non-blocking). Sharded
     /// partials are gathered; a logical request whose shards have not
     /// all finished stays buffered until a later drain.
     pub fn drain_ready(&mut self) -> Vec<Completion> {
         let raw: Vec<Completion> = self.results.try_iter().collect();
-        raw.into_iter().filter_map(|c| self.gather.absorb(c)).collect()
+        self.finish(raw)
     }
 
     /// Stop accepting requests, let the pipeline drain, join every
@@ -825,8 +969,7 @@ impl Server {
             panicked += w.join().is_err() as usize;
         }
         let raw: Vec<Completion> = self.results.try_iter().collect();
-        let done: Vec<Completion> =
-            raw.into_iter().filter_map(|c| self.gather.absorb(c)).collect();
+        let done: Vec<Completion> = self.finish(raw);
         assert!(
             panicked == 0,
             "{panicked} serving thread(s) panicked; only {} completions survived",

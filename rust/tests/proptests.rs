@@ -678,3 +678,46 @@ fn prop_json_roundtrip() {
         Ok(())
     });
 }
+
+/// The observability histogram's accuracy contract: against an exact
+/// sort of the recorded values, every reported quantile lands in
+/// `[exact, exact * 1.125]` — values 0..8 are exact, and above that a
+/// log bucket with 8 sub-buckets per octave overshoots by at most one
+/// sub-bucket width (12.5%).
+#[test]
+fn prop_loghist_quantiles_within_bucket_bounds() {
+    use soniq::serve::LogHist;
+    check("loghist-quantile", 400, |rng| {
+        let h = LogHist::new();
+        let n = 1 + rng.below(400) as usize;
+        let mut vals: Vec<u64> = Vec::with_capacity(n);
+        for _ in 0..n {
+            // span the whole range: the exact small buckets, mid-range
+            // log buckets, octave boundaries, and the u64 extremes
+            let v = match rng.below(4) {
+                0 => rng.below(8),
+                1 => rng.below(100_000),
+                2 => 1u64 << rng.below(63),
+                _ => u64::MAX - rng.below(1 << 20),
+            };
+            h.record(v);
+            vals.push(v);
+        }
+        vals.sort_unstable();
+        if h.count() != n as u64 {
+            return Err(format!("count {} != {n}", h.count()));
+        }
+        for q in [0.0, 0.25, 0.5, 0.9, 0.95, 0.99, 1.0] {
+            let got = h.quantile(q);
+            let rank = (q * (n - 1) as f64).round() as usize;
+            let exact = vals[rank] as f64;
+            if got < exact || got > exact * 1.125 {
+                return Err(format!(
+                    "q={q} n={n}: hist {got} outside [{exact}, {}]",
+                    exact * 1.125
+                ));
+            }
+        }
+        Ok(())
+    });
+}

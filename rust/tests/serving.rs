@@ -14,9 +14,9 @@ use soniq::coordinator::{
     DesignPoint, SyntheticNet,
 };
 use soniq::serve::{
-    serve_all, summarize, BatchConfig, Completion, DeployConfig, Deployment, DynamicBatcher,
-    EngineMachine, GatherMode, ModelHandle, ModelKey, ModelRegistry, PreparedModel, Request,
-    ServeConfig, Server, SessionId, SetupTiming, ShardPlan, SERVE_REPORT_SCHEMA,
+    serve_all, summarize, summarize_with, BatchConfig, Completion, DeployConfig, Deployment,
+    DynamicBatcher, EngineMachine, GatherMode, ModelHandle, ModelKey, ModelRegistry, PreparedModel,
+    Request, ServeConfig, Server, SessionId, SetupTiming, ShardPlan, SERVE_REPORT_SCHEMA,
 };
 use soniq::sim::machine::RunStats;
 use soniq::sim::network::{run_network, LayerStat, Node, Tensor};
@@ -554,6 +554,7 @@ fn lru_eviction_rebinds_models_correctly() {
         batch: BatchConfig { max_batch: 2, max_delay: Duration::from_millis(1) },
         resident_models: 1,
         worker_budget: None,
+        trace: false,
     };
     let mut server = Server::start_pool(&cfg);
     server.register(ka.clone(), Arc::clone(&pa));
@@ -865,6 +866,7 @@ fn fake_completion(id: u64, key: &ModelKey, layer: &str, cycles: u64) -> Complet
         output: Tensor::zeros(1, 1, 1),
         total: stats.clone(),
         per_layer: vec![LayerStat { name: layer.to_string(), shard: None, stats }],
+        spans: soniq::serve::SpanTrack::new(Instant::now()),
     }
 }
 
@@ -1241,4 +1243,212 @@ fn bind_times_returns_a_snapshot_per_worker() {
     let binds: Vec<Duration> = server.bind_times();
     assert_eq!(binds.len(), 3, "one eager-bind entry per worker");
     assert!(binds.iter().all(|d| *d > Duration::ZERO));
+}
+
+// ---------------------------------------------------------------------
+// observability: lifecycle spans, live snapshots, trace export
+// ---------------------------------------------------------------------
+
+#[test]
+fn completion_spans_are_ordered_and_monotone() {
+    // every completion carries its full lifecycle: the marks exist and
+    // never run backwards, even with 3 workers racing over the queue
+    let (net, inputs) = net_and_inputs("tinynet", DesignPoint::Patterns(4), 24);
+    let prepared = Arc::new(PreparedModel::prepare(&net.nodes));
+    let done = serve_all(&prepared, &pool_cfg(3, 4), inputs);
+    assert_eq!(done.len(), 24);
+    for c in &done {
+        let s = &c.spans;
+        let closed = s.batch_closed.expect("dispatcher stamps batch close");
+        let dispatched = s.dispatched.expect("worker stamps dequeue");
+        let bound = s.bound.expect("worker stamps bind");
+        let started = s.started.expect("worker stamps start");
+        let executed = s.executed.expect("worker stamps finish");
+        assert!(s.enqueued <= closed, "request {}", c.id);
+        assert!(closed <= dispatched, "request {}", c.id);
+        assert!(dispatched <= bound, "request {}", c.id);
+        assert!(bound <= started, "request {}", c.id);
+        assert!(started <= executed, "request {}", c.id);
+        assert_eq!(s.gathered, None, "whole-model completions are never gathered");
+        // the derived breakdown telescopes back to enqueue -> executed
+        let total = s.queue_wait() + s.bind_wait() + s.batch_wait() + s.service();
+        assert_eq!(total, executed.duration_since(s.enqueued), "request {}", c.id);
+    }
+}
+
+#[test]
+fn gathered_completion_spans_carry_the_slowest_shard_finish() {
+    let dp = DesignPoint::Patterns(4);
+    let net = synthetic_network("tinywide", dp, 3).unwrap();
+    let inputs = synthetic_inputs(&net, 4, 5);
+    let key = ModelKey::new("tinywide", dp.label());
+    let dcfg = DeployConfig { worker_budget: None, shards: Some(2) };
+    let dep = Arc::new(Deployment::build(key, &net.nodes, None, &dcfg).unwrap());
+    let mut server = Server::start_deployment(Arc::clone(&dep), &pool_cfg(2, 4));
+    for x in &inputs {
+        server.submit(x.clone());
+    }
+    let done = server.shutdown();
+    assert_eq!(done.len(), inputs.len());
+    for c in &done {
+        let executed = c.spans.executed.expect("shard 0 executed");
+        let gathered = c.spans.gathered.expect("gathered completions carry the gather mark");
+        assert!(gathered >= executed, "gather mark is the slowest shard's finish");
+    }
+    let snap = server.snapshot();
+    assert_eq!(snap.gather_outstanding, 0, "every scattered shard was gathered");
+    assert_eq!(snap.completed, inputs.len() as u64, "one completion per logical request");
+    assert_eq!(snap.submitted, inputs.len() as u64, "shard sub-requests are not re-counted");
+}
+
+#[test]
+fn snapshot_is_consistent_mid_run_from_another_thread() {
+    use std::sync::atomic::{AtomicBool, Ordering};
+    let (net, inputs) = net_and_inputs("tinynet", DesignPoint::Patterns(4), 32);
+    let prepared = Arc::new(PreparedModel::prepare(&net.nodes));
+    let mut server = Server::start(Arc::clone(&prepared), &pool_cfg(2, 4));
+    let obs = server.obs();
+    let stop = Arc::new(AtomicBool::new(false));
+    let watcher = {
+        let obs = Arc::clone(&obs);
+        let stop = Arc::clone(&stop);
+        std::thread::spawn(move || {
+            let mut last_completed = 0u64;
+            let mut polls = 0u64;
+            loop {
+                let s = obs.snapshot();
+                assert!(s.queue_shared >= 0, "shared queue gauge went negative");
+                assert!(s.queue_pinned.iter().all(|&d| d >= 0), "pinned gauge went negative");
+                assert!(s.gather_outstanding >= 0, "gather gauge went negative");
+                assert!(s.completed <= s.submitted, "completed overtook submitted");
+                assert!(s.completed >= last_completed, "completed counter regressed");
+                last_completed = s.completed;
+                polls += 1;
+                if stop.load(Ordering::Relaxed) {
+                    return polls;
+                }
+                std::thread::yield_now();
+            }
+        })
+    };
+    for x in inputs {
+        server.submit(x);
+    }
+    let done = server.shutdown();
+    stop.store(true, Ordering::Relaxed);
+    let polls = watcher.join().expect("mid-run snapshots must stay consistent");
+    assert!(polls > 0);
+    assert_eq!(done.len(), 32);
+
+    // the post-shutdown snapshot settles to exact totals
+    let end = server.snapshot();
+    assert_eq!((end.submitted, end.completed), (32, 32));
+    assert_eq!(end.queue_shared, 0);
+    assert!(end.queue_pinned.iter().all(|&d| d == 0));
+    assert_eq!(end.gather_outstanding, 0);
+    assert!(end.group_depths.is_empty(), "no group holds depth after the drain");
+    assert_eq!(end.workers.iter().map(|w| w.requests).sum::<u64>(), 32);
+    assert!(end.workers.iter().map(|w| w.batches).sum::<u64>() >= 8, "32 requests / max batch 4");
+    assert_eq!(end.latency_ms.count, 32);
+    assert!(end.latency_ms.p50 <= end.latency_ms.p99);
+}
+
+#[test]
+fn schema3_report_adds_breakdown_and_worker_rows() {
+    let (net, inputs) = net_and_inputs("tinynet", DesignPoint::Patterns(4), 16);
+    let prepared = Arc::new(PreparedModel::prepare(&net.nodes));
+    let mut server = Server::start(Arc::clone(&prepared), &pool_cfg(2, 4));
+    let t0 = Instant::now();
+    for x in inputs {
+        server.submit(x);
+    }
+    let done = server.shutdown();
+    let wall = t0.elapsed();
+    let snap = server.snapshot();
+    let report = summarize_with(&done, wall, SetupTiming::default(), Some(&snap));
+    assert_eq!(report.requests, 16);
+    assert_eq!(report.workers.len(), 2, "one utilization row per worker");
+    assert!(report.binds >= 2, "each worker eager-binds the model");
+    assert!(report.service.mean_ms > 0.0);
+    assert!(report.queue_wait.mean_ms >= 0.0);
+
+    let parsed = soniq::util::json::parse(&report.to_json().to_string()).unwrap();
+    assert_eq!(parsed.get("schema").unwrap().as_usize().unwrap(), 3);
+    for key in ["queue_wait", "bind_wait", "service", "gather_wait"] {
+        assert!(parsed.get(&format!("{key}_mean_ms")).is_ok(), "{key} mean in schema 3");
+        assert!(parsed.get(&format!("{key}_p99_ms")).is_ok(), "{key} p99 in schema 3");
+    }
+    assert!(parsed.get("binds").is_ok());
+    assert!(parsed.get("evictions").is_ok());
+    let rows = parsed.get("workers").unwrap().as_arr().unwrap();
+    assert_eq!(rows.len(), 2);
+    for row in rows {
+        for key in ["worker", "utilization", "busy_ms", "batches", "requests", "binds"] {
+            assert!(row.get(key).is_ok(), "worker row carries {key}");
+        }
+    }
+    // summarize without a snapshot (the schema-2 call shape) still
+    // works; it just has no worker rows to report
+    let plain = summarize(&done, wall, SetupTiming::default());
+    assert!(plain.workers.is_empty());
+    assert_eq!(plain.binds, 0);
+}
+
+#[test]
+fn trace_export_is_valid_chrome_trace_json() {
+    use soniq::util::json::Json;
+    let (net, inputs) = net_and_inputs("tinynet", DesignPoint::Patterns(4), 12);
+    let prepared = Arc::new(PreparedModel::prepare(&net.nodes));
+    let cfg = ServeConfig { trace: true, ..pool_cfg(2, 4) };
+    let mut server = Server::start(Arc::clone(&prepared), &cfg);
+    for x in inputs {
+        server.submit(x);
+    }
+    let done = server.shutdown();
+    assert_eq!(done.len(), 12);
+
+    let text = server.obs().chrome_trace_json().to_string();
+    let parsed = soniq::util::json::parse(&text).unwrap();
+    let events = parsed.get("traceEvents").unwrap().as_arr().unwrap();
+    let ph = |e: &Json| e.get("ph").unwrap().as_str().unwrap().to_string();
+
+    // lane metadata: dispatcher + one lane per worker
+    let lanes = events.iter().filter(|e| ph(e) == "M").count();
+    assert_eq!(lanes, 3);
+    // every request opens and closes an async span, paired by id
+    let ids = |want: &str| -> HashSet<String> {
+        events
+            .iter()
+            .filter(|e| ph(e) == want)
+            .map(|e| e.get("id").unwrap().as_str().unwrap().to_string())
+            .collect()
+    };
+    let begins = ids("b");
+    assert_eq!(begins.len(), 12, "one async begin per request");
+    assert_eq!(begins, ids("e"), "every request span begin has a matching end");
+    // every execution span sits on a worker lane
+    let execs: Vec<&Json> = events
+        .iter()
+        .filter(|e| ph(e) == "X" && e.get("cat").unwrap().as_str().unwrap() == "exec")
+        .collect();
+    assert_eq!(execs.len(), 12, "one exec span per request");
+    for e in &execs {
+        let tid = e.get("tid").unwrap().as_usize().unwrap();
+        assert!((1..=2).contains(&tid), "exec spans live on worker lanes, got tid {tid}");
+        assert!(e.get("dur").unwrap().as_f64().unwrap() >= 0.0);
+    }
+    let batches = events
+        .iter()
+        .filter(|e| ph(e) == "X" && e.get("cat").unwrap().as_str().unwrap() == "batch")
+        .count();
+    assert!(batches >= 3, "12 requests at max batch 4 close at least 3 batch spans");
+    // events are globally sorted by timestamp (metadata carries no ts)
+    let ts: Vec<f64> = events
+        .iter()
+        .filter(|e| ph(e) != "M")
+        .map(|e| e.get("ts").unwrap().as_f64().unwrap())
+        .collect();
+    assert!(ts.windows(2).all(|w| w[0] <= w[1]), "trace events sorted by ts");
+    let snap = server.snapshot();
+    assert_eq!(snap.trace_dropped, 0, "a 12-request run fits the lane caps");
 }

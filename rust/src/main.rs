@@ -21,6 +21,10 @@
 //!   soniq serve-bench --model tinywide --shards 2 [--worker-budget BYTES] \
 //!         # shard-aware placement: the wide layer splits across workers,
 //!         # scatter/gather outputs bit-identical to the unsharded run
+//!   soniq serve-bench --model tinynet --open-loop --rate 200,800 \
+//!         --deadline-ms 20 --queue-depth 256 \
+//!         # offered-load sweep: goodput + tail latency per rate point,
+//!         # overload shed at the admission gate as typed rejections
 
 use anyhow::{bail, Result};
 use soniq::coordinator::{
@@ -55,7 +59,7 @@ fn train_cfg(args: &Args) -> TrainCfg {
     }
 }
 
-/// Shared serve-bench output sinks: `--json` prints the schema-3 report
+/// Shared serve-bench output sinks: `--json` prints the schema-4 report
 /// to stdout, `--json-out FILE` writes the same JSON to disk, and
 /// `--trace FILE` writes the Chrome trace-event file (load it in
 /// Perfetto or `chrome://tracing`).
@@ -74,6 +78,16 @@ fn emit_serve_outputs(
         std::fs::write(path, server.obs().chrome_trace_json().to_string() + "\n")?;
     }
     Ok(())
+}
+
+/// Copy what a faulted shutdown lost into the report, so dead serving
+/// threads show up in the bench output instead of silently shrinking
+/// the completion count.
+fn attach_faults(report: &mut soniq::serve::ServeReport, server: &soniq::serve::Server) {
+    if let Some(f) = server.faults() {
+        report.lost = f.lost.clone();
+        report.partial = f.partial.clone();
+    }
 }
 
 fn main() -> Result<()> {
@@ -166,6 +180,8 @@ fn main() -> Result<()> {
             let decode = args.has_flag("decode");
             let shards = args.get_usize("shards", 0); // 0/1 = no explicit split
             let worker_budget = args.get_usize("worker-budget", 0); // bytes; 0 = unlimited
+            let open_loop = args.has_flag("open-loop");
+            let queue_depth = args.get_usize("queue-depth", 0); // 0 = unbounded
 
             let registry = serve::ModelRegistry::new();
             let cfg = ServeConfig {
@@ -177,6 +193,7 @@ fn main() -> Result<()> {
                 resident_models: args.get_usize("resident-models", usize::MAX).max(1),
                 worker_budget: (worker_budget > 0).then_some(worker_budget),
                 trace: args.get("trace").is_some(),
+                queue_depth: (queue_depth > 0).then_some(queue_depth),
             };
 
             let models_arg = args.get_or("models", "");
@@ -194,6 +211,12 @@ fn main() -> Result<()> {
                          not combine with --models"
                     );
                 }
+                if open_loop {
+                    bail!(
+                        "--open-loop drives a single --model deployment (stateless \
+                         or --decode); it does not combine with --models"
+                    );
+                }
                 let names: Vec<String> = models_arg
                     .split(',')
                     .map(|s| s.trim().to_string())
@@ -207,13 +230,20 @@ fn main() -> Result<()> {
                     names.join(", "),
                     design.label()
                 );
-                let per_model = (n_requests / names.len()).max(1);
+                // split the requested total across models without
+                // dropping the division remainder: the first
+                // `n_requests % k` models take one extra request, so
+                // the counts sum to exactly `n_requests`
+                let k = names.len();
+                let rem = n_requests % k;
+                let counts: Vec<usize> =
+                    (0..k).map(|mi| n_requests / k + usize::from(mi < rem)).collect();
 
                 let mut nets = Vec::new(); // (key, net, inputs)
-                for name in &names {
+                for (mi, name) in names.iter().enumerate() {
                     let net = synthetic_network(name, design, seed)?;
                     let key = serve::ModelKey::new(name.clone(), design.label());
-                    let inputs = synthetic_inputs(&net, per_model, seed + 1);
+                    let inputs = synthetic_inputs(&net, counts[mi], seed + 1);
                     nets.push((key, net, inputs));
                 }
                 // time only preparation (codegen + packing), matching
@@ -241,9 +271,10 @@ fn main() -> Result<()> {
                     })
                     .collect();
 
+                let total: usize = counts.iter().sum();
                 println!(
                     "one pool, {} models interleaved ({workers} workers, max batch \
-                     {max_batch}, {per_model} requests/model):",
+                     {max_batch}, {total} requests total):",
                     fleet.len()
                 );
                 let t2 = Instant::now();
@@ -252,10 +283,18 @@ fn main() -> Result<()> {
                     server.register(key.clone(), Arc::clone(prepared));
                 }
                 // round-robin submission: every batching window sees
-                // every model, the worst case for bind-table churn
-                for i in 0..per_model {
-                    for (key, _, inputs) in &fleet {
-                        server.submit_model(key, inputs[i].clone());
+                // every model, the worst case for bind-table churn.
+                // counts differ by at most one, so the last round only
+                // visits the remainder models — record each sequential
+                // id's (model, request) owner instead of assuming a
+                // uniform stride
+                let mut owner: Vec<(usize, usize)> = Vec::with_capacity(total);
+                for i in 0..counts[0] {
+                    for (mi, (key, _, inputs)) in fleet.iter().enumerate() {
+                        if i < inputs.len() {
+                            server.submit_model(key, inputs[i].clone());
+                            owner.push((mi, i));
+                        }
                     }
                 }
                 let mut done = server.shutdown();
@@ -263,15 +302,14 @@ fn main() -> Result<()> {
                 done.sort_by_key(|c| c.id);
                 let bind = server.bind_times().into_iter().max().unwrap_or_default();
                 let snap = server.snapshot();
-                let report =
+                let mut report =
                     serve::summarize_with(&done, wall, SetupTiming { prepare, bind }, Some(&snap));
+                attach_faults(&mut report, &server);
                 report.print();
 
-                // ids were assigned round-robin: id = i * n_models + mi
-                let bitexact = done.len() == per_model * fleet.len()
+                let bitexact = done.len() == total
                     && done.iter().all(|c| {
-                        let mi = (c.id as usize) % fleet.len();
-                        let ri = (c.id as usize) / fleet.len();
+                        let (mi, ri) = owner[c.id as usize];
                         c.output.data == dedicated[mi][ri]
                     });
                 println!("  outputs bit-identical to dedicated single-model engines: {bitexact}");
@@ -291,6 +329,178 @@ fn main() -> Result<()> {
                     "--shards does not combine with --decode: sharded decoders are \
                      unsupported (KV sessions pin whole models)"
                 );
+            }
+            if open_loop {
+                // --- open-loop harness: offered load, not backlog ---
+                // a fresh server per rate point takes a deterministic
+                // Poisson (or bursty) arrival schedule; the driver
+                // never waits for completions, so tail latency, good-
+                // put under a deadline, and admission rejections are
+                // measured against load the pool did not choose
+                if shards >= 2 || worker_budget > 0 {
+                    bail!(
+                        "--open-loop does not combine with --shards/--worker-budget \
+                         (sharded open-loop serving is an open roadmap item)"
+                    );
+                }
+                let burst = args.has_flag("burst");
+                let deadline_ms = args.get_f32("deadline-ms", 50.0) as f64;
+                if deadline_ms <= 0.0 || deadline_ms.is_nan() {
+                    bail!("--deadline-ms wants a positive latency budget");
+                }
+                let rates: Vec<f64> = args
+                    .get_or("rate", "100,400")
+                    .split(',')
+                    .map(|s| s.trim().parse::<f64>())
+                    .collect::<Result<_, _>>()?;
+                if rates.is_empty() || rates.iter().any(|r| *r <= 0.0 || r.is_nan()) {
+                    bail!("--rate wants a comma-separated list of positive req/s rates");
+                }
+
+                // drain completions while waiting out a schedule gap:
+                // the driver never blocks on results (open loop), but
+                // it must keep the channel empty so in-flight depth
+                // reflects real backlog, not undrained finishes
+                fn pump(
+                    server: &mut soniq::serve::Server,
+                    done: &mut Vec<soniq::serve::Completion>,
+                    start: std::time::Instant,
+                    off: std::time::Duration,
+                ) {
+                    loop {
+                        done.extend(server.drain_ready());
+                        let elapsed = start.elapsed();
+                        if elapsed >= off {
+                            return;
+                        }
+                        std::thread::sleep((off - elapsed).min(Duration::from_micros(200)));
+                    }
+                }
+
+                let n_sessions = args.get_usize("sessions", 4).max(1);
+                let steps_cap = n_requests.div_ceil(n_sessions);
+                if decode {
+                    if net.step_nodes.is_none() {
+                        bail!("--decode needs a decoder model (try --model tinydec)");
+                    }
+                    if steps_cap > net.max_positions {
+                        bail!(
+                            "open-loop decode offers up to {steps_cap} steps/session \
+                             but max_positions is {}; raise --sessions or lower \
+                             --requests",
+                            net.max_positions
+                        );
+                    }
+                }
+                let tokens: Vec<Vec<Tensor>> = if decode {
+                    (0..n_sessions)
+                        .map(|s| synthetic_step_inputs(&net, s as u64, steps_cap, seed + 1))
+                        .collect()
+                } else {
+                    Vec::new()
+                };
+                let inputs =
+                    if decode { Vec::new() } else { synthetic_inputs(&net, n_requests, seed + 1) };
+
+                let t1 = Instant::now();
+                let prepared = registry.get_or_prepare(&key, || net.prepare());
+                let prepare = t1.elapsed();
+                println!(
+                    "prepared `{key}` in {prepare:.2?}; open-loop sweep: {n_requests} \
+                     {} per point, deadline {deadline_ms} ms{}{}",
+                    if decode { "decode-step arrivals" } else { "arrivals" },
+                    if burst { ", bursty arrivals" } else { "" },
+                    match cfg.queue_depth {
+                        Some(d) => format!(", queue depth {d}"),
+                        None => ", unbounded queue".to_string(),
+                    }
+                );
+
+                let mut points: Vec<serve::OpenLoopPoint> = Vec::new();
+                let mut last = None;
+                for (pi, &rate) in rates.iter().enumerate() {
+                    let spec = serve::ArrivalSpec {
+                        rate,
+                        n: n_requests,
+                        burst,
+                        seed: seed + pi as u64,
+                    };
+                    let offsets = serve::arrival_offsets(&spec);
+                    let mut server =
+                        serve::Server::start_named(key.clone(), Arc::clone(&prepared), &cfg);
+                    let mut done: Vec<serve::Completion> = Vec::new();
+                    let start = Instant::now();
+                    if decode {
+                        // arrivals are decode steps round-robined over
+                        // a fixed session set: they land in per-session
+                        // lanes mid-flight, which is exactly what
+                        // iteration-level scheduling re-batches
+                        let sids: Vec<serve::SessionId> =
+                            (0..n_sessions).map(|_| server.open_session()).collect();
+                        let mut steps_in = vec![0usize; n_sessions];
+                        for (i, off) in offsets.iter().enumerate() {
+                            pump(&mut server, &mut done, start, *off);
+                            let si = i % n_sessions;
+                            let tok = tokens[si][steps_in[si]].clone();
+                            if server.try_submit_step(sids[si], tok).is_ok() {
+                                steps_in[si] += 1;
+                            }
+                        }
+                        for sid in &sids {
+                            server.close_session(*sid);
+                        }
+                    } else {
+                        for (i, off) in offsets.iter().enumerate() {
+                            pump(&mut server, &mut done, start, *off);
+                            let _ = server.try_submit(inputs[i].clone());
+                        }
+                    }
+                    done.extend(server.shutdown());
+                    let wall = start.elapsed();
+                    let snap = server.snapshot();
+                    let mut lat: Vec<f64> =
+                        done.iter().map(|c| c.latency.as_secs_f64() * 1e3).collect();
+                    lat.sort_by(|a, b| a.total_cmp(b));
+                    let good = done
+                        .iter()
+                        .filter(|c| c.latency.as_secs_f64() * 1e3 <= deadline_ms)
+                        .count();
+                    let point = serve::OpenLoopPoint {
+                        offered_rps: rate,
+                        offered: n_requests,
+                        completed: done.len(),
+                        good,
+                        rejected: snap.rejected,
+                        deadline_ms,
+                        goodput_rps: good as f64 / wall.as_secs_f64().max(1e-9),
+                        p50_ms: serve::percentile(&lat, 0.50),
+                        p95_ms: serve::percentile(&lat, 0.95),
+                        p99_ms: serve::percentile(&lat, 0.99),
+                    };
+                    println!(
+                        "  @ {rate:.0} req/s: completed {}/{} (good {}, rejected {}) \
+                         in {wall:.2?} -> {:.1} goodput rps, p99 {:.2} ms",
+                        point.completed,
+                        point.offered,
+                        point.good,
+                        point.rejected,
+                        point.goodput_rps,
+                        point.p99_ms
+                    );
+                    points.push(point);
+                    last = Some((done, wall, server));
+                }
+
+                let (done, wall, server) = last.expect("at least one rate point");
+                let bind = server.bind_times().into_iter().max().unwrap_or_default();
+                let snap = server.snapshot();
+                let mut report =
+                    serve::summarize_with(&done, wall, SetupTiming { prepare, bind }, Some(&snap));
+                report.open_loop = points;
+                attach_faults(&mut report, &server);
+                report.print();
+                emit_serve_outputs(&args, &report, &server)?;
+                return Ok(());
             }
             if !decode && (shards >= 2 || worker_budget > 0) {
                 // --- shard-aware placement: scatter/gather across workers ---
@@ -339,8 +549,9 @@ fn main() -> Result<()> {
                 done.sort_by_key(|c| c.id);
                 let bind = server.bind_times().into_iter().max().unwrap_or_default();
                 let snap = server.snapshot();
-                let report =
+                let mut report =
                     serve::summarize_with(&done, wall, SetupTiming { prepare, bind }, Some(&snap));
+                attach_faults(&mut report, &server);
                 report.print();
 
                 let bitexact = done.len() == inputs.len()
@@ -409,8 +620,9 @@ fn main() -> Result<()> {
                 done.sort_by_key(|c| c.id);
                 let bind = server.bind_times().into_iter().max().unwrap_or_default();
                 let snap = server.snapshot();
-                let report =
+                let mut report =
                     serve::summarize_with(&done, wall, SetupTiming { prepare, bind }, Some(&snap));
+                attach_faults(&mut report, &server);
                 report.print();
 
                 // prefix-repack baseline: re-run session 0's whole prefix
@@ -500,12 +712,13 @@ fn main() -> Result<()> {
             completions.sort_by_key(|c| c.id);
             let bind = server.bind_times().into_iter().max().unwrap_or_default();
             let snap = server.snapshot();
-            let report = serve::summarize_with(
+            let mut report = serve::summarize_with(
                 &completions,
                 wall,
                 SetupTiming { prepare, bind },
                 Some(&snap),
             );
+            attach_faults(&mut report, &server);
             report.print();
 
             let bitexact = completions
@@ -528,8 +741,9 @@ fn main() -> Result<()> {
                 "       serve-bench [--model M | --models A,B,C] [--design D] \
                  [--requests N] [--workers W] [--max-batch B] [--max-delay-ms MS] \
                  [--resident-models R] [--shards S] [--worker-budget BYTES] \
-                 [--decode --steps N --sessions S] [--json] [--json-out FILE] \
-                 [--trace FILE]"
+                 [--decode --steps N --sessions S] [--queue-depth N] \
+                 [--open-loop --rate R1,R2 [--burst] [--deadline-ms MS]] \
+                 [--json] [--json-out FILE] [--trace FILE]"
             );
             eprintln!("       see README.md for the full CLI");
         }

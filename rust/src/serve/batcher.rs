@@ -17,9 +17,10 @@
 //! pinned worker's queue (`target: Some(w)`).
 
 use crate::serve::obs::SpanTrack;
-use crate::serve::ModelHandle;
+use crate::serve::{ModelHandle, ModelKey};
 use crate::sim::network::Tensor;
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 /// Batching policy knobs.
@@ -163,16 +164,37 @@ pub struct Batch {
     pub requests: Vec<Request>,
 }
 
+/// A group's identity: the model it addresses plus its worker affinity.
+type GroupKey = (Arc<ModelKey>, Option<usize>);
+
 /// The batch-close policy: accumulates requests into per-`(model,
 /// target)` groups (open [`Batch`]es), emits one on the size trigger
 /// ([`push`](Self::push)) or the deadline trigger
-/// ([`poll_deadline`](Self::poll_deadline)). Groups are kept in arrival
+/// ([`poll_deadline`](Self::poll_deadline)). Groups close in arrival
 /// order of their oldest request, so the front group always carries the
 /// earliest deadline (FIFO fairness).
+///
+/// Open groups live in a `(model, target)` index map so `push` is O(1)
+/// in the number of live groups — continuous decode keeps one group
+/// open per pinned worker, and a linear scan per push would go
+/// quadratic exactly under that load. FIFO order is kept in a parallel
+/// deque of `(key, generation)` entries; a size-closed group leaves its
+/// deque entry behind as a stale marker (its generation no longer
+/// matches the map), skipped lazily and dropped when it reaches the
+/// front. Each close strands at most one marker, so the lazy cleanup is
+/// amortized O(1).
 #[derive(Debug)]
 pub struct DynamicBatcher {
     cfg: BatchConfig,
-    groups: VecDeque<Batch>,
+    /// open groups; the `u64` is the generation stamped at group
+    /// creation, tying each map entry to its `order` entry
+    groups: HashMap<GroupKey, (u64, Batch)>,
+    /// group creation order — equal to the order of each group's oldest
+    /// request, since a group is created by its first request
+    order: VecDeque<(GroupKey, u64)>,
+    next_gen: u64,
+    /// requests currently held across all open groups
+    pending: usize,
 }
 
 impl DynamicBatcher {
@@ -180,51 +202,79 @@ impl DynamicBatcher {
         // normalize rather than panic: a zero max_batch from a CLI flag
         // degenerates to single-request batches
         let cfg = BatchConfig { max_batch: cfg.max_batch.max(1), ..cfg };
-        DynamicBatcher { cfg, groups: VecDeque::new() }
+        DynamicBatcher {
+            cfg,
+            groups: HashMap::new(),
+            order: VecDeque::new(),
+            next_gen: 0,
+            pending: 0,
+        }
     }
 
     /// Requests currently waiting for a batch to close.
     pub fn len(&self) -> usize {
-        self.groups.iter().map(|g| g.requests.len()).sum()
+        self.pending
     }
 
     pub fn is_empty(&self) -> bool {
         self.groups.is_empty()
     }
 
+    /// Drop stale front `order` entries left behind by size-closed
+    /// groups, so the front always names a live group (or is empty).
+    fn prune_front(&mut self) {
+        while let Some((key, gen)) = self.order.front() {
+            match self.groups.get(key) {
+                Some((live, _)) if live == gen => break,
+                _ => {
+                    self.order.pop_front();
+                }
+            }
+        }
+    }
+
     /// Enqueue one request into its `(model, target)` group; returns
     /// that group as a closed batch if this push filled it to
     /// `max_batch`.
     pub fn push(&mut self, r: Request) -> Option<Batch> {
-        let pos = self
-            .groups
-            .iter()
-            .position(|g| g.model.key == r.model.key && g.target == r.target);
-        let idx = match pos {
-            Some(i) => {
-                self.groups[i].requests.push(r);
-                i
+        let key: GroupKey = (Arc::clone(&r.model.key), r.target);
+        if let Some((_, open)) = self.groups.get_mut(&key) {
+            open.requests.push(r);
+            self.pending += 1;
+            if open.requests.len() >= self.cfg.max_batch {
+                let (_, batch) = self.groups.remove(&key).expect("group just updated");
+                self.pending -= batch.requests.len();
+                self.prune_front();
+                return Some(batch);
             }
-            None => {
-                let model = r.model.clone();
-                self.groups.push_back(Batch { model, target: r.target, requests: vec![r] });
-                self.groups.len() - 1
-            }
-        };
-        if self.groups[idx].requests.len() >= self.cfg.max_batch {
-            self.groups.remove(idx)
-        } else {
-            None
+            return None;
         }
+        let model = r.model.clone();
+        let target = r.target;
+        let batch = Batch { model, target, requests: vec![r] };
+        if batch.requests.len() >= self.cfg.max_batch {
+            // max_batch normalized to >= 1: singleton groups close on
+            // arrival and never enter the index
+            return Some(batch);
+        }
+        let gen = self.next_gen;
+        self.next_gen += 1;
+        self.pending += 1;
+        self.groups.insert(key.clone(), (gen, batch));
+        self.order.push_back((key, gen));
+        None
     }
 
     /// The instant at which the oldest open group must close (its first
-    /// request + `max_delay`); `None` while empty. Because groups are
-    /// ordered by first arrival, this is the earliest deadline overall.
+    /// request + `max_delay`); `None` while empty. Because groups close
+    /// in first-arrival order, this is the earliest deadline overall.
     pub fn next_deadline(&self) -> Option<Instant> {
-        self.groups
-            .front()
-            .map(|g| g.requests[0].enqueued + self.cfg.max_delay)
+        self.order.iter().find_map(|(key, gen)| match self.groups.get(key) {
+            Some((live, batch)) if live == gen => {
+                Some(batch.requests[0].enqueued + self.cfg.max_delay)
+            }
+            _ => None,
+        })
     }
 
     /// Close the oldest group if its deadline has passed as of `now`
@@ -239,6 +289,10 @@ impl DynamicBatcher {
     /// Close the oldest open group unconditionally (shutdown drain;
     /// call until `None`).
     pub fn flush(&mut self) -> Option<Batch> {
-        self.groups.pop_front()
+        self.prune_front();
+        let (key, _) = self.order.pop_front()?;
+        let (_, batch) = self.groups.remove(&key).expect("front group is live after prune");
+        self.pending -= batch.requests.len();
+        Some(batch)
     }
 }

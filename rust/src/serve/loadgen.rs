@@ -1,0 +1,151 @@
+//! Open-loop traffic generation: arrival schedules that do not wait
+//! for completions. A closed-loop bench (submit everything, drain at
+//! shutdown) measures backlog throughput; an open-loop one offers load
+//! at a fixed rate regardless of how the server keeps up, which is the
+//! only way tail latency, goodput-under-deadline, and admission
+//! behavior mean anything. The generator is deterministic (seeded
+//! xorshift64*, no external RNG), so a given `(rate, n, burst, seed)`
+//! always produces the same schedule — benches are reproducible and
+//! two backends see identical traffic.
+//!
+//! Two arrival processes:
+//! - **Poisson**: i.i.d. exponential inter-arrival gaps at `rate`
+//!   (memoryless — the classic open-system model).
+//! - **Bursty**: geometrically sized bursts (mean [`MEAN_BURST`])
+//!   arriving as a Poisson process at `rate / MEAN_BURST`, so the
+//!   long-run offered rate matches `rate` while arrivals clump — the
+//!   adversarial case for admission control and batch formation.
+
+use std::time::Duration;
+
+/// Mean burst size of the bursty arrival process.
+pub const MEAN_BURST: f64 = 4.0;
+
+/// Deterministic xorshift64* generator (Vigna 2016): tiny, seedable,
+/// and good enough for arrival-schedule sampling; serving code must
+/// not pull in an RNG crate for this.
+#[derive(Debug, Clone)]
+pub struct Rng64 {
+    state: u64,
+}
+
+impl Rng64 {
+    /// `seed` may be anything; the zero state (a fixed point of the
+    /// xorshift) is remapped.
+    pub fn new(seed: u64) -> Rng64 {
+        Rng64 { state: if seed == 0 { 0x9E37_79B9_7F4A_7C15 } else { seed } }
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.state;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.state = x;
+        x.wrapping_mul(0x2545_F491_4F6C_DD1D)
+    }
+
+    /// Uniform sample in `(0, 1]` (53-bit mantissa; never 0, so
+    /// `ln(u)` is always finite).
+    pub fn uniform(&mut self) -> f64 {
+        ((self.next_u64() >> 11) as f64 + 1.0) / (1u64 << 53) as f64
+    }
+}
+
+/// An open-loop arrival schedule request.
+#[derive(Debug, Clone, Copy)]
+pub struct ArrivalSpec {
+    /// mean offered rate, requests per second (> 0)
+    pub rate: f64,
+    /// number of arrivals to generate
+    pub n: usize,
+    /// clump arrivals into geometric bursts (same long-run rate)
+    pub burst: bool,
+    pub seed: u64,
+}
+
+/// Generate `spec.n` arrival offsets from time zero, non-decreasing.
+/// The driver submits request `i` once `offsets[i]` has elapsed —
+/// never earlier, and without waiting for earlier completions.
+pub fn arrival_offsets(spec: &ArrivalSpec) -> Vec<Duration> {
+    let rate = spec.rate.max(1e-9);
+    let mut rng = Rng64::new(spec.seed ^ 0x6A09_E667_F3BC_C909);
+    let mut out = Vec::with_capacity(spec.n);
+    let mut t = 0.0f64;
+    if !spec.burst {
+        for _ in 0..spec.n {
+            t += -rng.uniform().ln() / rate;
+            out.push(Duration::from_secs_f64(t));
+        }
+        return out;
+    }
+    // bursts arrive as a Poisson process at rate / MEAN_BURST; each
+    // carries a geometric number of simultaneous requests with mean
+    // MEAN_BURST, so the long-run offered rate is still `rate`
+    let p = 1.0 / MEAN_BURST;
+    while out.len() < spec.n {
+        t += -rng.uniform().ln() / (rate * p);
+        let size = 1 + (rng.uniform().ln() / (1.0 - p).ln()).floor() as usize;
+        for _ in 0..size.min(spec.n - out.len()) {
+            out.push(Duration::from_secs_f64(t));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(rate: f64, n: usize, burst: bool, seed: u64) -> ArrivalSpec {
+        ArrivalSpec { rate, n, burst, seed }
+    }
+
+    #[test]
+    fn schedules_are_deterministic_and_monotone() {
+        for burst in [false, true] {
+            let a = arrival_offsets(&spec(500.0, 256, burst, 7));
+            let b = arrival_offsets(&spec(500.0, 256, burst, 7));
+            assert_eq!(a, b, "same seed must replay the same schedule");
+            assert_eq!(a.len(), 256);
+            assert!(a.windows(2).all(|w| w[0] <= w[1]), "offsets must be non-decreasing");
+            let c = arrival_offsets(&spec(500.0, 256, burst, 8));
+            assert_ne!(a, c, "a different seed must vary the schedule");
+        }
+    }
+
+    #[test]
+    fn poisson_long_run_rate_matches_offered() {
+        let n = 20_000;
+        let offsets = arrival_offsets(&spec(1000.0, n, false, 42));
+        let span = offsets[n - 1].as_secs_f64();
+        let rate = n as f64 / span;
+        assert!((rate - 1000.0).abs() < 50.0, "empirical rate {rate} far from offered 1000");
+        // memoryless gaps: distinct, strictly increasing almost surely
+        let distinct = offsets.windows(2).filter(|w| w[0] < w[1]).count();
+        assert!(distinct > n * 9 / 10, "Poisson arrivals should rarely coincide");
+    }
+
+    #[test]
+    fn bursty_clumps_but_keeps_the_long_run_rate() {
+        let n = 20_000;
+        let offsets = arrival_offsets(&spec(1000.0, n, true, 42));
+        let span = offsets[n - 1].as_secs_f64();
+        let rate = n as f64 / span;
+        assert!((rate - 1000.0).abs() < 100.0, "empirical rate {rate} far from offered 1000");
+        // arrivals inside one burst share an offset exactly
+        let coincident = offsets.windows(2).filter(|w| w[0] == w[1]).count();
+        let frac = coincident as f64 / (n - 1) as f64;
+        // mean burst 4 => ~3 of every 4 consecutive pairs coincide
+        assert!(frac > 0.5, "burst mode should clump arrivals (got {frac})");
+    }
+
+    #[test]
+    fn uniform_stays_in_half_open_unit_interval() {
+        let mut rng = Rng64::new(0); // zero seed is remapped, not a fixed point
+        for _ in 0..10_000 {
+            let u = rng.uniform();
+            assert!(u > 0.0 && u <= 1.0, "uniform sample {u} out of (0, 1]");
+        }
+    }
+}

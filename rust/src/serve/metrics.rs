@@ -25,9 +25,12 @@ use std::time::Duration;
 /// per-layer rows gained the `shard` dimension (sharded deployments
 /// attribute cycles/energy per `(model, layer, shard)`); to 3 when the
 /// report grew the span breakdown (queue/bind/service/gather wait),
-/// per-worker utilization rows and bind/eviction totals. Bench tooling
-/// asserts it instead of guessing from row shapes.
-pub const SERVE_REPORT_SCHEMA: u64 = 3;
+/// per-worker utilization rows and bind/eviction totals; to 4 when it
+/// grew admission/fault accounting (`rejected`, `lost_requests`,
+/// `partial_requests`) and the `open_loop` offered-load points
+/// (goodput + percentiles per rate). Bench tooling asserts it instead
+/// of guessing from row shapes.
+pub const SERVE_REPORT_SCHEMA: u64 = 4;
 
 /// Aggregated simulated cost of one model's layer across all served
 /// requests. Keyed by `(model, name, shard)`: layer names repeat across
@@ -93,6 +96,49 @@ pub struct WorkerRow {
     pub kv_bytes: u64,
 }
 
+/// One offered-load point of an open-loop run: requests arrive on a
+/// generated schedule (Poisson or bursty) at `offered_rps` regardless
+/// of completion rate, and the row reports what the pool actually
+/// achieved — goodput counts only completions within the deadline, and
+/// admission rejections are load shed at the gate, not failures.
+#[derive(Debug, Clone, Copy)]
+pub struct OpenLoopPoint {
+    /// mean arrival rate of the generated schedule (req/s)
+    pub offered_rps: f64,
+    /// arrivals the generator attempted to submit
+    pub offered: usize,
+    /// completions drained (deadline met or not)
+    pub completed: usize,
+    /// completions within the per-request deadline
+    pub good: usize,
+    /// arrivals refused at the admission gate
+    pub rejected: u64,
+    /// the per-request latency deadline
+    pub deadline_ms: f64,
+    /// `good / wall` — the throughput that met the deadline
+    pub goodput_rps: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+}
+
+impl OpenLoopPoint {
+    pub fn to_json(&self) -> Json {
+        let mut o: BTreeMap<String, Json> = BTreeMap::new();
+        o.insert("offered_rps".into(), num(self.offered_rps));
+        o.insert("offered".into(), num(self.offered as f64));
+        o.insert("completed".into(), num(self.completed as f64));
+        o.insert("good".into(), num(self.good as f64));
+        o.insert("rejected".into(), num(self.rejected as f64));
+        o.insert("deadline_ms".into(), num(self.deadline_ms));
+        o.insert("goodput_rps".into(), num(self.goodput_rps));
+        o.insert("p50_ms".into(), num(self.p50_ms));
+        o.insert("p95_ms".into(), num(self.p95_ms));
+        o.insert("p99_ms".into(), num(self.p99_ms));
+        Json::Obj(o)
+    }
+}
+
 /// One-off setup cost of a serving run, kept out of the steady-state
 /// throughput numbers.
 #[derive(Debug, Clone, Copy, Default)]
@@ -146,6 +192,20 @@ pub struct ServeReport {
     pub per_model: Vec<ModelAgg>,
     /// per-(model, layer) aggregation, in first-completion order
     pub per_layer: Vec<LayerAgg>,
+    /// submissions refused at the admission gate (0 without a snapshot
+    /// or without a configured queue depth)
+    pub rejected: u64,
+    /// request ids lost to dead serving threads (empty on a healthy
+    /// run; filled by callers from [`Server::faults`])
+    ///
+    /// [`Server::faults`]: crate::serve::Server::faults
+    pub lost: Vec<u64>,
+    /// sharded request ids whose gather was stranded partway (subset
+    /// of the loss accounting; empty on a healthy run)
+    pub partial: Vec<u64>,
+    /// open-loop offered-load points (empty for closed-loop runs;
+    /// filled by the open-loop harness)
+    pub open_loop: Vec<OpenLoopPoint>,
 }
 
 /// Percentile over an ascending-sorted slice by rounded linear index
@@ -293,6 +353,10 @@ pub fn summarize_with(
         evictions,
         per_model,
         per_layer,
+        rejected: snap.map_or(0, |s| s.rejected),
+        lost: Vec::new(),
+        partial: Vec::new(),
+        open_loop: Vec::new(),
     }
 }
 
@@ -346,6 +410,19 @@ impl ServeReport {
         o.insert("gather_wait_p99_ms".into(), num(self.gather_wait.p99_ms));
         o.insert("binds".into(), num(self.binds as f64));
         o.insert("evictions".into(), num(self.evictions as f64));
+        o.insert("rejected".into(), num(self.rejected as f64));
+        o.insert(
+            "lost_requests".into(),
+            Json::Arr(self.lost.iter().map(|&id| num(id as f64)).collect()),
+        );
+        o.insert(
+            "partial_requests".into(),
+            Json::Arr(self.partial.iter().map(|&id| num(id as f64)).collect()),
+        );
+        o.insert(
+            "open_loop".into(),
+            Json::Arr(self.open_loop.iter().map(OpenLoopPoint::to_json).collect()),
+        );
         let workers: Vec<Json> = self
             .workers
             .iter()
@@ -466,6 +543,32 @@ impl ServeReport {
                     m.energy_pj / 1e6
                 );
             }
+        }
+        for p in &self.open_loop {
+            println!(
+                "  open-loop @ {:>8} req/s offered: {:>6} in  {:>6} done  {:>6} good  \
+                 {:>5} rejected  goodput {:>8} req/s  p50 {} p95 {} p99 {} (deadline {} ms)",
+                fmt_or_na(p.offered_rps, 1),
+                p.offered,
+                p.completed,
+                p.good,
+                p.rejected,
+                fmt_or_na(p.goodput_rps, 1),
+                fmt_or_na(p.p50_ms, 2),
+                fmt_or_na(p.p95_ms, 2),
+                fmt_or_na(p.p99_ms, 2),
+                fmt_or_na(p.deadline_ms, 1)
+            );
+        }
+        if self.rejected > 0 && self.open_loop.is_empty() {
+            println!("  admission rejections: {}", self.rejected);
+        }
+        if !self.lost.is_empty() || !self.partial.is_empty() {
+            println!(
+                "  WARNING: {} request(s) lost to dead serving threads ({} stranded mid-gather)",
+                self.lost.len(),
+                self.partial.len()
+            );
         }
     }
 }

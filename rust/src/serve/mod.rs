@@ -35,6 +35,17 @@
 //! separately from steady state) and the simulated per-layer
 //! cycle/energy totals into a JSON [`ServeReport`].
 //!
+//! Decode is **iteration-level scheduled**: steps land in per-session
+//! lanes on the pinned worker, which re-forms its step batch every
+//! token from whichever sessions currently have one pending — sessions
+//! admit mid-flight and retire immediately, so long decodes never
+//! stall short ones. The pool takes open-loop load with backpressure:
+//! [`loadgen`] generates deterministic Poisson/bursty arrival
+//! schedules (`serve-bench --open-loop`), and a configured
+//! [`ServeConfig::queue_depth`] turns overload into typed
+//! [`Rejected`] outcomes at the `try_*` submission forms instead of
+//! unbounded queuing.
+//!
 //! Every request additionally carries a lifecycle span
 //! ([`obs::SpanTrack`]: enqueued → batch-closed → dispatched → bound →
 //! executed → gathered), and the pool keeps a live, lock-cheap metrics
@@ -49,6 +60,7 @@
 pub mod batcher;
 pub mod deploy;
 pub mod engine;
+pub mod loadgen;
 pub mod metrics;
 pub mod obs;
 pub mod session;
@@ -60,13 +72,14 @@ pub use engine::{
     BoundKernel, EngineMachine, ExecCtx, PreparedConv, PreparedMatmul, PreparedModel,
     PreparedNode, PreparedOp, StepModel, WorkerScratch,
 };
+pub use loadgen::{arrival_offsets, ArrivalSpec, Rng64, MEAN_BURST};
 pub use metrics::{
-    percentile, summarize, summarize_with, LayerAgg, ModelAgg, ServeReport, SetupTiming, SpanAgg,
-    WorkerRow, SERVE_REPORT_SCHEMA,
+    percentile, summarize, summarize_with, LayerAgg, ModelAgg, OpenLoopPoint, ServeReport,
+    SetupTiming, SpanAgg, WorkerRow, SERVE_REPORT_SCHEMA,
 };
 pub use obs::{GroupDepth, HistSummary, LogHist, Obs, ObsSnapshot, SpanTrack, WorkerSnapshot};
 pub use session::SessionState;
-pub use workers::{Completion, ServeConfig, Server, SessionId};
+pub use workers::{Completion, Rejected, ServeConfig, ServeFaults, Server, SessionId};
 
 use crate::sim::network::Tensor;
 use std::collections::HashMap;

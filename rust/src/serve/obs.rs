@@ -409,6 +409,8 @@ pub struct Obs {
     worker_budget: Option<usize>,
     submitted: AtomicU64,
     completed: AtomicU64,
+    /// Submissions refused at the admission gate (queue depth limit).
+    rejected: AtomicU64,
     batches_closed: AtomicU64,
     sessions_opened: AtomicU64,
     sessions_closed: AtomicU64,
@@ -438,6 +440,7 @@ impl Obs {
             worker_budget,
             submitted: AtomicU64::new(0),
             completed: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
             batches_closed: AtomicU64::new(0),
             sessions_opened: AtomicU64::new(0),
             sessions_closed: AtomicU64::new(0),
@@ -474,6 +477,19 @@ impl Obs {
 
     pub(crate) fn on_submit(&self) {
         self.submitted.fetch_add(1, Relaxed);
+    }
+
+    /// Caller-side: a submission was refused at the admission gate.
+    pub(crate) fn on_reject(&self) {
+        self.rejected.fetch_add(1, Relaxed);
+    }
+
+    /// Requests submitted but not yet drained by the caller — the
+    /// admission gate's depth. Single-caller exact (submits and drains
+    /// happen on the owning thread); approximate from other threads.
+    pub(crate) fn in_flight(&self) -> u64 {
+        let completed = self.completed.load(Acquire);
+        self.submitted.load(Relaxed).saturating_sub(completed)
     }
 
     pub(crate) fn on_session_open(&self) {
@@ -528,6 +544,25 @@ impl Obs {
         }
         if self.trace_on() {
             let name = format!("close batch {batch_id} ({key}, n={size})");
+            self.push_trace(0, TraceEvent::new(name, "batcher", Ph::Instant, self.ts_us(ts)));
+        }
+    }
+
+    /// Worker-side: an iteration-level step batch was formed from
+    /// session lane heads (no batcher group to decrement — session
+    /// traffic never enters the batcher).
+    pub(crate) fn on_step_batch(
+        &self,
+        batch_id: u64,
+        key: &Arc<ModelKey>,
+        worker: usize,
+        size: usize,
+        ts: Instant,
+    ) {
+        self.batches_closed.fetch_add(1, Relaxed);
+        self.batch_occupancy.record(size as u64);
+        if self.trace_on() {
+            let name = format!("step batch {batch_id} ({key}, n={size}, worker {worker})");
             self.push_trace(0, TraceEvent::new(name, "batcher", Ph::Instant, self.ts_us(ts)));
         }
     }
@@ -689,6 +724,7 @@ impl Obs {
             uptime: self.epoch.elapsed(),
             submitted: self.submitted.load(Relaxed),
             completed,
+            rejected: self.rejected.load(Relaxed),
             batches_closed: self.batches_closed.load(Relaxed),
             sessions_opened: self.sessions_opened.load(Relaxed),
             sessions_closed: self.sessions_closed.load(Relaxed),
@@ -802,6 +838,8 @@ pub struct ObsSnapshot {
     pub uptime: Duration,
     pub submitted: u64,
     pub completed: u64,
+    /// Submissions refused at the admission gate (queue depth limit).
+    pub rejected: u64,
     pub batches_closed: u64,
     pub sessions_opened: u64,
     pub sessions_closed: u64,
@@ -841,6 +879,7 @@ impl ObsSnapshot {
             ("uptime_s", jnum(self.uptime.as_secs_f64())),
             ("submitted", jint(self.submitted)),
             ("completed", jint(self.completed)),
+            ("rejected", jint(self.rejected)),
             ("batches_closed", jint(self.batches_closed)),
             ("sessions_opened", jint(self.sessions_opened)),
             ("sessions_closed", jint(self.sessions_closed)),

@@ -3,13 +3,24 @@
 //! [`EngineMachine`] (simulated SIMD machine with a per-model bind
 //! table, plus the KV caches of every decode session pinned to it).
 //!
-//! Flow: `submit`/`submit_step` -> submit channel -> dispatcher (batch
-//! close policy, per-`(model, target)` groups) -> dispatch queue (a
-//! shared FIFO for stateless batches + one pinned FIFO per worker for
-//! session batches) -> worker executes each request on its machine
+//! Flow: `submit`/`submit_step` -> submit channel -> dispatcher ->
+//! dispatch queue -> worker executes each request on its machine
 //! (binding the request's model lazily on its first batch, evicting LRU
 //! under the resident-model budget) -> completion channel -> `shutdown`
-//! drains.
+//! drains. Stateless and shard requests go through the dispatcher's
+//! batch-close policy (per-`(model, target)` groups, size/deadline
+//! triggers) into a shared FIFO (any worker) or a pinned FIFO (shard
+//! affinity); decode traffic is *iteration-level scheduled* instead:
+//! steps land in per-session lanes on the session's pinned worker, and
+//! the worker re-forms its step batch every token from whichever of
+//! its sessions currently have a pending step — sessions are admitted
+//! mid-flight and retired the moment their lane drains, so a long
+//! decode never stalls short ones that shared a closed batch.
+//!
+//! Backpressure: with [`ServeConfig::queue_depth`] set, the `try_*`
+//! submission forms return a typed [`Rejected`] once the in-flight
+//! count reaches the limit, so overload sheds measurably instead of
+//! queuing unboundedly.
 //!
 //! One pool serves many models: [`Server::start_pool`] +
 //! [`Server::register`] route every registered model's traffic through
@@ -47,8 +58,8 @@ use crate::serve::obs::{dur_ns, Obs, ObsSnapshot, SpanTrack};
 use crate::serve::{ModelHandle, ModelKey};
 use crate::sim::machine::RunStats;
 use crate::sim::network::{LayerStat, Tensor};
-use std::collections::{HashMap, VecDeque};
-use std::sync::atomic::Ordering::Relaxed;
+use std::collections::{HashMap, HashSet, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
 use std::sync::mpsc::{self, RecvTimeoutError};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread;
@@ -74,6 +85,13 @@ pub struct ServeConfig {
     /// Off by default: with tracing off no event strings are built, so
     /// the serving hot path stays unchanged.
     pub trace: bool,
+    /// admission limit: the maximum number of in-flight requests
+    /// (submitted but not yet drained by the caller). With a depth set,
+    /// the `try_*` submission forms return [`Rejected`] instead of
+    /// queuing past it, so overload degrades into measurable rejections
+    /// rather than unbounded queue growth; `None` = unbounded (the
+    /// closed-loop default, where callers submit a fixed backlog).
+    pub queue_depth: Option<usize>,
 }
 
 impl Default for ServeConfig {
@@ -84,8 +102,48 @@ impl Default for ServeConfig {
             resident_models: usize::MAX,
             worker_budget: None,
             trace: false,
+            queue_depth: None,
         }
     }
+}
+
+/// Typed admission refusal: the pool is at its configured
+/// [`ServeConfig::queue_depth`]. Returned by the `try_*` submission
+/// forms; the caller sheds the request (it was never enqueued) and the
+/// refusal is counted in [`ObsSnapshot::rejected`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Rejected {
+    /// in-flight requests at refusal time
+    pub depth: usize,
+    /// the configured admission limit
+    pub limit: usize,
+}
+
+impl std::fmt::Display for Rejected {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "admission rejected: {} in flight at queue depth limit {}",
+            self.depth, self.limit
+        )
+    }
+}
+
+impl std::error::Error for Rejected {}
+
+/// What a drain lost when serving threads died. Produced by
+/// [`Server::shutdown`] only when a join failed; a healthy pool never
+/// constructs one.
+#[derive(Debug, Default, Clone)]
+pub struct ServeFaults {
+    /// serving threads (dispatcher + workers) that panicked
+    pub panicked_threads: usize,
+    /// logical request ids submitted but never completed (sorted)
+    pub lost: Vec<u64>,
+    /// sharded request ids that completed on some shards but whose
+    /// gather entry was stranded by a dead worker (sorted); their
+    /// partial completions are discarded, never returned as results
+    pub partial: Vec<u64>,
 }
 
 /// Handle to an open decode session (pinned to one worker).
@@ -124,14 +182,35 @@ pub struct Completion {
     pub spans: SpanTrack,
 }
 
+/// One pinned session's pending decode traffic on its worker: steps
+/// (and the final close) in submission order. The lane head is the
+/// session's next runnable token — iteration-level scheduling re-forms
+/// a step batch from lane heads at every pop, so a long decode never
+/// stalls a short one that happened to arrive alongside it.
+struct SessionLane {
+    model: ModelHandle,
+    pending: VecDeque<Request>,
+}
+
 /// The dispatch queue between the dispatcher and the workers: closed
-/// batches land in the shared FIFO (any worker may take them) or a
-/// worker's pinned FIFO (session batches, which can never be stolen
-/// away from the worker holding their KV caches). A worker pops its
-/// two queue heads in batch-id order, i.e. global close-order FIFO.
+/// stateless batches land in the shared FIFO (any worker may take
+/// them) or a worker's pinned FIFO (shard sub-batches, which can never
+/// be stolen away from the worker their shard is placed on). Decode
+/// traffic bypasses batching entirely: steps land in per-session
+/// *lanes* on the session's pinned worker, and the worker forms a
+/// fresh step batch — one token from each lane head of the leading
+/// model — every time it pops. Sessions join the next iteration the
+/// moment their step arrives and leave it the moment their lane
+/// drains, so batch membership changes token to token.
 struct DispatchQueue {
     state: Mutex<QueueState>,
     cv: Condvar,
+    /// batch ids are globally unique across dispatcher-closed batches
+    /// and worker-formed step batches; the dispatcher allocates in
+    /// close order, so queued-batch FIFO arbitration still holds
+    next_batch_id: AtomicU64,
+    /// step batches take at most this many lane heads per iteration
+    max_batch: usize,
     /// depth gauges update inside the queue lock, so snapshots can
     /// never observe a negative depth
     obs: Arc<Obs>,
@@ -140,20 +219,30 @@ struct DispatchQueue {
 struct QueueState {
     shared: VecDeque<(u64, Batch)>,
     pinned: Vec<VecDeque<(u64, Batch)>>,
+    /// per-worker session lanes, keyed by session id; a lane exists
+    /// iff it holds at least one pending request
+    lanes: Vec<HashMap<u64, SessionLane>>,
     closed: bool,
 }
 
 impl DispatchQueue {
-    fn new(workers: usize, obs: Arc<Obs>) -> DispatchQueue {
+    fn new(workers: usize, max_batch: usize, obs: Arc<Obs>) -> DispatchQueue {
         DispatchQueue {
             state: Mutex::new(QueueState {
                 shared: VecDeque::new(),
                 pinned: (0..workers).map(|_| VecDeque::new()).collect(),
+                lanes: (0..workers).map(|_| HashMap::new()).collect(),
                 closed: false,
             }),
             cv: Condvar::new(),
+            next_batch_id: AtomicU64::new(0),
+            max_batch: max_batch.max(1),
             obs,
         }
+    }
+
+    fn alloc_batch_id(&self) -> u64 {
+        self.next_batch_id.fetch_add(1, Relaxed)
     }
 
     fn push(&self, batch_id: u64, batch: Batch) {
@@ -167,25 +256,104 @@ impl DispatchQueue {
         self.cv.notify_all();
     }
 
+    /// Append one session request (step or close) to its lane on the
+    /// pinned worker, creating the lane if the session had nothing
+    /// pending. The pinned depth gauge counts lane requests
+    /// individually (they are not batched until pop).
+    fn push_step(&self, req: Request) {
+        let worker = req.target.expect("session traffic is pinned");
+        let session = match &req.payload {
+            Payload::Step { session, .. } | Payload::Close { session } => *session,
+            Payload::Infer(_) => unreachable!("push_step only takes session traffic"),
+        };
+        let mut st = self.state.lock().unwrap();
+        self.obs.queue_add(Some(worker), 1);
+        st.lanes[worker]
+            .entry(session)
+            .or_insert_with(|| SessionLane { model: req.model.clone(), pending: VecDeque::new() })
+            .pending
+            .push_back(req);
+        drop(st);
+        self.cv.notify_all();
+    }
+
     fn close(&self) {
         self.state.lock().unwrap().closed = true;
         self.cv.notify_all();
     }
 
-    /// Blocking pop for `worker`. Batch ids are assigned in close
-    /// order, so taking whichever head (pinned or shared) has the
-    /// smaller id preserves global FIFO across the two queues —
-    /// sustained decode traffic cannot starve an older stateless batch
-    /// or vice versa. `None` once the queue is closed and drained.
+    /// The earliest pending arrival across `worker`'s lane heads.
+    fn earliest_lane_head(lanes: &HashMap<u64, SessionLane>) -> Option<Instant> {
+        lanes.values().filter_map(|l| l.pending.front().map(|r| r.enqueued)).min()
+    }
+
+    /// Form this iteration's step batch from `worker`'s lane heads:
+    /// the lead lane (earliest head arrival, session id tiebreak)
+    /// names the model, then every lane of that model contributes its
+    /// head — one token per session — in (arrival, session) order, up
+    /// to `max_batch`. Emptied lanes retire immediately; a session
+    /// re-enters on its next submitted step. Called under the queue
+    /// lock.
+    fn form_step_batch(&self, st: &mut QueueState, worker: usize) -> (u64, Batch) {
+        let now = Instant::now();
+        let lanes = &mut st.lanes[worker];
+        let mut heads: Vec<(Instant, u64)> = lanes
+            .iter()
+            .map(|(&sid, lane)| {
+                (lane.pending.front().expect("lanes hold >= 1 request").enqueued, sid)
+            })
+            .collect();
+        heads.sort();
+        let lead = heads[0].1;
+        let model = lanes.get(&lead).expect("lead lane exists").model.clone();
+        let mut requests = Vec::new();
+        for &(_, sid) in &heads {
+            if requests.len() >= self.max_batch {
+                break;
+            }
+            let lane = lanes.get_mut(&sid).expect("head lane exists");
+            if lane.model.key != model.key {
+                continue;
+            }
+            let mut req = lane.pending.pop_front().expect("lane non-empty");
+            req.span.batch_closed = Some(now);
+            requests.push(req);
+            if lane.pending.is_empty() {
+                lanes.remove(&sid);
+            }
+        }
+        self.obs.queue_add(Some(worker), -(requests.len() as i64));
+        let batch_id = self.alloc_batch_id();
+        self.obs.on_step_batch(batch_id, &model.key, worker, requests.len(), now);
+        (batch_id, Batch { model, target: Some(worker), requests })
+    }
+
+    /// Blocking pop for `worker`. Queued batches are taken in batch-id
+    /// order across the pinned and shared FIFOs (ids are assigned in
+    /// close order, so this is global close-order FIFO — sustained
+    /// shard traffic cannot starve an older stateless batch or vice
+    /// versa); session lanes compete with the chosen queued batch by
+    /// earliest arrival, and when they win the worker forms a fresh
+    /// step batch from its lane heads. `None` once the queue is closed
+    /// and fully drained (lanes included).
     fn pop(&self, worker: usize) -> Option<(u64, Batch)> {
         let mut st = self.state.lock().unwrap();
         loop {
             let p_id = st.pinned[worker].front().map(|&(id, _)| id);
             let s_id = st.shared.front().map(|&(id, _)| id);
             let take_pinned = match (p_id, s_id) {
-                (Some(p), Some(s)) => p < s,
-                (Some(_), None) => true,
-                (None, Some(_)) => false,
+                (Some(p), Some(s)) => Some(p < s),
+                (Some(_), None) => Some(true),
+                (None, Some(_)) => Some(false),
+                (None, None) => None,
+            };
+            let batch_arrival = match take_pinned {
+                Some(true) => st.pinned[worker].front().map(|(_, b)| b.requests[0].enqueued),
+                Some(false) => st.shared.front().map(|(_, b)| b.requests[0].enqueued),
+                None => None,
+            };
+            let lane_arrival = Self::earliest_lane_head(&st.lanes[worker]);
+            let steps_win = match (batch_arrival, lane_arrival) {
                 (None, None) => {
                     if st.closed {
                         return None;
@@ -193,8 +361,14 @@ impl DispatchQueue {
                     st = self.cv.wait(st).unwrap();
                     continue;
                 }
+                (None, Some(_)) => true,
+                (Some(_), None) => false,
+                (Some(b), Some(l)) => l < b,
             };
-            return if take_pinned {
+            if steps_win {
+                return Some(self.form_step_batch(&mut st, worker));
+            }
+            return if take_pinned == Some(true) {
                 self.obs.queue_add(Some(worker), -1);
                 st.pinned[worker].pop_front()
             } else {
@@ -275,6 +449,21 @@ impl GatherBuffer {
     fn is_empty(&self) -> bool {
         self.pending.is_empty()
     }
+
+    /// Tear down every incomplete entry (a worker died mid-gather):
+    /// returns `(id, shards_arrived, shards_expected)` per stranded
+    /// logical request, sorted by id, and leaves the buffer empty. The
+    /// arrived partials are discarded — a partial gather must never
+    /// surface as a result.
+    fn flush_stranded(&mut self) -> Vec<(u64, usize, usize)> {
+        let mut out: Vec<(u64, usize, usize)> = self
+            .pending
+            .drain()
+            .map(|(id, st)| (id, st.parts.iter().filter(|p| p.is_some()).count(), st.parts.len()))
+            .collect();
+        out.sort_unstable();
+        out
+    }
 }
 
 /// Combine one logical request's shard partials (in shard order) into
@@ -324,6 +513,29 @@ fn gather_completion(dep: &Arc<Deployment>, mut parts: Vec<Completion>) -> Compl
     }
 }
 
+/// Route one submitted request: session traffic (steps and closes)
+/// bypasses the batcher straight into its worker's session lane —
+/// runnable at the next iteration, no close delay — while stateless
+/// and shard requests take the classic batch-close path. Returns a
+/// batch the push size-closed, if any.
+fn route(
+    batcher: &mut DynamicBatcher,
+    dq: &DispatchQueue,
+    obs: &Obs,
+    req: Request,
+) -> Option<Batch> {
+    match req.payload {
+        Payload::Step { .. } | Payload::Close { .. } => {
+            dq.push_step(req);
+            None
+        }
+        Payload::Infer(_) => {
+            obs.on_group_push(&req.model.key, req.target);
+            batcher.push(req)
+        }
+    }
+}
+
 /// Refresh worker `wi`'s engine-derived gauges (bind-table and session
 /// state). Called by the owning worker thread after its eager binds and
 /// after every batch; plain relaxed stores, no locks.
@@ -369,6 +581,13 @@ pub struct Server {
     bind_times: Arc<Mutex<Vec<Duration>>>,
     /// live metrics registry (shared with the dispatcher and workers)
     obs: Arc<Obs>,
+    /// admission limit ([`ServeConfig::queue_depth`]); `None` = unbounded
+    queue_depth: Option<usize>,
+    /// logical request ids submitted but not yet drained by the caller
+    /// (fault accounting: whatever a dead pool leaves here is lost)
+    outstanding: HashSet<u64>,
+    /// set by [`shutdown`](Self::shutdown) when serving threads died
+    faults: Option<ServeFaults>,
 }
 
 impl Server {
@@ -472,7 +691,7 @@ impl Server {
         let (submit_tx, submit_rx) = mpsc::channel::<Request>();
         let (result_tx, result_rx) = mpsc::channel::<Completion>();
         let obs = Arc::new(Obs::new(n_workers, worker_budget, cfg.trace));
-        let queue = Arc::new(DispatchQueue::new(n_workers, Arc::clone(&obs)));
+        let queue = Arc::new(DispatchQueue::new(n_workers, cfg.batch.max_batch, Arc::clone(&obs)));
         let bind_times = Arc::new(Mutex::new(Vec::with_capacity(n_workers)));
 
         let bcfg = cfg.batch;
@@ -480,26 +699,22 @@ impl Server {
         let obs_d = Arc::clone(&obs);
         let dispatcher = thread::spawn(move || {
             let mut batcher = DynamicBatcher::new(bcfg);
-            let mut batch_id = 0u64;
             // close one batch: stamp its requests, account it, queue it
             let mut emit = |mut b: Batch| {
                 let now = Instant::now();
                 for r in &mut b.requests {
                     r.span.batch_closed = Some(now);
                 }
+                let batch_id = dq.alloc_batch_id();
                 obs_d.on_batch_close(batch_id, &b.model.key, b.target, b.requests.len(), now);
                 dq.push(batch_id, b);
-                batch_id += 1;
             };
             loop {
                 let closed = match batcher.next_deadline() {
                     // nothing pending: block until a request (or shutdown)
                     // arrives instead of waking on a polling interval
                     None => match submit_rx.recv() {
-                        Ok(req) => {
-                            obs_d.on_group_push(&req.model.key, req.target);
-                            batcher.push(req)
-                        }
+                        Ok(req) => route(&mut batcher, &dq, &obs_d, req),
                         Err(_) => break,
                     },
                     // a group is open: wait at most until the earliest
@@ -508,10 +723,7 @@ impl Server {
                     Some(deadline) => {
                         let timeout = deadline.saturating_duration_since(Instant::now());
                         match submit_rx.recv_timeout(timeout) {
-                            Ok(req) => {
-                                obs_d.on_group_push(&req.model.key, req.target);
-                                batcher.push(req)
-                            }
+                            Ok(req) => route(&mut batcher, &dq, &obs_d, req),
                             Err(RecvTimeoutError::Timeout) => None,
                             Err(RecvTimeoutError::Disconnected) => break,
                         }
@@ -656,6 +868,9 @@ impl Server {
             worker_sessions: vec![0; n_workers],
             bind_times,
             obs,
+            queue_depth: cfg.queue_depth,
+            outstanding: HashSet::new(),
+            faults: None,
         }
     }
 
@@ -758,8 +973,26 @@ impl Server {
     /// for a whole deployment, one pinned sub-request per shard (all
     /// sharing the logical id, gathered on the drain path) for a
     /// sharded one.
+    /// Admission gate: with a [`ServeConfig::queue_depth`] configured,
+    /// refuse new work while the in-flight count (submitted minus
+    /// completed, i.e. everything the caller has not drained yet) is at
+    /// the limit. Refusals are counted in the live registry. Always
+    /// admits when no depth is configured.
+    fn admit(&self) -> Result<(), Rejected> {
+        let Some(limit) = self.queue_depth else {
+            return Ok(());
+        };
+        let depth = self.obs.in_flight() as usize;
+        if depth >= limit {
+            self.obs.on_reject();
+            return Err(Rejected { depth, limit });
+        }
+        Ok(())
+    }
+
     fn submit_entry(&mut self, entry: DeployEntry, input: Tensor) -> u64 {
         let id = self.alloc_id();
+        self.outstanding.insert(id);
         let now = Instant::now();
         self.obs.on_submit();
         self.obs.trace_request_begin(id, entry.dep.key(), now);
@@ -779,16 +1012,37 @@ impl Server {
 
     /// Enqueue one stateless request for the default model; returns its
     /// id (completions carry it back).
+    ///
+    /// Under a configured [`ServeConfig::queue_depth`] this panics when
+    /// the pool is at its limit — the bound is hard; callers serving
+    /// open-loop traffic should use [`try_submit`](Self::try_submit)
+    /// and shed the rejection instead.
     pub fn submit(&mut self, input: Tensor) -> u64 {
+        self.try_submit(input).unwrap_or_else(|r| panic!("{r}; use try_submit to shed load"))
+    }
+
+    /// [`submit`](Self::submit) with admission control: `Err(Rejected)`
+    /// when the pool is at its configured queue depth (the request is
+    /// not enqueued).
+    pub fn try_submit(&mut self, input: Tensor) -> Result<u64, Rejected> {
+        self.admit()?;
         let entry = self.default_entry();
-        self.submit_entry(entry, input)
+        Ok(self.submit_entry(entry, input))
     }
 
     /// Enqueue one stateless request for a registered model
-    /// (scatter/gathered if its deployment is sharded).
+    /// (scatter/gathered if its deployment is sharded). Panics at the
+    /// configured queue depth, like [`submit`](Self::submit).
     pub fn submit_model(&mut self, key: &ModelKey, input: Tensor) -> u64 {
+        self.try_submit_model(key, input)
+            .unwrap_or_else(|r| panic!("{r}; use try_submit_model to shed load"))
+    }
+
+    /// [`submit_model`](Self::submit_model) with admission control.
+    pub fn try_submit_model(&mut self, key: &ModelKey, input: Tensor) -> Result<u64, Rejected> {
+        self.admit()?;
         let entry = self.registered_entry(key);
-        self.submit_entry(entry, input)
+        Ok(self.submit_entry(entry, input))
     }
 
     /// The worker a new session lands on: smallest estimated KV-cache
@@ -837,17 +1091,34 @@ impl Server {
     /// Open a decode session on the default model. The session is
     /// pinned to the worker with the smallest current KV-cache
     /// footprint, whose machine will own its K/V caches; every step of
-    /// this session executes there.
+    /// this session executes there. Panics at the configured queue
+    /// depth, like [`submit`](Self::submit).
     pub fn open_session(&mut self) -> SessionId {
+        self.try_open_session().unwrap_or_else(|r| panic!("{r}; use try_open_session to shed load"))
+    }
+
+    /// [`open_session`](Self::open_session) with admission control:
+    /// `Err(Rejected)` when the pool is at its configured queue depth
+    /// (no session is opened — overload sheds whole sessions at open
+    /// time, before any KV cache is placed).
+    pub fn try_open_session(&mut self) -> Result<SessionId, Rejected> {
+        self.admit()?;
         let entry = self.default_entry();
-        self.open_session_handle(entry)
+        Ok(self.open_session_handle(entry))
     }
 
     /// Open a decode session on a registered model (same placement as
     /// [`open_session`](Self::open_session)).
     pub fn open_session_on(&mut self, key: &ModelKey) -> SessionId {
+        self.try_open_session_on(key)
+            .unwrap_or_else(|r| panic!("{r}; use try_open_session_on to shed load"))
+    }
+
+    /// [`open_session_on`](Self::open_session_on) with admission control.
+    pub fn try_open_session_on(&mut self, key: &ModelKey) -> Result<SessionId, Rejected> {
+        self.admit()?;
         let entry = self.registered_entry(key);
-        self.open_session_handle(entry)
+        Ok(self.open_session_handle(entry))
     }
 
     /// Enqueue one decode step for an open session; returns its request
@@ -860,8 +1131,21 @@ impl Server {
     /// `max_positions`: a stale or runaway caller must not take a
     /// worker (and with it every co-located session) down, and a step
     /// sent after `close_session` would execute against freed KV caches
-    /// as a silently restarted session.
+    /// as a silently restarted session. Panics at the configured queue
+    /// depth, like [`submit`](Self::submit).
     pub fn submit_step(&mut self, session: SessionId, token: Tensor) -> u64 {
+        self.try_submit_step(session, token)
+            .unwrap_or_else(|r| panic!("{r}; use try_submit_step to shed load"))
+    }
+
+    /// [`submit_step`](Self::submit_step) with admission control:
+    /// `Err(Rejected)` at the configured queue depth (the step is not
+    /// enqueued; the session stays open and its earlier steps are
+    /// unaffected). The session-invariant panics (closed, never
+    /// opened, over `max_positions`) are preserved — those are caller
+    /// bugs, not load.
+    pub fn try_submit_step(&mut self, session: SessionId, token: Tensor) -> Result<u64, Rejected> {
+        self.admit()?;
         let next_session = self.next_session;
         let meta = match self.sessions.get_mut(&session.0) {
             Some(m) => m,
@@ -882,12 +1166,13 @@ impl Server {
         let kv = meta.kv_bytes_per_step;
         self.worker_kv_bytes[worker] += kv;
         let id = self.alloc_id();
+        self.outstanding.insert(id);
         let now = Instant::now();
         self.obs.on_submit();
         self.obs.trace_request_begin(id, &handle.key, now);
         let req = Request::step(id, &handle, session.0, token, worker, now);
         self.send(req);
-        id
+        Ok(id)
     }
 
     /// Close a finished session, freeing its KV caches on the pinned
@@ -937,6 +1222,7 @@ impl Server {
                 self.obs.gather_add(-1);
             }
             if let Some(done) = self.gather.absorb(c) {
+                self.outstanding.remove(&done.id);
                 self.obs.on_complete(done.id, done.latency, &done.spans);
                 out.push(done);
             }
@@ -952,13 +1238,25 @@ impl Server {
         self.finish(raw)
     }
 
+    /// What the pool lost, if serving threads died: `None` after a
+    /// healthy [`shutdown`](Self::shutdown) (and always before one).
+    pub fn faults(&self) -> Option<&ServeFaults> {
+        self.faults.as_ref()
+    }
+
     /// Stop accepting requests, let the pipeline drain, join every
     /// thread and return all remaining (gathered) completions.
     ///
-    /// Panics if any serving thread panicked (e.g. a request whose shape
-    /// does not match the model): silently returning fewer completions
-    /// than submissions would make the loss invisible to callers that
-    /// pair results to requests.
+    /// If serving threads panicked (e.g. a request whose shape does not
+    /// match the model), the surviving completions are still returned,
+    /// and the loss is surfaced instead of silently shrinking the
+    /// result: [`faults`](Self::faults) reports the panicked-thread
+    /// count, the ids of requests that never completed, and the ids of
+    /// sharded requests whose gather was stranded partway (their
+    /// partial outputs are discarded, and the gather buffer is flushed
+    /// so the gauge returns to zero). A healthy shutdown still asserts
+    /// the gather buffer drained — an entry left behind *without* a
+    /// dead thread is a server bug, not a fault.
     pub fn shutdown(&mut self) -> Vec<Completion> {
         drop(self.submit.take());
         let mut panicked = 0usize;
@@ -970,15 +1268,25 @@ impl Server {
         }
         let raw: Vec<Completion> = self.results.try_iter().collect();
         let done: Vec<Completion> = self.finish(raw);
-        assert!(
-            panicked == 0,
-            "{panicked} serving thread(s) panicked; only {} completions survived",
-            done.len()
-        );
-        assert!(
-            self.gather.is_empty(),
-            "shutdown drained with sharded requests still awaiting gather"
-        );
+        if panicked > 0 {
+            let stranded = self.gather.flush_stranded();
+            let partial: Vec<u64> =
+                stranded.iter().filter(|&&(_, got, _)| got > 0).map(|&(id, ..)| id).collect();
+            // the gather gauge still holds each stranded entry's
+            // missing shards (the arrived ones were decremented on
+            // drain); settle it so the snapshot returns to zero
+            for &(_, got, expected) in &stranded {
+                self.obs.gather_add(-((expected - got) as i64));
+            }
+            let mut lost: Vec<u64> = self.outstanding.drain().collect();
+            lost.sort_unstable();
+            self.faults = Some(ServeFaults { panicked_threads: panicked, lost, partial });
+        } else {
+            assert!(
+                self.gather.is_empty(),
+                "shutdown drained with sharded requests still awaiting gather"
+            );
+        }
         done
     }
 }

@@ -721,3 +721,121 @@ fn prop_loghist_quantiles_within_bucket_bounds() {
         Ok(())
     });
 }
+
+/// The iteration-level scheduling contract: any interleaving of
+/// decode sessions — unequal lengths, sessions admitted mid-flight,
+/// sessions retired the moment they finish — served through a worker
+/// pool must replay every session's steps bit-identically (and in
+/// submission order) against a lone [`EngineMachine`] running the same
+/// per-session token streams.
+#[test]
+fn prop_iteration_scheduled_decode_bit_identical_to_engine() {
+    use soniq::coordinator::{synthetic_decoder, DecoderCfg, DesignPoint};
+    use soniq::serve::{
+        BatchConfig, Completion, EngineMachine, PreparedModel, ServeConfig, Server, SessionId,
+    };
+    use std::collections::HashMap;
+    use std::sync::Arc;
+    use std::time::Duration;
+    check("iter-decode", 40, |rng| {
+        let heads = *rng.choice(&[1usize, 2]);
+        let dh = 2usize;
+        let d = heads * dh;
+        let dp = if rng.below(2) == 0 { DesignPoint::Uniform(4) } else { DesignPoint::Patterns(8) };
+        let cfg =
+            DecoderCfg { seq: 8, d_model: d, heads, ffn: d * 2, blocks: 1, max_positions: 16 };
+        let seed = rng.below(1 << 30);
+        let net = synthetic_decoder(dp, seed, &cfg).map_err(|e| e.to_string())?;
+        let prepared = Arc::new(PreparedModel::prepare_decoder(
+            &net.nodes,
+            net.step_nodes.as_ref().expect("decoder step graph"),
+        ));
+        let scfg = ServeConfig {
+            workers: 1 + rng.below(2) as usize,
+            batch: BatchConfig {
+                max_batch: 1 + rng.below(4) as usize,
+                max_delay: Duration::from_millis(1),
+            },
+            ..ServeConfig::default()
+        };
+        let mut server = Server::start(Arc::clone(&prepared), &scfg);
+
+        let n_sessions = 1 + rng.below(4) as usize;
+        let lens: Vec<usize> = (0..n_sessions).map(|_| 1 + rng.below(8) as usize).collect();
+        let tokens: Vec<Vec<Tensor>> = lens
+            .iter()
+            .map(|&len| {
+                (0..len)
+                    .map(|_| {
+                        let data: Vec<f32> = (0..d).map(|_| rng.range(-2.0, 2.0)).collect();
+                        Tensor { h: 1, w: 1, c: d, data }
+                    })
+                    .collect()
+            })
+            .collect();
+
+        // half the sessions open up front; the rest are admitted
+        // mid-flight, the first time the interleave picks them
+        let mut sids: Vec<Option<SessionId>> = vec![None; n_sessions];
+        let mut closed = vec![false; n_sessions];
+        for s in sids.iter_mut().take(n_sessions.div_ceil(2)) {
+            *s = Some(server.open_session());
+        }
+        let total: usize = lens.iter().sum();
+        let mut next_step = vec![0usize; n_sessions];
+        let mut submitted: Vec<(u64, usize, usize)> = Vec::new(); // (id, session, step)
+        while submitted.len() < total {
+            let open: Vec<usize> =
+                (0..n_sessions).filter(|&si| next_step[si] < lens[si]).collect();
+            let si = *rng.choice(&open);
+            let sid = match sids[si] {
+                Some(sid) => sid,
+                None => {
+                    let sid = server.open_session();
+                    sids[si] = Some(sid);
+                    sid
+                }
+            };
+            let t = next_step[si];
+            submitted.push((server.submit_step(sid, tokens[si][t].clone()), si, t));
+            next_step[si] += 1;
+            // sometimes retire a finished session immediately, while
+            // the others are still decoding
+            if next_step[si] == lens[si] && rng.below(2) == 0 {
+                server.close_session(sid);
+                closed[si] = true;
+            }
+        }
+        for si in 0..n_sessions {
+            if !closed[si] {
+                server.close_session(sids[si].expect("every session served a step"));
+            }
+        }
+        let done = server.shutdown();
+        if server.faults().is_some() {
+            return Err("serving threads died".into());
+        }
+        if done.len() != total {
+            return Err(format!("{} completions for {total} steps", done.len()));
+        }
+
+        // oracle: one lone engine, same per-session submission order
+        let mut engine = EngineMachine::new(&prepared);
+        let by_id: HashMap<u64, &Completion> = done.iter().map(|c| (c.id, c)).collect();
+        for &(id, si, t) in &submitted {
+            let want = engine.run_step(si as u64, &tokens[si][t]);
+            let got = by_id.get(&id).ok_or(format!("step id {id} never completed"))?;
+            if got.session != sids[si].map(|s| s.0) {
+                return Err(format!("id {id} completed under the wrong session"));
+            }
+            if got.output.data != want.output.data {
+                return Err(format!(
+                    "session {si} step {t} diverged (sessions={n_sessions} \
+                     lens={lens:?} workers={} max_batch={} seed={seed})",
+                    scfg.workers, scfg.batch.max_batch
+                ));
+            }
+        }
+        Ok(())
+    });
+}

@@ -358,12 +358,14 @@ fn step_after_close_is_rejected_in_caller_not_worker() {
     assert!(never_opened.is_err());
 
     // the pool is unharmed: a new session still serves steps, and
-    // shutdown joins every worker cleanly (it panics if one died)
+    // shutdown joins every worker cleanly (a dead thread would be
+    // surfaced through `faults()`)
     let sid2 = server.open_session();
     server.submit_step(sid2, tokens[0].clone());
     server.submit_step(sid2, tokens[1].clone());
     server.close_session(sid2);
     let done = server.shutdown();
+    assert!(server.faults().is_none(), "caller-side panics must not kill serving threads");
     assert_eq!(done.len(), 3, "1 step before close + 2 steps on the new session");
     assert!(done.iter().all(|c| c.output.data.iter().all(|v| v.is_finite())));
 }
@@ -555,6 +557,7 @@ fn lru_eviction_rebinds_models_correctly() {
         resident_models: 1,
         worker_budget: None,
         trace: false,
+        queue_depth: None,
     };
     let mut server = Server::start_pool(&cfg);
     server.register(ka.clone(), Arc::clone(&pa));
@@ -1354,7 +1357,7 @@ fn snapshot_is_consistent_mid_run_from_another_thread() {
 }
 
 #[test]
-fn schema3_report_adds_breakdown_and_worker_rows() {
+fn schema4_report_adds_admission_and_open_loop_fields() {
     let (net, inputs) = net_and_inputs("tinynet", DesignPoint::Patterns(4), 16);
     let prepared = Arc::new(PreparedModel::prepare(&net.nodes));
     let mut server = Server::start(Arc::clone(&prepared), &pool_cfg(2, 4));
@@ -1371,15 +1374,22 @@ fn schema3_report_adds_breakdown_and_worker_rows() {
     assert!(report.binds >= 2, "each worker eager-binds the model");
     assert!(report.service.mean_ms > 0.0);
     assert!(report.queue_wait.mean_ms >= 0.0);
+    assert_eq!(report.rejected, 0, "no queue depth configured, nothing shed");
+    assert!(report.lost.is_empty() && report.partial.is_empty(), "healthy run loses nothing");
 
     let parsed = soniq::util::json::parse(&report.to_json().to_string()).unwrap();
-    assert_eq!(parsed.get("schema").unwrap().as_usize().unwrap(), 3);
+    assert_eq!(parsed.get("schema").unwrap().as_usize().unwrap(), 4);
     for key in ["queue_wait", "bind_wait", "service", "gather_wait"] {
-        assert!(parsed.get(&format!("{key}_mean_ms")).is_ok(), "{key} mean in schema 3");
-        assert!(parsed.get(&format!("{key}_p99_ms")).is_ok(), "{key} p99 in schema 3");
+        assert!(parsed.get(&format!("{key}_mean_ms")).is_ok(), "{key} mean in schema 4");
+        assert!(parsed.get(&format!("{key}_p99_ms")).is_ok(), "{key} p99 in schema 4");
     }
     assert!(parsed.get("binds").is_ok());
     assert!(parsed.get("evictions").is_ok());
+    // schema 4: admission, fault, and open-loop fields
+    assert_eq!(parsed.get("rejected").unwrap().as_usize().unwrap(), 0);
+    assert!(parsed.get("lost_requests").unwrap().as_arr().unwrap().is_empty());
+    assert!(parsed.get("partial_requests").unwrap().as_arr().unwrap().is_empty());
+    assert!(parsed.get("open_loop").unwrap().as_arr().unwrap().is_empty());
     let rows = parsed.get("workers").unwrap().as_arr().unwrap();
     assert_eq!(rows.len(), 2);
     for row in rows {
@@ -1451,4 +1461,187 @@ fn trace_export_is_valid_chrome_trace_json() {
     assert!(ts.windows(2).all(|w| w[0] <= w[1]), "trace events sorted by ts");
     let snap = server.snapshot();
     assert_eq!(snap.trace_dropped, 0, "a 12-request run fits the lane caps");
+}
+
+#[test]
+fn batcher_deadline_tracks_oldest_across_arrivals_and_stale_markers() {
+    // mid-wait arrivals must not reset the deadline clock, and a
+    // size-trigger close must not leave its (stale) FIFO marker
+    // shadowing the next live group's deadline
+    let cfg = BatchConfig { max_batch: 2, max_delay: Duration::from_millis(5) };
+    let mut b = DynamicBatcher::new(cfg);
+    let t0 = Instant::now();
+    let ha = dummy_handle("a");
+    let hb = dummy_handle("b");
+    let tok = || Tensor::zeros(1, 1, 1);
+    // group a opens at t0; group b arrives mid-wait, 2 ms later
+    assert!(b.push(Request::infer(0, &ha, tok(), t0)).is_none());
+    assert!(b.push(Request::infer(1, &hb, tok(), t0 + Duration::from_millis(2))).is_none());
+    // the deadline is the oldest group's, not the newest arrival's
+    assert_eq!(b.next_deadline(), Some(t0 + Duration::from_millis(5)));
+    // closing group a by size leaves a stale marker at the FIFO front;
+    // the deadline must skip it and advance to group b
+    let full =
+        b.push(Request::infer(2, &ha, tok(), t0 + Duration::from_millis(3))).expect("size close");
+    assert_eq!(full.requests.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 2]);
+    assert_eq!(b.next_deadline(), Some(t0 + Duration::from_millis(7)));
+    assert!(b.poll_deadline(t0 + Duration::from_millis(6)).is_none());
+    let late = b.poll_deadline(t0 + Duration::from_millis(7)).expect("deadline close");
+    assert_eq!(late.requests.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1]);
+    assert!(b.is_empty());
+    assert_eq!(b.len(), 0);
+
+    // a re-created group under a previously closed key is live again
+    // under a fresh generation
+    assert!(b.push(Request::infer(3, &ha, tok(), t0 + Duration::from_millis(8))).is_none());
+    assert_eq!(b.next_deadline(), Some(t0 + Duration::from_millis(13)));
+    assert_eq!(b.flush().expect("re-created group flushes").requests[0].id, 3);
+    assert!(b.is_empty());
+}
+
+#[test]
+fn drain_ready_is_consistent_mid_run() {
+    // drain_ready interleaved with submissions must hand every
+    // completion out exactly once, already final, with the metrics
+    // registry agreeing on the totals afterwards
+    let (net, inputs) = net_and_inputs("tinynet", DesignPoint::Patterns(4), 32);
+    let prepared = Arc::new(PreparedModel::prepare(&net.nodes));
+    let want: Vec<Vec<f32>> =
+        inputs.iter().map(|x| run_network(&net.nodes, x).output.data.clone()).collect();
+    let mut server = Server::start(Arc::clone(&prepared), &pool_cfg(2, 4));
+    let mut done: Vec<Completion> = Vec::new();
+    for (i, x) in inputs.iter().enumerate() {
+        server.submit(x.clone());
+        if i % 5 == 4 {
+            done.extend(server.drain_ready());
+        }
+    }
+    let early: HashSet<u64> = done.iter().map(|c| c.id).collect();
+    assert_eq!(early.len(), done.len(), "no duplicate completions across drains");
+    let rest = server.shutdown();
+    assert!(rest.iter().all(|c| !early.contains(&c.id)), "shutdown re-returned drained ids");
+    done.extend(rest);
+    assert_eq!(done.len(), 32);
+    for c in &done {
+        assert_eq!(c.output.data, want[c.id as usize], "request {}", c.id);
+    }
+    let snap = server.snapshot();
+    assert_eq!(snap.submitted, 32);
+    assert_eq!(snap.completed, 32, "every completion was counted exactly once");
+}
+
+#[test]
+fn iteration_scheduling_is_bit_exact_across_mixed_lengths_and_admits() {
+    // one worker, three sessions of different lengths, one admitted
+    // mid-flight after another retired: iteration-level step batches
+    // must replay every session bit-identically to a lone engine
+    let net = synthetic_network("tinydec", DesignPoint::Patterns(4), 3).unwrap();
+    let prepared = Arc::new(PreparedModel::prepare_decoder(
+        &net.nodes,
+        net.step_nodes.as_ref().expect("decoder step graph"),
+    ));
+    let mut server = Server::start(Arc::clone(&prepared), &pool_cfg(1, 4));
+    let tokens: Vec<Vec<Tensor>> =
+        (0..3).map(|k| synthetic_step_inputs(&net, k as u64, 6, 21)).collect();
+    let s0 = server.open_session();
+    let s1 = server.open_session();
+    // (request id, session index, step) in submission order
+    let mut submitted: Vec<(u64, usize, usize)> = Vec::new();
+    for t in 0..2 {
+        submitted.push((server.submit_step(s0, tokens[0][t].clone()), 0, t));
+        submitted.push((server.submit_step(s1, tokens[1][t].clone()), 1, t));
+    }
+    // s1 retires after 2 steps; s2 admits mid-flight and interleaves
+    // with s0's remaining steps
+    server.close_session(s1);
+    let s2 = server.open_session();
+    for t in 0..4 {
+        submitted.push((server.submit_step(s2, tokens[2][t].clone()), 2, t));
+        submitted.push((server.submit_step(s0, tokens[0][t + 2].clone()), 0, t + 2));
+    }
+    server.close_session(s0);
+    server.close_session(s2);
+    let done = server.shutdown();
+    assert!(server.faults().is_none());
+    assert_eq!(done.len(), submitted.len(), "closes produce no completions");
+
+    let sids = [s0, s1, s2];
+    let mut engine = EngineMachine::new(&prepared);
+    let by_id: HashMap<u64, &Completion> = done.iter().map(|c| (c.id, c)).collect();
+    for &(id, si, t) in &submitted {
+        let want = engine.run_step(si as u64, &tokens[si][t]);
+        let got = by_id.get(&id).expect("every submitted step completed");
+        assert_eq!(got.session, Some(sids[si].0));
+        assert_eq!(got.output.data, want.output.data, "session {si} step {t}");
+    }
+}
+
+#[test]
+fn admission_rejects_at_queue_depth_and_recovers_after_drain() {
+    use soniq::serve::Rejected;
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+    let (net, inputs) = net_and_inputs("tinynet", DesignPoint::Patterns(4), 8);
+    let prepared = Arc::new(PreparedModel::prepare(&net.nodes));
+    let cfg = ServeConfig { queue_depth: Some(2), ..pool_cfg(1, 4) };
+    let mut server = Server::start(Arc::clone(&prepared), &cfg);
+
+    // in-flight depth is submitted minus *drained*, so without a drain
+    // the third submission is rejected deterministically
+    assert!(server.try_submit(inputs[0].clone()).is_ok());
+    assert!(server.try_submit(inputs[1].clone()).is_ok());
+    let err = server.try_submit(inputs[2].clone()).unwrap_err();
+    assert_eq!(err, Rejected { depth: 2, limit: 2 });
+    assert!(err.to_string().contains("queue depth limit 2"), "got: {err}");
+    // the plain form treats the bound as hard
+    let boom = catch_unwind(AssertUnwindSafe(|| server.submit(inputs[3].clone())));
+    assert!(boom.is_err(), "plain submit must panic at the configured depth");
+    assert_eq!(server.snapshot().rejected, 2, "both refused submissions were counted");
+
+    // draining completions reopens the gate
+    let t0 = Instant::now();
+    let mut drained: Vec<Completion> = Vec::new();
+    while drained.len() < 2 {
+        drained.extend(server.drain_ready());
+        assert!(t0.elapsed() < Duration::from_secs(30), "pool stalled with 2 in flight");
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    assert!(server.try_submit(inputs[2].clone()).is_ok(), "admission recovers after drain");
+    let rest = server.shutdown();
+    assert_eq!(drained.len() + rest.len(), 3);
+    let snap = server.snapshot();
+    assert_eq!(snap.rejected, 2, "recovered submissions are not rejections");
+    assert_eq!(snap.completed, 3);
+}
+
+#[test]
+fn dead_worker_losses_are_reported_not_silent() {
+    // a shape-mismatched request kills the only worker mid-run; the
+    // survivors still come back and the loss is itemized instead of
+    // silently shrinking the result set
+    let (net, inputs) = net_and_inputs("tinynet", DesignPoint::Patterns(4), 4);
+    let prepared = Arc::new(PreparedModel::prepare(&net.nodes));
+    let mut server = Server::start(Arc::clone(&prepared), &pool_cfg(1, 1));
+    let ok = server.submit(inputs[0].clone());
+    let bad = server.submit(Tensor::zeros(1, 1, 1)); // wrong shape for tinynet
+    let after = server.submit(inputs[1].clone());
+    let done = server.shutdown();
+    let faults = server.faults().expect("a dead worker must surface faults");
+    assert_eq!(faults.panicked_threads, 1);
+    assert!(faults.lost.contains(&bad), "the poisoned request is reported lost");
+    assert!(faults.partial.is_empty(), "no sharded traffic, no partial gathers");
+    let completed: HashSet<u64> = done.iter().map(|c| c.id).collect();
+    for id in [ok, bad, after] {
+        assert!(
+            completed.contains(&id) || faults.lost.contains(&id),
+            "request {id} vanished without completing or being reported lost"
+        );
+    }
+    assert!(!completed.contains(&bad), "the poisoned request cannot have completed");
+    // the lost ids flow into the schema-4 report fields
+    let mut report = summarize(&done, Duration::from_millis(1), SetupTiming::default());
+    report.lost = faults.lost.clone();
+    report.partial = faults.partial.clone();
+    let parsed = soniq::util::json::parse(&report.to_json().to_string()).unwrap();
+    let lost_json = parsed.get("lost_requests").unwrap().as_arr().unwrap().len();
+    assert_eq!(lost_json, faults.lost.len());
 }

@@ -213,4 +213,65 @@ fn main() {
         last
     });
     println!("decode speedup (host wall): {:.2}x", baseline.mean_ns / cached.mean_ns);
+
+    // Paged KV pool vs legacy growable session storage: 1000
+    // mixed-length sessions decode through one engine in overlapping
+    // waves. Growable storage keeps every open session's exact K/V
+    // bytes resident; the paged pool allocates fixed-size pages and,
+    // under a budget, recycles a constant page set through spill round
+    // trips — same simulated cycles (identical staged bytes), bounded
+    // peak residency.
+    {
+        use soniq::serve::{KvPolicy, KvPoolCfg};
+        section("paged KV pool vs growable sessions — tinydec, 1000 mixed-length sessions");
+        let n_sessions = 1000usize;
+        let wave = 50usize;
+        let max_len = 16usize;
+        let lens: Vec<usize> = (0..n_sessions).map(|i| 1 + (i * 7 + 3) % max_len).collect();
+        let step_tokens = synthetic_step_inputs(&dec, 1, max_len, 11);
+        let run = |label: &str, kv: Option<KvPoolCfg>| {
+            let mut engine = EngineMachine::new(&prepared);
+            if let Some(kv) = kv {
+                engine.set_kv_pool(kv);
+            }
+            let t0 = Instant::now();
+            let (mut cycles, mut peak) = (0u64, 0usize);
+            for w in (0..n_sessions).step_by(wave) {
+                let ids: Vec<usize> = (w..(w + wave).min(n_sessions)).collect();
+                for (t, tok) in step_tokens.iter().enumerate() {
+                    for &si in &ids {
+                        if t < lens[si] {
+                            cycles += engine.run_step(si as u64, tok).total.cycles();
+                        }
+                    }
+                    peak = peak.max(engine.session_kv_bytes());
+                }
+                for &si in &ids {
+                    engine.end_session(si as u64);
+                }
+            }
+            let wall = t0.elapsed();
+            println!("  {label}: {cycles} simulated cycles, peak resident KV {peak} B, {wall:.2?}");
+            (cycles, peak)
+        };
+        let (lc, lp) = run("growable (legacy)", None);
+        run(
+            "paged, unbounded (exact accounting)",
+            Some(KvPoolCfg { page_positions: 4, ..KvPoolCfg::default() }),
+        );
+        let (pc, pp) = run(
+            "paged, 8-page budget (spill round trips)",
+            Some(KvPoolCfg {
+                page_positions: 4,
+                pages_per_worker: Some(8),
+                policy: KvPolicy::Spill,
+                v_bits: None,
+            }),
+        );
+        println!(
+            "  cycles paged/legacy: {:.3}x; peak resident KV paged/legacy: {:.2}x",
+            pc as f64 / lc.max(1) as f64,
+            pp as f64 / lp.max(1) as f64
+        );
+    }
 }

@@ -25,6 +25,12 @@
 //!         --deadline-ms 20 --queue-depth 256 \
 //!         # offered-load sweep: goodput + tail latency per rate point,
 //!         # overload shed at the admission gate as typed rejections
+//!   soniq serve-bench --model tinydec --decode --sessions 1000 \
+//!         --kv-pages 256 --kv-policy spill \
+//!         # paged KV-cache: sessions draw fixed-size pages from a
+//!         # per-worker pool; over budget, pages spill to a host arena
+//!         # and fault back bit-exact (or: refuse new work / evict
+//!         # the coldest session); --v-bits 2 stores V low-precision
 
 use anyhow::{bail, Result};
 use soniq::coordinator::{
@@ -165,7 +171,7 @@ fn main() -> Result<()> {
         }
         Some("serve-bench") => {
             use soniq::coordinator::{synthetic_network_seq, synthetic_step_inputs};
-            use soniq::serve::{self, BatchConfig, ServeConfig, SetupTiming};
+            use soniq::serve::{self, BatchConfig, KvPolicy, KvPoolCfg, ServeConfig, SetupTiming};
             use soniq::sim::network::{run_network, Tensor};
             use std::sync::Arc;
             use std::time::{Duration, Instant};
@@ -183,6 +189,40 @@ fn main() -> Result<()> {
             let open_loop = args.has_flag("open-loop");
             let queue_depth = args.get_usize("queue-depth", 0); // 0 = unbounded
 
+            // paged KV-cache: any of these flags switches sessions from
+            // growable K/V buffers to fixed-size pages from a per-worker
+            // pool (see serve::kvpool)
+            let kv_pages = args.get_usize("kv-pages", 0); // 0 = unbounded pool
+            let kv_policy = args.get_or("kv-policy", "");
+            let page_positions = args.get_usize("page-positions", 0); // 0 = default
+            let v_bits = args.get_usize("v-bits", 0); // 0 = same precision as K
+            let kv = if kv_pages > 0
+                || !kv_policy.is_empty()
+                || page_positions > 0
+                || v_bits > 0
+            {
+                let policy = match KvPolicy::parse(&kv_policy) {
+                    _ if kv_policy.is_empty() => KvPolicy::Refuse,
+                    Some(p) => p,
+                    None => bail!(
+                        "--kv-policy wants refuse, evict or spill (got `{kv_policy}`)"
+                    ),
+                };
+                if !matches!(v_bits, 0 | 1 | 2 | 4) {
+                    bail!("--v-bits wants 1, 2 or 4 (got {v_bits})");
+                }
+                let mut kc = KvPoolCfg::default();
+                if page_positions > 0 {
+                    kc.page_positions = page_positions;
+                }
+                kc.pages_per_worker = (kv_pages > 0).then_some(kv_pages);
+                kc.policy = policy;
+                kc.v_bits = (v_bits > 0).then_some(v_bits as u8);
+                Some(kc)
+            } else {
+                None
+            };
+
             let registry = serve::ModelRegistry::new();
             let cfg = ServeConfig {
                 workers,
@@ -194,6 +234,7 @@ fn main() -> Result<()> {
                 worker_budget: (worker_budget > 0).then_some(worker_budget),
                 trace: args.get("trace").is_some(),
                 queue_depth: (queue_depth > 0).then_some(queue_depth),
+                kv,
             };
 
             let models_arg = args.get_or("models", "");
@@ -435,15 +476,27 @@ fn main() -> Result<()> {
                         // a fixed session set: they land in per-session
                         // lanes mid-flight, which is exactly what
                         // iteration-level scheduling re-batches
-                        let sids: Vec<serve::SessionId> =
-                            (0..n_sessions).map(|_| server.open_session()).collect();
-                        let mut steps_in = vec![0usize; n_sessions];
+                        // under a Refuse-policy page budget some opens
+                        // shed whole sessions; load round-robins over
+                        // whichever sessions were admitted
+                        let sids: Vec<serve::SessionId> = (0..n_sessions)
+                            .filter_map(|_| server.try_open_session().ok())
+                            .collect();
+                        if sids.is_empty() {
+                            bail!(
+                                "the page budget admitted no session at all; raise \
+                                 --kv-pages or lower --page-positions"
+                            );
+                        }
+                        let mut steps_in = vec![0usize; sids.len()];
                         for (i, off) in offsets.iter().enumerate() {
                             pump(&mut server, &mut done, start, *off);
-                            let si = i % n_sessions;
-                            let tok = tokens[si][steps_in[si]].clone();
-                            if server.try_submit_step(sids[si], tok).is_ok() {
-                                steps_in[si] += 1;
+                            let si = i % sids.len();
+                            if steps_in[si] < tokens[si].len() {
+                                let tok = tokens[si][steps_in[si]].clone();
+                                if server.try_submit_step(sids[si], tok).is_ok() {
+                                    steps_in[si] += 1;
+                                }
                             }
                         }
                         for sid in &sids {
@@ -742,6 +795,8 @@ fn main() -> Result<()> {
                  [--requests N] [--workers W] [--max-batch B] [--max-delay-ms MS] \
                  [--resident-models R] [--shards S] [--worker-budget BYTES] \
                  [--decode --steps N --sessions S] [--queue-depth N] \
+                 [--kv-pages P --kv-policy refuse|evict|spill \
+                 --page-positions N --v-bits B] \
                  [--open-loop --rate R1,R2 [--burst] [--deadline-ms MS]] \
                  [--json] [--json-out FILE] [--trace FILE]"
             );

@@ -21,6 +21,7 @@
 
 use crate::codegen::gemm::{emit_gemm, emit_gemm_causal, GemmPlan};
 use crate::codegen::{self, pack, LayerBufs, LayerKind, LayerPlan};
+use crate::serve::kvpool::{KvPolicy, KvPool, KvPoolCfg, KvPoolStats, SlotGeomSpec};
 use crate::serve::session::{CachedAttnOp, CausalAvOp, SessionState};
 use crate::serve::{ModelHandle, ModelKey};
 use crate::sim::eltwise;
@@ -56,12 +57,16 @@ pub struct WorkerScratch {
 /// Everything an op may touch while running: the worker's simulated
 /// machine, this op's bound buffers (`None` in streaming mode), the
 /// worker scratch, and — inside a decode step — the session state that
-/// owns the growable packed K/V caches.
+/// owns the packed K/V caches, plus the worker's page pool when the
+/// session stores them paged.
 pub struct ExecCtx<'a> {
     pub m: &'a mut Machine,
     pub bound: Option<&'a BoundKernel>,
     pub scratch: &'a mut WorkerScratch,
     pub session: Option<&'a mut SessionState>,
+    /// the worker's paged KV pool ([`CachedAttnOp`] allocates pages
+    /// from it at page boundaries; `None` on non-paged workers)
+    pub kv: Option<&'a mut KvPool>,
 }
 
 /// One prepared graph operation. Object-safe: a prepared model is a
@@ -872,6 +877,10 @@ pub struct StepModel {
     /// what the server's footprint-based session placement charges a
     /// worker per submitted step
     pub kv_bytes_per_position: usize,
+    /// per-slot page-geometry facts (one per `CachedAttn` node, in
+    /// graph/slot order) — lets the engine and the server compute a
+    /// step's exact page demand before it runs
+    pub slot_geoms: Vec<SlotGeomSpec>,
 }
 
 /// A whole network prepared once: codegen plans, packed weights and mask
@@ -970,6 +979,27 @@ impl PreparedModel {
                 _ => 0,
             })
             .sum();
+        let slot_geoms = step_nodes
+            .iter()
+            .filter_map(|n| match n {
+                Node::CachedAttn { cfg, .. } => {
+                    let nch_dh = cfg
+                        .dh_asg
+                        .chunks
+                        .iter()
+                        .zip(cfg.dh_asg.valid.iter())
+                        .filter(|&(_, &v)| v > 0)
+                        .count();
+                    Some(SlotGeomSpec {
+                        heads: cfg.heads,
+                        dh: cfg.dh,
+                        nch_dh,
+                        pos_prec: cfg.pos_prec,
+                    })
+                }
+                _ => None,
+            })
+            .collect();
         PreparedModel {
             nodes,
             step: Some(StepModel {
@@ -977,6 +1007,7 @@ impl PreparedModel {
                 slots,
                 max_positions,
                 kv_bytes_per_position,
+                slot_geoms,
             }),
         }
     }
@@ -1013,6 +1044,7 @@ fn run_graph(
     m: &mut Machine,
     scratch: &mut WorkerScratch,
     mut session: Option<&mut SessionState>,
+    mut kv: Option<&mut KvPool>,
     input: &Tensor,
 ) -> NetResult {
     let mut outputs: Vec<Tensor> = Vec::with_capacity(nodes.len());
@@ -1026,6 +1058,7 @@ fn run_graph(
             bound: bound[ni].as_ref(),
             scratch: &mut *scratch,
             session: session.as_deref_mut(),
+            kv: kv.as_deref_mut(),
         };
         let out = node.op.run(&mut ctx, &inputs);
         drop(inputs);
@@ -1057,6 +1090,12 @@ struct ResidentModel {
 struct SessionEntry {
     key: Arc<ModelKey>,
     state: SessionState,
+    /// engine tick of the session's most recent step — the coldness
+    /// order budget-pressure eviction/spill picks victims by
+    last_step: u64,
+    /// pages currently parked in the pool's overflow arena (faulted
+    /// back before the session's next step)
+    spilled: bool,
 }
 
 /// Monotone bind-table churn totals an [`EngineMachine`] accumulates
@@ -1104,6 +1143,9 @@ pub struct EngineMachine {
     /// the model `run`/`run_step` address (single-model compatibility)
     default_model: Option<ModelHandle>,
     sessions: HashMap<u64, SessionEntry>,
+    /// paged KV-cache pool; `None` keeps sessions on the legacy
+    /// growable-vec storage
+    kv_pool: Option<KvPool>,
     counters: EngineCounters,
     /// bind/evict events since the last `take_events` (only filled
     /// when `record_events` is on)
@@ -1136,6 +1178,7 @@ impl EngineMachine {
             budget: budget.max(1),
             default_model: None,
             sessions: HashMap::new(),
+            kv_pool: None,
             counters: EngineCounters::default(),
             events: Vec::new(),
             record_events: false,
@@ -1234,13 +1277,68 @@ impl EngineMachine {
     pub fn run_model(&mut self, handle: &ModelHandle, input: &Tensor) -> NetResult {
         self.bind_model(handle);
         let r = self.resident.get(&*handle.key).expect("model resident after bind");
-        run_graph(&r.model.nodes, &r.bound, &mut self.m, &mut self.scratch, None, input)
+        run_graph(&r.model.nodes, &r.bound, &mut self.m, &mut self.scratch, None, None, input)
+    }
+
+    /// Budget policy for one upcoming decode step of `session`: count
+    /// the step's exact page demand (one page per slot crossing a page
+    /// boundary, plus this session's parked pages if it was spilled),
+    /// then evict or spill the coldest *other* sessions until it fits —
+    /// so [`KvPool::alloc`] stays infallible during the step. Under
+    /// [`KvPolicy::Refuse`] the server's admission gate is the
+    /// enforcement point and the engine never blocks; if nothing is
+    /// left to reclaim the pool overcommits (gauges report the truth)
+    /// rather than deadlocking a session larger than the whole budget.
+    fn ensure_kv_capacity(&mut self, handle: &ModelHandle, session: u64) {
+        let Some(pool) = self.kv_pool.as_mut() else { return };
+        let Some(step) = handle.prepared.step.as_ref() else { return };
+        let cfg = *pool.cfg();
+        let scfg = cfg.session_cfg();
+        let mut needed = pool.parked_pages(session);
+        let lens: Vec<usize> = match self.sessions.get(&session) {
+            Some(e) => e.state.slots.iter().map(|s| s.len).collect(),
+            None => vec![0; step.slot_geoms.len()],
+        };
+        for (len, sg) in lens.iter().zip(step.slot_geoms.iter()) {
+            if len % sg.page_geom(&scfg).page_positions == 0 {
+                needed += 1;
+            }
+        }
+        if matches!(cfg.policy, KvPolicy::Evict | KvPolicy::Spill) {
+            while pool.would_exceed(needed) {
+                let victim = self
+                    .sessions
+                    .iter()
+                    .filter(|&(&id, e)| id != session && !e.spilled && e.state.pages() > 0)
+                    .min_by_key(|&(&id, e)| (e.last_step, id))
+                    .map(|(&id, _)| id);
+                let Some(vid) = victim else { break };
+                if cfg.policy == KvPolicy::Evict {
+                    let mut e = self.sessions.remove(&vid).expect("victim resident");
+                    e.state.release_into(pool);
+                    pool.note_eviction();
+                } else {
+                    let e = self.sessions.get_mut(&vid).expect("victim resident");
+                    pool.park(vid, e.state.take_all_pages());
+                    e.spilled = true;
+                }
+            }
+        }
+        // fault this session's spilled pages back in (room was made
+        // above; unbudgeted overcommit if it wasn't)
+        if let Some(e) = self.sessions.get_mut(&session) {
+            if e.spilled {
+                let pages = pool.unpark(session).expect("spilled session has parked pages");
+                e.state.restore_all_pages(pages);
+                e.spilled = false;
+            }
+        }
     }
 
     /// Run one autoregressive decode step of `handle`'s model for
     /// `session`: the step graph executes against the session's KV
     /// caches, which grow by exactly one position. A new session id
-    /// starts an empty session.
+    /// starts an empty session (paged when a KV pool is attached).
     pub fn run_step_model(
         &mut self,
         handle: &ModelHandle,
@@ -1248,19 +1346,38 @@ impl EngineMachine {
         token: &Tensor,
     ) -> NetResult {
         self.bind_model(handle);
+        if self.kv_pool.is_some() {
+            self.ensure_kv_capacity(handle, session);
+        }
         let r = self.resident.get(&*handle.key).expect("model resident after bind");
         let step = r.model.step.as_ref().expect("model has no decode step graph");
+        let kv_cfg = self.kv_pool.as_ref().map(|p| p.cfg().session_cfg());
+        let tick = self.tick;
         let entry = self.sessions.entry(session).or_insert_with(|| SessionEntry {
             key: Arc::clone(&handle.key),
-            state: SessionState::new(step.slots),
+            state: match kv_cfg {
+                Some(cfg) => SessionState::new_paged(step.slots, cfg),
+                None => SessionState::new(step.slots),
+            },
+            last_step: tick,
+            spilled: false,
         });
         assert_eq!(
             *entry.key, *handle.key,
             "session {session} belongs to model {}, not {} (end it before reusing the id)",
             entry.key, handle.key
         );
+        entry.last_step = tick;
         let state = &mut entry.state;
-        run_graph(&step.nodes, &r.step_bound, &mut self.m, &mut self.scratch, Some(state), token)
+        run_graph(
+            &step.nodes,
+            &r.step_bound,
+            &mut self.m,
+            &mut self.scratch,
+            Some(state),
+            self.kv_pool.as_mut(),
+            token,
+        )
     }
 
     /// Run one inference against the default model (the one this engine
@@ -1276,10 +1393,33 @@ impl EngineMachine {
         self.run_step_model(&handle, session, token)
     }
 
-    /// Free a session's KV caches (no-op for an unknown id). A later
-    /// `run_step` with the same id starts a fresh, empty session.
+    /// Free a session's KV caches (no-op for an unknown id): paged
+    /// sessions return every resident page to the pool's free list
+    /// (spilled pages drop from the arena). A later `run_step` with
+    /// the same id starts a fresh, empty session.
     pub fn end_session(&mut self, session: u64) {
-        self.sessions.remove(&session);
+        if let Some(mut e) = self.sessions.remove(&session) {
+            if let Some(pool) = self.kv_pool.as_mut() {
+                if e.spilled {
+                    pool.drop_parked(session);
+                }
+                e.state.release_into(pool);
+            }
+        }
+    }
+
+    /// Attach a paged KV pool: sessions started after this store their
+    /// caches as fixed-size pages under the pool's budget and policy.
+    /// Call before any session opens (existing growable sessions keep
+    /// their storage and are invisible to the pool's accounting).
+    pub fn set_kv_pool(&mut self, cfg: KvPoolCfg) {
+        self.kv_pool = Some(KvPool::new(cfg));
+    }
+
+    /// Occupancy and lifetime counters of the paged KV pool (`None`
+    /// when this engine runs legacy growable sessions).
+    pub fn kv_pool_stats(&self) -> Option<KvPoolStats> {
+        self.kv_pool.as_ref().map(KvPool::stats)
     }
 
     /// Number of decode sessions resident on this worker.

@@ -1,0 +1,493 @@
+//! `serve::kvpool` — the paged, budgeted KV-cache page allocator.
+//!
+//! PR 3's session caches hold one growable host vec per [`KvSlot`],
+//! and PR 4 places sessions by an *estimated* worst-case footprint —
+//! fine for tens of sessions, hopeless for thousands of mixed-length
+//! ones. This module makes KV storage a first-class allocator: session
+//! state is carved into fixed-size, chunk-aligned **pages** (one page
+//! = `page_positions` decode positions of packed K columns + quantized
+//! V for every head of one attention slot), allocated from a
+//! per-worker [`KvPool`] with **exact** page accounting:
+//!
+//! * every allocation bumps `used` by exactly one page and every
+//!   release returns the page to a per-geometry free list, so
+//!   thousands of open/close cycles reuse the same buffers with zero
+//!   fragmentation — `used` equals `Σ ceil(slot_len / page_positions)`
+//!   over resident sessions at every instant;
+//! * a configurable page budget turns exhaustion into policy
+//!   ([`KvPolicy`]): **refuse** new work at the server's admission
+//!   gate, **evict** the coldest session (drop its pages — the caller
+//!   sees a restart-from-empty on the next step), or **spill** the
+//!   coldest session's pages into a host-side overflow arena and fault
+//!   them back untouched on its next step (bit-exact round trip);
+//! * an optional **low-precision V tier** ([`KvPoolCfg::v_bits`])
+//!   stores V pages at a lower SMOL level than compute — capacity per
+//!   page goes up, accuracy degrades measurably (see the oracle sweep
+//!   in `tests/proptests.rs`).
+//!
+//! The pool never blocks an allocation itself — policy runs *before*
+//! the step (admission in `workers.rs`, evict/spill in
+//! `engine::EngineMachine::run_step_model`), so `alloc` is infallible
+//! and a session that legitimately exceeds the whole budget overcommits
+//! (the gauges report the truth) instead of deadlocking.
+//!
+//! [`KvSlot`]: crate::serve::session::KvSlot
+
+use crate::simd::patterns::Pattern;
+use std::collections::HashMap;
+
+/// What to do when a step would push a worker's pool past its page
+/// budget.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum KvPolicy {
+    /// Refuse at the server's admission gate (`try_open_session` /
+    /// `try_submit_step` return [`Rejected`]). The engine itself never
+    /// refuses — a race between close-submit and close-execution may
+    /// transiently overcommit by the in-flight sessions' pages.
+    ///
+    /// [`Rejected`]: crate::serve::Rejected
+    #[default]
+    Refuse,
+    /// Evict the coldest *other* session: drop its pages back to the
+    /// free list. The caller is not notified; a later step for the
+    /// evicted session restarts it from an empty cache (the decode
+    /// analogue of losing a model from an LRU bind table).
+    Evict,
+    /// Spill the coldest *other* session's pages to the host-side
+    /// overflow arena; its next step faults them back verbatim.
+    Spill,
+}
+
+impl KvPolicy {
+    /// Parse a `--kv-policy` CLI value.
+    pub fn parse(s: &str) -> Option<KvPolicy> {
+        match s {
+            "refuse" => Some(KvPolicy::Refuse),
+            "evict" => Some(KvPolicy::Evict),
+            "spill" => Some(KvPolicy::Spill),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for KvPolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            KvPolicy::Refuse => write!(f, "refuse"),
+            KvPolicy::Evict => write!(f, "evict"),
+            KvPolicy::Spill => write!(f, "spill"),
+        }
+    }
+}
+
+/// Pool configuration, one per worker (every worker of a server gets
+/// an identical copy; pools themselves are per-worker and unshared).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct KvPoolCfg {
+    /// Requested positions per page. The effective per-slot page size
+    /// is this rounded *up* to a multiple of the slot's V chunk
+    /// capacity ([`PageGeom::new`]), so a packed V chunk never
+    /// straddles a page boundary.
+    pub page_positions: usize,
+    /// Page budget per worker; `None` = unbounded (paged layout and
+    /// exact accounting without any eviction pressure).
+    pub pages_per_worker: Option<usize>,
+    pub policy: KvPolicy,
+    /// Store V at this SMOL precision instead of the compute
+    /// (`pos_prec`) level — clamped per slot to at most the compute
+    /// precision, so pool buffers sized for compute always suffice.
+    /// `None` keeps V at compute precision (bit-identical decode).
+    pub v_bits: Option<u8>,
+}
+
+impl Default for KvPoolCfg {
+    fn default() -> KvPoolCfg {
+        KvPoolCfg {
+            page_positions: 64,
+            pages_per_worker: None,
+            policy: KvPolicy::default(),
+            v_bits: None,
+        }
+    }
+}
+
+/// The session-level paged-storage knobs a worker threads into each
+/// [`SessionState`] it creates (the pool-level budget/policy stay in
+/// the engine).
+///
+/// [`SessionState`]: crate::serve::session::SessionState
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SessionKvCfg {
+    pub page_positions: usize,
+    pub v_bits: Option<u8>,
+}
+
+impl KvPoolCfg {
+    pub fn session_cfg(&self) -> SessionKvCfg {
+        SessionKvCfg { page_positions: self.page_positions, v_bits: self.v_bits }
+    }
+}
+
+/// Effective V storage precision for a slot whose compute precision is
+/// `pos_prec`: the configured tier, clamped so it never *exceeds*
+/// compute — a lower level has larger chunk capacity, so buffers sized
+/// for compute always fit, while a higher one would overflow them.
+pub fn effective_v_prec(pos_prec: u8, v_bits: Option<u8>) -> u8 {
+    v_bits.map(|b| b.min(pos_prec)).unwrap_or(pos_prec)
+}
+
+/// One attention slot's page shape: fixed per `(heads, dh, nch_dh,
+/// v_prec, page_positions)` and shared by every page of every session
+/// decoding through that slot — which is what makes the free list
+/// geometry-keyed reuse exact.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct PageGeom {
+    pub heads: usize,
+    pub dh: usize,
+    /// chunk count of the dh (score contraction) axis
+    pub nch_dh: usize,
+    /// V storage precision (compute `pos_prec`, or the lower V tier)
+    pub v_prec: u8,
+    /// positions per page, aligned up to a multiple of the V chunk
+    /// capacity so packed V chunks never straddle pages
+    pub page_positions: usize,
+}
+
+impl PageGeom {
+    /// Build a slot geometry, aligning `page_positions` up to the V
+    /// chunk capacity at `v_prec` (a 1-position request at 4-bit V
+    /// becomes a 32-position page: the packed-chunk granularity).
+    pub fn new(heads: usize, dh: usize, nch_dh: usize, v_prec: u8, page_positions: usize) -> PageGeom {
+        let cap = Pattern::uniform(v_prec).capacity() as usize;
+        let p = page_positions.max(1).div_ceil(cap) * cap;
+        PageGeom { heads, dh, nch_dh, v_prec, page_positions: p }
+    }
+
+    /// V chunk capacity (positions per packed 16-byte chunk).
+    pub fn cap_v(&self) -> usize {
+        Pattern::uniform(self.v_prec).capacity() as usize
+    }
+
+    /// Packed V chunks per page per feature column.
+    pub fn chunks_per_page(&self) -> usize {
+        self.page_positions / self.cap_v()
+    }
+
+    /// Packed K bytes per page: `heads * page_positions` columns of
+    /// `nch_dh` 16-byte chunks.
+    pub fn k_bytes(&self) -> usize {
+        self.heads * self.page_positions * self.nch_dh * 16
+    }
+
+    /// Quantized V values per page (position-major per head).
+    pub fn v_quant_len(&self) -> usize {
+        self.heads * self.page_positions * self.dh
+    }
+
+    /// Packed V bytes per page: per `(head, feature)` column,
+    /// `chunks_per_page` 16-byte chunks along the position axis.
+    pub fn v_packed_bytes(&self) -> usize {
+        self.heads * self.dh * self.chunks_per_page() * 16
+    }
+
+    /// Total host bytes one page of this geometry occupies.
+    pub fn page_bytes(&self) -> usize {
+        self.k_bytes() + self.v_quant_len() * 4 + self.v_packed_bytes()
+    }
+
+    /// Pages a slot of `len` positions occupies.
+    pub fn pages_for(&self, len: usize) -> usize {
+        len.div_ceil(self.page_positions)
+    }
+}
+
+/// The geometry-determining facts of one `CachedAttn` slot, recorded
+/// on the prepared [`StepModel`] so the engine and the server can
+/// compute page needs *before* a step runs (the session itself builds
+/// the same [`PageGeom`] lazily on its first step).
+///
+/// [`StepModel`]: crate::serve::engine::StepModel
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SlotGeomSpec {
+    pub heads: usize,
+    pub dh: usize,
+    /// chunk count of the dh (score contraction) axis
+    pub nch_dh: usize,
+    /// compute precision of the position axis
+    pub pos_prec: u8,
+}
+
+impl SlotGeomSpec {
+    /// The page geometry this slot uses under `cfg` — byte-for-byte
+    /// the one `CachedAttnOp` builds at first step.
+    pub fn page_geom(&self, cfg: &SessionKvCfg) -> PageGeom {
+        let v_prec = effective_v_prec(self.pos_prec, cfg.v_bits);
+        PageGeom::new(self.heads, self.dh, self.nch_dh, v_prec, cfg.page_positions)
+    }
+}
+
+/// One fixed-size page: `page_positions` positions of packed K columns
+/// plus quantized + packed V, for every head of one attention slot.
+/// Contents are only meaningful up to the owning slot's `len`; reused
+/// pages are *not* zeroed (every byte the execution path reads is
+/// overwritten by the append path first).
+#[derive(Debug, Clone)]
+pub struct KvPage {
+    /// packed K, `(head * page_positions + pos) * nch_dh * 16` layout
+    pub k: Vec<u8>,
+    /// quantized V, `(head * page_positions + pos) * dh + feat` layout
+    pub v_quant: Vec<f32>,
+    /// packed V, `((head * dh + feat) * chunks_per_page + chunk) * 16`
+    pub v_packed: Vec<u8>,
+}
+
+impl KvPage {
+    fn new(geom: &PageGeom) -> KvPage {
+        KvPage {
+            k: vec![0u8; geom.k_bytes()],
+            v_quant: vec![0f32; geom.v_quant_len()],
+            v_packed: vec![0u8; geom.v_packed_bytes()],
+        }
+    }
+}
+
+/// Point-in-time pool occupancy + lifetime counters, published to the
+/// observability registry after every step batch.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct KvPoolStats {
+    /// page budget (`None` = unbounded)
+    pub budget: Option<usize>,
+    /// pages currently backing resident sessions
+    pub used: usize,
+    /// pages parked on the free list awaiting reuse
+    pub free: usize,
+    /// pages currently spilled to the overflow arena
+    pub spilled_pages: usize,
+    /// sessions spilled to the arena (lifetime)
+    pub spills: u64,
+    /// sessions faulted back from the arena (lifetime)
+    pub faults: u64,
+    /// sessions evicted (pages dropped) under budget pressure (lifetime)
+    pub evictions: u64,
+}
+
+/// The per-worker page pool: exact occupancy accounting, per-geometry
+/// free lists, and the spill arena. Policy decisions live in the
+/// engine/server; the pool only moves pages and keeps the books.
+#[derive(Debug)]
+pub struct KvPool {
+    cfg: KvPoolCfg,
+    used: usize,
+    free: HashMap<PageGeom, Vec<KvPage>>,
+    free_count: usize,
+    /// spilled sessions: session id -> per-slot page runs, parked
+    /// verbatim and restored verbatim on fault-back
+    arena: HashMap<u64, Vec<Vec<KvPage>>>,
+    spilled_pages: usize,
+    spills: u64,
+    faults: u64,
+    evictions: u64,
+}
+
+impl KvPool {
+    pub fn new(cfg: KvPoolCfg) -> KvPool {
+        KvPool {
+            cfg,
+            used: 0,
+            free: HashMap::new(),
+            free_count: 0,
+            arena: HashMap::new(),
+            spilled_pages: 0,
+            spills: 0,
+            faults: 0,
+            evictions: 0,
+        }
+    }
+
+    pub fn cfg(&self) -> &KvPoolCfg {
+        &self.cfg
+    }
+
+    /// Pages currently backing resident sessions.
+    pub fn used(&self) -> usize {
+        self.used
+    }
+
+    /// Whether allocating `extra` more pages would exceed the budget.
+    /// Always `false` when unbounded.
+    pub fn would_exceed(&self, extra: usize) -> bool {
+        self.cfg.pages_per_worker.is_some_and(|b| self.used + extra > b)
+    }
+
+    /// Allocate one page: reuse a free-listed page of the same
+    /// geometry or grow the pool. Infallible by design — budget policy
+    /// runs *before* the step (see the module docs).
+    pub fn alloc(&mut self, geom: &PageGeom) -> KvPage {
+        self.used += 1;
+        if let Some(list) = self.free.get_mut(geom) {
+            if let Some(page) = list.pop() {
+                self.free_count -= 1;
+                return page;
+            }
+        }
+        KvPage::new(geom)
+    }
+
+    /// Return a slot's pages to the geometry's free list for reuse.
+    pub fn release(&mut self, geom: &PageGeom, pages: Vec<KvPage>) {
+        let n = pages.len();
+        debug_assert!(self.used >= n, "release of pages the pool never allocated");
+        self.used -= n;
+        self.free_count += n;
+        self.free.entry(*geom).or_default().extend(pages);
+    }
+
+    /// Park a whole session's pages (one run per slot) in the overflow
+    /// arena. The pages move verbatim — faulting back restores the
+    /// exact bytes.
+    pub fn park(&mut self, session: u64, slots: Vec<Vec<KvPage>>) {
+        let n: usize = slots.iter().map(Vec::len).sum();
+        debug_assert!(self.used >= n, "park of pages the pool never allocated");
+        self.used -= n;
+        self.spilled_pages += n;
+        self.spills += 1;
+        let prev = self.arena.insert(session, slots);
+        debug_assert!(prev.is_none(), "session {session} parked twice");
+    }
+
+    /// Fault a parked session's pages back into residency. `None` if
+    /// the session was never parked.
+    pub fn unpark(&mut self, session: u64) -> Option<Vec<Vec<KvPage>>> {
+        let slots = self.arena.remove(&session)?;
+        let n: usize = slots.iter().map(Vec::len).sum();
+        self.spilled_pages -= n;
+        self.used += n;
+        self.faults += 1;
+        Some(slots)
+    }
+
+    /// Pages a spilled session has parked in the arena (0 if never
+    /// parked) — what faulting it back will re-add to `used`.
+    pub fn parked_pages(&self, session: u64) -> usize {
+        self.arena.get(&session).map_or(0, |s| s.iter().map(Vec::len).sum())
+    }
+
+    /// Drop a parked session's pages without restoring them (session
+    /// closed while spilled). The host buffers are freed, not
+    /// free-listed — they were already off the books.
+    pub fn drop_parked(&mut self, session: u64) {
+        if let Some(slots) = self.arena.remove(&session) {
+            self.spilled_pages -= slots.iter().map(Vec::len).sum::<usize>();
+        }
+    }
+
+    /// Record one budget-pressure session eviction (the engine drops
+    /// the pages through [`KvPool::release`] separately).
+    pub fn note_eviction(&mut self) {
+        self.evictions += 1;
+    }
+
+    pub fn stats(&self) -> KvPoolStats {
+        KvPoolStats {
+            budget: self.cfg.pages_per_worker,
+            used: self.used,
+            free: self.free_count,
+            spilled_pages: self.spilled_pages,
+            spills: self.spills,
+            faults: self.faults,
+            evictions: self.evictions,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn geom() -> PageGeom {
+        PageGeom::new(2, 8, 3, 4, 33)
+    }
+
+    #[test]
+    fn geometry_aligns_pages_to_v_chunks() {
+        // cap at 4-bit = 32 positions/chunk: 33 rounds up to 64
+        let g = geom();
+        assert_eq!(g.page_positions, 64);
+        assert_eq!(g.chunks_per_page(), 2);
+        assert_eq!(g.k_bytes(), 2 * 64 * 3 * 16);
+        assert_eq!(g.v_quant_len(), 2 * 64 * 8);
+        assert_eq!(g.v_packed_bytes(), 2 * 8 * 2 * 16);
+        assert_eq!(g.pages_for(0), 0);
+        assert_eq!(g.pages_for(64), 1);
+        assert_eq!(g.pages_for(65), 2);
+        // 2-bit V doubles the chunk capacity (64), so a 1-position
+        // request becomes one full chunk worth of positions
+        let g2 = PageGeom::new(1, 4, 1, 2, 1);
+        assert_eq!(g2.page_positions, 64);
+    }
+
+    #[test]
+    fn accounting_is_exact_through_alloc_release_cycles() {
+        let g = geom();
+        let mut pool = KvPool::new(KvPoolCfg { pages_per_worker: Some(4), ..Default::default() });
+        let pages: Vec<KvPage> = (0..3).map(|_| pool.alloc(&g)).collect();
+        assert_eq!(pool.used(), 3);
+        assert!(!pool.would_exceed(1));
+        assert!(pool.would_exceed(2));
+        pool.release(&g, pages);
+        assert_eq!(pool.used(), 0);
+        assert_eq!(pool.stats().free, 3);
+        // reuse: three more allocs drain the free list, no growth
+        let again: Vec<KvPage> = (0..3).map(|_| pool.alloc(&g)).collect();
+        assert_eq!(pool.stats().free, 0);
+        assert_eq!(pool.used(), 3);
+        pool.release(&g, again);
+    }
+
+    #[test]
+    fn free_lists_are_geometry_keyed() {
+        let g1 = geom();
+        let g2 = PageGeom::new(1, 4, 1, 4, 32);
+        let mut pool = KvPool::new(KvPoolCfg::default());
+        let p1 = pool.alloc(&g1);
+        pool.release(&g1, vec![p1]);
+        // a different geometry must not reuse g1's page
+        let p2 = pool.alloc(&g2);
+        assert_eq!(p2.k.len(), g2.k_bytes());
+        assert_eq!(pool.stats().free, 1, "g1's page stays on its own list");
+        pool.release(&g2, vec![p2]);
+    }
+
+    #[test]
+    fn spill_round_trip_preserves_bytes_and_books() {
+        let g = geom();
+        let mut pool = KvPool::new(KvPoolCfg::default());
+        let mut page = pool.alloc(&g);
+        page.k[7] = 0xAB;
+        page.v_quant[3] = -1.5;
+        page.v_packed[1] = 0xCD;
+        pool.park(9, vec![vec![page]]);
+        let s = pool.stats();
+        assert_eq!((s.used, s.spilled_pages, s.spills), (0, 1, 1));
+        let back = pool.unpark(9).unwrap();
+        assert_eq!(back[0][0].k[7], 0xAB);
+        assert_eq!(back[0][0].v_quant[3], -1.5);
+        assert_eq!(back[0][0].v_packed[1], 0xCD);
+        let s = pool.stats();
+        assert_eq!((s.used, s.spilled_pages, s.faults), (1, 0, 1));
+        assert!(pool.unpark(9).is_none());
+        pool.release(&g, back.into_iter().flatten().collect());
+    }
+
+    #[test]
+    fn drop_parked_clears_arena_without_freelisting() {
+        let g = geom();
+        let mut pool = KvPool::new(KvPoolCfg::default());
+        let page = pool.alloc(&g);
+        pool.park(1, vec![vec![page]]);
+        pool.drop_parked(1);
+        let s = pool.stats();
+        assert_eq!((s.used, s.free, s.spilled_pages), (0, 0, 0));
+        assert!(pool.unpark(1).is_none());
+    }
+}

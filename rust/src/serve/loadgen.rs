@@ -141,6 +141,29 @@ mod tests {
     }
 
     #[test]
+    fn zero_seed_is_remapped_not_degenerate() {
+        // state 0 is the xorshift fixed point: without the remap in
+        // `Rng64::new` every draw would be 0 and the stream constant.
+        // The constructor must swap it for a nonzero state that keeps
+        // the generator live and distinct from nearby seeds.
+        let mut z = Rng64::new(0);
+        let first = z.next_u64();
+        assert_ne!(first, 0, "zero seed must not emit the fixed point");
+        let draws: Vec<u64> = (0..64).map(|_| z.next_u64()).collect();
+        assert!(
+            draws.iter().any(|&d| d != first),
+            "zero-seeded stream must vary, not repeat one value"
+        );
+        // and it must behave like any other seed: deterministic replay,
+        // but a stream of its own
+        let a: Vec<u64> = (0..16).map(|_| Rng64::new(0).next_u64()).collect();
+        assert!(a.windows(2).all(|w| w[0] == w[1]), "zero seed must replay deterministically");
+        let mut one = Rng64::new(1);
+        let b: Vec<u64> = (0..16).map(|_| one.next_u64()).collect();
+        assert_ne!(&draws[..16], &b[..], "seed 0 and seed 1 must diverge");
+    }
+
+    #[test]
     fn uniform_stays_in_half_open_unit_interval() {
         let mut rng = Rng64::new(0); // zero seed is remapped, not a fixed point
         for _ in 0..10_000 {

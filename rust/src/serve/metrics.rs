@@ -14,7 +14,7 @@
 //! window at all; its `steady_rps` is NaN (JSON `null`), never a
 //! divide-by-almost-zero fantasy number.
 
-use crate::serve::obs::ObsSnapshot;
+use crate::serve::obs::{KvPoolSnapshot, ObsSnapshot};
 use crate::serve::workers::Completion;
 use crate::sim::machine::RunStats;
 use crate::util::json::Json;
@@ -28,9 +28,12 @@ use std::time::Duration;
 /// per-worker utilization rows and bind/eviction totals; to 4 when it
 /// grew admission/fault accounting (`rejected`, `lost_requests`,
 /// `partial_requests`) and the `open_loop` offered-load points
-/// (goodput + percentiles per rate). Bench tooling asserts it instead
-/// of guessing from row shapes.
-pub const SERVE_REPORT_SCHEMA: u64 = 4;
+/// (goodput + percentiles per rate); to 5 when it grew the `kv_pool`
+/// block (paged KV-cache occupancy: page budget, used/free/spilled
+/// pages, spill/fault/eviction/refusal counters) and per-worker
+/// `kv_pages`. Bench tooling asserts it instead of guessing from row
+/// shapes.
+pub const SERVE_REPORT_SCHEMA: u64 = 5;
 
 /// Aggregated simulated cost of one model's layer across all served
 /// requests. Keyed by `(model, name, shard)`: layer names repeat across
@@ -94,6 +97,8 @@ pub struct WorkerRow {
     pub evictions: u64,
     pub resident_bytes: u64,
     pub kv_bytes: u64,
+    /// resident KV-pool pages (0 when the pool is unpaged)
+    pub kv_pages: u64,
 }
 
 /// One offered-load point of an open-loop run: requests arrive on a
@@ -195,6 +200,9 @@ pub struct ServeReport {
     /// submissions refused at the admission gate (0 without a snapshot
     /// or without a configured queue depth)
     pub rejected: u64,
+    /// aggregated paged KV-pool state (`None` without a snapshot or
+    /// when the pool serves from growable caches)
+    pub kv_pool: Option<KvPoolSnapshot>,
     /// request ids lost to dead serving threads (empty on a healthy
     /// run; filled by callers from [`Server::faults`])
     ///
@@ -313,6 +321,7 @@ pub fn summarize_with(
                     evictions: w.evictions,
                     resident_bytes: w.resident_bytes,
                     kv_bytes: w.kv_bytes,
+                    kv_pages: w.kv_pages,
                 })
                 .collect()
         })
@@ -354,6 +363,7 @@ pub fn summarize_with(
         per_model,
         per_layer,
         rejected: snap.map_or(0, |s| s.rejected),
+        kv_pool: snap.and_then(|s| s.kv_pool),
         lost: Vec::new(),
         partial: Vec::new(),
         open_loop: Vec::new(),
@@ -411,6 +421,10 @@ impl ServeReport {
         o.insert("binds".into(), num(self.binds as f64));
         o.insert("evictions".into(), num(self.evictions as f64));
         o.insert("rejected".into(), num(self.rejected as f64));
+        // present only for paged-KV runs, so its presence is greppable
+        if let Some(p) = &self.kv_pool {
+            o.insert("kv_pool".into(), p.to_json());
+        }
         o.insert(
             "lost_requests".into(),
             Json::Arr(self.lost.iter().map(|&id| num(id as f64)).collect()),
@@ -437,6 +451,7 @@ impl ServeReport {
                 wo.insert("evictions".into(), num(w.evictions as f64));
                 wo.insert("resident_bytes".into(), num(w.resident_bytes as f64));
                 wo.insert("kv_bytes".into(), num(w.kv_bytes as f64));
+                wo.insert("kv_pages".into(), num(w.kv_pages as f64));
                 Json::Obj(wo)
             })
             .collect();
@@ -562,6 +577,23 @@ impl ServeReport {
         }
         if self.rejected > 0 && self.open_loop.is_empty() {
             println!("  admission rejections: {}", self.rejected);
+        }
+        if let Some(p) = &self.kv_pool {
+            let budget = p
+                .pages_per_worker
+                .map_or("unbounded".to_string(), |b| format!("{b}/worker"));
+            println!(
+                "  kv pool: {} pages used ({} free, {} spilled; budget {})  \
+                 spills {}  faults {}  evictions {}  refusals {}",
+                p.pages_used,
+                p.pages_free,
+                p.spilled_pages,
+                budget,
+                p.spills,
+                p.faults,
+                p.evictions,
+                p.refusals
+            );
         }
         if !self.lost.is_empty() || !self.partial.is_empty() {
             println!(

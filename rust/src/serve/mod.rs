@@ -46,6 +46,19 @@
 //! [`Rejected`] outcomes at the `try_*` submission forms instead of
 //! unbounded queuing.
 //!
+//! Session K/V lives in **pages**: any [`ServeConfig::kv`]
+//! configuration switches sessions from growable buffers to fixed-size
+//! chunk-aligned pages from a per-worker [`KvPool`] ([`kvpool`]) with
+//! exact page accounting — placement charges sessions by the pages
+//! they actually hold, and a `--kv-pages` budget is enforced by policy:
+//! [`KvPolicy::Refuse`] gates admission, [`KvPolicy::Evict`] drops the
+//! coldest session's pages, [`KvPolicy::Spill`] parks them in a host
+//! arena and faults them back bit-exactly. Paged decode is
+//! bit-identical to growable decode; an optional low-precision V tier
+//! (`--v-bits`) trades context accuracy for capacity. Pool gauges and
+//! spill/evict/refuse counters land in the snapshot and the schema-5
+//! report's `kv_pool` block.
+//!
 //! Every request additionally carries a lifecycle span
 //! ([`obs::SpanTrack`]: enqueued → batch-closed → dispatched → bound →
 //! executed → gathered), and the pool keeps a live, lock-cheap metrics
@@ -60,6 +73,7 @@
 pub mod batcher;
 pub mod deploy;
 pub mod engine;
+pub mod kvpool;
 pub mod loadgen;
 pub mod metrics;
 pub mod obs;
@@ -72,12 +86,15 @@ pub use engine::{
     BoundKernel, EngineMachine, ExecCtx, PreparedConv, PreparedMatmul, PreparedModel,
     PreparedNode, PreparedOp, StepModel, WorkerScratch,
 };
+pub use kvpool::{KvPage, KvPolicy, KvPool, KvPoolCfg, KvPoolStats, PageGeom, SessionKvCfg};
 pub use loadgen::{arrival_offsets, ArrivalSpec, Rng64, MEAN_BURST};
 pub use metrics::{
     percentile, summarize, summarize_with, LayerAgg, ModelAgg, OpenLoopPoint, ServeReport,
     SetupTiming, SpanAgg, WorkerRow, SERVE_REPORT_SCHEMA,
 };
-pub use obs::{GroupDepth, HistSummary, LogHist, Obs, ObsSnapshot, SpanTrack, WorkerSnapshot};
+pub use obs::{
+    GroupDepth, HistSummary, KvPoolSnapshot, LogHist, Obs, ObsSnapshot, SpanTrack, WorkerSnapshot,
+};
 pub use session::SessionState;
 pub use workers::{Completion, Rejected, ServeConfig, ServeFaults, Server, SessionId};
 

@@ -32,7 +32,7 @@ use crate::serve::ModelKey;
 use crate::util::json::Json;
 use std::collections::HashMap;
 use std::sync::atomic::Ordering::{Acquire, Relaxed, Release};
-use std::sync::atomic::{AtomicI64, AtomicU64};
+use std::sync::atomic::{AtomicBool, AtomicI64, AtomicU64};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
@@ -396,6 +396,15 @@ pub(crate) struct WorkerObs {
     pub(crate) resident_bytes: AtomicU64,
     pub(crate) kv_bytes: AtomicU64,
     pub(crate) sessions: AtomicU64,
+    // paged KV-pool gauges/counters, refreshed from the worker's
+    // engine pool after every step batch (zero when the pool is
+    // unpaged)
+    pub(crate) kv_pages_used: AtomicU64,
+    pub(crate) kv_pages_free: AtomicU64,
+    pub(crate) kv_spilled_pages: AtomicU64,
+    pub(crate) kv_spills: AtomicU64,
+    pub(crate) kv_faults: AtomicU64,
+    pub(crate) kv_evictions: AtomicU64,
 }
 
 type GroupKey = (Arc<ModelKey>, Option<usize>);
@@ -409,7 +418,8 @@ pub struct Obs {
     worker_budget: Option<usize>,
     submitted: AtomicU64,
     completed: AtomicU64,
-    /// Submissions refused at the admission gate (queue depth limit).
+    /// Submissions refused at the admission gate (queue depth limit or
+    /// KV page budget).
     rejected: AtomicU64,
     batches_closed: AtomicU64,
     sessions_opened: AtomicU64,
@@ -423,6 +433,16 @@ pub struct Obs {
     groups: Mutex<HashMap<GroupKey, i64>>,
     /// Shards submitted but not yet gathered into a completion.
     gather_outstanding: AtomicI64,
+    /// Whether the pool serves from paged KV pools (set once at spawn;
+    /// gates the `kv_pool` snapshot block).
+    kv_enabled: AtomicBool,
+    /// Per-worker KV page budget; `u64::MAX` = unbounded.
+    kv_pages_budget: AtomicU64,
+    /// Opens/steps refused at the page-budget admission gate
+    /// ([`KvPolicy::Refuse`]); also counted in `rejected`.
+    ///
+    /// [`KvPolicy::Refuse`]: crate::serve::KvPolicy::Refuse
+    kv_refused: AtomicU64,
     pub(crate) workers: Vec<WorkerObs>,
     queue_wait_ns: LogHist,
     bind_wait_ns: LogHist,
@@ -448,6 +468,9 @@ impl Obs {
             queue_pinned: (0..n_workers).map(|_| AtomicI64::new(0)).collect(),
             groups: Mutex::new(HashMap::new()),
             gather_outstanding: AtomicI64::new(0),
+            kv_enabled: AtomicBool::new(false),
+            kv_pages_budget: AtomicU64::new(u64::MAX),
+            kv_refused: AtomicU64::new(0),
             workers: (0..n_workers).map(|_| WorkerObs::default()).collect(),
             queue_wait_ns: LogHist::new(),
             bind_wait_ns: LogHist::new(),
@@ -482,6 +505,22 @@ impl Obs {
     /// Caller-side: a submission was refused at the admission gate.
     pub(crate) fn on_reject(&self) {
         self.rejected.fetch_add(1, Relaxed);
+    }
+
+    /// Server-spawn-side: the pool serves from paged KV pools with
+    /// this per-worker page budget. Turns on the `kv_pool` snapshot
+    /// block.
+    pub(crate) fn configure_kv(&self, pages_per_worker: Option<usize>) {
+        self.kv_enabled.store(true, Relaxed);
+        self.kv_pages_budget.store(pages_per_worker.map_or(u64::MAX, |b| b as u64), Relaxed);
+    }
+
+    /// Caller-side: an open/step was refused at the page-budget
+    /// admission gate. Counted both as a rejection (it sheds load like
+    /// any other refusal) and in the pool-specific refusal counter.
+    pub(crate) fn on_kv_refuse(&self) {
+        self.rejected.fetch_add(1, Relaxed);
+        self.kv_refused.fetch_add(1, Relaxed);
     }
 
     /// Requests submitted but not yet drained by the caller — the
@@ -700,10 +739,25 @@ impl Obs {
                     resident_models: w.resident_models.load(Relaxed),
                     resident_bytes: w.resident_bytes.load(Relaxed),
                     kv_bytes: w.kv_bytes.load(Relaxed),
+                    kv_pages: w.kv_pages_used.load(Relaxed),
                     sessions: w.sessions.load(Relaxed),
                 }
             })
             .collect();
+        let kv_pool = self.kv_enabled.load(Relaxed).then(|| {
+            let ws = &self.workers;
+            let budget = self.kv_pages_budget.load(Relaxed);
+            KvPoolSnapshot {
+                pages_per_worker: (budget != u64::MAX).then_some(budget as usize),
+                pages_used: ws.iter().map(|w| w.kv_pages_used.load(Relaxed)).sum(),
+                pages_free: ws.iter().map(|w| w.kv_pages_free.load(Relaxed)).sum(),
+                spilled_pages: ws.iter().map(|w| w.kv_spilled_pages.load(Relaxed)).sum(),
+                spills: ws.iter().map(|w| w.kv_spills.load(Relaxed)).sum(),
+                faults: ws.iter().map(|w| w.kv_faults.load(Relaxed)).sum(),
+                evictions: ws.iter().map(|w| w.kv_evictions.load(Relaxed)).sum(),
+                refusals: self.kv_refused.load(Relaxed),
+            }
+        });
         let mut group_depths: Vec<GroupDepth> = self
             .groups
             .lock()
@@ -734,6 +788,7 @@ impl Obs {
             gather_outstanding: self.gather_outstanding.load(Relaxed),
             trace_dropped: self.trace.as_ref().map_or(0, |t| t.dropped.load(Relaxed)),
             worker_budget: self.worker_budget,
+            kv_pool,
             workers,
             queue_wait_ms: self.queue_wait_ns.summary(1e-6),
             bind_wait_ms: self.bind_wait_ns.summary(1e-6),
@@ -809,6 +864,8 @@ pub struct WorkerSnapshot {
     pub resident_models: u64,
     pub resident_bytes: u64,
     pub kv_bytes: u64,
+    /// Resident KV-pool pages on this worker (0 when unpaged).
+    pub kv_pages: u64,
     pub sessions: u64,
 }
 
@@ -827,7 +884,50 @@ impl WorkerSnapshot {
             ("resident_models", jint(self.resident_models)),
             ("resident_bytes", jint(self.resident_bytes)),
             ("kv_bytes", jint(self.kv_bytes)),
+            ("kv_pages", jint(self.kv_pages)),
             ("sessions", jint(self.sessions)),
+        ])
+    }
+}
+
+/// Pool-wide paged-KV occupancy and policy counters, aggregated over
+/// every worker's [`KvPool`]. Present in an [`ObsSnapshot`] (and the
+/// `ServeReport`) only when the server was spawned with
+/// [`ServeConfig::kv`] set.
+///
+/// [`KvPool`]: crate::serve::kvpool::KvPool
+/// [`ServeConfig::kv`]: crate::serve::ServeConfig::kv
+#[derive(Debug, Clone, Copy)]
+pub struct KvPoolSnapshot {
+    /// Configured page budget per worker (`None` = unbounded).
+    pub pages_per_worker: Option<usize>,
+    /// Pages backing resident sessions, summed over workers.
+    pub pages_used: u64,
+    /// Free-listed pages awaiting reuse, summed over workers.
+    pub pages_free: u64,
+    /// Pages currently parked in overflow arenas.
+    pub spilled_pages: u64,
+    /// Sessions spilled to an arena (lifetime).
+    pub spills: u64,
+    /// Sessions faulted back from an arena (lifetime).
+    pub faults: u64,
+    /// Sessions evicted under budget pressure (lifetime).
+    pub evictions: u64,
+    /// Opens/steps refused at the page-budget admission gate.
+    pub refusals: u64,
+}
+
+impl KvPoolSnapshot {
+    pub fn to_json(&self) -> Json {
+        jobj(vec![
+            ("pages_per_worker", self.pages_per_worker.map_or(Json::Null, |b| jint(b as u64))),
+            ("pages_used", jint(self.pages_used)),
+            ("pages_free", jint(self.pages_free)),
+            ("spilled_pages", jint(self.spilled_pages)),
+            ("spills", jint(self.spills)),
+            ("faults", jint(self.faults)),
+            ("evictions", jint(self.evictions)),
+            ("refusals", jint(self.refusals)),
         ])
     }
 }
@@ -838,7 +938,8 @@ pub struct ObsSnapshot {
     pub uptime: Duration,
     pub submitted: u64,
     pub completed: u64,
-    /// Submissions refused at the admission gate (queue depth limit).
+    /// Submissions refused at the admission gate (queue depth limit or
+    /// KV page budget).
     pub rejected: u64,
     pub batches_closed: u64,
     pub sessions_opened: u64,
@@ -852,6 +953,9 @@ pub struct ObsSnapshot {
     /// Per-worker bind-table byte budget, for reading
     /// `resident_bytes` against it.
     pub worker_budget: Option<usize>,
+    /// Aggregated paged-KV pool state (`None` when the pool is
+    /// unpaged).
+    pub kv_pool: Option<KvPoolSnapshot>,
     pub workers: Vec<WorkerSnapshot>,
     pub queue_wait_ms: HistSummary,
     pub bind_wait_ms: HistSummary,
@@ -892,6 +996,7 @@ impl ObsSnapshot {
             ("gather_outstanding", Json::Num(self.gather_outstanding as f64)),
             ("trace_dropped", jint(self.trace_dropped)),
             ("worker_budget", self.worker_budget.map_or(Json::Null, |b| jint(b as u64))),
+            ("kv_pool", self.kv_pool.map_or(Json::Null, |p| p.to_json())),
             ("workers", Json::Arr(self.workers.iter().map(WorkerSnapshot::to_json).collect())),
             ("queue_wait_ms", self.queue_wait_ms.to_json()),
             ("bind_wait_ms", self.bind_wait_ms.to_json()),

@@ -10,6 +10,18 @@
 //! no per-step heap allocation in the append path beyond amortized
 //! cache growth.
 //!
+//! Storage comes in two shapes behind [`KvSlot`]:
+//!
+//! * **Growable** (the PR-3 legacy layout): one worst-case host vec
+//!   per operand, fine for a handful of sessions.
+//! * **Paged** (`serve::kvpool`): fixed-size chunk-aligned pages from
+//!   the worker's [`KvPool`], staged into the machine's weight buffer
+//!   through a page-table indirection — page `i` of a slot holds
+//!   positions `[i*P, (i+1)*P)`, and the staging loop writes each
+//!   page's fragment at the exact offset the growable layout would
+//!   occupy, so the machine reads **byte-identical** buffers either
+//!   way (the bit-exactness proptests pin this down).
+//!
 //! [`CausalAvOp`] is the one-shot twin: the causal A·V of a *full*
 //! prefix run, which re-quantizes and re-packs the whole V prefix for
 //! every row (the cost the session cache amortizes away). Both funnel
@@ -19,11 +31,15 @@
 //! The position axis must carry a *uniform* precision: positions stream
 //! in one at a time, and PatternMatch's importance reordering is
 //! undefined for positions that have not been seen yet. The `dh` axis
-//! keeps its arbitrary per-channel assignment.
+//! keeps its arbitrary per-channel assignment. Paged sessions may store
+//! V at a *lower* uniform level than compute ([`SessionKvCfg::v_bits`],
+//! clamped per slot to the compute precision) — a capacity/accuracy
+//! knob; decode is bit-identical only at compute precision.
 
 use crate::codegen::gemm::{emit_gemm, GemmPlan};
 use crate::codegen::{self, pack, DataFormat, LayerBufs};
 use crate::serve::engine::{BoundKernel, ExecCtx, PreparedOp};
+use crate::serve::kvpool::{effective_v_prec, KvPage, KvPool, PageGeom, SessionKvCfg};
 use crate::sim::eltwise;
 use crate::sim::machine::Machine;
 use crate::sim::network::{AttnCfg, MatmulCfg, Tensor};
@@ -32,35 +48,104 @@ use crate::simd::vector::pack_values;
 use crate::smol::pattern_match::Assignment;
 use crate::smol::quant;
 
-/// One attention node's growable K/V cache within a session.
+/// The storage backing one slot's K/V operands.
+#[derive(Debug, Clone)]
+enum KvStore {
+    /// PR-3 layout: one growable host vec per operand.
+    Growable {
+        /// per head: packed K columns, `(position * nch_dh + chunk) *
+        /// 16` layout — append-only bytes
+        k_packed: Vec<Vec<u8>>,
+        /// per head: quantized V values, position-major `[pos * dh +
+        /// feat]`
+        v_quant: Vec<Vec<f32>>,
+        /// per head, per feature: packed V chunk vectors along the
+        /// position axis (the last chunk is partial and rewritten in
+        /// place on append)
+        v_packed: Vec<Vec<Vec<u8>>>,
+    },
+    /// Fixed-size pages from the worker's [`KvPool`]; `pages[i]` holds
+    /// positions `[i*P, (i+1)*P)` for every head.
+    Paged(PagedSlot),
+}
+
+#[derive(Debug, Clone)]
+struct PagedSlot {
+    geom: PageGeom,
+    pages: Vec<KvPage>,
+}
+
+/// One attention node's K/V cache within a session.
 #[derive(Debug, Default, Clone)]
 pub struct KvSlot {
     /// positions appended so far
     pub len: usize,
-    /// per head: packed K columns, `(position * nch_dh + chunk) * 16`
-    /// layout — append-only bytes
-    k_packed: Vec<Vec<u8>>,
-    /// per head: quantized V values, position-major `[pos * dh + feat]`
-    v_quant: Vec<Vec<f32>>,
-    /// per head, per feature: packed V chunk vectors along the position
-    /// axis (the last chunk is partial and rewritten in place on append)
-    v_packed: Vec<Vec<Vec<u8>>>,
+    /// `None` until the first step initializes the shape
+    store: Option<KvStore>,
 }
 
 impl KvSlot {
-    fn ensure_shape(&mut self, heads: usize, dh: usize) {
-        if self.k_packed.is_empty() {
-            self.k_packed = vec![Vec::new(); heads];
-            self.v_quant = vec![Vec::new(); heads];
-            self.v_packed = vec![vec![Vec::new(); dh]; heads];
+    fn ensure(
+        &mut self,
+        heads: usize,
+        dh: usize,
+        nch_dh: usize,
+        v_prec: u8,
+        kv: Option<SessionKvCfg>,
+    ) {
+        if self.store.is_some() {
+            return;
+        }
+        self.store = Some(match kv {
+            Some(cfg) => KvStore::Paged(PagedSlot {
+                geom: PageGeom::new(heads, dh, nch_dh, v_prec, cfg.page_positions),
+                pages: Vec::new(),
+            }),
+            None => KvStore::Growable {
+                k_packed: vec![Vec::new(); heads],
+                v_quant: vec![Vec::new(); heads],
+                v_packed: vec![vec![Vec::new(); dh]; heads],
+            },
+        });
+    }
+
+    /// Bytes resident in this slot's packed/quantized caches (paged
+    /// slots count whole resident pages — the allocation granularity).
+    pub fn kv_bytes(&self) -> usize {
+        match &self.store {
+            None => 0,
+            Some(KvStore::Growable { k_packed, v_quant, v_packed }) => {
+                k_packed.iter().map(Vec::len).sum::<usize>()
+                    + v_quant.iter().map(|v| v.len() * 4).sum::<usize>()
+                    + v_packed.iter().flatten().map(Vec::len).sum::<usize>()
+            }
+            Some(KvStore::Paged(ps)) => ps.pages.len() * ps.geom.page_bytes(),
         }
     }
 
-    /// Bytes resident in this slot's packed/quantized caches.
-    pub fn kv_bytes(&self) -> usize {
-        self.k_packed.iter().map(Vec::len).sum::<usize>()
-            + self.v_quant.iter().map(|v| v.len() * 4).sum::<usize>()
-            + self.v_packed.iter().flatten().map(Vec::len).sum::<usize>()
+    /// Pages currently resident in this slot (0 for growable slots).
+    pub fn pages(&self) -> usize {
+        match &self.store {
+            Some(KvStore::Paged(ps)) => ps.pages.len(),
+            _ => 0,
+        }
+    }
+
+    fn take_pages(&mut self) -> Vec<KvPage> {
+        match &mut self.store {
+            Some(KvStore::Paged(ps)) => std::mem::take(&mut ps.pages),
+            _ => Vec::new(),
+        }
+    }
+
+    fn restore_pages(&mut self, pages: Vec<KvPage>) {
+        match &mut self.store {
+            Some(KvStore::Paged(ps)) => {
+                debug_assert!(ps.pages.is_empty(), "restore over resident pages");
+                ps.pages = pages;
+            }
+            _ => debug_assert!(pages.is_empty(), "pages restored into a non-paged slot"),
+        }
     }
 }
 
@@ -70,11 +155,19 @@ impl KvSlot {
 #[derive(Debug, Default, Clone)]
 pub struct SessionState {
     pub slots: Vec<KvSlot>,
+    /// `Some` = slots use paged storage from the worker's pool.
+    pub(crate) kv: Option<SessionKvCfg>,
 }
 
 impl SessionState {
     pub fn new(slots: usize) -> SessionState {
-        SessionState { slots: vec![KvSlot::default(); slots] }
+        SessionState { slots: vec![KvSlot::default(); slots], kv: None }
+    }
+
+    /// A session whose slots allocate fixed-size pages from the
+    /// worker's [`KvPool`] instead of growing host vecs.
+    pub fn new_paged(slots: usize, kv: SessionKvCfg) -> SessionState {
+        SessionState { slots: vec![KvSlot::default(); slots], kv: Some(kv) }
     }
 
     /// Decoded positions so far (0 for a fresh session).
@@ -86,6 +179,40 @@ impl SessionState {
     /// per-session footprint that worker placement balances on.
     pub fn kv_bytes(&self) -> usize {
         self.slots.iter().map(KvSlot::kv_bytes).sum()
+    }
+
+    /// Pages resident across all slots (0 for growable sessions).
+    pub fn pages(&self) -> usize {
+        self.slots.iter().map(KvSlot::pages).sum()
+    }
+
+    /// Move every slot's pages out (spill): lengths stay, storage
+    /// empties. Returns one page run per slot, restorable verbatim by
+    /// [`SessionState::restore_all_pages`].
+    pub(crate) fn take_all_pages(&mut self) -> Vec<Vec<KvPage>> {
+        self.slots.iter_mut().map(KvSlot::take_pages).collect()
+    }
+
+    /// Fault spilled pages back in (inverse of
+    /// [`SessionState::take_all_pages`]).
+    pub(crate) fn restore_all_pages(&mut self, slots: Vec<Vec<KvPage>>) {
+        debug_assert_eq!(slots.len(), self.slots.len(), "spilled slot count");
+        for (slot, pages) in self.slots.iter_mut().zip(slots) {
+            slot.restore_pages(pages);
+        }
+    }
+
+    /// Return every resident page to the pool's free lists (session
+    /// close / eviction).
+    pub(crate) fn release_into(&mut self, pool: &mut KvPool) {
+        for slot in &mut self.slots {
+            if let Some(KvStore::Paged(ps)) = &mut slot.store {
+                let pages = std::mem::take(&mut ps.pages);
+                if !pages.is_empty() {
+                    pool.release(&ps.geom, pages);
+                }
+            }
+        }
     }
 }
 
@@ -166,6 +293,8 @@ pub struct CachedAttnOp {
 impl CachedAttnOp {
     /// (input, weights, out, masks) buffer bytes [`PreparedOp::bind`]
     /// allocates — one place, so `bind` and `bind_bytes` cannot drift.
+    /// Sized for compute precision; a lower V tier only *shrinks* the
+    /// position-chunk count, so the buffers always suffice.
     fn buf_bytes(&self) -> (usize, usize, usize, usize) {
         let cap = Pattern::uniform(self.pos_prec).capacity() as usize;
         let nch_pos = self.max_positions.div_ceil(cap);
@@ -242,8 +371,13 @@ impl PreparedOp for CachedAttnOp {
             .session
             .as_deref_mut()
             .expect("CachedAttn needs a session (decode step graphs run via submit_step)");
+        let kv_cfg = state.kv;
+        // effective V storage precision: the session's tier, clamped so
+        // it never exceeds compute (a lower level has *larger* chunk
+        // capacity, so compute-sized buffers always fit)
+        let v_prec = effective_v_prec(self.pos_prec, kv_cfg.and_then(|c| c.v_bits));
         let slot = &mut state.slots[self.slot];
-        slot.ensure_shape(self.heads, self.dh);
+        slot.ensure(self.heads, self.dh, self.nch_dh, v_prec, kv_cfg);
         assert!(
             slot.len < self.max_positions,
             "{}: session exceeded max_positions = {}",
@@ -252,32 +386,87 @@ impl PreparedOp for CachedAttnOp {
         );
         let m = &mut *ctx.m;
         let scratch = &mut *ctx.scratch;
-        let cap = Pattern::uniform(self.pos_prec).capacity() as usize;
-        let pat = Pattern::uniform(self.pos_prec);
+        let cap_v = Pattern::uniform(v_prec).capacity() as usize;
+        let pat_v = Pattern::uniform(v_prec);
         let t = slot.len;
+
+        // paged slots allocate their next page at every page boundary
+        // (budget policy already ran in the engine before this step)
+        if let Some(KvStore::Paged(ps)) = slot.store.as_mut() {
+            if t % ps.geom.page_positions == 0 {
+                let pool = ctx
+                    .kv
+                    .as_deref_mut()
+                    .expect("paged sessions need a KvPool in the exec context");
+                ps.pages.push(pool.alloc(&ps.geom));
+            }
+        }
 
         // --- append this position's K/V (no per-step allocation beyond
         // amortized cache growth: the gather buffer is worker scratch) ---
         for h in 0..self.heads {
             let k_vals = &k.data[h * self.dh..(h + 1) * self.dh];
-            pack::pack_column_into(&self.dh_asg, k_vals, &mut scratch.vals, &mut slot.k_packed[h]);
-            for j in 0..self.dh {
-                slot.v_quant[h].push(quant::quantize(v.data[h * self.dh + j], self.pos_prec));
-            }
-            // refresh the tail chunk of each feature's packed V column
-            let chunk = t / cap;
-            let start = chunk * cap;
-            for j in 0..self.dh {
-                scratch.vals.clear();
-                for pos in start..=t {
-                    scratch.vals.push(slot.v_quant[h][pos * self.dh + j]);
+            match slot.store.as_mut().expect("ensured above") {
+                KvStore::Growable { k_packed, v_quant, v_packed } => {
+                    pack::pack_column_into(
+                        &self.dh_asg,
+                        k_vals,
+                        &mut scratch.vals,
+                        &mut k_packed[h],
+                    );
+                    for j in 0..self.dh {
+                        v_quant[h].push(quant::quantize(v.data[h * self.dh + j], v_prec));
+                    }
+                    // refresh the tail chunk of each feature's packed V
+                    let chunk = t / cap_v;
+                    let start = chunk * cap_v;
+                    for j in 0..self.dh {
+                        scratch.vals.clear();
+                        for pos in start..=t {
+                            scratch.vals.push(v_quant[h][pos * self.dh + j]);
+                        }
+                        let bytes = pack_values(&pat_v, &scratch.vals).to_bytes();
+                        let col = &mut v_packed[h][j];
+                        if t % cap_v == 0 {
+                            col.extend_from_slice(&bytes);
+                        } else {
+                            col[chunk * 16..chunk * 16 + 16].copy_from_slice(&bytes);
+                        }
+                    }
                 }
-                let bytes = pack_values(&pat, &scratch.vals).to_bytes();
-                let col = &mut slot.v_packed[h][j];
-                if t % cap == 0 {
-                    col.extend_from_slice(&bytes);
-                } else {
-                    col[chunk * 16..chunk * 16 + 16].copy_from_slice(&bytes);
+                KvStore::Paged(ps) => {
+                    let p = ps.geom.page_positions;
+                    let cpp = ps.geom.chunks_per_page();
+                    let (pi, tp) = (t / p, t % p);
+                    let page = &mut ps.pages[pi];
+                    // K column at this position's in-page offset (pack
+                    // into scratch, then copy — pack appends to a vec)
+                    scratch.packed_b.clear();
+                    pack::pack_column_into(
+                        &self.dh_asg,
+                        k_vals,
+                        &mut scratch.vals,
+                        &mut scratch.packed_b,
+                    );
+                    let ko = (h * p + tp) * self.nch_dh * 16;
+                    page.k[ko..ko + self.nch_dh * 16].copy_from_slice(&scratch.packed_b);
+                    for j in 0..self.dh {
+                        page.v_quant[(h * p + tp) * self.dh + j] =
+                            quant::quantize(v.data[h * self.dh + j], v_prec);
+                    }
+                    // refresh the tail packed V chunk — always within
+                    // this page: page_positions is a multiple of cap_v
+                    let ci = tp / cap_v;
+                    let start = ci * cap_v;
+                    for j in 0..self.dh {
+                        scratch.vals.clear();
+                        for pos in start..=tp {
+                            scratch.vals.push(page.v_quant[(h * p + pos) * self.dh + j]);
+                        }
+                        let bytes = pack_values(&pat_v, &scratch.vals).to_bytes();
+                        let vo = ((h * self.dh + j) * cpp + ci) * 16;
+                        page.v_packed[vo..vo + 16].copy_from_slice(&bytes);
+                    }
                 }
             }
         }
@@ -298,8 +487,26 @@ impl PreparedOp for CachedAttnOp {
             fmt: self.fmt,
         };
         for h in 0..self.heads {
-            m.write_bytes(bound.bufs.weights, 0, &slot.k_packed[h]);
-            m.stream_touch(bound.bufs.weights, slot.k_packed[h].len(), true);
+            // stage K: contiguous for growable, page fragments at the
+            // positions' exact offsets for paged — identical bytes
+            match slot.store.as_ref().expect("ensured above") {
+                KvStore::Growable { k_packed, .. } => {
+                    m.write_bytes(bound.bufs.weights, 0, &k_packed[h]);
+                }
+                KvStore::Paged(ps) => {
+                    let p = ps.geom.page_positions;
+                    for (pi, page) in ps.pages.iter().enumerate() {
+                        let n_pos = p.min(len - pi * p);
+                        let src = h * p * self.nch_dh * 16;
+                        m.write_bytes(
+                            bound.bufs.weights,
+                            pi * p * self.nch_dh * 16,
+                            &page.k[src..src + n_pos * self.nch_dh * 16],
+                        );
+                    }
+                }
+            }
+            m.stream_touch(bound.bufs.weights, len * self.nch_dh * 16, true);
             let q_vals = &q.data[h * self.dh..(h + 1) * self.dh];
             run_gemm_row(
                 m,
@@ -323,13 +530,37 @@ impl PreparedOp for CachedAttnOp {
             m: 1,
             k: len,
             n: self.dh,
-            asg: Assignment::uniform(len, self.pos_prec),
+            asg: Assignment::uniform(len, v_prec),
             fmt: self.fmt,
         };
-        let nch_pos = len.div_ceil(cap);
+        let nch_pos = len.div_ceil(cap_v);
         for h in 0..self.heads {
-            for j in 0..self.dh {
-                m.write_bytes(bound.bufs.weights, j * nch_pos * 16, &slot.v_packed[h][j]);
+            match slot.store.as_ref().expect("ensured above") {
+                KvStore::Growable { v_packed, .. } => {
+                    for j in 0..self.dh {
+                        m.write_bytes(bound.bufs.weights, j * nch_pos * 16, &v_packed[h][j]);
+                    }
+                }
+                KvStore::Paged(ps) => {
+                    // each feature column gathers its chunk run across
+                    // pages into the growable layout's exact offsets
+                    let cpp = ps.geom.chunks_per_page();
+                    for j in 0..self.dh {
+                        for (pi, page) in ps.pages.iter().enumerate() {
+                            let lo = pi * cpp;
+                            if lo >= nch_pos {
+                                break;
+                            }
+                            let n = cpp.min(nch_pos - lo);
+                            let src = (h * self.dh + j) * cpp * 16;
+                            m.write_bytes(
+                                bound.bufs.weights,
+                                (j * nch_pos + lo) * 16,
+                                &page.v_packed[src..src + n * 16],
+                            );
+                        }
+                    }
+                }
             }
             m.stream_touch(bound.bufs.weights, self.dh * nch_pos * 16, true);
             run_gemm_row(

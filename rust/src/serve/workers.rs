@@ -54,6 +54,7 @@
 use crate::serve::batcher::{Batch, BatchConfig, DynamicBatcher, Payload, Request};
 use crate::serve::deploy::Deployment;
 use crate::serve::engine::{EngineMachine, PreparedModel};
+use crate::serve::kvpool::{KvPolicy, KvPoolCfg};
 use crate::serve::obs::{dur_ns, Obs, ObsSnapshot, SpanTrack};
 use crate::serve::{ModelHandle, ModelKey};
 use crate::sim::machine::RunStats;
@@ -92,6 +93,14 @@ pub struct ServeConfig {
     /// rather than unbounded queue growth; `None` = unbounded (the
     /// closed-loop default, where callers submit a fixed backlog).
     pub queue_depth: Option<usize>,
+    /// paged KV-cache storage: with a config set, every worker machine
+    /// allocates session K/V from a [`KvPool`] of fixed-size pages
+    /// (exact accounting, budget-driven refuse/evict/spill — see
+    /// [`crate::serve::kvpool`]); `None` keeps the growable per-slot
+    /// vecs and the byte-estimate placement.
+    ///
+    /// [`KvPool`]: crate::serve::kvpool::KvPool
+    pub kv: Option<KvPoolCfg>,
 }
 
 impl Default for ServeConfig {
@@ -103,6 +112,7 @@ impl Default for ServeConfig {
             worker_budget: None,
             trace: false,
             queue_depth: None,
+            kv: None,
         }
     }
 }
@@ -390,6 +400,16 @@ struct SessionMeta {
     step_limit: usize,
     /// estimated KV bytes each step appends on the pinned worker
     kv_bytes_per_step: u64,
+    /// KV bytes actually charged to the placement accounting — closed
+    /// sessions release exactly this, so charge and release can never
+    /// drift apart (they are one number, not two formulas)
+    charged_bytes: u64,
+    /// paged mode: each slot's effective (chunk-aligned) page size, in
+    /// positions — position `t` opens a fresh page in every slot with
+    /// `t % slot_pages[s] == 0`. Empty when the pool is unpaged.
+    slot_pages: Vec<usize>,
+    /// paged mode: pool pages charged to the pinned worker so far
+    charged_pages: u64,
 }
 
 /// A deployed model inside a pool: the deployment plus the worker each
@@ -548,6 +568,14 @@ fn sync_engine_gauges(obs: &Obs, wi: usize, engine: &EngineMachine) {
     w.resident_bytes.store(engine.resident_bytes() as u64, Relaxed);
     w.kv_bytes.store(engine.session_kv_bytes() as u64, Relaxed);
     w.sessions.store(engine.num_sessions() as u64, Relaxed);
+    if let Some(s) = engine.kv_pool_stats() {
+        w.kv_pages_used.store(s.used as u64, Relaxed);
+        w.kv_pages_free.store(s.free as u64, Relaxed);
+        w.kv_spilled_pages.store(s.spilled_pages as u64, Relaxed);
+        w.kv_spills.store(s.spills, Relaxed);
+        w.kv_faults.store(s.faults, Relaxed);
+        w.kv_evictions.store(s.evictions, Relaxed);
+    }
 }
 
 /// A running serving instance: one worker pool serving every deployment
@@ -576,8 +604,13 @@ pub struct Server {
     sessions: HashMap<u64, SessionMeta>,
     /// estimated resident session KV bytes per worker (placement key)
     worker_kv_bytes: Vec<u64>,
+    /// paged mode: pool pages charged per worker (placement key and
+    /// the Refuse policy's admission ledger)
+    worker_kv_pages: Vec<u64>,
     /// open sessions per worker (placement tiebreak)
     worker_sessions: Vec<usize>,
+    /// paged KV config the pool was spawned with (`None` = growable)
+    kv_cfg: Option<KvPoolCfg>,
     bind_times: Arc<Mutex<Vec<Duration>>>,
     /// live metrics registry (shared with the dispatcher and workers)
     obs: Arc<Obs>,
@@ -691,6 +724,10 @@ impl Server {
         let (submit_tx, submit_rx) = mpsc::channel::<Request>();
         let (result_tx, result_rx) = mpsc::channel::<Completion>();
         let obs = Arc::new(Obs::new(n_workers, worker_budget, cfg.trace));
+        let kv_cfg = cfg.kv;
+        if let Some(kv) = kv_cfg {
+            obs.configure_kv(kv.pages_per_worker);
+        }
         let queue = Arc::new(DispatchQueue::new(n_workers, cfg.batch.max_batch, Arc::clone(&obs)));
         let bind_times = Arc::new(Mutex::new(Vec::with_capacity(n_workers)));
 
@@ -753,6 +790,9 @@ impl Server {
                 thread::spawn(move || {
                     let t0 = Instant::now();
                     let mut engine = EngineMachine::with_limits(resident_models, worker_budget);
+                    if let Some(kv) = kv_cfg {
+                        engine.set_kv_pool(kv);
+                    }
                     engine.set_record_events(obs.trace_on());
                     for h in &eager {
                         engine.bind_model(h);
@@ -865,7 +905,9 @@ impl Server {
             gather: GatherBuffer::default(),
             sessions: HashMap::new(),
             worker_kv_bytes: vec![0; n_workers],
+            worker_kv_pages: vec![0; n_workers],
             worker_sessions: vec![0; n_workers],
+            kv_cfg,
             bind_times,
             obs,
             queue_depth: cfg.queue_depth,
@@ -1045,16 +1087,24 @@ impl Server {
         Ok(self.submit_entry(entry, input))
     }
 
-    /// The worker a new session lands on: smallest estimated KV-cache
-    /// footprint, ties broken by fewest open sessions, then index (so a
-    /// fresh pool fills round-robin instead of piling onto worker 0).
+    /// The worker a new session lands on: smallest resident KV-cache
+    /// footprint — *exact* charged pool pages when the pool is paged,
+    /// the per-step byte estimate otherwise — ties broken by fewest
+    /// open sessions, then index (so a fresh pool fills round-robin
+    /// instead of piling onto worker 0).
     fn place_session(&self) -> usize {
-        (0..self.n_workers)
-            .min_by_key(|&w| (self.worker_kv_bytes[w], self.worker_sessions[w], w))
-            .expect("at least one worker")
+        let key = |w: usize| {
+            let load = if self.kv_cfg.is_some() {
+                self.worker_kv_pages[w]
+            } else {
+                self.worker_kv_bytes[w]
+            };
+            (load, self.worker_sessions[w], w)
+        };
+        (0..self.n_workers).min_by_key(|&w| key(w)).expect("at least one worker")
     }
 
-    fn open_session_handle(&mut self, entry: DeployEntry) -> SessionId {
+    fn open_session_handle(&mut self, entry: DeployEntry) -> Result<SessionId, Rejected> {
         assert!(
             !entry.dep.is_sharded(),
             "model {} is deployed sharded; decode sessions pin whole models",
@@ -1066,7 +1116,35 @@ impl Server {
             .step
             .as_ref()
             .expect("model has no decode step graph (open_session needs a decoder)");
+        // paged mode: each slot's effective page size under the pool
+        // config (position t opens a page in slots where t % P_s == 0)
+        let slot_pages: Vec<usize> = match self.kv_cfg {
+            Some(cfg) => {
+                let scfg = cfg.session_cfg();
+                step.slot_geoms.iter().map(|sg| sg.page_geom(&scfg).page_positions).collect()
+            }
+            None => Vec::new(),
+        };
         let worker = self.place_session();
+        // Refuse policy gates at admission: the session's first step
+        // allocates one page per slot, so a worker whose charged pages
+        // cannot take that many refuses the open outright (no session
+        // state is created). Evict/Spill admit and let the engine
+        // reclaim pages instead.
+        if let Some(cfg) = self.kv_cfg {
+            if cfg.policy == KvPolicy::Refuse {
+                if let Some(budget) = cfg.pages_per_worker {
+                    let need = slot_pages.len() as u64;
+                    if self.worker_kv_pages[worker] + need > budget as u64 {
+                        self.obs.on_kv_refuse();
+                        return Err(Rejected {
+                            depth: self.worker_kv_pages[worker] as usize,
+                            limit: budget,
+                        });
+                    }
+                }
+            }
+        }
         let sid = SessionId(self.next_session);
         self.next_session += 1;
         self.worker_sessions[worker] += 1;
@@ -1077,6 +1155,9 @@ impl Server {
                 steps: 0,
                 step_limit: step.max_positions,
                 kv_bytes_per_step: step.kv_bytes_per_position as u64,
+                charged_bytes: 0,
+                slot_pages,
+                charged_pages: 0,
                 handle,
             },
         );
@@ -1085,7 +1166,7 @@ impl Server {
             let name = format!("open session {} (worker {worker})", sid.0);
             self.obs.trace_session(name, Instant::now());
         }
-        sid
+        Ok(sid)
     }
 
     /// Open a decode session on the default model. The session is
@@ -1098,13 +1179,15 @@ impl Server {
     }
 
     /// [`open_session`](Self::open_session) with admission control:
-    /// `Err(Rejected)` when the pool is at its configured queue depth
-    /// (no session is opened — overload sheds whole sessions at open
-    /// time, before any KV cache is placed).
+    /// `Err(Rejected)` when the pool is at its configured queue depth,
+    /// or — under a paged KV pool with the [`KvPolicy::Refuse`] policy
+    /// — when the placement worker's charged pages cannot take the
+    /// session's first step (no session is opened — overload sheds
+    /// whole sessions at open time, before any KV cache is placed).
     pub fn try_open_session(&mut self) -> Result<SessionId, Rejected> {
         self.admit()?;
         let entry = self.default_entry();
-        Ok(self.open_session_handle(entry))
+        self.open_session_handle(entry)
     }
 
     /// Open a decode session on a registered model (same placement as
@@ -1118,7 +1201,7 @@ impl Server {
     pub fn try_open_session_on(&mut self, key: &ModelKey) -> Result<SessionId, Rejected> {
         self.admit()?;
         let entry = self.registered_entry(key);
-        Ok(self.open_session_handle(entry))
+        self.open_session_handle(entry)
     }
 
     /// Enqueue one decode step for an open session; returns its request
@@ -1139,11 +1222,13 @@ impl Server {
     }
 
     /// [`submit_step`](Self::submit_step) with admission control:
-    /// `Err(Rejected)` at the configured queue depth (the step is not
-    /// enqueued; the session stays open and its earlier steps are
-    /// unaffected). The session-invariant panics (closed, never
-    /// opened, over `max_positions`) are preserved — those are caller
-    /// bugs, not load.
+    /// `Err(Rejected)` at the configured queue depth, or — under a
+    /// paged KV pool with the [`KvPolicy::Refuse`] policy — when the
+    /// step would open a fresh page past the pinned worker's page
+    /// budget (the step is not enqueued; the session stays open and
+    /// its earlier steps are unaffected). The session-invariant panics
+    /// (closed, never opened, over `max_positions`) are preserved —
+    /// those are caller bugs, not load.
     pub fn try_submit_step(&mut self, session: SessionId, token: Tensor) -> Result<u64, Rejected> {
         self.admit()?;
         let next_session = self.next_session;
@@ -1160,11 +1245,32 @@ impl Server {
             session.0,
             meta.step_limit
         );
-        meta.steps += 1;
+        // pages this step's appends allocate on the pinned worker:
+        // position `steps` opens a fresh page in every page-aligned slot
+        let pages_add = meta.slot_pages.iter().filter(|&&p| meta.steps % p == 0).count() as u64;
         let worker = meta.worker;
-        let handle = meta.handle.clone();
+        if pages_add > 0 {
+            if let Some(cfg) = self.kv_cfg {
+                if cfg.policy == KvPolicy::Refuse {
+                    if let Some(budget) = cfg.pages_per_worker {
+                        if self.worker_kv_pages[worker] + pages_add > budget as u64 {
+                            self.obs.on_kv_refuse();
+                            return Err(Rejected {
+                                depth: self.worker_kv_pages[worker] as usize,
+                                limit: budget,
+                            });
+                        }
+                    }
+                }
+            }
+        }
+        meta.steps += 1;
+        meta.charged_pages += pages_add;
         let kv = meta.kv_bytes_per_step;
+        meta.charged_bytes += kv;
+        let handle = meta.handle.clone();
         self.worker_kv_bytes[worker] += kv;
+        self.worker_kv_pages[worker] += pages_add;
         let id = self.alloc_id();
         self.outstanding.insert(id);
         let now = Instant::now();
@@ -1190,8 +1296,14 @@ impl Server {
             .remove(&session.0)
             .unwrap_or_else(|| panic!("session {} is not open", session.0));
         self.worker_sessions[meta.worker] -= 1;
-        self.worker_kv_bytes[meta.worker] = self.worker_kv_bytes[meta.worker]
-            .saturating_sub(meta.steps as u64 * meta.kv_bytes_per_step);
+        // release exactly what was charged (recorded per session at
+        // charge time), never a recomputed formula: a recompute that
+        // drifted from the charge path — e.g. counting refused steps —
+        // would leak or over-release placement weight forever
+        self.worker_kv_bytes[meta.worker] =
+            self.worker_kv_bytes[meta.worker].saturating_sub(meta.charged_bytes);
+        self.worker_kv_pages[meta.worker] =
+            self.worker_kv_pages[meta.worker].saturating_sub(meta.charged_pages);
         let id = self.alloc_id();
         let req = Request::close(id, &meta.handle, session.0, meta.worker, Instant::now());
         self.send(req);

@@ -205,7 +205,8 @@ pub struct NetResult {
 pub fn run_conv(m: &mut Machine, cfg: &ConvLayerCfg, x: &Tensor) -> (Tensor, RunStats) {
     let op = PreparedConv::streaming(cfg);
     let mut scratch = WorkerScratch::default();
-    let mut ctx = ExecCtx { m: &mut *m, bound: None, scratch: &mut scratch, session: None };
+    let mut ctx =
+        ExecCtx { m: &mut *m, bound: None, scratch: &mut scratch, session: None, kv: None };
     let out = op.run(&mut ctx, &[x]);
     (out, m.take_stats())
 }

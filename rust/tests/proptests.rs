@@ -337,6 +337,7 @@ fn run_mm(
         bound: Some(bound),
         scratch: &mut *scratch,
         session: None,
+        kv: None,
     };
     op.run(&mut ctx, inputs)
 }
@@ -838,4 +839,254 @@ fn prop_iteration_scheduled_decode_bit_identical_to_engine() {
         }
         Ok(())
     });
+}
+
+/// The paged-KV contract: any interleaving of paged decode sessions —
+/// random page sizes, page-boundary-straddling prefixes, sessions
+/// admitted mid-flight, sessions closed early, spill/fault-back round
+/// trips under a tight page budget, and the exact-tier V case
+/// (`v_bits == pos_prec`) — must be bit-identical to the same token
+/// streams through a legacy growable engine, and the pool's books must
+/// satisfy `used + spilled == Σ_sessions Σ_slots ceil(len / P_slot)`
+/// after every single step.
+#[test]
+fn prop_paged_decode_bit_identical_to_growable() {
+    use soniq::coordinator::{synthetic_decoder, DecoderCfg, DesignPoint};
+    use soniq::serve::{EngineMachine, KvPolicy, KvPoolCfg, PreparedModel};
+    use std::sync::Arc;
+    let (mut spills, mut faults, mut straddled) = (0u64, 0u64, 0u64);
+    check("paged-decode", 200, |rng| {
+        // a third of the cases push one session past the aligned page
+        // size (one packed V chunk), covering multi-page staging; the
+        // rest stay short and cover small-page geometry + policy churn
+        let long = rng.below(3) == 0;
+        let heads = if long { 1 } else { *rng.choice(&[1usize, 2]) };
+        let dh = 2usize;
+        let d = heads * dh;
+        // long cases need pos_prec 4 (32-position chunks): a 33-step
+        // session then spans two pages even at the smallest page size
+        let dp = match if long { 1 } else { rng.below(3) } {
+            0 => DesignPoint::Uniform(2),
+            1 => DesignPoint::Uniform(4),
+            _ => DesignPoint::Patterns(8),
+        };
+        let max_positions = if long { 48 } else { 16 };
+        let cfg =
+            DecoderCfg { seq: 8, d_model: d, heads, ffn: d * 2, blocks: 1, max_positions };
+        let seed = rng.below(1 << 30);
+        let net = synthetic_decoder(dp, seed, &cfg).map_err(|e| e.to_string())?;
+        let prepared = Arc::new(PreparedModel::prepare_decoder(
+            &net.nodes,
+            net.step_nodes.as_ref().expect("decoder step graph"),
+        ));
+        let step = prepared.step.as_ref().expect("decoder step model");
+
+        let n_sessions = 1 + rng.below(3) as usize;
+        let lens: Vec<usize> = (0..n_sessions)
+            .map(|si| {
+                if long && si == 0 {
+                    33 + rng.below(4) as usize
+                } else {
+                    1 + rng.below(6) as usize
+                }
+            })
+            .collect();
+        // half the cases store V at the exact tier (== compute
+        // precision), which must stay bit-identical too
+        let v_bits = if rng.below(2) == 0 { None } else { Some(step.slot_geoms[0].pos_prec) };
+        let kv = KvPoolCfg {
+            page_positions: *rng.choice(&[1usize, 2, 3, 5, 8, 16, 32]),
+            pages_per_worker: if rng.below(2) == 0 {
+                None
+            } else {
+                Some(1 + rng.below(2) as usize)
+            },
+            policy: KvPolicy::Spill,
+            v_bits,
+        };
+        let skv = kv.session_cfg();
+        let mut paged = EngineMachine::new(&prepared);
+        paged.set_kv_pool(kv);
+        let mut oracle = EngineMachine::new(&prepared);
+
+        let tokens: Vec<Vec<Tensor>> = lens
+            .iter()
+            .map(|&len| {
+                (0..len)
+                    .map(|_| {
+                        let data: Vec<f32> = (0..d).map(|_| rng.range(-2.0, 2.0)).collect();
+                        Tensor { h: 1, w: 1, c: d, data }
+                    })
+                    .collect()
+            })
+            .collect();
+
+        // random interleave: sessions admit mid-flight (the engine
+        // starts one at its first step) and may retire early
+        let total: usize = lens.iter().sum();
+        let mut done = vec![0usize; n_sessions];
+        let mut closed = vec![false; n_sessions];
+        let mut served = 0usize;
+        while served < total {
+            let live: Vec<usize> = (0..n_sessions).filter(|&x| done[x] < lens[x]).collect();
+            let si = *rng.choice(&live);
+            let t = done[si];
+            let got = paged.run_step(si as u64, &tokens[si][t]);
+            let want = oracle.run_step(si as u64, &tokens[si][t]);
+            if got.output.data != want.output.data {
+                return Err(format!(
+                    "session {si} step {t} diverged (dp={} P={} budget={:?} \
+                     v_bits={v_bits:?} seed={seed})",
+                    dp.label(),
+                    kv.page_positions,
+                    kv.pages_per_worker
+                ));
+            }
+            done[si] += 1;
+            served += 1;
+            if done[si] == lens[si] && rng.below(2) == 0 {
+                paged.end_session(si as u64);
+                oracle.end_session(si as u64);
+                closed[si] = true;
+            }
+            // exact accounting at every snapshot, wherever the pages
+            // currently live (resident or spilled)
+            let s = paged.kv_pool_stats().expect("paged engine has a pool");
+            let want_pages: usize = (0..n_sessions)
+                .filter(|&x| done[x] > 0 && !closed[x])
+                .map(|x| {
+                    step.slot_geoms
+                        .iter()
+                        .map(|sg| sg.page_geom(&skv).pages_for(done[x]))
+                        .sum::<usize>()
+                })
+                .sum();
+            if s.used + s.spilled_pages != want_pages {
+                return Err(format!(
+                    "books off after session {si} step {t}: used {} + spilled {} \
+                     != {want_pages} (P={} seed={seed})",
+                    s.used, s.spilled_pages, kv.page_positions
+                ));
+            }
+            // Spill keeps residency within budget while other sessions
+            // are reclaimable; one session may overcommit alone
+            if let Some(b) = kv.pages_per_worker {
+                let own: usize = step
+                    .slot_geoms
+                    .iter()
+                    .map(|sg| sg.page_geom(&skv).pages_for(done[si]))
+                    .sum();
+                if s.used > b.max(own) {
+                    return Err(format!(
+                        "residency {} over budget {b} with reclaimable victims \
+                         (own={own} seed={seed})",
+                        s.used
+                    ));
+                }
+            }
+        }
+        for (si, c) in closed.iter().enumerate() {
+            if !c {
+                paged.end_session(si as u64);
+            }
+        }
+        let s = paged.kv_pool_stats().expect("paged engine has a pool");
+        if s.used != 0 || s.spilled_pages != 0 {
+            return Err(format!(
+                "pages leaked at close: used {} spilled {} (seed={seed})",
+                s.used, s.spilled_pages
+            ));
+        }
+        spills += s.spills;
+        faults += s.faults;
+        straddled += u64::from(long);
+        Ok(())
+    });
+    assert!(straddled > 0, "sweep never covered a page-boundary-straddling prefix");
+    assert!(spills > 0 && faults > 0, "sweep never exercised a spill/fault-back round trip");
+}
+
+/// The low-precision V tier's accuracy contract: storing V below
+/// compute precision is a *storage* decision, so decode under it must
+/// not depend on the page size (byte-identical staging) or on spill
+/// round trips — and against the compute-precision oracle the error
+/// must stay bounded (no blowups, no NaNs) while being measurably
+/// nonzero somewhere in the sweep (the tier really changes the bytes).
+#[test]
+fn prop_low_v_tier_page_invariant_and_bounded_error() {
+    use soniq::coordinator::{synthetic_decoder, DecoderCfg, DesignPoint};
+    use soniq::serve::{EngineMachine, KvPolicy, KvPoolCfg, PreparedModel};
+    use std::sync::Arc;
+    let mut total_err = 0f64;
+    check("v-tier", 150, |rng| {
+        let heads = *rng.choice(&[1usize, 2]);
+        let dh = 2usize;
+        let d = heads * dh;
+        let cfg =
+            DecoderCfg { seq: 8, d_model: d, heads, ffn: d * 2, blocks: 1, max_positions: 16 };
+        let seed = rng.below(1 << 30);
+        let net = synthetic_decoder(DesignPoint::Uniform(4), seed, &cfg)
+            .map_err(|e| e.to_string())?;
+        let prepared = Arc::new(PreparedModel::prepare_decoder(
+            &net.nodes,
+            net.step_nodes.as_ref().expect("decoder step graph"),
+        ));
+        let v_bits = Some(*rng.choice(&[1u8, 2]));
+        let pool = |page_positions: usize, budget: Option<usize>| KvPoolCfg {
+            page_positions,
+            pages_per_worker: budget,
+            policy: KvPolicy::Spill,
+            v_bits,
+        };
+        // engine A runs a 1-page budget plus a decoy session, forcing
+        // the measured session through spill/fault-back; engine B is
+        // unbounded at a different page size
+        let mut a = EngineMachine::new(&prepared);
+        a.set_kv_pool(pool(1 + rng.below(8) as usize, Some(1)));
+        let mut b = EngineMachine::new(&prepared);
+        b.set_kv_pool(pool(9 + rng.below(24) as usize, None));
+        let mut oracle = EngineMachine::new(&prepared);
+
+        let steps = 2 + rng.below(9) as usize;
+        let tok = |rng: &mut Rng| {
+            let data: Vec<f32> = (0..d).map(|_| rng.range(-2.0, 2.0)).collect();
+            Tensor { h: 1, w: 1, c: d, data }
+        };
+        for t in 0..steps {
+            let x = tok(rng);
+            let got_a = a.run_step(0, &x);
+            // decoy step evicts session 0's pages from engine A's pool
+            let decoy = tok(rng);
+            a.run_step(1, &decoy);
+            let got_b = b.run_step(0, &x);
+            if got_a.output.data != got_b.output.data {
+                return Err(format!(
+                    "step {t}: low-V decode depends on page size or spill \
+                     round trips (v_bits={v_bits:?} seed={seed})"
+                ));
+            }
+            let want = oracle.run_step(0, &x);
+            for (g, w) in got_a.output.data.iter().zip(&want.output.data) {
+                if !g.is_finite() {
+                    return Err(format!("step {t}: non-finite output {g} (seed={seed})"));
+                }
+                let err = (*g as f64 - *w as f64).abs();
+                // generous stability envelope: tiny net, inputs in
+                // [-2, 2] — a coarser V tier perturbs outputs, it must
+                // not blow them up
+                if err > 64.0 {
+                    return Err(format!(
+                        "step {t}: error {err} vs compute-precision oracle \
+                         (v_bits={v_bits:?} seed={seed})"
+                    ));
+                }
+                total_err += err;
+            }
+        }
+        Ok(())
+    });
+    assert!(
+        total_err > 0.0,
+        "a sub-compute V tier must measurably perturb decode somewhere in the sweep"
+    );
 }

@@ -107,6 +107,7 @@ fn streaming_and_prepared_paths_are_bit_identical_per_layer() {
                 bound: Some(&bound),
                 scratch: &mut scratch,
                 session: None,
+                kv: None,
             };
             let out2 = prep.run(&mut ctx, &[&shaped]);
             let stats2 = m2.take_stats();
@@ -558,6 +559,7 @@ fn lru_eviction_rebinds_models_correctly() {
         worker_budget: None,
         trace: false,
         queue_depth: None,
+        kv: None,
     };
     let mut server = Server::start_pool(&cfg);
     server.register(ka.clone(), Arc::clone(&pa));
@@ -1378,7 +1380,10 @@ fn schema4_report_adds_admission_and_open_loop_fields() {
     assert!(report.lost.is_empty() && report.partial.is_empty(), "healthy run loses nothing");
 
     let parsed = soniq::util::json::parse(&report.to_json().to_string()).unwrap();
-    assert_eq!(parsed.get("schema").unwrap().as_usize().unwrap(), 4);
+    assert_eq!(parsed.get("schema").unwrap().as_usize().unwrap(), SERVE_REPORT_SCHEMA as usize);
+    // schema 5 keeps kv_pool out of non-paged reports: the key's very
+    // presence marks a paged-KV run for grepping tools
+    assert!(parsed.get("kv_pool").is_err(), "kv_pool only appears in paged runs");
     for key in ["queue_wait", "bind_wait", "service", "gather_wait"] {
         assert!(parsed.get(&format!("{key}_mean_ms")).is_ok(), "{key} mean in schema 4");
         assert!(parsed.get(&format!("{key}_p99_ms")).is_ok(), "{key} p99 in schema 4");
@@ -1644,4 +1649,124 @@ fn dead_worker_losses_are_reported_not_silent() {
     let parsed = soniq::util::json::parse(&report.to_json().to_string()).unwrap();
     let lost_json = parsed.get("lost_requests").unwrap().as_arr().unwrap().len();
     assert_eq!(lost_json, faults.lost.len());
+}
+
+// ---------------------------------------------------------------------
+// paged KV-cache: admission, spill round trips, pool reporting
+// ---------------------------------------------------------------------
+
+#[test]
+fn paged_kv_refuse_gates_admission_and_recovers_on_close() {
+    use soniq::serve::{KvPolicy, KvPoolCfg};
+    let net = synthetic_network("tinydec", DesignPoint::Patterns(4), 3).unwrap();
+    let prepared = prepare_any(&net);
+    let slots = prepared.step.as_ref().expect("tinydec is a decoder").slot_geoms.len();
+    // budget = one page per slot: exactly one stepped session fits
+    let kv = KvPoolCfg {
+        page_positions: 8,
+        pages_per_worker: Some(slots),
+        policy: KvPolicy::Refuse,
+        v_bits: None,
+    };
+    let cfg = ServeConfig { kv: Some(kv), ..pool_cfg(1, 4) };
+    let mut server = Server::start(Arc::clone(&prepared), &cfg);
+    let tokens = synthetic_step_inputs(&net, 0, 3, 5);
+
+    // opening charges nothing (the first *step* takes the pages), so
+    // the first session admits against an empty ledger
+    let s0 = server.open_session();
+    assert!(server.try_submit_step(s0, tokens[0].clone()).is_ok());
+    // the whole budget is now charged to s0: a second session's first
+    // step could not take a page, so the open itself is refused
+    let err = server.try_open_session().unwrap_err();
+    assert_eq!((err.depth, err.limit), (slots, slots));
+    // while s0's own steps keep landing inside its already-charged
+    // pages (no new page before `page_positions` more positions)
+    assert!(server.try_submit_step(s0, tokens[1].clone()).is_ok());
+    // close releases exactly the charged pages: admission recovers
+    server.close_session(s0);
+    let s1 = server.try_open_session().expect("close must release the charged pages");
+    assert!(server.try_submit_step(s1, tokens[2].clone()).is_ok());
+    server.close_session(s1);
+
+    let done = server.shutdown();
+    assert!(server.faults().is_none(), "serving threads died");
+    assert_eq!(done.len(), 3, "refused opens shed sessions, never submitted steps");
+    let snap = server.snapshot();
+    assert!(snap.rejected >= 1, "kv refusals count as shed load");
+    let pool = snap.kv_pool.expect("paged run publishes pool state");
+    assert_eq!(pool.pages_per_worker, Some(slots));
+    assert_eq!(pool.refusals, 1);
+    assert_eq!(pool.pages_used, 0, "all sessions closed their pages");
+    assert!(pool.pages_free >= slots, "closed pages sit on the free list for reuse");
+    assert_eq!((pool.spills, pool.faults, pool.evictions), (0, 0, 0));
+}
+
+#[test]
+fn paged_kv_spill_round_trips_sessions_bit_exactly_under_pressure() {
+    use soniq::serve::{KvPolicy, KvPoolCfg};
+    let net = synthetic_network("tinydec", DesignPoint::Patterns(4), 3).unwrap();
+    let prepared = prepare_any(&net);
+    let slots = prepared.step.as_ref().expect("tinydec is a decoder").slot_geoms.len();
+    // a one-session budget with three interleaved sessions: every step
+    // faults its session back in and spills the previous one out
+    let kv = KvPoolCfg {
+        page_positions: 4,
+        pages_per_worker: Some(slots),
+        policy: KvPolicy::Spill,
+        v_bits: None,
+    };
+    let cfg = ServeConfig { kv: Some(kv), ..pool_cfg(1, 4) };
+    let mut server = Server::start(Arc::clone(&prepared), &cfg);
+    let n_sessions = 3usize;
+    let steps = 3usize;
+    let tokens: Vec<Vec<Tensor>> = (0..n_sessions)
+        .map(|s| synthetic_step_inputs(&net, s as u64, steps, 5))
+        .collect();
+    let sids: Vec<SessionId> = (0..n_sessions).map(|_| server.open_session()).collect();
+    let mut ids: Vec<(u64, usize, usize)> = Vec::new();
+    for t in 0..steps {
+        for (si, sid) in sids.iter().enumerate() {
+            ids.push((server.submit_step(*sid, tokens[si][t].clone()), si, t));
+        }
+    }
+    for sid in &sids {
+        server.close_session(*sid);
+    }
+    let done = server.shutdown();
+    assert!(server.faults().is_none(), "serving threads died");
+    assert_eq!(done.len(), n_sessions * steps);
+
+    // spilled-and-faulted decode must match a lone growable engine
+    // bit-for-bit — the round trip moves pages verbatim
+    let by_id: HashMap<u64, &Completion> = done.iter().map(|c| (c.id, c)).collect();
+    let mut engine = EngineMachine::new(&prepared);
+    for &(id, si, t) in &ids {
+        let want = engine.run_step(si as u64, &tokens[si][t]);
+        assert_eq!(
+            by_id[&id].output.data, want.output.data,
+            "session {si} step {t} diverged through the spill arena"
+        );
+    }
+
+    let snap = server.snapshot();
+    let pool = snap.kv_pool.expect("paged run publishes pool state");
+    assert!(pool.spills >= 1 && pool.faults >= 1, "pressure must spill and fault back");
+    assert_eq!(pool.evictions, 0, "spill parks pages, it never drops them");
+    assert_eq!(pool.refusals, 0, "spill admits everything");
+    assert_eq!((pool.pages_used, pool.spilled_pages), (0, 0), "closed sessions free the pool");
+
+    // the pool block lands in the schema-5 report JSON, and worker
+    // rows carry the resident page gauge
+    let report =
+        summarize_with(&done, Duration::from_millis(1), SetupTiming::default(), Some(&snap));
+    let parsed = soniq::util::json::parse(&report.to_json().to_string()).unwrap();
+    assert_eq!(parsed.get("schema").unwrap().as_usize().unwrap(), SERVE_REPORT_SCHEMA as usize);
+    let kvp = parsed.get("kv_pool").unwrap();
+    assert_eq!(kvp.get("pages_per_worker").unwrap().as_usize().unwrap(), slots);
+    assert_eq!(kvp.get("spills").unwrap().as_usize().unwrap() as u64, pool.spills);
+    assert_eq!(kvp.get("faults").unwrap().as_usize().unwrap() as u64, pool.faults);
+    assert_eq!(kvp.get("refusals").unwrap().as_usize().unwrap(), 0);
+    let rows = parsed.get("workers").unwrap().as_arr().unwrap();
+    assert!(rows.iter().all(|r| r.get("kv_pages").is_ok()), "worker rows carry kv_pages");
 }

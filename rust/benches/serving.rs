@@ -33,6 +33,18 @@ fn main() {
             run_network(&net.nodes, &inputs[0]).output.data[0]
         });
         let prepared = Arc::new(PreparedModel::prepare(&net.nodes));
+        // what `serve-bench --verify` costs at serve time: one abstract-
+        // interpretation pass over every cached/representative program
+        let t_verify = Instant::now();
+        let verdict = soniq::analysis::verify_model(model, &prepared);
+        assert!(verdict.is_clean());
+        println!(
+            "static verify: {} kernels / {} instrs clean in {:.2?} (max acc bound {})",
+            verdict.kernels.len(),
+            verdict.instrs(),
+            t_verify.elapsed(),
+            verdict.max_acc_bound()
+        );
         let mut engine = EngineMachine::new(&prepared);
         let amortized = bench("prepared engine.run (pack once, replay kernel)", || {
             engine.run(&inputs[0]).output.data[0]

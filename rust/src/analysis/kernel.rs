@@ -1,0 +1,569 @@
+//! Abstract interpretation over emitted SIMD programs.
+//!
+//! [`KernelVerifier`] walks an [`Instr`] stream instruction by
+//! instruction, tracking an abstract value per vector register and a
+//! worst-case accumulator bound per output cell, and proves for the
+//! whole program:
+//!
+//! - **def-before-use**: every register read was written first, every
+//!   `BufId` is one the kernel's buffer table declares;
+//! - **memory safety**: every `Addr` is in bounds for its buffer's
+//!   packed length at the access granularity (16-byte `LdQ`/`StQ`,
+//!   4-byte `ReduceAcc` cells, `4 * n_valid` `MulAcc` extents) and
+//!   aligned to it;
+//! - **pattern coherence**: every `PatId` indexes the registered
+//!   table, and the pattern it names is byte-for-byte the pattern of
+//!   the chunk the operand vectors were loaded from (chunk provenance
+//!   is recovered from the load offsets — all emitter layouts are
+//!   chunk-minor, so `(off / 16) % n_chunks` is the chunk index);
+//! - **tail masking**: a partial chunk's input-side operand reaches a
+//!   `VmacP` only after a `Vand` against that chunk's tail mask
+//!   (weights are pre-masked at pack time);
+//! - **accumulator range**: per-lane i16 partials (`VmacP` results
+//!   accumulated by `Vaddq16`) stay within `i16::MAX`, and the i32
+//!   `ReduceAcc`/`MulAcc` running sum per output cell stays within
+//!   `i32::MAX` *and* — for SMOL kernels — within the f32
+//!   exact-integer range [`F32_EXACT_BOUND`], which is what PR 5's
+//!   bit-exact sharded reduction and the 2^-6 fixed-point dequant
+//!   grid actually rely on.
+//!
+//! The bound argument is purely static: a `p`-bit element pair
+//! contributes at most [`elem_prod_max`]`(p)` in 2^-6 units (code 0
+//! decodes to the maximum-magnitude mantissa `-(2^p - 1)`, so masked
+//! lanes never shrink the bound), a 16-bit lane of precision `p` holds
+//! `16 / p` elements ([`lane_mac_max`]), and every `ReduceAcc` adds the
+//! sum of its source's lane bounds to one output cell. The final
+//! per-cell bound is therefore `sum over chunks and taps of the chunk's
+//! pattern-wise product bound` — the `chunk_count x max|a|*|b|`
+//! quantity of the exact-integer-range argument, computed exactly.
+//!
+//! The verifier implements [`Sink`], so paper-scale layers verify by
+//! *streaming* `codegen::emit_layer` straight into it — no multi-
+//! million-instruction program is ever materialized.
+
+use std::borrow::Cow;
+use std::collections::{HashMap, HashSet};
+
+use super::{KernelVerdict, Violation, F32_EXACT_BOUND};
+use crate::codegen::gemm::GemmPlan;
+use crate::codegen::{register_patterns, DataFormat, LayerKind, LayerPlan, Sink};
+use crate::simd::isa::{Addr, Instr, NUM_VREGS};
+use crate::simd::patterns::Pattern;
+
+/// Per-kernel cap on *recorded* violations: a systemically broken
+/// paper-scale program would otherwise allocate millions of records.
+/// Further violations are counted in [`KernelVerdict::suppressed`].
+const MAX_VIOLATIONS: usize = 64;
+
+/// Worst-case |decoded product| of one `p`-bit element pair in the
+/// 2^-6 fixed-point grid: mantissas reach `2^p - 1` in magnitude
+/// (packed code 0 decodes to `-(2^p - 1)`), and a `p`-bit product is
+/// scaled by `2^(8 - 2p)` onto the grid — the same arithmetic as
+/// `LayerPlan::tail_bias`, which is exactly why masked tail slots are
+/// covered by this bound rather than excluded from it.
+pub fn elem_prod_max(p: u8) -> i64 {
+    let m = (1i64 << p) - 1;
+    (m * m) << (8 - 2 * p)
+}
+
+/// Worst-case |value| of one i16 lane after a single `VmacP`: a
+/// `p`-bit lane packs `16 / p` elements, each bounded by
+/// [`elem_prod_max`]. (4-bit: 4*225 = 900; 2-bit: 8*144 = 1152;
+/// 1-bit: 16*64 = 1024 — the `lane_sums_fit_16_6` invariant.)
+pub fn lane_mac_max(p: u8) -> i64 {
+    (16 / p as i64) * elem_prod_max(p)
+}
+
+/// Everything the abstract interpreter needs to know about the
+/// environment a program runs in: buffer extents (indexed by the
+/// symbolic `BufId` convention 0=input, 1=weights, 2=out, 3=masks),
+/// the registered pattern table, and the contraction-axis chunk layout
+/// (`(pattern, valid)` per chunk) the packed operands follow.
+#[derive(Debug, Clone)]
+pub struct KernelSpec {
+    pub name: String,
+    /// byte length of each buffer, indexed by `BufId.0`
+    pub buf_len: Vec<usize>,
+    /// the machine pattern table the program executes under (base 0)
+    pub patterns: Vec<Pattern>,
+    /// chunk layout of the packed contraction axis
+    pub chunks: Vec<(Pattern, u32)>,
+    pub fmt: DataFormat,
+}
+
+impl KernelSpec {
+    /// Spec for a conv/FC layer emitted by `codegen::emit_layer`
+    /// against the symbolic buffer ids, with buffer extents derived
+    /// from the plan exactly like the engine's bind-time allocation.
+    pub fn for_layer(plan: &LayerPlan) -> KernelSpec {
+        let chunks = plan.chunks();
+        let nch = chunks.len();
+        let (hout, wout) = (plan.hout(), plan.wout());
+        let act = plan.hin * plan.win * nch * 16;
+        let (weights, out_elems) = match plan.kind {
+            LayerKind::Dense => {
+                (plan.cout * plan.kh * plan.kw * nch * 16, plan.cout * hout * wout)
+            }
+            LayerKind::Depthwise => (plan.kh * plan.kw * nch * 16, plan.cin * hout * wout),
+        };
+        // baseline depthwise stores whole 16 B chunk vectors per
+        // position — same dual sizing as the engine's `layer_sizes`
+        let out = (out_elems * 4).max(hout * wout * nch * 16);
+        let mut patterns = Vec::new();
+        register_patterns(plan, &mut patterns);
+        KernelSpec {
+            name: plan.name.clone(),
+            buf_len: vec![act, weights, out, nch * 16],
+            patterns,
+            chunks,
+            fmt: plan.fmt,
+        }
+    }
+
+    /// Spec for a GEMM emitted by `emit_gemm`/`emit_gemm_causal`
+    /// (buffer extents via the GEMM's 1x1 dense layer view).
+    pub fn for_gemm(plan: &GemmPlan) -> KernelSpec {
+        KernelSpec::for_layer(&plan.layer_plan())
+    }
+
+    /// Override the buffer extents with the sizes an op *actually*
+    /// allocates at bind time (which may exceed the per-program
+    /// minimum — e.g. attention buffers sized once for
+    /// `max_positions` and shared by every per-length row program).
+    pub fn with_buffers(mut self, input: usize, weights: usize, out: usize, masks: usize) -> Self {
+        self.buf_len = vec![input, weights, out, masks];
+        self
+    }
+}
+
+/// A program to verify together with its spec — what
+/// `PreparedOp::verify_programs` returns. Ops that cache a program
+/// borrow it; ops that emit per-request (cached attention, causal A·V)
+/// return freshly emitted representative programs, owned.
+#[derive(Debug)]
+pub struct ProgramToVerify<'a> {
+    pub spec: KernelSpec,
+    pub program: Cow<'a, [Instr]>,
+}
+
+/// Abstract value of one vector register.
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Abs {
+    /// packed operand vector: `src` is the buffer it was loaded from,
+    /// `chunk` its provenance chunk (None = layout unknown), `masked`
+    /// whether a `Vand` against the chunk's tail mask was applied
+    Packed { src: u16, chunk: Option<usize>, masked: bool },
+    /// tail-mask vector for `chunk`
+    Mask { chunk: usize },
+    /// 8 i16 lanes of MAC partials; per-lane worst-case |value|
+    Lanes([i64; 8]),
+    /// `vmul_Pn` low-half product register
+    MulLo { chunk: Option<usize> },
+    /// `vmul_Pn` high-half product register
+    MulHi { chunk: Option<usize> },
+}
+
+/// The abstract interpreter. Feed instructions with [`step`]
+/// (or stream an emitter into it — it implements [`Sink`]), then
+/// [`finish`] to get the [`KernelVerdict`].
+///
+/// [`step`]: KernelVerifier::step
+/// [`finish`]: KernelVerifier::finish
+#[derive(Debug)]
+pub struct KernelVerifier<'a> {
+    spec: &'a KernelSpec,
+    regs: [Option<Abs>; NUM_VREGS],
+    /// worst-case accumulated bound per i32 output cell `(buf, off)`
+    cells: HashMap<(u16, u32), i64>,
+    /// cells already reported as overflowing (dedup)
+    flagged: HashSet<(u16, u32)>,
+    violations: Vec<Violation>,
+    suppressed: usize,
+    at: usize,
+    instrs: u64,
+    macs: u64,
+    loads: u64,
+    stores: u64,
+    max_acc: i64,
+    max_lane: i64,
+}
+
+impl<'a> KernelVerifier<'a> {
+    pub fn new(spec: &'a KernelSpec) -> KernelVerifier<'a> {
+        KernelVerifier {
+            spec,
+            regs: [None; NUM_VREGS],
+            cells: HashMap::new(),
+            flagged: HashSet::new(),
+            violations: Vec::new(),
+            suppressed: 0,
+            at: 0,
+            instrs: 0,
+            macs: 0,
+            loads: 0,
+            stores: 0,
+            max_acc: 0,
+            max_lane: 0,
+        }
+    }
+
+    fn violate(&mut self, v: Violation) {
+        if self.violations.len() < MAX_VIOLATIONS {
+            self.violations.push(v);
+        } else {
+            self.suppressed += 1;
+        }
+    }
+
+    /// Read a register: def-before-use and index checks.
+    fn read(&mut self, r: u8) -> Option<Abs> {
+        if r as usize >= NUM_VREGS {
+            self.violate(Violation::BadReg { at: self.at, reg: r });
+            return None;
+        }
+        let v = self.regs[r as usize];
+        if v.is_none() {
+            self.violate(Violation::UndefinedReg { at: self.at, reg: r });
+        }
+        v
+    }
+
+    fn write(&mut self, r: u8, a: Abs) {
+        if r as usize >= NUM_VREGS {
+            self.violate(Violation::BadReg { at: self.at, reg: r });
+        } else {
+            self.regs[r as usize] = Some(a);
+        }
+    }
+
+    /// Bounds + alignment check for an `extent`-byte access at `addr`;
+    /// returns false when the buffer id itself is undeclared.
+    fn check_addr(&mut self, addr: Addr, extent: u32, align: u32) -> bool {
+        let b = addr.buf.0 as usize;
+        if b >= self.spec.buf_len.len() {
+            self.violate(Violation::BadBuf { at: self.at, buf: addr.buf.0 });
+            return false;
+        }
+        if addr.off % align != 0 {
+            self.violate(Violation::Misaligned { at: self.at, buf: addr.buf.0, off: addr.off, align });
+        }
+        if addr.off as usize + extent as usize > self.spec.buf_len[b] {
+            self.violate(Violation::OutOfBounds {
+                at: self.at,
+                buf: addr.buf.0,
+                off: addr.off,
+                extent,
+                len: self.spec.buf_len[b],
+            });
+        }
+        true
+    }
+
+    /// Chunk provenance of a 16-byte slot in the input/weights
+    /// buffers: every emitter layout is chunk-minor.
+    fn chunk_of(&self, off: u32) -> Option<usize> {
+        let n = self.spec.chunks.len();
+        if n == 0 {
+            None
+        } else {
+            Some((off as usize / 16) % n)
+        }
+    }
+
+    /// `PatId` validity plus pattern/chunk-layout coherence for a
+    /// MAC/MUL reading operands of provenance `chunk`.
+    fn check_pattern(&mut self, pat: u8, chunk: Option<usize>) -> bool {
+        if pat as usize >= self.spec.patterns.len() {
+            self.violate(Violation::BadPatId {
+                at: self.at,
+                pat,
+                table: self.spec.patterns.len(),
+            });
+            return false;
+        }
+        if let Some(c) = chunk {
+            if c < self.spec.chunks.len() && self.spec.patterns[pat as usize] != self.spec.chunks[c].0
+            {
+                self.violate(Violation::PatternMismatch { at: self.at, pat, chunk: c });
+                return false;
+            }
+        }
+        true
+    }
+
+    /// Provenance consistency between a MAC's two packed operands;
+    /// returns the merged chunk.
+    fn merge_chunks(&mut self, ca: Option<usize>, cb: Option<usize>) -> Option<usize> {
+        if let (Some(a), Some(b)) = (ca, cb) {
+            if a != b {
+                self.violate(Violation::ChunkMismatch { at: self.at, a, b });
+            }
+        }
+        ca.or(cb)
+    }
+
+    /// Unpack a MAC operand register into (chunk, masked, from-input).
+    fn packed_operand(&mut self, r: u8, what: &str) -> (Option<usize>, bool, bool) {
+        match self.read(r) {
+            Some(Abs::Packed { src, chunk, masked }) => (chunk, masked, src == 0),
+            Some(other) => {
+                self.violate(Violation::OperandKind {
+                    at: self.at,
+                    what: format!("{what} wants a packed operand vector, register holds {other:?}"),
+                });
+                (None, true, false)
+            }
+            None => (None, true, false),
+        }
+    }
+
+    /// Accumulate a worst-case contribution into an output cell and
+    /// check the running bound against the i32 range.
+    fn accumulate(&mut self, buf: u16, off: u32, contribution: i64) {
+        let cell = self.cells.entry((buf, off)).or_insert(0);
+        *cell += contribution;
+        let bound = *cell;
+        self.max_acc = self.max_acc.max(bound);
+        if bound > i32::MAX as i64 && self.flagged.insert((buf, off)) {
+            self.violate(Violation::AccOverflow { buf, off, bound });
+        }
+    }
+
+    /// Interpret one instruction.
+    pub fn step(&mut self, i: &Instr) {
+        self.instrs += 1;
+        match *i {
+            Instr::LdQ { dst, addr } => {
+                self.loads += 1;
+                self.check_addr(addr, 16, 16);
+                let abs = match addr.buf.0 {
+                    3 => Abs::Mask { chunk: (addr.off / 16) as usize },
+                    b @ (0 | 1) => {
+                        Abs::Packed { src: b, chunk: self.chunk_of(addr.off), masked: false }
+                    }
+                    b => Abs::Packed { src: b, chunk: None, masked: false },
+                };
+                self.write(dst, abs);
+            }
+            Instr::StQ { src, addr } => {
+                self.stores += 1;
+                self.read(src);
+                self.check_addr(addr, 16, 16);
+            }
+            Instr::VmovZ { dst } => {
+                self.write(dst, Abs::Lanes([0; 8]));
+            }
+            Instr::Vand { dst, a, b } => {
+                let (va, vb) = (self.read(a), self.read(b));
+                let abs = match (va, vb) {
+                    (Some(Abs::Packed { src, chunk, .. }), Some(Abs::Mask { chunk: mc }))
+                    | (Some(Abs::Mask { chunk: mc }), Some(Abs::Packed { src, chunk, .. })) => {
+                        if let Some(c) = chunk {
+                            if c != mc {
+                                self.violate(Violation::ChunkMismatch { at: self.at, a: c, b: mc });
+                            }
+                        }
+                        Abs::Packed { src, chunk: chunk.or(Some(mc)), masked: true }
+                    }
+                    (Some(x), Some(y)) => {
+                        self.violate(Violation::OperandKind {
+                            at: self.at,
+                            what: format!(
+                                "vand wants a packed operand and a tail mask, got {x:?} and {y:?}"
+                            ),
+                        });
+                        Abs::Packed { src: u16::MAX, chunk: None, masked: true }
+                    }
+                    // undefined operand already reported by read()
+                    _ => Abs::Packed { src: u16::MAX, chunk: None, masked: true },
+                };
+                self.write(dst, abs);
+            }
+            Instr::VmacP { dst, a, b, pat } => {
+                self.macs += 1;
+                let (ca, ma, ia) = self.packed_operand(a, "vmac_Pn");
+                let (cb, mb, ib) = self.packed_operand(b, "vmac_Pn");
+                let chunk = self.merge_chunks(ca, cb);
+                let pat_ok = self.check_pattern(pat, chunk);
+                // partial chunks must mask the input-side operand (the
+                // packed weights are pre-masked at pack time)
+                if self.spec.fmt == DataFormat::Smol {
+                    if let Some(c) = chunk {
+                        if let Some(&(p, valid)) = self.spec.chunks.get(c) {
+                            let partial = valid < p.capacity();
+                            let input_unmasked = (ia && !ma) || (ib && !mb);
+                            if partial && input_unmasked {
+                                self.violate(Violation::UnmaskedTail { at: self.at, chunk: c });
+                            }
+                        }
+                    }
+                }
+                let lanes = if pat_ok && (pat as usize) < self.spec.patterns.len() {
+                    let mut l = [0i64; 8];
+                    for (o, p) in l.iter_mut().zip(self.spec.patterns[pat as usize].lane_precisions())
+                    {
+                        *o = lane_mac_max(p);
+                    }
+                    l
+                } else {
+                    [0; 8]
+                };
+                self.max_lane = self.max_lane.max(lanes.iter().copied().max().unwrap_or(0));
+                self.write(dst, Abs::Lanes(lanes));
+            }
+            Instr::VmulP { dst, dst2, a, b, pat } => {
+                self.macs += 1;
+                if dst == dst2 {
+                    self.violate(Violation::OperandKind {
+                        at: self.at,
+                        what: format!("vmul_Pn lo/hi destinations collide (reg {dst})"),
+                    });
+                }
+                let (ca, _, _) = self.packed_operand(a, "vmul_Pn");
+                let (cb, _, _) = self.packed_operand(b, "vmul_Pn");
+                let chunk = self.merge_chunks(ca, cb);
+                self.check_pattern(pat, chunk);
+                self.write(dst, Abs::MulLo { chunk });
+                self.write(dst2, Abs::MulHi { chunk });
+            }
+            Instr::Vaddq16 { dst, a, b } => {
+                let (va, vb) = (self.read(a), self.read(b));
+                let lane = |v: Option<Abs>, this: &mut Self| match v {
+                    Some(Abs::Lanes(l)) => l,
+                    Some(other) => {
+                        this.violate(Violation::OperandKind {
+                            at: this.at,
+                            what: format!("vaddq_s16 wants lane accumulators, got {other:?}"),
+                        });
+                        [0; 8]
+                    }
+                    None => [0; 8],
+                };
+                let (la, lb) = (lane(va, self), lane(vb, self));
+                let mut sum = [0i64; 8];
+                for i in 0..8 {
+                    sum[i] = la[i] + lb[i];
+                    if sum[i] > i16::MAX as i64 {
+                        self.violate(Violation::LaneOverflow { at: self.at, lane: i, bound: sum[i] });
+                    }
+                }
+                self.max_lane = self.max_lane.max(sum.iter().copied().max().unwrap_or(0));
+                self.write(dst, Abs::Lanes(sum));
+            }
+            Instr::ReduceAcc { src, addr } => {
+                self.stores += 1;
+                let contribution = match self.read(src) {
+                    Some(Abs::Lanes(l)) => l.iter().sum(),
+                    Some(other) => {
+                        self.violate(Violation::OperandKind {
+                            at: self.at,
+                            what: format!("reduce-acc wants lane accumulators, got {other:?}"),
+                        });
+                        0
+                    }
+                    None => 0,
+                };
+                if self.check_addr(addr, 4, 4) {
+                    self.accumulate(addr.buf.0, addr.off, contribution);
+                }
+            }
+            Instr::MulAcc { lo, hi, pat, addr, n_valid } => {
+                self.stores += 1;
+                let clo = match self.read(lo) {
+                    Some(Abs::MulLo { chunk }) => chunk,
+                    Some(other) => {
+                        self.violate(Violation::OperandKind {
+                            at: self.at,
+                            what: format!("mul-acc lo wants a vmul low half, got {other:?}"),
+                        });
+                        None
+                    }
+                    None => None,
+                };
+                let chi = match self.read(hi) {
+                    Some(Abs::MulHi { chunk }) => chunk,
+                    Some(other) => {
+                        self.violate(Violation::OperandKind {
+                            at: self.at,
+                            what: format!("mul-acc hi wants a vmul high half, got {other:?}"),
+                        });
+                        None
+                    }
+                    None => None,
+                };
+                let chunk = self.merge_chunks(clo, chi);
+                let pat_ok = self.check_pattern(pat, chunk);
+                if pat_ok {
+                    let p = self.spec.patterns[pat as usize];
+                    if n_valid as u32 > p.capacity() {
+                        self.violate(Violation::NValidExceedsCapacity {
+                            at: self.at,
+                            n_valid,
+                            capacity: p.capacity(),
+                        });
+                    }
+                }
+                let ok = self.check_addr(addr, 4 * n_valid as u32, 4);
+                if ok && pat_ok {
+                    let p = self.spec.patterns[pat as usize];
+                    for e in 0..(n_valid as u32).min(p.capacity()) {
+                        let contribution = elem_prod_max(p.element_precision(e));
+                        self.accumulate(addr.buf.0, addr.off + 4 * e, contribution);
+                    }
+                }
+            }
+            Instr::VfmaF32 { dst, a, b } => {
+                self.macs += 1;
+                // FMA reads its destination as the accumulator
+                self.read(a);
+                self.read(b);
+                self.read(dst);
+            }
+            Instr::VmacI8 { dst, a, b } => {
+                self.macs += 1;
+                self.read(a);
+                self.read(b);
+                // functional no-op in the simulator (timing-only
+                // baseline); lanes are architecturally zero
+                self.write(dst, Abs::Lanes([0; 8]));
+            }
+        }
+        self.at += 1;
+    }
+
+    /// Close the analysis and produce the verdict. The f32
+    /// exact-integer-range check applies to SMOL kernels only —
+    /// baseline formats accumulate outside the fixed-point grid.
+    pub fn finish(mut self) -> KernelVerdict {
+        if self.spec.fmt == DataFormat::Smol && self.max_acc > F32_EXACT_BOUND {
+            let bound = self.max_acc;
+            self.violate(Violation::AccExactRange { bound, limit: F32_EXACT_BOUND });
+        }
+        KernelVerdict {
+            name: self.spec.name.clone(),
+            instrs: self.instrs,
+            macs: self.macs,
+            loads: self.loads,
+            stores: self.stores,
+            max_acc_bound: self.max_acc,
+            max_lane_bound: self.max_lane,
+            violations: self.violations,
+            suppressed: self.suppressed,
+        }
+    }
+}
+
+impl Sink for KernelVerifier<'_> {
+    fn emit(&mut self, i: Instr) {
+        self.step(&i);
+    }
+}
+
+/// Verify one materialized program against its spec.
+pub fn verify_program(spec: &KernelSpec, program: &[Instr]) -> KernelVerdict {
+    let mut v = KernelVerifier::new(spec);
+    for i in program {
+        v.step(i);
+    }
+    v.finish()
+}

@@ -1,0 +1,285 @@
+//! `soniq::analysis` — static verification of emitted programs and
+//! serving plans.
+//!
+//! Two layers (see DESIGN.md "Static analysis"):
+//!
+//! - [`kernel`]: an abstract interpreter over [`crate::simd::isa::Instr`]
+//!   streams proving def-before-use, memory safety, pattern/chunk
+//!   coherence, tail masking, and worst-case i16/i32 accumulator
+//!   bounds — including the f32 exact-integer-range bound the
+//!   bit-exact sharded reduction (PR 5) and the 2^-6 dequant grid
+//!   rely on.
+//! - [`plan`]: structural checks over [`crate::serve::PreparedModel`],
+//!   [`crate::serve::Deployment`] and [`crate::serve::KvPoolCfg`] —
+//!   graph edges shape/precision-compatible, shard slices an exact
+//!   partition, shard keys collision-free, bind bytes within budget,
+//!   page geometry chunk-aligned with the V tier no wider than the
+//!   position precision.
+//!
+//! Entry points: [`verify_program`] (one kernel), [`verify_model`]
+//! (every cached/representative program of a prepared model),
+//! [`verify_deployment`] (shard structure + every shard's kernels),
+//! [`verify_graph`] / [`verify_kv`] (pre-prepare structural passes).
+//! `PreparedModel::prepare`/`prepare_decoder` call [`debug_verify`] in
+//! debug builds, and `serve-bench --verify` runs the full
+//! [`VerifyReport`] in release.
+
+pub mod kernel;
+pub mod plan;
+
+pub use kernel::{
+    elem_prod_max, lane_mac_max, verify_program, KernelSpec, KernelVerifier, ProgramToVerify,
+};
+pub use plan::{verify_deployment, verify_graph, verify_kv, verify_model};
+
+use std::fmt;
+
+/// Largest integer magnitude f32 represents exactly (2^24). SMOL
+/// accumulators must stay within this so the fixed-point sums survive
+/// the f32 dequant epilogue — and so sharded partial sums reduce
+/// exactly in any association order. `i32::MAX` is the hard overflow
+/// line; this is the *contract* line.
+pub const F32_EXACT_BOUND: i64 = 1 << 24;
+
+/// One proven defect. Kernel variants carry the instruction index
+/// (`at`) they fired at; plan variants carry structural context.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Violation {
+    /// register read before any write
+    UndefinedReg { at: usize, reg: u8 },
+    /// register index outside the 32-vreg file
+    BadReg { at: usize, reg: u8 },
+    /// `BufId` not in the kernel's buffer table
+    BadBuf { at: usize, buf: u16 },
+    /// access extends past the buffer's packed length
+    OutOfBounds { at: usize, buf: u16, off: u32, extent: u32, len: usize },
+    /// offset not aligned to the access granularity
+    Misaligned { at: usize, buf: u16, off: u32, align: u32 },
+    /// `PatId` outside the registered pattern table
+    BadPatId { at: usize, pat: u8, table: usize },
+    /// pattern named by the `PatId` differs from the provenance
+    /// chunk's pattern in the layout
+    PatternMismatch { at: usize, pat: u8, chunk: usize },
+    /// two operands (or operand and mask) from different chunks
+    ChunkMismatch { at: usize, a: usize, b: usize },
+    /// operand register holds the wrong kind of abstract value
+    OperandKind { at: usize, what: String },
+    /// partial chunk's input operand reached a MAC without a `Vand`
+    /// against its tail mask
+    UnmaskedTail { at: usize, chunk: usize },
+    /// worst-case i16 lane partial exceeds `i16::MAX`
+    LaneOverflow { at: usize, lane: usize, bound: i64 },
+    /// worst-case i32 cell sum exceeds `i32::MAX`
+    AccOverflow { buf: u16, off: u32, bound: i64 },
+    /// SMOL kernel's max cell bound exceeds the f32 exact-integer
+    /// range — the bit-exact sharded-reduce contract
+    AccExactRange { bound: i64, limit: i64 },
+    /// `MulAcc` claims more valid elements than the pattern packs
+    NValidExceedsCapacity { at: usize, n_valid: u16, capacity: u32 },
+
+    /// graph structural defect at `node`
+    Graph { node: usize, detail: String },
+    /// shard slices do not partition the split range exactly
+    ShardSlices { detail: String },
+    /// two shards registered under the same key
+    ShardKeyCollision { key: String },
+    /// a shard's bind bytes exceed the per-worker budget
+    BudgetExceeded { key: String, bytes: usize, budget: usize },
+    /// KV page geometry incoherent with the chunk layout / V tier
+    PageGeometry { slot: usize, detail: String },
+    /// op's declared `bind_bytes` disagrees with its buffer table
+    BindBytes { op: String, declared: usize, actual: usize },
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        use Violation::*;
+        match self {
+            UndefinedReg { at, reg } => write!(f, "[{at}] v{reg} read before any write"),
+            BadReg { at, reg } => write!(f, "[{at}] register v{reg} outside the 32-vreg file"),
+            BadBuf { at, buf } => write!(f, "[{at}] BufId({buf}) not in the kernel's buffer table"),
+            OutOfBounds { at, buf, off, extent, len } => write!(
+                f,
+                "[{at}] buf {buf}: {extent}-byte access at offset {off} exceeds length {len}"
+            ),
+            Misaligned { at, buf, off, align } => {
+                write!(f, "[{at}] buf {buf}: offset {off} not {align}-byte aligned")
+            }
+            BadPatId { at, pat, table } => {
+                write!(f, "[{at}] PatId {pat} outside pattern table of {table}")
+            }
+            PatternMismatch { at, pat, chunk } => write!(
+                f,
+                "[{at}] PatId {pat} names a different pattern than chunk {chunk}'s layout"
+            ),
+            ChunkMismatch { at, a, b } => {
+                write!(f, "[{at}] operands from different chunks ({a} vs {b})")
+            }
+            OperandKind { at, what } => write!(f, "[{at}] {what}"),
+            UnmaskedTail { at, chunk } => write!(
+                f,
+                "[{at}] partial chunk {chunk}: input operand reaches a MAC unmasked"
+            ),
+            LaneOverflow { at, lane, bound } => write!(
+                f,
+                "[{at}] lane {lane} worst-case partial {bound} exceeds i16::MAX"
+            ),
+            AccOverflow { buf, off, bound } => write!(
+                f,
+                "buf {buf} cell {off}: worst-case sum {bound} exceeds i32::MAX"
+            ),
+            AccExactRange { bound, limit } => write!(
+                f,
+                "max accumulator bound {bound} exceeds the f32 exact-integer range {limit} \
+                 (bit-exact sharded reduction is no longer guaranteed)"
+            ),
+            NValidExceedsCapacity { at, n_valid, capacity } => write!(
+                f,
+                "[{at}] mul-acc n_valid {n_valid} exceeds pattern capacity {capacity}"
+            ),
+            Graph { node, detail } => write!(f, "node {node}: {detail}"),
+            ShardSlices { detail } => write!(f, "shard slices: {detail}"),
+            ShardKeyCollision { key } => write!(f, "duplicate shard key {key:?}"),
+            BudgetExceeded { key, bytes, budget } => write!(
+                f,
+                "shard {key}: bind bytes {bytes} exceed worker budget {budget}"
+            ),
+            PageGeometry { slot, detail } => write!(f, "kv slot {slot}: {detail}"),
+            BindBytes { op, declared, actual } => write!(
+                f,
+                "op {op}: declared bind_bytes {declared} != buffer-table total {actual}"
+            ),
+        }
+    }
+}
+
+/// Verdict for one kernel program: instruction-mix counts, the proven
+/// worst-case accumulator/lane bounds, and every violation found.
+#[derive(Debug, Clone)]
+pub struct KernelVerdict {
+    pub name: String,
+    pub instrs: u64,
+    pub macs: u64,
+    pub loads: u64,
+    pub stores: u64,
+    /// worst-case |i32 cell sum| over all output cells
+    pub max_acc_bound: i64,
+    /// worst-case |i16 lane partial| over all lanes
+    pub max_lane_bound: i64,
+    pub violations: Vec<Violation>,
+    /// violations beyond the recording cap (count only)
+    pub suppressed: usize,
+}
+
+impl KernelVerdict {
+    pub fn is_clean(&self) -> bool {
+        self.violations.is_empty() && self.suppressed == 0
+    }
+
+    /// Does the proven accumulator bound stay in the f32 exact range?
+    pub fn f32_exact(&self) -> bool {
+        self.max_acc_bound <= F32_EXACT_BOUND
+    }
+
+    pub fn num_violations(&self) -> usize {
+        self.violations.len() + self.suppressed
+    }
+}
+
+/// Verdict for one prepared model: a kernel verdict per verified
+/// program plus any graph/plan-level violations.
+#[derive(Debug, Clone, Default)]
+pub struct ModelVerdict {
+    pub name: String,
+    pub kernels: Vec<KernelVerdict>,
+    pub plan_violations: Vec<Violation>,
+}
+
+impl ModelVerdict {
+    pub fn is_clean(&self) -> bool {
+        self.plan_violations.is_empty() && self.kernels.iter().all(|k| k.is_clean())
+    }
+
+    pub fn instrs(&self) -> u64 {
+        self.kernels.iter().map(|k| k.instrs).sum()
+    }
+
+    pub fn max_acc_bound(&self) -> i64 {
+        self.kernels.iter().map(|k| k.max_acc_bound).max().unwrap_or(0)
+    }
+
+    pub fn num_violations(&self) -> usize {
+        self.plan_violations.len() + self.kernels.iter().map(|k| k.num_violations()).sum::<usize>()
+    }
+
+    /// All violations (plan first, then per-kernel), for reporting.
+    pub fn violations(&self) -> impl Iterator<Item = (&str, &Violation)> {
+        self.plan_violations
+            .iter()
+            .map(|v| ("plan", v))
+            .chain(self.kernels.iter().flat_map(|k| {
+                k.violations.iter().map(move |v| (k.name.as_str(), v))
+            }))
+    }
+}
+
+/// The `serve-bench --verify` deliverable: per-model verdicts over
+/// everything a serving configuration is about to run.
+#[derive(Debug, Clone, Default)]
+pub struct VerifyReport {
+    pub models: Vec<ModelVerdict>,
+}
+
+impl VerifyReport {
+    pub fn is_clean(&self) -> bool {
+        self.models.iter().all(|m| m.is_clean())
+    }
+
+    pub fn num_violations(&self) -> usize {
+        self.models.iter().map(|m| m.num_violations()).sum()
+    }
+}
+
+impl fmt::Display for VerifyReport {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "== verify report ==")?;
+        for m in &self.models {
+            writeln!(
+                f,
+                "model {:<28} kernels {:>3}  instrs {:>9}  max-acc {:>9}  ({} ≤ 2^24: {})  violations {}",
+                m.name,
+                m.kernels.len(),
+                m.instrs(),
+                m.max_acc_bound(),
+                "f32-exact",
+                if m.max_acc_bound() <= F32_EXACT_BOUND { "yes" } else { "NO" },
+                m.num_violations(),
+            )?;
+            for (where_, v) in m.violations() {
+                writeln!(f, "    [{where_}] {v}")?;
+            }
+            let suppressed: usize = m.kernels.iter().map(|k| k.suppressed).sum();
+            if suppressed > 0 {
+                writeln!(f, "    (+{suppressed} further violations suppressed)")?;
+            }
+        }
+        let verdict = if self.is_clean() { "CLEAN" } else { "VIOLATIONS FOUND" };
+        write!(f, "verdict: {verdict} ({} models, {} violations)", self.models.len(), self.num_violations())
+    }
+}
+
+/// Debug-build hook called at the end of
+/// `PreparedModel::prepare`/`prepare_decoder`: verify every cached
+/// program and panic with the full violation list on any defect, so a
+/// bad emitter change fails the *first* debug test that prepares a
+/// model — long before an output diverges.
+pub fn debug_verify(tag: &str, model: &crate::serve::PreparedModel) {
+    let verdict = verify_model(tag, model);
+    if !verdict.is_clean() {
+        let mut msg = format!("static verification failed in {tag}:\n");
+        for (where_, v) in verdict.violations() {
+            msg.push_str(&format!("  [{where_}] {v}\n"));
+        }
+        panic!("{msg}");
+    }
+}

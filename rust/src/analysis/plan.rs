@@ -1,0 +1,546 @@
+//! Structural verification of serving plans: prepared models, graph
+//! wiring, shard deployments, and KV page geometry.
+//!
+//! Where [`super::kernel`] proves properties of one instruction
+//! stream, this module proves the *composition* is coherent: every
+//! graph edge produces the shape its consumer expects, precision
+//! assignments cover their channel axes with supported levels, shard
+//! slices partition the split axis exactly, shard keys cannot collide
+//! in a worker's bind table, every shard's bind footprint fits the
+//! worker budget, and the paged-KV geometry is chunk-aligned with the
+//! V storage tier no wider than compute precision.
+
+use std::collections::HashSet;
+
+use super::{verify_program, ModelVerdict, Violation};
+use crate::codegen::{DataFormat, LayerKind};
+use crate::serve::deploy::{Deployment, GatherMode, ShardPlan};
+use crate::serve::engine::{PreparedModel, StepModel};
+use crate::serve::kvpool::{effective_v_prec, KvPoolCfg, SlotGeomSpec};
+use crate::sim::network::{Node, INPUT};
+use crate::smol::pattern_match::Assignment;
+use crate::simd::patterns::Pattern;
+
+/// Verify every program a prepared model caches (full graph and, for
+/// decoders, the step graph's representative per-length programs),
+/// plus each op's declared `bind_bytes` against its buffer table.
+pub fn verify_model(name: &str, model: &PreparedModel) -> ModelVerdict {
+    let mut verdict = ModelVerdict { name: name.to_string(), ..Default::default() };
+    verify_prepared_nodes(&mut verdict, model.nodes.iter().map(|n| n.op.as_ref()), "");
+    if let Some(step) = &model.step {
+        verify_prepared_nodes(&mut verdict, step.nodes.iter().map(|n| n.op.as_ref()), "step/");
+        verify_step_geometry(&mut verdict, step);
+    }
+    verdict
+}
+
+fn verify_prepared_nodes<'a>(
+    verdict: &mut ModelVerdict,
+    ops: impl Iterator<Item = &'a dyn crate::serve::PreparedOp>,
+    prefix: &str,
+) {
+    for op in ops {
+        let programs = op.verify_programs();
+        // ops with machine state must declare bind bytes equal to
+        // their program specs' buffer tables (one shared table per op)
+        if let Some(spec) = programs.first().map(|p| &p.spec) {
+            let actual: usize = spec.buf_len.iter().sum();
+            let declared = op.bind_bytes();
+            if declared != actual {
+                verdict.plan_violations.push(Violation::BindBytes {
+                    op: format!("{prefix}{}", spec.name),
+                    declared,
+                    actual,
+                });
+            }
+        }
+        for p in programs {
+            let mut k = verify_program(&p.spec, &p.program);
+            if !prefix.is_empty() {
+                k.name = format!("{prefix}{}", k.name);
+            }
+            verdict.kernels.push(k);
+        }
+    }
+}
+
+/// Step-model bookkeeping coherence: slot count matches the recorded
+/// geometries and every geometry is well-formed.
+fn verify_step_geometry(verdict: &mut ModelVerdict, step: &StepModel) {
+    if step.slots != step.slot_geoms.len() {
+        verdict.plan_violations.push(Violation::Graph {
+            node: 0,
+            detail: format!(
+                "step model records {} slots but {} slot geometries",
+                step.slots,
+                step.slot_geoms.len()
+            ),
+        });
+    }
+    for (slot, sg) in step.slot_geoms.iter().enumerate() {
+        if !matches!(sg.pos_prec, 1 | 2 | 4) {
+            verdict.plan_violations.push(Violation::PageGeometry {
+                slot,
+                detail: format!("position precision {} is not a SMOL level", sg.pos_prec),
+            });
+        }
+        if sg.heads == 0 || sg.dh == 0 || sg.nch_dh == 0 {
+            verdict.plan_violations.push(Violation::PageGeometry {
+                slot,
+                detail: format!(
+                    "degenerate geometry (heads {}, dh {}, nch_dh {})",
+                    sg.heads, sg.dh, sg.nch_dh
+                ),
+            });
+        }
+    }
+}
+
+/// Shape of a tensor flowing along a graph edge, `(h, w, c)`.
+type Shape = (usize, usize, usize);
+
+fn check_assignment(asg: &Assignment, axis: usize, what: &str) -> Result<(), String> {
+    if asg.num_channels() != axis {
+        return Err(format!(
+            "{what}: assignment covers {} channels, axis has {axis}",
+            asg.num_channels()
+        ));
+    }
+    if let Some(&p) = asg.precision.iter().find(|p| !matches!(p, 1 | 2 | 4)) {
+        return Err(format!("{what}: precision {p} is not a SMOL level"));
+    }
+    let valid_sum: u32 = asg.chunks.iter().zip(&asg.valid).map(|(_, &v)| v).sum();
+    if valid_sum as usize != axis {
+        return Err(format!(
+            "{what}: chunk valid counts sum to {valid_sum}, axis has {axis}"
+        ));
+    }
+    for (ci, (pat, &valid)) in asg.chunks.iter().zip(&asg.valid).enumerate() {
+        if !pat.is_valid() {
+            return Err(format!("{what}: chunk {ci} pattern is not a legal 128-bit packing"));
+        }
+        if valid > pat.capacity() {
+            return Err(format!(
+                "{what}: chunk {ci} claims {valid} valid elements, pattern capacity {}",
+                pat.capacity()
+            ));
+        }
+    }
+    Ok(())
+}
+
+/// Output shape of one node given its resolved input shapes — the
+/// static mirror of each `PreparedOp::run`'s shape asserts, returning
+/// a description instead of panicking mid-serve.
+fn node_shape(node: &Node, ins: &[Shape]) -> Result<Shape, String> {
+    match node {
+        Node::Conv { cfg, .. } => {
+            let p = &cfg.plan;
+            let (h, w, c) = ins[0];
+            if c != p.cin {
+                return Err(format!("{}: input has {c} channels, plan.cin {}", p.name, p.cin));
+            }
+            if (h, w) != (p.hin, p.win) {
+                return Err(format!(
+                    "{}: input is {h}x{w}, plan expects {}x{}",
+                    p.name, p.hin, p.win
+                ));
+            }
+            if p.fmt == DataFormat::Smol {
+                check_assignment(&p.asg, p.cin, &p.name)?;
+            }
+            let cout = match p.kind {
+                LayerKind::Dense => p.cout,
+                LayerKind::Depthwise => {
+                    if p.cout != p.cin {
+                        return Err(format!(
+                            "{}: depthwise cout {} != cin {}",
+                            p.name, p.cout, p.cin
+                        ));
+                    }
+                    p.cin
+                }
+            };
+            Ok((p.hout(), p.wout(), cout))
+        }
+        Node::Matmul { cfg, weights, .. } => {
+            let p = &cfg.plan;
+            let (h, w, c) = ins[0];
+            if (w, c) != (p.m, p.k) {
+                return Err(format!(
+                    "{}: input is ({w} rows, {c} contraction), plan is ({}, {})",
+                    p.name, p.m, p.k
+                ));
+            }
+            if weights.len() != p.k * p.n {
+                return Err(format!(
+                    "{}: {} weights for a {}x{} GEMM",
+                    p.name,
+                    weights.len(),
+                    p.k,
+                    p.n
+                ));
+            }
+            if p.fmt == DataFormat::Smol {
+                check_assignment(&p.asg, p.k, &p.name)?;
+            }
+            if cfg.causal && p.m != p.n {
+                return Err(format!("{}: causal GEMM needs m == n ({} vs {})", p.name, p.m, p.n));
+            }
+            Ok((h, p.m, p.n))
+        }
+        Node::MatmulDyn { cfg, transpose_b, .. } => {
+            let p = &cfg.plan;
+            let (ha, wa, ca) = ins[0];
+            let (hb, wb, cb) = ins[1];
+            if (wa, ca) != (p.m, p.k) {
+                return Err(format!(
+                    "{}: A is ({wa} rows, {ca} contraction), plan is ({}, {})",
+                    p.name, p.m, p.k
+                ));
+            }
+            if hb != ha {
+                return Err(format!("{}: head batches differ ({ha} vs {hb})", p.name));
+            }
+            let want = if *transpose_b { (p.n, p.k) } else { (p.k, p.n) };
+            if (wb, cb) != want {
+                return Err(format!(
+                    "{}: B is ({wb}, {cb}), plan expects {want:?} (transpose_b = {transpose_b})",
+                    p.name
+                ));
+            }
+            if p.fmt == DataFormat::Smol {
+                check_assignment(&p.asg, p.k, &p.name)?;
+            }
+            if cfg.causal && p.m != p.n {
+                return Err(format!("{}: causal GEMM needs m == n ({} vs {})", p.name, p.m, p.n));
+            }
+            Ok((ha, p.m, p.n))
+        }
+        Node::CachedAttn { cfg, .. } => {
+            for (i, &(h, w, c)) in ins.iter().enumerate() {
+                if (h, w, c) != (cfg.heads, 1, cfg.dh) {
+                    return Err(format!(
+                        "{}: step operand {i} is ({h}, {w}, {c}), needs ({}, 1, {})",
+                        cfg.name, cfg.heads, cfg.dh
+                    ));
+                }
+            }
+            if cfg.fmt != DataFormat::Smol {
+                return Err(format!("{}: cached decode needs SMOL operands", cfg.name));
+            }
+            if !matches!(cfg.pos_prec, 1 | 2 | 4) {
+                return Err(format!(
+                    "{}: position precision {} is not a SMOL level",
+                    cfg.name, cfg.pos_prec
+                ));
+            }
+            if cfg.max_positions == 0 {
+                return Err(format!("{}: max_positions must be positive", cfg.name));
+            }
+            check_assignment(&cfg.dh_asg, cfg.dh, &cfg.name)?;
+            Ok((cfg.heads, 1, cfg.dh))
+        }
+        Node::Softmax { .. } | Node::Gelu { .. } => Ok(ins[0]),
+        Node::LayerNorm { gamma, beta, .. } => {
+            let (h, w, c) = ins[0];
+            if gamma.len() != c || beta.len() != c {
+                return Err(format!(
+                    "layernorm affine has {}/{} params for {c} channels",
+                    gamma.len(),
+                    beta.len()
+                ));
+            }
+            Ok((h, w, c))
+        }
+        Node::TransposeHW { .. } => {
+            let (h, w, c) = ins[0];
+            Ok((w, h, c))
+        }
+        Node::SplitHeads { heads, .. } => {
+            let (h, w, c) = ins[0];
+            if h != 1 {
+                return Err(format!("split-heads input must be unsplit (h = 1), got h = {h}"));
+            }
+            if *heads == 0 || c % heads != 0 {
+                return Err(format!("{c} channels do not split into {heads} heads"));
+            }
+            Ok((*heads, w, c / heads))
+        }
+        Node::MergeHeads { .. } => {
+            let (h, w, c) = ins[0];
+            Ok((1, w, h * c))
+        }
+        Node::Add { .. } => {
+            if ins[0] != ins[1] {
+                return Err(format!("residual add over {:?} and {:?}", ins[0], ins[1]));
+            }
+            Ok(ins[0])
+        }
+        Node::ConcatC { .. } => {
+            let ((ha, wa, ca), (hb, wb, cb)) = (ins[0], ins[1]);
+            if (ha, wa) != (hb, wb) {
+                return Err(format!(
+                    "concat spatial mismatch ({ha}x{wa} vs {hb}x{wb})"
+                ));
+            }
+            Ok((ha, wa, ca + cb))
+        }
+        Node::SliceC { from, to, .. } => {
+            let (h, w, c) = ins[0];
+            if !(*from < *to && *to <= c) {
+                return Err(format!("slice [{from}, {to}) of {c} channels"));
+            }
+            Ok((h, w, to - from))
+        }
+        Node::ShuffleC { groups, .. } => {
+            let (h, w, c) = ins[0];
+            if *groups == 0 || c % groups != 0 {
+                return Err(format!("{c} channels do not shuffle in {groups} groups"));
+            }
+            Ok((h, w, c))
+        }
+        Node::Gap { .. } => Ok((1, 1, ins[0].2)),
+    }
+}
+
+/// Shape-propagate a graph from `input_shape`, collecting every edge
+/// or plan defect. A defective node's consumers are not re-reported
+/// (its output shape is treated as whatever they expect is unknown —
+/// propagation stops along that path).
+pub fn verify_graph(nodes: &[Node], input_shape: (usize, usize, usize)) -> Vec<Violation> {
+    let mut violations = Vec::new();
+    let mut shapes: Vec<Option<Shape>> = Vec::with_capacity(nodes.len());
+    for (idx, node) in nodes.iter().enumerate() {
+        let mut ins = Vec::new();
+        let mut wired = true;
+        for &src in &node.inputs() {
+            if src == INPUT {
+                ins.push(input_shape);
+            } else if src >= idx {
+                violations.push(Violation::Graph {
+                    node: idx,
+                    detail: format!(
+                        "edge from node {src} is not a forward reference (graphs execute in order)"
+                    ),
+                });
+                wired = false;
+            } else if let Some(s) = shapes[src] {
+                ins.push(s);
+            } else {
+                wired = false; // upstream defect already reported
+            }
+        }
+        if !wired {
+            shapes.push(None);
+            continue;
+        }
+        match node_shape(node, &ins) {
+            Ok(s) => shapes.push(Some(s)),
+            Err(detail) => {
+                violations.push(Violation::Graph { node: idx, detail });
+                shapes.push(None);
+            }
+        }
+    }
+    violations
+}
+
+/// `cout`/`n` width of the node a shard plan may split.
+fn split_width(node: &Node) -> Option<usize> {
+    match node {
+        Node::Conv { cfg, .. } if cfg.plan.kind == LayerKind::Dense => Some(cfg.plan.cout),
+        Node::Matmul { cfg, .. } => Some(cfg.plan.n),
+        _ => None,
+    }
+}
+
+/// Contraction width of a reduce consumer.
+fn contraction_width(node: &Node) -> Option<usize> {
+    match node {
+        Node::Conv { cfg, .. } if cfg.plan.kind == LayerKind::Dense => Some(cfg.plan.cin),
+        Node::Matmul { cfg, .. } => Some(cfg.plan.k),
+        _ => None,
+    }
+}
+
+/// Verify a deployment against the graph it was built from: shard
+/// slices partition the split axis exactly, keys are collision-free,
+/// every shard's exact bind footprint fits `budget`, and each shard's
+/// prepared programs verify — returns the structural verdict (named
+/// `deploy/<key>`) followed by one kernel verdict per shard.
+pub fn verify_deployment(
+    dep: &Deployment,
+    nodes: &[Node],
+    budget: Option<usize>,
+) -> Vec<ModelVerdict> {
+    let mut structural =
+        ModelVerdict { name: format!("deploy/{}", dep.key()), ..Default::default() };
+    let v = &mut structural.plan_violations;
+
+    match dep.plan() {
+        ShardPlan::Whole => {
+            if dep.handles().len() != 1 {
+                v.push(Violation::ShardSlices {
+                    detail: format!("whole plan with {} handles", dep.handles().len()),
+                });
+            }
+        }
+        ShardPlan::Sharded { split_node, consumer_node, slices, gather } => {
+            let width = match nodes.get(*split_node).and_then(split_width) {
+                Some(w) => w,
+                None => {
+                    v.push(Violation::ShardSlices {
+                        detail: format!("split node {split_node} is not a sliceable dense kernel"),
+                    });
+                    0
+                }
+            };
+            if dep.handles().len() != slices.len() {
+                v.push(Violation::ShardSlices {
+                    detail: format!(
+                        "{} slices but {} shard handles",
+                        slices.len(),
+                        dep.handles().len()
+                    ),
+                });
+            }
+            // exact partition: contiguous, gap-free, covering [0, width)
+            let mut pos = 0usize;
+            for (i, &(s, e)) in slices.iter().enumerate() {
+                if s != pos {
+                    v.push(Violation::ShardSlices {
+                        detail: format!(
+                            "slice {i} starts at {s}, previous ended at {pos} (gap or overlap)"
+                        ),
+                    });
+                }
+                if e <= s {
+                    v.push(Violation::ShardSlices {
+                        detail: format!("slice {i} is empty or inverted ({s}..{e})"),
+                    });
+                }
+                pos = e;
+            }
+            if width > 0 && pos != width {
+                v.push(Violation::ShardSlices {
+                    detail: format!("slices cover [0, {pos}), split axis is [0, {width})"),
+                });
+            }
+            match gather {
+                GatherMode::Reduce => match consumer_node.and_then(|c| nodes.get(c)) {
+                    Some(c) => {
+                        if width > 0 && contraction_width(c) != Some(width) {
+                            v.push(Violation::ShardSlices {
+                                detail: format!(
+                                    "reduce consumer contracts {:?} channels, split axis has {width}",
+                                    contraction_width(c)
+                                ),
+                            });
+                        }
+                    }
+                    None => v.push(Violation::ShardSlices {
+                        detail: "reduce gather without a valid consumer node".into(),
+                    }),
+                },
+                GatherMode::Concat => {
+                    if consumer_node.is_some() {
+                        v.push(Violation::ShardSlices {
+                            detail: "concat gather must not name a consumer node".into(),
+                        });
+                    }
+                }
+            }
+        }
+    }
+
+    // shard keys must be distinct (per-worker bind tables key by them)
+    let mut seen = HashSet::new();
+    for h in dep.handles() {
+        if !seen.insert(h.key.to_string()) {
+            structural
+                .plan_violations
+                .push(Violation::ShardKeyCollision { key: h.key.to_string() });
+        }
+        if let Some(budget) = budget {
+            let bytes = h.prepared.bind_bytes();
+            if bytes > budget {
+                structural.plan_violations.push(Violation::BudgetExceeded {
+                    key: h.key.to_string(),
+                    bytes,
+                    budget,
+                });
+            }
+        }
+    }
+
+    let mut out = vec![structural];
+    for h in dep.handles() {
+        out.push(verify_model(&h.key.to_string(), &h.prepared));
+    }
+    out
+}
+
+/// Verify a paged-KV configuration against a model's slot geometries:
+/// page positions are chunk-aligned at each slot's effective V tier,
+/// never smaller than the configured request, and the V storage
+/// precision is a SMOL level no wider than compute.
+pub fn verify_kv(cfg: &KvPoolCfg, slot_geoms: &[SlotGeomSpec]) -> Vec<Violation> {
+    let mut violations = Vec::new();
+    if cfg.page_positions == 0 {
+        violations.push(Violation::PageGeometry {
+            slot: usize::MAX,
+            detail: "page_positions must be positive".into(),
+        });
+    }
+    if let Some(b) = cfg.v_bits {
+        if !matches!(b, 1 | 2 | 4) {
+            violations.push(Violation::PageGeometry {
+                slot: usize::MAX,
+                detail: format!("--v-bits {b} is not a SMOL level"),
+            });
+        }
+    }
+    for (slot, sg) in slot_geoms.iter().enumerate() {
+        let geom = sg.page_geom(&cfg.session_cfg());
+        // independently re-derive the tier: configured bits clamped to
+        // compute precision — the v_bits <= pos_prec contract
+        let want_v = effective_v_prec(sg.pos_prec, cfg.v_bits);
+        if geom.v_prec != want_v || geom.v_prec > sg.pos_prec {
+            violations.push(Violation::PageGeometry {
+                slot,
+                detail: format!(
+                    "V tier {} (compute {}, configured {:?})",
+                    geom.v_prec, sg.pos_prec, cfg.v_bits
+                ),
+            });
+            continue;
+        }
+        let cap_v = Pattern::uniform(geom.v_prec).capacity() as usize;
+        if geom.page_positions % cap_v != 0 {
+            violations.push(Violation::PageGeometry {
+                slot,
+                detail: format!(
+                    "page of {} positions is not a multiple of the {cap_v}-position V chunk",
+                    geom.page_positions
+                ),
+            });
+        }
+        if geom.page_positions < cfg.page_positions {
+            violations.push(Violation::PageGeometry {
+                slot,
+                detail: format!(
+                    "page of {} positions below the configured {}",
+                    geom.page_positions, cfg.page_positions
+                ),
+            });
+        }
+        if geom.k_bytes() == 0 || geom.page_bytes() == 0 {
+            violations.push(Violation::PageGeometry {
+                slot,
+                detail: "degenerate page (zero bytes)".into(),
+            });
+        }
+    }
+    violations
+}

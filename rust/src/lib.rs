@@ -14,6 +14,7 @@
 //! - L2/L1 (python/compile, build-time only): JAX model + Pallas kernels,
 //!   lowered once to `artifacts/*.hlo.txt`; loaded here by [`runtime`].
 
+pub mod analysis;
 pub mod codegen;
 pub mod coordinator;
 pub mod data;

@@ -65,8 +65,9 @@ fn train_cfg(args: &Args) -> TrainCfg {
     }
 }
 
-/// Shared serve-bench output sinks: `--json` prints the schema-4 report
-/// to stdout, `--json-out FILE` writes the same JSON to disk, and
+/// Shared serve-bench output sinks: `--json` prints the versioned
+/// report to stdout (see `serve::SERVE_REPORT_SCHEMA` for the current
+/// schema number), `--json-out FILE` writes the same JSON to disk, and
 /// `--trace FILE` writes the Chrome trace-event file (load it in
 /// Perfetto or `chrome://tracing`).
 fn emit_serve_outputs(
@@ -94,6 +95,42 @@ fn attach_faults(report: &mut soniq::serve::ServeReport, server: &soniq::serve::
         report.lost = f.lost.clone();
         report.partial = f.partial.clone();
     }
+}
+
+/// `serve-bench --verify`: print the static-analysis report and refuse
+/// to serve on any violation. Debug builds verify unconditionally
+/// inside `prepare()`; this flag extends the same proof to release
+/// benches (see `soniq::analysis`).
+fn gate_on_verify(report: soniq::analysis::VerifyReport) -> Result<()> {
+    println!("{report}");
+    if !report.is_clean() {
+        bail!(
+            "--verify: refusing to serve with {} violations",
+            report.num_violations()
+        );
+    }
+    Ok(())
+}
+
+/// Single-model verify report: shape-propagate the one-shot (and, for
+/// decoders, step) graphs, verify every prepared kernel program, and
+/// check KV page geometry when a paged pool is configured.
+fn single_model_report(
+    key: &soniq::serve::ModelKey,
+    net: &soniq::coordinator::SyntheticNet,
+    prepared: &soniq::serve::PreparedModel,
+    kv: Option<&soniq::serve::KvPoolCfg>,
+) -> soniq::analysis::VerifyReport {
+    use soniq::analysis;
+    let mut m = analysis::verify_model(&key.to_string(), prepared);
+    m.plan_violations.extend(analysis::verify_graph(&net.nodes, net.input_shape));
+    if let (Some(step_nodes), Some(shape)) = (net.step_nodes.as_deref(), net.step_input_shape) {
+        m.plan_violations.extend(analysis::verify_graph(step_nodes, shape));
+    }
+    if let (Some(kc), Some(step)) = (kv, prepared.step.as_ref()) {
+        m.plan_violations.extend(analysis::verify_kv(kc, &step.slot_geoms));
+    }
+    analysis::VerifyReport { models: vec![m] }
 }
 
 fn main() -> Result<()> {
@@ -187,6 +224,7 @@ fn main() -> Result<()> {
             let shards = args.get_usize("shards", 0); // 0/1 = no explicit split
             let worker_budget = args.get_usize("worker-budget", 0); // bytes; 0 = unlimited
             let open_loop = args.has_flag("open-loop");
+            let verify = args.has_flag("verify");
             let queue_depth = args.get_usize("queue-depth", 0); // 0 = unbounded
 
             // paged KV-cache: any of these flags switches sessions from
@@ -281,10 +319,15 @@ fn main() -> Result<()> {
                     (0..k).map(|mi| n_requests / k + usize::from(mi < rem)).collect();
 
                 let mut nets = Vec::new(); // (key, net, inputs)
+                let mut graph_violations = Vec::new(); // per model, for --verify
                 for (mi, name) in names.iter().enumerate() {
                     let net = synthetic_network(name, design, seed)?;
                     let key = serve::ModelKey::new(name.clone(), design.label());
                     let inputs = synthetic_inputs(&net, counts[mi], seed + 1);
+                    if verify {
+                        graph_violations
+                            .push(soniq::analysis::verify_graph(&net.nodes, net.input_shape));
+                    }
                     nets.push((key, net, inputs));
                 }
                 // time only preparation (codegen + packing), matching
@@ -302,6 +345,15 @@ fn main() -> Result<()> {
                     "prepared {} models in {prepare:.2?} (registry caches them for reuse)",
                     fleet.len()
                 );
+                if verify {
+                    let mut report = soniq::analysis::VerifyReport::default();
+                    for ((key, prepared, _), gv) in fleet.iter().zip(graph_violations) {
+                        let mut m = soniq::analysis::verify_model(&key.to_string(), prepared);
+                        m.plan_violations.extend(gv);
+                        report.models.push(m);
+                    }
+                    gate_on_verify(report)?;
+                }
 
                 // dedicated single-model engines: the bit-exactness oracle
                 let dedicated: Vec<Vec<Vec<f32>>> = fleet
@@ -456,6 +508,9 @@ fn main() -> Result<()> {
                         None => ", unbounded queue".to_string(),
                     }
                 );
+                if verify {
+                    gate_on_verify(single_model_report(&key, &net, &prepared, cfg.kv.as_ref()))?;
+                }
 
                 let mut points: Vec<serve::OpenLoopPoint> = Vec::new();
                 let mut last = None;
@@ -570,6 +625,14 @@ fn main() -> Result<()> {
                 )?);
                 let prepare = t1.elapsed();
                 println!("deployment plan: {}", dep.describe());
+                if verify {
+                    let mut models =
+                        soniq::analysis::verify_deployment(&dep, &net.nodes, cfg.worker_budget);
+                    models[0]
+                        .plan_violations
+                        .extend(soniq::analysis::verify_graph(&net.nodes, net.input_shape));
+                    gate_on_verify(soniq::analysis::VerifyReport { models })?;
+                }
                 if worker_budget > 0 && dep.num_shards() > workers {
                     bail!(
                         "{} shards need {} workers under --worker-budget (each shard \
@@ -653,6 +716,9 @@ fn main() -> Result<()> {
                      ({} kernels; sessions cache packed K/V per step)",
                     prepared.num_layers()
                 );
+                if verify {
+                    gate_on_verify(single_model_report(&key, &net, &prepared, cfg.kv.as_ref()))?;
+                }
 
                 println!(
                     "cached decode ({n_sessions} sessions x {steps} steps, \
@@ -750,6 +816,9 @@ fn main() -> Result<()> {
             if let Some(bpp) = synthetic_bpp(&net) {
                 println!("  weight size: {bpp:.2} bits/param (incl. pattern metadata)");
             }
+            if verify {
+                gate_on_verify(single_model_report(&key, &net, &prepared, cfg.kv.as_ref()))?;
+            }
 
             println!(
                 "serving engine ({workers} workers, max batch {max_batch}, \
@@ -792,13 +861,14 @@ fn main() -> Result<()> {
             );
             eprintln!(
                 "       serve-bench [--model M | --models A,B,C] [--design D] \
-                 [--requests N] [--workers W] [--max-batch B] [--max-delay-ms MS] \
-                 [--resident-models R] [--shards S] [--worker-budget BYTES] \
-                 [--decode --steps N --sessions S] [--queue-depth N] \
+                 [--requests N] [--seed N] [--workers W] [--max-batch B] \
+                 [--max-delay-ms MS] [--resident-models R] [--shards S] \
+                 [--worker-budget BYTES] [--decode --steps N --sessions S] \
+                 [--queue-depth N] [--legacy-requests N] \
                  [--kv-pages P --kv-policy refuse|evict|spill \
                  --page-positions N --v-bits B] \
                  [--open-loop --rate R1,R2 [--burst] [--deadline-ms MS]] \
-                 [--json] [--json-out FILE] [--trace FILE]"
+                 [--verify] [--json] [--json-out FILE] [--trace FILE]"
             );
             eprintln!("       see README.md for the full CLI");
         }

@@ -98,6 +98,15 @@ pub trait PreparedOp: std::fmt::Debug + Send + Sync {
     /// Simulated-cost accounting accumulates on `ctx.m`; the graph
     /// runner collects it per node via `take_stats`.
     fn run(&self, ctx: &mut ExecCtx<'_>, inputs: &[&Tensor]) -> Tensor;
+
+    /// Programs the static verifier ([`crate::analysis`]) should
+    /// check, each paired with the buffer/pattern/chunk spec it runs
+    /// under. Ops that cache a kernel return it; ops that emit per
+    /// request return representative programs covering their emission
+    /// space; stateless epilogue/layout ops return nothing.
+    fn verify_programs(&self) -> Vec<crate::analysis::ProgramToVerify<'_>> {
+        Vec::new()
+    }
 }
 
 /// A prepared kernel bound to concrete buffers of one [`Machine`]:
@@ -390,6 +399,24 @@ impl PreparedOp for PreparedConv {
         self.act_bytes + self.packed_weights.len() + self.out_bytes + self.packed_masks.len()
     }
 
+    /// The cached kernel with the exact buffer extents `bind`
+    /// allocates. Streaming-mode ops return nothing here — paper-scale
+    /// layers verify by streaming the emitter into the verifier
+    /// directly (it is a [`codegen::Sink`]) instead of materializing.
+    fn verify_programs(&self) -> Vec<crate::analysis::ProgramToVerify<'_>> {
+        let Some(program) = &self.program else { return Vec::new() };
+        let spec = crate::analysis::KernelSpec::for_layer(&self.plan).with_buffers(
+            self.act_bytes,
+            self.packed_weights.len(),
+            self.out_bytes,
+            self.packed_masks.len(),
+        );
+        vec![crate::analysis::ProgramToVerify {
+            spec,
+            program: std::borrow::Cow::Borrowed(program),
+        }]
+    }
+
     fn run(&self, ctx: &mut ExecCtx<'_>, inputs: &[&Tensor]) -> Tensor {
         let x = inputs[0];
         let plan = &self.plan;
@@ -532,6 +559,23 @@ impl PreparedOp for PreparedMatmul {
 
     fn bind_bytes(&self) -> usize {
         self.act_bytes + self.weight_bytes + self.out_bytes + self.packed_masks.len()
+    }
+
+    /// The cached GEMM kernel (static and dynamic operands replay the
+    /// same instruction stream) under the exact bind-time extents.
+    /// The weights buffer is sized `cout * nch * 16` rather than the
+    /// 1x1-dense-plan minimum, so the spec carries the real extent.
+    fn verify_programs(&self) -> Vec<crate::analysis::ProgramToVerify<'_>> {
+        let spec = crate::analysis::KernelSpec::for_layer(&self.plan).with_buffers(
+            self.act_bytes,
+            self.weight_bytes,
+            self.out_bytes,
+            self.packed_masks.len(),
+        );
+        vec![crate::analysis::ProgramToVerify {
+            spec,
+            program: std::borrow::Cow::Borrowed(&self.program),
+        }]
     }
 
     /// Execute the GEMM, batched over the `h` (head) axis of the first
@@ -942,7 +986,13 @@ impl PreparedModel {
     /// Prepare every layer of a graph exactly once.
     pub fn prepare(nodes: &[Node]) -> PreparedModel {
         let (nodes, _) = prepare_nodes(nodes);
-        PreparedModel { nodes, step: None }
+        let model = PreparedModel { nodes, step: None };
+        // debug builds statically verify every cached kernel at
+        // prepare time, so an emitter defect fails the first test that
+        // prepares a model (release serving verifies on --verify only)
+        #[cfg(debug_assertions)]
+        crate::analysis::debug_verify("prepare", &model);
+        model
     }
 
     /// Prepare a decoder: the full (one-shot / prefill) graph plus its
@@ -1000,7 +1050,7 @@ impl PreparedModel {
                 _ => None,
             })
             .collect();
-        PreparedModel {
+        let model = PreparedModel {
             nodes,
             step: Some(StepModel {
                 nodes: step_prepared,
@@ -1009,7 +1059,10 @@ impl PreparedModel {
                 kv_bytes_per_position,
                 slot_geoms,
             }),
-        }
+        };
+        #[cfg(debug_assertions)]
+        crate::analysis::debug_verify("prepare_decoder", &model);
+        model
     }
 
     /// Number of prepared kernels (conv/FC layers, GEMMs and cached

@@ -36,8 +36,10 @@
 //! clamped per slot to the compute precision) — a capacity/accuracy
 //! knob; decode is bit-identical only at compute precision.
 
+use crate::analysis::{KernelSpec, ProgramToVerify};
 use crate::codegen::gemm::{emit_gemm, GemmPlan};
 use crate::codegen::{self, pack, DataFormat, LayerBufs};
+use crate::simd::isa::BufId;
 use crate::serve::engine::{BoundKernel, ExecCtx, PreparedOp};
 use crate::serve::kvpool::{effective_v_prec, KvPage, KvPool, PageGeom, SessionKvCfg};
 use crate::sim::eltwise;
@@ -270,6 +272,31 @@ pub(crate) fn run_gemm_row(
     m.charge_bulk(out.len() as u64, (out.len() * 4) as u64);
 }
 
+/// Emit one row GEMM's kernel for the static verifier, exactly as
+/// [`run_gemm_row`] stream-emits it at request time (same plan, same
+/// pattern registration, symbolic buffer ids), with the spec's buffer
+/// extents overridden to the op's shared bind-time allocation.
+fn rep_row_program(
+    plan: &GemmPlan,
+    (input, weights, out, masks): (usize, usize, usize, usize),
+) -> ProgramToVerify<'static> {
+    let symbolic = LayerBufs {
+        input: BufId(0),
+        weights: BufId(1),
+        out: BufId(2),
+        masks: BufId(3),
+    };
+    let lp = plan.layer_plan();
+    let mut patterns = Vec::new();
+    let base = codegen::register_patterns(&lp, &mut patterns);
+    let mut program = Vec::new();
+    emit_gemm(plan, &symbolic, base, &mut program);
+    ProgramToVerify {
+        spec: KernelSpec::for_gemm(plan).with_buffers(input, weights, out, masks),
+        program: std::borrow::Cow::Owned(program),
+    }
+}
+
 /// Fused KV-cached decode attention (one step): append this position's
 /// K/V to the session's packed caches, score the new query row against
 /// the cached prefix, softmax, and contract the probabilities with the
@@ -354,6 +381,46 @@ impl PreparedOp for CachedAttnOp {
     fn bind_bytes(&self) -> usize {
         let (input, weights, out, masks) = self.buf_bytes();
         input + weights + out + masks
+    }
+
+    /// Representative per-length row programs covering this op's whole
+    /// emission space against its shared `max_positions`-sized
+    /// buffers: the score GEMM at prefix lengths 1 and `max_positions`
+    /// (the dh-axis assignment is fixed, so the kernels at every other
+    /// length are structural prefixes of the longest), and the context
+    /// GEMM at both lengths for every V storage tier a session config
+    /// could select (`v_bits` clamps to `pos_prec`, so the tiers are
+    /// exactly the SMOL levels <= compute precision).
+    fn verify_programs(&self) -> Vec<ProgramToVerify<'_>> {
+        let bufs = self.buf_bytes();
+        let mut out = Vec::new();
+        let lens = if self.max_positions > 1 { vec![1, self.max_positions] } else { vec![1] };
+        for &len in &lens {
+            let qk = GemmPlan {
+                name: format!("{}@qk/len{len}", self.name),
+                m: 1,
+                k: self.dh,
+                n: len,
+                asg: self.dh_asg.clone(),
+                fmt: self.fmt,
+            };
+            out.push(rep_row_program(&qk, bufs));
+            for v_prec in [1u8, 2, 4] {
+                if v_prec > self.pos_prec {
+                    continue;
+                }
+                let av = GemmPlan {
+                    name: format!("{}@av/len{len}/v{v_prec}", self.name),
+                    m: 1,
+                    k: len,
+                    n: self.dh,
+                    asg: Assignment::uniform(len, v_prec),
+                    fmt: self.fmt,
+                };
+                out.push(rep_row_program(&av, bufs));
+            }
+        }
+        out
     }
 
     fn run(&self, ctx: &mut ExecCtx<'_>, inputs: &[&Tensor]) -> Tensor {
@@ -646,6 +713,33 @@ impl PreparedOp for CausalAvOp {
     fn bind_bytes(&self) -> usize {
         let (input, weights, out, masks) = self.buf_bytes();
         input + weights + out + masks
+    }
+
+    /// Per-row programs of the one-shot causal A·V. Short sequences
+    /// verify every row's kernel; longer ones sample the structural
+    /// corners (first rows, a middle row, the tail-partial and full
+    /// rows — each contraction length is an independent emission).
+    fn verify_programs(&self) -> Vec<ProgramToVerify<'_>> {
+        let bufs = self.buf_bytes();
+        let mut lens: Vec<usize> = if self.s <= 16 {
+            (1..=self.s).collect()
+        } else {
+            vec![1, 2, self.s / 2, self.s - 1, self.s]
+        };
+        lens.dedup();
+        lens.iter()
+            .map(|&len| {
+                let plan = GemmPlan {
+                    name: format!("{}@row/len{len}", self.name),
+                    m: 1,
+                    k: len,
+                    n: self.dh,
+                    asg: Assignment::uniform(len, self.pos_prec),
+                    fmt: self.fmt,
+                };
+                rep_row_program(&plan, bufs)
+            })
+            .collect()
     }
 
     fn run(&self, ctx: &mut ExecCtx<'_>, inputs: &[&Tensor]) -> Tensor {

@@ -1,0 +1,590 @@
+//! Static-analysis tests: the abstract interpreter must accept every
+//! program the real emitters produce (seeded acceptance sweeps over
+//! conv/GEMM shape space), reject every mutation class with a
+//! descriptive violation, and prove the paper's workloads stay inside
+//! the f32 exact-integer accumulator range end to end.
+
+use soniq::analysis::{
+    self, elem_prod_max, lane_mac_max, verify_program, KernelSpec, KernelVerifier, ModelVerdict,
+    VerifyReport, Violation, F32_EXACT_BOUND,
+};
+use soniq::codegen::gemm::{emit_gemm, emit_gemm_causal, GemmPlan};
+use soniq::codegen::{self, DataFormat, LayerBufs, LayerKind, LayerPlan};
+use soniq::coordinator::{paperscale, synthetic_network, DesignPoint};
+use soniq::serve::{DeployConfig, Deployment, KvPoolCfg, ModelKey};
+use soniq::simd::isa::{Addr, BufId, Instr};
+use soniq::simd::patterns::{design_subset, Pattern};
+use soniq::smol::pattern_match::{pattern_match, Assignment};
+use soniq::util::prop::check;
+use soniq::util::rng::Rng;
+
+/// The symbolic buffer convention every spec/emitter pair shares:
+/// 0 = input, 1 = weights, 2 = out, 3 = masks.
+fn bufs() -> LayerBufs {
+    LayerBufs { input: BufId(0), weights: BufId(1), out: BufId(2), masks: BufId(3) }
+}
+
+fn a(buf: u16, off: u32) -> Addr {
+    Addr { buf: BufId(buf), off }
+}
+
+/// The same assignment mix the synthetic nets draw from: uniform SMOL
+/// levels plus pattern-matched mixed-precision under P4/P8 subsets.
+fn rand_assignment(rng: &mut Rng, cin: usize) -> Assignment {
+    match rng.below(5) {
+        0 => Assignment::uniform(cin, 1),
+        1 => Assignment::uniform(cin, 2),
+        2 => Assignment::uniform(cin, 4),
+        d => {
+            let s: Vec<f32> = (0..cin).map(|_| rng.range(-3.0, 6.0)).collect();
+            let np = if d == 3 { 4 } else { 8 };
+            pattern_match(&s, &design_subset(np))
+        }
+    }
+}
+
+fn rand_format(rng: &mut Rng) -> DataFormat {
+    match rng.below(6) {
+        0 => DataFormat::Int8,
+        1 => DataFormat::Fp32,
+        _ => DataFormat::Smol,
+    }
+}
+
+fn smol_gemm(m: usize, k: usize, n: usize, asg: Assignment) -> (KernelSpec, Vec<Instr>) {
+    let plan = GemmPlan { name: "mutant".into(), m, k, n, asg, fmt: DataFormat::Smol };
+    let spec = KernelSpec::for_gemm(&plan);
+    let mut program = Vec::new();
+    emit_gemm(&plan, &bufs(), 0, &mut program);
+    (spec, program)
+}
+
+fn violations_str(m: &ModelVerdict) -> String {
+    m.violations().map(|(w, v)| format!("[{w}] {v}")).collect::<Vec<_>>().join("; ")
+}
+
+#[test]
+fn worst_case_bound_constants() {
+    // the 2^-6-grid element products and the lane_sums_fit_16_6 values
+    assert_eq!(elem_prod_max(4), 225);
+    assert_eq!(elem_prod_max(2), 144);
+    assert_eq!(elem_prod_max(1), 64);
+    assert_eq!(lane_mac_max(4), 900);
+    assert_eq!(lane_mac_max(2), 1152);
+    assert_eq!(lane_mac_max(1), 1024);
+}
+
+// ---------------------------------------------------------------------
+// Acceptance: the verifier proves every emitter-produced program clean.
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_conv_emitter_programs_verify_clean() {
+    check("analysis-conv-sweep", 300, |rng| {
+        let cin = 1 + rng.below(64) as usize;
+        let depthwise = rng.below(4) == 0;
+        let cout = if depthwise { cin } else { 1 + rng.below(8) as usize };
+        let kk = *rng.choice(&[1usize, 3]);
+        let plan = LayerPlan {
+            name: "conv-sweep".into(),
+            kind: if depthwise { LayerKind::Depthwise } else { LayerKind::Dense },
+            cin,
+            cout,
+            kh: kk,
+            kw: kk,
+            stride: *rng.choice(&[1usize, 2]),
+            hin: 1 + rng.below(5) as usize,
+            win: 1 + rng.below(5) as usize,
+            asg: rand_assignment(rng, cin),
+            fmt: rand_format(rng),
+        };
+        let spec = KernelSpec::for_layer(&plan);
+        let mut program = Vec::new();
+        codegen::emit_layer(&plan, &bufs(), 0, &mut program);
+        let verdict = verify_program(&spec, &program);
+        if !verdict.is_clean() {
+            return Err(format!(
+                "cin={cin} cout={cout} k={kk} {:?} {:?}: {:?}",
+                plan.kind,
+                plan.fmt,
+                verdict.violations.first()
+            ));
+        }
+        if verdict.instrs != program.len() as u64 {
+            return Err("verifier did not walk the whole program".into());
+        }
+        // at these shapes (<= 9 taps, <= 8 chunks) every SMOL kernel
+        // must stay far inside the exact-integer range
+        if plan.fmt == DataFormat::Smol && !verdict.f32_exact() {
+            return Err(format!("bound {} escapes 2^24", verdict.max_acc_bound));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_gemm_emitter_programs_verify_clean() {
+    check("analysis-gemm-sweep", 300, |rng| {
+        let k = 1 + rng.below(64) as usize;
+        let m = 1 + rng.below(12) as usize;
+        let causal = rng.below(3) == 0;
+        let n = if causal { m } else { 1 + rng.below(12) as usize };
+        let plan = GemmPlan {
+            name: "gemm-sweep".into(),
+            m,
+            k,
+            n,
+            asg: rand_assignment(rng, k),
+            fmt: rand_format(rng),
+        };
+        let spec = KernelSpec::for_gemm(&plan);
+        let mut program = Vec::new();
+        if causal {
+            emit_gemm_causal(&plan, &bufs(), 0, &mut program);
+        } else {
+            emit_gemm(&plan, &bufs(), 0, &mut program);
+        }
+        let verdict = verify_program(&spec, &program);
+        if !verdict.is_clean() {
+            return Err(format!(
+                "m={m} k={k} n={n} causal={causal} {:?}: {:?}",
+                plan.fmt,
+                verdict.violations.first()
+            ));
+        }
+        if plan.fmt == DataFormat::Smol && !verdict.f32_exact() {
+            return Err(format!("bound {} escapes 2^24", verdict.max_acc_bound));
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------
+// Mutations: each corruption class must be caught and named.
+// ---------------------------------------------------------------------
+
+#[test]
+fn mutated_buf_id_is_rejected() {
+    let (spec, mut program) = smol_gemm(2, 64, 2, Assignment::uniform(64, 2));
+    assert!(verify_program(&spec, &program).is_clean());
+    for i in program.iter_mut() {
+        if let Instr::LdQ { addr, .. } = i {
+            if addr.buf.0 == 1 {
+                addr.buf = BufId(9);
+            }
+        }
+    }
+    let verdict = verify_program(&spec, &program);
+    assert!(
+        verdict.violations.iter().any(|v| matches!(v, Violation::BadBuf { buf: 9, .. })),
+        "{:?}",
+        verdict.violations
+    );
+}
+
+#[test]
+fn corrupted_offset_is_rejected() {
+    // push one load 1 MiB past the buffer: still 16-aligned and (with a
+    // single chunk) provenance-preserving, so the *only* new defect is
+    // the bounds escape
+    let (spec, clean) = smol_gemm(2, 64, 2, Assignment::uniform(64, 2));
+    let mut program = clean.clone();
+    for i in program.iter_mut() {
+        if let Instr::LdQ { addr, .. } = i {
+            addr.off += 1 << 20;
+            break;
+        }
+    }
+    let verdict = verify_program(&spec, &program);
+    assert!(
+        verdict.violations.iter().any(|v| matches!(v, Violation::OutOfBounds { .. })),
+        "{:?}",
+        verdict.violations
+    );
+    assert!(!verdict.violations.iter().any(|v| matches!(v, Violation::Misaligned { .. })));
+
+    // nudge the first (offset-0) load by 4 bytes: alignment breaks, but
+    // the 20-byte reach stays inside the 32-byte operand buffer
+    let mut program = clean;
+    for i in program.iter_mut() {
+        if let Instr::LdQ { addr, .. } = i {
+            assert_eq!(addr.off, 0);
+            addr.off = 4;
+            break;
+        }
+    }
+    let verdict = verify_program(&spec, &program);
+    assert!(
+        verdict.violations.iter().any(|v| matches!(v, Violation::Misaligned { align: 16, .. })),
+        "{:?}",
+        verdict.violations
+    );
+    assert!(!verdict.violations.iter().any(|v| matches!(v, Violation::OutOfBounds { .. })));
+}
+
+#[test]
+fn swapped_pattern_id_is_rejected() {
+    // two full chunks with *different* patterns, so a PatId swap is a
+    // real layout mismatch rather than a harmless relabeling
+    let asg = Assignment {
+        chunks: vec![Pattern::uniform(4), Pattern::uniform(2)],
+        valid: vec![32, 64],
+        precision: [vec![4u8; 32], vec![2u8; 64]].concat(),
+        order: (0..96).collect(),
+    };
+    let (spec, clean) = smol_gemm(1, 96, 2, asg);
+    assert!(verify_program(&spec, &clean).is_clean());
+
+    let mut program = clean.clone();
+    for i in program.iter_mut() {
+        if let Instr::VmacP { pat, .. } = i {
+            *pat = 1 - *pat;
+        }
+    }
+    let verdict = verify_program(&spec, &program);
+    assert!(
+        verdict.violations.iter().any(|v| matches!(v, Violation::PatternMismatch { .. })),
+        "{:?}",
+        verdict.violations
+    );
+
+    let mut program = clean;
+    for i in program.iter_mut() {
+        if let Instr::VmacP { pat, .. } = i {
+            *pat = 77;
+        }
+    }
+    let verdict = verify_program(&spec, &program);
+    assert!(
+        verdict.violations.iter().any(|v| matches!(v, Violation::BadPatId { pat: 77, table: 2, .. })),
+        "{:?}",
+        verdict.violations
+    );
+}
+
+#[test]
+fn widened_contraction_escapes_exact_range() {
+    // 16320 channels at 2 bits is 255 full chunks; a 3x3 window's center
+    // output accumulates 255 chunks x 9 taps x 9216 = 21,150,720 — past
+    // 2^24 (so bit-exact sharded reduction is no longer guaranteed) but
+    // still far from i32 overflow. The verifier must prove exactly that.
+    let cin = 16320;
+    let plan = LayerPlan {
+        name: "wide-k".into(),
+        kind: LayerKind::Dense,
+        cin,
+        cout: 1,
+        kh: 3,
+        kw: 3,
+        stride: 1,
+        hin: 3,
+        win: 3,
+        asg: Assignment::uniform(cin, 2),
+        fmt: DataFormat::Smol,
+    };
+    let spec = KernelSpec::for_layer(&plan);
+    let mut v = KernelVerifier::new(&spec);
+    codegen::emit_layer(&plan, &bufs(), 0, &mut v);
+    let verdict = v.finish();
+    assert_eq!(verdict.max_acc_bound, 255 * 9 * 9216);
+    assert!(verdict.max_acc_bound > F32_EXACT_BOUND);
+    assert!(verdict.max_acc_bound <= i32::MAX as i64);
+    assert_eq!(verdict.violations.len(), 1, "{:?}", verdict.violations);
+    assert!(matches!(
+        verdict.violations[0],
+        Violation::AccExactRange { bound: 21_150_720, limit: F32_EXACT_BOUND }
+    ));
+}
+
+#[test]
+fn lane_accumulation_overflow_is_rejected() {
+    // 29 stacked vaddq_s16 of a uniform-2 MAC result: 29 x 1152 = 33,408
+    // crosses i16::MAX on the final add (28 x 1152 = 32,256 does not)
+    let plan = GemmPlan {
+        name: "lane-stack".into(),
+        m: 1,
+        k: 64,
+        n: 1,
+        asg: Assignment::uniform(64, 2),
+        fmt: DataFormat::Smol,
+    };
+    let spec = KernelSpec::for_gemm(&plan);
+    let mut program = vec![
+        Instr::LdQ { dst: 0, addr: a(0, 0) },
+        Instr::LdQ { dst: 1, addr: a(1, 0) },
+        Instr::VmacP { dst: 2, a: 0, b: 1, pat: 0 },
+        Instr::VmovZ { dst: 3 },
+    ];
+    for _ in 0..28 {
+        program.push(Instr::Vaddq16 { dst: 3, a: 3, b: 2 });
+    }
+    assert!(verify_program(&spec, &program).is_clean());
+    program.push(Instr::Vaddq16 { dst: 3, a: 3, b: 2 });
+    let verdict = verify_program(&spec, &program);
+    assert!(
+        verdict
+            .violations
+            .iter()
+            .any(|v| matches!(v, Violation::LaneOverflow { bound: 33_408, .. })),
+        "{:?}",
+        verdict.violations
+    );
+}
+
+#[test]
+fn cell_accumulator_overflow_is_rejected() {
+    // no real emitter can reach i32 overflow (the 255-entry pattern
+    // table caps the contraction first), so drive the running cell sum
+    // over the line by hand: one MAC result reduced into one cell until
+    // 9216 * n > i32::MAX
+    let plan = GemmPlan {
+        name: "acc-overflow".into(),
+        m: 1,
+        k: 64,
+        n: 1,
+        asg: Assignment::uniform(64, 2),
+        fmt: DataFormat::Smol,
+    };
+    let spec = KernelSpec::for_gemm(&plan);
+    let mut program = vec![
+        Instr::LdQ { dst: 0, addr: a(0, 0) },
+        Instr::LdQ { dst: 1, addr: a(1, 0) },
+        Instr::VmacP { dst: 2, a: 0, b: 1, pat: 0 },
+    ];
+    let n = (i32::MAX as i64 / 9216) as usize + 2;
+    for _ in 0..n {
+        program.push(Instr::ReduceAcc { src: 2, addr: a(2, 0) });
+    }
+    let verdict = verify_program(&spec, &program);
+    let overflows = verdict
+        .violations
+        .iter()
+        .filter(|v| matches!(v, Violation::AccOverflow { buf: 2, off: 0, .. }))
+        .count();
+    // deduped: one report per cell, not one per crossing instruction
+    assert_eq!(overflows, 1, "{:?}", verdict.violations);
+    assert!(verdict.violations.iter().any(|v| matches!(v, Violation::AccExactRange { .. })));
+}
+
+#[test]
+fn unmasked_tail_is_rejected_masked_is_accepted() {
+    // 8 valid channels in a 64-capacity uniform-2 chunk: a partial
+    // chunk, so the input operand must pass through vand before a MAC
+    let plan = GemmPlan {
+        name: "tail".into(),
+        m: 1,
+        k: 8,
+        n: 1,
+        asg: Assignment::uniform(8, 2),
+        fmt: DataFormat::Smol,
+    };
+    let spec = KernelSpec::for_gemm(&plan);
+    let unmasked = vec![
+        Instr::LdQ { dst: 0, addr: a(0, 0) },
+        Instr::LdQ { dst: 1, addr: a(1, 0) },
+        Instr::VmacP { dst: 2, a: 0, b: 1, pat: 0 },
+    ];
+    let verdict = verify_program(&spec, &unmasked);
+    assert!(
+        verdict.violations.iter().any(|v| matches!(v, Violation::UnmaskedTail { chunk: 0, .. })),
+        "{:?}",
+        verdict.violations
+    );
+
+    let masked = vec![
+        Instr::LdQ { dst: 0, addr: a(0, 0) },
+        Instr::LdQ { dst: 3, addr: a(3, 0) },
+        Instr::Vand { dst: 4, a: 0, b: 3 },
+        Instr::LdQ { dst: 1, addr: a(1, 0) },
+        // weights are pre-masked at pack time — only the input needs vand
+        Instr::VmacP { dst: 2, a: 4, b: 1, pat: 0 },
+        Instr::VmovZ { dst: 5 },
+        Instr::Vaddq16 { dst: 5, a: 5, b: 2 },
+        Instr::ReduceAcc { src: 5, addr: a(2, 0) },
+    ];
+    let verdict = verify_program(&spec, &masked);
+    assert!(verdict.is_clean(), "{:?}", verdict.violations);
+    assert_eq!(verdict.max_acc_bound, 8 * 1152);
+}
+
+#[test]
+fn undefined_and_bad_registers_are_rejected() {
+    let plan = GemmPlan {
+        name: "regs".into(),
+        m: 1,
+        k: 64,
+        n: 1,
+        asg: Assignment::uniform(64, 2),
+        fmt: DataFormat::Smol,
+    };
+    let spec = KernelSpec::for_gemm(&plan);
+    let program = vec![Instr::VmacP { dst: 2, a: 0, b: 1, pat: 0 }, Instr::VmovZ { dst: 40 }];
+    let verdict = verify_program(&spec, &program);
+    assert!(
+        verdict.violations.iter().any(|v| matches!(v, Violation::UndefinedReg { reg: 0, .. })),
+        "{:?}",
+        verdict.violations
+    );
+    assert!(verdict.violations.iter().any(|v| matches!(v, Violation::UndefinedReg { reg: 1, .. })));
+    assert!(verdict.violations.iter().any(|v| matches!(v, Violation::BadReg { reg: 40, .. })));
+}
+
+#[test]
+fn mul_acc_n_valid_beyond_capacity_is_rejected() {
+    let plan = LayerPlan {
+        name: "dw-nvalid".into(),
+        kind: LayerKind::Depthwise,
+        cin: 8,
+        cout: 8,
+        kh: 1,
+        kw: 1,
+        stride: 1,
+        hin: 1,
+        win: 1,
+        asg: Assignment::uniform(8, 4),
+        fmt: DataFormat::Smol,
+    };
+    let spec = KernelSpec::for_layer(&plan);
+    let mut program = Vec::new();
+    codegen::emit_layer(&plan, &bufs(), 0, &mut program);
+    assert!(verify_program(&spec, &program).is_clean());
+    for i in program.iter_mut() {
+        if let Instr::MulAcc { n_valid, .. } = i {
+            *n_valid = 200;
+        }
+    }
+    let verdict = verify_program(&spec, &program);
+    assert!(
+        verdict
+            .violations
+            .iter()
+            .any(|v| matches!(v, Violation::NValidExceedsCapacity { n_valid: 200, capacity: 32, .. })),
+        "{:?}",
+        verdict.violations
+    );
+}
+
+// ---------------------------------------------------------------------
+// Workloads: every serving model proves clean and f32-exact.
+// ---------------------------------------------------------------------
+
+/// Paper-scale layers verified by *streaming* the emitter into the
+/// verifier (nothing is materialized). Spatial extent and `cout` are
+/// clamped (hin <= 6 covers a full 3x3 window at both strides, cout
+/// <= 8 a full register block) because the per-cell accumulator bound —
+/// sum over chunks of in-window taps x the chunk's pattern-wise lane
+/// sums — does not depend on either axis; `cin`, the precision/chunk
+/// axis the bound *does* depend on, is kept at full paper-scale width.
+fn paperscale_verdict() -> ModelVerdict {
+    let supported = design_subset(4);
+    let mut verdict = ModelVerdict { name: "paperscale".into(), ..Default::default() };
+    for model in ["resnet18", "mobilenetv2", "shufflenetv2"] {
+        for shp in paperscale::shapes_for(model) {
+            let depthwise = shp.groups > 1;
+            let plan = LayerPlan {
+                name: format!("{model}/{}", shp.name),
+                kind: if depthwise { LayerKind::Depthwise } else { LayerKind::Dense },
+                cin: shp.cin,
+                cout: if depthwise { shp.cout } else { shp.cout.min(8) },
+                kh: shp.k,
+                kw: shp.k,
+                stride: shp.stride,
+                hin: shp.hin.min(6),
+                win: shp.win.min(6),
+                asg: paperscale::assignment_from_fractions(shp.cin, 0.25, 0.5, &supported),
+                fmt: DataFormat::Smol,
+            };
+            let spec = KernelSpec::for_layer(&plan);
+            let mut v = KernelVerifier::new(&spec);
+            codegen::emit_layer(&plan, &bufs(), 0, &mut v);
+            verdict.kernels.push(v.finish());
+        }
+    }
+    verdict
+}
+
+#[test]
+fn all_workloads_verify_clean_within_f32_exact_range() {
+    let mut report = VerifyReport::default();
+    for name in ["tinynet", "tinydw", "tinyattn", "tinydec", "tinywide"] {
+        let net = synthetic_network(name, DesignPoint::Patterns(4), 0).unwrap();
+        let mut m = analysis::verify_model(name, &net.prepare());
+        m.plan_violations.extend(analysis::verify_graph(&net.nodes, net.input_shape));
+        if let (Some(step), Some(shape)) = (net.step_nodes.as_deref(), net.step_input_shape) {
+            m.plan_violations.extend(analysis::verify_graph(step, shape));
+        }
+        report.models.push(m);
+    }
+    report.models.push(paperscale_verdict());
+
+    assert_eq!(report.models.len(), 6);
+    for m in &report.models {
+        assert!(!m.kernels.is_empty(), "{}: no programs verified", m.name);
+        assert!(m.is_clean(), "{}: {}", m.name, violations_str(m));
+        assert!(
+            m.max_acc_bound() <= F32_EXACT_BOUND,
+            "{}: accumulator bound {} escapes the f32 exact-integer range",
+            m.name,
+            m.max_acc_bound()
+        );
+        for k in &m.kernels {
+            assert!(k.f32_exact(), "{}: {} at bound {}", m.name, k.name, k.max_acc_bound);
+        }
+    }
+    assert!(report.is_clean());
+    assert_eq!(report.num_violations(), 0);
+    let text = report.to_string();
+    assert!(text.contains("verdict: CLEAN"), "{text}");
+    assert!(!text.contains("2^24: NO"), "{text}");
+}
+
+#[test]
+fn sharded_deployment_verifies_and_budget_violations_surface() {
+    let net = synthetic_network("tinywide", DesignPoint::Patterns(4), 0).unwrap();
+    let key = ModelKey::new("tinywide", DesignPoint::Patterns(4).label());
+    let cfg = DeployConfig { worker_budget: None, shards: Some(2) };
+    let dep = Deployment::build(key, &net.nodes, None, &cfg).unwrap();
+
+    let verdicts = analysis::verify_deployment(&dep, &net.nodes, None);
+    assert_eq!(verdicts.len(), 1 + dep.num_shards());
+    for m in &verdicts {
+        assert!(m.is_clean(), "{}: {}", m.name, violations_str(m));
+    }
+
+    // an absurdly tight budget must turn into per-shard violations
+    let tight = analysis::verify_deployment(&dep, &net.nodes, Some(64));
+    assert!(
+        tight[0].plan_violations.iter().any(|v| matches!(v, Violation::BudgetExceeded { .. })),
+        "{}",
+        violations_str(&tight[0])
+    );
+}
+
+#[test]
+fn kv_geometry_accepts_real_decoders_and_rejects_bad_configs() {
+    let net = synthetic_network("tinydec", DesignPoint::Patterns(4), 0).unwrap();
+    let prepared = net.prepare();
+    let step = prepared.step.as_ref().expect("tinydec is a decoder");
+    assert!(!step.slot_geoms.is_empty());
+
+    assert!(analysis::verify_kv(&KvPoolCfg::default(), &step.slot_geoms).is_empty());
+    let narrow = KvPoolCfg { v_bits: Some(1), ..KvPoolCfg::default() };
+    assert!(analysis::verify_kv(&narrow, &step.slot_geoms).is_empty());
+
+    let zero = KvPoolCfg { page_positions: 0, ..KvPoolCfg::default() };
+    let v = analysis::verify_kv(&zero, &[]);
+    assert!(v.iter().any(|x| matches!(x, Violation::PageGeometry { .. })), "{v:?}");
+
+    let bad_bits = KvPoolCfg { v_bits: Some(3), ..KvPoolCfg::default() };
+    let v = analysis::verify_kv(&bad_bits, &[]);
+    assert!(v.iter().any(|x| matches!(x, Violation::PageGeometry { .. })), "{v:?}");
+}
+
+#[test]
+fn graph_shape_defects_surface() {
+    let net = synthetic_network("tinynet", DesignPoint::Patterns(4), 0).unwrap();
+    assert!(analysis::verify_graph(&net.nodes, net.input_shape).is_empty());
+    let (h, w, c) = net.input_shape;
+    let v = analysis::verify_graph(&net.nodes, (h, w, c + 1));
+    assert!(v.iter().any(|x| matches!(x, Violation::Graph { .. })), "{v:?}");
+}

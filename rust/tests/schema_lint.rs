@@ -1,0 +1,113 @@
+//! Schema-drift lint: the serve-report schema number is declared once
+//! (`SERVE_REPORT_SCHEMA` in `src/serve/metrics.rs`) but *claimed* in
+//! prose and CI greps. PR 8 shipped with DESIGN.md still describing the
+//! report as schema 4 — this test makes that class of drift a failure.
+//!
+//! Checked claim forms (anything stating the *current* number):
+//! - `"schema":N` — the JSON literal CI greps for;
+//! - `schema-N` / `schema N` / `(schema N)` — prose shorthand;
+//! - `currently N` on a line that mentions the schema.
+//!
+//! Changelog arrows (`schema bumped 3 → 4`) are deliberately exempt:
+//! they describe history, not the current number, and stay correct
+//! after future bumps.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+fn repo_file(rel: &str) -> (PathBuf, String) {
+    let path = Path::new(env!("CARGO_MANIFEST_DIR")).join(rel);
+    let text = fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("cannot read {}: {e}", path.display()));
+    (path, text)
+}
+
+fn declared_schema() -> u64 {
+    let (path, src) = repo_file("src/serve/metrics.rs");
+    let line = src
+        .lines()
+        .find(|l| l.contains("SERVE_REPORT_SCHEMA") && l.contains('='))
+        .unwrap_or_else(|| panic!("no SERVE_REPORT_SCHEMA declaration in {}", path.display()));
+    line.split('=')
+        .nth(1)
+        .and_then(|rhs| rhs.trim().trim_end_matches(';').trim().parse().ok())
+        .unwrap_or_else(|| panic!("unparseable declaration: {line:?}"))
+}
+
+/// Every numbered current-schema claim in `text` as `(line, number)`.
+fn schema_claims(text: &str) -> Vec<(usize, u64)> {
+    let mut claims = Vec::new();
+    let bytes = text.as_bytes();
+    let mut search = 0;
+    while let Some(found) = text[search..].find("schema") {
+        let start = search + found;
+        search = start + "schema".len();
+        // a short run of separators between the word and a number:
+        // `"schema":5`, `schema-5`, `schema 5`. Longer gaps (e.g.
+        // `schema bumped 3 → 4`) are not direct claims.
+        let mut i = search;
+        let mut seps = 0;
+        while i < bytes.len() && seps < 3 && matches!(bytes[i], b'"' | b':' | b'-' | b' ') {
+            i += 1;
+            seps += 1;
+        }
+        let digits_start = i;
+        while i < bytes.len() && bytes[i].is_ascii_digit() {
+            i += 1;
+        }
+        if i > digits_start {
+            let line = text[..start].bytes().filter(|&b| b == b'\n').count() + 1;
+            claims.push((line, text[digits_start..i].parse().unwrap()));
+        }
+    }
+    // `currently N` on schema-mentioning lines ("the `schema` field,
+    // currently 5, versions this")
+    for (ln, line) in text.lines().enumerate() {
+        if !line.contains("schema") {
+            continue;
+        }
+        if let Some(pos) = line.find("currently ") {
+            let rest = &line[pos + "currently ".len()..];
+            let digits: String = rest.chars().take_while(|c| c.is_ascii_digit()).collect();
+            if !digits.is_empty() {
+                claims.push((ln + 1, digits.parse().unwrap()));
+            }
+        }
+    }
+    claims
+}
+
+#[test]
+fn docs_and_ci_agree_with_serve_report_schema() {
+    let want = declared_schema();
+    let mut drift = Vec::new();
+    let mut total = 0;
+    for rel in ["../DESIGN.md", "../.github/workflows/ci.yml"] {
+        let (path, text) = repo_file(rel);
+        for (line, got) in schema_claims(&text) {
+            total += 1;
+            if got != want {
+                drift.push(format!(
+                    "{}:{line}: claims schema {got}, but SERVE_REPORT_SCHEMA = {want}",
+                    path.display()
+                ));
+            }
+        }
+    }
+    // the lint must actually be exercising something: CI greps the JSON
+    // literal and DESIGN.md documents the field, so zero claims means
+    // the scanner (or the docs) broke
+    assert!(total >= 2, "only {total} schema claims found — scanner or docs broke");
+    assert!(drift.is_empty(), "schema drift:\n{}", drift.join("\n"));
+}
+
+#[test]
+fn claim_scanner_understands_the_known_forms() {
+    let text = "grep '\"schema\":7'\na schema-7 report\n(schema 7)\n\
+                the `schema` field, currently 7, versions this\n\
+                (schema bumped 6 \u{2192} 7 together with X)\n";
+    let claims = schema_claims(text);
+    assert_eq!(claims.iter().map(|&(_, n)| n).collect::<Vec<_>>(), vec![7, 7, 7, 7]);
+    assert_eq!(claims[0].0, 1);
+    assert_eq!(claims[3].0, 4);
+}

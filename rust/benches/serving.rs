@@ -33,16 +33,33 @@ fn main() {
             run_network(&net.nodes, &inputs[0]).output.data[0]
         });
         let prepared = Arc::new(PreparedModel::prepare(&net.nodes));
-        // what `serve-bench --verify` costs at serve time: one abstract-
-        // interpretation pass over every cached/representative program
-        let t_verify = Instant::now();
+        // what `serve-bench --verify` costs at serve time, split by
+        // analysis depth: the safety interpreter alone vs safety plus
+        // the term-equivalence pass (what --verify actually runs)
+        let t_safety = Instant::now();
+        let safety = soniq::analysis::verify_model_level(
+            model,
+            &prepared,
+            soniq::analysis::VerifyLevel::Safety,
+        );
+        let safety_elapsed = t_safety.elapsed();
+        assert!(safety.is_clean());
+        let t_full = Instant::now();
         let verdict = soniq::analysis::verify_model(model, &prepared);
+        let full_elapsed = t_full.elapsed();
         assert!(verdict.is_clean());
         println!(
-            "static verify: {} kernels / {} instrs clean in {:.2?} (max acc bound {})",
+            "static verify (safety only):   {} kernels / {} instrs clean in {:.2?}",
+            safety.kernels.len(),
+            safety.instrs(),
+            safety_elapsed,
+        );
+        println!(
+            "static verify (safety+equiv):  {} kernels / {} instrs clean in {:.2?} \
+             (max acc bound {})",
             verdict.kernels.len(),
             verdict.instrs(),
-            t_verify.elapsed(),
+            full_elapsed,
             verdict.max_acc_bound()
         );
         let mut engine = EngineMachine::new(&prepared);

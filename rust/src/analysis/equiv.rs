@@ -1,0 +1,885 @@
+//! Term-provenance equivalence: prove an emitted kernel computes
+//! *exactly* its plan's contraction.
+//!
+//! [`super::kernel`] proves a program is safe (no out-of-bounds
+//! access, no overflow, tails masked); it says nothing about *which*
+//! terms an output cell accumulates — a dropped, duplicated or
+//! mis-mapped MAC sails straight through it. [`EquivVerifier`] closes
+//! that gap. It symbolically interprets the same `Instr` stream (it
+//! implements [`Sink`], so paper-scale layers stream the emitter into
+//! it exactly like the safety layer), tracking for every vector
+//! register the packed 16-byte slot it was loaded from and for every
+//! lane accumulator the exact multiset of `(activation slot, weight
+//! slot, pattern)` products it holds. Each `ReduceAcc`/`MulAcc` then
+//! expands those products into canonical *terms* — `(output cell,
+//! original channel index, tap)` triples recovered from the emitters'
+//! chunk-minor address decompositions — and checks the recovered
+//! multiset against a [`TermSpec`] derived independently from the
+//! `LayerPlan`/`GemmPlan`:
+//!
+//! - every term the contraction requires accumulates **exactly once**
+//!   ([`Violation::MissingTerm`] / [`Violation::DuplicateTerm`]);
+//! - nothing outside the contraction contributes — wrong chunk pair,
+//!   wrong output channel, wrong spatial tap, wrong per-element
+//!   precision, or a causal upper-triangle pair
+//!   ([`Violation::ForeignTerm`]);
+//! - a partial chunk's tail lanes are provably masked before they
+//!   contribute ([`Violation::UnmaskedTailTerm`]), and each partial
+//!   chunk contributes exactly `valid_taps(h, w)` masked MACs per
+//!   cell — the count the engine's tail-bias epilogue subtracts, so a
+//!   mismatch means the dequantized output is silently wrong
+//!   ([`Violation::EpilogueMismatch`]);
+//! - causal GEMM twins skip exactly the upper triangle: a skipped
+//!   cell expects zero terms *and* zero epilogue contributions.
+//!
+//! Equivalence is a SMOL-only property: [`TermSpec::for_layer`]
+//! returns `None` for baseline formats, whose kernels are timing
+//! models rather than functional contractions, and the plan layer
+//! simply skips the pass for them.
+//!
+//! [`shard_term_partition`] lifts the same term sets to deployments:
+//! once every shard's kernel is proven equivalent to its own
+//! [`TermSpec`], the shards' term sets (remapped through their slice
+//! offsets) must tile the whole node's term set exactly — upgrading
+//! the bit-exact-reduce argument from "accumulators stay on the exact
+//! grid" to "shards compute disjoint, exhaustive term subsets".
+
+use std::collections::HashSet;
+
+use super::kernel::{KernelSpec, MAX_VIOLATIONS};
+use super::{verify_program, DisasmWindow, KernelVerdict, Violation, WindowTracker};
+use crate::codegen::gemm::GemmPlan;
+use crate::codegen::{DataFormat, LayerKind, LayerPlan, Sink};
+use crate::simd::isa::{Instr, NUM_VREGS};
+use crate::simd::patterns::Pattern;
+
+/// The plan-side ground truth the symbolic interpreter checks a
+/// program against: the layer geometry (which enumerates the required
+/// `(cell, channel, tap)` term set) plus the packed chunk layout
+/// (which decodes *recovered* slots back to original channels).
+/// Derived from the plan alone — never from the program.
+#[derive(Debug, Clone, Hash)]
+pub struct TermSpec {
+    kind: LayerKind,
+    /// causal GEMM twin: cell `(j, i)` exists only for `j <= i`
+    causal: bool,
+    cin: usize,
+    cout: usize,
+    kh: usize,
+    kw: usize,
+    stride: usize,
+    hin: usize,
+    win: usize,
+    hout: usize,
+    wout: usize,
+    pt: isize,
+    pl: isize,
+    /// packed chunk layout `(pattern, valid)`, zero-valid chunks
+    /// filtered — mirrors `LayerPlan::chunks()`
+    chunks: Vec<(Pattern, u32)>,
+    /// per chunk: original channel index of each valid element
+    /// (Observation 4 rearrangement, from `Assignment::order`)
+    chan_of: Vec<Vec<u32>>,
+    /// packed channel position of each chunk's first element
+    chunk_start: Vec<u32>,
+    /// per *original* channel: assigned precision
+    prec_of: Vec<u8>,
+}
+
+impl TermSpec {
+    /// Term spec of a conv/FC layer. `None` when the layer is not a
+    /// SMOL contraction (baseline formats) or the assignment does not
+    /// cover the contraction axis (the plan layer reports that
+    /// structurally).
+    pub fn for_layer(plan: &LayerPlan) -> Option<TermSpec> {
+        TermSpec::for_layer_causal(plan, false)
+    }
+
+    /// [`TermSpec::for_layer`] for GEMMs lowered to their 1x1 dense
+    /// view, with the causal flag carried through (`emit_gemm_causal`
+    /// must skip exactly the upper triangle).
+    pub fn for_layer_causal(plan: &LayerPlan, causal: bool) -> Option<TermSpec> {
+        if plan.fmt != DataFormat::Smol {
+            return None;
+        }
+        let chunks = plan.chunks();
+        let total: u32 = chunks.iter().map(|&(_, v)| v).sum();
+        if total as usize != plan.asg.order.len()
+            || plan.asg.precision.len() != plan.cin
+            || total as usize != plan.cin
+        {
+            return None; // malformed assignment: plan layer reports it
+        }
+        let mut chan_of = Vec::with_capacity(chunks.len());
+        let mut chunk_start = Vec::with_capacity(chunks.len());
+        let mut base = 0usize;
+        for &(_, v) in &chunks {
+            chunk_start.push(base as u32);
+            chan_of.push(plan.asg.order[base..base + v as usize].to_vec());
+            base += v as usize;
+        }
+        if chan_of.iter().flatten().any(|&ch| ch as usize >= plan.cin) {
+            return None;
+        }
+        Some(TermSpec {
+            kind: plan.kind,
+            causal,
+            cin: plan.cin,
+            cout: plan.cout,
+            kh: plan.kh,
+            kw: plan.kw,
+            stride: plan.stride,
+            hin: plan.hin,
+            win: plan.win,
+            hout: plan.hout(),
+            wout: plan.wout(),
+            pt: plan.pad_top(),
+            pl: plan.pad_left(),
+            chunks,
+            chan_of,
+            chunk_start,
+            prec_of: plan.asg.precision.clone(),
+        })
+    }
+
+    /// Term spec of a GEMM (`emit_gemm` / `emit_gemm_causal`).
+    pub fn for_gemm(plan: &GemmPlan, causal: bool) -> Option<TermSpec> {
+        TermSpec::for_layer_causal(&plan.layer_plan(), causal)
+    }
+
+    /// Output-cell count in the kernel's own cell encoding.
+    fn cells(&self) -> usize {
+        match self.kind {
+            LayerKind::Dense => self.cout * self.hout * self.wout,
+            LayerKind::Depthwise => self.hout * self.wout * self.cin,
+        }
+    }
+
+    /// Input position tap `(r, s)` reads for output `(h, w)` — `None`
+    /// when the tap falls in the XLA-SAME padding.
+    fn tap_pos(&self, h: usize, w: usize, r: usize, s: usize) -> Option<(usize, usize)> {
+        let ih = h as isize * self.stride as isize + r as isize - self.pt;
+        let iw = w as isize * self.stride as isize + s as isize - self.pl;
+        (ih >= 0 && iw >= 0 && ih < self.hin as isize && iw < self.win as isize)
+            .then_some((ih as usize, iw as usize))
+    }
+
+    /// In-bounds tap count for output `(h, w)` — the multiplier of the
+    /// engine's per-cell tail-bias subtraction.
+    fn valid_taps(&self, h: usize, w: usize) -> u32 {
+        let mut n = 0;
+        for r in 0..self.kh {
+            for s in 0..self.kw {
+                if self.tap_pos(h, w, r, s).is_some() {
+                    n += 1;
+                }
+            }
+        }
+        n
+    }
+
+    /// The full `(cell, channel, tap)` term set this spec requires,
+    /// with shard remaps applied: `k_off` shifts the output-channel
+    /// axis (a `cout`/`n` split slice), `chan_off` the contraction
+    /// axis (a `cin`/`k` reduce slice). Spatial extents are untouched
+    /// by either split, so the remapped cell encoding matches the
+    /// whole-model spec's. `None` for depthwise or causal kinds, which
+    /// the shard planner never splits.
+    pub fn term_set(&self, k_off: usize, chan_off: usize) -> Option<HashSet<(usize, u32, usize)>> {
+        if self.kind != LayerKind::Dense || self.causal {
+            return None;
+        }
+        let mut set = HashSet::with_capacity(self.cells() * self.cin);
+        for k in 0..self.cout {
+            for h in 0..self.hout {
+                for w in 0..self.wout {
+                    let cell = ((k + k_off) * self.hout + h) * self.wout + w;
+                    for r in 0..self.kh {
+                        for s in 0..self.kw {
+                            if self.tap_pos(h, w, r, s).is_none() {
+                                continue;
+                            }
+                            let tap = r * self.kw + s;
+                            for ch in 0..self.cin {
+                                set.insert((cell, (ch + chan_off) as u32, tap));
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        Some(set)
+    }
+}
+
+/// One symbolic product: a `VmacP`/`VmulP` of an activation slot
+/// against a weight slot under a pattern, with the activation side's
+/// mask provenance (weights are pre-masked at pack time).
+#[derive(Debug, Clone, Copy, PartialEq)]
+struct Prod {
+    a_slot: u32,
+    w_slot: u32,
+    masked: bool,
+    pat: u8,
+}
+
+/// Abstract value of one vector register under provenance tracking.
+#[derive(Debug, Clone)]
+enum EAbs {
+    /// 16-byte slot `off / 16` of buffer `src`, `masked` iff a `Vand`
+    /// against the slot's own chunk mask was applied
+    Packed { src: u16, slot: u32, masked: bool },
+    /// tail-mask vector of chunk `chunk`
+    MaskV { chunk: u32 },
+    /// lane accumulator holding exactly these products
+    Acc(Vec<Prod>),
+    /// `vmul_Pn` low half of one product
+    MulLo(Prod),
+    /// `vmul_Pn` high half of one product
+    MulHi(Prod),
+    /// provenance lost (wrong operand kinds — the safety layer
+    /// reports the kind defect; here it poisons downstream terms)
+    Unknown,
+}
+
+/// Verdict of one equivalence pass, merged into the program's
+/// [`KernelVerdict`] by the plan layer.
+#[derive(Debug, Clone, Default)]
+pub struct EquivVerdict {
+    pub violations: Vec<Violation>,
+    pub suppressed: usize,
+    pub windows: Vec<DisasmWindow>,
+}
+
+impl EquivVerdict {
+    pub fn is_clean(&self) -> bool {
+        self.violations.is_empty() && self.suppressed == 0
+    }
+}
+
+/// The symbolic term-provenance interpreter. Feed instructions with
+/// [`step`] (or stream an emitter into it — it implements [`Sink`]),
+/// then [`finish`] for the [`EquivVerdict`].
+///
+/// [`step`]: EquivVerifier::step
+/// [`finish`]: EquivVerifier::finish
+#[derive(Debug)]
+pub struct EquivVerifier<'a> {
+    spec: &'a KernelSpec,
+    terms: &'a TermSpec,
+    regs: Vec<Option<EAbs>>,
+    /// saturating accumulation count per required term
+    counts: Vec<u8>,
+    /// chunk index of each partial chunk, in chunk order
+    partials: Vec<usize>,
+    /// per chunk: index into `partials` (None = full chunk)
+    partial_idx: Vec<Option<usize>>,
+    /// masked-MAC count per `(cell, partial chunk)` — must equal the
+    /// cell's `valid_taps` so the tail-bias epilogue subtracts exactly
+    /// what the tail lanes contributed
+    bias: Vec<u32>,
+    violations: Vec<Violation>,
+    suppressed: usize,
+    windows: WindowTracker,
+    at: usize,
+}
+
+impl<'a> EquivVerifier<'a> {
+    pub fn new(spec: &'a KernelSpec, terms: &'a TermSpec) -> EquivVerifier<'a> {
+        let ntaps = terms.kh * terms.kw;
+        let n_counts = match terms.kind {
+            LayerKind::Dense => terms.cells() * terms.cin * ntaps,
+            LayerKind::Depthwise => terms.cells() * ntaps,
+        };
+        let mut partials = Vec::new();
+        let mut partial_idx = Vec::with_capacity(terms.chunks.len());
+        for (ci, &(pat, valid)) in terms.chunks.iter().enumerate() {
+            if valid < pat.capacity() {
+                partial_idx.push(Some(partials.len()));
+                partials.push(ci);
+            } else {
+                partial_idx.push(None);
+            }
+        }
+        // bias tracking is a dense-path contract (depthwise `MulAcc`
+        // never writes tail elements, so there is nothing to correct)
+        let n_bias = match terms.kind {
+            LayerKind::Dense => terms.cells() * partials.len(),
+            LayerKind::Depthwise => 0,
+        };
+        EquivVerifier {
+            spec,
+            terms,
+            regs: vec![None; NUM_VREGS],
+            counts: vec![0; n_counts],
+            partials,
+            partial_idx,
+            bias: vec![0; n_bias],
+            violations: Vec::new(),
+            suppressed: 0,
+            windows: WindowTracker::default(),
+            at: 0,
+        }
+    }
+
+    fn violate(&mut self, v: Violation) {
+        if let Some(at) = v.at() {
+            self.windows.record(at);
+        }
+        if self.violations.len() < MAX_VIOLATIONS {
+            self.violations.push(v);
+        } else {
+            self.suppressed += 1;
+        }
+    }
+
+    fn read(&self, r: u8) -> EAbs {
+        self.regs
+            .get(r as usize)
+            .and_then(|v| v.clone())
+            .unwrap_or(EAbs::Unknown)
+    }
+
+    fn write(&mut self, r: u8, v: EAbs) {
+        if let Some(slot) = self.regs.get_mut(r as usize) {
+            *slot = Some(v);
+        }
+    }
+
+    /// Split a MAC/MUL operand pair into `(input side, weight side)`
+    /// by buffer provenance (symbolic convention: 0 = input,
+    /// 1 = weights). `None` loses provenance — the safety layer
+    /// reports the operand-kind defect.
+    fn product_of(&self, a: EAbs, b: EAbs, pat: u8) -> Option<Prod> {
+        match (a, b) {
+            (
+                EAbs::Packed { src: sa, slot: la, masked: ma },
+                EAbs::Packed { src: sb, slot: lb, masked: mb },
+            ) => {
+                if sa == 0 && sb == 1 {
+                    Some(Prod { a_slot: la, w_slot: lb, masked: ma, pat })
+                } else if sa == 1 && sb == 0 {
+                    Some(Prod { a_slot: lb, w_slot: la, masked: mb, pat })
+                } else {
+                    None
+                }
+            }
+            _ => None,
+        }
+    }
+
+    /// Per-element pattern the hardware decodes a product with: the
+    /// instruction's `PatId` when registered, else the chunk's layout
+    /// pattern (the safety layer flags the bad id itself).
+    fn decode_pattern(&self, pat: u8, ci: usize) -> Pattern {
+        self.spec
+            .patterns
+            .get(pat as usize)
+            .copied()
+            .unwrap_or(self.terms.chunks[ci].0)
+    }
+
+    /// Expand one reduced product into dense-layer terms at `cell`.
+    fn expand_dense(&mut self, p: Prod, cell: usize) {
+        let t = self.terms;
+        let nch = t.chunks.len();
+        if nch == 0 {
+            return;
+        }
+        let (a_slot, w_slot) = (p.a_slot as usize, p.w_slot as usize);
+        let ci = a_slot % nch;
+        if w_slot % nch != ci {
+            return self.violate(Violation::ForeignTerm {
+                at: self.at,
+                cell,
+                detail: format!(
+                    "activation chunk {ci} multiplied against weight chunk {}",
+                    w_slot % nch
+                ),
+            });
+        }
+        let a_row = a_slot / nch;
+        let (ih, iw) = (a_row / t.win, a_row % t.win);
+        let wrest = w_slot / nch;
+        let s = wrest % t.kw;
+        let r = (wrest / t.kw) % t.kh;
+        let k = wrest / (t.kw * t.kh);
+        let tap = r * t.kw + s;
+        if cell >= t.cells() {
+            return self.violate(Violation::ForeignTerm {
+                at: self.at,
+                cell,
+                detail: format!("cell outside the {}-cell output extent", t.cells()),
+            });
+        }
+        let w_c = cell % t.wout;
+        let h_c = (cell / t.wout) % t.hout;
+        let k_c = cell / (t.wout * t.hout);
+        if k != k_c {
+            return self.violate(Violation::ForeignTerm {
+                at: self.at,
+                cell,
+                detail: format!("weight row k={k} accumulates into output channel {k_c}"),
+            });
+        }
+        if t.causal && k_c > h_c {
+            return self.violate(Violation::ForeignTerm {
+                at: self.at,
+                cell,
+                detail: format!("causal upper-triangle term (column {k_c} > row {h_c})"),
+            });
+        }
+        match t.tap_pos(h_c, w_c, r, s) {
+            Some(pos) if pos == (ih, iw) => {}
+            Some((eh, ew)) => {
+                return self.violate(Violation::ForeignTerm {
+                    at: self.at,
+                    cell,
+                    detail: format!(
+                        "tap ({r},{s}) reads activation ({ih},{iw}), plan reads ({eh},{ew})"
+                    ),
+                });
+            }
+            None => {
+                return self.violate(Violation::ForeignTerm {
+                    at: self.at,
+                    cell,
+                    detail: format!("padding tap ({r},{s}) accumulates into cell ({h_c},{w_c})"),
+                });
+            }
+        }
+        let valid = t.chunks[ci].1;
+        self.count_elements_n(p, ci, cell, tap, cell, valid);
+        // tail accounting: a partial chunk's masked MAC is one unit of
+        // the bias the epilogue subtracts; unmasked tails are garbage
+        let (pat, valid) = t.chunks[ci];
+        if valid < pat.capacity() {
+            if p.masked {
+                if let Some(pi) = self.partial_idx[ci] {
+                    self.bias[cell * self.partials.len() + pi] += 1;
+                }
+            } else {
+                self.violate(Violation::UnmaskedTailTerm { at: self.at, cell, chunk: ci });
+            }
+        }
+    }
+
+    /// Expand one `MulAcc` scatter into depthwise terms starting at
+    /// packed output position `cell0`.
+    fn expand_depthwise(&mut self, p: Prod, cell0: usize, n_valid: u16) {
+        let t = self.terms;
+        let nch = t.chunks.len();
+        if nch == 0 {
+            return;
+        }
+        let (a_slot, w_slot) = (p.a_slot as usize, p.w_slot as usize);
+        let ci = a_slot % nch;
+        if w_slot % nch != ci {
+            return self.violate(Violation::ForeignTerm {
+                at: self.at,
+                cell: cell0,
+                detail: format!(
+                    "activation chunk {ci} multiplied against weight chunk {}",
+                    w_slot % nch
+                ),
+            });
+        }
+        let a_row = a_slot / nch;
+        let (ih, iw) = (a_row / t.win, a_row % t.win);
+        let wrest = w_slot / nch;
+        let s = wrest % t.kw;
+        let r = wrest / t.kw;
+        if r >= t.kh {
+            return self.violate(Violation::ForeignTerm {
+                at: self.at,
+                cell: cell0,
+                detail: format!("weight slot beyond the {}x{} tap extent", t.kh, t.kw),
+            });
+        }
+        let tap = r * t.kw + s;
+        let spatial = cell0 / t.cin;
+        let pos0 = cell0 % t.cin;
+        if spatial >= t.hout * t.wout {
+            return self.violate(Violation::ForeignTerm {
+                at: self.at,
+                cell: cell0,
+                detail: format!("cell outside the {}-cell output extent", t.cells()),
+            });
+        }
+        if pos0 != t.chunk_start[ci] as usize {
+            return self.violate(Violation::ForeignTerm {
+                at: self.at,
+                cell: cell0,
+                detail: format!(
+                    "chunk {ci} scatters at packed position {pos0}, its channels start at {}",
+                    t.chunk_start[ci]
+                ),
+            });
+        }
+        let (h_c, w_c) = (spatial / t.wout, spatial % t.wout);
+        match t.tap_pos(h_c, w_c, r, s) {
+            Some(pos) if pos == (ih, iw) => {}
+            Some((eh, ew)) => {
+                return self.violate(Violation::ForeignTerm {
+                    at: self.at,
+                    cell: cell0,
+                    detail: format!(
+                        "tap ({r},{s}) reads activation ({ih},{iw}), plan reads ({eh},{ew})"
+                    ),
+                });
+            }
+            None => {
+                return self.violate(Violation::ForeignTerm {
+                    at: self.at,
+                    cell: cell0,
+                    detail: format!("padding tap ({r},{s}) accumulates into cell ({h_c},{w_c})"),
+                });
+            }
+        }
+        let valid = t.chunks[ci].1;
+        if u32::from(n_valid) > valid {
+            // widened scatter: elements beyond the chunk's channel set
+            self.violate(Violation::ForeignTerm {
+                at: self.at,
+                cell: cell0 + valid as usize,
+                detail: format!(
+                    "mul-acc scatters {n_valid} elements, chunk {ci} holds {valid} channels"
+                ),
+            });
+        }
+        self.count_elements_n(p, ci, spatial, tap, cell0, u32::from(n_valid).min(valid));
+    }
+
+    /// Count terms for elements `0..n` of chunk `ci`, anchored at
+    /// output base `row` (dense: the cell itself; depthwise: the
+    /// spatial position — the element index selects the channel).
+    fn count_elements_n(
+        &mut self,
+        p: Prod,
+        ci: usize,
+        row: usize,
+        tap: usize,
+        at_cell: usize,
+        n: u32,
+    ) {
+        let t = self.terms;
+        let ntaps = t.kh * t.kw;
+        let ipat = self.decode_pattern(p.pat, ci);
+        for e in 0..n {
+            let channel = t.chan_of[ci][e as usize];
+            let Some(&cp) = t.prec_of.get(channel as usize) else {
+                self.violate(Violation::ForeignTerm {
+                    at: self.at,
+                    cell: at_cell,
+                    detail: format!("chunk {ci} element {e} maps to unknown channel {channel}"),
+                });
+                continue;
+            };
+            if ipat.element_precision(e) != cp {
+                self.violate(Violation::ForeignTerm {
+                    at: self.at,
+                    cell: at_cell,
+                    detail: format!(
+                        "chunk {ci} element {e} decodes at {} bits, channel {channel} is \
+                         assigned {cp}",
+                        ipat.element_precision(e)
+                    ),
+                });
+                continue;
+            }
+            let idx = (row * t.cin + channel as usize) * ntaps + tap;
+            let cell = match t.kind {
+                LayerKind::Dense => at_cell,
+                LayerKind::Depthwise => at_cell + e as usize,
+            };
+            let c = &mut self.counts[idx];
+            *c = c.saturating_add(1);
+            if *c == 2 {
+                self.violate(Violation::DuplicateTerm { at: self.at, cell, channel, tap });
+            }
+        }
+    }
+
+    /// Interpret one instruction.
+    pub fn step(&mut self, i: &Instr) {
+        self.windows.observe(self.at, i);
+        match *i {
+            Instr::LdQ { dst, addr } => {
+                let abs = match addr.buf.0 {
+                    3 => EAbs::MaskV { chunk: addr.off / 16 },
+                    b @ (0 | 1) => EAbs::Packed { src: b, slot: addr.off / 16, masked: false },
+                    _ => EAbs::Unknown,
+                };
+                self.write(dst, abs);
+            }
+            Instr::StQ { .. } => {}
+            Instr::VmovZ { dst } => {
+                self.write(dst, EAbs::Acc(Vec::new()));
+            }
+            Instr::Vand { dst, a, b } => {
+                let (va, vb) = (self.read(a), self.read(b));
+                let abs = match (va, vb) {
+                    (EAbs::Packed { src, slot, masked }, EAbs::MaskV { chunk })
+                    | (EAbs::MaskV { chunk }, EAbs::Packed { src, slot, masked }) => {
+                        let nch = self.terms.chunks.len() as u32;
+                        // only the slot's *own* chunk mask proves the
+                        // tail zeroed; a foreign mask does not
+                        let own = nch > 0 && slot % nch == chunk;
+                        EAbs::Packed { src, slot, masked: masked || own }
+                    }
+                    _ => EAbs::Unknown,
+                };
+                self.write(dst, abs);
+            }
+            Instr::VmacP { dst, a, b, pat } => {
+                let (va, vb) = (self.read(a), self.read(b));
+                let abs = match self.product_of(va, vb, pat) {
+                    Some(p) => EAbs::Acc(vec![p]),
+                    None => EAbs::Unknown,
+                };
+                self.write(dst, abs);
+            }
+            Instr::VmulP { dst, dst2, a, b, pat } => {
+                let (va, vb) = (self.read(a), self.read(b));
+                match self.product_of(va, vb, pat) {
+                    Some(p) => {
+                        self.write(dst, EAbs::MulLo(p));
+                        self.write(dst2, EAbs::MulHi(p));
+                    }
+                    None => {
+                        self.write(dst, EAbs::Unknown);
+                        self.write(dst2, EAbs::Unknown);
+                    }
+                }
+            }
+            Instr::Vaddq16 { dst, a, b } => {
+                let (va, vb) = (self.read(a), self.read(b));
+                let abs = match (va, vb) {
+                    (EAbs::Acc(mut x), EAbs::Acc(y)) => {
+                        x.extend(y);
+                        EAbs::Acc(x)
+                    }
+                    _ => EAbs::Unknown,
+                };
+                self.write(dst, abs);
+            }
+            Instr::ReduceAcc { src, addr } => {
+                if addr.buf.0 == 2 {
+                    let cell = (addr.off / 4) as usize;
+                    match self.read(src) {
+                        EAbs::Acc(prods) => {
+                            for p in prods {
+                                self.expand_dense(p, cell);
+                            }
+                        }
+                        _ => self.violate(Violation::ForeignTerm {
+                            at: self.at,
+                            cell,
+                            detail: "accumulator with unknown provenance reduces into the output"
+                                .into(),
+                        }),
+                    }
+                }
+            }
+            Instr::MulAcc { lo, hi, pat: _, addr, n_valid } => {
+                if addr.buf.0 == 2 {
+                    let cell0 = (addr.off / 4) as usize;
+                    match (self.read(lo), self.read(hi)) {
+                        (EAbs::MulLo(pl), EAbs::MulHi(ph)) if pl == ph => {
+                            self.expand_depthwise(pl, cell0, n_valid);
+                        }
+                        _ => self.violate(Violation::ForeignTerm {
+                            at: self.at,
+                            cell: cell0,
+                            detail: "mul-acc halves with unknown or mismatched provenance".into(),
+                        }),
+                    }
+                }
+            }
+            Instr::VfmaF32 { dst, .. } | Instr::VmacI8 { dst, .. } => {
+                // baseline-format ops never appear in a SMOL kernel;
+                // poison so any reduce of them is a foreign term
+                self.write(dst, EAbs::Unknown);
+            }
+        }
+        self.at += 1;
+    }
+
+    /// Close the analysis: sweep the required term set for terms that
+    /// never accumulated and partial chunks whose masked-MAC count
+    /// disagrees with the epilogue's tail-bias subtraction.
+    pub fn finish(mut self) -> EquivVerdict {
+        let t = self.terms;
+        let ntaps = t.kh * t.kw;
+        match t.kind {
+            LayerKind::Dense => {
+                for k in 0..t.cout {
+                    for h in 0..t.hout {
+                        for w in 0..t.wout {
+                            let cell = (k * t.hout + h) * t.wout + w;
+                            if t.causal && k > h {
+                                // skipped cell: any term there was
+                                // already flagged foreign; the engine
+                                // never reads (or bias-corrects) it
+                                continue;
+                            }
+                            let want = t.valid_taps(h, w);
+                            for pi in 0..self.partials.len() {
+                                let got = self.bias[cell * self.partials.len() + pi];
+                                if got != want {
+                                    let chunk = self.partials[pi];
+                                    self.violate(Violation::EpilogueMismatch {
+                                        cell,
+                                        chunk,
+                                        expected: want,
+                                        got,
+                                    });
+                                }
+                            }
+                            for r in 0..t.kh {
+                                for s in 0..t.kw {
+                                    if t.tap_pos(h, w, r, s).is_none() {
+                                        continue;
+                                    }
+                                    let tap = r * t.kw + s;
+                                    for ch in 0..t.cin {
+                                        if self.counts[(cell * t.cin + ch) * ntaps + tap] == 0 {
+                                            self.violate(Violation::MissingTerm {
+                                                cell,
+                                                channel: ch as u32,
+                                                tap,
+                                            });
+                                        }
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+            LayerKind::Depthwise => {
+                for h in 0..t.hout {
+                    for w in 0..t.wout {
+                        let spatial = h * t.wout + w;
+                        for ci in 0..t.chunks.len() {
+                            for e in 0..t.chunks[ci].1 as usize {
+                                let channel = t.chan_of[ci][e];
+                                let cell = spatial * t.cin + t.chunk_start[ci] as usize + e;
+                                for r in 0..t.kh {
+                                    for s in 0..t.kw {
+                                        if t.tap_pos(h, w, r, s).is_none() {
+                                            continue;
+                                        }
+                                        let tap = r * t.kw + s;
+                                        let idx =
+                                            (spatial * t.cin + channel as usize) * ntaps + tap;
+                                        if self.counts[idx] == 0 {
+                                            self.violate(Violation::MissingTerm {
+                                                cell,
+                                                channel,
+                                                tap,
+                                            });
+                                        }
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        EquivVerdict {
+            violations: self.violations,
+            suppressed: self.suppressed,
+            windows: self.windows.finish(),
+        }
+    }
+}
+
+impl Sink for EquivVerifier<'_> {
+    fn emit(&mut self, i: Instr) {
+        self.step(&i);
+    }
+}
+
+/// Verify one materialized program at full depth: the safety pass
+/// always, plus the term-equivalence pass when a [`TermSpec`] is
+/// derivable (SMOL contractions). Both passes' violations land in one
+/// merged [`KernelVerdict`].
+pub fn verify_program_full(
+    spec: &KernelSpec,
+    terms: Option<&TermSpec>,
+    program: &[Instr],
+) -> KernelVerdict {
+    let mut verdict = verify_program(spec, program);
+    if let Some(t) = terms {
+        let mut v = EquivVerifier::new(spec, t);
+        for i in program {
+            v.step(i);
+        }
+        merge_equiv(&mut verdict, v.finish());
+    }
+    verdict
+}
+
+/// Fold an equivalence verdict into a program's safety verdict.
+pub(crate) fn merge_equiv(k: &mut KernelVerdict, e: EquivVerdict) {
+    k.violations.extend(e.violations);
+    k.suppressed += e.suppressed;
+    k.windows.extend(e.windows);
+}
+
+/// Deployment-level term partition: given the whole node's term spec
+/// and each shard's (as actually prepared, with its slice offset on
+/// `axis`), the shards' term sets must tile the whole set — disjoint
+/// and exhaustive. Sound because each shard's kernel was separately
+/// proven equivalent to its own spec, so spec-level set algebra
+/// transfers to the kernels. Returns no violation when any spec has
+/// no enumerable term set (depthwise/causal — never split today).
+pub fn shard_term_partition(
+    what: &str,
+    whole: &TermSpec,
+    shards: &[(TermSpec, usize)],
+    axis: ShardAxis,
+) -> Vec<Violation> {
+    let Some(whole_set) = whole.term_set(0, 0) else {
+        return Vec::new();
+    };
+    let mut union: HashSet<(usize, u32, usize)> = HashSet::with_capacity(whole_set.len());
+    let mut overlap = 0usize;
+    for (spec, off) in shards {
+        let (k_off, chan_off) = match axis {
+            ShardAxis::OutputChannels => (*off, 0),
+            ShardAxis::Contraction => (0, *off),
+        };
+        let Some(set) = spec.term_set(k_off, chan_off) else {
+            return Vec::new();
+        };
+        for term in set {
+            if !union.insert(term) {
+                overlap += 1;
+            }
+        }
+    }
+    let missing = whole_set.difference(&union).count();
+    let foreign = union.difference(&whole_set).count();
+    if overlap + missing + foreign > 0 {
+        vec![Violation::ShardTermPartition {
+            detail: format!(
+                "{what}: shard term sets are not a partition of the whole node's \
+                 ({overlap} overlapping, {missing} missing, {foreign} foreign terms)"
+            ),
+        }]
+    } else {
+        Vec::new()
+    }
+}
+
+/// Which axis a shard slice offsets in [`shard_term_partition`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShardAxis {
+    /// split node: the `cout`/`n` axis is sliced, cells remap
+    OutputChannels,
+    /// reduce consumer: the `cin`/`k` axis is sliced, channels remap
+    Contraction,
+}

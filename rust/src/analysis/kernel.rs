@@ -44,7 +44,8 @@
 use std::borrow::Cow;
 use std::collections::{HashMap, HashSet};
 
-use super::{KernelVerdict, Violation, F32_EXACT_BOUND};
+use super::equiv::TermSpec;
+use super::{KernelVerdict, Violation, WindowTracker, F32_EXACT_BOUND};
 use crate::codegen::gemm::GemmPlan;
 use crate::codegen::{register_patterns, DataFormat, LayerKind, LayerPlan, Sink};
 use crate::simd::isa::{Addr, Instr, NUM_VREGS};
@@ -53,7 +54,7 @@ use crate::simd::patterns::Pattern;
 /// Per-kernel cap on *recorded* violations: a systemically broken
 /// paper-scale program would otherwise allocate millions of records.
 /// Further violations are counted in [`KernelVerdict::suppressed`].
-const MAX_VIOLATIONS: usize = 64;
+pub(crate) const MAX_VIOLATIONS: usize = 64;
 
 /// Worst-case |decoded product| of one `p`-bit element pair in the
 /// 2^-6 fixed-point grid: mantissas reach `2^p - 1` in magnitude
@@ -144,6 +145,10 @@ impl KernelSpec {
 pub struct ProgramToVerify<'a> {
     pub spec: KernelSpec,
     pub program: Cow<'a, [Instr]>,
+    /// plan-derived term spec for the equivalence layer — `None` for
+    /// baseline formats, whose kernels are timing models rather than
+    /// functional contractions
+    pub terms: Option<TermSpec>,
 }
 
 /// Abstract value of one vector register.
@@ -179,6 +184,7 @@ pub struct KernelVerifier<'a> {
     flagged: HashSet<(u16, u32)>,
     violations: Vec<Violation>,
     suppressed: usize,
+    windows: WindowTracker,
     at: usize,
     instrs: u64,
     macs: u64,
@@ -197,6 +203,7 @@ impl<'a> KernelVerifier<'a> {
             flagged: HashSet::new(),
             violations: Vec::new(),
             suppressed: 0,
+            windows: WindowTracker::default(),
             at: 0,
             instrs: 0,
             macs: 0,
@@ -208,6 +215,9 @@ impl<'a> KernelVerifier<'a> {
     }
 
     fn violate(&mut self, v: Violation) {
+        if let Some(at) = v.at() {
+            self.windows.record(at);
+        }
         if self.violations.len() < MAX_VIOLATIONS {
             self.violations.push(v);
         } else {
@@ -331,6 +341,7 @@ impl<'a> KernelVerifier<'a> {
 
     /// Interpret one instruction.
     pub fn step(&mut self, i: &Instr) {
+        self.windows.observe(self.at, i);
         self.instrs += 1;
         match *i {
             Instr::LdQ { dst, addr } => {
@@ -549,6 +560,7 @@ impl<'a> KernelVerifier<'a> {
             max_lane_bound: self.max_lane,
             violations: self.violations,
             suppressed: self.suppressed,
+            windows: self.windows.finish(),
         }
     }
 }

@@ -1,7 +1,7 @@
 //! `soniq::analysis` — static verification of emitted programs and
 //! serving plans.
 //!
-//! Two layers (see DESIGN.md "Static analysis"):
+//! Three layers (see DESIGN.md "Static analysis"):
 //!
 //! - [`kernel`]: an abstract interpreter over [`crate::simd::isa::Instr`]
 //!   streams proving def-before-use, memory safety, pattern/chunk
@@ -9,6 +9,13 @@
 //!   bounds — including the f32 exact-integer-range bound the
 //!   bit-exact sharded reduction (PR 5) and the 2^-6 dequant grid
 //!   rely on.
+//! - [`equiv`]: a symbolic term-provenance interpreter over the same
+//!   streams proving *semantic* equivalence — every output cell
+//!   accumulates exactly the `(cell, channel, tap)` term multiset its
+//!   plan's contraction requires, tails are masked before they
+//!   contribute, partial-chunk tail bias matches the engine epilogue,
+//!   and causal twins skip exactly the upper triangle. At deployment
+//!   scope, shard term sets must exactly partition the whole node's.
 //! - [`plan`]: structural checks over [`crate::serve::PreparedModel`],
 //!   [`crate::serve::Deployment`] and [`crate::serve::KvPoolCfg`] —
 //!   graph edges shape/precision-compatible, shard slices an exact
@@ -16,23 +23,37 @@
 //!   page geometry chunk-aligned with the V tier no wider than the
 //!   position precision.
 //!
-//! Entry points: [`verify_program`] (one kernel), [`verify_model`]
-//! (every cached/representative program of a prepared model),
-//! [`verify_deployment`] (shard structure + every shard's kernels),
-//! [`verify_graph`] / [`verify_kv`] (pre-prepare structural passes).
+//! Entry points: [`verify_program`] (one kernel, safety only),
+//! [`verify_program_full`] (safety + term equivalence),
+//! [`verify_model`] (every cached/representative program of a
+//! prepared model, both passes; [`verify_model_level`] selects the
+//! depth), [`verify_deployment`] (shard structure + term partition +
+//! every shard's kernels), [`verify_graph`] / [`verify_kv`]
+//! (pre-prepare structural passes).
 //! `PreparedModel::prepare`/`prepare_decoder` call [`debug_verify`] in
-//! debug builds, and `serve-bench --verify` runs the full
-//! [`VerifyReport`] in release.
+//! debug builds — deduplicated by program fingerprint so suites that
+//! prepare the same model repeatedly verify each unique program once —
+//! and `serve-bench --verify` runs the full [`VerifyReport`] in
+//! release.
 
+pub mod equiv;
 pub mod kernel;
 pub mod plan;
 
+pub use equiv::{
+    shard_term_partition, verify_program_full, EquivVerdict, EquivVerifier, ShardAxis, TermSpec,
+};
 pub use kernel::{
     elem_prod_max, lane_mac_max, verify_program, KernelSpec, KernelVerifier, ProgramToVerify,
 };
-pub use plan::{verify_deployment, verify_graph, verify_kv, verify_model};
+pub use plan::{
+    verify_deployment, verify_graph, verify_kv, verify_model, verify_model_level, VerifyLevel,
+};
 
+use std::collections::VecDeque;
 use std::fmt;
+
+use crate::simd::isa::Instr;
 
 /// Largest integer magnitude f32 represents exactly (2^24). SMOL
 /// accumulators must stay within this so the fixed-point sums survive
@@ -77,6 +98,23 @@ pub enum Violation {
     /// `MulAcc` claims more valid elements than the pattern packs
     NValidExceedsCapacity { at: usize, n_valid: u16, capacity: u32 },
 
+    /// equivalence: a term the plan's contraction requires never
+    /// accumulates into its output cell
+    MissingTerm { cell: usize, channel: u32, tap: usize },
+    /// equivalence: a required term accumulates more than once
+    DuplicateTerm { at: usize, cell: usize, channel: u32, tap: usize },
+    /// equivalence: a term outside the plan's contraction contributes
+    /// (wrong chunk pair, channel, tap, precision, or causal triangle)
+    ForeignTerm { at: usize, cell: usize, detail: String },
+    /// equivalence: a partial chunk's tail lanes reach the output
+    /// without provably passing through their tail mask
+    UnmaskedTailTerm { at: usize, cell: usize, chunk: usize },
+    /// equivalence: a partial chunk's masked-MAC count per cell
+    /// disagrees with the tail bias the engine epilogue subtracts
+    EpilogueMismatch { cell: usize, chunk: usize, expected: u32, got: u32 },
+    /// equivalence: shard term sets do not partition the whole node's
+    ShardTermPartition { detail: String },
+
     /// graph structural defect at `node`
     Graph { node: usize, detail: String },
     /// shard slices do not partition the split range exactly
@@ -89,6 +127,32 @@ pub enum Violation {
     PageGeometry { slot: usize, detail: String },
     /// op's declared `bind_bytes` disagrees with its buffer table
     BindBytes { op: String, declared: usize, actual: usize },
+}
+
+impl Violation {
+    /// Instruction index the violation fired at, when it is tied to a
+    /// specific instruction (drives the disassembly-window capture).
+    pub fn at(&self) -> Option<usize> {
+        use Violation::*;
+        match self {
+            UndefinedReg { at, .. }
+            | BadReg { at, .. }
+            | BadBuf { at, .. }
+            | OutOfBounds { at, .. }
+            | Misaligned { at, .. }
+            | BadPatId { at, .. }
+            | PatternMismatch { at, .. }
+            | ChunkMismatch { at, .. }
+            | OperandKind { at, .. }
+            | UnmaskedTail { at, .. }
+            | LaneOverflow { at, .. }
+            | NValidExceedsCapacity { at, .. }
+            | DuplicateTerm { at, .. }
+            | ForeignTerm { at, .. }
+            | UnmaskedTailTerm { at, .. } => Some(*at),
+            _ => None,
+        }
+    }
 }
 
 impl fmt::Display for Violation {
@@ -137,6 +201,27 @@ impl fmt::Display for Violation {
                 f,
                 "[{at}] mul-acc n_valid {n_valid} exceeds pattern capacity {capacity}"
             ),
+            MissingTerm { cell, channel, tap } => write!(
+                f,
+                "cell {cell}: required term (channel {channel}, tap {tap}) never accumulates"
+            ),
+            DuplicateTerm { at, cell, channel, tap } => write!(
+                f,
+                "[{at}] cell {cell}: term (channel {channel}, tap {tap}) accumulates twice"
+            ),
+            ForeignTerm { at, cell, detail } => {
+                write!(f, "[{at}] cell {cell}: foreign term — {detail}")
+            }
+            UnmaskedTailTerm { at, cell, chunk } => write!(
+                f,
+                "[{at}] cell {cell}: partial chunk {chunk}'s tail lanes contribute unmasked"
+            ),
+            EpilogueMismatch { cell, chunk, expected, got } => write!(
+                f,
+                "cell {cell}: partial chunk {chunk} contributes {got} masked MACs, the \
+                 tail-bias epilogue subtracts {expected}"
+            ),
+            ShardTermPartition { detail } => write!(f, "shard term partition: {detail}"),
             Graph { node, detail } => write!(f, "node {node}: {detail}"),
             ShardSlices { detail } => write!(f, "shard slices: {detail}"),
             ShardKeyCollision { key } => write!(f, "duplicate shard key {key:?}"),
@@ -150,6 +235,87 @@ impl fmt::Display for Violation {
                 "op {op}: declared bind_bytes {declared} != buffer-table total {actual}"
             ),
         }
+    }
+}
+
+/// ±3-instruction disassembly context around a faulting instruction,
+/// captured while the verifier streams (no program buffering needed).
+#[derive(Debug, Clone)]
+pub struct DisasmWindow {
+    /// faulting instruction index
+    pub at: usize,
+    /// `(index, instruction)` lines covering `at - 3 ..= at + 3`,
+    /// clipped to the program
+    pub lines: Vec<(usize, Instr)>,
+}
+
+impl fmt::Display for DisasmWindow {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        for (idx, i) in &self.lines {
+            let marker = if *idx == self.at { '>' } else { ' ' };
+            writeln!(f, "      {marker} [{idx}] {i:?}")?;
+        }
+        Ok(())
+    }
+}
+
+/// Streaming capture of disassembly windows: a verifier feeds every
+/// instruction through [`observe`] and marks faults with [`record`];
+/// the tracker keeps the 3 preceding instructions rolling and holds
+/// each recorded window open until its 3 trailing instructions arrive.
+///
+/// [`observe`]: WindowTracker::observe
+/// [`record`]: WindowTracker::record
+#[derive(Debug, Default)]
+pub(crate) struct WindowTracker {
+    /// rolling last 4 instructions (3 before + the current one)
+    recent: VecDeque<(usize, Instr)>,
+    /// open windows still collecting `(window, trailing remaining)`
+    pending: Vec<(DisasmWindow, usize)>,
+    done: Vec<DisasmWindow>,
+    seen_at: std::collections::HashSet<usize>,
+}
+
+/// Windows kept per program — one per distinct faulting instruction,
+/// capped so a pathological kernel cannot balloon the verdict.
+const MAX_WINDOWS: usize = 8;
+
+impl WindowTracker {
+    pub(crate) fn observe(&mut self, at: usize, i: &Instr) {
+        let mut j = 0;
+        while j < self.pending.len() {
+            let (w, remaining) = &mut self.pending[j];
+            w.lines.push((at, *i));
+            *remaining -= 1;
+            if *remaining == 0 {
+                let (w, _) = self.pending.remove(j);
+                self.done.push(w);
+            } else {
+                j += 1;
+            }
+        }
+        self.recent.push_back((at, *i));
+        while self.recent.len() > 4 {
+            self.recent.pop_front();
+        }
+    }
+
+    /// Record a fault at index `at` (the instruction most recently
+    /// observed). Deduplicates per index and respects the cap.
+    pub(crate) fn record(&mut self, at: usize) {
+        if self.done.len() + self.pending.len() >= MAX_WINDOWS || !self.seen_at.insert(at) {
+            return;
+        }
+        let lines: Vec<(usize, Instr)> = self.recent.iter().copied().collect();
+        self.pending.push((DisasmWindow { at, lines }, 3));
+    }
+
+    pub(crate) fn finish(mut self) -> Vec<DisasmWindow> {
+        for (w, _) in self.pending.drain(..) {
+            self.done.push(w);
+        }
+        self.done.sort_by_key(|w| w.at);
+        self.done
     }
 }
 
@@ -169,6 +335,9 @@ pub struct KernelVerdict {
     pub violations: Vec<Violation>,
     /// violations beyond the recording cap (count only)
     pub suppressed: usize,
+    /// disassembly context around faulting instructions (empty when
+    /// the program is clean)
+    pub windows: Vec<DisasmWindow>,
 }
 
 impl KernelVerdict {
@@ -258,6 +427,12 @@ impl fmt::Display for VerifyReport {
             for (where_, v) in m.violations() {
                 writeln!(f, "    [{where_}] {v}")?;
             }
+            for k in &m.kernels {
+                for w in &k.windows {
+                    writeln!(f, "    [{}] disassembly around [{}]:", k.name, w.at)?;
+                    write!(f, "{w}")?;
+                }
+            }
             let suppressed: usize = m.kernels.iter().map(|k| k.suppressed).sum();
             if suppressed > 0 {
                 writeln!(f, "    (+{suppressed} further violations suppressed)")?;
@@ -270,15 +445,33 @@ impl fmt::Display for VerifyReport {
 
 /// Debug-build hook called at the end of
 /// `PreparedModel::prepare`/`prepare_decoder`: verify every cached
-/// program and panic with the full violation list on any defect, so a
-/// bad emitter change fails the *first* debug test that prepares a
-/// model — long before an output diverges.
+/// program and panic with the full violation list (plus disassembly
+/// windows around each faulting instruction) on any defect, so a bad
+/// emitter change fails the *first* debug test that prepares a model —
+/// long before an output diverges.
+///
+/// Verified programs are remembered by fingerprint (spec + emitted
+/// instruction stream), so suites that prepare the same model many
+/// times — the 300-case sweeps prepare thousands — pay the two
+/// verification passes once per *unique* program, not once per
+/// `prepare()` call. A program only enters the cache after verifying
+/// clean, so a defect is never masked by an earlier clean twin.
 pub fn debug_verify(tag: &str, model: &crate::serve::PreparedModel) {
-    let verdict = verify_model(tag, model);
+    use std::collections::HashSet;
+    use std::sync::{Mutex, OnceLock};
+    static SEEN: OnceLock<Mutex<HashSet<u64>>> = OnceLock::new();
+    let seen = SEEN.get_or_init(|| Mutex::new(HashSet::new()));
+    let mut seen = seen.lock().unwrap_or_else(|e| e.into_inner());
+    let verdict = plan::verify_model_cached(tag, model, &mut seen);
     if !verdict.is_clean() {
         let mut msg = format!("static verification failed in {tag}:\n");
         for (where_, v) in verdict.violations() {
             msg.push_str(&format!("  [{where_}] {v}\n"));
+        }
+        for k in &verdict.kernels {
+            for w in &k.windows {
+                msg.push_str(&format!("  [{}] disassembly around [{}]:\n{w}", k.name, w.at));
+            }
         }
         panic!("{msg}");
     }

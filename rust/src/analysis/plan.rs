@@ -12,7 +12,9 @@
 
 use std::collections::HashSet;
 
-use super::{verify_program, ModelVerdict, Violation};
+use super::equiv::{self, ShardAxis, TermSpec};
+use super::kernel::ProgramToVerify;
+use super::{verify_program_full, ModelVerdict, Violation};
 use crate::codegen::{DataFormat, LayerKind};
 use crate::serve::deploy::{Deployment, GatherMode, ShardPlan};
 use crate::serve::engine::{PreparedModel, StepModel};
@@ -21,23 +23,93 @@ use crate::sim::network::{Node, INPUT};
 use crate::smol::pattern_match::Assignment;
 use crate::simd::patterns::Pattern;
 
+/// How deep [`verify_model_level`] analyzes each program.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum VerifyLevel {
+    /// abstract interpretation only (bounds, alignment, masking,
+    /// overflow) — what PR 9 shipped
+    Safety,
+    /// safety plus the symbolic term-equivalence pass
+    Full,
+}
+
 /// Verify every program a prepared model caches (full graph and, for
-/// decoders, the step graph's representative per-length programs),
-/// plus each op's declared `bind_bytes` against its buffer table.
+/// decoders, the step graph's representative per-length programs) at
+/// [`VerifyLevel::Full`], plus each op's declared `bind_bytes` against
+/// its buffer table.
 pub fn verify_model(name: &str, model: &PreparedModel) -> ModelVerdict {
+    verify_model_level(name, model, VerifyLevel::Full)
+}
+
+/// [`verify_model`] with an explicit analysis depth (the serving bench
+/// times `Safety` vs `Full` separately).
+pub fn verify_model_level(name: &str, model: &PreparedModel, level: VerifyLevel) -> ModelVerdict {
+    verify_model_impl(name, model, level, None)
+}
+
+/// [`verify_model`] with a cross-call program-fingerprint cache:
+/// programs already proven clean (same spec, term spec, and emitted
+/// instruction stream) are skipped, and newly clean programs enter the
+/// cache. Backs [`super::debug_verify`]'s once-per-unique-program
+/// behavior across a debug test suite.
+pub(crate) fn verify_model_cached(
+    name: &str,
+    model: &PreparedModel,
+    seen: &mut HashSet<u64>,
+) -> ModelVerdict {
+    verify_model_impl(name, model, VerifyLevel::Full, Some(seen))
+}
+
+fn verify_model_impl(
+    name: &str,
+    model: &PreparedModel,
+    level: VerifyLevel,
+    mut seen: Option<&mut HashSet<u64>>,
+) -> ModelVerdict {
     let mut verdict = ModelVerdict { name: name.to_string(), ..Default::default() };
-    verify_prepared_nodes(&mut verdict, model.nodes.iter().map(|n| n.op.as_ref()), "");
+    verify_prepared_nodes(
+        &mut verdict,
+        model.nodes.iter().map(|n| n.op.as_ref()),
+        "",
+        level,
+        seen.as_deref_mut(),
+    );
     if let Some(step) = &model.step {
-        verify_prepared_nodes(&mut verdict, step.nodes.iter().map(|n| n.op.as_ref()), "step/");
+        verify_prepared_nodes(
+            &mut verdict,
+            step.nodes.iter().map(|n| n.op.as_ref()),
+            "step/",
+            level,
+            seen,
+        );
         verify_step_geometry(&mut verdict, step);
     }
     verdict
+}
+
+/// Program identity for the verification cache: the spec's machine
+/// environment (buffer extents, pattern table, chunk layout, format),
+/// the plan-derived term spec, and the emitted instruction stream.
+/// The spec *name* is deliberately excluded — two layers emitting the
+/// same program under the same environment are the same proof.
+fn fingerprint(p: &ProgramToVerify) -> u64 {
+    use std::hash::{Hash, Hasher};
+    let mut h = std::collections::hash_map::DefaultHasher::new();
+    p.spec.buf_len.hash(&mut h);
+    p.spec.patterns.hash(&mut h);
+    p.spec.chunks.hash(&mut h);
+    p.spec.fmt.hash(&mut h);
+    p.terms.hash(&mut h);
+    p.program.as_ref().hash(&mut h);
+    h.finish()
 }
 
 fn verify_prepared_nodes<'a>(
     verdict: &mut ModelVerdict,
     ops: impl Iterator<Item = &'a dyn crate::serve::PreparedOp>,
     prefix: &str,
+    level: VerifyLevel,
+    mut seen: Option<&mut HashSet<u64>>,
 ) {
     for op in ops {
         let programs = op.verify_programs();
@@ -55,9 +127,26 @@ fn verify_prepared_nodes<'a>(
             }
         }
         for p in programs {
-            let mut k = verify_program(&p.spec, &p.program);
+            let fp = seen.as_ref().map(|_| fingerprint(&p));
+            if let (Some(seen), Some(fp)) = (seen.as_deref_mut(), fp) {
+                if seen.contains(&fp) {
+                    continue;
+                }
+            }
+            let terms = match level {
+                VerifyLevel::Full => p.terms.as_ref(),
+                VerifyLevel::Safety => None,
+            };
+            let mut k = verify_program_full(&p.spec, terms, &p.program);
             if !prefix.is_empty() {
                 k.name = format!("{prefix}{}", k.name);
+            }
+            // cache clean proofs only: a defect must resurface on
+            // every prepare until the emitter is fixed
+            if k.is_clean() {
+                if let (Some(seen), Some(fp)) = (seen.as_deref_mut(), fp) {
+                    seen.insert(fp);
+                }
             }
             verdict.kernels.push(k);
         }
@@ -346,6 +435,49 @@ pub fn verify_graph(nodes: &[Node], input_shape: (usize, usize, usize)) -> Vec<V
     violations
 }
 
+/// Plan-derived term spec of a graph node, independent of anything
+/// the shards prepared — the "whole" side of the partition check.
+fn node_term_spec(node: &Node) -> Option<TermSpec> {
+    match node {
+        Node::Conv { cfg, .. } => TermSpec::for_layer(&cfg.plan),
+        Node::Matmul { cfg, .. } => TermSpec::for_gemm(&cfg.plan, cfg.causal),
+        _ => None,
+    }
+}
+
+/// Term-partition check for one sliced node: every shard's *prepared*
+/// term spec (what its kernel was actually proven equivalent to),
+/// remapped through its slice offset on `axis`, must tile the whole
+/// graph node's term set — disjoint and exhaustive. Skips silently
+/// when term specs are unavailable (baseline formats) — the per-shard
+/// kernel verdicts still run.
+fn check_term_partition(
+    dep: &Deployment,
+    nodes: &[Node],
+    slices: &[(usize, usize)],
+    idx: usize,
+    axis: ShardAxis,
+    what: &str,
+) -> Vec<Violation> {
+    let Some(whole) = nodes.get(idx).and_then(node_term_spec) else {
+        return Vec::new();
+    };
+    let mut shard_specs = Vec::with_capacity(slices.len());
+    for (h, &(start, _)) in dep.handles().iter().zip(slices.iter()) {
+        let spec = h
+            .prepared
+            .nodes
+            .get(idx)
+            .and_then(|n| n.op.verify_programs().into_iter().next())
+            .and_then(|p| p.terms);
+        match spec {
+            Some(s) => shard_specs.push((s, start)),
+            None => return Vec::new(),
+        }
+    }
+    equiv::shard_term_partition(what, &whole, &shard_specs, axis)
+}
+
 /// `cout`/`n` width of the node a shard plan may split.
 fn split_width(node: &Node) -> Option<usize> {
     match node {
@@ -448,6 +580,34 @@ pub fn verify_deployment(
                         v.push(Violation::ShardSlices {
                             detail: "concat gather must not name a consumer node".into(),
                         });
+                    }
+                }
+            }
+            // term partition: shards compute disjoint, exhaustive term
+            // subsets — on the split node's output-channel axis, and
+            // for reduce gathers also on the consumer's contraction
+            // axis (each shard's prepared term spec is what its kernel
+            // is separately proven equivalent to, so the set algebra
+            // here transfers to the emitted programs)
+            if dep.handles().len() == slices.len() {
+                v.extend(check_term_partition(
+                    dep,
+                    nodes,
+                    slices,
+                    *split_node,
+                    ShardAxis::OutputChannels,
+                    &format!("split node {split_node}"),
+                ));
+                if matches!(gather, GatherMode::Reduce) {
+                    if let Some(c) = consumer_node {
+                        v.extend(check_term_partition(
+                            dep,
+                            nodes,
+                            slices,
+                            *c,
+                            ShardAxis::Contraction,
+                            &format!("reduce consumer {c}"),
+                        ));
                     }
                 }
             }

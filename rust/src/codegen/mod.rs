@@ -24,7 +24,7 @@ use crate::simd::patterns::Pattern;
 use crate::smol::pattern_match::Assignment;
 
 /// Data format a layer runs in (design-point dependent).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum DataFormat {
     /// SMOL-packed mixed precision (the paper's architecture).
     Smol,
@@ -35,7 +35,7 @@ pub enum DataFormat {
 }
 
 /// Kind of layer kernel to generate.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum LayerKind {
     /// dense (or grouped, handled per-group) convolution / FC
     Dense,

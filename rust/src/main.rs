@@ -319,15 +319,10 @@ fn main() -> Result<()> {
                     (0..k).map(|mi| n_requests / k + usize::from(mi < rem)).collect();
 
                 let mut nets = Vec::new(); // (key, net, inputs)
-                let mut graph_violations = Vec::new(); // per model, for --verify
                 for (mi, name) in names.iter().enumerate() {
                     let net = synthetic_network(name, design, seed)?;
                     let key = serve::ModelKey::new(name.clone(), design.label());
                     let inputs = synthetic_inputs(&net, counts[mi], seed + 1);
-                    if verify {
-                        graph_violations
-                            .push(soniq::analysis::verify_graph(&net.nodes, net.input_shape));
-                    }
                     nets.push((key, net, inputs));
                 }
                 // time only preparation (codegen + packing), matching
@@ -337,7 +332,7 @@ fn main() -> Result<()> {
                     .into_iter()
                     .map(|(key, net, inputs)| {
                         let prepared = registry.get_or_prepare(&key, || net.prepare());
-                        (key, prepared, inputs)
+                        (key, net, prepared, inputs)
                     })
                     .collect();
                 let prepare = t1.elapsed();
@@ -346,11 +341,14 @@ fn main() -> Result<()> {
                     fleet.len()
                 );
                 if verify {
+                    // same full report as the single-model path, per
+                    // model: kernels + graphs + KV geometry when a
+                    // paged pool is configured
                     let mut report = soniq::analysis::VerifyReport::default();
-                    for ((key, prepared, _), gv) in fleet.iter().zip(graph_violations) {
-                        let mut m = soniq::analysis::verify_model(&key.to_string(), prepared);
-                        m.plan_violations.extend(gv);
-                        report.models.push(m);
+                    for (key, net, prepared, _) in &fleet {
+                        report
+                            .models
+                            .extend(single_model_report(key, net, prepared, cfg.kv.as_ref()).models);
                     }
                     gate_on_verify(report)?;
                 }
@@ -358,7 +356,7 @@ fn main() -> Result<()> {
                 // dedicated single-model engines: the bit-exactness oracle
                 let dedicated: Vec<Vec<Vec<f32>>> = fleet
                     .iter()
-                    .map(|(_, prepared, inputs)| {
+                    .map(|(_, _, prepared, inputs)| {
                         let mut engine = serve::EngineMachine::new(prepared);
                         inputs.iter().map(|x| engine.run(x).output.data.clone()).collect()
                     })
@@ -372,7 +370,7 @@ fn main() -> Result<()> {
                 );
                 let t2 = Instant::now();
                 let mut server = serve::Server::start_pool(&cfg);
-                for (key, prepared, _) in &fleet {
+                for (key, _, prepared, _) in &fleet {
                     server.register(key.clone(), Arc::clone(prepared));
                 }
                 // round-robin submission: every batching window sees
@@ -383,7 +381,7 @@ fn main() -> Result<()> {
                 // uniform stride
                 let mut owner: Vec<(usize, usize)> = Vec::with_capacity(total);
                 for i in 0..counts[0] {
-                    for (mi, (key, _, inputs)) in fleet.iter().enumerate() {
+                    for (mi, (key, _, _, inputs)) in fleet.iter().enumerate() {
                         if i < inputs.len() {
                             server.submit_model(key, inputs[i].clone());
                             owner.push((mi, i));

@@ -414,6 +414,7 @@ impl PreparedOp for PreparedConv {
         vec![crate::analysis::ProgramToVerify {
             spec,
             program: std::borrow::Cow::Borrowed(program),
+            terms: crate::analysis::TermSpec::for_layer(&self.plan),
         }]
     }
 
@@ -575,6 +576,7 @@ impl PreparedOp for PreparedMatmul {
         vec![crate::analysis::ProgramToVerify {
             spec,
             program: std::borrow::Cow::Borrowed(&self.program),
+            terms: crate::analysis::TermSpec::for_layer_causal(&self.plan, self.causal),
         }]
     }
 

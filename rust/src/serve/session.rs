@@ -294,6 +294,7 @@ fn rep_row_program(
     ProgramToVerify {
         spec: KernelSpec::for_gemm(plan).with_buffers(input, weights, out, masks),
         program: std::borrow::Cow::Owned(program),
+        terms: crate::analysis::TermSpec::for_gemm(plan, false),
     }
 }
 

@@ -11,11 +11,11 @@ pub type Reg = u8;
 pub const NUM_VREGS: usize = 32;
 
 /// Buffer handle into simulator memory (activations / weights / outputs).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct BufId(pub u16);
 
 /// A memory operand: byte offset into a buffer.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct Addr {
     pub buf: BufId,
     pub off: u32,
@@ -25,7 +25,7 @@ pub struct Addr {
 pub type PatId = u8;
 
 /// One instruction of the generated inference kernel.
-#[derive(Debug, Clone, Copy, PartialEq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Instr {
     /// 128-bit vector load.
     LdQ { dst: Reg, addr: Addr },

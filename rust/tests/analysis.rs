@@ -1,12 +1,15 @@
 //! Static-analysis tests: the abstract interpreter must accept every
 //! program the real emitters produce (seeded acceptance sweeps over
 //! conv/GEMM shape space), reject every mutation class with a
-//! descriptive violation, and prove the paper's workloads stay inside
-//! the f32 exact-integer accumulator range end to end.
+//! descriptive violation — safety defects via the abstract
+//! interpreter, semantic defects via the term-provenance equivalence
+//! layer — and prove the paper's workloads stay inside the f32
+//! exact-integer accumulator range end to end.
 
 use soniq::analysis::{
-    self, elem_prod_max, lane_mac_max, verify_program, KernelSpec, KernelVerifier, ModelVerdict,
-    VerifyReport, Violation, F32_EXACT_BOUND,
+    self, elem_prod_max, lane_mac_max, verify_program, verify_program_full, EquivVerifier,
+    KernelSpec, KernelVerifier, ModelVerdict, ShardAxis, TermSpec, VerifyReport, Violation,
+    F32_EXACT_BOUND,
 };
 use soniq::codegen::gemm::{emit_gemm, emit_gemm_causal, GemmPlan};
 use soniq::codegen::{self, DataFormat, LayerBufs, LayerKind, LayerPlan};
@@ -99,9 +102,13 @@ fn prop_conv_emitter_programs_verify_clean() {
             fmt: rand_format(rng),
         };
         let spec = KernelSpec::for_layer(&plan);
+        let terms = TermSpec::for_layer(&plan);
+        if (plan.fmt == DataFormat::Smol) != terms.is_some() {
+            return Err("term-spec derivability must track the SMOL format".into());
+        }
         let mut program = Vec::new();
         codegen::emit_layer(&plan, &bufs(), 0, &mut program);
-        let verdict = verify_program(&spec, &program);
+        let verdict = verify_program_full(&spec, terms.as_ref(), &program);
         if !verdict.is_clean() {
             return Err(format!(
                 "cin={cin} cout={cout} k={kk} {:?} {:?}: {:?}",
@@ -138,13 +145,17 @@ fn prop_gemm_emitter_programs_verify_clean() {
             fmt: rand_format(rng),
         };
         let spec = KernelSpec::for_gemm(&plan);
+        let terms = TermSpec::for_gemm(&plan, causal);
+        if (plan.fmt == DataFormat::Smol) != terms.is_some() {
+            return Err("term-spec derivability must track the SMOL format".into());
+        }
         let mut program = Vec::new();
         if causal {
             emit_gemm_causal(&plan, &bufs(), 0, &mut program);
         } else {
             emit_gemm(&plan, &bufs(), 0, &mut program);
         }
-        let verdict = verify_program(&spec, &program);
+        let verdict = verify_program_full(&spec, terms.as_ref(), &program);
         if !verdict.is_clean() {
             return Err(format!(
                 "m={m} k={k} n={n} causal={causal} {:?}: {:?}",
@@ -465,11 +476,231 @@ fn mul_acc_n_valid_beyond_capacity_is_rejected() {
 }
 
 // ---------------------------------------------------------------------
+// Equivalence mutations: semantic defects the safety layer cannot see
+// must be caught by term provenance with their exact violation class.
+// ---------------------------------------------------------------------
+
+/// [`smol_gemm`] plus the plan-derived [`TermSpec`] the equivalence
+/// layer checks the program against.
+fn smol_gemm_full(
+    m: usize,
+    k: usize,
+    n: usize,
+    asg: Assignment,
+) -> (KernelSpec, TermSpec, Vec<Instr>) {
+    let plan = GemmPlan { name: "mutant".into(), m, k, n, asg, fmt: DataFormat::Smol };
+    let spec = KernelSpec::for_gemm(&plan);
+    let terms = TermSpec::for_gemm(&plan, false).expect("SMOL GEMMs always have a term spec");
+    let mut program = Vec::new();
+    emit_gemm(&plan, &bufs(), 0, &mut program);
+    (spec, terms, program)
+}
+
+#[test]
+fn dropped_mac_is_missing_terms() {
+    let (spec, terms, clean) = smol_gemm_full(2, 64, 2, Assignment::uniform(64, 2));
+    assert!(verify_program_full(&spec, Some(&terms), &clean).is_clean());
+
+    // drop cell 0's only VmacP/ReduceAcc pair
+    let mut program = clean;
+    let i = program.iter().position(|x| matches!(x, Instr::VmacP { .. })).unwrap();
+    assert!(matches!(program[i + 1], Instr::ReduceAcc { .. }));
+    program.drain(i..i + 2);
+
+    // the safety layer proves the shortened program perfectly safe...
+    assert!(verify_program(&spec, &program).is_clean());
+    // ...only term provenance sees cell 0 lost its whole contraction
+    let verdict = verify_program_full(&spec, Some(&terms), &program);
+    let missing = verdict
+        .violations
+        .iter()
+        .filter(|v| matches!(v, Violation::MissingTerm { cell: 0, tap: 0, .. }))
+        .count();
+    assert_eq!(missing, 64, "{:?}", verdict.violations.first());
+}
+
+#[test]
+fn duplicated_mac_is_duplicate_terms() {
+    let (spec, terms, clean) = smol_gemm_full(2, 64, 2, Assignment::uniform(64, 2));
+    let mut program = clean;
+    let i = program.iter().position(|x| matches!(x, Instr::VmacP { .. })).unwrap();
+    let (mac, red) = (program[i], program[i + 1]);
+    assert!(matches!(red, Instr::ReduceAcc { .. }));
+    program.insert(i, mac);
+    program.insert(i + 1, red);
+
+    assert!(verify_program(&spec, &program).is_clean());
+    let verdict = verify_program_full(&spec, Some(&terms), &program);
+    assert!(
+        verdict
+            .violations
+            .iter()
+            .any(|v| matches!(v, Violation::DuplicateTerm { cell: 0, channel: 0, tap: 0, .. })),
+        "{:?}",
+        verdict.violations.first()
+    );
+    assert!(!verdict.violations.iter().any(|v| matches!(v, Violation::MissingTerm { .. })));
+}
+
+#[test]
+fn swapped_activation_rows_are_foreign_terms() {
+    // swap the two A-row loads of the same chunk: chunk- and
+    // pattern-coherent, so the safety layer is completely blind — only
+    // provenance ties a loaded row to the cell it reduces into
+    let (spec, terms, clean) = smol_gemm_full(2, 64, 1, Assignment::uniform(64, 2));
+    let mut program = clean;
+    let loads: Vec<usize> = program
+        .iter()
+        .enumerate()
+        .filter(|(_, x)| matches!(x, Instr::LdQ { addr, .. } if addr.buf.0 == 0))
+        .map(|(i, _)| i)
+        .collect();
+    assert_eq!(loads.len(), 2);
+    for (li, off) in loads.iter().zip([16u32, 0]) {
+        if let Instr::LdQ { addr, .. } = &mut program[*li] {
+            addr.off = off;
+        }
+    }
+
+    assert!(verify_program(&spec, &program).is_clean());
+    let verdict = verify_program_full(&spec, Some(&terms), &program);
+    assert!(
+        verdict.violations.iter().any(|v| matches!(v, Violation::ForeignTerm { cell: 0, .. })),
+        "{:?}",
+        verdict.violations.first()
+    );
+}
+
+#[test]
+fn skipped_tail_vand_is_unmasked_tail_term() {
+    // 8 valid channels in a 64-capacity chunk, with every Vand removed
+    let (spec, terms, clean) = smol_gemm_full(1, 8, 1, Assignment::uniform(8, 2));
+    assert!(verify_program_full(&spec, Some(&terms), &clean).is_clean());
+    let mut program = clean;
+    program.retain(|x| !matches!(x, Instr::Vand { .. }));
+
+    let verdict = verify_program_full(&spec, Some(&terms), &program);
+    assert!(
+        verdict
+            .violations
+            .iter()
+            .any(|v| matches!(v, Violation::UnmaskedTailTerm { cell: 0, chunk: 0, .. })),
+        "{:?}",
+        verdict.violations.first()
+    );
+    // and the masked-MAC ledger comes up short of the tail bias the
+    // engine epilogue subtracts
+    assert!(verdict.violations.iter().any(|v| matches!(
+        v,
+        Violation::EpilogueMismatch { cell: 0, chunk: 0, expected: 1, got: 0 }
+    )));
+}
+
+#[test]
+fn double_applied_tail_mac_is_epilogue_mismatch() {
+    // duplicating a *partial* chunk's masked MAC corrupts the output
+    // even though every lane stays masked: the epilogue subtracts one
+    // tail bias but the tail contributed twice
+    let (spec, terms, clean) = smol_gemm_full(1, 8, 1, Assignment::uniform(8, 2));
+    let mut program = clean;
+    let i = program.iter().position(|x| matches!(x, Instr::VmacP { .. })).unwrap();
+    let (mac, red) = (program[i], program[i + 1]);
+    assert!(matches!(red, Instr::ReduceAcc { .. }));
+    program.insert(i, mac);
+    program.insert(i + 1, red);
+
+    assert!(verify_program(&spec, &program).is_clean());
+    let verdict = verify_program_full(&spec, Some(&terms), &program);
+    assert!(
+        verdict.violations.iter().any(|v| matches!(
+            v,
+            Violation::EpilogueMismatch { cell: 0, chunk: 0, expected: 1, got: 2 }
+        )),
+        "{:?}",
+        verdict.violations.first()
+    );
+}
+
+#[test]
+fn widened_mul_acc_scatter_is_foreign_term() {
+    // 40 channels @4b: a full 32-capacity chunk plus an 8-channel tail
+    // chunk; two spatial positions leave the out buffer room for the
+    // widened write, so the safety layer proves it in-bounds and
+    // within pattern capacity — only the term layer knows the chunk
+    // holds 8 channels
+    let plan = LayerPlan {
+        name: "dw-widen".into(),
+        kind: LayerKind::Depthwise,
+        cin: 40,
+        cout: 40,
+        kh: 1,
+        kw: 1,
+        stride: 1,
+        hin: 2,
+        win: 1,
+        asg: Assignment::uniform(40, 4),
+        fmt: DataFormat::Smol,
+    };
+    let spec = KernelSpec::for_layer(&plan);
+    let terms = TermSpec::for_layer(&plan).unwrap();
+    let mut program = Vec::new();
+    codegen::emit_layer(&plan, &bufs(), 0, &mut program);
+    assert!(verify_program_full(&spec, Some(&terms), &program).is_clean());
+
+    let i = program
+        .iter()
+        .position(|x| matches!(x, Instr::MulAcc { n_valid: 8, .. }))
+        .unwrap();
+    if let Instr::MulAcc { n_valid, .. } = &mut program[i] {
+        *n_valid = 9;
+    }
+    assert!(verify_program(&spec, &program).is_clean());
+    let verdict = verify_program_full(&spec, Some(&terms), &program);
+    assert!(
+        verdict.violations.iter().any(|v| matches!(v, Violation::ForeignTerm { cell: 40, .. })),
+        "{:?}",
+        verdict.violations.first()
+    );
+}
+
+#[test]
+fn shard_term_partition_accepts_slices_and_rejects_misoffsets() {
+    let plan = GemmPlan {
+        name: "part".into(),
+        m: 3,
+        k: 64,
+        n: 16,
+        asg: Assignment::uniform(64, 2),
+        fmt: DataFormat::Smol,
+    };
+    let whole = TermSpec::for_gemm(&plan, false).unwrap();
+
+    // cout split — the deployment split-node check
+    let lo = TermSpec::for_gemm(&plan.slice_n(0, 8), false).unwrap();
+    let hi = TermSpec::for_gemm(&plan.slice_n(8, 16), false).unwrap();
+    let good = [(lo.clone(), 0), (hi.clone(), 8)];
+    assert!(analysis::shard_term_partition("n", &whole, &good, ShardAxis::OutputChannels)
+        .is_empty());
+    let wrong = [(lo, 0), (hi, 4)];
+    let v = analysis::shard_term_partition("n", &whole, &wrong, ShardAxis::OutputChannels);
+    assert!(v.iter().any(|x| matches!(x, Violation::ShardTermPartition { .. })), "{v:?}");
+
+    // contraction split — the reduce-consumer check
+    let klo = TermSpec::for_gemm(&plan.slice_k(0, 32), false).unwrap();
+    let khi = TermSpec::for_gemm(&plan.slice_k(32, 64), false).unwrap();
+    let good = [(klo.clone(), 0), (khi.clone(), 32)];
+    assert!(analysis::shard_term_partition("k", &whole, &good, ShardAxis::Contraction).is_empty());
+    let wrong = [(klo, 0), (khi, 16)];
+    let v = analysis::shard_term_partition("k", &whole, &wrong, ShardAxis::Contraction);
+    assert!(v.iter().any(|x| matches!(x, Violation::ShardTermPartition { .. })), "{v:?}");
+}
+
+// ---------------------------------------------------------------------
 // Workloads: every serving model proves clean and f32-exact.
 // ---------------------------------------------------------------------
 
-/// Paper-scale layers verified by *streaming* the emitter into the
-/// verifier (nothing is materialized). Spatial extent and `cout` are
+/// Paper-scale layers verified by *streaming* the emitter into both
+/// verifiers (nothing is materialized). Spatial extent and `cout` are
 /// clamped (hin <= 6 covers a full 3x3 window at both strides, cout
 /// <= 8 a full register block) because the per-cell accumulator bound —
 /// sum over chunks of in-window taps x the chunk's pattern-wise lane
@@ -495,9 +726,18 @@ fn paperscale_verdict() -> ModelVerdict {
                 fmt: DataFormat::Smol,
             };
             let spec = KernelSpec::for_layer(&plan);
+            let terms = TermSpec::for_layer(&plan).expect("paper-scale layers are SMOL");
             let mut v = KernelVerifier::new(&spec);
             codegen::emit_layer(&plan, &bufs(), 0, &mut v);
-            verdict.kernels.push(v.finish());
+            let mut k = v.finish();
+            // second streaming pass: term equivalence at the full
+            // paper-scale contraction width
+            let mut eq = EquivVerifier::new(&spec, &terms);
+            codegen::emit_layer(&plan, &bufs(), 0, &mut eq);
+            let e = eq.finish();
+            k.violations.extend(e.violations);
+            k.suppressed += e.suppressed;
+            verdict.kernels.push(k);
         }
     }
     verdict
@@ -545,6 +785,8 @@ fn sharded_deployment_verifies_and_budget_violations_surface() {
     let cfg = DeployConfig { worker_budget: None, shards: Some(2) };
     let dep = Deployment::build(key, &net.nodes, None, &cfg).unwrap();
 
+    // clean includes the shard term-partition check: the slices' term
+    // sets must tile the whole split node's exactly
     let verdicts = analysis::verify_deployment(&dep, &net.nodes, None);
     assert_eq!(verdicts.len(), 1 + dep.num_shards());
     for m in &verdicts {

@@ -11,6 +11,12 @@
 //! Changelog arrows (`schema bumped 3 → 4`) are deliberately exempt:
 //! they describe history, not the current number, and stay correct
 //! after future bumps.
+//!
+//! The same treatment applies to the static-analysis layer count: the
+//! ground truth is the number of `pub mod` submodules in
+//! `src/analysis/mod.rs`, and every "N layers" claim in that module's
+//! doc and in DESIGN.md's "Static analysis" section must agree with it
+//! (other sections describe unrelated layerings and are out of scope).
 
 use std::fs;
 use std::path::{Path, PathBuf};
@@ -99,6 +105,123 @@ fn docs_and_ci_agree_with_serve_report_schema() {
     // the scanner (or the docs) broke
     assert!(total >= 2, "only {total} schema claims found — scanner or docs broke");
     assert!(drift.is_empty(), "schema drift:\n{}", drift.join("\n"));
+}
+
+/// Number of analysis layers actually present: the `pub mod` lines of
+/// `src/analysis/mod.rs`.
+fn analysis_submodule_count() -> u64 {
+    let (path, src) = repo_file("src/analysis/mod.rs");
+    let count = src.lines().filter(|l| l.trim_start().starts_with("pub mod ")).count() as u64;
+    assert!(count > 0, "no pub mod lines in {}", path.display());
+    count
+}
+
+/// Every "N layers" claim in `text` as `(line, number)`, accepting the
+/// digit form (`3 layers`) and spelled-out counts up to ten (`three
+/// layers`, `Three layers`). Lines like "the kernel layer" or "both
+/// layers" carry no number and are not claims.
+fn layer_claims(text: &str) -> Vec<(usize, u64)> {
+    const WORDS: [&str; 10] =
+        ["one", "two", "three", "four", "five", "six", "seven", "eight", "nine", "ten"];
+    let mut claims = Vec::new();
+    for (ln, line) in text.lines().enumerate() {
+        let mut search = 0;
+        while let Some(found) = line[search..].find("layers") {
+            let start = search + found;
+            search = start + "layers".len();
+            let Some(prev) = line[..start].split_whitespace().last() else { continue };
+            let prev = prev.trim_matches(|c: char| !c.is_ascii_alphanumeric());
+            let n = if prev.bytes().all(|b| b.is_ascii_digit()) && !prev.is_empty() {
+                prev.parse().ok()
+            } else {
+                WORDS
+                    .iter()
+                    .position(|w| prev.eq_ignore_ascii_case(w))
+                    .map(|i| i as u64 + 1)
+            };
+            if let Some(n) = n {
+                claims.push((ln + 1, n));
+            }
+        }
+    }
+    claims
+}
+
+/// The body of DESIGN.md's "Static analysis" section: from its `## `
+/// heading to the next `## ` heading (or end of file).
+fn static_analysis_section(design: &str) -> (usize, String) {
+    let mut lines = Vec::new();
+    let mut start = 0;
+    let mut inside = false;
+    for (ln, line) in design.lines().enumerate() {
+        if line.starts_with("## ") {
+            if inside {
+                break;
+            }
+            if line.contains("Static analysis") {
+                inside = true;
+                start = ln + 1;
+            }
+        }
+        if inside {
+            lines.push(line);
+        }
+    }
+    assert!(inside, "DESIGN.md has no \"Static analysis\" section");
+    (start, lines.join("\n"))
+}
+
+#[test]
+fn layer_count_claims_match_analysis_submodules() {
+    let want = analysis_submodule_count();
+    let mut drift = Vec::new();
+    let mut total = 0;
+
+    // the analysis module doc (`//!` lines only — code comments about
+    // e.g. register lattices are not layer-count claims)
+    let (path, src) = repo_file("src/analysis/mod.rs");
+    let doc: String = src
+        .lines()
+        .take_while(|l| l.starts_with("//!") || l.is_empty())
+        .collect::<Vec<_>>()
+        .join("\n");
+    for (line, got) in layer_claims(&doc) {
+        total += 1;
+        if got != want {
+            drift.push(format!(
+                "{}:{line}: claims {got} layers, but analysis has {want} submodules",
+                path.display()
+            ));
+        }
+    }
+
+    // DESIGN.md, scoped to the "Static analysis" section
+    let (path, design) = repo_file("../DESIGN.md");
+    let (offset, section) = static_analysis_section(&design);
+    for (line, got) in layer_claims(&section) {
+        total += 1;
+        if got != want {
+            drift.push(format!(
+                "{}:{}: claims {got} layers, but analysis has {want} submodules",
+                path.display(),
+                offset + line - 1
+            ));
+        }
+    }
+
+    // both the module doc and DESIGN.md state the count today; zero
+    // claims means the scanner (or the docs) broke
+    assert!(total >= 2, "only {total} layer-count claims found — scanner or docs broke");
+    assert!(drift.is_empty(), "layer-count drift:\n{}", drift.join("\n"));
+}
+
+#[test]
+fn layer_scanner_understands_the_known_forms() {
+    let text = "Three layers (see DESIGN.md):\norganized as three layers: a safety\n\
+                the kernel layer proves safety\nboth kernel-level layers run there\n\
+                split into 3 layers\n";
+    let claims = layer_claims(text);
+    assert_eq!(claims, vec![(1, 3), (2, 3), (5, 3)]);
 }
 
 #[test]
